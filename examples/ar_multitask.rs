@@ -1,0 +1,96 @@
+//! The paper's Fig. 1 AR scenario, end to end: four concurrent tasks
+//! (image classification, sentiment, activity recognition, speech
+//! recognition) served on the simulated desktop SoC with real PJRT
+//! inference, comparing SparseLoom against all six baselines across the
+//! full 5×5 SLO grid and 24 arrival combinations.
+//!
+//! This is the repository's end-to-end validation driver (recorded in
+//! EXPERIMENTS.md): it loads real (tiny) models, serves batched
+//! requests, and reports SLO violation rate + throughput per policy.
+//!
+//! ```text
+//! cargo run --release --example ar_multitask [-- <platform>]
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use sparseloom::baselines::Policy;
+use sparseloom::coordinator::{Coordinator, ServeOpts};
+use sparseloom::experiments::Ctx;
+use sparseloom::metrics::{render_table, Aggregate};
+use sparseloom::profiler::ProfilerConfig;
+use sparseloom::runtime::Runtime;
+use sparseloom::soc::Platform;
+use sparseloom::util::Rng;
+use sparseloom::workload::{arrival_combinations, slo_grid, Slo, TaskRanges};
+
+fn main() -> anyhow::Result<()> {
+    let platform_name = std::env::args().nth(1).unwrap_or_else(|| "desktop".into());
+    let platform = Platform::by_name(&platform_name)?;
+    let ctx = Ctx::load("artifacts", false)?;
+    let lm = ctx.lm(platform.clone());
+    let zoo = ctx.zoo_for(&platform);
+    let rt = Runtime::new()?;
+
+    println!("AR multi-task serving on {} — {}", platform.name, platform.description);
+    let t0 = Instant::now();
+    let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
+    println!("profiled {} tasks in {:.2} s (estimator mode)\n",
+             profiles.len(), t0.elapsed().as_secs_f64());
+
+    let mut grids: BTreeMap<String, Vec<Slo>> = BTreeMap::new();
+    let mut universe = Vec::new();
+    for (name, _) in &profiles {
+        let g = slo_grid(&TaskRanges::measure(zoo.task(name)?, &lm));
+        universe.extend(g.iter().copied());
+        grids.insert(name.clone(), g);
+    }
+
+    let tasks: Vec<String> = profiles.keys().cloned().collect();
+    let mut rng = Rng::new(42);
+    let mut arrivals = arrival_combinations(&tasks);
+    rng.shuffle(&mut arrivals);
+    arrivals.truncate(8);
+
+    let coord = Coordinator::new(zoo, &lm, &profiles).with_runtime(&rt);
+    let mut rows = Vec::new();
+    let mut sl = (0.0, 0.0);
+    let mut best_baseline = (f64::INFINITY, 0.0f64);
+    for policy in Policy::all() {
+        let t0 = Instant::now();
+        let mut agg = Aggregate::default();
+        let opts = ServeOpts { policy, ..Default::default() };
+        for i in 0..25 {
+            let slos: BTreeMap<String, Slo> =
+                grids.iter().map(|(n, g)| (n.clone(), g[i])).collect();
+            let prepared = coord.prepare(&slos, &universe, &opts)?;
+            for arrival in &arrivals {
+                let r = coord.serve_prepared(prepared.clone(), &slos, arrival, &opts)?;
+                agg.push(&r);
+            }
+        }
+        let v = agg.mean_violation_pct();
+        let tput = agg.mean_throughput();
+        if policy == Policy::SparseLoom {
+            sl = (v, tput);
+        } else {
+            best_baseline.0 = best_baseline.0.min(v);
+            best_baseline.1 = best_baseline.1.max(tput);
+        }
+        rows.push(vec![
+            policy.name().to_string(),
+            format!("{v:.1}"),
+            format!("{tput:.0}"),
+            format!("{:.2}", t0.elapsed().as_secs_f64()),
+        ]);
+    }
+
+    println!("{}", render_table(
+        &["policy", "violation %", "throughput q/s", "wall s"], &rows));
+    println!(
+        "SparseLoom vs best baseline: violations {:.1} % vs {:.1} %, throughput {:.2}x",
+        sl.0, best_baseline.0, sl.1 / best_baseline.1.max(1e-9)
+    );
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Memory-budget walk (Fig. 14's mechanism, inspectable): shrink the
+//! preload budget and watch the Hot-Subgraph Preloader triage — which
+//! subgraphs stay hot, how coverage decays, and what it costs in
+//! violations and switch latency.
+//!
+//! ```text
+//! cargo run --release --example memory_budget [-- <platform>]
+//! ```
+
+use std::collections::BTreeMap;
+
+use sparseloom::coordinator::{Coordinator, ServeOpts};
+use sparseloom::experiments::Ctx;
+use sparseloom::metrics::render_table;
+use sparseloom::preloader::{coverage, full_preload_bytes, preload, Hotness};
+use sparseloom::profiler::ProfilerConfig;
+use sparseloom::soc::Platform;
+use sparseloom::util::fmt_bytes;
+use sparseloom::workload::{placement_orders, slo_grid, Slo, TaskRanges};
+
+fn main() -> anyhow::Result<()> {
+    let platform_name = std::env::args().nth(1).unwrap_or_else(|| "desktop".into());
+    let platform = Platform::by_name(&platform_name)?;
+    let ctx = Ctx::load("artifacts", false)?;
+    let lm = ctx.lm(platform.clone());
+    let zoo = ctx.zoo_for(&platform);
+    let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
+    let orders = placement_orders(&platform, zoo.subgraphs);
+
+    // SLO universe Ψ = the 25-config grid per task.
+    let mut grids: BTreeMap<String, Vec<Slo>> = BTreeMap::new();
+    let mut universe = Vec::new();
+    for (name, _) in &profiles {
+        let g = slo_grid(&TaskRanges::measure(zoo.task(name)?, &lm));
+        universe.extend(g.iter().copied());
+        grids.insert(name.clone(), g);
+    }
+
+    // Hotness per task + full-preload reference.
+    let pairs: Vec<_> = profiles
+        .iter()
+        .map(|(name, p)| (zoo.task(name).unwrap(), Hotness::compute(p, &universe, &orders)))
+        .collect();
+    let refs: Vec<_> = pairs.iter().map(|(tz, h)| (*tz, h)).collect();
+    let task_zoos: Vec<_> = pairs.iter().map(|(tz, _)| *tz).collect();
+    let full = full_preload_bytes(&task_zoos);
+    println!("full preloading on {}: {}\n", platform.name, fmt_bytes(full));
+
+    let coord = Coordinator::new(zoo, &lm, &profiles);
+    let arrival: Vec<String> = profiles.keys().cloned().collect();
+    let mut rows = Vec::new();
+    for frac in [0.1, 0.15, 0.25, 0.4, 0.55, 0.75, 1.0] {
+        let budget = (full as f64 * frac) as u64;
+        let plan = preload(&refs, budget);
+        // Mean feasible-config coverage over tasks.
+        let mut cov = 0.0;
+        for (name, p) in &profiles {
+            cov += coverage(p, &plan, &grids[name], &orders).covered_configs;
+        }
+        cov /= profiles.len() as f64;
+
+        // Serve the mid-grid config and accumulate violations + switch cost.
+        let slos: BTreeMap<String, Slo> =
+            grids.iter().map(|(n, g)| (n.clone(), g[12])).collect();
+        let opts = ServeOpts { memory_budget_frac: frac, ..Default::default() };
+        let prepared = coord.prepare(&slos, &universe, &opts)?;
+        let switch_ms: f64 = prepared.switch_penalty_ms.values().sum();
+        let report = coord.serve_prepared(prepared.clone(), &slos, &arrival, &opts)?;
+
+        rows.push(vec![
+            format!("{:.0} %", frac * 100.0),
+            fmt_bytes(plan.total_bytes),
+            format!("{}", plan.blobs.len()),
+            format!("{:.0} %", 100.0 * cov),
+            format!("{:.2}", switch_ms),
+            format!("{:.0} %", 100.0 * report.violation_rate()),
+        ]);
+    }
+    println!("{}", render_table(
+        &["budget", "preloaded", "blobs", "coverage", "switch ms", "violation"],
+        &rows,
+    ));
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Quickstart: load the artifact zoo, run one stitched variant through
+//! the real PJRT runtime, and let the optimizer pick variants + a
+//! placement order for a mid-grid SLO.
+//!
+//! Run after `make artifacts && cargo build --release`:
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use std::collections::BTreeMap;
+
+use sparseloom::baselines::Policy;
+use sparseloom::coordinator::{Coordinator, ServeOpts};
+use sparseloom::experiments::Ctx;
+use sparseloom::profiler::ProfilerConfig;
+use sparseloom::runtime::Runtime;
+use sparseloom::soc::{order_label, Platform};
+use sparseloom::stitching::Composition;
+use sparseloom::workload::{slo_grid, TaskRanges};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. artifacts + platform model --------------------------------
+    let ctx = Ctx::load("artifacts", false)?;
+    let platform = Platform::desktop();
+    let lm = ctx.lm(platform.clone());
+    println!("zoo: {} tasks × {} variants × {} subgraphs",
+             ctx.zoo.tasks.len(), ctx.zoo.n_variants(), ctx.zoo.subgraphs);
+
+    // --- 2. run one stitched variant through PJRT ----------------------
+    let rt = Runtime::new()?;
+    let task = "imgcls";
+    let tz = ctx.zoo.task(task)?;
+    // dense → int8 → struct50: one subgraph from each compression family.
+    let comp = Composition(vec![
+        tz.variant_by_name("dense").unwrap().0,
+        tz.variant_by_name("int8").unwrap().0,
+        tz.variant_by_name("struct50").unwrap().0,
+    ]);
+    let input: Vec<f32> = (0..tz.input_dim).map(|i| (i as f32 * 0.1).sin()).collect();
+    let (logits, timing) = rt.run_chain(&ctx.zoo, task, &comp.0, 1, &input)?;
+    println!(
+        "\nstitched {} on {task}: logits {:?}",
+        comp.name(tz),
+        &logits.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
+    println!("real PJRT stage times: {:?} ms (total {:.3} ms)",
+             timing.stage_ms.iter().map(|x| (x * 1000.0).round() / 1000.0).collect::<Vec<_>>(),
+             timing.total_ms);
+
+    // --- 3. profile + optimize for a mid-grid SLO ----------------------
+    let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
+    let mut slos = BTreeMap::new();
+    let mut universe = Vec::new();
+    for (name, tz) in &ctx.zoo.tasks {
+        let grid = slo_grid(&TaskRanges::measure(tz, &lm));
+        universe.extend(grid.iter().copied());
+        slos.insert(name.clone(), grid[12]);
+    }
+    let coord = Coordinator::new(&ctx.zoo, &lm, &profiles).with_runtime(&rt);
+    let opts = ServeOpts { policy: Policy::SparseLoom, queries_per_task: 50, ..Default::default() };
+    let arrival: Vec<String> = profiles.keys().cloned().collect();
+    let report = coord.serve(&slos, &universe, &arrival, &opts)?;
+
+    println!("\nSparseLoom plan on {}:", platform.name);
+    let prepared = coord.prepare(&slos, &universe, &opts)?;
+    println!("  placement order p* = {}", order_label(&prepared.order));
+    for (name, sel) in &prepared.selections {
+        if let Some(sel) = sel {
+            let p = &profiles[name];
+            println!(
+                "  {:<10} → {} (est. acc {:.3}, est. lat {:.3} ms)",
+                name,
+                p.space.composition(sel.stitched_index).name(ctx.zoo.task(name)?),
+                sel.accuracy,
+                sel.latency_ms,
+            );
+        } else {
+            println!("  {:<10} → no feasible variant (will violate)", name);
+        }
+    }
+    println!(
+        "\nserved {} queries: violation rate {:.1} %, throughput {:.0} q/s",
+        report.total_queries,
+        100.0 * report.violation_rate(),
+        report.throughput_qps(),
+    );
+    Ok(())
+}

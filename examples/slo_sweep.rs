@@ -1,0 +1,77 @@
+//! SLO-strictness sweep: walk the C1–C8 ladder (Fig. 3's axis) on one
+//! platform and watch how SparseLoom's selections shift from accurate/
+//! slow compositions toward fast stitched mixes — and where the space
+//! runs out (violations).
+//!
+//! ```text
+//! cargo run --release --example slo_sweep [-- <platform>]
+//! ```
+
+use std::collections::BTreeMap;
+
+use sparseloom::baselines::Policy;
+use sparseloom::coordinator::{Coordinator, ServeOpts};
+use sparseloom::experiments::Ctx;
+use sparseloom::metrics::render_table;
+use sparseloom::profiler::ProfilerConfig;
+use sparseloom::soc::{order_label, Platform};
+use sparseloom::workload::{slo_ladder, Slo, TaskRanges};
+
+fn main() -> anyhow::Result<()> {
+    let platform_name = std::env::args().nth(1).unwrap_or_else(|| "desktop".into());
+    let platform = Platform::by_name(&platform_name)?;
+    let ctx = Ctx::load("artifacts", false)?;
+    let lm = ctx.lm(platform.clone());
+    let zoo = ctx.zoo_for(&platform);
+    let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
+    let coord = Coordinator::new(zoo, &lm, &profiles);
+
+    let mut ladders: BTreeMap<String, Vec<Slo>> = BTreeMap::new();
+    let mut universe = Vec::new();
+    for (name, _) in &profiles {
+        let l = slo_ladder(&TaskRanges::measure(zoo.task(name)?, &lm));
+        universe.extend(l.iter().copied());
+        ladders.insert(name.clone(), l);
+    }
+    let arrival: Vec<String> = profiles.keys().cloned().collect();
+
+    println!("SLO ladder sweep on {} (C1 laxest → C8 strictest)\n", platform.name);
+    let mut rows = Vec::new();
+    for c in 0..8 {
+        let slos: BTreeMap<String, Slo> =
+            ladders.iter().map(|(n, l)| (n.clone(), l[c])).collect();
+        let opts = ServeOpts { policy: Policy::SparseLoom, ..Default::default() };
+        let prepared = coord.prepare(&slos, &universe, &opts)?;
+        let report = coord.serve_prepared(prepared.clone(), &slos, &arrival, &opts)?;
+
+        let mut selections = Vec::new();
+        let mut stitched = 0usize;
+        for (name, sel) in &prepared.selections {
+            match sel {
+                Some(sel) => {
+                    let p = &profiles[name];
+                    let comp = p.space.composition(sel.stitched_index);
+                    if !comp.is_pure() {
+                        stitched += 1;
+                    }
+                    selections.push(comp.label(zoo.task(name)?));
+                }
+                None => selections.push("—".into()),
+            }
+        }
+        rows.push(vec![
+            format!("C{}", c + 1),
+            order_label(&prepared.order),
+            selections.join(" "),
+            format!("{stitched}/4"),
+            format!("{:.0}", 100.0 * report.violation_rate()),
+            format!("{:.0}", report.throughput_qps()),
+        ]);
+    }
+    println!("{}", render_table(
+        &["cfg", "p*", "compositions (per task)", "stitched", "viol %", "q/s"],
+        &rows,
+    ));
+    println!("legend: D=dense H=fp16 Q=int8 P=pruned; — = no feasible variant");
+    Ok(())
+}

@@ -1,0 +1,285 @@
+"""AOT export: lower every (task, subgraph, kernel-path) to HLO text and
+serialize every (task, variant, subgraph) weight blob + eval data +
+manifest.json.
+
+This is the *only* python entrypoint on the build path (``make
+artifacts``); the rust binary is self-contained afterwards.
+
+Key layout decision: variants of a subgraph share shapes — they differ
+only in which kernel path executes their GEMMs — so we export **one HLO
+per (task, subgraph, kernel-path, batch)** with weights as *parameters*,
+and store per-variant weights as binary blobs the rust runtime feeds as
+PJRT literals. `V^S` stitched variants therefore run from `S·paths` HLOs
+plus `V·S` weight blobs per task, which is exactly the paper's memory
+story (subgraphs, not whole variants, are the loadable unit).
+
+Interchange is HLO **text** (not serialized protos): jax ≥ 0.5 emits
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts:
+
+    artifacts/
+      manifest.json
+      hlo/<task>/sg<j>/<path>_b<batch>.hlo.txt
+      weights/<task>/<variant>/sg<j>.bin
+      data/<task>_eval.bin          X f32-LE then y u32-LE
+      probes/<task>.bin             probe X + per-variant expected logits
+      oracle/<task>.bin             f32-LE accuracies of all V^S stitched
+                                    variants (index k = ((i1*V)+i2)*V+i3)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import compress, model as M, train
+
+BATCH_SIZES = (1, 256)  # serve + accuracy-eval batch shapes
+PROBE_BATCH = 4
+MANIFEST_VERSION = 3
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format).
+
+    ``return_tuple=False``: each subgraph has exactly one output, so the
+    root stays a plain array — the rust runtime can chain stage outputs
+    as device buffers (``execute_b``) without host round-trips or tuple
+    unwrapping.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(a) -> str:
+    return {"float32": "f32", "int8": "i8"}[str(a.dtype)]
+
+
+def _param_specs(flat):
+    return [{"dtype": _dtype_tag(a), "shape": list(a.shape)} for a in flat]
+
+
+def _write_blob(path: str, flat) -> int:
+    """Concatenate tensors (C-order, LE) into one blob; return #bytes."""
+    with open(path, "wb") as f:
+        for a in flat:
+            f.write(np.asarray(a).tobytes())
+    return os.path.getsize(path)
+
+
+def _variant_paths_for(zoo):
+    """Kernel paths actually used by a zoo (fp16 rides the dense path)."""
+    return sorted({spec.kernel_path for spec in zoo})
+
+
+def export_task_hlos(task: str, paths, out_dir: str, variants_by_path,
+                     manifest_task: dict):
+    """Lower each (subgraph, kernel-path, batch) of ``task`` to HLO text."""
+    spec = M.TASKS[task]
+    manifest_task["hlo"] = {}
+    for j in range(M.SUBGRAPHS):
+        sg_dir = os.path.join(out_dir, "hlo", task, f"sg{j}")
+        os.makedirs(sg_dir, exist_ok=True)
+        din = spec.iface[j]
+        for path in paths:
+            # Shapes are variant-independent within a path; use any
+            # representative variant's params as the lowering template.
+            rep = variants_by_path[path]
+            flat = M.flatten_params(rep[j])
+            for batch in BATCH_SIZES:
+                x_spec = jax.ShapeDtypeStruct((batch, din), jnp.float32)
+                p_specs = [
+                    jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat
+                ]
+
+                def fn(x, *params, _j=j, _path=path):
+                    sg = M.unflatten_like(rep[_j], params)
+                    return M.forward_subgraph(
+                        task, _j, x, sg, path=_path, use_kernel=True
+                    )
+
+                lowered = jax.jit(fn).lower(x_spec, *p_specs)
+                text = to_hlo_text(lowered)
+                fname = f"{path}_b{batch}.hlo.txt"
+                with open(os.path.join(sg_dir, fname), "w") as f:
+                    f.write(text)
+                cost = lowered.cost_analysis() or {}
+                key = f"sg{j}/{path}/b{batch}"
+                manifest_task["hlo"][key] = {
+                    "file": f"hlo/{task}/sg{j}/{fname}",
+                    "flops": float(cost.get("flops", 0.0)),
+                    "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+                    "params": _param_specs(flat),
+                    "input_dim": din,
+                    "output_dim": spec.iface[j + 1],
+                }
+
+
+def stitched_oracle_accuracies(task: str, variant_params, y_eval, x_eval):
+    """Exact accuracies of ALL V^S stitched variants, computed stage-wise.
+
+    Stage-wise evaluation needs V + V² + V³ subgraph passes instead of
+    S·V³ — the same observation that makes the paper's estimator training
+    set cheap to label. Uses the pure-jnp forward (kernel equivalence is
+    covered by python/tests/test_model.py).
+    """
+    V = len(variant_params)
+    fwd = {}  # (j, path) -> jitted fn
+
+    def run(j, x, vp, path):
+        if (j, path) not in fwd:
+            fwd[(j, path)] = jax.jit(
+                lambda x, flat, _j=j, _p=path, _tpl=vp[j]: M.forward_subgraph(
+                    task, _j, x, M.unflatten_like(_tpl, flat), path=_p,
+                    use_kernel=False,
+                )
+            )
+        return fwd[(j, path)](x, tuple(M.flatten_params(vp[j])))
+
+    outs1 = [run(0, x_eval, vp, path) for vp, path in variant_params]
+    accs = np.zeros(V * V * V, np.float32)
+    for i1 in range(V):
+        outs2 = [
+            run(1, outs1[i1], vp, path) for vp, path in variant_params
+        ]
+        for i2 in range(V):
+            for i3, (vp, path) in enumerate(variant_params):
+                logits = run(2, outs2[i2], vp, path)
+                pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+                acc = float(jnp.mean((pred == y_eval).astype(jnp.float32)))
+                accs[(i1 * V + i2) * V + i3] = acc
+    return accs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=SEED)
+    ap.add_argument("--steps", type=int, default=240,
+                    help="base-model training steps")
+    ap.add_argument("--zoo", default="intel", choices=sorted(compress.ZOOS),
+                    help="which Table-5 zoo to export weights for")
+    ap.add_argument("--tasks", default=",".join(M.TASK_NAMES))
+    args = ap.parse_args()
+
+    t0 = time.time()
+    out = args.out
+    for sub in ("hlo", "weights", "data", "probes", "oracle"):
+        os.makedirs(os.path.join(out, sub), exist_ok=True)
+
+    zoo = compress.ZOOS[args.zoo]()
+    tasks = args.tasks.split(",")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "seed": args.seed,
+        "zoo_name": args.zoo,
+        "subgraphs": M.SUBGRAPHS,
+        "n_classes": M.N_CLASSES,
+        "batch_sizes": list(BATCH_SIZES),
+        "probe_batch": PROBE_BATCH,
+        "n_eval": train.N_EVAL,
+        "stitched_index": "k = ((i1*V)+i2)*V+i3 over zoo order",
+        "variants": [
+            {
+                "name": s.name, "vtype": s.vtype, "sparsity": s.sparsity,
+                "kernel_path": s.kernel_path, "precision": s.precision,
+            }
+            for s in zoo
+        ],
+        "tasks": {},
+    }
+
+    for task in tasks:
+        print(f"[aot] {task}: training base model ({args.steps} steps)")
+        base = train.train_base_model(task, args.seed, steps=args.steps)
+        spec = M.TASKS[task]
+        mt = {
+            "family": spec.family,
+            "input_dim": spec.input_dim,
+            "iface": list(spec.iface),
+            "variants": {},
+        }
+
+        # --- compress into the zoo; record accuracy + weight blobs ---
+        variant_params = []  # [(params, kernel_path)] in zoo order
+        by_path = {}
+        for vs in zoo:
+            params = compress.compress_model(base, vs)
+            variant_params.append((params, vs.kernel_path))
+            by_path.setdefault(vs.kernel_path, params)
+            acc = train.eval_accuracy(
+                task, params, path=vs.kernel_path, seed=args.seed
+            )
+            vdir = os.path.join(out, "weights", task, vs.name)
+            os.makedirs(vdir, exist_ok=True)
+            sgs = []
+            for j in range(M.SUBGRAPHS):
+                flat = M.flatten_params(params[j])
+                nbytes = _write_blob(os.path.join(vdir, f"sg{j}.bin"), flat)
+                sgs.append({
+                    "file": f"weights/{task}/{vs.name}/sg{j}.bin",
+                    "bytes": nbytes,
+                    "params": _param_specs(flat),
+                })
+            mt["variants"][vs.name] = {"accuracy": acc, "subgraphs": sgs}
+            print(f"[aot]   {vs.name:9s} acc={acc:.3f}")
+
+        # --- HLO per (sg, path, batch) ---
+        export_task_hlos(task, _variant_paths_for(zoo), out, by_path, mt)
+
+        # --- eval dataset ---
+        x_eval, y_eval = train.make_dataset(
+            task, train.N_EVAL, args.seed, "eval"
+        )
+        with open(os.path.join(out, "data", f"{task}_eval.bin"), "wb") as f:
+            f.write(np.asarray(x_eval, np.float32).tobytes())
+            f.write(np.asarray(y_eval, np.uint32).tobytes())
+
+        # --- probes: fixed input + per-variant expected logits ---
+        probe_rng = np.random.default_rng(
+            zlib.crc32(f"probe/{task}".encode()) % (2**31)
+        )
+        x_probe = probe_rng.standard_normal(
+            (PROBE_BATCH, spec.input_dim)
+        ).astype(np.float32)
+        with open(os.path.join(out, "probes", f"{task}.bin"), "wb") as f:
+            f.write(x_probe.tobytes())
+            for params, path in variant_params:
+                logits = M.forward(
+                    task, jnp.asarray(x_probe), params, path=path,
+                    use_kernel=False,
+                )
+                f.write(np.asarray(logits, np.float32).tobytes())
+
+        # --- exact stitched-variant oracle accuracies ---
+        print(f"[aot]   stitched oracle ({len(zoo)**M.SUBGRAPHS} variants)")
+        accs = stitched_oracle_accuracies(
+            task, variant_params, y_eval, x_eval
+        )
+        with open(os.path.join(out, "oracle", f"{task}.bin"), "wb") as f:
+            f.write(accs.tobytes())
+
+        manifest["tasks"][task] = mt
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time() - t0:.1f}s → {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Post-training compression → the sparse model zoos of Table 5.
+
+Stands in for NNCF (Intel) / ONNX-Runtime (NVIDIA) compression (see
+DESIGN.md §Substitutions). All methods are post-training and
+calibration-free, and all preserve tensor shapes so subgraph interfaces
+stay layer-aligned (the paper's operational-scope requirement (ii)):
+
+* **Unstructured pruning** — global per-layer magnitude pruning realized
+  as a {0,1} zero-mask (kernel path ``masked``).
+* **Structured pruning** — input-channel pruning realized as a {0,1}
+  per-row keep vector (kernel path ``blocksparse``); rows are ranked by
+  L2 norm. Channels are masked rather than reshaped, which is exactly how
+  architecture-changing pruning must be expressed for stitching to keep
+  aligned interfaces.
+* **INT8 quantization** — symmetric per-output-channel fake quantization
+  (kernel path ``quant``); weights stored as int8 + f32 scales.
+* **FP16 quantization** (Jetson zoo only) — weights round-tripped through
+  fp16; runs on the ``dense`` path.
+
+LayerNorm/bias parameters are never compressed (standard practice; they
+are a negligible fraction of bytes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+# Variant-type tags mirrored into manifest.json and the rust zoo module.
+DENSE = "dense"
+FP16 = "fp16"
+INT8 = "int8"
+UNSTRUCTURED = "unstructured"
+STRUCTURED = "structured"
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantSpec:
+    """One row of Table 5: a zoo entry."""
+
+    name: str
+    vtype: str  # dense | fp16 | int8 | unstructured | structured
+    sparsity: float  # fraction of weights pruned (0 for dense/quant)
+    kernel_path: str  # which L1 kernel family executes its GEMMs
+
+    @property
+    def precision(self) -> str:
+        return {FP16: "fp16", INT8: "int8"}.get(self.vtype, "fp32")
+
+
+def intel_zoo() -> list:
+    """Table 5, Intel SoCs: dense + INT8 + 6 unstructured + 2 structured."""
+    zoo = [
+        VariantSpec("dense", DENSE, 0.0, "dense"),
+        VariantSpec("int8", INT8, 0.0, "quant"),
+    ]
+    for s in (90, 85, 80, 75, 70, 65):
+        zoo.append(VariantSpec(f"unstr{s}", UNSTRUCTURED, s / 100.0, "masked"))
+    for s in (40, 50):
+        zoo.append(VariantSpec(f"struct{s}", STRUCTURED, s / 100.0, "blocksparse"))
+    return zoo
+
+
+def jetson_zoo() -> list:
+    """Table 5, NVIDIA Jetson: dense + FP16 + INT8 + 7 structured."""
+    zoo = [
+        VariantSpec("dense", DENSE, 0.0, "dense"),
+        VariantSpec("fp16", FP16, 0.0, "dense"),
+        VariantSpec("int8", INT8, 0.0, "quant"),
+    ]
+    for s in (20, 30, 35, 40, 45, 50, 55):
+        zoo.append(VariantSpec(f"struct{s}", STRUCTURED, s / 100.0, "blocksparse"))
+    return zoo
+
+
+ZOOS = {"intel": intel_zoo, "jetson": jetson_zoo}
+
+
+def _is_gemm_layer(key: str) -> bool:
+    """GEMM layers are compressed; layernorms (``ln*``) are not."""
+    return not key.startswith("ln")
+
+
+def _map_gemms(sg_params, fn):
+    """Apply ``fn`` to every GEMM layer [w, b] in a subgraph param tree."""
+    out = {}
+    for key, val in sg_params.items():
+        if isinstance(val, dict):
+            out[key] = _map_gemms(val, fn)
+        elif _is_gemm_layer(key):
+            out[key] = fn(val)
+        else:
+            out[key] = list(val)
+    return out
+
+
+def _prune_unstructured(wb, sparsity: float):
+    """[w, b] -> [w, mask, b]: zero-mask the smallest-|w| entries."""
+    w, b = wb
+    wn = np.asarray(w)
+    k = int(round(sparsity * wn.size))
+    mask = np.ones(wn.size, np.float32)
+    if k > 0:
+        idx = np.argsort(np.abs(wn).ravel(), kind="stable")[:k]
+        mask[idx] = 0.0
+    mask = mask.reshape(wn.shape)
+    return [w, jnp.asarray(mask), b]
+
+
+def _prune_structured(wb, sparsity: float):
+    """[w, b] -> [w, keep, b]: drop lowest-L2 input channels (rows of w)."""
+    w, b = wb
+    wn = np.asarray(w)
+    k_rows = wn.shape[0]
+    n_drop = int(round(sparsity * k_rows))
+    # Never prune every channel — keep at least one live row.
+    n_drop = min(n_drop, k_rows - 1)
+    keep = np.ones(k_rows, np.float32)
+    if n_drop > 0:
+        norms = np.linalg.norm(wn, axis=1)
+        keep[np.argsort(norms, kind="stable")[:n_drop]] = 0.0
+    return [w, jnp.asarray(keep), b]
+
+
+def _quant_int8(wb):
+    """[w, b] -> [wq(int8), scale, b]."""
+    w, b = wb
+    wq, scale = ref.fake_quant_weights_ref(jnp.asarray(w), bits=8)
+    return [wq, scale, b]
+
+
+def _cast_fp16(wb):
+    """[w, b] -> [fp16-round-tripped w, b] (dense path)."""
+    w, b = wb
+    return [jnp.asarray(w, jnp.float16).astype(jnp.float32), b]
+
+
+def compress_subgraph(sg_params, spec: VariantSpec):
+    """Produce the variant's params for one subgraph from the dense base."""
+    if spec.vtype == DENSE:
+        return _map_gemms(sg_params, lambda wb: list(wb))
+    if spec.vtype == FP16:
+        return _map_gemms(sg_params, _cast_fp16)
+    if spec.vtype == INT8:
+        return _map_gemms(sg_params, _quant_int8)
+    if spec.vtype == UNSTRUCTURED:
+        return _map_gemms(sg_params, lambda wb: _prune_unstructured(wb, spec.sparsity))
+    if spec.vtype == STRUCTURED:
+        return _map_gemms(sg_params, lambda wb: _prune_structured(wb, spec.sparsity))
+    raise ValueError(f"unknown variant type {spec.vtype!r}")
+
+
+def compress_model(params, spec: VariantSpec):
+    """Compress all S subgraphs of a base model."""
+    return [compress_subgraph(sg, spec) for sg in params]

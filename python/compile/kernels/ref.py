@@ -1,0 +1,83 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel path in :mod:`sparse_matmul` has an oracle here. pytest
+(``python/tests/test_kernel.py``) asserts ``allclose`` between kernel and
+oracle across a hypothesis-driven sweep of shapes/dtypes/sparsities — this
+is the core L1 correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Dense matmul + bias: ``x @ w + b``; accumulate in f32."""
+    acc = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    return acc + b.astype(jnp.float32)
+
+
+def masked_matmul_ref(
+    x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray, b: jnp.ndarray
+) -> jnp.ndarray:
+    """Unstructured-sparse matmul: weights zero-masked elementwise.
+
+    ``mask`` is {0,1} with the same shape as ``w``; this is the
+    zero-masking form of unstructured pruning the paper's Intel zoos use.
+    """
+    wm = (w * mask).astype(jnp.float32)
+    return jnp.matmul(x.astype(jnp.float32), wm) + b.astype(jnp.float32)
+
+
+def block_sparse_matmul_ref(
+    x: jnp.ndarray, w: jnp.ndarray, row_keep: jnp.ndarray, b: jnp.ndarray
+) -> jnp.ndarray:
+    """Structured (channel) pruning: whole input-rows of ``w`` dropped.
+
+    ``row_keep`` is a {0,1} vector of length ``K = w.shape[0]``; a zero
+    entry removes input channel k (row k of w) from the contraction. The
+    interface shapes are unchanged — channels are masked, not reshaped —
+    which is what keeps subgraph interfaces layer-aligned for stitching.
+    """
+    wk = (w * row_keep[:, None]).astype(jnp.float32)
+    return jnp.matmul(x.astype(jnp.float32), wk) + b.astype(jnp.float32)
+
+
+def quant_matmul_ref(
+    x: jnp.ndarray, wq: jnp.ndarray, scale: jnp.ndarray, b: jnp.ndarray
+) -> jnp.ndarray:
+    """Full-INT8 matmul: int8 weights *and* dynamically-quantized
+    activations (dequant after the integer contraction).
+
+    ``wq`` is int8, ``scale`` an (N,) f32 weight scale. Activations are
+    quantized per-row symmetric to int8 at runtime (dynamic quantization,
+    the ONNX-Runtime/OpenVINO INT8 execution model) — this is where real
+    INT8 pipelines lose accuracy, so the zoo's quantized variant carries
+    an honest cost.
+    """
+    xf = x.astype(jnp.float32)
+    sx = jnp.max(jnp.abs(xf), axis=1, keepdims=True) / 127.0
+    sx = jnp.where(sx > 0, sx, 1.0)
+    xq = jnp.clip(jnp.round(xf / sx), -127, 127)
+    acc = jnp.matmul(xq, wq.astype(jnp.float32))
+    w_scaled = acc * sx * scale.astype(jnp.float32)[None, :]
+    return w_scaled + b.astype(jnp.float32)
+
+
+def fake_quant_weights_ref(w: jnp.ndarray, bits: int = 8):
+    """Symmetric *per-tensor* fake quantization of a weight matrix.
+
+    Returns ``(wq_int, scale)`` with ``wq_int`` in [-(2^{b-1}-1), 2^{b-1}-1]
+    and an (N,) f32 ``scale`` (one value broadcast across columns — the
+    kernel interface stays per-column) so that ``wq_int * scale ≈ w``.
+    Per-tensor scaling is what cheap post-training INT8 pipelines use and
+    it loses measurable accuracy, which keeps the zoo's accuracy–latency
+    trade-off honest (per-channel INT8 on these tiny models is lossless,
+    collapsing the Pareto frontier to a single dominating variant).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jnp.max(jnp.abs(w))
+    scale_val = jnp.where(absmax > 0, absmax / qmax, 1.0).astype(jnp.float32)
+    scale = jnp.full((w.shape[1],), scale_val, jnp.float32)
+    wq = jnp.clip(jnp.round(w / scale_val), -qmax, qmax)
+    return wq.astype(jnp.int8), scale

@@ -1,0 +1,157 @@
+"""Analytic VMEM-footprint + MXU-utilization estimates for the Pallas
+kernels' real-TPU schedule.
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the
+L1 performance pass (EXPERIMENTS.md §Perf) reasons about the *structure*
+of the BlockSpec schedule instead: per-tile VMEM residency, MXU issue
+efficiency, and HBM traffic, on TPUv4-like constants.
+
+Usage:
+    python -m compile.kernels.roofline            # analyze model GEMMs
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from . import sparse_matmul as sm
+
+# TPUv4-like constants (per core).
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128
+MXU_FLOPS_PER_CYCLE = 2 * MXU_DIM * MXU_DIM  # MAC = 2 flops
+HBM_BYTES_PER_CYCLE = 1.2 * 1024  # ~1.2 TB/s at ~1 GHz
+
+
+@dataclasses.dataclass
+class TileReport:
+    """Schedule analysis of one GEMM under a (bm, bk, bn) tiling."""
+
+    m: int
+    k: int
+    n: int
+    bm: int
+    bk: int
+    bn: int
+    kernel: str  # dense | masked | blocksparse | quant
+    weight_bytes_per_elem: float = 4.0
+
+    @property
+    def grid(self):
+        return (self.m // self.bm, self.n // self.bn, self.k // self.bk)
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Resident per grid step: x-tile + w-tile(+mask) + acc + bias.
+        Double-buffered inputs (×2) as the Mosaic pipeline does."""
+        x = self.bm * self.bk * 4
+        w = self.bk * self.bn * self.weight_bytes_per_elem
+        if self.kernel == "masked":
+            w *= 2.0  # mask tile rides along
+        if self.kernel == "quant":
+            w = self.bk * self.bn * 1 + self.bn * 4  # int8 + scales
+        acc = self.bm * self.bn * 4
+        bias = self.bn * 4
+        return int(2 * (x + w) + acc + bias)
+
+    @property
+    def vmem_ok(self) -> bool:
+        return self.vmem_bytes <= VMEM_BYTES
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Issue efficiency: fraction of the 128×128 systolic array the
+        tile shape keeps busy (edge-padding waste)."""
+        eff_m = min(self.bm, MXU_DIM) / MXU_DIM if self.bm < MXU_DIM else 1.0
+        eff_n = min(self.bn, MXU_DIM) / MXU_DIM if self.bn < MXU_DIM else 1.0
+        # K streams through the array; only sub-128 K tiles waste issue.
+        eff_k = min(self.bk, MXU_DIM) / MXU_DIM if self.bk < MXU_DIM else 1.0
+        return eff_m * eff_n * eff_k
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.m * self.k * self.n
+
+    @property
+    def hbm_bytes(self) -> float:
+        """HBM traffic under this schedule: x tiles re-read per N-block,
+        w tiles re-read per M-block, single output write."""
+        gm, gn, _gk = self.grid
+        x_reads = gn * self.m * self.k * 4
+        w_elem = self.weight_bytes_per_elem if self.kernel != "quant" else 1.0
+        w_reads = gm * self.k * self.n * w_elem
+        if self.kernel == "masked":
+            w_reads *= 2.0
+        out = self.m * self.n * 4
+        return x_reads + w_reads + out
+
+    @property
+    def compute_cycles(self) -> float:
+        return self.flops / (MXU_FLOPS_PER_CYCLE * max(self.mxu_utilization, 1e-9))
+
+    @property
+    def memory_cycles(self) -> float:
+        return self.hbm_bytes / HBM_BYTES_PER_CYCLE
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_cycles >= self.memory_cycles else "memory"
+
+    @property
+    def efficiency(self) -> float:
+        """Achieved/roofline ratio: ideal cycles over scheduled cycles."""
+        ideal = self.flops / MXU_FLOPS_PER_CYCLE
+        return ideal / max(self.compute_cycles, self.memory_cycles)
+
+    def row(self) -> str:
+        return (
+            f"{self.kernel:<11} {self.m:>5}x{self.k:<5}x{self.n:<5} "
+            f"bm/bk/bn {self.bm:>3}/{self.bk:>3}/{self.bn:>3} "
+            f"VMEM {self.vmem_bytes/1024:>7.1f} KiB "
+            f"MXU {100*self.mxu_utilization:>5.1f} % "
+            f"{self.bound:<7} eff {100*self.efficiency:>5.1f} %"
+        )
+
+
+def default_tiles(m: int, k: int, n: int, kernel: str = "dense") -> TileReport:
+    """The tiling `sparse_matmul._block` actually picks."""
+    return TileReport(
+        m=m, k=k, n=n,
+        bm=sm._block(m), bk=sm._block(k), bn=sm._block(n),
+        kernel=kernel,
+    )
+
+
+def model_gemms():
+    """The distinct GEMM shapes the four task models execute (batch 256
+    eval shape — the throughput-relevant one)."""
+    b = 256
+    return [
+        # imgcls: embed + residual blocks + head
+        (b, 768, 256, "dense"),
+        (b, 256, 256, "masked"),
+        (b, 256, 256, "blocksparse"),
+        (b, 256, 256, "quant"),
+        # transformer tasks: qkv/o + ffn
+        (b * 16, 64, 64, "dense"),
+        (b * 16, 64, 128, "quant"),
+        (b * 16, 96, 192, "masked"),
+        (b * 32, 32, 64, "blocksparse"),
+    ]
+
+
+def main() -> None:
+    print(f"TPUv4-like roofline: VMEM {VMEM_BYTES // (1024*1024)} MiB, "
+          f"MXU {MXU_DIM}x{MXU_DIM}, HBM {HBM_BYTES_PER_CYCLE / 1024:.1f} KiB/cycle\n")
+    for m, k, n, kernel in model_gemms():
+        r = default_tiles(m, k, n, kernel)
+        assert r.vmem_ok, f"tile spills VMEM: {r.row()}"
+        print(r.row())
+    print("\nsweep: K-block size for the imgcls residual GEMM (masked)")
+    for bk in (32, 64, 128, 256):
+        r = TileReport(m=256, k=256, n=256, bm=128, bk=bk, bn=128, kernel="masked")
+        print(f"  bk={bk:<4} {r.row()}")
+
+
+if __name__ == "__main__":
+    main()

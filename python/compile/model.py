@@ -1,0 +1,384 @@
+"""L2: the four task models, each a pipeline of S=3 layer-aligned subgraphs.
+
+The paper evaluates ResNet-101 / BERT-Base / ViT-Small / Wav2vec2. Those
+are hardware-gated at this scale, so we build tiny models of the same
+*families* (see DESIGN.md §Substitutions): a residual CNN-style MLP, a
+transformer encoder, a patch-ViT, and a conv+transformer ASR head. What
+matters for the paper's contribution is that each task has S layer-aligned
+subgraphs whose sparse variants can be recombined (stitched), with genuine
+accuracy/latency trade-offs.
+
+Every weight GEMM goes through the L1 Pallas kernels
+(:mod:`kernels.sparse_matmul`); data-dependent math (attention scores,
+layernorm, softmax, activations) is plain jnp. Each subgraph's forward is
+pure: ``f(x, params) -> y`` where ``params`` is a flat list of arrays in a
+deterministic order (the HLO parameter order the rust runtime feeds).
+
+Kernel paths — one per variant type, uniform across a variant's GEMMs:
+
+* ``dense``       — f32 weights                      → ``matmul``
+* ``masked``      — unstructured pruning, {0,1} mask → ``masked_matmul``
+* ``blocksparse`` — structured channel pruning       → ``block_sparse_matmul``
+* ``quant``       — INT8 weights + per-col scale     → ``quant_matmul``
+
+``fp16`` variants reuse the ``dense`` path with weights round-tripped
+through fp16 at compression time.
+
+Set ``use_kernel=False`` to run the pure-jnp reference forward (used for
+training and as an oracle for the pallas path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels import sparse_matmul as sm
+
+KERNEL_PATHS = ("dense", "masked", "blocksparse", "quant")
+
+N_CLASSES = 10
+SUBGRAPHS = 3  # S in the paper; == #processors (paper §5.4)
+
+
+# --------------------------------------------------------------------------
+# Layer primitives
+# --------------------------------------------------------------------------
+
+
+def _gemm(x2d, layer_params, path: str, use_kernel: bool):
+    """Dispatch one weight GEMM to the pallas kernel (or jnp oracle)."""
+    if path == "dense":
+        w, b = layer_params
+        if use_kernel:
+            return sm.matmul(x2d, w, b)
+        return ref.matmul_ref(x2d, w, b)
+    if path == "masked":
+        w, mask, b = layer_params
+        if use_kernel:
+            return sm.masked_matmul(x2d, w, mask, b)
+        return ref.masked_matmul_ref(x2d, w, mask, b)
+    if path == "blocksparse":
+        w, keep, b = layer_params
+        if use_kernel:
+            return sm.block_sparse_matmul(x2d, w, keep, b)
+        return ref.block_sparse_matmul_ref(x2d, w, keep, b)
+    if path == "quant":
+        wq, scale, b = layer_params
+        if use_kernel:
+            return sm.quant_matmul(x2d, wq, scale, b)
+        return ref.quant_matmul_ref(x2d, wq, scale, b)
+    raise ValueError(f"unknown kernel path {path!r}")
+
+
+def _layernorm(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def _attention(x3d, params, path, use_kernel, n_heads):
+    """Multi-head self-attention; QKV/O projections via the pallas GEMM."""
+    b, s, d = x3d.shape
+    x2d = x3d.reshape(b * s, d)
+    q = _gemm(x2d, params["wq"], path, use_kernel).reshape(b, s, d)
+    k = _gemm(x2d, params["wk"], path, use_kernel).reshape(b, s, d)
+    v = _gemm(x2d, params["wv"], path, use_kernel).reshape(b, s, d)
+    dh = d // n_heads
+
+    def split(t):  # (b, s, d) -> (b, h, s, dh)
+        return t.reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = jnp.einsum("bhsd,bhtd->bhst", qh, kh) / np.sqrt(dh)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,bhtd->bhsd", attn, vh)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b * s, d)
+    out = _gemm(ctx, params["wo"], path, use_kernel).reshape(b, s, d)
+    return out
+
+
+def _encoder_block(x3d, params, path, use_kernel, n_heads):
+    """Pre-LN transformer encoder block."""
+    b, s, d = x3d.shape
+    h = _layernorm(x3d, *params["ln1"])
+    x3d = x3d + _attention(h, params, path, use_kernel, n_heads)
+    h = _layernorm(x3d, *params["ln2"])
+    h2 = _gemm(h.reshape(b * s, d), params["ff1"], path, use_kernel)
+    h2 = jax.nn.gelu(h2)
+    h2 = _gemm(h2, params["ff2"], path, use_kernel)
+    return x3d + h2.reshape(b, s, d)
+
+
+def _res_block(x2d, params, path, use_kernel):
+    """Residual MLP block: x + W2·relu(W1·x), post-activation relu."""
+    h = jax.nn.relu(_gemm(x2d, params["fc1"], path, use_kernel))
+    h = _gemm(h, params["fc2"], path, use_kernel)
+    return jax.nn.relu(x2d + h)
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization (dense/f32 base models)
+# --------------------------------------------------------------------------
+
+
+def _init_linear(rng, din, dout):
+    w = rng.standard_normal((din, dout)).astype(np.float32) * np.sqrt(2.0 / din)
+    b = np.zeros((dout,), np.float32)
+    return [jnp.asarray(w), jnp.asarray(b)]
+
+
+def _init_ln(d):
+    return [jnp.ones((d,), jnp.float32), jnp.zeros((d,), jnp.float32)]
+
+
+def _init_encoder(rng, d, dff):
+    return {
+        "ln1": _init_ln(d),
+        "wq": _init_linear(rng, d, d),
+        "wk": _init_linear(rng, d, d),
+        "wv": _init_linear(rng, d, d),
+        "wo": _init_linear(rng, d, d),
+        "ln2": _init_ln(d),
+        "ff1": _init_linear(rng, d, dff),
+        "ff2": _init_linear(rng, dff, d),
+    }
+
+
+def _init_res(rng, d):
+    return {"fc1": _init_linear(rng, d, d), "fc2": _init_linear(rng, d, d)}
+
+
+# --------------------------------------------------------------------------
+# Task model definitions
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """Static description of a task model.
+
+    ``iface`` lists the activation widths at the S+1 pipeline boundaries
+    (input dim, sg1→sg2 dim, sg2→sg3 dim, output dim = N_CLASSES). These
+    are identical across all variants of a task — the layer-aligned
+    interface contract that makes stitching shape-safe (paper §2.1,
+    operational scope (ii)).
+    """
+
+    name: str
+    family: str
+    input_dim: int
+    iface: tuple
+    init: Callable  # rng -> params (list of S per-subgraph param pytrees)
+    forward_sg: Callable  # (j, x2d, sg_params, path, use_kernel) -> y2d
+
+
+# ---- imgcls: residual CNN-style model (ResNet-101 stand-in) ----
+
+IMG_D = 256
+
+
+def _imgcls_init(rng):
+    return [
+        {"embed": _init_linear(rng, 768, IMG_D), "res1": _init_res(rng, IMG_D)},
+        {"res2": _init_res(rng, IMG_D), "res3": _init_res(rng, IMG_D)},
+        {"res4": _init_res(rng, IMG_D), "head": _init_linear(rng, IMG_D, N_CLASSES)},
+    ]
+
+
+def _imgcls_fwd(j, x, p, path, uk):
+    if j == 0:
+        x = jax.nn.relu(_gemm(x, p["embed"], path, uk))
+        return _res_block(x, p["res1"], path, uk)
+    if j == 1:
+        x = _res_block(x, p["res2"], path, uk)
+        return _res_block(x, p["res3"], path, uk)
+    x = _res_block(x, p["res4"], path, uk)
+    return _gemm(x, p["head"], path, uk)
+
+
+# ---- sentiment: transformer encoder (BERT-Base stand-in) ----
+
+SENT_SEQ, SENT_D, SENT_FF, SENT_HEADS = 16, 64, 128, 2
+
+
+def _sentiment_init(rng):
+    return [
+        {"embed": _init_linear(rng, SENT_D, SENT_D),
+         "enc1": _init_encoder(rng, SENT_D, SENT_FF)},
+        {"enc2": _init_encoder(rng, SENT_D, SENT_FF)},
+        {"ln": _init_ln(SENT_D),
+         "fc": _init_linear(rng, SENT_D, SENT_FF),
+         "head": _init_linear(rng, SENT_FF, N_CLASSES)},
+    ]
+
+
+def _sentiment_fwd(j, x, p, path, uk):
+    b = x.shape[0]
+    if j == 0:
+        t = x.reshape(b * SENT_SEQ, SENT_D)
+        t = _gemm(t, p["embed"], path, uk).reshape(b, SENT_SEQ, SENT_D)
+        t = _encoder_block(t, p["enc1"], path, uk, SENT_HEADS)
+        return t.reshape(b, SENT_SEQ * SENT_D)
+    if j == 1:
+        t = x.reshape(b, SENT_SEQ, SENT_D)
+        t = _encoder_block(t, p["enc2"], path, uk, SENT_HEADS)
+        return t.reshape(b, SENT_SEQ * SENT_D)
+    t = x.reshape(b, SENT_SEQ, SENT_D)
+    t = _layernorm(t, *p["ln"]).mean(axis=1)  # (b, d) mean-pool
+    t = jax.nn.gelu(_gemm(t, p["fc"], path, uk))
+    return _gemm(t, p["head"], path, uk)
+
+
+# ---- har: patch ViT (ViT-Small stand-in) ----
+
+HAR_PATCHES, HAR_PATCH_DIM, HAR_D, HAR_FF, HAR_HEADS = 16, 48, 96, 192, 3
+
+
+def _har_init(rng):
+    return [
+        {"embed": _init_linear(rng, HAR_PATCH_DIM, HAR_D),
+         "enc1": _init_encoder(rng, HAR_D, HAR_FF)},
+        {"enc2": _init_encoder(rng, HAR_D, HAR_FF)},
+        {"ln": _init_ln(HAR_D),
+         "head": _init_linear(rng, HAR_D, N_CLASSES)},
+    ]
+
+
+def _har_fwd(j, x, p, path, uk):
+    b = x.shape[0]
+    if j == 0:
+        t = x.reshape(b * HAR_PATCHES, HAR_PATCH_DIM)
+        t = _gemm(t, p["embed"], path, uk).reshape(b, HAR_PATCHES, HAR_D)
+        t = _encoder_block(t, p["enc1"], path, uk, HAR_HEADS)
+        return t.reshape(b, HAR_PATCHES * HAR_D)
+    if j == 1:
+        t = x.reshape(b, HAR_PATCHES, HAR_D)
+        t = _encoder_block(t, p["enc2"], path, uk, HAR_HEADS)
+        return t.reshape(b, HAR_PATCHES * HAR_D)
+    t = x.reshape(b, HAR_PATCHES, HAR_D)
+    t = _layernorm(t, *p["ln"]).mean(axis=1)
+    return _gemm(t, p["head"], path, uk)
+
+
+# ---- asr: conv frame-encoder + transformer (Wav2vec2 stand-in) ----
+
+ASR_FRAMES, ASR_FRAME_DIM, ASR_D, ASR_FF, ASR_HEADS = 32, 32, 64, 128, 2
+
+
+def _asr_init(rng):
+    return [
+        {"embed": _init_linear(rng, ASR_FRAME_DIM, ASR_D),
+         "ff_a": _init_linear(rng, ASR_D, ASR_FF),
+         "ff_b": _init_linear(rng, ASR_FF, ASR_D),
+         "ln": _init_ln(ASR_D)},
+        {"enc": _init_encoder(rng, ASR_D, ASR_FF)},
+        {"ln": _init_ln(ASR_D),
+         "head": _init_linear(rng, ASR_D, N_CLASSES)},
+    ]
+
+
+def _asr_fwd(j, x, p, path, uk):
+    b = x.shape[0]
+    if j == 0:
+        # conv-as-matmul frame feature extractor
+        t = x.reshape(b * ASR_FRAMES, ASR_FRAME_DIM)
+        t = jax.nn.gelu(_gemm(t, p["embed"], path, uk))
+        h = jax.nn.gelu(_gemm(t, p["ff_a"], path, uk))
+        h = _gemm(h, p["ff_b"], path, uk)
+        t = _layernorm((t + h).reshape(b, ASR_FRAMES, ASR_D), *p["ln"])
+        return t.reshape(b, ASR_FRAMES * ASR_D)
+    if j == 1:
+        t = x.reshape(b, ASR_FRAMES, ASR_D)
+        t = _encoder_block(t, p["enc"], path, uk, ASR_HEADS)
+        return t.reshape(b, ASR_FRAMES * ASR_D)
+    t = x.reshape(b, ASR_FRAMES, ASR_D)
+    t = _layernorm(t, *p["ln"]).mean(axis=1)
+    return _gemm(t, p["head"], path, uk)
+
+
+TASKS = {
+    "imgcls": TaskSpec(
+        "imgcls", "resnet", 768,
+        (768, IMG_D, IMG_D, N_CLASSES), _imgcls_init, _imgcls_fwd),
+    "sentiment": TaskSpec(
+        "sentiment", "bert", SENT_SEQ * SENT_D,
+        (SENT_SEQ * SENT_D, SENT_SEQ * SENT_D, SENT_SEQ * SENT_D, N_CLASSES),
+        _sentiment_init, _sentiment_fwd),
+    "har": TaskSpec(
+        "har", "vit", HAR_PATCHES * HAR_PATCH_DIM,
+        (HAR_PATCHES * HAR_PATCH_DIM, HAR_PATCHES * HAR_D,
+         HAR_PATCHES * HAR_D, N_CLASSES), _har_init, _har_fwd),
+    "asr": TaskSpec(
+        "asr", "wav2vec", ASR_FRAMES * ASR_FRAME_DIM,
+        (ASR_FRAMES * ASR_FRAME_DIM, ASR_FRAMES * ASR_D,
+         ASR_FRAMES * ASR_D, N_CLASSES), _asr_init, _asr_fwd),
+}
+
+TASK_NAMES = tuple(TASKS)
+
+
+# --------------------------------------------------------------------------
+# Whole-model forward + param flattening
+# --------------------------------------------------------------------------
+
+
+def forward(task: str, x, params, path="dense", use_kernel=False):
+    """Full S-subgraph forward: chain the per-subgraph forwards."""
+    spec = TASKS[task]
+    for j in range(SUBGRAPHS):
+        x = spec.forward_sg(j, x, params[j], path, use_kernel)
+    return x
+
+
+def forward_subgraph(task, j, x, sg_params, path="dense", use_kernel=False):
+    """Single subgraph forward (what each HLO artifact implements)."""
+    return TASKS[task].forward_sg(j, x, sg_params, path, use_kernel)
+
+
+def flatten_params(sg_params):
+    """Deterministic flat tensor list for one subgraph's params.
+
+    Sorted-key traversal of the nested dict; within a layer the list order
+    is as stored (w, [mask|keep|scale], b — see compress.py). This order
+    defines the HLO parameter order after the activation input and is
+    mirrored in the manifest for the rust runtime.
+    """
+    flat = []
+    for key in sorted(sg_params):
+        val = sg_params[key]
+        if isinstance(val, dict):
+            flat.extend(flatten_params(val))
+        else:
+            flat.extend(val)
+    return flat
+
+
+def unflatten_like(sg_params, flat):
+    """Inverse of :func:`flatten_params` given a structure template."""
+    flat = list(flat)
+
+    def take(template):
+        out = {}
+        for key in sorted(template):
+            val = template[key]
+            if isinstance(val, dict):
+                out[key] = take(val)
+            else:
+                out[key] = [flat.pop(0) for _ in val]
+        return out
+
+    return take(sg_params)
+
+
+def init_params(task: str, seed: int = 0):
+    """Initialize the dense/f32 base-model params for a task."""
+    import zlib
+
+    rng = np.random.default_rng(seed + zlib.crc32(task.encode()) % (2**16))
+    return TASKS[task].init(rng)

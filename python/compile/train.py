@@ -1,0 +1,103 @@
+"""Synthetic task datasets + brief base-model training.
+
+The paper's datasets (ImageNet-1K, SST-2, HAR, LibriSpeech) are
+substituted with synthetic Gaussian-blob classification problems (see
+DESIGN.md §Substitutions): the SLO machinery only needs each variant to
+have a *genuine, distinct* accuracy, which briefly-trained tiny models
+give — pruning/quantizing trained weights produces real accuracy drops
+that grow with sparsity, the same structure Table 5 zoos exhibit on the
+real datasets.
+
+Datasets are class-conditional Gaussians over the task's input dimension
+with class-dependent structured means (low-dimensional latent factors so
+the problem is learnable but not trivial). Everything is seeded and
+deterministic.
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+N_TRAIN = 4096
+N_EVAL = 512
+NOISE = 5.0  # class-overlap knob: larger → lower ceiling accuracy
+
+
+def make_dataset(task: str, n: int, seed: int, split: str):
+    """Class-conditional Gaussian dataset for ``task``: (X f32, y int32)."""
+    spec = M.TASKS[task]
+    task_id = zlib.crc32(task.encode()) % (2**16)
+    split_id = zlib.crc32(f"{task}/{split}".encode()) % (2**16)
+    rng = np.random.default_rng(seed + split_id)
+    d = spec.input_dim
+    # Structured class means: rank-4 latent factors → overlapping classes.
+    # Seeded by task only — train and eval share the class geometry.
+    factors = np.random.default_rng(task_id).standard_normal((4, d)).astype(
+        np.float32
+    )
+    coeffs = np.random.default_rng(task_id + 1).standard_normal(
+        (M.N_CLASSES, 4)
+    ).astype(np.float32)
+    means = coeffs @ factors  # (classes, d)
+    y = rng.integers(0, M.N_CLASSES, size=n).astype(np.int32)
+    x = means[y] + NOISE * rng.standard_normal((n, d)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def _loss_fn(task, params_flat, treedef, x, y):
+    params = jax.tree_util.tree_unflatten(treedef, params_flat)
+    logits = M.forward(task, x, params, path="dense", use_kernel=False)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return nll
+
+
+def train_base_model(task: str, seed: int = 0, steps: int = 240,
+                     batch: int = 256, lr: float = 8e-3):
+    """Brief Adam training of the dense base model on synthetic data.
+
+    Training uses the pure-jnp forward (the pallas path is export-only);
+    a pytest asserts the two paths agree numerically.
+    """
+    params = M.init_params(task, seed)
+    x_train, y_train = make_dataset(task, N_TRAIN, seed, "train")
+    flat, treedef = jax.tree_util.tree_flatten(params)
+
+    # Minimal Adam (no optax in this environment).
+    m = [jnp.zeros_like(p) for p in flat]
+    v = [jnp.zeros_like(p) for p in flat]
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    grad_fn = jax.jit(
+        jax.grad(lambda pf, x, y: _loss_fn(task, pf, treedef, x, y)),
+        static_argnums=(),
+    )
+
+    rng = np.random.default_rng(seed + 7)
+    for step in range(steps):
+        idx = rng.integers(0, x_train.shape[0], size=batch)
+        g = grad_fn(flat, x_train[idx], y_train[idx])
+        t = step + 1
+        for i in range(len(flat)):
+            m[i] = b1 * m[i] + (1 - b1) * g[i]
+            v[i] = b2 * v[i] + (1 - b2) * g[i] ** 2
+            mh = m[i] / (1 - b1**t)
+            vh = v[i] / (1 - b2**t)
+            flat[i] = flat[i] - lr * mh / (jnp.sqrt(vh) + eps)
+
+    return jax.tree_util.tree_unflatten(treedef, flat)
+
+
+def eval_accuracy(task: str, params, path="dense", use_kernel=False,
+                  seed: int = 0, n: int = N_EVAL) -> float:
+    """Top-1 accuracy on the task's held-out eval split."""
+    x, y = make_dataset(task, n, seed, "eval")
+    logits = M.forward(task, x, params, path=path, use_kernel=use_kernel)
+    pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    return float(jnp.mean((pred == y).astype(jnp.float32)))

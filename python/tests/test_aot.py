@@ -1,0 +1,112 @@
+"""Build-path integration: run the AOT exporter end-to-end (tiny budget)
+and validate the artifact contract the rust side depends on."""
+
+import json
+import os
+import struct
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import model as M
+
+ART = "/tmp/sparseloom_test_artifacts"
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    """One-task, low-step AOT run (shared across the module's tests)."""
+    repo_py = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", ART,
+         "--tasks", "imgcls", "--steps", "8"],
+        cwd=repo_py, check=True, capture_output=True,
+    )
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_schema(artifacts):
+    m = artifacts
+    assert m["version"] >= 3
+    assert m["subgraphs"] == M.SUBGRAPHS
+    assert len(m["variants"]) == 10
+    assert "imgcls" in m["tasks"]
+    t = m["tasks"]["imgcls"]
+    assert len(t["iface"]) == M.SUBGRAPHS + 1
+    assert set(t["variants"]) == {v["name"] for v in m["variants"]}
+
+
+def test_hlo_files_exist_and_parse_header(artifacts):
+    t = artifacts["tasks"]["imgcls"]
+    assert len(t["hlo"]) == M.SUBGRAPHS * 4 * 2  # sg × path × batch
+    for entry in t["hlo"].values():
+        path = os.path.join(ART, entry["file"])
+        assert os.path.exists(path)
+        head = open(path).read(200)
+        assert "HloModule" in head
+        assert entry["flops"] >= 0
+
+
+def test_weight_blob_sizes_match_param_specs(artifacts):
+    dt = {"f32": 4, "i8": 1}
+    t = artifacts["tasks"]["imgcls"]
+    for vname, v in t["variants"].items():
+        for sg in v["subgraphs"]:
+            want = sum(
+                dt[p["dtype"]] * int(np.prod(p["shape"]))
+                for p in sg["params"]
+            )
+            assert sg["bytes"] == want, (vname, sg["file"])
+            assert os.path.getsize(os.path.join(ART, sg["file"])) == want
+
+
+def test_hlo_param_specs_match_variant_blobs(artifacts):
+    """HLO lowering order and blob serialization order agree per path."""
+    t = artifacts["tasks"]["imgcls"]
+    vtypes = {v["name"]: v["kernel_path"] for v in artifacts["variants"]}
+    for vname, v in t["variants"].items():
+        path = vtypes[vname]
+        for j, sg in enumerate(v["subgraphs"]):
+            hlo = t["hlo"][f"sg{j}/{path}/b1"]
+            assert hlo["params"] == sg["params"], (vname, j)
+
+
+def test_eval_data_shape(artifacts):
+    d = M.TASKS["imgcls"].input_dim
+    n = artifacts["n_eval"]
+    size = os.path.getsize(os.path.join(ART, "data", "imgcls_eval.bin"))
+    assert size == n * d * 4 + n * 4
+
+
+def test_oracle_table(artifacts):
+    v = len(artifacts["variants"])
+    raw = open(os.path.join(ART, "oracle", "imgcls.bin"), "rb").read()
+    accs = np.frombuffer(raw, np.float32)
+    assert accs.shape == (v ** M.SUBGRAPHS,)
+    assert (accs >= 0).all() and (accs <= 1).all()
+    # Pure-variant entries must equal the manifest accuracies.
+    t = artifacts["tasks"]["imgcls"]
+    for i, vs in enumerate(artifacts["variants"]):
+        k = (i * v + i) * v + i
+        np.testing.assert_allclose(
+            accs[k], t["variants"][vs["name"]]["accuracy"], atol=1e-6
+        )
+
+
+def test_probe_file_layout(artifacts):
+    pb = artifacts["probe_batch"]
+    d = M.TASKS["imgcls"].input_dim
+    nv = len(artifacts["variants"])
+    size = os.path.getsize(os.path.join(ART, "probes", "imgcls.bin"))
+    assert size == pb * d * 4 + nv * pb * M.N_CLASSES * 4
+
+
+def test_stitched_space_is_richer_than_zoo(artifacts):
+    """Fig-4 precondition: stitching expands the accuracy space beyond
+    the 10 zoo points (more unique accuracy values than zoo variants)."""
+    raw = open(os.path.join(ART, "oracle", "imgcls.bin"), "rb").read()
+    accs = np.frombuffer(raw, np.float32)
+    assert len(np.unique(np.round(accs, 4))) > 10

@@ -1,0 +1,122 @@
+"""Compression invariants: the zoo behaves like Table 5 says it should."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import compress, model as M
+from compile.kernels import ref
+
+
+def test_zoo_sizes_match_table5():
+    assert len(compress.intel_zoo()) == 10
+    assert len(compress.jetson_zoo()) == 10
+    intel = {v.vtype for v in compress.intel_zoo()}
+    assert intel == {"dense", "int8", "unstructured", "structured"}
+    jetson = {v.vtype for v in compress.jetson_zoo()}
+    assert jetson == {"dense", "fp16", "int8", "structured"}
+
+
+def test_zoo_names_unique():
+    for zoo in (compress.intel_zoo(), compress.jetson_zoo()):
+        names = [v.name for v in zoo]
+        assert len(names) == len(set(names))
+
+
+@settings(max_examples=20, deadline=None)
+@given(sparsity=st.sampled_from([0.2, 0.4, 0.5, 0.65, 0.8, 0.9]),
+       seed=st.integers(0, 2**31 - 1))
+def test_unstructured_mask_fraction(sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    b = jnp.zeros(32, jnp.float32)
+    _, mask, _ = compress._prune_unstructured([w, b], sparsity)
+    frac = 1.0 - float(np.mean(np.asarray(mask)))
+    assert abs(frac - sparsity) < 1.0 / mask.size + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(sparsity=st.sampled_from([0.2, 0.4, 0.5, 0.55]),
+       seed=st.integers(0, 2**31 - 1))
+def test_structured_keep_fraction(sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    b = jnp.zeros(32, jnp.float32)
+    _, keep, _ = compress._prune_structured([w, b], sparsity)
+    dropped = int(64 - np.sum(np.asarray(keep)))
+    assert dropped == int(round(sparsity * 64))
+    assert np.sum(np.asarray(keep)) >= 1  # never prunes everything
+
+
+def test_unstructured_prunes_smallest_magnitudes():
+    w = jnp.asarray(np.arange(1, 33, dtype=np.float32).reshape(8, 4))
+    b = jnp.zeros(4, jnp.float32)
+    _, mask, _ = compress._prune_unstructured([w, b], 0.25)
+    flat = np.asarray(mask).ravel()
+    assert (flat[:8] == 0).all() and (flat[8:] == 1).all()
+
+
+def test_structured_prunes_lowest_norm_rows():
+    w = np.ones((8, 4), np.float32) * np.arange(1, 9)[:, None]
+    _, keep, _ = compress._prune_structured(
+        [jnp.asarray(w), jnp.zeros(4, jnp.float32)], 0.5
+    )
+    assert np.array_equal(np.asarray(keep), [0, 0, 0, 0, 1, 1, 1, 1])
+
+
+def test_int8_quant_tensors():
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    b = jnp.zeros(16, jnp.float32)
+    wq, scale, _ = compress._quant_int8([w, b])
+    assert wq.dtype == jnp.int8
+    assert scale.shape == (16,)
+    recon = np.asarray(wq, np.float32) * np.asarray(scale)[None, :]
+    assert np.max(np.abs(recon - np.asarray(w))) <= 0.5 * np.max(
+        np.asarray(scale)
+    ) + 1e-6
+
+
+def test_fp16_roundtrip_close():
+    rng = np.random.default_rng(6)
+    w = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    b = jnp.zeros(16, jnp.float32)
+    w16, _ = compress._cast_fp16([w, b])
+    assert w16.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(w16), np.asarray(w), rtol=2e-3)
+
+
+def test_layernorm_params_not_compressed():
+    params = M.init_params("sentiment")
+    vs = compress.intel_zoo()[2]  # unstr90
+    out = compress.compress_model(params, vs)
+    # ln layers keep exactly 2 tensors; GEMM layers gained a mask.
+    assert len(out[0]["enc1"]["ln1"]) == 2
+    assert len(out[0]["enc1"]["wq"]) == 3
+
+
+def test_dense_spec_is_identity():
+    params = M.init_params("asr")
+    out = compress.compress_model(params, compress.intel_zoo()[0])
+    a = M.flatten_params(params[0])
+    b = M.flatten_params(out[0])
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("task", M.TASK_NAMES)
+def test_compression_preserves_interfaces(task):
+    """All zoo variants keep the same flat-param *shapes per path*."""
+    params = M.init_params(task)
+    shapes_by_path = {}
+    for vs in compress.intel_zoo():
+        out = compress.compress_model(params, vs)
+        shapes = tuple(
+            tuple(t.shape) for j in range(M.SUBGRAPHS)
+            for t in M.flatten_params(out[j])
+        )
+        prev = shapes_by_path.setdefault(vs.kernel_path, shapes)
+        assert prev == shapes

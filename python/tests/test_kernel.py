@@ -1,0 +1,109 @@
+"""L1 correctness: every Pallas kernel path vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (multiples of 8 so tiles divide evenly — the
+models only ever use such dims), sparsity levels, and block-size
+overrides. ``assert_allclose`` against :mod:`compile.kernels.ref` is the
+core correctness signal for the L1 layer.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels import sparse_matmul as sm
+
+DIMS = st.sampled_from([8, 16, 24, 32, 48, 64, 96, 128, 192, 256])
+SMALL_DIMS = st.sampled_from([8, 16, 32, 64])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=SMALL_DIMS, k=DIMS, n=DIMS, seed=SEEDS)
+def test_dense_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, n)
+    got = sm.matmul(x, w, b)
+    want = ref.matmul_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), RTOL, ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=SMALL_DIMS, k=DIMS, n=DIMS, seed=SEEDS,
+       sparsity=st.floats(min_value=0.0, max_value=1.0))
+def test_masked_matmul_matches_ref(m, k, n, seed, sparsity):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, n)
+    mask = jnp.asarray((rng.random((k, n)) >= sparsity).astype(np.float32))
+    got = sm.masked_matmul(x, w, mask, b)
+    want = ref.masked_matmul_ref(x, w, mask, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), RTOL, ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=SMALL_DIMS, k=DIMS, n=DIMS, seed=SEEDS,
+       sparsity=st.floats(min_value=0.0, max_value=0.95))
+def test_block_sparse_matmul_matches_ref(m, k, n, seed, sparsity):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, n)
+    keep = jnp.asarray((rng.random(k) >= sparsity).astype(np.float32))
+    got = sm.block_sparse_matmul(x, w, keep, b)
+    want = ref.block_sparse_matmul_ref(x, w, keep, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), RTOL, ATOL)
+
+
+def test_block_sparse_all_pruned_tile_is_skipped():
+    """A fully-pruned K-tile contributes exactly zero (the skip branch)."""
+    rng = np.random.default_rng(0)
+    x, w, b = _rand(rng, 8, 256), _rand(rng, 256, 32), _rand(rng, 32)
+    keep = np.ones(256, np.float32)
+    keep[:128] = 0.0  # first whole 128-tile dead
+    got = sm.block_sparse_matmul(x, w, jnp.asarray(keep), b, bk=128)
+    want = ref.block_sparse_matmul_ref(x, w, jnp.asarray(keep), b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), RTOL, ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=SMALL_DIMS, k=DIMS, n=DIMS, seed=SEEDS)
+def test_quant_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, n)
+    wq, scale = ref.fake_quant_weights_ref(w)
+    got = sm.quant_matmul(x, wq, scale, b)
+    want = ref.quant_matmul_ref(x, wq, scale, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), RTOL, ATOL)
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(8, 32, 32), (16, 64, 16), (8, 128, 64)])
+def test_block_shape_overrides_are_equivalent(bm, bk, bn):
+    """Tiling is a schedule, not semantics: any divisor tiling agrees."""
+    rng = np.random.default_rng(3)
+    x, w, b = _rand(rng, 16, 128), _rand(rng, 128, 64), _rand(rng, 64)
+    base = np.asarray(sm.matmul(x, w, b))
+    tiled = np.asarray(sm.matmul(x, w, b, bm=bm, bk=bk, bn=bn))
+    np.testing.assert_allclose(tiled, base, RTOL, ATOL)
+
+
+def test_quant_error_bounded():
+    """INT8 fake-quant error stays within the per-channel step bound."""
+    rng = np.random.default_rng(11)
+    w = _rand(rng, 64, 32)
+    wq, scale = ref.fake_quant_weights_ref(w)
+    err = np.abs(np.asarray(wq, np.float32) * np.asarray(scale)[None, :]
+                 - np.asarray(w))
+    assert (err <= 0.5 * np.asarray(scale)[None, :] + 1e-7).all()
+
+
+def test_block_helper_divides():
+    for dim in (8, 24, 128, 192, 256, 1000, 13):
+        b = sm._block(dim)
+        assert dim % b == 0 and 1 <= b <= max(dim, 1)

@@ -1,0 +1,82 @@
+//! End-to-end serving bench (paper Figs. 10/11): wall-clock cost of the
+//! full plan→preload→serve cycle per policy on the desktop profile,
+//! plus the real-PJRT serving loop (every query executes a real chain).
+//!
+//! Run: `cargo bench --bench end_to_end`
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use sparseloom::baselines::Policy;
+use sparseloom::benchkit::Bench;
+use sparseloom::coordinator::{Coordinator, ServeOpts};
+use sparseloom::experiments::Ctx;
+use sparseloom::profiler::ProfilerConfig;
+use sparseloom::runtime::Runtime;
+use sparseloom::soc::Platform;
+use sparseloom::workload::{slo_grid, Slo, TaskRanges};
+
+fn main() -> anyhow::Result<()> {
+    let Ok(ctx) = Ctx::load("artifacts", false) else {
+        eprintln!("no artifacts/ — run `make artifacts` first");
+        return Ok(());
+    };
+    let platform = Platform::desktop();
+    let lm = ctx.lm(platform.clone());
+    let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
+    let coord = Coordinator::new(&ctx.zoo, &lm, &profiles);
+
+    let mut grids: BTreeMap<String, Vec<Slo>> = BTreeMap::new();
+    let mut universe = Vec::new();
+    for (name, tz) in &ctx.zoo.tasks {
+        let g = slo_grid(&TaskRanges::measure(tz, &lm));
+        universe.extend(g.iter().copied());
+        grids.insert(name.clone(), g);
+    }
+    let slos: BTreeMap<String, Slo> =
+        grids.iter().map(|(n, g)| (n.clone(), g[12])).collect();
+    let arrival: Vec<String> = profiles.keys().cloned().collect();
+
+    println!("\n== plan + serve cycle per policy (desktop, 4×100 queries, sim timing) ==\n");
+    Bench::header();
+    let mut b = Bench::quick();
+    for policy in Policy::all() {
+        let opts = ServeOpts { policy, ..Default::default() };
+        b.case(&format!("cycle {}", policy.name()), || {
+            let r = coord.serve(&slos, &universe, &arrival, &opts).unwrap();
+            r.total_queries
+        });
+    }
+
+    // Real PJRT serving: run the selected stitched chain for every query.
+    println!("\n== real-PJRT serving loop (SparseLoom selection, 4 tasks × 50 queries) ==\n");
+    let rt = Runtime::new()?;
+    let opts = ServeOpts::default();
+    let prepared = coord.prepare(&slos, &universe, &opts)?;
+    // Warm executables + weights.
+    let mut inputs = BTreeMap::new();
+    for (name, sel) in &prepared.selections {
+        if let Some(sel) = sel {
+            let tz = ctx.zoo.task(name)?;
+            let comp = profiles[name].space.composition(sel.stitched_index);
+            let input: Vec<f32> =
+                (0..tz.input_dim).map(|i| (i as f32 * 0.37).cos()).collect();
+            let _ = rt.run_chain(&ctx.zoo, name, &comp.0, 1, &input)?;
+            inputs.insert(name.clone(), (comp, input));
+        }
+    }
+    let t0 = Instant::now();
+    let mut served = 0usize;
+    for _ in 0..50 {
+        for (name, (comp, input)) in &inputs {
+            let _ = rt.run_chain(&ctx.zoo, name, &comp.0, 1, input)?;
+            served += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {served} real queries in {dt:.3} s → {:.0} q/s on host PJRT-CPU",
+        served as f64 / dt
+    );
+    Ok(())
+}

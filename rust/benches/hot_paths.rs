@@ -1,0 +1,118 @@
+//! Hot-path micro-benchmarks (feeds EXPERIMENTS.md §Perf):
+//! the operations on the coordinator's request path and the planning
+//! path, measured with the in-repo `benchkit` harness.
+//!
+//! Run: `cargo bench --bench hot_paths`
+
+use std::collections::BTreeMap;
+
+use sparseloom::benchkit::{black_box, Bench};
+use sparseloom::coordinator::{Coordinator, ServeOpts};
+use sparseloom::experiments::Ctx;
+use sparseloom::gbdt::{Gbdt, GbdtParams};
+use sparseloom::optimizer::{feasible_set, optimize};
+use sparseloom::preloader::Hotness;
+use sparseloom::profiler::{features, ProfilerConfig};
+use sparseloom::soc::Platform;
+use sparseloom::stitching::StitchSpace;
+use sparseloom::util::Rng;
+use sparseloom::workload::{placement_orders, slo_grid, Slo, TaskRanges};
+
+fn main() -> anyhow::Result<()> {
+    let Ok(ctx) = Ctx::load("artifacts", false) else {
+        eprintln!("no artifacts/ — run `make artifacts` first");
+        return Ok(());
+    };
+    let platform = Platform::desktop();
+    let lm = ctx.lm(platform.clone());
+    let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
+    let orders = placement_orders(&platform, ctx.zoo.subgraphs);
+    let task = ctx.zoo.task_names()[0].to_string();
+    let p = &profiles[&task];
+    let tz = ctx.zoo.task(&task)?;
+
+    let mut grids: BTreeMap<String, Vec<Slo>> = BTreeMap::new();
+    let mut universe = Vec::new();
+    for (name, tzz) in &ctx.zoo.tasks {
+        let g = slo_grid(&TaskRanges::measure(tzz, &lm));
+        universe.extend(g.iter().copied());
+        grids.insert(name.clone(), g);
+    }
+    let slos: BTreeMap<String, Slo> =
+        grids.iter().map(|(n, g)| (n.clone(), g[12])).collect();
+
+    println!("\n== hot paths (desktop profile, {} zoo) ==\n", ctx.zoo.zoo_name);
+    Bench::header();
+    let mut b = Bench::new();
+
+    // --- planning-path primitives -----------------------------------
+    let space = StitchSpace::for_task(tz);
+    b.case("stitch: index→composition→index (V^S)", || {
+        let mut acc = 0usize;
+        for k in 0..space.len() {
+            acc += space.index(&space.composition(k));
+        }
+        acc
+    });
+
+    b.case("eq5: latency_est over all V^S × 1 order", || {
+        let mut acc = 0.0;
+        for k in 0..p.space.len() {
+            if let Some(l) = p.latency_est(&p.space.composition(k), &orders[0]) {
+                acc += l;
+            }
+        }
+        acc
+    });
+
+    b.case("alg1: feasible_set (Θ) one task", || {
+        feasible_set(p, &slos[&task], &orders).len()
+    });
+
+    b.case("alg1: optimize() 4 tasks × 6 orders", || {
+        optimize(&profiles, &slos, &orders).mean_latency_ms
+    });
+
+    b.case("alg2: hotness over |Ψ|=100", || {
+        Hotness::compute(p, &universe, &orders).scores.len()
+    });
+
+    // --- estimator ----------------------------------------------------
+    let train: Vec<Vec<f64>> = (0..200)
+        .map(|k| features(&space.composition(k * 5 % space.len()), tz))
+        .collect();
+    let ys: Vec<f64> = (0..200).map(|i| (i as f64 * 0.618).fract()).collect();
+    let model = Gbdt::fit(&train, &ys, &GbdtParams::default());
+    let x = features(&space.composition(123), tz);
+    b.case("gbdt: fit 200×d default params", || {
+        Gbdt::fit(&train, &ys, &GbdtParams::default()).n_trees()
+    });
+    b.case("gbdt: predict one variant", || model.predict(black_box(&x)));
+
+    // --- serving path ---------------------------------------------------
+    let coord = Coordinator::new(&ctx.zoo, &lm, &profiles);
+    let opts = ServeOpts::default();
+    b.case("coordinator: prepare (plan+preload)", || {
+        coord.prepare(&slos, &universe, &opts).unwrap().order.len()
+    });
+    let prepared = coord.prepare(&slos, &universe, &opts)?;
+    let arrival: Vec<String> = profiles.keys().cloned().collect();
+    b.case("coordinator: serve 4×100 queries (sim)", || {
+        coord
+            .serve_prepared(prepared.clone(), &slos, &arrival, &opts)
+            .unwrap()
+            .total_queries
+    });
+
+    // --- rng / substrate sanity ----------------------------------------
+    let mut rng = Rng::new(1);
+    b.case("rng: 1k xoshiro256++ draws", || {
+        let mut s = 0u64;
+        for _ in 0..1000 {
+            s ^= rng.next_u64();
+        }
+        s
+    });
+
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Placement-order bench (paper Table 2 / Fig. 13): times the *real*
+//! PJRT stitched-chain execution for the paper's six variant mixes, and
+//! reports the platform-model latencies per placement order.
+//!
+//! Run: `cargo bench --bench placement_orders`
+
+use sparseloom::benchkit::Bench;
+use sparseloom::experiments::Ctx;
+use sparseloom::profiler::profile_task_exhaustive;
+use sparseloom::runtime::Runtime;
+use sparseloom::soc::{order_label, Platform};
+use sparseloom::stitching::Composition;
+use sparseloom::workload::placement_orders;
+
+fn main() -> anyhow::Result<()> {
+    let Ok(ctx) = Ctx::load("artifacts", false) else {
+        eprintln!("no artifacts/ — run `make artifacts` first");
+        return Ok(());
+    };
+    let task = "imgcls";
+    let tz = ctx.zoo.task(task)?;
+    let vi = |name: &str| tz.variant_by_name(name).unwrap().0;
+    let (d, q, pu, ps) = (vi("dense"), vi("int8"), vi("unstr80"), vi("struct50"));
+    let mixes: Vec<(&str, Composition)> = vec![
+        ("P-Q-P", Composition(vec![pu, q, ps])),
+        ("P-P-Q", Composition(vec![pu, ps, q])),
+        ("D-D-P", Composition(vec![d, d, pu])),
+        ("D-P-Q", Composition(vec![d, pu, q])),
+        ("Q-P-D", Composition(vec![q, ps, d])),
+        ("P-D-Q", Composition(vec![ps, d, q])),
+    ];
+
+    // Real PJRT end-to-end chains (host CPU; order-independent).
+    println!("\n== real PJRT stitched-chain execution ({task}, batch 1) ==\n");
+    Bench::header();
+    let rt = Runtime::new()?;
+    let input: Vec<f32> = (0..tz.input_dim).map(|i| (i as f32 * 0.21).sin()).collect();
+    let mut b = Bench::quick();
+    for (name, comp) in &mixes {
+        // warm caches
+        let _ = rt.run_chain(&ctx.zoo, task, &comp.0, 1, &input)?;
+        b.case(&format!("chain {name}"), || {
+            rt.run_chain(&ctx.zoo, task, &comp.0, 1, &input).unwrap().0[0]
+        });
+    }
+
+    // Platform-model projection across all six desktop orders (Table 2).
+    println!("\n== platform-model latency (ms) per order (Table 2) ==\n");
+    let platform = Platform::desktop();
+    let lm = ctx.lm(platform.clone());
+    let oracle = ctx.zoo.load_oracle(task)?;
+    let p = profile_task_exhaustive(tz, &lm, &oracle);
+    let orders = placement_orders(&platform, ctx.zoo.subgraphs);
+    print!("{:<8}", "order");
+    for (name, _) in &mixes {
+        print!("{name:>8}");
+    }
+    println!();
+    for order in &orders {
+        print!("{:<8}", order_label(order));
+        for (_, comp) in &mixes {
+            match p.latency_true(comp, order) {
+                Some(l) => print!("{l:>8.3}"),
+                None => print!("{:>8}", "n/s"),
+            }
+        }
+        println!();
+    }
+    Ok(())
+}

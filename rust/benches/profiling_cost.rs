@@ -1,0 +1,66 @@
+//! Profiling-cost bench (paper Table 1 / Figs. 8 & 12): wall-clock time
+//! of estimator-based profiling vs the cost of exhaustive measurement,
+//! with real per-run costs measured through PJRT.
+//!
+//! Run: `cargo bench --bench profiling_cost`
+
+use std::time::Instant;
+
+use sparseloom::benchkit::Bench;
+use sparseloom::experiments::Ctx;
+use sparseloom::profiler::cost::{CostParams, RunCosts};
+use sparseloom::profiler::{profile_task, ProfilerConfig};
+use sparseloom::runtime::Runtime;
+use sparseloom::soc::Platform;
+
+fn main() -> anyhow::Result<()> {
+    let Ok(ctx) = Ctx::load("artifacts", false) else {
+        eprintln!("no artifacts/ — run `make artifacts` first");
+        return Ok(());
+    };
+    let platform = Platform::desktop();
+    let lm = ctx.lm(platform.clone());
+    let task = ctx.zoo.task_names()[0].to_string();
+    let tz = ctx.zoo.task(&task)?;
+    let oracle = ctx.zoo.load_oracle(&task)?;
+
+    println!("\n== estimator-based profiling (one task, V^S = {}) ==\n", oracle.len());
+    Bench::header();
+    let mut b = Bench::quick();
+    for train in [40usize, 80, 160, 250] {
+        let cfg = ProfilerConfig { train_samples: train, ..Default::default() };
+        b.case(&format!("profile_task train={train}"), || {
+            profile_task(tz, &lm, &oracle, &cfg, false).acc_pred.len()
+        });
+    }
+
+    // Real per-run costs → projected exhaustive vs SparseLoom minutes.
+    println!("\n== measured per-run costs → Fig. 12 projection ==\n");
+    let rt = Runtime::new()?;
+    let comp = vec![0usize; ctx.zoo.subgraphs];
+    let t0 = Instant::now();
+    let _ = rt.measure_accuracy(&ctx.zoo, &task, &comp)?;
+    let acc_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let lat_ms = {
+        let t0 = Instant::now();
+        let _ = rt.measure_subgraph_ms(&ctx.zoo, &task, 0, tz.variants[0].spec.kernel_path, 10)?;
+        t0.elapsed().as_secs_f64() * 1e3
+    };
+    println!("accuracy run {acc_ms:.1} ms | latency run {lat_ms:.2} ms (host PJRT)");
+    let rc = RunCosts { accuracy_run_ms: acc_ms, latency_run_ms: lat_ms };
+    for v in [4usize, 10] {
+        let c = CostParams {
+            tasks: ctx.zoo.tasks.len(),
+            variants: v,
+            subgraphs: ctx.zoo.subgraphs,
+            processors: platform.n_processors(),
+        };
+        println!(
+            "V={v}: exhaustive {:>8.1} min | SparseLoom {:>6.2} min | reduction {:>5.1} %",
+            c.exhaustive_minutes(&rc),
+            c.sparseloom_minutes(&rc),
+            100.0 * (1.0 - c.sparseloom_minutes(&rc) / c.exhaustive_minutes(&rc)),
+        );
+    }
+    Ok(())
+}

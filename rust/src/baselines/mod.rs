@@ -1,0 +1,413 @@
+//! The six baseline policy classes of §5.1 plus SparseLoom itself.
+//!
+//! Two axes (paper "Baseline design"):
+//!
+//! * **Variant selection** — SV-AO (single accuracy-optimal variant),
+//!   SV-LO (single latency-optimal variant), AV (adaptive pure-variant
+//!   selection per SLO). SparseLoom adds the stitched space.
+//! * **Partitioning** — P (subgraphs pipelined across processors, fixed
+//!   N-G-C-style order as in Band/Hetero²Pipe) vs NP (whole variant on a
+//!   single processor).
+//!
+//! Every policy reduces to "given profiles + SLOs, produce a `Plan`",
+//! which the coordinator then executes identically — so the comparison
+//! isolates exactly the paper's two axes plus stitching.
+
+use std::collections::BTreeMap;
+
+use crate::optimizer::{optimize, optimize_pure_only, Plan, Selection};
+use crate::profiler::TaskProfile;
+use crate::soc::{Platform, Processor};
+use crate::workload::{placement_orders, Slo};
+
+/// Which multi-DNN policy plans the serving run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Policy {
+    /// Single variant, accuracy-optimal, partitioned (Pipe-it/RT-mDL class).
+    SvAoP,
+    /// Single variant, accuracy-optimal, non-partitioned.
+    SvAoNp,
+    /// Single variant, latency-optimal, partitioned (Band/Hetero²Pipe class).
+    SvLoP,
+    /// Single variant, latency-optimal, non-partitioned.
+    SvLoNp,
+    /// Adaptive pure-variant selection, partitioned (Tango/NestDNN class).
+    AvP,
+    /// Adaptive pure-variant selection, non-partitioned.
+    AvNp,
+    /// This paper: stitched variants + joint placement optimization.
+    SparseLoom,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::SvAoP => "SV-AO-P",
+            Self::SvAoNp => "SV-AO-NP",
+            Self::SvLoP => "SV-LO-P",
+            Self::SvLoNp => "SV-LO-NP",
+            Self::AvP => "AV-P",
+            Self::AvNp => "AV-NP",
+            Self::SparseLoom => "SparseLoom",
+        }
+    }
+
+    pub fn all() -> [Policy; 7] {
+        [
+            Self::SvAoP,
+            Self::SvAoNp,
+            Self::SvLoP,
+            Self::SvLoNp,
+            Self::AvP,
+            Self::AvNp,
+            Self::SparseLoom,
+        ]
+    }
+
+    pub fn baselines() -> [Policy; 6] {
+        [Self::SvAoP, Self::SvAoNp, Self::SvLoP, Self::SvLoNp, Self::AvP, Self::AvNp]
+    }
+
+    pub fn is_partitioned(&self) -> bool {
+        matches!(self, Self::SvAoP | Self::SvLoP | Self::AvP | Self::SparseLoom)
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        Policy::all().into_iter().find(|p| p.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// The fixed placement order existing partitioned systems adopt
+/// (paper §2.2: "the widely adopted NPU-GPU-CPU (N-G-C) placement
+/// order"), cyclically extended when P < S (Orin).
+pub fn fixed_ngc_order(platform: &Platform, s: usize) -> Vec<Processor> {
+    let has = |p| platform.processor_list().contains(&p);
+    let mut pref = Vec::new();
+    for p in [Processor::Npu, Processor::Gpu, Processor::Cpu] {
+        if has(p) {
+            pref.push(p);
+        }
+    }
+    let mut order = Vec::with_capacity(s);
+    for j in 0..s {
+        order.push(pref[j % pref.len()]);
+    }
+    order
+}
+
+/// "Non-partitioned" pseudo-orders: the whole variant runs on ONE
+/// processor, so the order is that processor repeated at every position.
+pub fn np_order(proc: Processor, s: usize) -> Vec<Processor> {
+    vec![proc; s]
+}
+
+/// The single processor NP systems schedule on. The paper's Class-1
+/// systems (Pipe-it, Pantheon, REEF) are task-level schedulers on ONE
+/// processor — conventionally the GPU.
+pub fn np_processor(platform: &Platform) -> Processor {
+    if platform.processor_list().contains(&Processor::Gpu) {
+        Processor::Gpu
+    } else {
+        platform.processor_list()[0]
+    }
+}
+
+/// Plan for a policy. `task_proc` assigns each task a processor for NP
+/// policies (round-robin by task index, the common multi-DNN practice).
+pub fn plan(
+    policy: Policy,
+    profiles: &BTreeMap<String, TaskProfile>,
+    slos: &BTreeMap<String, Slo>,
+    platform: &Platform,
+) -> Plan {
+    let s = profiles
+        .values()
+        .next()
+        .map(|p| p.space.n_subgraphs)
+        .unwrap_or(3);
+    match policy {
+        Policy::SparseLoom => {
+            let orders = placement_orders(platform, s);
+            optimize(profiles, slos, &orders)
+        }
+        Policy::AvP => {
+            // Adaptive pure variants, but the *fixed* N-G-C order —
+            // these systems don't co-optimize placement.
+            let orders = vec![fixed_ngc_order(platform, s)];
+            optimize_pure_only(profiles, slos, &orders)
+        }
+        Policy::AvNp => {
+            let plans = np_plans(profiles, slos, platform, s, true);
+            plans
+        }
+        Policy::SvAoP | Policy::SvLoP => {
+            let order = fixed_ngc_order(platform, s);
+            let mut selections = BTreeMap::new();
+            let mut lat_sum = 0.0;
+            let mut n = 0usize;
+            for (name, p) in profiles {
+                let sel = single_variant(p, &order, policy == Policy::SvAoP);
+                if let Some(sel) = sel {
+                    lat_sum += sel.latency_ms;
+                    n += 1;
+                }
+                selections.insert(name.clone(), sel);
+            }
+            Plan {
+                order,
+                selections,
+                mean_latency_ms: if n > 0 { lat_sum / n as f64 } else { f64::INFINITY },
+            }
+        }
+        Policy::SvAoNp | Policy::SvLoNp => {
+            np_single_plans(profiles, platform, s, policy == Policy::SvAoNp)
+        }
+    }
+}
+
+/// SV selection: accuracy-optimal (dense-est) or latency-optimal pure
+/// variant — the variant is fixed per task, SLO-independent.
+fn single_variant(p: &TaskProfile, order: &[Processor], accuracy_opt: bool) -> Option<Selection> {
+    let mut best: Option<Selection> = None;
+    for i in 0..p.space.n_variants {
+        let k = p.space.pure_index(i);
+        let comp = p.space.composition(k);
+        let Some(lat) = p.latency_est(&comp, order) else { continue };
+        let acc = p.accuracy(k);
+        let better = match (&best, accuracy_opt) {
+            (None, _) => true,
+            (Some(b), true) => acc > b.accuracy + 1e-12
+                || (acc >= b.accuracy - 1e-12 && lat < b.latency_ms),
+            (Some(b), false) => lat < b.latency_ms,
+        };
+        if better {
+            best = Some(Selection { stitched_index: k, latency_ms: lat, accuracy: acc });
+        }
+    }
+    best
+}
+
+/// NP plans with adaptive selection: per task, pick the processor
+/// (round-robin) and the pure variant meeting the SLO with min latency.
+fn np_plans(
+    profiles: &BTreeMap<String, TaskProfile>,
+    slos: &BTreeMap<String, Slo>,
+    platform: &Platform,
+    s: usize,
+    adaptive: bool,
+) -> Plan {
+    let proc = np_processor(platform);
+    // NP systems profile under co-execution (all T tasks concurrent on
+    // the one processor) — their feasibility checks see the slowdown.
+    let coexec = 1.0 + platform.coexec_slowdown * (profiles.len().saturating_sub(1)) as f64;
+    let mut selections = BTreeMap::new();
+    let mut lat_sum = 0.0;
+    let mut n = 0usize;
+    for (name, p) in profiles.iter() {
+        let order = np_order(proc, s);
+        let slo = &slos[name];
+        let mut best: Option<Selection> = None;
+        for i in 0..p.space.n_variants {
+            let k = p.space.pure_index(i);
+            let comp = p.space.composition(k);
+            let Some(lat) = p.latency_est(&comp, &order).map(|l| l * coexec) else { continue };
+            let acc = p.accuracy(k);
+            if adaptive && (acc < slo.min_accuracy || lat > slo.max_latency_ms) {
+                continue;
+            }
+            if best.map(|b| lat < b.latency_ms).unwrap_or(true) {
+                best = Some(Selection { stitched_index: k, latency_ms: lat, accuracy: acc });
+            }
+        }
+        if let Some(b) = best {
+            lat_sum += b.latency_ms;
+            n += 1;
+        }
+        selections.insert(name.clone(), best);
+    }
+    Plan {
+        order: np_order(proc, s),
+        selections,
+        mean_latency_ms: if n > 0 { lat_sum / n as f64 } else { f64::INFINITY },
+    }
+}
+
+/// NP plans with a fixed single variant (SV-AO-NP / SV-LO-NP).
+fn np_single_plans(
+    profiles: &BTreeMap<String, TaskProfile>,
+    platform: &Platform,
+    s: usize,
+    accuracy_opt: bool,
+) -> Plan {
+    let proc = np_processor(platform);
+    let coexec = 1.0 + platform.coexec_slowdown * (profiles.len().saturating_sub(1)) as f64;
+    let mut selections = BTreeMap::new();
+    let mut lat_sum = 0.0;
+    let mut n = 0usize;
+    for (name, p) in profiles.iter() {
+        let order = np_order(proc, s);
+        let sel = single_variant(p, &order, accuracy_opt)
+            .map(|sel| Selection { latency_ms: sel.latency_ms * coexec, ..sel });
+        if let Some(sel) = sel {
+            lat_sum += sel.latency_ms;
+            n += 1;
+        }
+        selections.insert(name.clone(), sel);
+    }
+    Plan {
+        order: np_order(proc, s),
+        selections,
+        mean_latency_ms: if n > 0 { lat_sum / n as f64 } else { f64::INFINITY },
+    }
+}
+
+/// The per-task processor assignment used by NP policies (all tasks on
+/// the single NP processor) — the coordinator needs it to place
+/// whole-variant executions.
+pub fn np_task_processor(
+    profiles: &BTreeMap<String, TaskProfile>,
+    platform: &Platform,
+) -> BTreeMap<String, Processor> {
+    let proc = np_processor(platform);
+    profiles.keys().map(|name| (name.clone(), proc)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::{profile_task, ProfilerConfig};
+    use crate::soc::latency::tests::tiny_taskzoo;
+    use crate::soc::{BaseLatencies, LatencyModel, Platform};
+    use crate::stitching::StitchSpace;
+    use crate::zoo::KernelPath;
+
+    fn setup() -> (BTreeMap<String, TaskProfile>, Platform) {
+        let tz = tiny_taskzoo();
+        let mut b = BaseLatencies::new();
+        for sg in 0..2 {
+            b.set("tiny", sg, KernelPath::Dense, 10.0);
+            b.set("tiny", sg, KernelPath::BlockSparse, 8.0);
+        }
+        let plat = Platform::desktop();
+        let lm = LatencyModel::new(plat.clone(), b);
+        let space = StitchSpace::for_task(&tz);
+        let oracle: Vec<f64> = space
+            .iter()
+            .map(|c| c.0.iter().map(|&i| tz.variants[i].accuracy).sum::<f64>() / 2.0)
+            .collect();
+        let cfg = ProfilerConfig {
+            train_samples: 4,
+            gbdt: crate::gbdt::GbdtParams {
+                n_trees: 200,
+                max_depth: 3,
+                eta: 0.2,
+                min_leaf: 1,
+                subsample: 1.0,
+                seed: 1,
+            },
+            seed: 23,
+        };
+        let p = profile_task(&tz, &lm, &oracle, &cfg, true);
+        (BTreeMap::from([("tiny".to_string(), p)]), plat)
+    }
+
+    fn slos() -> BTreeMap<String, Slo> {
+        BTreeMap::from([(
+            "tiny".to_string(),
+            Slo { min_accuracy: 0.6, max_latency_ms: 1e9 },
+        )])
+    }
+
+    #[test]
+    fn names_cover_paper_grid() {
+        let names: Vec<&str> = Policy::all().iter().map(|p| p.name()).collect();
+        for want in ["SV-AO-P", "SV-AO-NP", "SV-LO-P", "SV-LO-NP", "AV-P", "AV-NP", "SparseLoom"] {
+            assert!(names.contains(&want), "{want}");
+        }
+        assert_eq!(Policy::parse("av-np"), Some(Policy::AvNp));
+        assert_eq!(Policy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn fixed_order_is_ngc_on_intel_and_gc_on_orin() {
+        use Processor::*;
+        assert_eq!(fixed_ngc_order(&Platform::desktop(), 3), vec![Npu, Gpu, Cpu]);
+        assert_eq!(fixed_ngc_order(&Platform::orin(), 3), vec![Gpu, Cpu, Gpu]);
+    }
+
+    #[test]
+    fn sv_ao_picks_max_accuracy() {
+        let (profiles, plat) = setup();
+        let plan = plan(Policy::SvAoP, &profiles, &slos(), &plat);
+        let sel = plan.selections["tiny"].unwrap();
+        assert!((sel.accuracy - 0.9).abs() < 0.05, "dense is accuracy-optimal");
+    }
+
+    #[test]
+    fn sv_lo_picks_min_latency() {
+        let (profiles, plat) = setup();
+        let plan = plan(Policy::SvLoP, &profiles, &slos(), &plat);
+        let p = &profiles["tiny"];
+        let sel = plan.selections["tiny"].unwrap();
+        let order = fixed_ngc_order(&plat, 2);
+        for i in 0..p.space.n_variants {
+            let comp = p.space.composition(p.space.pure_index(i));
+            if let Some(l) = p.latency_est(&comp, &order) {
+                assert!(sel.latency_ms <= l + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sv_policies_ignore_slo() {
+        let (profiles, plat) = setup();
+        let strict = BTreeMap::from([(
+            "tiny".to_string(),
+            Slo { min_accuracy: 0.99, max_latency_ms: 0.001 },
+        )]);
+        let a = plan(Policy::SvAoP, &profiles, &slos(), &plat);
+        let b = plan(Policy::SvAoP, &profiles, &strict, &plat);
+        assert_eq!(
+            a.selections["tiny"].unwrap().stitched_index,
+            b.selections["tiny"].unwrap().stitched_index
+        );
+    }
+
+    #[test]
+    fn av_np_respects_slo() {
+        let (profiles, plat) = setup();
+        let strict = BTreeMap::from([(
+            "tiny".to_string(),
+            Slo { min_accuracy: 2.0, max_latency_ms: 1e9 },
+        )]);
+        let p = plan(Policy::AvNp, &profiles, &strict, &plat);
+        assert!(p.selections["tiny"].is_none(), "infeasible must be None");
+    }
+
+    #[test]
+    fn partitioned_policies_use_multiple_processors() {
+        let (profiles, plat) = setup();
+        let p = plan(Policy::SparseLoom, &profiles, &slos(), &plat);
+        let unique: std::collections::HashSet<_> = p.order.iter().collect();
+        assert!(unique.len() > 1, "pipelined across processors");
+        let np = plan(Policy::SvAoNp, &profiles, &slos(), &plat);
+        let unique_np: std::collections::HashSet<_> = np.order.iter().collect();
+        assert_eq!(unique_np.len(), 1, "NP runs on one processor");
+    }
+
+    #[test]
+    fn all_policies_select_only_pure_except_sparseloom() {
+        let (profiles, plat) = setup();
+        let p = &profiles["tiny"];
+        for policy in Policy::baselines() {
+            let pl = plan(policy, &profiles, &slos(), &plat);
+            if let Some(sel) = pl.selections["tiny"] {
+                assert!(
+                    p.space.composition(sel.stitched_index).is_pure(),
+                    "{} must not stitch",
+                    policy.name()
+                );
+            }
+        }
+    }
+}

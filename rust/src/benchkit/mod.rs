@@ -1,0 +1,146 @@
+//! Benchmark harness (offline substrate for `criterion`).
+//!
+//! `cargo bench` targets are plain `main` functions (harness = false);
+//! this module supplies warmup, adaptive iteration counts, and robust
+//! statistics (median / p95 / MAD) plus aligned report printing.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Measurement {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// A benchmark group with shared config.
+pub struct Bench {
+    /// Target wall time per case (controls iteration count).
+    pub target_ms: f64,
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            target_ms: 300.0,
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn quick() -> Self {
+        Self { target_ms: 80.0, warmup_iters: 1, min_iters: 5, ..Default::default() }
+    }
+
+    /// Time `f`, printing and recording the measurement. The closure's
+    /// return value is black-boxed to keep the optimizer honest.
+    pub fn case<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        // Pilot run to size the iteration count.
+        let t0 = Instant::now();
+        black_box(f());
+        let pilot_ns = t0.elapsed().as_nanos().max(1) as f64;
+        let iters = ((self.target_ms * 1e6 / pilot_ns) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            median_ns: stats::median(&samples),
+            mean_ns: stats::mean(&samples),
+            p95_ns: stats::percentile(&samples, 95.0),
+        };
+        println!("{}", m.line());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    pub fn header() {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}",
+            "benchmark", "median", "mean", "p95"
+        );
+        println!("{}", "-".repeat(86));
+    }
+}
+
+/// Optimizer barrier (stable-Rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench { target_ms: 5.0, warmup_iters: 1, min_iters: 5, max_iters: 50, results: vec![] };
+        let m = b.case("spin", || (0..1000).sum::<u64>());
+        assert!(m.median_ns > 0.0);
+        assert!(m.iters >= 5);
+    }
+
+    #[test]
+    fn formatting_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2_500.0), "2.500 µs");
+        assert_eq!(fmt_ns(3_000_000.0), "3.000 ms");
+        assert_eq!(fmt_ns(1.5e9), "1.500 s");
+    }
+}

@@ -1,0 +1,251 @@
+//! Tiny declarative CLI parser (offline substrate for `clap`).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! `--switch`, positional args, defaults, and auto-generated help.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// One option specification.
+#[derive(Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// A parsed invocation: values for options plus positional args.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name} expects a number, got {v:?}"))),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.get(name) == Some("true")
+    }
+}
+
+/// A subcommand with its options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str,
+               default: Option<&'static str>) -> Self {
+        self.opts.push(Opt { name, help, default, is_switch: false });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_switch: true });
+        self
+    }
+
+    /// Parse this command's arguments (everything after the subcommand).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for opt in &self.opts {
+            if let Some(d) = opt.default {
+                args.values.insert(opt.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError(format!(
+                        "unknown option --{name} for `{}`", self.name)))?;
+                let value = if opt.is_switch {
+                    inline.unwrap_or_else(|| "true".into())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    it.next()
+                        .cloned()
+                        .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                };
+                args.values.insert(name.to_string(), value);
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("  {:<12} {}\n", self.name, self.about);
+        for o in &self.opts {
+            let d = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("      --{:<18} {}{}\n", o.name, o.help, d));
+        }
+        s
+    }
+}
+
+/// The top-level application: a set of subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE: {} <command> [options]\n\nCOMMANDS:\n",
+                            self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&c.help());
+        }
+        s
+    }
+
+    /// Dispatch: returns (command name, parsed args) or help text error.
+    pub fn dispatch(&self, argv: &[String]) -> Result<(&Command, Args), CliError> {
+        let Some(cmd_name) = argv.first() else {
+            return Err(CliError(self.help()));
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(CliError(self.help()));
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| CliError(format!(
+                "unknown command {cmd_name:?}\n\n{}", self.help())))?;
+        let args = cmd.parse(&argv[1..])?;
+        Ok((cmd, args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("serve", "run the coordinator")
+            .opt("platform", "platform profile", Some("desktop"))
+            .opt("queries", "queries per task", Some("100"))
+            .switch("verbose", "chatty output")
+    }
+
+    fn s(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&[]).unwrap();
+        assert_eq!(a.get("platform"), Some("desktop"));
+        assert_eq!(a.get_usize("queries").unwrap(), Some(100));
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd().parse(&s(&["--platform", "laptop"])).unwrap();
+        assert_eq!(a.get("platform"), Some("laptop"));
+        let b = cmd().parse(&s(&["--platform=orin"])).unwrap();
+        assert_eq!(b.get("platform"), Some("orin"));
+    }
+
+    #[test]
+    fn switches_and_positionals() {
+        let a = cmd().parse(&s(&["--verbose", "extra1", "extra2"])).unwrap();
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&s(&["--nope", "x"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&s(&["--platform"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let a = cmd().parse(&s(&["--queries", "abc"])).unwrap();
+        assert!(a.get_usize("queries").is_err());
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App {
+            name: "sparseloom",
+            about: "test",
+            commands: vec![cmd()],
+        };
+        let (c, a) = app.dispatch(&s(&["serve", "--queries", "7"])).unwrap();
+        assert_eq!(c.name, "serve");
+        assert_eq!(a.get_usize("queries").unwrap(), Some(7));
+        assert!(app.dispatch(&s(&["bogus"])).is_err());
+        assert!(app.dispatch(&[]).is_err());
+    }
+}

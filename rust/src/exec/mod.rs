@@ -1,0 +1,211 @@
+//! Thread-pool executor (offline substrate for `tokio`).
+//!
+//! The coordinator's per-processor engines each own a worker thread fed
+//! by an mpsc channel; this module provides the shared pieces: a
+//! fixed-size `ThreadPool` with `scope`-less job submission and a
+//! `fan_out` helper used by the profiler to parallelize independent
+//! measurements. Everything is std-only.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed-size pool of worker threads.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                std::thread::Builder::new()
+                    .name(format!("sparseloom-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                job();
+                                pending.fetch_sub(1, Ordering::AcqRel);
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx, workers, pending }
+    }
+
+    /// Submit a job; returns immediately.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.pending.fetch_add(1, Ordering::AcqRel);
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::Acquire)
+    }
+
+    /// Busy-wait (with yields) until all submitted jobs completed.
+    pub fn wait_idle(&self) {
+        while self.pending() > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(i)` for `i in 0..n` on a temporary pool and collect results in
+/// index order. Results must be `Send`.
+pub fn fan_out<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(usize) -> T + Send + Sync + 'static,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let f = Arc::new(f);
+    let pool = ThreadPool::new(threads.min(n));
+    let (tx, rx): (Sender<(usize, T)>, Receiver<(usize, T)>) = channel();
+    for i in 0..n {
+        let f = Arc::clone(&f);
+        let tx = tx.clone();
+        pool.submit(move || {
+            let out = f(i);
+            let _ = tx.send((i, out));
+        });
+    }
+    drop(tx);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, v) in rx.iter() {
+        slots[i] = Some(v);
+    }
+    slots.into_iter().map(|s| s.unwrap()).collect()
+}
+
+/// A single-consumer work queue feeding one dedicated worker thread —
+/// the shape of a per-processor inference engine.
+pub struct Worker<T: Send + 'static> {
+    tx: Sender<Option<T>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> Worker<T> {
+    /// Spawn a worker running `handler` for every item until shutdown.
+    pub fn spawn<F>(name: &str, mut handler: F) -> Self
+    where
+        F: FnMut(T) + Send + 'static,
+    {
+        let (tx, rx) = channel::<Option<T>>();
+        let handle = std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || {
+                while let Ok(Some(item)) = rx.recv() {
+                    handler(item);
+                }
+            })
+            .expect("spawn worker");
+        Self { tx, handle: Some(handle) }
+    }
+
+    pub fn send(&self, item: T) {
+        self.tx.send(Some(item)).expect("worker alive");
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(None);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<T: Send + 'static> Drop for Worker<T> {
+    fn drop(&mut self) {
+        let _ = self.tx.send(None);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn fan_out_preserves_order() {
+        let out = fan_out(32, 4, |i| i * i);
+        assert_eq!(out, (0..32).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fan_out_empty() {
+        let out: Vec<usize> = fan_out(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn worker_processes_in_order() {
+        let (tx, rx) = channel();
+        let w = Worker::spawn("t", move |x: usize| {
+            tx.send(x).unwrap();
+        });
+        for i in 0..10 {
+            w.send(i);
+        }
+        w.shutdown();
+        let got: Vec<usize> = rx.iter().collect();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        drop(pool); // must not hang or panic
+    }
+}

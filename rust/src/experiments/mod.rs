@@ -1,0 +1,199 @@
+//! Experiment runners: one per table/figure of the paper's evaluation.
+//!
+//! Every runner prints the same rows/series the paper reports (shape
+//! reproduction — who wins, by roughly what factor, where crossovers
+//! fall; see DESIGN.md §5). Run via `sparseloom exp <id>` or
+//! `sparseloom exp all`; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod endtoend;
+pub mod estimators;
+pub mod modules;
+pub mod motivation;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json::{self, Json};
+use crate::profiler::{profile_zoo, ProfilerConfig, TaskProfile};
+use crate::runtime::Runtime;
+use crate::soc::{BaseLatencies, LatencyModel, Platform};
+use crate::zoo::{KernelPath, Zoo};
+
+/// Shared experiment context: per-platform artifact zoos + measured
+/// base latencies. Intel platforms (desktop/laptop) use the intel zoo in
+/// `<artifacts>/`; orin uses the jetson zoo in `<artifacts>/jetson/`
+/// when present (paper Table 5 ships different zoos per vendor).
+pub struct Ctx {
+    /// The intel/default zoo (also the one pinned desktop-only
+    /// experiments use directly).
+    pub zoo: Zoo,
+    pub base: BaseLatencies,
+    /// The jetson zoo for orin, when exported.
+    pub jetson: Option<(Zoo, BaseLatencies)>,
+    /// Whether `base` came from real PJRT measurements (vs HLO flops).
+    pub measured: bool,
+}
+
+impl Ctx {
+    /// Load artifacts and base latencies. Measurement policy:
+    /// 1. `<artifacts>/base_latencies.json` cache if present;
+    /// 2. else measure every (task, sg, path) through PJRT (median of
+    ///    `iters`) and write the cache;
+    /// 3. `synthetic=true` skips PJRT and derives latencies from HLO
+    ///    flops (useful for PJRT-free environments / quick benches).
+    pub fn load(artifacts: &str, synthetic: bool) -> Result<Ctx> {
+        let (zoo, base, measured) = load_one(Path::new(artifacts), synthetic)?;
+        let jetson_dir = Path::new(artifacts).join("jetson");
+        let jetson = if jetson_dir.join("manifest.json").exists() {
+            let (z, b, _) = load_one(&jetson_dir, synthetic)?;
+            Some((z, b))
+        } else {
+            None
+        };
+        Ok(Ctx { zoo, base, jetson, measured })
+    }
+
+    /// The zoo serving a platform (orin → jetson zoo when available).
+    pub fn zoo_for(&self, platform: &Platform) -> &Zoo {
+        if platform.name == "orin" {
+            if let Some((z, _)) = &self.jetson {
+                return z;
+            }
+        }
+        &self.zoo
+    }
+
+    pub fn lm(&self, platform: Platform) -> LatencyModel {
+        let base = if platform.name == "orin" {
+            self.jetson
+                .as_ref()
+                .map(|(_, b)| b.clone())
+                .unwrap_or_else(|| self.base.clone())
+        } else {
+            self.base.clone()
+        };
+        LatencyModel::new(platform, base)
+    }
+
+    pub fn profiles(
+        &self,
+        lm: &LatencyModel,
+        cfg: &ProfilerConfig,
+    ) -> Result<BTreeMap<String, TaskProfile>> {
+        profile_zoo(self.zoo_for(&lm.platform), lm, cfg, true)
+    }
+}
+
+fn load_one(dir: &Path, synthetic: bool) -> Result<(Zoo, BaseLatencies, bool)> {
+    let zoo = Zoo::load(dir)?;
+    if synthetic {
+        let base = BaseLatencies::from_flops(&zoo, 5.0);
+        return Ok((zoo, base, false));
+    }
+    let cache = dir.join("base_latencies.json");
+    if cache.exists() {
+        let base = read_base_cache(&cache)?;
+        return Ok((zoo, base, true));
+    }
+    eprintln!("[ctx] measuring base latencies through PJRT ({})…", dir.display());
+    let rt = Runtime::new()?;
+    let base = measure_base_latencies(&zoo, &rt, 30)?;
+    write_base_cache(&cache, &base, &zoo)?;
+    Ok((zoo, base, true))
+}
+
+/// Measure all (task, sg, kernel-path) batch-1 latencies through PJRT.
+pub fn measure_base_latencies(zoo: &Zoo, rt: &Runtime, iters: usize) -> Result<BaseLatencies> {
+    let mut base = BaseLatencies::new();
+    for (tname, tz) in &zoo.tasks {
+        let paths: Vec<KernelPath> = {
+            let mut v: Vec<KernelPath> =
+                tz.variants.iter().map(|x| x.spec.kernel_path).collect();
+            v.sort();
+            v.dedup();
+            v
+        };
+        for sg in 0..zoo.subgraphs {
+            for &path in &paths {
+                let ms = rt.measure_subgraph_ms(zoo, tname, sg, path, iters)?;
+                base.set(tname, sg, path, ms);
+            }
+        }
+    }
+    Ok(base)
+}
+
+fn write_base_cache(path: &Path, base: &BaseLatencies, zoo: &Zoo) -> Result<()> {
+    let mut entries = Vec::new();
+    for (tname, tz) in &zoo.tasks {
+        let mut paths: Vec<KernelPath> =
+            tz.variants.iter().map(|x| x.spec.kernel_path).collect();
+        paths.sort();
+        paths.dedup();
+        for sg in 0..zoo.subgraphs {
+            for &p in &paths {
+                if let Ok(ms) = base.get(tname, sg, p) {
+                    entries.push(Json::obj(vec![
+                        ("task", Json::Str(tname.clone())),
+                        ("sg", Json::Num(sg as f64)),
+                        ("path", Json::Str(p.name().to_string())),
+                        ("ms", Json::Num(ms)),
+                    ]));
+                }
+            }
+        }
+    }
+    std::fs::write(path, Json::arr(entries).to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+fn read_base_cache(path: &Path) -> Result<BaseLatencies> {
+    let text = std::fs::read_to_string(path)?;
+    let v = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut base = BaseLatencies::new();
+    for e in v.as_arr().context("cache array")? {
+        base.set(
+            e.req("task")?.as_str().context("task")?,
+            e.req("sg")?.as_usize().context("sg")?,
+            KernelPath::parse(e.req("path")?.as_str().context("path")?)?,
+            e.req("ms")?.as_f64().context("ms")?,
+        );
+    }
+    Ok(base)
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig3", "fig4", "table1", "table2", "fig5", "fig7", "fig8", "fig9",
+    "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16",
+    "table5", "overhead", "ablate",
+];
+
+/// Dispatch one experiment by id; returns the printed report.
+pub fn run(ctx: &Ctx, id: &str) -> Result<String> {
+    let out = match id {
+        "fig3" => motivation::fig3(ctx)?,
+        "fig4" => motivation::fig4(ctx)?,
+        "table2" => motivation::table2(ctx)?,
+        "fig5" => motivation::fig5(ctx)?,
+        "table1" => estimators::table1()?,
+        "fig7" => estimators::fig7(ctx)?,
+        "fig8" => estimators::fig8()?,
+        "fig12" => estimators::fig12(ctx)?,
+        "fig9" => modules::fig9(ctx)?,
+        "fig13" => modules::fig13(ctx)?,
+        "fig14" => modules::fig14(ctx)?,
+        "table5" => modules::table5(ctx)?,
+        "overhead" => modules::overhead(ctx)?,
+        "ablate" => modules::ablate(ctx)?,
+        "fig10" => endtoend::fig10(ctx)?,
+        "fig11" => endtoend::fig11(ctx)?,
+        "fig15" => endtoend::fig15(ctx)?,
+        "fig16" => endtoend::fig16(ctx)?,
+        other => anyhow::bail!("unknown experiment {other:?}; ids: {ALL:?}"),
+    };
+    Ok(out)
+}

@@ -1,0 +1,40 @@
+//! # SparseLoom
+//!
+//! Reproduction of *"Multi-DNN Inference of Sparse Models on Edge SoCs"*
+//! (CS.DC 2026) as a three-layer Rust + JAX + Pallas system.
+//!
+//! - **L1 (build time)** — Pallas sparse-matmul kernels
+//!   (`python/compile/kernels/`), validated against a pure-jnp oracle.
+//! - **L2 (build time)** — four task models partitioned into S=3
+//!   layer-aligned subgraphs, AOT-lowered to HLO text per
+//!   (subgraph, kernel-path, batch); weights serialized per variant.
+//! - **L3 (this crate)** — the serving system: model stitching over the
+//!   sparse zoo, estimator-based profiling, sparsity-aware placement,
+//!   hot-subgraph preloading, and a multi-task coordinator executing
+//!   stitched variants through PJRT.
+//!
+//! See `DESIGN.md` for the architecture and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baselines;
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod exec;
+pub mod experiments;
+pub mod gbdt;
+pub mod json;
+pub mod metrics;
+pub mod optimizer;
+pub mod preloader;
+pub mod profiler;
+pub mod propcheck;
+pub mod runtime;
+pub mod soc;
+pub mod stitching;
+pub mod util;
+pub mod workload;
+pub mod zoo;
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";

@@ -1,0 +1,307 @@
+//! SparseLoom CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   serve       run the multi-task coordinator on one SLO configuration
+//!   exp         regenerate a paper table/figure (or `all`)
+//!   profile     build + report the performance profile (estimators)
+//!   calibrate   measure PJRT base latencies and write the cache
+//!   probe       verify rust-side numerics against python expectations
+//!   zoo         print the loaded sparse model zoo
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use sparseloom::baselines::Policy;
+use sparseloom::cli::{App, Command};
+use sparseloom::coordinator::{Coordinator, ServeOpts};
+use sparseloom::experiments::{self, Ctx};
+use sparseloom::profiler::ProfilerConfig;
+use sparseloom::runtime::Runtime;
+use sparseloom::soc::Platform;
+use sparseloom::workload::{arrival_combinations, slo_grid, TaskRanges};
+use sparseloom::zoo::Zoo;
+
+fn app() -> App {
+    App {
+        name: "sparseloom",
+        about: "multi-DNN inference of sparse models on (simulated) edge SoCs",
+        commands: vec![
+            Command::new("serve", "run the coordinator on one SLO config")
+                .opt("artifacts", "artifact directory", Some("artifacts"))
+                .opt("platform", "desktop|laptop|orin", Some("desktop"))
+                .opt("policy", "SparseLoom or a baseline name", Some("SparseLoom"))
+                .opt("queries", "queries per task", Some("100"))
+                .opt("slo", "grid index 0..24 of the SLO config", Some("12"))
+                .opt("budget", "memory budget fraction of full preload", Some("1.0"))
+                .switch("real", "execute real PJRT chains during serving")
+                .switch("synthetic", "flops-derived base latencies (no PJRT)"),
+            Command::new("exp", "regenerate a paper table/figure")
+                .opt("artifacts", "artifact directory", Some("artifacts"))
+                .switch("synthetic", "flops-derived base latencies (no PJRT)"),
+            Command::new("profile", "build the estimator profile and report quality")
+                .opt("artifacts", "artifact directory", Some("artifacts"))
+                .opt("platform", "desktop|laptop|orin", Some("desktop"))
+                .opt("train-samples", "stitched variants used to train the GBDT", Some("80"))
+                .switch("synthetic", "flops-derived base latencies (no PJRT)"),
+            Command::new("calibrate", "measure PJRT base latencies, write cache")
+                .opt("artifacts", "artifact directory", Some("artifacts"))
+                .opt("iters", "timing iterations per executable", Some("30")),
+            // Tolerance note: dynamic-INT8 activation rounding amplifies
+            // cross-XLA-version ULP differences by one quantization step
+            // (~0.1 % of logit scale), hence 0.05 rather than float-noise.
+            Command::new("probe", "verify PJRT numerics vs python expectations")
+                .opt("artifacts", "artifact directory", Some("artifacts"))
+                .opt("tolerance", "max |Δlogit|", Some("0.05")),
+            Command::new("zoo", "print the loaded sparse model zoo")
+                .opt("artifacts", "artifact directory", Some("artifacts")),
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    match app.dispatch(&argv) {
+        Err(e) => {
+            eprintln!("{}", e.0);
+            std::process::exit(2);
+        }
+        Ok((cmd, args)) => {
+            let r = match cmd.name {
+                "serve" => cmd_serve(&args),
+                "exp" => cmd_exp(&args),
+                "profile" => cmd_profile(&args),
+                "calibrate" => cmd_calibrate(&args),
+                "probe" => cmd_probe(&args),
+                "zoo" => cmd_zoo(&args),
+                _ => unreachable!(),
+            };
+            if let Err(e) = r {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
+    let ctx = Ctx::load(&args.get_or("artifacts", "artifacts"), args.switch("synthetic"))?;
+    let platform = Platform::by_name(&args.get_or("platform", "desktop"))?;
+    let policy = Policy::parse(&args.get_or("policy", "SparseLoom"))
+        .ok_or_else(|| anyhow::anyhow!("unknown policy"))?;
+    let lm = ctx.lm(platform.clone());
+    let zoo = ctx.zoo_for(&platform);
+    let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
+
+    let slo_idx = args.get_usize("slo")?.unwrap_or(12);
+    let mut slos = BTreeMap::new();
+    let mut universe = Vec::new();
+    for (name, tz) in &zoo.tasks {
+        let grid = slo_grid(&TaskRanges::measure(tz, &lm));
+        universe.extend(grid.iter().copied());
+        slos.insert(name.clone(), grid[slo_idx.min(grid.len() - 1)]);
+    }
+
+    let rt;
+    let mut coord = Coordinator::new(zoo, &lm, &profiles);
+    if args.switch("real") {
+        rt = Runtime::new()?;
+        coord = coord.with_runtime(&rt);
+    }
+
+    let opts = ServeOpts {
+        queries_per_task: args.get_usize("queries")?.unwrap_or(100),
+        memory_budget_frac: args.get_f64("budget")?.unwrap_or(1.0),
+        policy,
+        ..Default::default()
+    };
+    let tasks: Vec<String> = profiles.keys().cloned().collect();
+    let arrival = &arrival_combinations(&tasks)[0];
+    let report = coord.serve(&slos, &universe, arrival, &opts)?;
+
+    println!("policy: {} | platform: {} | SLO grid idx {}", policy.name(), lm.platform.name, slo_idx);
+    for o in &report.outcomes {
+        println!(
+            "  {:<10} acc={:<6} mean={:.3} ms p95={:.3} ms slo=({:.3}, {:.2} ms) {}",
+            o.task,
+            o.accuracy.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
+            o.mean_latency_ms,
+            o.p95_latency_ms,
+            o.slo_accuracy,
+            o.slo_latency_ms,
+            if o.violated() { "VIOLATED" } else { "ok" },
+        );
+    }
+    println!(
+        "violation rate: {:.1} % | throughput: {:.1} q/s | makespan {:.1} ms",
+        100.0 * report.violation_rate(),
+        report.throughput_qps(),
+        report.makespan_ms,
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &sparseloom::cli::Args) -> Result<()> {
+    let ctx = Ctx::load(&args.get_or("artifacts", "artifacts"), args.switch("synthetic"))?;
+    let ids: Vec<String> = if args.positional.is_empty()
+        || args.positional.iter().any(|p| p == "all")
+    {
+        experiments::ALL.iter().map(|s| s.to_string()).collect()
+    } else {
+        args.positional.clone()
+    };
+    for id in &ids {
+        let out = experiments::run(&ctx, id)?;
+        println!("{out}");
+        println!("{}", "=".repeat(78));
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &sparseloom::cli::Args) -> Result<()> {
+    let ctx = Ctx::load(&args.get_or("artifacts", "artifacts"), args.switch("synthetic"))?;
+    let platform = Platform::by_name(&args.get_or("platform", "desktop"))?;
+    let lm = ctx.lm(platform.clone());
+    let cfg = ProfilerConfig {
+        train_samples: args.get_usize("train-samples")?.unwrap_or(80),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let profiles = ctx.profiles(&lm, &cfg)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("profiled {} tasks in {dt:.2} s on {}", profiles.len(), platform.name);
+    let orders = sparseloom::workload::placement_orders(&platform, ctx.zoo.subgraphs);
+    for (name, p) in &profiles {
+        let rep = sparseloom::profiler::evaluate_estimators(p, &orders, &[10], 300, 3);
+        println!(
+            "  {:<10} V^S={} | train={} | R@10={:.1} % | lat MAE {:.3} ms MAPE {:.1} %",
+            name,
+            p.space.len(),
+            p.train_indices.len(),
+            100.0 * rep.recall_at[0].1,
+            rep.lat_mae_ms,
+            rep.lat_mape_pct,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &sparseloom::cli::Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let zoo = Zoo::load(&artifacts)?;
+    let rt = Runtime::new()?;
+    let iters = args.get_usize("iters")?.unwrap_or(30);
+    let t0 = std::time::Instant::now();
+    let base = experiments::measure_base_latencies(&zoo, &rt, iters)?;
+    println!(
+        "measured {} (task, sg, path) latencies in {:.1} s on PJRT {}",
+        base.len(),
+        t0.elapsed().as_secs_f64(),
+        rt.platform_name(),
+    );
+    let cache = std::path::Path::new(&artifacts).join("base_latencies.json");
+    // Reuse the experiments writer by round-tripping through Ctx.
+    super_write(&cache, &base, &zoo)?;
+    println!("wrote {}", cache.display());
+    Ok(())
+}
+
+fn super_write(
+    path: &std::path::Path,
+    base: &sparseloom::soc::BaseLatencies,
+    zoo: &Zoo,
+) -> Result<()> {
+    use sparseloom::json::Json;
+    use sparseloom::zoo::KernelPath;
+    let mut entries = Vec::new();
+    for (tname, tz) in &zoo.tasks {
+        let mut paths: Vec<KernelPath> =
+            tz.variants.iter().map(|x| x.spec.kernel_path).collect();
+        paths.sort();
+        paths.dedup();
+        for sg in 0..zoo.subgraphs {
+            for &p in &paths {
+                if let Ok(ms) = base.get(tname, sg, p) {
+                    entries.push(Json::obj(vec![
+                        ("task", Json::Str(tname.clone())),
+                        ("sg", Json::Num(sg as f64)),
+                        ("path", Json::Str(p.name().to_string())),
+                        ("ms", Json::Num(ms)),
+                    ]));
+                }
+            }
+        }
+    }
+    std::fs::write(path, Json::arr(entries).to_string_pretty())?;
+    Ok(())
+}
+
+fn cmd_probe(args: &sparseloom::cli::Args) -> Result<()> {
+    let zoo = Zoo::load(args.get_or("artifacts", "artifacts"))?;
+    let tol = args.get_f64("tolerance")?.unwrap_or(0.002) as f32;
+    let rt = Runtime::new()?;
+    let mut worst = 0f32;
+    for (tname, tz) in &zoo.tasks {
+        let (x, expected) = zoo.load_probe(tname)?;
+        for (vi, want) in expected.iter().enumerate() {
+            let comp = vec![vi; zoo.subgraphs];
+            // Probe batch may differ from compiled batch sizes; pad to
+            // the smallest compiled batch that fits.
+            let batch = *zoo
+                .batch_sizes
+                .iter()
+                .filter(|&&b| b >= zoo.probe_batch)
+                .min()
+                .unwrap_or(&zoo.probe_batch);
+            let d = tz.input_dim;
+            let mut input = vec![0f32; batch * d];
+            input[..zoo.probe_batch * d].copy_from_slice(&x);
+            let (got, _) = rt.run_chain(&zoo, tname, &comp, batch, &input)?;
+            for r in 0..zoo.probe_batch {
+                for c in 0..zoo.n_classes {
+                    let g = got[r * zoo.n_classes + c];
+                    let w = want[r * zoo.n_classes + c];
+                    let d = (g - w).abs();
+                    if d > worst {
+                        worst = d;
+                    }
+                    if d > tol {
+                        bail!(
+                            "{tname} variant {vi} row {r} class {c}: got {g}, want {w} (|Δ|={d} > {tol})"
+                        );
+                    }
+                }
+            }
+        }
+        println!("  {tname}: all {} variants match python expectations", tz.variants.len());
+    }
+    println!("probe OK (worst |Δlogit| = {worst:.2e}, tolerance {tol})");
+    Ok(())
+}
+
+fn cmd_zoo(args: &sparseloom::cli::Args) -> Result<()> {
+    let zoo = Zoo::load(args.get_or("artifacts", "artifacts"))?;
+    println!(
+        "zoo {:?}: {} tasks × {} variants × {} subgraphs (seed {})",
+        zoo.zoo_name,
+        zoo.tasks.len(),
+        zoo.n_variants(),
+        zoo.subgraphs,
+        zoo.seed,
+    );
+    for (name, tz) in &zoo.tasks {
+        println!("  {name} ({}, input {}d, iface {:?})", tz.family, tz.input_dim, tz.iface);
+        for v in &tz.variants {
+            println!(
+                "    {:<10} {:<13} sparsity {:>3.0} % acc {:.3} {:>10}",
+                v.spec.name,
+                v.spec.vtype.name(),
+                100.0 * v.spec.sparsity,
+                v.accuracy,
+                sparseloom::util::fmt_bytes(v.total_bytes()),
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,216 @@
+//! Serving metrics: SLO violation rate, throughput, latency/memory
+//! breakdowns — the quantities every figure in §5 reports.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats;
+
+/// Outcome of serving one task under one SLO configuration.
+#[derive(Clone, Debug)]
+pub struct TaskOutcome {
+    pub task: String,
+    /// Accuracy of the variant that served the task (estimated at plan
+    /// time, oracle-checked in experiments), if any was selected.
+    pub accuracy: Option<f64>,
+    /// Mean per-query end-to-end latency (virtual ms).
+    pub mean_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub queries_completed: usize,
+    /// SLO bounds it was judged against.
+    pub slo_accuracy: f64,
+    pub slo_latency_ms: f64,
+}
+
+impl TaskOutcome {
+    /// The paper's violation predicate: fails accuracy OR latency (or
+    /// had no feasible variant at all).
+    pub fn violated(&self) -> bool {
+        match self.accuracy {
+            None => true,
+            Some(acc) => {
+                acc < self.slo_accuracy || self.mean_latency_ms > self.slo_latency_ms
+            }
+        }
+    }
+}
+
+/// One serving run: all tasks, one SLO config, one arrival order.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub outcomes: Vec<TaskOutcome>,
+    /// Total virtual time to drain all queries (ms).
+    pub makespan_ms: f64,
+    pub total_queries: usize,
+}
+
+impl RunReport {
+    /// Fraction of tasks that violated their SLO.
+    pub fn violation_rate(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().filter(|o| o.violated()).count() as f64
+            / self.outcomes.len() as f64
+    }
+
+    /// Queries per second over the virtual makespan.
+    pub fn throughput_qps(&self) -> f64 {
+        if self.makespan_ms <= 0.0 {
+            return 0.0;
+        }
+        self.total_queries as f64 / (self.makespan_ms / 1000.0)
+    }
+}
+
+/// Aggregation over many runs (SLO configs × arrival orders).
+#[derive(Clone, Debug, Default)]
+pub struct Aggregate {
+    pub violation_rates: Vec<f64>,
+    pub throughputs: Vec<f64>,
+}
+
+impl Aggregate {
+    pub fn push(&mut self, r: &RunReport) {
+        self.violation_rates.push(r.violation_rate());
+        self.throughputs.push(r.throughput_qps());
+    }
+
+    pub fn mean_violation_pct(&self) -> f64 {
+        100.0 * stats::mean(&self.violation_rates)
+    }
+
+    pub fn mean_throughput(&self) -> f64 {
+        stats::mean(&self.throughputs)
+    }
+}
+
+/// Latency breakdown of adding a new variant (paper Fig. 5a).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SwitchBreakdown {
+    pub compile_ms: f64,
+    pub load_ms: f64,
+    pub inference_ms: f64,
+}
+
+impl SwitchBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compile_ms + self.load_ms + self.inference_ms
+    }
+
+    /// Fraction of the total spent loading (the paper reports ≤ 96.4 %
+    /// for compile+load combined, with compile 23.7× and load 3× infer).
+    pub fn load_fraction(&self) -> f64 {
+        if self.total() <= 0.0 {
+            return 0.0;
+        }
+        (self.compile_ms + self.load_ms) / self.total()
+    }
+}
+
+/// Render an aligned text table (experiment output).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let hdr: Vec<String> = headers.iter().map(|h| h.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Per-platform experiment results keyed by method name — the common
+/// shape of Figs. 10, 11, 15, 16.
+pub type MethodResults = BTreeMap<String, f64>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(acc: Option<f64>, lat: f64) -> TaskOutcome {
+        TaskOutcome {
+            task: "t".into(),
+            accuracy: acc,
+            mean_latency_ms: lat,
+            p95_latency_ms: lat,
+            queries_completed: 100,
+            slo_accuracy: 0.8,
+            slo_latency_ms: 50.0,
+        }
+    }
+
+    #[test]
+    fn violation_predicate() {
+        assert!(!outcome(Some(0.9), 40.0).violated());
+        assert!(outcome(Some(0.7), 40.0).violated(), "accuracy miss");
+        assert!(outcome(Some(0.9), 60.0).violated(), "latency miss");
+        assert!(outcome(None, 0.0).violated(), "no variant");
+    }
+
+    #[test]
+    fn rates_and_throughput() {
+        let r = RunReport {
+            outcomes: vec![outcome(Some(0.9), 40.0), outcome(Some(0.7), 40.0)],
+            makespan_ms: 2000.0,
+            total_queries: 400,
+        };
+        assert!((r.violation_rate() - 0.5).abs() < 1e-12);
+        assert!((r.throughput_qps() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregate_means() {
+        let mut agg = Aggregate::default();
+        agg.push(&RunReport {
+            outcomes: vec![outcome(Some(0.9), 40.0)],
+            makespan_ms: 1000.0,
+            total_queries: 100,
+        });
+        agg.push(&RunReport {
+            outcomes: vec![outcome(None, 0.0)],
+            makespan_ms: 1000.0,
+            total_queries: 50,
+        });
+        assert!((agg.mean_violation_pct() - 50.0).abs() < 1e-9);
+        assert!((agg.mean_throughput() - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn switch_breakdown_fractions() {
+        // Paper Fig. 5a: compile 23.7× infer, load 3× infer.
+        let b = SwitchBreakdown { compile_ms: 23.7, load_ms: 3.0, inference_ms: 1.0 };
+        assert!(b.load_fraction() > 0.96);
+    }
+
+    #[test]
+    fn table_rendering_aligns() {
+        let t = render_table(
+            &["method", "value"],
+            &[
+                vec!["SparseLoom".into(), "1.0".into()],
+                vec!["SV-AO-P".into(), "22.5".into()],
+            ],
+        );
+        assert!(t.contains("SparseLoom"));
+        assert!(t.lines().count() == 4);
+    }
+}

@@ -1,0 +1,339 @@
+//! Sparsity-Aware Optimizer (paper §3.3, Algorithm 1).
+//!
+//! Jointly picks one **global processor placement order** `p⃗*` shared
+//! by all tasks and, given it, the per-task stitched variant with the
+//! lowest latency among those satisfying both SLO constraints:
+//!
+//! 1. Θᵗ = { ṽ | A(ṽ) ≥ SLOᵗ_acc ∧ ∃p⃗∈Ω: Lat(ṽ, p⃗) ≤ SLOᵗ_lat }
+//! 2. p⃗* = argmin_{p⃗∈Ω} (1/T) Σ_t min_{ṽ∈Θᵗ} Lat(ṽ, p⃗)
+//! 3. ṽᵗ* = argmin_{ṽ∈Θᵗ} Lat(ṽ | p⃗*)
+
+use std::collections::BTreeMap;
+
+use crate::profiler::TaskProfile;
+use crate::soc::Processor;
+use crate::stitching::Composition;
+use crate::workload::Slo;
+
+/// The filtered candidate set Θᵗ for one task.
+#[derive(Clone, Debug, Default)]
+pub struct CandidateSet {
+    /// Stitched indices satisfying the SLO (accuracy via the estimator,
+    /// latency achievable under at least one order in Ω).
+    pub indices: Vec<usize>,
+}
+
+impl CandidateSet {
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+/// Step 1 of Alg. 1: compute Θᵗ.
+pub fn feasible_set(
+    profile: &TaskProfile,
+    slo: &Slo,
+    orders: &[Vec<Processor>],
+) -> CandidateSet {
+    // Odometer walk over the base-V digits: the canonical index order
+    // without allocating a Composition per candidate (this sits inside
+    // the hotness loop — |Ψ| × V^S calls; see EXPERIMENTS.md §Perf).
+    let v = profile.space.n_variants;
+    let s = profile.space.n_subgraphs;
+    let mut digits = vec![0usize; s];
+    let mut indices = Vec::new();
+    for k in 0..profile.space.len() {
+        if profile.accuracy(k) >= slo.min_accuracy {
+            let ok = orders.iter().any(|o| {
+                profile
+                    .latency_est_digits(&digits, o)
+                    .map(|l| l <= slo.max_latency_ms)
+                    .unwrap_or(false)
+            });
+            if ok {
+                indices.push(k);
+            }
+        }
+        // increment base-V odometer (little-endian on the last digit)
+        for j in (0..s).rev() {
+            digits[j] += 1;
+            if digits[j] < v {
+                break;
+            }
+            digits[j] = 0;
+        }
+    }
+    CandidateSet { indices }
+}
+
+/// The optimizer's decision for a whole SLO configuration.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// p⃗* — the global placement order.
+    pub order: Vec<Processor>,
+    /// Per task: chosen stitched index and its estimated latency, or
+    /// `None` when Θᵗ was empty (an unavoidable SLO violation).
+    pub selections: BTreeMap<String, Option<Selection>>,
+    /// L(p⃗*) — mean best latency across tasks (selected ones).
+    pub mean_latency_ms: f64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Selection {
+    pub stitched_index: usize,
+    pub latency_ms: f64,
+    pub accuracy: f64,
+}
+
+impl Plan {
+    pub fn composition_for(&self, profile: &TaskProfile) -> Option<Composition> {
+        self.selections
+            .get(&profile.task)
+            .and_then(|s| s.as_ref())
+            .map(|s| profile.space.composition(s.stitched_index))
+    }
+
+    /// Number of tasks with no feasible variant.
+    pub fn infeasible_tasks(&self) -> usize {
+        self.selections.values().filter(|s| s.is_none()).count()
+    }
+}
+
+/// Algorithm 1, complete: joint placement-order + variant selection.
+///
+/// `profiles` and `slos` are keyed by task name; `orders` is Ω.
+pub fn optimize(
+    profiles: &BTreeMap<String, TaskProfile>,
+    slos: &BTreeMap<String, Slo>,
+    orders: &[Vec<Processor>],
+) -> Plan {
+    assert!(!orders.is_empty(), "empty order set Ω");
+
+    // Step 1: Θᵗ per task.
+    let theta: BTreeMap<&str, CandidateSet> = profiles
+        .iter()
+        .map(|(name, p)| {
+            let slo = &slos[name];
+            (name.as_str(), feasible_set(p, slo, orders))
+        })
+        .collect();
+
+    // Step 2: pick p⃗* minimizing mean best latency over tasks.
+    let mut best: Option<(f64, usize)> = None;
+    for (oi, order) in orders.iter().enumerate() {
+        let mut sum = 0.0;
+        let mut counted = 0usize;
+        for (name, p) in profiles {
+            let cands = &theta[name.as_str()];
+            let mut task_best = f64::INFINITY;
+            for &k in &cands.indices {
+                let comp = p.space.composition(k);
+                if let Some(l) = p.latency_est(&comp, order) {
+                    if l < task_best {
+                        task_best = l;
+                    }
+                }
+            }
+            if task_best.is_finite() {
+                sum += task_best;
+                counted += 1;
+            }
+        }
+        if counted == 0 {
+            continue;
+        }
+        let mean = sum / counted as f64;
+        if best.map(|(b, _)| mean < b).unwrap_or(true) {
+            best = Some((mean, oi));
+        }
+    }
+    let (mean_latency_ms, oi) = best.unwrap_or((f64::INFINITY, 0));
+    let order = orders[oi].clone();
+
+    // Step 3: final per-task selection under p⃗*.
+    let mut selections = BTreeMap::new();
+    for (name, p) in profiles {
+        let cands = &theta[name.as_str()];
+        let mut choice: Option<Selection> = None;
+        for &k in &cands.indices {
+            let comp = p.space.composition(k);
+            if let Some(l) = p.latency_est(&comp, &order) {
+                if choice.map(|c| l < c.latency_ms).unwrap_or(true) {
+                    choice = Some(Selection {
+                        stitched_index: k,
+                        latency_ms: l,
+                        accuracy: p.accuracy(k),
+                    });
+                }
+            }
+        }
+        selections.insert(name.clone(), choice);
+    }
+
+    Plan { order, selections, mean_latency_ms }
+}
+
+/// Restricted optimizer used by the no-stitching baselines: only pure
+/// compositions are considered (classic adaptive-variant selection).
+pub fn optimize_pure_only(
+    profiles: &BTreeMap<String, TaskProfile>,
+    slos: &BTreeMap<String, Slo>,
+    orders: &[Vec<Processor>],
+) -> Plan {
+    let restricted: BTreeMap<String, TaskProfile> = profiles
+        .iter()
+        .map(|(name, p)| {
+            let mut r = p.clone();
+            // Suppress all non-pure variants by zeroing their accuracy
+            // (they will fail any positive accuracy SLO) — latency table
+            // untouched so pure entries behave identically.
+            for k in 0..r.space.len() {
+                if !r.space.composition(k).is_pure() {
+                    r.acc_pred[k] = -1.0;
+                }
+            }
+            (name.clone(), r)
+        })
+        .collect();
+    optimize(&restricted, slos, orders)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::{profile_task, ProfilerConfig};
+    use crate::soc::latency::tests::tiny_taskzoo;
+    use crate::soc::{BaseLatencies, LatencyModel, Platform};
+    use crate::stitching::StitchSpace;
+    use crate::zoo::KernelPath;
+    use Processor::*;
+
+    fn setup() -> BTreeMap<String, TaskProfile> {
+        let tz = tiny_taskzoo();
+        let mut b = BaseLatencies::new();
+        for sg in 0..2 {
+            b.set("tiny", sg, KernelPath::Dense, 10.0);
+            b.set("tiny", sg, KernelPath::BlockSparse, 8.0);
+        }
+        let lm = LatencyModel::new(Platform::desktop(), b);
+        let space = StitchSpace::for_task(&tz);
+        let oracle: Vec<f64> = space
+            .iter()
+            .map(|c| c.0.iter().map(|&i| tz.variants[i].accuracy).sum::<f64>() / 2.0)
+            .collect();
+        let cfg = ProfilerConfig {
+            train_samples: 4,
+            gbdt: crate::gbdt::GbdtParams {
+                n_trees: 200,
+                max_depth: 3,
+                eta: 0.2,
+                min_leaf: 1,
+                subsample: 1.0,
+                seed: 1,
+            },
+            seed: 23,
+        };
+        let p = profile_task(&tz, &lm, &oracle, &cfg, true);
+        BTreeMap::from([("tiny".to_string(), p)])
+    }
+
+    fn orders2() -> Vec<Vec<Processor>> {
+        vec![vec![Cpu, Gpu], vec![Gpu, Cpu], vec![Gpu, Npu], vec![Npu, Gpu]]
+    }
+
+    #[test]
+    fn feasible_set_respects_both_constraints() {
+        let profiles = setup();
+        let p = &profiles["tiny"];
+        let lax = Slo { min_accuracy: 0.0, max_latency_ms: 1e9 };
+        assert_eq!(feasible_set(p, &lax, &orders2()).len(), p.space.len());
+        let impossible = Slo { min_accuracy: 2.0, max_latency_ms: 1e9 };
+        assert!(feasible_set(p, &impossible, &orders2()).is_empty());
+        let tight_lat = Slo { min_accuracy: 0.0, max_latency_ms: 0.0001 };
+        assert!(feasible_set(p, &tight_lat, &orders2()).is_empty());
+    }
+
+    #[test]
+    fn optimizer_picks_feasible_and_order_in_omega() {
+        let profiles = setup();
+        let slos = BTreeMap::from([(
+            "tiny".to_string(),
+            Slo { min_accuracy: 0.6, max_latency_ms: 100.0 },
+        )]);
+        let orders = orders2();
+        let plan = optimize(&profiles, &slos, &orders);
+        assert!(orders.contains(&plan.order));
+        let sel = plan.selections["tiny"].expect("feasible");
+        assert!(sel.accuracy >= 0.6);
+        assert!(sel.latency_ms <= 100.0);
+        assert_eq!(plan.infeasible_tasks(), 0);
+    }
+
+    #[test]
+    fn optimizer_reports_infeasible() {
+        let profiles = setup();
+        let slos = BTreeMap::from([(
+            "tiny".to_string(),
+            Slo { min_accuracy: 0.99, max_latency_ms: 0.001 },
+        )]);
+        let plan = optimize(&profiles, &slos, &orders2());
+        assert_eq!(plan.infeasible_tasks(), 1);
+    }
+
+    #[test]
+    fn chosen_variant_is_latency_minimal_under_order() {
+        let profiles = setup();
+        let slos = BTreeMap::from([(
+            "tiny".to_string(),
+            Slo { min_accuracy: 0.0, max_latency_ms: 1e9 },
+        )]);
+        let plan = optimize(&profiles, &slos, &orders2());
+        let p = &profiles["tiny"];
+        let sel = plan.selections["tiny"].unwrap();
+        for k in 0..p.space.len() {
+            if let Some(l) = p.latency_est(&p.space.composition(k), &plan.order) {
+                assert!(sel.latency_ms <= l + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn pure_only_selects_pure() {
+        let profiles = setup();
+        let slos = BTreeMap::from([(
+            "tiny".to_string(),
+            Slo { min_accuracy: 0.5, max_latency_ms: 1e9 },
+        )]);
+        let plan = optimize_pure_only(&profiles, &slos, &orders2());
+        let p = &profiles["tiny"];
+        let sel = plan.selections["tiny"].unwrap();
+        assert!(p.space.composition(sel.stitched_index).is_pure());
+    }
+
+    #[test]
+    fn stitching_beats_pure_under_tight_slo() {
+        // The paper's core claim (Fig. 3): stitched variants satisfy
+        // SLOs that pure variants cannot. Construct an SLO between the
+        // pure variants' (acc, lat) points.
+        let profiles = setup();
+        let p = &profiles["tiny"];
+        // accuracy above struct50's 0.7 but latency below what pure
+        // dense can reach on the fastest order:
+        let pure_dense_lat = {
+            let comp = p.space.composition(p.space.pure_index(0));
+            orders2()
+                .iter()
+                .filter_map(|o| p.latency_est(&comp, o))
+                .fold(f64::INFINITY, f64::min)
+        };
+        let slo = Slo { min_accuracy: 0.75, max_latency_ms: pure_dense_lat * 0.98 };
+        let slos = BTreeMap::from([("tiny".to_string(), slo)]);
+        let stitched = optimize(&profiles, &slos, &orders2());
+        let pure = optimize_pure_only(&profiles, &slos, &orders2());
+        assert!(pure.infeasible_tasks() >= stitched.infeasible_tasks());
+    }
+}

@@ -1,0 +1,374 @@
+//! Hot-Subgraph Preloader (paper §3.4, Algorithm 2).
+//!
+//! Preloading every subgraph of every variant hides switching latency
+//! but is memory-prohibitive (Fig. 5b). SparseLoom scores each original
+//! subgraph `s_j^{t,i}` by **hotness** (Eq. 7) — its occurrence
+//! frequency across the SLO-feasible variant sets Θᵗ(σ) over all SLO
+//! configurations σ ∈ Ψ — and greedily preloads the hottest subgraphs
+//! at each position under a global memory budget.
+
+
+use crate::optimizer::feasible_set;
+use crate::profiler::TaskProfile;
+use crate::soc::{BlobId, Processor};
+use crate::workload::Slo;
+use crate::zoo::TaskZoo;
+
+/// Hotness scores for one task: `scores[j][i]` for subgraph position j,
+/// original variant i.
+#[derive(Clone, Debug)]
+pub struct Hotness {
+    pub task: String,
+    pub scores: Vec<Vec<f64>>,
+}
+
+impl Hotness {
+    /// Eq. 7: H[s_j^{t,i}] = Σ_σ Occur(s_j^{t,i}, Θᵗ(σ)) / |Θᵗ(σ)|.
+    pub fn compute(
+        profile: &TaskProfile,
+        slo_set: &[Slo],
+        orders: &[Vec<Processor>],
+    ) -> Hotness {
+        let s = profile.space.n_subgraphs;
+        let v = profile.space.n_variants;
+        let n = profile.space.len();
+        let mut scores = vec![vec![0.0f64; v]; s];
+        // Precompute each composition's best latency over Ω once — the
+        // per-σ feasibility test then costs two comparisons instead of
+        // |Ω| latency sums (|Ψ|×V^S×|Ω| → V^S×|Ω| + |Ψ|×V^S; §Perf).
+        let mut min_lat = vec![f64::INFINITY; n];
+        let mut digits = vec![0usize; s];
+        for item in min_lat.iter_mut() {
+            for o in orders {
+                if let Some(l) = profile.latency_est_digits(&digits, o) {
+                    if l < *item {
+                        *item = l;
+                    }
+                }
+            }
+            for j in (0..s).rev() {
+                digits[j] += 1;
+                if digits[j] < v {
+                    break;
+                }
+                digits[j] = 0;
+            }
+        }
+
+        let mut occur = vec![vec![0usize; v]; s];
+        let mut members: Vec<usize> = Vec::new();
+        for slo in slo_set {
+            members.clear();
+            for row in occur.iter_mut() {
+                row.iter_mut().for_each(|x| *x = 0);
+            }
+            digits.iter_mut().for_each(|d| *d = 0);
+            for k in 0..n {
+                if profile.acc_pred[k] >= slo.min_accuracy
+                    && min_lat[k] <= slo.max_latency_ms
+                {
+                    members.push(k);
+                    for (j, &i) in digits.iter().enumerate() {
+                        occur[j][i] += 1;
+                    }
+                }
+                for j in (0..s).rev() {
+                    digits[j] += 1;
+                    if digits[j] < v {
+                        break;
+                    }
+                    digits[j] = 0;
+                }
+            }
+            if members.is_empty() {
+                continue;
+            }
+            let denom = members.len() as f64;
+            for j in 0..s {
+                for i in 0..v {
+                    scores[j][i] += occur[j][i] as f64 / denom;
+                }
+            }
+        }
+        Hotness { task: profile.task.clone(), scores }
+    }
+
+    /// Positions × variants sorted by descending hotness at position j.
+    pub fn ranked_at(&self, j: usize) -> Vec<(usize, f64)> {
+        let mut v: Vec<(usize, f64)> = self.scores[j].iter().copied().enumerate().collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+/// The preload plan: which blobs to load, per task.
+#[derive(Clone, Debug, Default)]
+pub struct PreloadPlan {
+    /// Φᵗ — chosen (task, variant, subgraph) blobs.
+    pub blobs: Vec<BlobId>,
+    pub total_bytes: u64,
+    pub budget_bytes: u64,
+}
+
+impl PreloadPlan {
+    pub fn contains(&self, id: &BlobId) -> bool {
+        self.blobs.contains(id)
+    }
+}
+
+/// Memory cost of one subgraph blob.
+fn blob_bytes(tz: &TaskZoo, variant: usize, sg: usize) -> u64 {
+    tz.variants[variant].subgraphs[sg].bytes
+}
+
+/// Algorithm 2: greedy hotness-ordered preloading under a global budget.
+///
+/// Iterates tasks in the given order, and within each task positions
+/// j = 1..S, loading candidates by descending hotness while the
+/// cumulative size fits `budget_bytes`.
+pub fn preload(
+    tasks: &[(&TaskZoo, &Hotness)],
+    budget_bytes: u64,
+) -> PreloadPlan {
+    let mut plan = PreloadPlan { budget_bytes, ..Default::default() };
+    let mut used = 0u64;
+    // Greedy by descending hotness under the global budget. We iterate
+    // hotness *ranks* in the outer loop (rank 0 of every task/position
+    // first), not tasks — a task-sequential walk (Alg. 2 as literally
+    // written) lets early tasks exhaust the budget before later tasks
+    // load even their hottest subgraph. Rank-interleaving keeps the
+    // greedy invariant (never load a colder blob while a hotter one at
+    // the same position would fit) and is task-fair; DESIGN.md notes
+    // the refinement.
+    let max_rank = tasks
+        .iter()
+        .map(|(_, h)| h.scores.first().map(|r| r.len()).unwrap_or(0))
+        .max()
+        .unwrap_or(0);
+    for rank in 0..max_rank {
+        for (tz, hot) in tasks {
+            let s = hot.scores.len();
+            for j in 0..s {
+                let ranked = hot.ranked_at(j);
+                let Some(&(i, score)) = ranked.get(rank) else { continue };
+                if score <= 0.0 {
+                    continue; // never feasible anywhere — skip cold blobs
+                }
+                let id = BlobId::new(&tz.name, i, j);
+                if plan.contains(&id) {
+                    continue;
+                }
+                let bytes = blob_bytes(tz, i, j);
+                if used + bytes > budget_bytes {
+                    continue;
+                }
+                used += bytes;
+                plan.blobs.push(id);
+            }
+        }
+    }
+    plan.total_bytes = used;
+    plan
+}
+
+/// Bytes needed to preload *everything* (the "full preloading" reference
+/// point of Fig. 14's memory-budget axis).
+pub fn full_preload_bytes(tasks: &[&TaskZoo]) -> u64 {
+    tasks
+        .iter()
+        .map(|tz| {
+            tz.variants
+                .iter()
+                .map(|v| v.subgraphs.iter().map(|s| s.bytes).sum::<u64>())
+                .sum::<u64>()
+        })
+        .sum()
+}
+
+/// Summary of how well a plan covers the feasible sets (diagnostics).
+#[derive(Clone, Debug)]
+pub struct CoverageReport {
+    /// Fraction of SLO configs for which at least one fully-preloaded
+    /// feasible stitched variant exists.
+    pub covered_configs: f64,
+}
+
+pub fn coverage(
+    profile: &TaskProfile,
+    plan: &PreloadPlan,
+    slo_set: &[Slo],
+    orders: &[Vec<Processor>],
+) -> CoverageReport {
+    let mut covered = 0usize;
+    let mut considered = 0usize;
+    for slo in slo_set {
+        let theta = feasible_set(profile, slo, orders);
+        if theta.is_empty() {
+            continue; // nothing could satisfy σ even with full memory
+        }
+        considered += 1;
+        let ok = theta.indices.iter().any(|&k| {
+            let comp = profile.space.composition(k);
+            comp.0.iter().enumerate().all(|(j, &i)| {
+                plan.contains(&BlobId::new(&profile.task, i, j))
+            })
+        });
+        if ok {
+            covered += 1;
+        }
+    }
+    CoverageReport {
+        covered_configs: if considered == 0 {
+            1.0
+        } else {
+            covered as f64 / considered as f64
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::{profile_task, ProfilerConfig};
+    use crate::soc::latency::tests::tiny_taskzoo;
+    use crate::soc::{BaseLatencies, LatencyModel, Platform};
+    use crate::workload::placement_orders;
+    use crate::zoo::KernelPath;
+
+    fn setup() -> (crate::zoo::TaskZoo, TaskProfile, Vec<Vec<Processor>>) {
+        let tz = tiny_taskzoo();
+        let mut b = BaseLatencies::new();
+        for sg in 0..2 {
+            b.set("tiny", sg, KernelPath::Dense, 10.0);
+            b.set("tiny", sg, KernelPath::BlockSparse, 8.0);
+        }
+        let plat = Platform::desktop();
+        let orders = placement_orders(&plat, 2);
+        let lm = LatencyModel::new(plat, b);
+        let space = crate::stitching::StitchSpace::for_task(&tz);
+        let oracle: Vec<f64> = space
+            .iter()
+            .map(|c| c.0.iter().map(|&i| tz.variants[i].accuracy).sum::<f64>() / 2.0)
+            .collect();
+        let cfg = ProfilerConfig {
+            train_samples: 4,
+            gbdt: crate::gbdt::GbdtParams {
+                n_trees: 200,
+                max_depth: 3,
+                eta: 0.2,
+                min_leaf: 1,
+                subsample: 1.0,
+                seed: 1,
+            },
+            seed: 23,
+        };
+        let p = profile_task(&tz, &lm, &oracle, &cfg, true);
+        (tz, p, orders)
+    }
+
+    fn slos() -> Vec<Slo> {
+        vec![
+            Slo { min_accuracy: 0.0, max_latency_ms: 1e9 },
+            Slo { min_accuracy: 0.75, max_latency_ms: 1e9 },
+            Slo { min_accuracy: 0.85, max_latency_ms: 1e9 },
+        ]
+    }
+
+    #[test]
+    fn hotness_nonnegative_and_bounded() {
+        let (_tz, p, orders) = setup();
+        let h = Hotness::compute(&p, &slos(), &orders);
+        for row in &h.scores {
+            for &x in row {
+                assert!(x >= 0.0);
+                assert!(x <= slos().len() as f64 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn per_config_contributions_sum_to_one_per_position() {
+        // Σ_i Occur(i)/|Θ| = 1 at each position for each σ with Θ≠∅,
+        // so total score per position sums to #feasible-configs.
+        let (_tz, p, orders) = setup();
+        let h = Hotness::compute(&p, &slos(), &orders);
+        let expected: f64 = slos()
+            .iter()
+            .filter(|s| !feasible_set(&p, s, &orders).is_empty())
+            .count() as f64;
+        for j in 0..2 {
+            let sum: f64 = h.scores[j].iter().sum();
+            assert!((sum - expected).abs() < 1e-9, "pos {j}: {sum} vs {expected}");
+        }
+    }
+
+    #[test]
+    fn uniqueness_raises_hotness() {
+        // Under the accuracy-0.85 SLO only dense-dense survives
+        // (accuracies: dense 0.9, struct50 0.7 → mean ≥ 0.85 needs both
+        // dense) so dense subgraphs must outscore sparse ones.
+        let (_tz, p, orders) = setup();
+        let h = Hotness::compute(&p, &slos(), &orders);
+        for j in 0..2 {
+            assert!(h.scores[j][0] > h.scores[j][1]);
+        }
+    }
+
+    #[test]
+    fn preload_respects_budget() {
+        let (tz, p, orders) = setup();
+        let h = Hotness::compute(&p, &slos(), &orders);
+        let full = full_preload_bytes(&[&tz]);
+        for frac in [0.1, 0.3, 0.55, 1.0] {
+            let budget = (full as f64 * frac) as u64;
+            let plan = preload(&[(&tz, &h)], budget);
+            assert!(plan.total_bytes <= budget, "{} > {budget}", plan.total_bytes);
+        }
+    }
+
+    #[test]
+    fn full_budget_loads_all_hot_blobs() {
+        let (tz, p, orders) = setup();
+        let h = Hotness::compute(&p, &slos(), &orders);
+        let plan = preload(&[(&tz, &h)], u64::MAX);
+        // Every (variant, position) with positive hotness is loaded.
+        let hot_count: usize = h
+            .scores
+            .iter()
+            .map(|row| row.iter().filter(|&&x| x > 0.0).count())
+            .sum();
+        assert_eq!(plan.blobs.len(), hot_count);
+    }
+
+    #[test]
+    fn coverage_increases_with_budget() {
+        let (tz, p, orders) = setup();
+        let h = Hotness::compute(&p, &slos(), &orders);
+        let full = full_preload_bytes(&[&tz]);
+        let small = preload(&[(&tz, &h)], full / 10);
+        let big = preload(&[(&tz, &h)], full);
+        let cs = coverage(&p, &small, &slos(), &orders).covered_configs;
+        let cb = coverage(&p, &big, &slos(), &orders).covered_configs;
+        assert!(cb >= cs);
+        assert!((cb - 1.0).abs() < 1e-9, "full budget covers everything");
+    }
+
+    #[test]
+    fn greedy_prefers_hotter_variants() {
+        let (tz, p, orders) = setup();
+        let h = Hotness::compute(&p, &slos(), &orders);
+        // Budget for exactly one (dense) blob: the greedy must spend it
+        // on the hottest candidate at position 0 first.
+        let plan = preload(&[(&tz, &h)], tz.variants[0].subgraphs[0].bytes);
+        assert_eq!(plan.blobs.first(), Some(&BlobId::new("tiny", 0, 0)));
+        // Alg. 2 walks positions in order and back-fills whatever still
+        // fits, so a colder-but-smaller blob may follow — but never
+        // *instead of* a hotter one at the same position.
+        let full = full_preload_bytes(&[&tz]);
+        let plan = preload(&[(&tz, &h)], full);
+        for j in 0..2 {
+            let ranked = h.ranked_at(j);
+            assert!(plan.contains(&BlobId::new("tiny", ranked[0].0, j)));
+        }
+    }
+}

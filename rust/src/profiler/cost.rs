@@ -1,0 +1,156 @@
+//! Profiling-cost accounting (paper Table 1, Eq. 6, Figs. 8 & 12).
+//!
+//! A "profiling run" measures one variant's accuracy *or* one latency
+//! configuration. Exhaustive profiling of the stitched space needs
+//! `T·V^S` accuracy runs and `T·V^S·P!` latency runs; SparseLoom's
+//! estimators need `T·V` accuracy runs and `T·S·V·P` subgraph-latency
+//! runs.
+
+use crate::util::factorial;
+
+/// Problem-size parameters (paper notation).
+#[derive(Clone, Copy, Debug)]
+pub struct CostParams {
+    /// T — number of tasks.
+    pub tasks: usize,
+    /// V — variants per task.
+    pub variants: usize,
+    /// S — subgraphs per variant.
+    pub subgraphs: usize,
+    /// P — processors.
+    pub processors: usize,
+}
+
+impl CostParams {
+    /// Placement orders |Ω| = P!.
+    pub fn orders(&self) -> usize {
+        factorial(self.processors)
+    }
+
+    /// Total stitched variants per task: V^S.
+    pub fn stitched_per_task(&self) -> usize {
+        self.variants.pow(self.subgraphs as u32)
+    }
+
+    // ---- Table 1: without stitching --------------------------------
+
+    pub fn no_stitch_accuracy_runs(&self) -> usize {
+        self.tasks * self.variants
+    }
+
+    pub fn no_stitch_latency_runs(&self) -> usize {
+        self.tasks * self.variants * self.orders()
+    }
+
+    pub fn no_stitch_total_runs(&self) -> usize {
+        self.tasks * self.variants * (self.orders() + 1)
+    }
+
+    // ---- Table 1: with stitching, exhaustive ------------------------
+
+    pub fn exhaustive_accuracy_runs(&self) -> usize {
+        self.tasks * self.stitched_per_task()
+    }
+
+    pub fn exhaustive_latency_runs(&self) -> usize {
+        self.tasks * self.stitched_per_task() * self.orders()
+    }
+
+    pub fn exhaustive_total_runs(&self) -> usize {
+        self.tasks * self.stitched_per_task() * (self.orders() + 1)
+    }
+
+    // ---- Eq. 6: SparseLoom with estimators --------------------------
+
+    pub fn sparseloom_accuracy_runs(&self) -> usize {
+        self.tasks * self.variants
+    }
+
+    pub fn sparseloom_latency_runs(&self) -> usize {
+        self.tasks * self.subgraphs * self.variants * self.processors
+    }
+
+    pub fn sparseloom_total_runs(&self) -> usize {
+        self.sparseloom_accuracy_runs() + self.sparseloom_latency_runs()
+    }
+
+    /// Cost reduction of SparseLoom vs exhaustive (fraction in [0,1]).
+    pub fn reduction(&self) -> f64 {
+        1.0 - self.sparseloom_total_runs() as f64 / self.exhaustive_total_runs() as f64
+    }
+}
+
+/// Estimated wall-clock profiling time (Fig. 12), given the mean cost of
+/// one accuracy run and one latency run on a platform.
+#[derive(Clone, Copy, Debug)]
+pub struct RunCosts {
+    pub accuracy_run_ms: f64,
+    pub latency_run_ms: f64,
+}
+
+impl CostParams {
+    pub fn exhaustive_minutes(&self, rc: &RunCosts) -> f64 {
+        (self.exhaustive_accuracy_runs() as f64 * rc.accuracy_run_ms
+            + self.exhaustive_latency_runs() as f64 * rc.latency_run_ms)
+            / 60_000.0
+    }
+
+    pub fn sparseloom_minutes(&self, rc: &RunCosts) -> f64 {
+        (self.sparseloom_accuracy_runs() as f64 * rc.accuracy_run_ms
+            + self.sparseloom_latency_runs() as f64 * rc.latency_run_ms)
+            / 60_000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper() -> CostParams {
+        CostParams { tasks: 4, variants: 10, subgraphs: 3, processors: 3 }
+    }
+
+    #[test]
+    fn table1_formulas() {
+        let c = paper();
+        assert_eq!(c.orders(), 6);
+        assert_eq!(c.no_stitch_total_runs(), 4 * 10 * 7);
+        assert_eq!(c.exhaustive_accuracy_runs(), 4 * 1000);
+        assert_eq!(c.exhaustive_latency_runs(), 4 * 1000 * 6);
+        assert_eq!(c.exhaustive_total_runs(), 4 * 1000 * 7);
+    }
+
+    #[test]
+    fn eq6_formula() {
+        let c = paper();
+        assert_eq!(c.sparseloom_accuracy_runs(), 40);
+        assert_eq!(c.sparseloom_latency_runs(), 4 * 3 * 10 * 3);
+        assert_eq!(c.sparseloom_total_runs(), 40 + 360);
+    }
+
+    #[test]
+    fn reduction_exceeds_98_percent_at_paper_scale() {
+        // Fig. 8b: "up to 98% cost reductions" as V grows.
+        let c = paper();
+        assert!(c.reduction() > 0.98, "reduction {}", c.reduction());
+    }
+
+    #[test]
+    fn estimator_cost_linear_in_v() {
+        // Fig. 8b's key property: SparseLoom scales linearly with V.
+        let base = paper();
+        let c2 = CostParams { variants: 20, ..base };
+        assert_eq!(c2.sparseloom_total_runs(), 2 * base.sparseloom_total_runs());
+        // …while exhaustive scales with V^S (8× for V doubling, S=3).
+        assert_eq!(c2.exhaustive_total_runs(), 8 * base.exhaustive_total_runs());
+    }
+
+    #[test]
+    fn minutes_scale_with_run_costs() {
+        let c = paper();
+        let rc = RunCosts { accuracy_run_ms: 6000.0, latency_run_ms: 50.0 };
+        let ex = c.exhaustive_minutes(&rc);
+        let sl = c.sparseloom_minutes(&rc);
+        assert!(sl < ex / 20.0, "exhaustive {ex:.1} min vs sparseloom {sl:.1} min");
+    }
+}

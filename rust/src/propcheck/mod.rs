@@ -1,0 +1,189 @@
+//! Mini property-testing framework (offline substrate for `proptest`).
+//!
+//! Provides seeded generators, a `forall` runner with failure reporting,
+//! and greedy input shrinking for integer/vector cases. Used by the
+//! coordinator-invariant property tests in `rust/tests/proptests.rs`.
+
+use crate::util::Rng;
+
+/// A generator of random values of `T` with an optional shrinker.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(gen: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Self { gen: Box::new(gen), shrink: Box::new(|_| Vec::new()) }
+    }
+
+    pub fn with_shrink(mut self, shrink: impl Fn(&T) -> Vec<T> + 'static) -> Self {
+        self.shrink = Box::new(shrink);
+        self
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+}
+
+/// usize in [lo, hi] with halving shrinker toward lo.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(lo <= hi);
+    Gen::new(move |rng| lo + rng.below(hi - lo + 1)).with_shrink(move |&v| {
+        let mut out = Vec::new();
+        if v > lo {
+            out.push(lo);
+            let mid = lo + (v - lo) / 2;
+            if mid != lo && mid != v {
+                out.push(mid);
+            }
+            if v - 1 != mid && v - 1 >= lo {
+                out.push(v - 1);
+            }
+        }
+        out
+    })
+}
+
+/// f64 in [lo, hi) with shrink toward lo.
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(move |rng| rng.range_f64(lo, hi)).with_shrink(move |&v| {
+        if v > lo + 1e-12 {
+            vec![lo, lo + (v - lo) / 2.0]
+        } else {
+            Vec::new()
+        }
+    })
+}
+
+/// Vec of fixed length from an element generator (shrinks elements).
+pub fn vec_of<T: Clone + 'static>(elem: Gen<T>, len: usize) -> Gen<Vec<T>> {
+    let elem = std::rc::Rc::new(elem);
+    let e2 = std::rc::Rc::clone(&elem);
+    Gen::new(move |rng| (0..len).map(|_| elem.sample(rng)).collect::<Vec<T>>())
+        .with_shrink(move |v: &Vec<T>| {
+            let mut out = Vec::new();
+            for (i, item) in v.iter().enumerate() {
+                for s in e2.shrinks(item) {
+                    let mut copy = v.clone();
+                    copy[i] = s;
+                    out.push(copy);
+                }
+            }
+            out
+        })
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Ok { cases: usize },
+    Failed { original: T, shrunk: T, message: String },
+}
+
+/// Run `prop` on `cases` random inputs; on failure, greedily shrink.
+/// `prop` returns Err(message) to signal failure.
+pub fn forall<T: Clone + 'static>(
+    gen: &Gen<T>,
+    cases: usize,
+    seed: u64,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> PropResult<T> {
+    let mut rng = Rng::new(seed);
+    for _ in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: keep taking the first failing shrink.
+            let mut current = input.clone();
+            let mut current_msg = msg;
+            'outer: loop {
+                for cand in gen.shrinks(&current) {
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        current_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            return PropResult::Failed {
+                original: input,
+                shrunk: current,
+                message: current_msg,
+            };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+/// Assert helper: panic with a readable report on failure.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    cases: usize,
+    seed: u64,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    match forall(gen, cases, seed, prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { original, shrunk, message } => {
+            panic!(
+                "property {name} failed: {message}\n  original input: {original:?}\n  shrunk input:   {shrunk:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let g = usize_in(0, 100);
+        match forall(&g, 200, 1, |&v| {
+            if v <= 100 { Ok(()) } else { Err("out of range".into()) }
+        }) {
+            PropResult::Ok { cases } => assert_eq!(cases, 200),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let g = usize_in(0, 1000);
+        match forall(&g, 500, 2, |&v| {
+            if v < 37 { Ok(()) } else { Err(format!("{v} ≥ 37")) }
+        }) {
+            PropResult::Failed { shrunk, .. } => {
+                assert_eq!(shrunk, 37, "greedy shrink reaches the boundary");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn vec_generator_and_shrinker() {
+        let g = vec_of(usize_in(0, 9), 4);
+        let mut rng = Rng::new(3);
+        let v = g.sample(&mut rng);
+        assert_eq!(v.len(), 4);
+        assert!(v.iter().all(|&x| x <= 9));
+        let big = vec![9usize, 9, 9, 9];
+        assert!(!g.shrinks(&big).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "property demo failed")]
+    fn check_panics_with_report() {
+        let g = usize_in(0, 10);
+        check("demo", &g, 100, 4, |&v| {
+            if v < 5 { Ok(()) } else { Err("too big".into()) }
+        });
+    }
+}

@@ -1,0 +1,137 @@
+//! Discrete-event simulation clock for the heterogeneous SoC.
+//!
+//! Real compute runs through PJRT on the host CPU; *device timing* is
+//! simulated: every subgraph execution is booked onto its processor's
+//! timeline at the latency the platform model predicts. Throughput and
+//! SLO metrics are then read off virtual time, which preserves the
+//! heterogeneous timing structure the paper's scheduler exploits.
+
+use std::collections::BTreeMap;
+
+use super::profile::Processor;
+
+/// Per-processor occupancy timeline.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub busy_until_ms: f64,
+    pub total_busy_ms: f64,
+    pub jobs: u64,
+}
+
+/// Virtual-time engine: FIFO, non-preemptive per processor.
+#[derive(Clone, Debug)]
+pub struct SocSim {
+    timelines: BTreeMap<Processor, Timeline>,
+    /// Latest event end time seen (the virtual "now").
+    pub horizon_ms: f64,
+}
+
+impl SocSim {
+    pub fn new(processors: &[Processor]) -> Self {
+        Self {
+            timelines: processors.iter().map(|&p| (p, Timeline::default())).collect(),
+            horizon_ms: 0.0,
+        }
+    }
+
+    /// Book `dur_ms` of work on `proc`, not starting before `ready_ms`.
+    /// Returns (start, end) in virtual ms.
+    pub fn book(&mut self, proc: Processor, ready_ms: f64, dur_ms: f64) -> (f64, f64) {
+        let t = self
+            .timelines
+            .get_mut(&proc)
+            .unwrap_or_else(|| panic!("processor {proc:?} not on this platform"));
+        let start = ready_ms.max(t.busy_until_ms);
+        let end = start + dur_ms;
+        t.busy_until_ms = end;
+        t.total_busy_ms += dur_ms;
+        t.jobs += 1;
+        if end > self.horizon_ms {
+            self.horizon_ms = end;
+        }
+        (start, end)
+    }
+
+    /// Earliest time `proc` could start new work.
+    pub fn available_at(&self, proc: Processor) -> f64 {
+        self.timelines[&proc].busy_until_ms
+    }
+
+    pub fn timeline(&self, proc: Processor) -> &Timeline {
+        &self.timelines[&proc]
+    }
+
+    /// Utilization of each processor over the busy horizon.
+    pub fn utilization(&self) -> BTreeMap<Processor, f64> {
+        let h = self.horizon_ms.max(1e-9);
+        self.timelines
+            .iter()
+            .map(|(&p, t)| (p, t.total_busy_ms / h))
+            .collect()
+    }
+
+    pub fn reset(&mut self) {
+        for t in self.timelines.values_mut() {
+            *t = Timeline::default();
+        }
+        self.horizon_ms = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use Processor::*;
+
+    #[test]
+    fn fifo_serialization_on_one_processor() {
+        let mut sim = SocSim::new(&[Cpu, Gpu]);
+        let (s1, e1) = sim.book(Cpu, 0.0, 10.0);
+        let (s2, e2) = sim.book(Cpu, 0.0, 5.0);
+        assert_eq!((s1, e1), (0.0, 10.0));
+        assert_eq!((s2, e2), (10.0, 15.0)); // queued behind job 1
+        assert_eq!(sim.horizon_ms, 15.0);
+    }
+
+    #[test]
+    fn parallel_processors_overlap() {
+        let mut sim = SocSim::new(&[Cpu, Gpu]);
+        sim.book(Cpu, 0.0, 10.0);
+        let (s, e) = sim.book(Gpu, 0.0, 4.0);
+        assert_eq!((s, e), (0.0, 4.0));
+    }
+
+    #[test]
+    fn ready_time_respected() {
+        let mut sim = SocSim::new(&[Cpu]);
+        let (s, _) = sim.book(Cpu, 7.5, 1.0);
+        assert_eq!(s, 7.5);
+    }
+
+    #[test]
+    fn monotone_horizon_and_utilization() {
+        let mut sim = SocSim::new(&[Cpu, Gpu]);
+        sim.book(Cpu, 0.0, 8.0);
+        sim.book(Gpu, 2.0, 8.0);
+        let u = sim.utilization();
+        assert!((u[&Cpu] - 0.8).abs() < 1e-9);
+        assert!((u[&Gpu] - 0.8).abs() < 1e-9);
+        assert_eq!(sim.horizon_ms, 10.0);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut sim = SocSim::new(&[Cpu]);
+        sim.book(Cpu, 0.0, 3.0);
+        sim.reset();
+        assert_eq!(sim.horizon_ms, 0.0);
+        assert_eq!(sim.available_at(Cpu), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_processor_panics() {
+        let mut sim = SocSim::new(&[Cpu]);
+        sim.book(Npu, 0.0, 1.0);
+    }
+}

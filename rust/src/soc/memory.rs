@@ -1,0 +1,248 @@
+//! Unified-memory pool accounting for loaded subgraph weights.
+//!
+//! On the paper's SoCs all processors share one memory space (§5.4), so
+//! a single pool tracks which (task, variant, subgraph) weight blobs are
+//! resident. The preloader (Alg. 2) fills it up-front under a budget;
+//! the coordinator charges load latency for misses at switch time.
+
+use std::collections::BTreeMap;
+
+/// Identity of one loadable unit: subgraph j of variant i of a task.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlobId {
+    pub task: String,
+    pub variant: usize,
+    pub subgraph: usize,
+}
+
+impl BlobId {
+    pub fn new(task: &str, variant: usize, subgraph: usize) -> Self {
+        Self { task: task.to_string(), variant, subgraph }
+    }
+}
+
+/// Accounting summary (paper Fig. 5b's memory breakdown).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MemoryBreakdown {
+    pub active_bytes: u64,
+    pub preloaded_bytes: u64,
+    pub other_bytes: u64,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> u64 {
+        self.active_bytes + self.preloaded_bytes + self.other_bytes
+    }
+}
+
+/// The unified weight pool.
+#[derive(Clone, Debug)]
+pub struct MemoryPool {
+    capacity: u64,
+    resident: BTreeMap<BlobId, u64>,
+    /// Blobs currently used by the active (selected) variants.
+    active: BTreeMap<BlobId, bool>,
+    /// Fixed overhead (runtime, activations, engine state).
+    pub other_bytes: u64,
+    /// Counters.
+    pub loads: u64,
+    pub evictions: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl MemoryPool {
+    pub fn new(capacity: u64) -> Self {
+        Self {
+            capacity,
+            resident: BTreeMap::new(),
+            active: BTreeMap::new(),
+            other_bytes: 0,
+            loads: 0,
+            evictions: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.resident.values().sum::<u64>() + self.other_bytes
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity.saturating_sub(self.used())
+    }
+
+    pub fn contains(&self, id: &BlobId) -> bool {
+        self.resident.contains_key(id)
+    }
+
+    pub fn n_resident(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Load a blob; returns false (and loads nothing) if it won't fit.
+    pub fn load(&mut self, id: BlobId, bytes: u64) -> bool {
+        if self.resident.contains_key(&id) {
+            return true;
+        }
+        if self.used() + bytes > self.capacity {
+            return false;
+        }
+        self.resident.insert(id, bytes);
+        self.loads += 1;
+        true
+    }
+
+    /// Evict a blob; returns bytes freed.
+    pub fn evict(&mut self, id: &BlobId) -> u64 {
+        let freed = self.resident.remove(id).unwrap_or(0);
+        if freed > 0 {
+            self.evictions += 1;
+            self.active.remove(id);
+        }
+        freed
+    }
+
+    /// Evict non-active blobs (smallest first) until `bytes` fit.
+    /// Returns true on success.
+    pub fn make_room(&mut self, bytes: u64) -> bool {
+        if self.used() + bytes <= self.capacity {
+            return true;
+        }
+        let mut victims: Vec<(BlobId, u64)> = self
+            .resident
+            .iter()
+            .filter(|(id, _)| !self.active.get(id).copied().unwrap_or(false))
+            .map(|(id, &b)| (id.clone(), b))
+            .collect();
+        victims.sort_by_key(|(_, b)| *b);
+        for (id, _) in victims {
+            if self.used() + bytes <= self.capacity {
+                break;
+            }
+            self.evict(&id);
+        }
+        self.used() + bytes <= self.capacity
+    }
+
+    /// Record a lookup: hit if resident. Returns whether it was a hit.
+    pub fn touch(&mut self, id: &BlobId) -> bool {
+        if self.resident.contains_key(id) {
+            self.hits += 1;
+            true
+        } else {
+            self.misses += 1;
+            false
+        }
+    }
+
+    pub fn set_active(&mut self, id: &BlobId, active: bool) {
+        if self.resident.contains_key(id) {
+            self.active.insert(id.clone(), active);
+        }
+    }
+
+    pub fn clear_active(&mut self) {
+        self.active.clear();
+    }
+
+    pub fn breakdown(&self) -> MemoryBreakdown {
+        let mut active = 0u64;
+        let mut preloaded = 0u64;
+        for (id, &bytes) in &self.resident {
+            if self.active.get(id).copied().unwrap_or(false) {
+                active += bytes;
+            } else {
+                preloaded += bytes;
+            }
+        }
+        MemoryBreakdown {
+            active_bytes: active,
+            preloaded_bytes: preloaded,
+            other_bytes: self.other_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(v: usize, sg: usize) -> BlobId {
+        BlobId::new("t", v, sg)
+    }
+
+    #[test]
+    fn load_respects_capacity() {
+        let mut pool = MemoryPool::new(100);
+        assert!(pool.load(id(0, 0), 60));
+        assert!(!pool.load(id(1, 0), 60));
+        assert!(pool.load(id(1, 1), 40));
+        assert_eq!(pool.used(), 100);
+        assert_eq!(pool.free(), 0);
+    }
+
+    #[test]
+    fn double_load_is_idempotent() {
+        let mut pool = MemoryPool::new(100);
+        assert!(pool.load(id(0, 0), 60));
+        assert!(pool.load(id(0, 0), 60));
+        assert_eq!(pool.used(), 60);
+        assert_eq!(pool.loads, 1);
+    }
+
+    #[test]
+    fn evict_frees() {
+        let mut pool = MemoryPool::new(100);
+        pool.load(id(0, 0), 70);
+        assert_eq!(pool.evict(&id(0, 0)), 70);
+        assert_eq!(pool.used(), 0);
+        assert!(pool.load(id(1, 0), 100));
+    }
+
+    #[test]
+    fn make_room_spares_active() {
+        let mut pool = MemoryPool::new(100);
+        pool.load(id(0, 0), 50);
+        pool.load(id(1, 0), 40);
+        pool.set_active(&id(0, 0), true);
+        assert!(pool.make_room(50));
+        assert!(pool.contains(&id(0, 0)), "active blob survives");
+        assert!(!pool.contains(&id(1, 0)), "idle blob evicted");
+    }
+
+    #[test]
+    fn make_room_fails_when_active_pins_everything() {
+        let mut pool = MemoryPool::new(100);
+        pool.load(id(0, 0), 90);
+        pool.set_active(&id(0, 0), true);
+        assert!(!pool.make_room(50));
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut pool = MemoryPool::new(100);
+        pool.load(id(0, 0), 10);
+        assert!(pool.touch(&id(0, 0)));
+        assert!(!pool.touch(&id(9, 9)));
+        assert_eq!((pool.hits, pool.misses), (1, 1));
+    }
+
+    #[test]
+    fn breakdown_splits_active_and_preloaded() {
+        let mut pool = MemoryPool::new(1000);
+        pool.other_bytes = 5;
+        pool.load(id(0, 0), 100);
+        pool.load(id(1, 0), 200);
+        pool.set_active(&id(0, 0), true);
+        let b = pool.breakdown();
+        assert_eq!(b.active_bytes, 100);
+        assert_eq!(b.preloaded_bytes, 200);
+        assert_eq!(b.total(), 305);
+    }
+}

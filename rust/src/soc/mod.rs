@@ -1,0 +1,18 @@
+//! Simulated heterogeneous edge SoC substrate.
+//!
+//! The paper's testbeds (Intel Ultra 7/5 with CPU+GPU+NPU, Jetson AGX
+//! Orin with CPU+GPU) are hardware-gated; this module is the calibrated
+//! stand-in (DESIGN.md §Substitutions): platform profiles project
+//! *measured* PJRT-CPU latencies onto per-processor timing, a
+//! discrete-event clock books pipelined subgraph executions, and a
+//! unified-memory pool accounts for loaded weights.
+
+pub mod clock;
+pub mod latency;
+pub mod memory;
+pub mod profile;
+
+pub use clock::SocSim;
+pub use latency::{BaseLatencies, LatencyModel};
+pub use memory::{BlobId, MemoryBreakdown, MemoryPool};
+pub use profile::{order_label, Platform, Processor, ProcessorModel};

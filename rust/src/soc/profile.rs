@@ -1,0 +1,363 @@
+//! Platform profiles: the three evaluation SoCs of paper Table 3.
+//!
+//! Substitution note (DESIGN.md §Substitutions): the real devices are
+//! hardware-gated, so each platform is a *calibrated performance model*
+//! over the measured PJRT-CPU subgraph latencies. The scale factors
+//! encode the qualitative structure the paper's Table 2 / Fig. 13 rest
+//! on — NPUs love INT8 and structured sparsity but can't accelerate
+//! unstructured pruning; GPUs are the dense-FP throughput kings;
+//! CPU sparse engines (DeepSparse-style) reward unstructured pruning —
+//! so the *shape* of every downstream result (best order varies by
+//! variant mix, placement matters up to 2×) is preserved.
+
+use anyhow::{bail, Result};
+
+use crate::zoo::{VariantSpec, VariantType};
+
+/// A processor class on an edge SoC.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Processor {
+    Cpu,
+    Gpu,
+    Npu,
+}
+
+impl Processor {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Cpu => "CPU",
+            Self::Gpu => "GPU",
+            Self::Npu => "NPU",
+        }
+    }
+
+    /// Dense index (CPU=0, GPU=1, NPU=2) for table-backed lookups.
+    #[inline]
+    pub fn idx(&self) -> usize {
+        match self {
+            Self::Cpu => 0,
+            Self::Gpu => 1,
+            Self::Npu => 2,
+        }
+    }
+
+    /// One-letter tag for paper-style order labels ("C-G-N").
+    pub fn tag(&self) -> char {
+        match self {
+            Self::Cpu => 'C',
+            Self::Gpu => 'G',
+            Self::Npu => 'N',
+        }
+    }
+}
+
+/// Format a placement order as the paper does: "C-G-N".
+pub fn order_label(order: &[Processor]) -> String {
+    order
+        .iter()
+        .map(|p| p.tag().to_string())
+        .collect::<Vec<_>>()
+        .join("-")
+}
+
+/// Per-processor cost coefficients.
+#[derive(Clone, Debug)]
+pub struct ProcessorModel {
+    pub proc: Processor,
+    /// Dense-FP32 latency multiplier vs the measured PJRT-CPU baseline.
+    pub dense_scale: f64,
+    /// Additional multiplier for FP16 weights.
+    pub fp16_factor: f64,
+    /// Additional multiplier for INT8 (quant path).
+    pub int8_factor: f64,
+    /// Unstructured (masked) support: `None` = unsupported on this
+    /// processor; `Some(gain)` = latency × (1 − gain·sparsity).
+    pub unstructured_gain: Option<f64>,
+    /// Structured (block-sparse) channel-skip gain: × (1 − gain·sparsity).
+    pub structured_gain: f64,
+    /// Model compile cost per MiB of weights (ms) — paper Fig. 5a says
+    /// compilation ≈ 23.7× inference.
+    pub compile_ms_per_mib: f64,
+    /// Weight load (disk → device pool) cost per MiB (ms) — ≈ 3× infer.
+    pub load_ms_per_mib: f64,
+}
+
+impl ProcessorModel {
+    /// Latency multiplier for a variant on this processor.
+    /// Returns `None` if the variant type is unsupported here.
+    pub fn scale_for(&self, spec: &VariantSpec) -> Option<f64> {
+        let base = self.dense_scale;
+        Some(match spec.vtype {
+            VariantType::Dense => base,
+            VariantType::Fp16 => base * self.fp16_factor,
+            VariantType::Int8 => base * self.int8_factor,
+            VariantType::Unstructured => {
+                let gain = self.unstructured_gain?;
+                base * (1.0 - gain * spec.sparsity).max(0.05)
+            }
+            VariantType::Structured => {
+                base * (1.0 - self.structured_gain * spec.sparsity).max(0.05)
+            }
+        })
+    }
+}
+
+/// An evaluation platform (paper Table 3).
+#[derive(Clone, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub processors: Vec<ProcessorModel>,
+    /// Device memory pool available to model weights (unified memory).
+    pub memory_bytes: u64,
+    /// Fraction of per-hop latency added for inter-processor activation
+    /// transfer + format conversion (paper §5.4 measures ≈ 5 % total).
+    pub interproc_overhead: f64,
+    /// DVFS frequency multiplier (1.0 = nominal; > 1 = throttled).
+    pub dvfs_slowdown: f64,
+    /// Co-execution slowdown coefficient κ: running N DNNs *concurrently*
+    /// on one processor (the NP systems' mode) costs ×(1 + κ·(N−1)) per
+    /// inference — memory-bandwidth and scheduler contention, the effect
+    /// Hetero²Pipe [45] measures and the paper's §1 cites. Pipelined
+    /// subgraph execution time-multiplexes exclusively and does not pay it.
+    pub coexec_slowdown: f64,
+}
+
+impl Platform {
+    pub fn processor_list(&self) -> Vec<Processor> {
+        self.processors.iter().map(|m| m.proc).collect()
+    }
+
+    pub fn model(&self, p: Processor) -> Option<&ProcessorModel> {
+        self.processors.iter().find(|m| m.proc == p)
+    }
+
+    pub fn n_processors(&self) -> usize {
+        self.processors.len()
+    }
+
+    /// Desktop: Intel Core Ultra 7 265K — 20-core CPU, 4-Xe GPU, AI Boost NPU.
+    pub fn desktop() -> Platform {
+        Platform {
+            name: "desktop",
+            description: "Intel Core Ultra 7 265K (x86 20-core CPU, 4-Xe GPU, AI Boost NPU)",
+            processors: vec![
+                ProcessorModel {
+                    proc: Processor::Cpu,
+                    dense_scale: 1.0,
+                    fp16_factor: 0.95,
+                    int8_factor: 0.72,
+                    // DeepSparse-style sparse engine on CPU.
+                    unstructured_gain: Some(0.75),
+                    structured_gain: 0.55,
+                    compile_ms_per_mib: 12.0,
+                    load_ms_per_mib: 1.5,
+                },
+                ProcessorModel {
+                    proc: Processor::Gpu,
+                    dense_scale: 0.48,
+                    fp16_factor: 0.62,
+                    int8_factor: 0.80,
+                    // GPUs gain little from zero-masking.
+                    unstructured_gain: Some(0.10),
+                    structured_gain: 0.60,
+                    compile_ms_per_mib: 17.0,
+                    load_ms_per_mib: 2.0,
+                },
+                ProcessorModel {
+                    proc: Processor::Npu,
+                    dense_scale: 0.85,
+                    fp16_factor: 0.55,
+                    int8_factor: 0.45,
+                    // Intel AI Boost runs masked models but w/o gain.
+                    unstructured_gain: Some(0.0),
+                    structured_gain: 0.65,
+                    compile_ms_per_mib: 21.0,
+                    load_ms_per_mib: 2.5,
+                },
+            ],
+            memory_bytes: 8 * 1024 * 1024 * 1024,
+            interproc_overhead: 0.075,
+            dvfs_slowdown: 1.0,
+            coexec_slowdown: 0.30,
+        }
+    }
+
+    /// Laptop: Intel Core Ultra 5 135U — 12-core CPU, 4-Xe GPU, AI Boost NPU.
+    pub fn laptop() -> Platform {
+        Platform {
+            name: "laptop",
+            description: "Intel Core Ultra 5 135U (x86 12-core CPU, 4-Xe GPU, AI Boost NPU)",
+            processors: vec![
+                ProcessorModel {
+                    proc: Processor::Cpu,
+                    dense_scale: 1.55,
+                    fp16_factor: 0.95,
+                    int8_factor: 0.74,
+                    unstructured_gain: Some(0.72),
+                    structured_gain: 0.55,
+                    compile_ms_per_mib: 16.0,
+                    load_ms_per_mib: 2.0,
+                },
+                ProcessorModel {
+                    proc: Processor::Gpu,
+                    dense_scale: 0.66,
+                    fp16_factor: 0.62,
+                    int8_factor: 0.82,
+                    unstructured_gain: Some(0.10),
+                    structured_gain: 0.60,
+                    compile_ms_per_mib: 22.0,
+                    load_ms_per_mib: 2.7,
+                },
+                ProcessorModel {
+                    proc: Processor::Npu,
+                    dense_scale: 1.05,
+                    fp16_factor: 0.56,
+                    int8_factor: 0.47,
+                    unstructured_gain: Some(0.0),
+                    structured_gain: 0.65,
+                    compile_ms_per_mib: 27.0,
+                    load_ms_per_mib: 3.2,
+                },
+            ],
+            memory_bytes: 4 * 1024 * 1024 * 1024,
+            interproc_overhead: 0.080,
+            dvfs_slowdown: 1.0,
+            coexec_slowdown: 0.35,
+        }
+    }
+
+    /// NVIDIA Jetson AGX Orin (MAXN): 12-core ARM CPU + Ampere GPU, no NPU.
+    /// Its zoo (Table 5) also has no unstructured variants.
+    pub fn orin() -> Platform {
+        Platform {
+            name: "orin",
+            description: "NVIDIA Jetson AGX Orin MAXN (ARM 12-core CPU, 2048-core Ampere GPU)",
+            processors: vec![
+                ProcessorModel {
+                    proc: Processor::Cpu,
+                    dense_scale: 1.25,
+                    fp16_factor: 0.97,
+                    int8_factor: 0.80,
+                    // No sparse-engine runtime for ARM in this stack.
+                    unstructured_gain: None,
+                    structured_gain: 0.50,
+                    compile_ms_per_mib: 20.0,
+                    load_ms_per_mib: 2.3,
+                },
+                ProcessorModel {
+                    proc: Processor::Gpu,
+                    dense_scale: 0.55,
+                    fp16_factor: 0.55,
+                    int8_factor: 0.62,
+                    unstructured_gain: None,
+                    structured_gain: 0.62,
+                    compile_ms_per_mib: 28.0,
+                    load_ms_per_mib: 1.7,
+                },
+            ],
+            memory_bytes: 32 * 1024 * 1024 * 1024,
+            interproc_overhead: 0.070,
+            dvfs_slowdown: 1.0,
+            coexec_slowdown: 0.40,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Result<Platform> {
+        Ok(match name {
+            "desktop" => Self::desktop(),
+            "laptop" => Self::laptop(),
+            "orin" => Self::orin(),
+            other => bail!("unknown platform {other:?} (desktop|laptop|orin)"),
+        })
+    }
+
+    pub fn all() -> Vec<Platform> {
+        vec![Self::desktop(), Self::laptop(), Self::orin()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::zoo::{KernelPath, Precision};
+
+    fn spec(vtype: VariantType, sparsity: f64) -> VariantSpec {
+        VariantSpec {
+            name: "t".into(),
+            vtype,
+            sparsity,
+            kernel_path: KernelPath::Dense,
+            precision: Precision::Fp32,
+        }
+    }
+
+    #[test]
+    fn table3_processor_counts() {
+        assert_eq!(Platform::desktop().n_processors(), 3);
+        assert_eq!(Platform::laptop().n_processors(), 3);
+        assert_eq!(Platform::orin().n_processors(), 2); // no NPU
+    }
+
+    #[test]
+    fn npu_loves_int8() {
+        let d = Platform::desktop();
+        let npu = d.model(Processor::Npu).unwrap();
+        let int8 = npu.scale_for(&spec(VariantType::Int8, 0.0)).unwrap();
+        let dense = npu.scale_for(&spec(VariantType::Dense, 0.0)).unwrap();
+        assert!(int8 < 0.5 * dense, "NPU INT8 should be ≥2× dense speed");
+    }
+
+    #[test]
+    fn gpu_fastest_dense() {
+        let d = Platform::desktop();
+        let g = d.model(Processor::Gpu).unwrap().scale_for(&spec(VariantType::Dense, 0.0)).unwrap();
+        let c = d.model(Processor::Cpu).unwrap().scale_for(&spec(VariantType::Dense, 0.0)).unwrap();
+        let n = d.model(Processor::Npu).unwrap().scale_for(&spec(VariantType::Dense, 0.0)).unwrap();
+        assert!(g < c && g < n);
+    }
+
+    #[test]
+    fn cpu_rewards_unstructured_sparsity() {
+        let d = Platform::desktop();
+        let cpu = d.model(Processor::Cpu).unwrap();
+        let s90 = cpu.scale_for(&spec(VariantType::Unstructured, 0.9)).unwrap();
+        let s65 = cpu.scale_for(&spec(VariantType::Unstructured, 0.65)).unwrap();
+        let dense = cpu.scale_for(&spec(VariantType::Dense, 0.0)).unwrap();
+        assert!(s90 < s65 && s65 < dense);
+    }
+
+    #[test]
+    fn orin_rejects_unstructured() {
+        let o = Platform::orin();
+        for m in &o.processors {
+            assert!(m.scale_for(&spec(VariantType::Unstructured, 0.8)).is_none());
+        }
+    }
+
+    #[test]
+    fn structured_monotone_in_sparsity() {
+        let d = Platform::laptop();
+        for m in &d.processors {
+            let lo = m.scale_for(&spec(VariantType::Structured, 0.2)).unwrap();
+            let hi = m.scale_for(&spec(VariantType::Structured, 0.55)).unwrap();
+            assert!(hi < lo);
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for p in Platform::all() {
+            assert_eq!(Platform::by_name(p.name).unwrap().name, p.name);
+        }
+        assert!(Platform::by_name("phone").is_err());
+    }
+
+    #[test]
+    fn order_labels() {
+        use Processor::*;
+        assert_eq!(order_label(&[Npu, Gpu, Cpu]), "N-G-C");
+        assert_eq!(order_label(&[Gpu, Cpu]), "G-C");
+    }
+}

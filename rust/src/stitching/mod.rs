@@ -1,0 +1,199 @@
+//! Model stitching (paper §3.1): the V^S stitched-variant space.
+//!
+//! A stitched variant `ṽ^{t,k}` is a composition `(i₁, …, i_S)` — at
+//! subgraph position j it reuses subgraph `s_j^{t,i_j}` of original
+//! variant i_j (Eq. 1). Because every variant of a task shares the
+//! layer-aligned interface shapes, any composition is shape-safe; no
+//! retraining, no new weights — the stitched space is purely
+//! combinatorial over existing subgraphs.
+//!
+//! The canonical index is the base-V big-endian digit encoding
+//! `k = ((i₁·V)+i₂)·V+i₃` (S=3 shown; general below), matching the
+//! python oracle exporter (`aot.py`).
+
+use crate::zoo::{TaskZoo, VariantType};
+
+/// A stitched variant: which original variant supplies each subgraph.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Composition(pub Vec<usize>);
+
+impl Composition {
+    /// Decode from the canonical base-V index.
+    pub fn from_index(k: usize, v: usize, s: usize) -> Composition {
+        assert!(v > 0 && s > 0);
+        let mut digits = vec![0usize; s];
+        let mut rem = k;
+        for j in (0..s).rev() {
+            digits[j] = rem % v;
+            rem /= v;
+        }
+        assert_eq!(rem, 0, "index {k} out of range for V={v}, S={s}");
+        Composition(digits)
+    }
+
+    /// Encode to the canonical base-V index.
+    pub fn to_index(&self, v: usize) -> usize {
+        self.0.iter().fold(0, |acc, &d| {
+            debug_assert!(d < v);
+            acc * v + d
+        })
+    }
+
+    /// Is this a pure (non-stitched) variant — all subgraphs from one i?
+    pub fn is_pure(&self) -> bool {
+        self.0.windows(2).all(|w| w[0] == w[1])
+    }
+
+    pub fn subgraphs(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Paper-style label like "P-Q-D" from the zoo's variant types.
+    pub fn label(&self, zoo: &TaskZoo) -> String {
+        self.0
+            .iter()
+            .map(|&i| zoo.variants[i].spec.vtype.tag().to_string())
+            .collect::<Vec<_>>()
+            .join("-")
+    }
+
+    /// Long label like "unstr80-int8-dense".
+    pub fn name(&self, zoo: &TaskZoo) -> String {
+        self.0
+            .iter()
+            .map(|&i| zoo.variants[i].spec.name.clone())
+            .collect::<Vec<_>>()
+            .join("-")
+    }
+}
+
+/// The stitched-variant space of one task.
+#[derive(Clone, Copy, Debug)]
+pub struct StitchSpace {
+    /// V — original variants per task.
+    pub n_variants: usize,
+    /// S — subgraph positions.
+    pub n_subgraphs: usize,
+}
+
+impl StitchSpace {
+    pub fn new(n_variants: usize, n_subgraphs: usize) -> Self {
+        assert!(n_variants > 0 && n_subgraphs > 0);
+        Self { n_variants, n_subgraphs }
+    }
+
+    pub fn for_task(zoo: &TaskZoo) -> Self {
+        Self::new(zoo.n_variants(), zoo.iface.len() - 1)
+    }
+
+    /// |space| = V^S.
+    pub fn len(&self) -> usize {
+        self.n_variants.pow(self.n_subgraphs as u32)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // V ≥ 1 and S ≥ 1 always yield at least one composition
+    }
+
+    pub fn composition(&self, k: usize) -> Composition {
+        Composition::from_index(k, self.n_variants, self.n_subgraphs)
+    }
+
+    pub fn index(&self, c: &Composition) -> usize {
+        assert_eq!(c.subgraphs(), self.n_subgraphs);
+        c.to_index(self.n_variants)
+    }
+
+    /// Index of the pure composition of original variant i.
+    pub fn pure_index(&self, i: usize) -> usize {
+        self.index(&Composition(vec![i; self.n_subgraphs]))
+    }
+
+    /// Iterate all V^S compositions in canonical order.
+    pub fn iter(&self) -> impl Iterator<Item = Composition> + '_ {
+        (0..self.len()).map(move |k| self.composition(k))
+    }
+
+    /// How many compositions contain original-variant subgraph (j, i)?
+    /// (V^{S-1} — each other position free; used by hotness sanity tests.)
+    pub fn occurrences_per_subgraph(&self) -> usize {
+        self.n_variants.pow(self.n_subgraphs as u32 - 1)
+    }
+}
+
+/// Mixing profile of a composition over variant *types* — e.g. how many
+/// subgraph positions come from pruned vs quantized vs dense variants.
+/// Feeds the accuracy estimator's feature vector.
+pub fn type_histogram(c: &Composition, zoo: &TaskZoo) -> [usize; 5] {
+    let mut h = [0usize; 5];
+    for &i in &c.0 {
+        let idx = match zoo.variants[i].spec.vtype {
+            VariantType::Dense => 0,
+            VariantType::Fp16 => 1,
+            VariantType::Int8 => 2,
+            VariantType::Unstructured => 3,
+            VariantType::Structured => 4,
+        };
+        h[idx] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip_exhaustive() {
+        let sp = StitchSpace::new(10, 3);
+        assert_eq!(sp.len(), 1000);
+        for k in 0..sp.len() {
+            let c = sp.composition(k);
+            assert_eq!(sp.index(&c), k);
+        }
+    }
+
+    #[test]
+    fn canonical_order_matches_python_oracle() {
+        // aot.py: k = ((i1*V)+i2)*V+i3
+        let sp = StitchSpace::new(10, 3);
+        let c = Composition(vec![3, 1, 4]);
+        assert_eq!(sp.index(&c), (3 * 10 + 1) * 10 + 4);
+        assert_eq!(sp.composition(314), c);
+    }
+
+    #[test]
+    fn pure_detection() {
+        assert!(Composition(vec![2, 2, 2]).is_pure());
+        assert!(!Composition(vec![2, 2, 3]).is_pure());
+        assert!(Composition(vec![5]).is_pure());
+    }
+
+    #[test]
+    fn pure_index_diagonal() {
+        let sp = StitchSpace::new(10, 3);
+        assert_eq!(sp.pure_index(0), 0);
+        assert_eq!(sp.pure_index(7), (7 * 10 + 7) * 10 + 7);
+    }
+
+    #[test]
+    fn iterator_covers_space_once() {
+        let sp = StitchSpace::new(3, 2);
+        let all: Vec<_> = sp.iter().collect();
+        assert_eq!(all.len(), 9);
+        let uniq: std::collections::HashSet<_> = all.iter().cloned().collect();
+        assert_eq!(uniq.len(), 9);
+    }
+
+    #[test]
+    fn occurrences_per_subgraph_formula() {
+        assert_eq!(StitchSpace::new(10, 3).occurrences_per_subgraph(), 100);
+        assert_eq!(StitchSpace::new(4, 2).occurrences_per_subgraph(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_index_panics() {
+        Composition::from_index(1000, 10, 3);
+    }
+}

@@ -1,0 +1,54 @@
+//! Shared utilities: deterministic RNG, statistics, permutations.
+
+pub mod perm;
+pub mod rng;
+pub mod stats;
+
+pub use perm::{factorial, permutations};
+pub use rng::Rng;
+
+/// Format a byte count human-readably (for memory reports).
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in ms with adaptive precision.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 1000.0 {
+        format!("{:.2} s", ms / 1000.0)
+    } else if ms >= 1.0 {
+        format!("{ms:.2} ms")
+    } else {
+        format!("{:.1} µs", ms * 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn ms_formatting() {
+        assert_eq!(fmt_ms(1500.0), "1.50 s");
+        assert_eq!(fmt_ms(12.345), "12.35 ms");
+        assert_eq!(fmt_ms(0.5), "500.0 µs");
+    }
+}

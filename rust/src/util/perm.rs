@@ -1,0 +1,66 @@
+//! Permutations of processor sets — the Ω = P! placement-order space.
+
+/// All permutations of `items`, in lexicographic order of indices
+/// (Heap's algorithm would be faster but order-stability matters for
+/// reproducible experiment tables).
+pub fn permutations<T: Clone>(items: &[T]) -> Vec<Vec<T>> {
+    let n = items.len();
+    if n == 0 {
+        return vec![vec![]];
+    }
+    let mut out = Vec::with_capacity(factorial(n));
+    let mut idx: Vec<usize> = (0..n).collect();
+    loop {
+        out.push(idx.iter().map(|&i| items[i].clone()).collect());
+        // next lexicographic permutation
+        let Some(i) = (0..n - 1).rev().find(|&i| idx[i] < idx[i + 1]) else {
+            break;
+        };
+        let j = (i + 1..n).rev().find(|&j| idx[j] > idx[i]).unwrap();
+        idx.swap(i, j);
+        idx[i + 1..].reverse();
+    }
+    out
+}
+
+pub fn factorial(n: usize) -> usize {
+    (1..=n).product::<usize>().max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_factorial() {
+        for n in 0..6 {
+            let items: Vec<usize> = (0..n).collect();
+            assert_eq!(permutations(&items).len(), factorial(n));
+        }
+    }
+
+    #[test]
+    fn three_items_lexicographic() {
+        let p = permutations(&['a', 'b', 'c']);
+        assert_eq!(p[0], vec!['a', 'b', 'c']);
+        assert_eq!(p[5], vec!['c', 'b', 'a']);
+        assert_eq!(p.len(), 6);
+    }
+
+    #[test]
+    fn all_unique() {
+        let p = permutations(&[0, 1, 2, 3]);
+        let mut seen = std::collections::HashSet::new();
+        for perm in &p {
+            assert!(seen.insert(perm.clone()));
+        }
+    }
+
+    #[test]
+    fn factorial_values() {
+        assert_eq!(factorial(0), 1);
+        assert_eq!(factorial(1), 1);
+        assert_eq!(factorial(3), 6);
+        assert_eq!(factorial(5), 120);
+    }
+}

@@ -1,0 +1,175 @@
+//! Small statistics helpers shared by the profiler, metrics, and benches.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0.0 for fewer than two samples.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Linear-interpolated percentile, q in [0, 100]. Sorts a copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Mean absolute error between predictions and ground truth.
+pub fn mae(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t).abs())
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// Mean absolute percentage error (%). Skips zero-truth entries.
+pub fn mape(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (p, t) in pred.iter().zip(truth) {
+        if t.abs() > 1e-12 {
+            acc += ((p - t) / t).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * acc / n as f64
+    }
+}
+
+/// Coefficient of determination R².
+pub fn r2(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let m = mean(truth);
+    let ss_res: f64 = pred.iter().zip(truth).map(|(p, t)| (t - p).powi(2)).sum();
+    let ss_tot: f64 = truth.iter().map(|t| (t - m).powi(2)).sum();
+    if ss_tot == 0.0 {
+        if ss_res == 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Top-K recall: fraction of the predicted top-K whose *true* value
+/// ties or beats the K-th best true value (the paper's Fig. 7a metric).
+/// Tie-tolerant: measured accuracies are quantized (multiples of
+/// 1/n_eval), so many variants share the K-th value and any of them is
+/// a correct retrieval.
+pub fn top_k_recall(pred: &[f64], truth: &[f64], k: usize) -> f64 {
+    top_k_recall_eps(pred, truth, k, 1e-12)
+}
+
+/// `top_k_recall` with an explicit tie margin `eps`: a retrieved item
+/// counts if its true value is within `eps` of the K-th best. Use the
+/// measurement quantum (1/n_eval for accuracies measured on n_eval
+/// samples) — ranking below measurement resolution is noise.
+pub fn top_k_recall_eps(pred: &[f64], truth: &[f64], k: usize, eps: f64) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if k == 0 || pred.is_empty() {
+        return 1.0;
+    }
+    let k = k.min(pred.len());
+    let top = |xs: &[f64]| -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+        idx.truncate(k);
+        idx
+    };
+    let pt = top(pred);
+    let kth_true = {
+        let mut t = truth.to_vec();
+        t.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        t[k - 1]
+    };
+    let hits = pt.iter().filter(|&&i| truth[i] >= kth_true - eps).count();
+    hits as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((variance(&[1.0, 2.0, 3.0]) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(median(&xs), 2.5);
+    }
+
+    #[test]
+    fn mae_mape() {
+        assert_eq!(mae(&[1.0, 2.0], &[2.0, 4.0]), 1.5);
+        assert!((mape(&[1.0, 2.0], &[2.0, 4.0]) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean() {
+        let t = [1.0, 2.0, 3.0];
+        assert!((r2(&t, &t) - 1.0).abs() < 1e-12);
+        assert!(r2(&[2.0, 2.0, 2.0], &t).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top_k_recall_basic() {
+        let truth = [0.9, 0.1, 0.8, 0.2];
+        let perfect = truth;
+        assert_eq!(top_k_recall(&perfect, &truth, 2), 1.0);
+        let inverted = [0.1, 0.9, 0.2, 0.8];
+        assert_eq!(top_k_recall(&inverted, &truth, 2), 0.0);
+    }
+
+    #[test]
+    fn top_k_recall_partial() {
+        let truth = [1.0, 0.9, 0.1, 0.0];
+        let pred = [1.0, 0.0, 0.9, 0.1];
+        assert_eq!(top_k_recall(&pred, &truth, 2), 0.5);
+    }
+}

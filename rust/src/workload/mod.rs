@@ -1,0 +1,309 @@
+//! Workload generation: SLO configurations and query streams.
+//!
+//! Mirrors the paper's §5.1 protocol exactly:
+//!
+//! * **SLO grid** — per task, measure the accuracy/latency ranges over
+//!   the *original* zoo variants, extend latency by ±20 % and accuracy by
+//!   ±2 pp, uniformly sample 5 accuracy × 5 latency points → 25
+//!   configurations (the Ψ of Eq. 7).
+//! * **C1–C8 ladder** (Fig. 3) — eight configurations of monotonically
+//!   increasing strictness sampled from the same extended ranges.
+//! * **Accuracy-/latency-guaranteed SLOs** (Appendix D, Figs. 15–16) —
+//!   pin one dimension to its extreme, sweep the other over 5 points.
+//! * **Arrival combinations** — all T! orders in which the tasks arrive
+//!   (24 for T=4); violation rates are averaged over them.
+
+use crate::soc::{LatencyModel, Platform, Processor};
+use crate::util::{permutations, Rng};
+use crate::zoo::{TaskZoo, Zoo};
+
+/// One SLO configuration σ for one task.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Slo {
+    /// Minimum acceptable accuracy (fraction).
+    pub min_accuracy: f64,
+    /// Maximum acceptable end-to-end latency (ms).
+    pub max_latency_ms: f64,
+}
+
+/// Observed accuracy/latency ranges of a task's original variants.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskRanges {
+    pub acc_min: f64,
+    pub acc_max: f64,
+    pub lat_min_ms: f64,
+    pub lat_max_ms: f64,
+}
+
+impl TaskRanges {
+    /// Measure ranges over the *original* (pure) variants: accuracy from
+    /// the manifest; latency as the best placement-order pure-variant
+    /// latency under the platform model (what profiling a zoo on-device
+    /// yields).
+    pub fn measure(tz: &TaskZoo, lm: &LatencyModel) -> TaskRanges {
+        let s = tz.iface.len() - 1;
+        let orders = placement_orders(&lm.platform, s);
+        let mut acc_min = f64::INFINITY;
+        let mut acc_max = f64::NEG_INFINITY;
+        let mut lat_min = f64::INFINITY;
+        let mut lat_max = f64::NEG_INFINITY;
+        for (i, v) in tz.variants.iter().enumerate() {
+            acc_min = acc_min.min(v.accuracy);
+            acc_max = acc_max.max(v.accuracy);
+            let comp = vec![i; s];
+            let best = orders
+                .iter()
+                .filter_map(|o| lm.stitched_ms(tz, &comp, o))
+                .fold(f64::INFINITY, f64::min);
+            if best.is_finite() {
+                lat_min = lat_min.min(best);
+                lat_max = lat_max.max(best);
+            }
+        }
+        TaskRanges { acc_min, acc_max, lat_min_ms: lat_min, lat_max_ms: lat_max }
+    }
+
+    /// The paper's extension: latency [80 % of min, 120 % of max],
+    /// accuracy [min − 2 pp, max + 2 pp].
+    pub fn extended(&self) -> TaskRanges {
+        TaskRanges {
+            acc_min: (self.acc_min - 0.02).max(0.0),
+            acc_max: (self.acc_max + 0.02).min(1.0),
+            lat_min_ms: 0.8 * self.lat_min_ms,
+            lat_max_ms: 1.2 * self.lat_max_ms,
+        }
+    }
+}
+
+fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    if n == 1 {
+        return vec![lo];
+    }
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+/// The 5×5 SLO grid of §5.1 (Ψ, |Ψ| = 25).
+pub fn slo_grid(ranges: &TaskRanges) -> Vec<Slo> {
+    let ext = ranges.extended();
+    let accs = linspace(ext.acc_min, ext.acc_max, 5);
+    let lats = linspace(ext.lat_min_ms, ext.lat_max_ms, 5);
+    let mut out = Vec::with_capacity(25);
+    for &a in &accs {
+        for &l in &lats {
+            out.push(Slo { min_accuracy: a, max_latency_ms: l });
+        }
+    }
+    out
+}
+
+/// The C1–C8 strictness ladder of Fig. 3: C1 is the laxest (lowest
+/// accuracy bound, highest latency bound), C8 the strictest.
+pub fn slo_ladder(ranges: &TaskRanges) -> Vec<Slo> {
+    let ext = ranges.extended();
+    let accs = linspace(ext.acc_min, ext.acc_max, 8);
+    let lats = linspace(ext.lat_max_ms, ext.lat_min_ms, 8);
+    accs.into_iter()
+        .zip(lats)
+        .map(|(a, l)| Slo { min_accuracy: a, max_latency_ms: l })
+        .collect()
+}
+
+/// Accuracy-guaranteed SLOs (Appendix D): accuracy pinned to the max
+/// observed, latency swept over 5 points of the *observed* range.
+pub fn accuracy_guaranteed(ranges: &TaskRanges) -> Vec<Slo> {
+    linspace(ranges.lat_min_ms, ranges.lat_max_ms, 5)
+        .into_iter()
+        .map(|l| Slo { min_accuracy: ranges.acc_max, max_latency_ms: l })
+        .collect()
+}
+
+/// Latency-guaranteed SLOs (Appendix D): latency pinned to the min
+/// observed, accuracy swept over 5 points.
+pub fn latency_guaranteed(ranges: &TaskRanges) -> Vec<Slo> {
+    linspace(ranges.acc_min, ranges.acc_max, 5)
+        .into_iter()
+        .map(|a| Slo { min_accuracy: a, max_latency_ms: ranges.lat_min_ms })
+        .collect()
+}
+
+/// All T! task-arrival orders (24 for the paper's four tasks).
+pub fn arrival_combinations(tasks: &[String]) -> Vec<Vec<String>> {
+    permutations(tasks)
+}
+
+/// One inference query in a stream.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub task: String,
+    /// Arrival time in virtual ms.
+    pub arrival_ms: f64,
+    pub id: u64,
+}
+
+/// Build the paper's closed-loop stream: each task issues `queries`
+/// back-to-back requests (batch 1); tasks start in `arrival_order`, each
+/// offset by `stagger_ms`.
+pub fn closed_loop_stream(
+    arrival_order: &[String],
+    queries: usize,
+    stagger_ms: f64,
+) -> Vec<Query> {
+    let mut out = Vec::with_capacity(arrival_order.len() * queries);
+    let mut id = 0u64;
+    for (slot, task) in arrival_order.iter().enumerate() {
+        for _ in 0..queries {
+            out.push(Query {
+                task: task.clone(),
+                arrival_ms: slot as f64 * stagger_ms,
+                id,
+            });
+            id += 1;
+        }
+    }
+    out
+}
+
+/// Open-loop Poisson stream at `rate_qps` per task for `horizon_ms`.
+pub fn poisson_stream(
+    tasks: &[String],
+    rate_qps: f64,
+    horizon_ms: f64,
+    rng: &mut Rng,
+) -> Vec<Query> {
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    for task in tasks {
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(rate_qps / 1000.0);
+            if t >= horizon_ms {
+                break;
+            }
+            out.push(Query { task: task.clone(), arrival_ms: t, id });
+            id += 1;
+        }
+    }
+    out.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
+    out
+}
+
+/// Convenience: per-task SLO grids for a whole zoo on a platform.
+pub fn grids_for_zoo(zoo: &Zoo, lm: &LatencyModel) -> Vec<(String, Vec<Slo>)> {
+    zoo.tasks
+        .values()
+        .map(|tz| (tz.name.clone(), slo_grid(&TaskRanges::measure(tz, lm))))
+        .collect()
+}
+
+/// The non-overlapping placement orders Ω (paper footnote 2): all P!
+/// permutations of the platform's processors, extended cyclically when
+/// the platform has fewer processors than subgraph positions (Orin:
+/// P=2 < S=3, giving the paper's "G-C" style orders).
+pub fn placement_orders(platform: &Platform, s: usize) -> Vec<Vec<Processor>> {
+    let procs = platform.processor_list();
+    let perms = permutations(&procs);
+    let mut out: Vec<Vec<Processor>> = Vec::new();
+    for p in perms {
+        let base = p.clone();
+        let mut o = p;
+        let mut i = 0usize;
+        while o.len() < s {
+            o.push(base[i % base.len()]);
+            i += 1;
+        }
+        o.truncate(s);
+        if !out.contains(&o) {
+            out.push(o);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ranges() -> TaskRanges {
+        TaskRanges { acc_min: 0.85, acc_max: 0.92, lat_min_ms: 50.0, lat_max_ms: 120.0 }
+    }
+
+    #[test]
+    fn extension_matches_paper_example() {
+        // §5.1's worked example: [85,92]% → [83,94]%, [50,120] → [40,144].
+        let e = ranges().extended();
+        assert!((e.acc_min - 0.83).abs() < 1e-9);
+        assert!((e.acc_max - 0.94).abs() < 1e-9);
+        assert!((e.lat_min_ms - 40.0).abs() < 1e-9);
+        assert!((e.lat_max_ms - 144.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grid_is_5x5_cartesian() {
+        let g = slo_grid(&ranges());
+        assert_eq!(g.len(), 25);
+        // Matches the paper's sampled endpoints.
+        assert!((g[0].min_accuracy - 0.83).abs() < 1e-9);
+        assert!((g[0].max_latency_ms - 40.0).abs() < 1e-9);
+        assert!((g[24].min_accuracy - 0.94).abs() < 1e-9);
+        assert!((g[24].max_latency_ms - 144.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ladder_strictness_monotone() {
+        let l = slo_ladder(&ranges());
+        assert_eq!(l.len(), 8);
+        for w in l.windows(2) {
+            assert!(w[1].min_accuracy > w[0].min_accuracy);
+            assert!(w[1].max_latency_ms < w[0].max_latency_ms);
+        }
+    }
+
+    #[test]
+    fn guaranteed_slos_pin_one_dimension() {
+        let a = accuracy_guaranteed(&ranges());
+        assert!(a.iter().all(|s| (s.min_accuracy - 0.92).abs() < 1e-9));
+        assert_eq!(a.len(), 5);
+        let l = latency_guaranteed(&ranges());
+        assert!(l.iter().all(|s| (s.max_latency_ms - 50.0).abs() < 1e-9));
+        // Appendix D example: accuracy thresholds 85..92 in 5 steps.
+        assert!((l[1].min_accuracy - 0.8675).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arrival_combinations_count() {
+        let tasks: Vec<String> =
+            ["a", "b", "c", "d"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(arrival_combinations(&tasks).len(), 24);
+    }
+
+    #[test]
+    fn closed_loop_counts() {
+        let order = vec!["x".to_string(), "y".to_string()];
+        let qs = closed_loop_stream(&order, 100, 1.0);
+        assert_eq!(qs.len(), 200);
+        assert_eq!(qs.iter().filter(|q| q.task == "x").count(), 100);
+    }
+
+    #[test]
+    fn poisson_stream_sorted_and_rate_sane() {
+        let mut rng = Rng::new(1);
+        let tasks = vec!["a".to_string()];
+        let qs = poisson_stream(&tasks, 100.0, 10_000.0, &mut rng);
+        // 100 qps over 10 s ⇒ ~1000 queries.
+        assert!((800..1200).contains(&qs.len()), "{}", qs.len());
+        assert!(qs.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+    }
+
+    #[test]
+    fn placement_orders_desktop_and_orin() {
+        let d = placement_orders(&Platform::desktop(), 3);
+        assert_eq!(d.len(), 6); // 3! non-overlapping orders
+        let o = placement_orders(&Platform::orin(), 3);
+        assert_eq!(o.len(), 2); // P=2: G-C-G and C-G-C (wrapped)
+        for ord in &o {
+            assert_eq!(ord.len(), 3);
+        }
+    }
+}

@@ -1,0 +1,556 @@
+//! Sparse model zoo: typed view of `artifacts/manifest.json`.
+//!
+//! The zoo (paper Table 5) is produced at build time by
+//! `python/compile/aot.py`: per task, V=10 sparse variants of one base
+//! model, each split into S=3 layer-aligned subgraphs. This module loads
+//! the manifest into typed structures consumed by stitching, the
+//! profiler, the optimizer, the preloader, and the runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Json};
+
+/// The compression family of a variant (Table 5 "Variant Type").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum VariantType {
+    Dense,
+    Fp16,
+    Int8,
+    Unstructured,
+    Structured,
+}
+
+impl VariantType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "dense" => Self::Dense,
+            "fp16" => Self::Fp16,
+            "int8" => Self::Int8,
+            "unstructured" => Self::Unstructured,
+            "structured" => Self::Structured,
+            other => bail!("unknown variant type {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Dense => "dense",
+            Self::Fp16 => "fp16",
+            Self::Int8 => "int8",
+            Self::Unstructured => "unstructured",
+            Self::Structured => "structured",
+        }
+    }
+
+    /// Short tag used in paper-style variant strings (P-Q-D notation).
+    pub fn tag(&self) -> char {
+        match self {
+            Self::Dense => 'D',
+            Self::Fp16 => 'H',
+            Self::Int8 => 'Q',
+            Self::Unstructured | Self::Structured => 'P',
+        }
+    }
+}
+
+/// Numeric precision of the stored weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Fp32,
+    Fp16,
+    Int8,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fp32" => Self::Fp32,
+            "fp16" => Self::Fp16,
+            "int8" => Self::Int8,
+            other => bail!("unknown precision {other:?}"),
+        })
+    }
+}
+
+/// Which L1 kernel family executes a variant's GEMMs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KernelPath {
+    Dense,
+    Masked,
+    BlockSparse,
+    Quant,
+}
+
+impl KernelPath {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "dense" => Self::Dense,
+            "masked" => Self::Masked,
+            "blocksparse" => Self::BlockSparse,
+            "quant" => Self::Quant,
+            other => bail!("unknown kernel path {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Dense => "dense",
+            Self::Masked => "masked",
+            Self::BlockSparse => "blocksparse",
+            Self::Quant => "quant",
+        }
+    }
+}
+
+/// One zoo entry (a row of Table 5).
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    pub name: String,
+    pub vtype: VariantType,
+    /// Fraction of weights pruned (0 for dense/quantized variants).
+    pub sparsity: f64,
+    pub kernel_path: KernelPath,
+    pub precision: Precision,
+}
+
+/// Dtype of one serialized tensor in a weight blob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Self::F32,
+            "i8" => Self::I8,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            Self::F32 => 4,
+            Self::I8 => 1,
+        }
+    }
+}
+
+/// Shape+dtype of one tensor parameter (HLO parameter order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.size()
+    }
+}
+
+/// One subgraph of one variant: its weight blob on disk.
+#[derive(Clone, Debug)]
+pub struct SubgraphWeights {
+    pub file: PathBuf,
+    pub bytes: u64,
+    pub params: Vec<TensorSpec>,
+}
+
+/// One HLO artifact: a (subgraph, kernel-path, batch) executable source.
+#[derive(Clone, Debug)]
+pub struct HloArtifact {
+    pub file: PathBuf,
+    pub flops: f64,
+    pub bytes_accessed: f64,
+    pub params: Vec<TensorSpec>,
+    pub input_dim: usize,
+    pub output_dim: usize,
+}
+
+/// One variant of one task: accuracy + per-subgraph weights.
+#[derive(Clone, Debug)]
+pub struct TaskVariant {
+    pub spec: VariantSpec,
+    pub accuracy: f64,
+    pub subgraphs: Vec<SubgraphWeights>,
+}
+
+impl TaskVariant {
+    /// Total weight bytes across all subgraphs (the preloader's Mem()).
+    pub fn total_bytes(&self) -> u64 {
+        self.subgraphs.iter().map(|s| s.bytes).sum()
+    }
+}
+
+/// One task: its variants plus HLO artifacts keyed by
+/// `(subgraph, kernel_path, batch)`.
+#[derive(Clone, Debug)]
+pub struct TaskZoo {
+    pub name: String,
+    pub family: String,
+    pub input_dim: usize,
+    /// Activation widths at the S+1 pipeline boundaries.
+    pub iface: Vec<usize>,
+    /// Variants in zoo order (the stitched-index digit alphabet).
+    pub variants: Vec<TaskVariant>,
+    pub hlo: BTreeMap<(usize, KernelPath, usize), HloArtifact>,
+}
+
+impl TaskZoo {
+    pub fn variant(&self, i: usize) -> &TaskVariant {
+        &self.variants[i]
+    }
+
+    pub fn variant_by_name(&self, name: &str) -> Option<(usize, &TaskVariant)> {
+        self.variants
+            .iter()
+            .enumerate()
+            .find(|(_, v)| v.spec.name == name)
+    }
+
+    pub fn n_variants(&self) -> usize {
+        self.variants.len()
+    }
+
+    pub fn hlo_for(&self, sg: usize, path: KernelPath, batch: usize) -> Result<&HloArtifact> {
+        self.hlo
+            .get(&(sg, path, batch))
+            .with_context(|| format!("no HLO for sg{sg}/{}/b{batch} in {}", path.name(), self.name))
+    }
+}
+
+/// The whole artifact bundle.
+#[derive(Clone, Debug)]
+pub struct Zoo {
+    pub root: PathBuf,
+    pub seed: u64,
+    pub zoo_name: String,
+    /// S — subgraphs per variant (== pipeline stages == processors used).
+    pub subgraphs: usize,
+    pub n_classes: usize,
+    pub batch_sizes: Vec<usize>,
+    pub probe_batch: usize,
+    pub n_eval: usize,
+    pub tasks: BTreeMap<String, TaskZoo>,
+}
+
+impl Zoo {
+    /// Load and validate `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Zoo> {
+        let root = root.as_ref().to_path_buf();
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let m = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        let version = m.req("version")?.as_u64().context("version")?;
+        if version < 3 {
+            bail!("manifest version {version} too old (need ≥ 3); re-run `make artifacts`");
+        }
+
+        let variants_json = m.req("variants")?.as_arr().context("variants")?;
+        let mut specs = Vec::new();
+        for v in variants_json {
+            specs.push(VariantSpec {
+                name: v.req("name")?.as_str().context("name")?.to_string(),
+                vtype: VariantType::parse(v.req("vtype")?.as_str().context("vtype")?)?,
+                sparsity: v.req("sparsity")?.as_f64().context("sparsity")?,
+                kernel_path: KernelPath::parse(
+                    v.req("kernel_path")?.as_str().context("kernel_path")?,
+                )?,
+                precision: Precision::parse(
+                    v.req("precision")?.as_str().context("precision")?,
+                )?,
+            });
+        }
+
+        let subgraphs = m.req("subgraphs")?.as_usize().context("subgraphs")?;
+        let mut tasks = BTreeMap::new();
+        for (tname, tj) in m.req("tasks")?.as_obj().context("tasks")? {
+            let iface: Vec<usize> = tj
+                .req("iface")?
+                .as_arr()
+                .context("iface")?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect();
+            if iface.len() != subgraphs + 1 {
+                bail!("task {tname}: iface has {} entries, want {}", iface.len(), subgraphs + 1);
+            }
+
+            let mut variants = Vec::new();
+            let vmap = tj.req("variants")?.as_obj().context("variants")?;
+            for spec in &specs {
+                let vj = vmap
+                    .get(&spec.name)
+                    .with_context(|| format!("task {tname}: missing variant {}", spec.name))?;
+                let mut sgs = Vec::new();
+                for sj in vj.req("subgraphs")?.as_arr().context("subgraphs")? {
+                    sgs.push(SubgraphWeights {
+                        file: root.join(sj.req("file")?.as_str().context("file")?),
+                        bytes: sj.req("bytes")?.as_u64().context("bytes")?,
+                        params: parse_params(sj.req("params")?)?,
+                    });
+                }
+                if sgs.len() != subgraphs {
+                    bail!("task {tname}/{}: {} subgraphs, want {subgraphs}", spec.name, sgs.len());
+                }
+                variants.push(TaskVariant {
+                    spec: spec.clone(),
+                    accuracy: vj.req("accuracy")?.as_f64().context("accuracy")?,
+                    subgraphs: sgs,
+                });
+            }
+
+            let mut hlo = BTreeMap::new();
+            for (key, hj) in tj.req("hlo")?.as_obj().context("hlo")? {
+                let (sg, path, batch) = parse_hlo_key(key)?;
+                hlo.insert(
+                    (sg, path, batch),
+                    HloArtifact {
+                        file: root.join(hj.req("file")?.as_str().context("file")?),
+                        flops: hj.req("flops")?.as_f64().unwrap_or(0.0),
+                        bytes_accessed: hj
+                            .get("bytes_accessed")
+                            .and_then(|x| x.as_f64())
+                            .unwrap_or(0.0),
+                        params: parse_params(hj.req("params")?)?,
+                        input_dim: hj.req("input_dim")?.as_usize().context("input_dim")?,
+                        output_dim: hj.req("output_dim")?.as_usize().context("output_dim")?,
+                    },
+                );
+            }
+
+            tasks.insert(
+                tname.clone(),
+                TaskZoo {
+                    name: tname.clone(),
+                    family: tj.req("family")?.as_str().context("family")?.to_string(),
+                    input_dim: tj.req("input_dim")?.as_usize().context("input_dim")?,
+                    iface,
+                    variants,
+                    hlo,
+                },
+            );
+        }
+
+        Ok(Zoo {
+            root,
+            seed: m.req("seed")?.as_u64().context("seed")?,
+            zoo_name: m.req("zoo_name")?.as_str().context("zoo_name")?.to_string(),
+            subgraphs,
+            n_classes: m.req("n_classes")?.as_usize().context("n_classes")?,
+            batch_sizes: m
+                .req("batch_sizes")?
+                .as_arr()
+                .context("batch_sizes")?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect(),
+            probe_batch: m.req("probe_batch")?.as_usize().context("probe_batch")?,
+            n_eval: m.req("n_eval")?.as_usize().context("n_eval")?,
+            tasks,
+        })
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskZoo> {
+        self.tasks
+            .get(name)
+            .with_context(|| format!("unknown task {name:?}"))
+    }
+
+    pub fn task_names(&self) -> Vec<&str> {
+        self.tasks.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// V — variants per task (identical across tasks by construction).
+    pub fn n_variants(&self) -> usize {
+        self.tasks
+            .values()
+            .next()
+            .map(|t| t.variants.len())
+            .unwrap_or(0)
+    }
+
+    /// Load the exact stitched-accuracy oracle for a task
+    /// (`oracle/<task>.bin`, f32-LE, index k = ((i1·V)+i2)·V+i3).
+    pub fn load_oracle(&self, task: &str) -> Result<Vec<f64>> {
+        let path = self.root.join("oracle").join(format!("{task}.bin"));
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
+            .collect())
+    }
+
+    /// Load the eval dataset for a task: (X row-major f32, labels).
+    pub fn load_eval(&self, task: &str) -> Result<(Vec<f32>, Vec<u32>)> {
+        let t = self.task(task)?;
+        let path = self.root.join("data").join(format!("{task}_eval.bin"));
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let n = self.n_eval;
+        let d = t.input_dim;
+        let want = n * d * 4 + n * 4;
+        if bytes.len() != want {
+            bail!("eval file {} has {} bytes, want {want}", path.display(), bytes.len());
+        }
+        let xs = bytes[..n * d * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let ys = bytes[n * d * 4..]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok((xs, ys))
+    }
+
+    /// Load probe input + expected per-variant logits for a task.
+    pub fn load_probe(&self, task: &str) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        let t = self.task(task)?;
+        let path = self.root.join("probes").join(format!("{task}.bin"));
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let pb = self.probe_batch;
+        let d = t.input_dim;
+        let logit_len = pb * self.n_classes;
+        let want = pb * d * 4 + t.variants.len() * logit_len * 4;
+        if bytes.len() != want {
+            bail!("probe file {} has {} bytes, want {want}", path.display(), bytes.len());
+        }
+        let f32s: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let x = f32s[..pb * d].to_vec();
+        let mut logits = Vec::new();
+        for i in 0..t.variants.len() {
+            let start = pb * d + i * logit_len;
+            logits.push(f32s[start..start + logit_len].to_vec());
+        }
+        Ok((x, logits))
+    }
+
+    /// Read one subgraph weight blob into per-tensor byte slices.
+    pub fn load_weights(&self, sw: &SubgraphWeights) -> Result<Vec<Vec<u8>>> {
+        let bytes = std::fs::read(&sw.file)
+            .with_context(|| format!("reading {}", sw.file.display()))?;
+        if bytes.len() as u64 != sw.bytes {
+            bail!("blob {} has {} bytes, manifest says {}", sw.file.display(), bytes.len(), sw.bytes);
+        }
+        let mut out = Vec::with_capacity(sw.params.len());
+        let mut off = 0usize;
+        for p in &sw.params {
+            let n = p.bytes();
+            out.push(bytes[off..off + n].to_vec());
+            off += n;
+        }
+        if off != bytes.len() {
+            bail!("blob {} trailing bytes", sw.file.display());
+        }
+        Ok(out)
+    }
+}
+
+fn parse_params(j: &Json) -> Result<Vec<TensorSpec>> {
+    let mut out = Vec::new();
+    for p in j.as_arr().context("params array")? {
+        out.push(TensorSpec {
+            dtype: DType::parse(p.req("dtype")?.as_str().context("dtype")?)?,
+            shape: p
+                .req("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect(),
+        });
+    }
+    Ok(out)
+}
+
+fn parse_hlo_key(key: &str) -> Result<(usize, KernelPath, usize)> {
+    // "sg<j>/<path>/b<batch>"
+    let parts: Vec<&str> = key.split('/').collect();
+    if parts.len() != 3 || !parts[0].starts_with("sg") || !parts[2].starts_with('b') {
+        bail!("bad hlo key {key:?}");
+    }
+    Ok((
+        parts[0][2..].parse().with_context(|| format!("hlo key {key:?}"))?,
+        KernelPath::parse(parts[1])?,
+        parts[2][1..].parse().with_context(|| format!("hlo key {key:?}"))?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_type_roundtrip() {
+        for s in ["dense", "fp16", "int8", "unstructured", "structured"] {
+            assert_eq!(VariantType::parse(s).unwrap().name(), s);
+        }
+        assert!(VariantType::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn tags_match_paper_notation() {
+        assert_eq!(VariantType::Dense.tag(), 'D');
+        assert_eq!(VariantType::Int8.tag(), 'Q');
+        assert_eq!(VariantType::Unstructured.tag(), 'P');
+        assert_eq!(VariantType::Structured.tag(), 'P');
+    }
+
+    #[test]
+    fn tensor_spec_bytes() {
+        let t = TensorSpec { dtype: DType::F32, shape: vec![4, 8] };
+        assert_eq!(t.elems(), 32);
+        assert_eq!(t.bytes(), 128);
+        let q = TensorSpec { dtype: DType::I8, shape: vec![4, 8] };
+        assert_eq!(q.bytes(), 32);
+    }
+
+    #[test]
+    fn hlo_key_parsing() {
+        let (sg, path, b) = parse_hlo_key("sg2/masked/b256").unwrap();
+        assert_eq!(sg, 2);
+        assert_eq!(path, KernelPath::Masked);
+        assert_eq!(b, 256);
+        assert!(parse_hlo_key("nonsense").is_err());
+        assert!(parse_hlo_key("sg1/masked").is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let Ok(zoo) = Zoo::load("artifacts") else { return };
+        assert_eq!(zoo.subgraphs, 3);
+        assert_eq!(zoo.n_variants(), 10);
+        assert!(zoo.tasks.len() >= 1);
+        for t in zoo.tasks.values() {
+            assert_eq!(t.variants.len(), 10);
+            // accuracy is a probability
+            for v in &t.variants {
+                assert!((0.0..=1.0).contains(&v.accuracy));
+                assert!(v.total_bytes() > 0);
+            }
+        }
+        let first = zoo.task_names()[0].to_string();
+        let oracle = zoo.load_oracle(&first).unwrap();
+        assert_eq!(oracle.len(), 1000);
+        let (xs, ys) = zoo.load_eval(&first).unwrap();
+        assert_eq!(ys.len(), zoo.n_eval);
+        assert_eq!(xs.len(), zoo.n_eval * zoo.task(&first).unwrap().input_dim);
+    }
+}

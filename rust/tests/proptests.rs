@@ -1,0 +1,357 @@
+//! Property-based tests over the coordinator invariants, driven by the
+//! in-repo `propcheck` framework (DESIGN.md §Validation):
+//!
+//! * stitched index ↔ composition round-trips for arbitrary (V, S);
+//! * the optimizer returns only SLO-feasible selections whenever any
+//!   exist, and its order is always drawn from Ω;
+//! * the preloader never exceeds its budget, for any budget;
+//! * hotness scores are non-negative and position-normalized;
+//! * the SocSim clock is monotone and never double-books a processor;
+//! * the memory pool never exceeds capacity under arbitrary op streams.
+
+use std::collections::BTreeMap;
+
+use sparseloom::optimizer::{feasible_set, optimize};
+use sparseloom::preloader::{full_preload_bytes, preload, Hotness};
+use sparseloom::profiler::{profile_task, ProfilerConfig, TaskProfile};
+use sparseloom::propcheck::{check, usize_in, vec_of, Gen};
+use sparseloom::soc::{
+    BaseLatencies, BlobId, LatencyModel, MemoryPool, Platform, Processor, SocSim,
+};
+use sparseloom::stitching::{Composition, StitchSpace};
+use sparseloom::util::Rng;
+use sparseloom::workload::{placement_orders, Slo};
+use sparseloom::zoo::{
+    DType, HloArtifact, KernelPath, Precision, SubgraphWeights, TaskVariant,
+    TaskZoo, TensorSpec, VariantSpec, VariantType,
+};
+
+// ---------------------------------------------------------------------
+// Synthetic TaskZoo generator (arbitrary V, S, accuracies, sizes).
+// ---------------------------------------------------------------------
+
+fn synth_taskzoo(v: usize, s: usize, seed: u64) -> TaskZoo {
+    let mut rng = Rng::new(seed);
+    let types = [
+        (VariantType::Dense, KernelPath::Dense, 0.0),
+        (VariantType::Int8, KernelPath::Quant, 0.0),
+        (VariantType::Structured, KernelPath::BlockSparse, 0.5),
+        (VariantType::Unstructured, KernelPath::Masked, 0.8),
+    ];
+    let mut variants = Vec::new();
+    for i in 0..v {
+        let (vt, kp, sp) = types[i % types.len()];
+        let acc = 0.4 + 0.6 * rng.f64();
+        let subgraphs = (0..s)
+            .map(|_| SubgraphWeights {
+                file: "/dev/null".into(),
+                bytes: 500 + rng.below(2000) as u64,
+                params: vec![TensorSpec { dtype: DType::F32, shape: vec![4] }],
+            })
+            .collect();
+        variants.push(TaskVariant {
+            spec: VariantSpec {
+                name: format!("v{i}"),
+                vtype: vt,
+                sparsity: sp,
+                kernel_path: kp,
+                precision: Precision::Fp32,
+            },
+            accuracy: acc,
+            subgraphs,
+        });
+    }
+    let mut hlo = BTreeMap::new();
+    for sg in 0..s {
+        for path in [
+            KernelPath::Dense,
+            KernelPath::Quant,
+            KernelPath::BlockSparse,
+            KernelPath::Masked,
+        ] {
+            hlo.insert(
+                (sg, path, 1),
+                HloArtifact {
+                    file: "/dev/null".into(),
+                    flops: 1e5,
+                    bytes_accessed: 1e4,
+                    params: vec![],
+                    input_dim: 8,
+                    output_dim: 8,
+                },
+            );
+        }
+    }
+    TaskZoo {
+        name: format!("synth{seed}"),
+        family: "synth".into(),
+        input_dim: 8,
+        iface: vec![8; s + 1],
+        variants,
+        hlo,
+    }
+}
+
+fn synth_profile(v: usize, s: usize, seed: u64) -> (TaskZoo, TaskProfile, Vec<Vec<Processor>>) {
+    let tz = synth_taskzoo(v, s, seed);
+    let mut base = BaseLatencies::new();
+    let mut rng = Rng::new(seed ^ 0xabc);
+    for sg in 0..s {
+        for path in [
+            KernelPath::Dense,
+            KernelPath::Quant,
+            KernelPath::BlockSparse,
+            KernelPath::Masked,
+        ] {
+            base.set(&tz.name, sg, path, 1.0 + 9.0 * rng.f64());
+        }
+    }
+    let plat = Platform::desktop();
+    let orders = placement_orders(&plat, s);
+    let lm = LatencyModel::new(plat, base);
+    let space = StitchSpace::for_task(&tz);
+    let oracle: Vec<f64> = space
+        .iter()
+        .map(|c| {
+            let mean: f64 =
+                c.0.iter().map(|&i| tz.variants[i].accuracy).sum::<f64>() / s as f64;
+            mean.clamp(0.0, 1.0)
+        })
+        .collect();
+    let cfg = ProfilerConfig { train_samples: (space.len() / 3).max(8), ..Default::default() };
+    let p = profile_task(&tz, &lm, &oracle, &cfg, true);
+    (tz, p, orders)
+}
+
+// ---------------------------------------------------------------------
+// Properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_stitched_index_roundtrip() {
+    // (V, S) pairs with V in [1,12], S in [1,4]; every index round-trips.
+    let gen: Gen<Vec<usize>> = vec_of(usize_in(1, 12), 2);
+    check("index_roundtrip", &gen, 120, 11, |dims| {
+        let v = dims[0];
+        let s = (dims[1] % 4) + 1;
+        let space = StitchSpace::new(v, s);
+        for k in (0..space.len()).step_by((space.len() / 50).max(1)) {
+            let c = space.composition(k);
+            if space.index(&c) != k {
+                return Err(format!("V={v} S={s} k={k} → {:?}", c));
+            }
+            if c.subgraphs() != s {
+                return Err(format!("wrong length {:?}", c));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_optimizer_respects_slos() {
+    let gen = usize_in(0, 10_000);
+    check("optimizer_feasibility", &gen, 40, 12, |&seed| {
+        let (_tz, p, orders) = synth_profile(4, 3, seed as u64);
+        let mut rng = Rng::new(seed as u64 ^ 0x55);
+        let slo = Slo {
+            min_accuracy: 0.3 + 0.6 * rng.f64(),
+            max_latency_ms: 2.0 + 30.0 * rng.f64(),
+        };
+        let profiles = BTreeMap::from([(p.task.clone(), p.clone())]);
+        let slos = BTreeMap::from([(p.task.clone(), slo)]);
+        let plan = optimize(&profiles, &slos, &orders);
+        if !orders.contains(&plan.order) {
+            return Err(format!("order {:?} ∉ Ω", plan.order));
+        }
+        let theta = feasible_set(&p, &slo, &orders);
+        match plan.selections[&p.task] {
+            Some(sel) => {
+                if theta.indices.is_empty() {
+                    return Err("selected from an empty Θ".into());
+                }
+                if p.accuracy(sel.stitched_index) < slo.min_accuracy {
+                    return Err("accuracy constraint violated".into());
+                }
+            }
+            None => {
+                if !theta.indices.is_empty() {
+                    return Err(format!(
+                        "Θ has {} candidates but nothing selected",
+                        theta.indices.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_selected_variant_is_minimal_under_chosen_order() {
+    let gen = usize_in(0, 10_000);
+    check("optimizer_minimality", &gen, 30, 13, |&seed| {
+        let (_tz, p, orders) = synth_profile(4, 3, seed as u64);
+        let slo = Slo { min_accuracy: 0.0, max_latency_ms: f64::INFINITY };
+        let profiles = BTreeMap::from([(p.task.clone(), p.clone())]);
+        let slos = BTreeMap::from([(p.task.clone(), slo)]);
+        let plan = optimize(&profiles, &slos, &orders);
+        let sel = plan.selections[&p.task].ok_or("nothing selected")?;
+        for k in 0..p.space.len() {
+            if let Some(l) = p.latency_est(&p.space.composition(k), &plan.order) {
+                if l + 1e-12 < sel.latency_ms {
+                    return Err(format!(
+                        "k={k} at {l} beats selection {}",
+                        sel.latency_ms
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_preloader_never_exceeds_budget() {
+    let gen: Gen<Vec<usize>> = vec_of(usize_in(0, 10_000), 2);
+    check("preload_budget", &gen, 50, 14, |dims| {
+        let seed = dims[0] as u64;
+        let (tz, p, orders) = synth_profile(5, 3, seed);
+        let slos: Vec<Slo> = (0..5)
+            .map(|i| Slo {
+                min_accuracy: 0.4 + 0.1 * i as f64,
+                max_latency_ms: f64::INFINITY,
+            })
+            .collect();
+        let h = Hotness::compute(&p, &slos, &orders);
+        let full = full_preload_bytes(&[&tz]);
+        let budget = (dims[1] as u64).min(full * 2);
+        let plan = preload(&[(&tz, &h)], budget);
+        if plan.total_bytes > budget {
+            return Err(format!("{} > {budget}", plan.total_bytes));
+        }
+        // No duplicate blobs.
+        let mut seen = std::collections::HashSet::new();
+        for b in &plan.blobs {
+            if !seen.insert(b.clone()) {
+                return Err(format!("duplicate {b:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hotness_nonnegative_and_normalized() {
+    let gen = usize_in(0, 10_000);
+    check("hotness_normalized", &gen, 40, 15, |&seed| {
+        let (_tz, p, orders) = synth_profile(4, 3, seed as u64);
+        let slos: Vec<Slo> = (0..6)
+            .map(|i| Slo {
+                min_accuracy: 0.3 + 0.1 * i as f64,
+                max_latency_ms: f64::INFINITY,
+            })
+            .collect();
+        let h = Hotness::compute(&p, &slos, &orders);
+        let feasible_cfgs = slos
+            .iter()
+            .filter(|s| !feasible_set(&p, s, &orders).is_empty())
+            .count() as f64;
+        for (j, row) in h.scores.iter().enumerate() {
+            let sum: f64 = row.iter().sum();
+            if row.iter().any(|&x| x < 0.0) {
+                return Err(format!("negative hotness at {j}"));
+            }
+            if (sum - feasible_cfgs).abs() > 1e-6 {
+                return Err(format!(
+                    "position {j} sums to {sum}, want {feasible_cfgs}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_socsim_monotone_and_exclusive() {
+    let gen: Gen<Vec<usize>> = vec_of(usize_in(0, 999), 24);
+    check("socsim_exclusive", &gen, 60, 16, |jobs| {
+        let procs = [Processor::Cpu, Processor::Gpu, Processor::Npu];
+        let mut sim = SocSim::new(&procs);
+        let mut booked: Vec<(Processor, f64, f64)> = Vec::new();
+        for (i, &job) in jobs.iter().enumerate() {
+            let proc = procs[job % 3];
+            let ready = (job / 3 % 20) as f64;
+            let dur = 1.0 + (job % 7) as f64;
+            let (start, end) = sim.book(proc, ready, dur);
+            if start < ready {
+                return Err(format!("job {i} started before ready"));
+            }
+            if (end - start - dur).abs() > 1e-9 {
+                return Err("duration not preserved".into());
+            }
+            for &(p2, s2, e2) in &booked {
+                if p2 == proc && start < e2 - 1e-9 && s2 < end - 1e-9 {
+                    return Err(format!(
+                        "overlap on {proc:?}: [{start},{end}] vs [{s2},{e2}]"
+                    ));
+                }
+            }
+            booked.push((proc, start, end));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memory_pool_capacity_invariant() {
+    let gen: Gen<Vec<usize>> = vec_of(usize_in(0, 9999), 40);
+    check("pool_capacity", &gen, 60, 17, |ops| {
+        let mut pool = MemoryPool::new(10_000);
+        for (i, &op) in ops.iter().enumerate() {
+            let id = BlobId::new("t", op % 7, op / 7 % 3);
+            match op % 4 {
+                0 | 1 => {
+                    let bytes = 100 + (op % 3000) as u64;
+                    let _ = pool.load(id, bytes);
+                }
+                2 => {
+                    let _ = pool.evict(&id);
+                }
+                _ => {
+                    let _ = pool.make_room((op % 5000) as u64);
+                }
+            }
+            if pool.used() > pool.capacity() {
+                return Err(format!("op {i}: used {} > cap", pool.used()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_latency_estimate_is_additive_lower_bound_of_truth() {
+    let gen = usize_in(0, 10_000);
+    check("eq5_lower_bound", &gen, 40, 18, |&seed| {
+        let (_tz, p, orders) = synth_profile(4, 3, seed as u64);
+        let mut rng = Rng::new(seed as u64 ^ 7);
+        for _ in 0..20 {
+            let k = rng.below(p.space.len());
+            let comp: Composition = p.space.composition(k);
+            let order = rng.choose(&orders);
+            match (p.latency_est(&comp, order), p.latency_true(&comp, order)) {
+                (Some(e), Some(t)) => {
+                    if e > t + 1e-9 {
+                        return Err(format!("estimate {e} above truth {t}"));
+                    }
+                }
+                (None, Some(_)) | (Some(_), None) => {
+                    return Err("support disagreement".into());
+                }
+                (None, None) => {}
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,124 @@
+//! Integration tests across the artifact bridge: manifest → PJRT
+//! executables → stitched-chain execution → accuracy measurement.
+//!
+//! These need `make artifacts` to have run; they are skipped (not
+//! failed) when `artifacts/manifest.json` is absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use sparseloom::runtime::Runtime;
+use sparseloom::stitching::StitchSpace;
+use sparseloom::zoo::Zoo;
+
+fn zoo() -> Option<Zoo> {
+    Zoo::load("artifacts").ok()
+}
+
+#[test]
+fn probe_numerics_match_python() {
+    let Some(zoo) = zoo() else { return };
+    let rt = Runtime::new().unwrap();
+    // Quant variants amplify cross-XLA-version ULP noise by one dynamic-
+    // quantization step (≈0.1 % of logit scale) — see `sparseloom probe`.
+    let tol = 5e-2f32;
+    for (tname, tz) in &zoo.tasks {
+        let (x, expected) = zoo.load_probe(tname).unwrap();
+        // Check the dense and one compressed variant per task (the full
+        // sweep runs via `sparseloom probe`).
+        for vi in [0usize, zoo.n_variants() - 1] {
+            let want = &expected[vi];
+            let comp = vec![vi; zoo.subgraphs];
+            let batch = *zoo
+                .batch_sizes
+                .iter()
+                .filter(|&&b| b >= zoo.probe_batch)
+                .min()
+                .unwrap();
+            let d = tz.input_dim;
+            let mut input = vec![0f32; batch * d];
+            input[..zoo.probe_batch * d].copy_from_slice(&x);
+            let (got, _) = rt.run_chain(&zoo, tname, &comp, batch, &input).unwrap();
+            for r in 0..zoo.probe_batch {
+                for c in 0..zoo.n_classes {
+                    let g = got[r * zoo.n_classes + c];
+                    let w = want[r * zoo.n_classes + c];
+                    assert!(
+                        (g - w).abs() <= tol,
+                        "{tname} v{vi} [{r},{c}]: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn stitched_chain_differs_from_pure_but_is_finite() {
+    let Some(zoo) = zoo() else { return };
+    let rt = Runtime::new().unwrap();
+    let task = zoo.task_names()[0].to_string();
+    let tz = zoo.task(&task).unwrap();
+    let d = tz.input_dim;
+    let input: Vec<f32> = (0..d).map(|i| (i as f32 * 0.3).cos()).collect();
+    let pure = vec![0usize; zoo.subgraphs];
+    let mut mixed = vec![0usize; zoo.subgraphs];
+    mixed[zoo.subgraphs - 1] = zoo.n_variants() - 1;
+    let (a, _) = rt.run_chain(&zoo, &task, &pure, 1, &input).unwrap();
+    let (b, _) = rt.run_chain(&zoo, &task, &mixed, 1, &input).unwrap();
+    assert!(a.iter().all(|x| x.is_finite()));
+    assert!(b.iter().all(|x| x.is_finite()));
+    assert_ne!(a, b, "stitching must change the function");
+}
+
+#[test]
+fn measured_accuracy_matches_oracle() {
+    let Some(zoo) = zoo() else { return };
+    let rt = Runtime::new().unwrap();
+    let task = zoo.task_names()[0].to_string();
+    let oracle = zoo.load_oracle(&task).unwrap();
+    let space = StitchSpace::new(zoo.n_variants(), zoo.subgraphs);
+    // Pure dense + one stitched composition: PJRT-measured accuracy must
+    // equal the python-exported oracle exactly (same eval set, argmax).
+    for comp in [vec![0; zoo.subgraphs], {
+        let mut c = vec![0; zoo.subgraphs];
+        c[0] = 1;
+        c
+    }] {
+        let k = space.index(&sparseloom::stitching::Composition(comp.clone()));
+        let measured = rt.measure_accuracy(&zoo, &task, &comp).unwrap();
+        assert!(
+            (measured - oracle[k]).abs() < 1e-6,
+            "comp {comp:?}: measured {measured} vs oracle {}",
+            oracle[k]
+        );
+    }
+}
+
+#[test]
+fn executable_and_weight_caches_hit() {
+    let Some(zoo) = zoo() else { return };
+    let rt = Runtime::new().unwrap();
+    let task = zoo.task_names()[0].to_string();
+    let tz = zoo.task(&task).unwrap();
+    let path = tz.variants[0].spec.kernel_path;
+    let before = rt.n_executables();
+    let _ = rt.executable(&zoo, &task, 0, path, 1).unwrap();
+    let _ = rt.executable(&zoo, &task, 0, path, 1).unwrap();
+    assert_eq!(rt.n_executables(), before + 1, "second compile is a cache hit");
+    let (_, first_ms) = rt.weight_buffers(&zoo, &task, 0, 0).unwrap();
+    let (_, second_ms) = rt.weight_buffers(&zoo, &task, 0, 0).unwrap();
+    assert!(first_ms > 0.0);
+    assert_eq!(second_ms, 0.0, "second upload is a cache hit");
+}
+
+#[test]
+fn chain_timing_has_one_entry_per_stage() {
+    let Some(zoo) = zoo() else { return };
+    let rt = Runtime::new().unwrap();
+    let task = zoo.task_names()[0].to_string();
+    let tz = zoo.task(&task).unwrap();
+    let input = vec![0.5f32; tz.input_dim];
+    let comp = vec![0usize; zoo.subgraphs];
+    let (_, timing) = rt.run_chain(&zoo, &task, &comp, 1, &input).unwrap();
+    assert_eq!(timing.stage_ms.len(), zoo.subgraphs);
+    assert!(timing.total_ms >= timing.stage_ms.iter().sum::<f64>() * 0.5);
+}

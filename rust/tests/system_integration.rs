@@ -1,0 +1,187 @@
+//! Whole-system integration over the real artifacts: profile → plan →
+//! preload → serve, for every policy and platform, with paper-shape
+//! assertions (SparseLoom never worse than the baselines on violations;
+//! estimator quality bounds; budget monotonicity).
+//!
+//! Skipped gracefully when `artifacts/` is absent.
+
+use std::collections::BTreeMap;
+
+use sparseloom::baselines::Policy;
+use sparseloom::coordinator::{Coordinator, ServeOpts};
+use sparseloom::experiments::Ctx;
+use sparseloom::metrics::Aggregate;
+use sparseloom::profiler::{evaluate_estimators, ProfilerConfig};
+use sparseloom::soc::Platform;
+use sparseloom::workload::{placement_orders, slo_grid, Slo, TaskRanges};
+
+fn ctx() -> Option<Ctx> {
+    Ctx::load("artifacts", false).ok()
+}
+
+fn grid_slos(
+    ctx: &Ctx,
+    lm: &sparseloom::soc::LatencyModel,
+) -> (BTreeMap<String, Vec<Slo>>, Vec<Slo>) {
+    let zoo = ctx.zoo_for(&lm.platform);
+    let mut grids = BTreeMap::new();
+    let mut universe = Vec::new();
+    for (name, tz) in &zoo.tasks {
+        let g = slo_grid(&TaskRanges::measure(tz, lm));
+        universe.extend(g.iter().copied());
+        grids.insert(name.clone(), g);
+    }
+    (grids, universe)
+}
+
+#[test]
+fn all_policies_serve_all_platforms() {
+    let Some(ctx) = ctx() else { return };
+    let cfg = ProfilerConfig::default();
+    for platform in Platform::all() {
+        let lm = ctx.lm(platform.clone());
+        let profiles = ctx.profiles(&lm, &cfg).unwrap();
+        let coord = Coordinator::new(ctx.zoo_for(&platform), &lm, &profiles);
+        let (grids, universe) = grid_slos(&ctx, &lm);
+        let slos: BTreeMap<String, Slo> =
+            grids.iter().map(|(n, g)| (n.clone(), g[12])).collect();
+        let arrival: Vec<String> = profiles.keys().cloned().collect();
+        for policy in Policy::all() {
+            let opts = ServeOpts { policy, queries_per_task: 20, ..Default::default() };
+            let r = coord.serve(&slos, &universe, &arrival, &opts).unwrap();
+            assert_eq!(
+                r.total_queries,
+                20 * profiles.len(),
+                "{policy:?} on {} must serve everything (best-effort)",
+                platform.name
+            );
+            assert!(r.throughput_qps() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn sparseloom_not_worse_than_baselines_on_violations() {
+    let Some(ctx) = ctx() else { return };
+    let cfg = ProfilerConfig::default();
+    let platform = Platform::desktop();
+    let lm = ctx.lm(platform.clone());
+    let profiles = ctx.profiles(&lm, &cfg).unwrap();
+    let coord = Coordinator::new(ctx.zoo_for(&platform), &lm, &profiles);
+    let (grids, universe) = grid_slos(&ctx, &lm);
+    let arrival: Vec<String> = profiles.keys().cloned().collect();
+
+    let mut rates = BTreeMap::new();
+    for policy in Policy::all() {
+        let mut agg = Aggregate::default();
+        let opts = ServeOpts { policy, queries_per_task: 20, ..Default::default() };
+        for i in 0..25 {
+            let slos: BTreeMap<String, Slo> =
+                grids.iter().map(|(n, g)| (n.clone(), g[i])).collect();
+            let r = coord.serve(&slos, &universe, &arrival, &opts).unwrap();
+            agg.push(&r);
+        }
+        rates.insert(policy.name(), agg.mean_violation_pct());
+    }
+    let sl = rates["SparseLoom"];
+    for policy in Policy::baselines() {
+        assert!(
+            sl <= rates[policy.name()] + 1e-9,
+            "SparseLoom {sl} % must not exceed {} {} %",
+            policy.name(),
+            rates[policy.name()]
+        );
+    }
+}
+
+#[test]
+fn estimator_quality_meets_floor() {
+    let Some(ctx) = ctx() else { return };
+    let platform = Platform::desktop();
+    let lm = ctx.lm(platform.clone());
+    let orders = placement_orders(&platform, ctx.zoo.subgraphs);
+    let profiles = ctx.profiles(&lm, &ProfilerConfig::default()).unwrap();
+    let mut recalls = Vec::new();
+    let mut mapes = Vec::new();
+    for p in profiles.values() {
+        let rep = evaluate_estimators(p, &orders, &[10, 50], 300, 5);
+        for (_, r) in rep.recall_at {
+            recalls.push(r);
+        }
+        mapes.push(rep.lat_mape_pct);
+    }
+    let mean_recall = recalls.iter().sum::<f64>() / recalls.len() as f64;
+    let mean_mape = mapes.iter().sum::<f64>() / mapes.len() as f64;
+    assert!(mean_recall > 0.6, "recall {mean_recall}");
+    assert!(mean_mape < 15.0, "MAPE {mean_mape}");
+}
+
+#[test]
+fn memory_budget_monotone_on_real_zoo() {
+    let Some(ctx) = ctx() else { return };
+    let platform = Platform::desktop();
+    let lm = ctx.lm(platform.clone());
+    let profiles = ctx.profiles(&lm, &ProfilerConfig::default()).unwrap();
+    let coord = Coordinator::new(ctx.zoo_for(&platform), &lm, &profiles);
+    let (grids, universe) = grid_slos(&ctx, &lm);
+    let slos: BTreeMap<String, Slo> =
+        grids.iter().map(|(n, g)| (n.clone(), g[12])).collect();
+    let arrival: Vec<String> = profiles.keys().cloned().collect();
+    let run = |frac: f64| {
+        let opts = ServeOpts {
+            memory_budget_frac: frac,
+            queries_per_task: 20,
+            ..Default::default()
+        };
+        let prepared = coord.prepare(&slos, &universe, &opts).unwrap();
+        let penalty: f64 = prepared.switch_penalty_ms.values().sum();
+        let r = coord
+            .serve_prepared(prepared, &slos, &arrival, &opts)
+            .unwrap();
+        (penalty, r.violation_rate())
+    };
+    let (pen_full, _) = run(1.0);
+    let (pen_tiny, _) = run(0.05);
+    assert!(
+        pen_tiny >= pen_full,
+        "smaller budget cannot reduce switch cost ({pen_tiny} < {pen_full})"
+    );
+}
+
+#[test]
+fn jetson_zoo_used_for_orin_when_present() {
+    let Some(ctx) = ctx() else { return };
+    if ctx.jetson.is_none() {
+        return;
+    }
+    let orin = Platform::orin();
+    let zoo = ctx.zoo_for(&orin);
+    assert_eq!(zoo.zoo_name, "jetson");
+    // Jetson zoo (Table 5) has no unstructured variants…
+    assert!(zoo
+        .tasks
+        .values()
+        .next()
+        .unwrap()
+        .variants
+        .iter()
+        .all(|v| v.spec.vtype != sparseloom::zoo::VariantType::Unstructured));
+    // …and every variant is supported on every orin processor.
+    for tz in zoo.tasks.values() {
+        for v in &tz.variants {
+            for m in &orin.processors {
+                assert!(m.scale_for(&v.spec).is_some(), "{} on {:?}", v.spec.name, m.proc);
+            }
+        }
+    }
+}
+
+#[test]
+fn experiment_registry_dispatches_cheap_entries() {
+    let Some(ctx) = ctx() else { return };
+    for id in ["table1", "fig8", "table5", "fig9", "overhead"] {
+        let out = sparseloom::experiments::run(&ctx, id).unwrap();
+        assert!(!out.is_empty(), "{id}");
+    }
+    assert!(sparseloom::experiments::run(&ctx, "nope").is_err());
+}
