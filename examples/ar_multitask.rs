@@ -16,11 +16,11 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use sparseloom::baselines::Policy;
-use sparseloom::coordinator::{Coordinator, ServeOpts};
 use sparseloom::experiments::Ctx;
 use sparseloom::metrics::{render_table, Aggregate};
 use sparseloom::profiler::ProfilerConfig;
 use sparseloom::runtime::Runtime;
+use sparseloom::scenario::{Scenario, Server};
 use sparseloom::soc::Platform;
 use sparseloom::util::Rng;
 use sparseloom::workload::{arrival_combinations, slo_grid, Slo, TaskRanges};
@@ -31,7 +31,15 @@ fn main() -> anyhow::Result<()> {
     let ctx = Ctx::load("artifacts", false)?;
     let lm = ctx.lm(platform.clone());
     let zoo = ctx.zoo_for(&platform);
-    let rt = Runtime::new()?;
+    // Real PJRT inference per first query when the runtime is available
+    // (needs --features xla); simulation-only otherwise.
+    let rt = match Runtime::new() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            println!("(simulation only — no PJRT: {e:#})");
+            None
+        }
+    };
 
     println!("AR multi-task serving on {} — {}", platform.name, platform.description);
     let t0 = Instant::now();
@@ -53,21 +61,24 @@ fn main() -> anyhow::Result<()> {
     rng.shuffle(&mut arrivals);
     arrivals.truncate(8);
 
-    let coord = Coordinator::new(zoo, &lm, &profiles).with_runtime(&rt);
     let mut rows = Vec::new();
     let mut sl = (0.0, 0.0);
     let mut best_baseline = (f64::INFINITY, 0.0f64);
     for policy in Policy::all() {
         let t0 = Instant::now();
         let mut agg = Aggregate::default();
-        let opts = ServeOpts { policy, ..Default::default() };
+        let mut builder = Server::builder(zoo, &lm, &profiles).policy(policy);
+        if let Some(rt) = &rt {
+            builder = builder.runtime(rt);
+        }
+        let server = builder.build();
         for i in 0..25 {
             let slos: BTreeMap<String, Slo> =
                 grids.iter().map(|(n, g)| (n.clone(), g[i])).collect();
-            let prepared = coord.prepare(&slos, &universe, &opts)?;
             for arrival in &arrivals {
-                let r = coord.serve_prepared(prepared.clone(), &slos, arrival, &opts)?;
-                agg.push(&r);
+                let sc = Scenario::closed_loop(arrival, slos.clone())
+                    .with_universe(universe.clone());
+                agg.push(&server.run(&sc)?);
             }
         }
         let v = agg.mean_violation_pct();

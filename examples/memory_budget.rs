@@ -9,11 +9,11 @@
 
 use std::collections::BTreeMap;
 
-use sparseloom::coordinator::{Coordinator, ServeOpts};
 use sparseloom::experiments::Ctx;
 use sparseloom::metrics::render_table;
 use sparseloom::preloader::{coverage, full_preload_bytes, preload, Hotness};
 use sparseloom::profiler::ProfilerConfig;
+use sparseloom::scenario::{Scenario, Server};
 use sparseloom::soc::Platform;
 use sparseloom::util::fmt_bytes;
 use sparseloom::workload::{placement_orders, slo_grid, Slo, TaskRanges};
@@ -46,7 +46,6 @@ fn main() -> anyhow::Result<()> {
     let full = full_preload_bytes(&task_zoos);
     println!("full preloading on {}: {}\n", platform.name, fmt_bytes(full));
 
-    let coord = Coordinator::new(zoo, &lm, &profiles);
     let arrival: Vec<String> = profiles.keys().cloned().collect();
     let mut rows = Vec::new();
     for frac in [0.1, 0.15, 0.25, 0.4, 0.55, 0.75, 1.0] {
@@ -62,10 +61,14 @@ fn main() -> anyhow::Result<()> {
         // Serve the mid-grid config and accumulate violations + switch cost.
         let slos: BTreeMap<String, Slo> =
             grids.iter().map(|(n, g)| (n.clone(), g[12])).collect();
-        let opts = ServeOpts { memory_budget_frac: frac, ..Default::default() };
-        let prepared = coord.prepare(&slos, &universe, &opts)?;
+        let server = Server::builder(zoo, &lm, &profiles)
+            .memory_budget_frac(frac)
+            .build();
+        let prepared = server.prepare(&slos, &universe)?;
         let switch_ms: f64 = prepared.switch_penalty_ms.values().sum();
-        let report = coord.serve_prepared(prepared.clone(), &slos, &arrival, &opts)?;
+        let scenario = Scenario::closed_loop(&arrival, slos.clone())
+            .with_universe(universe.clone());
+        let report = server.run(&scenario)?;
 
         rows.push(vec![
             format!("{:.0} %", frac * 100.0),

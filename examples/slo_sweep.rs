@@ -10,10 +10,10 @@
 use std::collections::BTreeMap;
 
 use sparseloom::baselines::Policy;
-use sparseloom::coordinator::{Coordinator, ServeOpts};
 use sparseloom::experiments::Ctx;
 use sparseloom::metrics::render_table;
 use sparseloom::profiler::ProfilerConfig;
+use sparseloom::scenario::{Scenario, Server};
 use sparseloom::soc::{order_label, Platform};
 use sparseloom::workload::{slo_ladder, Slo, TaskRanges};
 
@@ -24,7 +24,9 @@ fn main() -> anyhow::Result<()> {
     let lm = ctx.lm(platform.clone());
     let zoo = ctx.zoo_for(&platform);
     let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
-    let coord = Coordinator::new(zoo, &lm, &profiles);
+    let server = Server::builder(zoo, &lm, &profiles)
+        .policy(Policy::SparseLoom)
+        .build();
 
     let mut ladders: BTreeMap<String, Vec<Slo>> = BTreeMap::new();
     let mut universe = Vec::new();
@@ -40,9 +42,10 @@ fn main() -> anyhow::Result<()> {
     for c in 0..8 {
         let slos: BTreeMap<String, Slo> =
             ladders.iter().map(|(n, l)| (n.clone(), l[c])).collect();
-        let opts = ServeOpts { policy: Policy::SparseLoom, ..Default::default() };
-        let prepared = coord.prepare(&slos, &universe, &opts)?;
-        let report = coord.serve_prepared(prepared.clone(), &slos, &arrival, &opts)?;
+        let prepared = server.prepare(&slos, &universe)?;
+        let scenario = Scenario::closed_loop(&arrival, slos.clone())
+            .with_universe(universe.clone());
+        let report = server.run(&scenario)?;
 
         let mut selections = Vec::new();
         let mut stitched = 0usize;

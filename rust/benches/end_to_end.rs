@@ -9,10 +9,10 @@ use std::time::Instant;
 
 use sparseloom::baselines::Policy;
 use sparseloom::benchkit::Bench;
-use sparseloom::coordinator::{Coordinator, ServeOpts};
 use sparseloom::experiments::Ctx;
 use sparseloom::profiler::ProfilerConfig;
 use sparseloom::runtime::Runtime;
+use sparseloom::scenario::{Scenario, Server};
 use sparseloom::soc::Platform;
 use sparseloom::workload::{slo_grid, Slo, TaskRanges};
 
@@ -24,7 +24,6 @@ fn main() -> anyhow::Result<()> {
     let platform = Platform::desktop();
     let lm = ctx.lm(platform.clone());
     let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
-    let coord = Coordinator::new(&ctx.zoo, &lm, &profiles);
 
     let mut grids: BTreeMap<String, Vec<Slo>> = BTreeMap::new();
     let mut universe = Vec::new();
@@ -40,19 +39,29 @@ fn main() -> anyhow::Result<()> {
     println!("\n== plan + serve cycle per policy (desktop, 4×100 queries, sim timing) ==\n");
     Bench::header();
     let mut b = Bench::quick();
+    let scenario = Scenario::closed_loop(&arrival, slos.clone())
+        .with_universe(universe.clone());
     for policy in Policy::all() {
-        let opts = ServeOpts { policy, ..Default::default() };
+        // A fresh server per iteration so the cycle includes planning.
         b.case(&format!("cycle {}", policy.name()), || {
-            let r = coord.serve(&slos, &universe, &arrival, &opts).unwrap();
-            r.total_queries
+            let server = Server::builder(&ctx.zoo, &lm, &profiles)
+                .policy(policy)
+                .build();
+            server.run(&scenario).unwrap().total_queries
         });
     }
 
     // Real PJRT serving: run the selected stitched chain for every query.
     println!("\n== real-PJRT serving loop (SparseLoom selection, 4 tasks × 50 queries) ==\n");
-    let rt = Runtime::new()?;
-    let opts = ServeOpts::default();
-    let prepared = coord.prepare(&slos, &universe, &opts)?;
+    let rt = match Runtime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping real-PJRT loop: {e:#}");
+            return Ok(());
+        }
+    };
+    let server = Server::builder(&ctx.zoo, &lm, &profiles).build();
+    let prepared = server.prepare(&slos, &universe)?;
     // Warm executables + weights.
     let mut inputs = BTreeMap::new();
     for (name, sel) in &prepared.selections {

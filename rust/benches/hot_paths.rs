@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use sparseloom::benchkit::{black_box, Bench};
 use sparseloom::coordinator::{Coordinator, ServeOpts};
 use sparseloom::experiments::Ctx;
+use sparseloom::scenario::{Scenario, Server};
 use sparseloom::gbdt::{Gbdt, GbdtParams};
 use sparseloom::optimizer::{feasible_set, optimize};
 use sparseloom::preloader::Hotness;
@@ -95,13 +96,19 @@ fn main() -> anyhow::Result<()> {
     b.case("coordinator: prepare (plan+preload)", || {
         coord.prepare(&slos, &universe, &opts).unwrap().order.len()
     });
-    let prepared = coord.prepare(&slos, &universe, &opts)?;
+    let server = Server::builder(&ctx.zoo, &lm, &profiles).build();
     let arrival: Vec<String> = profiles.keys().cloned().collect();
-    b.case("coordinator: serve 4×100 queries (sim)", || {
-        coord
-            .serve_prepared(prepared.clone(), &slos, &arrival, &opts)
-            .unwrap()
-            .total_queries
+    let scenario = Scenario::closed_loop(&arrival, slos.clone())
+        .with_universe(universe.clone());
+    server.run(&scenario)?; // warm the plan cache: the case times serving
+    b.case("server: run 4×100 closed-loop queries (sim)", || {
+        server.run(&scenario).unwrap().total_queries
+    });
+    let open = Scenario::poisson(&arrival, slos.clone(), 50.0, 2_000.0)
+        .with_seed(3)
+        .with_universe(universe.clone());
+    b.case("server: run Poisson open loop 4×~100 (sim)", || {
+        server.run(&open).unwrap().total_queries
     });
 
     // --- rng / substrate sanity ----------------------------------------

@@ -1,4 +1,4 @@
-//! The multi-DNN serving coordinator (paper Fig. 6, phase 3).
+//! The multi-DNN planning engine (paper Fig. 6, phases 1–2).
 //!
 //! Given per-task SLOs and a policy, the coordinator:
 //!
@@ -6,35 +6,33 @@
 //!    which dispatches to Algorithm 1 for SparseLoom);
 //! 2. **preloads** — fills the unified memory pool (Algorithm 2 hotness
 //!    plan under a budget for SparseLoom; all selected blobs for
-//!    baselines), charging compile/load time for anything missing;
-//! 3. **serves** — drives the closed-loop query streams of all tasks
-//!    through the per-processor pipelines (discrete-event `SocSim`; the
-//!    paper's 100 queries × batch 1 per task), optionally executing the
-//!    *real* PJRT chain per query;
-//! 4. **monitors** — collects SLO feedback and switches variants
-//!    mid-run when a task is violating (the runtime-rescheduling path
-//!    whose cost Fig. 5a breaks down).
+//!    baselines), charging compile/load time for anything missing.
+//!
+//! Serving (phases 3–4: driving query streams through the per-processor
+//! pipelines and monitoring SLO feedback) lives in `scenario::Server`,
+//! which owns a `Coordinator` and exposes the typed `Scenario` API.
+//! The coordinator is the *internal* planning engine behind it.
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
 use crate::baselines::{self, Policy};
-use crate::metrics::{RunReport, SwitchBreakdown, TaskOutcome};
+use crate::metrics::SwitchBreakdown;
 use crate::optimizer::{feasible_set, Selection};
 use crate::preloader::{full_preload_bytes, preload, Hotness, PreloadPlan};
 use crate::profiler::TaskProfile;
 use crate::runtime::Runtime;
-use crate::soc::{BlobId, LatencyModel, MemoryPool, Processor, SocSim};
+use crate::soc::{BlobId, LatencyModel, MemoryPool, Processor};
 use crate::stitching::Composition;
 use crate::workload::{placement_orders, Slo};
 use crate::zoo::Zoo;
 
-/// Serving options.
-#[derive(Clone)]
+/// Serving options (planning + monitoring policy knobs). Workload shape
+/// — arrival process, query counts, SLO schedule — lives in
+/// `scenario::Scenario`, not here.
+#[derive(Clone, Debug)]
 pub struct ServeOpts {
-    /// Closed-loop queries per task (paper: 100).
-    pub queries_per_task: usize,
     /// Memory budget as a fraction of full-preload bytes (Fig. 14 axis).
     pub memory_budget_frac: f64,
     pub policy: Policy,
@@ -54,7 +52,6 @@ pub struct ServeOpts {
 impl Default for ServeOpts {
     fn default() -> Self {
         Self {
-            queries_per_task: 100,
             memory_budget_frac: 1.0,
             policy: Policy::SparseLoom,
             feedback_switching: true,
@@ -66,7 +63,7 @@ impl Default for ServeOpts {
 }
 
 /// Result of the planning + preloading phase (pre-serve state).
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct Prepared {
     pub selections: BTreeMap<String, Option<Selection>>,
     pub order: Vec<Processor>,
@@ -100,13 +97,13 @@ impl<'a> Coordinator<'a> {
         self
     }
 
-    fn subgraphs(&self) -> usize {
+    pub(crate) fn subgraphs(&self) -> usize {
         self.zoo.subgraphs
     }
 
     /// Phase 2 (Alg. 2): build the preload plan + memory pool once for
     /// an SLO universe Ψ and a budget. The pool persists across SLO
-    /// changes (`serve_sequence`).
+    /// changes (scheduled scenarios).
     pub fn build_pool(
         &self,
         slo_universe: &[Slo],
@@ -301,270 +298,9 @@ impl<'a> Coordinator<'a> {
             .all(|(j, &vi)| pool.contains(&BlobId::new(task, vi, j)))
     }
 
-    /// Phase 3+4: run the closed-loop streams and judge SLOs.
-    ///
-    /// Virtual timing comes from the platform model via `SocSim`; when a
-    /// runtime is attached, every `real_exec_every`-th query also runs
-    /// the real PJRT chain (correct logits, real wall time recorded
-    /// separately by the caller).
-    pub fn serve(
-        &self,
-        slos: &BTreeMap<String, Slo>,
-        slo_universe: &[Slo],
-        arrival_order: &[String],
-        opts: &ServeOpts,
-    ) -> Result<RunReport> {
-        let prepared = self.prepare(slos, slo_universe, opts)?;
-        self.serve_prepared(prepared, slos, arrival_order, opts)
-    }
-
-    /// Serve a *sequence* of SLO configurations with a persistent
-    /// memory pool — the runtime-rescheduling scenario of §3.4 / Fig. 14:
-    /// every SLO change re-plans, and any newly needed subgraph that the
-    /// budgeted pool does not hold pays its compile+load latency on the
-    /// spot (amortized over that config's queries).
-    pub fn serve_sequence(
-        &self,
-        configs: &[BTreeMap<String, Slo>],
-        slo_universe: &[Slo],
-        arrival_order: &[String],
-        opts: &ServeOpts,
-    ) -> Result<Vec<RunReport>> {
-        let (preload_plan, mut pool) = self.build_pool(slo_universe, opts)?;
-        let mut reports = Vec::with_capacity(configs.len());
-        for slos in configs {
-            let prepared = self.prepare_with_pool(
-                slos,
-                opts,
-                preload_plan.clone(),
-                pool.clone(),
-            )?;
-            pool = prepared.pool.clone();
-            let r = self.serve_prepared(prepared, slos, arrival_order, opts)?;
-            reports.push(r);
-        }
-        Ok(reports)
-    }
-
-    /// Serve with an existing `Prepared` state (lets experiments reuse
-    /// the planning phase across arrival orders).
-    pub fn serve_prepared(
-        &self,
-        mut prepared: Prepared,
-        slos: &BTreeMap<String, Slo>,
-        arrival_order: &[String],
-        opts: &ServeOpts,
-    ) -> Result<RunReport> {
-        let platform = &self.lm.platform;
-        let mut sim = SocSim::new(&platform.processor_list());
-        let s = self.subgraphs();
-        let np_assign = baselines::np_task_processor(self.profiles, platform);
-        let orders_omega = placement_orders(platform, s);
-
-        // Per-task mutable serving state.
-        struct TaskState {
-            comp: Option<Composition>,
-            accuracy: Option<f64>,
-            ready_ms: f64,
-            /// One-off latency charged to the next query (switch cost).
-            pending_penalty_ms: f64,
-            latencies: Vec<f64>,
-            switches: usize,
-        }
-        let mut states: BTreeMap<&str, TaskState> = BTreeMap::new();
-        for name in arrival_order {
-            let p = &self.profiles[name];
-            let order_for_task: Vec<Processor> = if opts.policy.is_partitioned() {
-                prepared.order.clone()
-            } else {
-                vec![np_assign[name]; s]
-            };
-            // Best-effort serving: a task with no SLO-feasible variant
-            // still runs (real systems do not refuse service) — it takes
-            // the minimum-latency *pure* variant supported on its order
-            // and is judged (and will violate) against its SLO.
-            let sel = prepared.selections.get(name).copied().flatten().or_else(|| {
-                let mut best: Option<Selection> = None;
-                for i in 0..p.space.n_variants {
-                    let k = p.space.pure_index(i);
-                    let comp = p.space.composition(k);
-                    if let Some(l) = p.latency_est(&comp, &order_for_task) {
-                        if best.map(|b| l < b.latency_ms).unwrap_or(true) {
-                            best = Some(Selection {
-                                stitched_index: k,
-                                latency_ms: l,
-                                accuracy: p.accuracy(k),
-                            });
-                        }
-                    }
-                }
-                best
-            });
-            let feasible = prepared
-                .selections
-                .get(name)
-                .copied()
-                .flatten()
-                .is_some();
-            let judged_acc = sel.map(|sel| {
-                if feasible {
-                    self.judged_accuracy(p, sel.stitched_index, opts)
-                } else {
-                    // Judged infeasible: report the served variant's truth
-                    // accuracy only if it happens to satisfy nothing —
-                    // mark as violated via `None` accuracy.
-                    f64::NEG_INFINITY
-                }
-            });
-            states.insert(
-                name.as_str(),
-                TaskState {
-                    comp: sel.map(|sel| p.space.composition(sel.stitched_index)),
-                    accuracy: judged_acc.filter(|a| a.is_finite()),
-                    ready_ms: 0.0,
-                    pending_penalty_ms: prepared
-                        .switch_penalty_ms
-                        .get(name)
-                        .copied()
-                        .unwrap_or(0.0),
-                    latencies: Vec::new(),
-                    switches: 0,
-                },
-            );
-        }
-
-        let feedback_window = 20usize;
-        let q_total = opts.queries_per_task;
-
-        for q in 0..q_total {
-            for name in arrival_order {
-                let p = &self.profiles[name];
-                let tz = self.zoo.task(name)?;
-                let st = states.get_mut(name.as_str()).unwrap();
-                let Some(comp) = st.comp.clone() else { continue };
-
-                // Stage-by-stage booking on the pipeline.
-                let order: Vec<Processor> = if opts.policy.is_partitioned() {
-                    prepared.order.clone()
-                } else {
-                    vec![np_assign[name]; s]
-                };
-                // The SLO-judged quantity is the *service* (inference)
-                // latency — the sum of stage executions plus any switch
-                // cost hitting this query — matching the paper's
-                // per-inference latency SLOs. Queueing delay from
-                // co-running tasks still shapes the virtual timeline and
-                // therefore throughput (Fig. 11) and placement effects
-                // (Fig. 13).
-                // NP execution runs all T tasks concurrently on one
-                // processor and pays the co-execution slowdown κ; the
-                // pipeline time-multiplexes exclusively and does not.
-                let coexec = if opts.policy.is_partitioned() {
-                    1.0
-                } else {
-                    1.0 + platform.coexec_slowdown
-                        * (arrival_order.len().saturating_sub(1)) as f64
-                };
-                let arrival = st.ready_ms + st.pending_penalty_ms;
-                let mut service = st.pending_penalty_ms;
-                st.pending_penalty_ms = 0.0;
-                let mut stage_ready = arrival;
-                for (j, &vi) in comp.0.iter().enumerate() {
-                    let proc = order[j];
-                    let Some(ms) = self.lm.subgraph_ms(tz, vi, j, proc).map(|m| m * coexec) else {
-                        // Unsupported on this processor: treat as a
-                        // violation-by-construction (infinite latency).
-                        st.comp = None;
-                        break;
-                    };
-                    let hop = if j > 0 { 1.0 + platform.interproc_overhead } else { 1.0 };
-                    let (_, end) = sim.book(proc, stage_ready, ms * hop);
-                    service += ms * hop;
-                    stage_ready = end;
-                }
-                if st.comp.is_none() {
-                    continue;
-                }
-                st.latencies.push(service);
-                st.ready_ms = stage_ready; // closed loop: next query issues now
-
-                // --- SLO feedback: switch variants when violating -------
-                if opts.feedback_switching
-                    && opts.policy == Policy::SparseLoom
-                    && q > 0
-                    && q % feedback_window == 0
-                {
-                    let slo = &slos[name];
-                    let recent = &st.latencies[st.latencies.len().saturating_sub(feedback_window)..];
-                    let mean = crate::util::stats::mean(recent);
-                    if mean > slo.max_latency_ms {
-                        if let Some(new_sel) = self.switch_variant(
-                            p, slo, &prepared.order, &orders_omega, mean,
-                        ) {
-                            let new_comp = p.space.composition(new_sel.stitched_index);
-                            // Charge load for blobs not resident.
-                            let mut penalty = 0.0;
-                            for (j, &vi) in new_comp.0.iter().enumerate() {
-                                let id = BlobId::new(name, vi, j);
-                                if !prepared.pool.touch(&id) {
-                                    let bytes = tz.variants[vi].subgraphs[j].bytes;
-                                    penalty += self.lm.load_ms(bytes, order[j]);
-                                    prepared.pool.make_room(bytes);
-                                    prepared.pool.load(id, bytes);
-                                }
-                            }
-                            st.pending_penalty_ms += penalty;
-                            st.comp = Some(new_comp);
-                            st.accuracy =
-                                Some(self.judged_accuracy(p, new_sel.stitched_index, opts));
-                            st.switches += 1;
-                        }
-                    }
-                }
-
-                // --- optional real execution through PJRT ----------------
-                if let Some(rt) = self.runtime {
-                    if q == 0 {
-                        let dim = tz.input_dim;
-                        let input: Vec<f32> =
-                            (0..dim).map(|i| (i as f32 * 0.13).cos()).collect();
-                        let comp_idx = st.comp.as_ref().unwrap().0.clone();
-                        let _ = rt.run_chain(self.zoo, name, &comp_idx, 1, &input)?;
-                    }
-                }
-            }
-        }
-
-        // --- judge outcomes ---------------------------------------------
-        let mut outcomes = Vec::new();
-        let mut total_queries = 0usize;
-        for name in arrival_order {
-            let st = &states[name.as_str()];
-            let slo = &slos[name];
-            let mean = crate::util::stats::mean(&st.latencies);
-            let p95 = crate::util::stats::percentile(&st.latencies, 95.0);
-            total_queries += st.latencies.len();
-            outcomes.push(TaskOutcome {
-                task: name.clone(),
-                accuracy: st.accuracy,
-                mean_latency_ms: mean,
-                p95_latency_ms: p95,
-                queries_completed: st.latencies.len(),
-                slo_accuracy: slo.min_accuracy,
-                slo_latency_ms: slo.max_latency_ms,
-            });
-        }
-
-        Ok(RunReport {
-            outcomes,
-            makespan_ms: sim.horizon_ms,
-            total_queries,
-        })
-    }
-
     /// Judged accuracy: oracle truth when available and requested, else
     /// the estimator's prediction.
-    fn judged_accuracy(&self, p: &TaskProfile, k: usize, opts: &ServeOpts) -> f64 {
+    pub(crate) fn judged_accuracy(&self, p: &TaskProfile, k: usize, opts: &ServeOpts) -> f64 {
         if opts.judge_on_truth {
             if let Some(truth) = &p.acc_truth {
                 return truth[k];
@@ -575,7 +311,7 @@ impl<'a> Coordinator<'a> {
 
     /// Feedback switch: find a feasible composition with estimated
     /// latency enough below the observed mean to matter.
-    fn switch_variant(
+    pub(crate) fn switch_variant(
         &self,
         p: &TaskProfile,
         slo: &Slo,
@@ -601,7 +337,7 @@ impl<'a> Coordinator<'a> {
 }
 
 #[cfg(test)]
-mod tests {
+pub mod tests {
     use super::*;
     use crate::profiler::{profile_task, ProfilerConfig};
     use crate::soc::latency::tests::tiny_taskzoo;
@@ -609,7 +345,7 @@ mod tests {
     use crate::zoo::KernelPath;
 
     /// Build a one-task Zoo around the tiny taskzoo for serve tests.
-    fn tiny_zoo() -> Zoo {
+    pub fn tiny_zoo() -> Zoo {
         let tz = tiny_taskzoo();
         Zoo {
             root: std::path::PathBuf::from("/nonexistent"),
@@ -624,7 +360,8 @@ mod tests {
         }
     }
 
-    fn setup() -> (Zoo, LatencyModel, BTreeMap<String, TaskProfile>) {
+    /// Shared serve-test fixture (also used by `scenario` tests).
+    pub fn setup() -> (Zoo, LatencyModel, BTreeMap<String, TaskProfile>) {
         let zoo = tiny_zoo();
         let mut b = BaseLatencies::new();
         for sg in 0..2 {
@@ -657,65 +394,11 @@ mod tests {
         (zoo, lm, profiles)
     }
 
-    fn slos(acc: f64, lat: f64) -> BTreeMap<String, Slo> {
+    pub fn slos(acc: f64, lat: f64) -> BTreeMap<String, Slo> {
         BTreeMap::from([(
             "tiny".to_string(),
             Slo { min_accuracy: acc, max_latency_ms: lat },
         )])
-    }
-
-    #[test]
-    fn serve_completes_all_queries() {
-        let (zoo, lm, profiles) = setup();
-        let coord = Coordinator::new(&zoo, &lm, &profiles);
-        let s = slos(0.5, 1e9);
-        let uni: Vec<Slo> = s.values().copied().collect();
-        let report = coord
-            .serve(&s, &uni, &["tiny".to_string()], &ServeOpts::default())
-            .unwrap();
-        assert_eq!(report.total_queries, 100);
-        assert!(report.throughput_qps() > 0.0);
-        assert_eq!(report.violation_rate(), 0.0);
-    }
-
-    #[test]
-    fn impossible_slo_violates() {
-        let (zoo, lm, profiles) = setup();
-        let coord = Coordinator::new(&zoo, &lm, &profiles);
-        let s = slos(2.0, 1e9);
-        let uni: Vec<Slo> = s.values().copied().collect();
-        let report = coord
-            .serve(&s, &uni, &["tiny".to_string()], &ServeOpts::default())
-            .unwrap();
-        assert_eq!(report.violation_rate(), 1.0);
-    }
-
-    #[test]
-    fn smaller_budget_cannot_beat_full_budget() {
-        let (zoo, lm, profiles) = setup();
-        let coord = Coordinator::new(&zoo, &lm, &profiles);
-        let s = slos(0.75, 50.0);
-        let uni: Vec<Slo> = s.values().copied().collect();
-        let mut full = ServeOpts::default();
-        full.memory_budget_frac = 1.0;
-        let mut tiny = ServeOpts::default();
-        tiny.memory_budget_frac = 0.05;
-        let r_full = coord.serve(&s, &uni, &["tiny".to_string()], &full).unwrap();
-        let r_tiny = coord.serve(&s, &uni, &["tiny".to_string()], &tiny).unwrap();
-        assert!(r_tiny.violation_rate() >= r_full.violation_rate());
-    }
-
-    #[test]
-    fn all_policies_serve_without_panic() {
-        let (zoo, lm, profiles) = setup();
-        let coord = Coordinator::new(&zoo, &lm, &profiles);
-        let s = slos(0.6, 200.0);
-        let uni: Vec<Slo> = s.values().copied().collect();
-        for policy in Policy::all() {
-            let opts = ServeOpts { policy, ..Default::default() };
-            let r = coord.serve(&s, &uni, &["tiny".to_string()], &opts).unwrap();
-            assert!(r.total_queries > 0, "{}", policy.name());
-        }
     }
 
     #[test]
@@ -732,5 +415,17 @@ mod tests {
         // Per-MiB costs keep the Fig. 5a ratio: compile ≫ load.
         let b = &prepared.switch_breakdown;
         assert!(b.compile_ms > 5.0 * b.load_ms, "{b:?}");
+    }
+
+    #[test]
+    fn opts_and_prepared_are_debuggable() {
+        let (zoo, lm, profiles) = setup();
+        let coord = Coordinator::new(&zoo, &lm, &profiles);
+        let s = slos(0.5, 1e9);
+        let uni: Vec<Slo> = s.values().copied().collect();
+        let opts = ServeOpts::default();
+        let prepared = coord.prepare(&s, &uni, &opts).unwrap();
+        assert!(format!("{opts:?}").contains("SparseLoom"));
+        assert!(format!("{prepared:?}").contains("selections"));
     }
 }

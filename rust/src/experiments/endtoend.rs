@@ -8,9 +8,9 @@ use anyhow::Result;
 
 use super::Ctx;
 use crate::baselines::Policy;
-use crate::coordinator::{Coordinator, ServeOpts};
 use crate::metrics::{render_table, Aggregate};
 use crate::profiler::ProfilerConfig;
+use crate::scenario::{Scenario, Server};
 use crate::soc::Platform;
 use crate::util::Rng;
 use crate::workload::{
@@ -23,7 +23,9 @@ use crate::workload::{
 /// variance across orders is low, as the paper also notes).
 const ARRIVALS: usize = 6;
 
-/// Run all policies × platforms over a per-task SLO-set builder.
+/// Run all policies × platforms over a per-task SLO-set builder. Each
+/// (SLO config, arrival order) pair is one closed-loop `Scenario`; the
+/// server memoizes planning per config, so arrival orders reuse it.
 fn policy_sweep(
     ctx: &Ctx,
     slo_builder: impl Fn(&TaskRanges) -> Vec<Slo>,
@@ -34,7 +36,6 @@ fn policy_sweep(
         let lm = ctx.lm(platform.clone());
         let zoo = ctx.zoo_for(&platform);
         let profiles = ctx.profiles(&lm, &cfg)?;
-        let coord = Coordinator::new(zoo, &lm, &profiles);
         let tasks: Vec<String> = profiles.keys().cloned().collect();
 
         // Per-task SLO sets + the universe Ψ for the preloader.
@@ -54,17 +55,17 @@ fn policy_sweep(
         arrivals.truncate(ARRIVALS);
 
         for policy in Policy::all() {
+            let server = Server::builder(zoo, &lm, &profiles).policy(policy).build();
             let mut agg = Aggregate::default();
-            let opts = ServeOpts { policy, ..Default::default() };
             for i in 0..n_cfg {
                 let slos: BTreeMap<String, Slo> = grids
                     .iter()
                     .map(|(name, g)| (name.clone(), g[i]))
                     .collect();
-                let prepared = coord.prepare(&slos, &universe, &opts)?;
                 for arrival in &arrivals {
-                    let r = coord.serve_prepared(prepared.clone(), &slos, arrival, &opts)?;
-                    agg.push(&r);
+                    let sc = Scenario::closed_loop(arrival, slos.clone())
+                        .with_universe(universe.clone());
+                    agg.push(&server.run(&sc)?);
                 }
             }
             results

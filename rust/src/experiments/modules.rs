@@ -8,10 +8,11 @@ use anyhow::Result;
 
 use super::Ctx;
 
-use crate::coordinator::{Coordinator, ServeOpts};
+use crate::coordinator::ServeOpts;
 use crate::metrics::{render_table, Aggregate};
 use crate::preloader::Hotness;
 use crate::profiler::ProfilerConfig;
+use crate::scenario::{Scenario, Server};
 use crate::soc::{order_label, Platform};
 use crate::util::{stats, Rng};
 use crate::workload::{
@@ -88,7 +89,7 @@ pub fn fig13(ctx: &Ctx) -> Result<String> {
     for platform in Platform::all() {
         let lm = ctx.lm(platform.clone());
         let profiles = ctx.profiles(&lm, &cfg)?;
-        let coord = Coordinator::new(ctx.zoo_for(&platform), &lm, &profiles);
+        let zoo = ctx.zoo_for(&platform);
         let (grids, universe) = task_slos(ctx, &lm)?;
         let tasks: Vec<String> = profiles.keys().cloned().collect();
         let orders = placement_orders(&platform, ctx.zoo.subgraphs);
@@ -101,15 +102,14 @@ pub fn fig13(ctx: &Ctx) -> Result<String> {
             // A lax joint SLO (index 4: loosest latency row of the grid)
             // so throughput reflects placement, not infeasibility.
             let slos = joint_slo(&grids, 4);
-            let opts = ServeOpts {
-                force_order: Some(order.clone()),
-                feedback_switching: false,
-                ..Default::default()
-            };
-            let prepared = coord.prepare(&slos, &universe, &opts)?;
+            let server = Server::builder(zoo, &lm, &profiles)
+                .force_order(order.clone())
+                .feedback_switching(false)
+                .build();
             for arrival in arrival_combinations(&tasks).into_iter().take(6) {
-                let r = coord.serve_prepared(prepared.clone(), &slos, &arrival, &opts)?;
-                agg.push(&r);
+                let sc = Scenario::closed_loop(&arrival, slos.clone())
+                    .with_universe(universe.clone());
+                agg.push(&server.run(&sc)?);
             }
             let tput = agg.mean_throughput();
             rows.push(vec![order_label(order), format!("{tput:.1}")]);
@@ -141,7 +141,7 @@ pub fn fig14(ctx: &Ctx) -> Result<String> {
     for platform in Platform::all() {
         let lm = ctx.lm(platform.clone());
         let profiles = ctx.profiles(&lm, &cfg)?;
-        let coord = Coordinator::new(ctx.zoo_for(&platform), &lm, &profiles);
+        let zoo = ctx.zoo_for(&platform);
         let (grids, _universe) = task_slos(ctx, &lm)?;
         let _ = &grids;
         let tasks: Vec<String> = profiles.keys().cloned().collect();
@@ -154,8 +154,9 @@ pub fn fig14(ctx: &Ctx) -> Result<String> {
         let mut full_viol = 0.0;
         let mut results = Vec::new();
         // Runtime-rescheduling scenario (§3.4): the SLO configuration
-        // changes every `queries_per_task` queries; the budgeted pool
-        // persists across changes, so misses pay compile+load latency.
+        // changes every phase (25 closed-loop queries); the budgeted
+        // pool persists across phases, so misses pay compile+load
+        // latency.
         // The walk alternates strict ladder configs (C3–C8, where the
         // feasible sets Θ are small and budget pressure binds) — lax
         // grid configs have |Θ| in the hundreds and any budget serves
@@ -183,13 +184,17 @@ pub fn fig14(ctx: &Ctx) -> Result<String> {
         let universe: Vec<Slo> = ladders.values().flatten().copied().collect();
         for &b in &budgets {
             let mut agg = Aggregate::default();
-            let opts = ServeOpts {
-                memory_budget_frac: b,
-                queries_per_task: 25,
-                ..Default::default()
-            };
+            let server = Server::builder(zoo, &lm, &profiles)
+                .memory_budget_frac(b)
+                .build();
             for arrival in &arrivals {
-                for r in coord.serve_sequence(&configs, &universe, arrival, &opts)? {
+                // The SLO schedule IS the scenario: one phase per
+                // config, persistent pool across phases.
+                let sc = Scenario::closed_loop(arrival, configs[0].clone())
+                    .with_queries(25)
+                    .with_schedule(configs.clone())
+                    .with_universe(universe.clone());
+                for r in server.run_schedule(&sc)? {
                     agg.push(&r);
                 }
             }
@@ -301,7 +306,7 @@ pub fn ablate(ctx: &Ctx) -> Result<String> {
     let platform = Platform::desktop();
     let lm = ctx.lm(platform.clone());
     let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
-    let coord = Coordinator::new(ctx.zoo_for(&platform), &lm, &profiles);
+    let zoo = ctx.zoo_for(&platform);
     let (grids, universe) = task_slos(ctx, &lm)?;
     let tasks: Vec<String> = profiles.keys().cloned().collect();
     let mut rng = Rng::new(17);
@@ -325,13 +330,14 @@ pub fn ablate(ctx: &Ctx) -> Result<String> {
     let n_cfg = grids.values().next().map(|g| g.len()).unwrap_or(0);
     let mut rows = Vec::new();
     for (name, opts) in &variants {
+        let server = Server::builder(zoo, &lm, &profiles).opts(opts.clone()).build();
         let mut agg = Aggregate::default();
         for i in 0..n_cfg {
             let slos = joint_slo(&grids, i);
-            let prepared = coord.prepare(&slos, &universe, opts)?;
             for arrival in &arrivals {
-                let r = coord.serve_prepared(prepared.clone(), &slos, arrival, opts)?;
-                agg.push(&r);
+                let sc = Scenario::closed_loop(arrival, slos.clone())
+                    .with_universe(universe.clone());
+                agg.push(&server.run(&sc)?);
             }
         }
         rows.push(vec![

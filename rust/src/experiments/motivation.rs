@@ -282,7 +282,7 @@ pub fn fig5(ctx: &Ctx) -> Result<String> {
     // Memory breakdown: prepared pool state under full preloading.
     let cfg = crate::profiler::ProfilerConfig::default();
     let profiles = ctx.profiles(&lm, &cfg)?;
-    let coord = crate::coordinator::Coordinator::new(&ctx.zoo, &lm, &profiles);
+    let server = crate::scenario::Server::builder(&ctx.zoo, &lm, &profiles).build();
     let mut slos = std::collections::BTreeMap::new();
     for (name, _) in &profiles {
         let tr = TaskRanges::measure(ctx.zoo.task(name)?, &lm);
@@ -292,7 +292,7 @@ pub fn fig5(ctx: &Ctx) -> Result<String> {
         );
     }
     let universe: Vec<Slo> = slos.values().copied().collect();
-    let prepared = coord.prepare(&slos, &universe, &Default::default())?;
+    let prepared = server.prepare(&slos, &universe)?;
     let mut pool = prepared.pool.clone();
     pool.other_bytes = 64 * 1024 * 1024; // engine + activations overhead
     let b = pool.breakdown();

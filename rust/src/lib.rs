@@ -10,8 +10,10 @@
 //!   (subgraph, kernel-path, batch); weights serialized per variant.
 //! - **L3 (this crate)** — the serving system: model stitching over the
 //!   sparse zoo, estimator-based profiling, sparsity-aware placement,
-//!   hot-subgraph preloading, and a multi-task coordinator executing
-//!   stitched variants through PJRT.
+//!   hot-subgraph preloading, and a scenario-driven server
+//!   (`scenario::Server` over the planning `coordinator`) executing
+//!   stitched variants through PJRT under closed-loop, Poisson
+//!   open-loop, bursty, or traced arrivals.
 //!
 //! See `DESIGN.md` for the architecture and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
@@ -30,6 +32,7 @@ pub mod preloader;
 pub mod profiler;
 pub mod propcheck;
 pub mod runtime;
+pub mod scenario;
 pub mod soc;
 pub mod stitching;
 pub mod util;

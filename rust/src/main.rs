@@ -1,7 +1,7 @@
 //! SparseLoom CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   serve       run the multi-task coordinator on one SLO configuration
+//!   serve       run a serving scenario (closed-loop, Poisson, bursty, file)
 //!   exp         regenerate a paper table/figure (or `all`)
 //!   profile     build + report the performance profile (estimators)
 //!   calibrate   measure PJRT base latencies and write the cache
@@ -14,12 +14,13 @@ use anyhow::{bail, Result};
 
 use sparseloom::baselines::Policy;
 use sparseloom::cli::{App, Command};
-use sparseloom::coordinator::{Coordinator, ServeOpts};
+use sparseloom::coordinator::ServeOpts;
 use sparseloom::experiments::{self, Ctx};
 use sparseloom::profiler::ProfilerConfig;
 use sparseloom::runtime::Runtime;
+use sparseloom::scenario::{Admission, Scenario, Server};
 use sparseloom::soc::Platform;
-use sparseloom::workload::{arrival_combinations, slo_grid, TaskRanges};
+use sparseloom::workload::{slo_grid, TaskRanges};
 use sparseloom::zoo::Zoo;
 
 fn app() -> App {
@@ -27,11 +28,21 @@ fn app() -> App {
         name: "sparseloom",
         about: "multi-DNN inference of sparse models on (simulated) edge SoCs",
         commands: vec![
-            Command::new("serve", "run the coordinator on one SLO config")
+            Command::new("serve", "run a serving scenario on one SLO config")
                 .opt("artifacts", "artifact directory", Some("artifacts"))
                 .opt("platform", "desktop|laptop|orin", Some("desktop"))
                 .opt("policy", "SparseLoom or a baseline name", Some("SparseLoom"))
-                .opt("queries", "queries per task", Some("100"))
+                .opt("scenario", "closed|poisson|bursty (or use --scenario-file)", Some("closed"))
+                .opt("scenario-file", "load a Scenario JSON file (overrides workload flags)", None)
+                .opt("save-scenario", "write the constructed scenario as JSON", None)
+                .opt("queries", "closed loop: queries per task", Some("100"))
+                .opt("stagger-ms", "closed loop: per-slot start stagger", Some("0"))
+                .opt("rate-qps", "open loop: per-task arrival rate", Some("20"))
+                .opt("horizon-ms", "open loop: stream horizon", Some("5000"))
+                .opt("burst-qps", "bursty: second-half-of-period rate", Some("80"))
+                .opt("period-ms", "bursty: rate square-wave period", Some("1000"))
+                .opt("admission", "always | queue:<N> | deadline:<slack>", Some("always"))
+                .opt("seed", "arrival-stream seed", Some("0"))
                 .opt("slo", "grid index 0..24 of the SLO config", Some("12"))
                 .opt("budget", "memory budget fraction of full preload", Some("1.0"))
                 .switch("real", "execute real PJRT chains during serving")
@@ -85,6 +96,26 @@ fn main() {
     }
 }
 
+/// Parse `always` / `queue:<N>` / `deadline:<slack>` admission specs.
+fn parse_admission(spec: &str) -> Result<Admission> {
+    if spec.eq_ignore_ascii_case("always") || spec.eq_ignore_ascii_case("none") {
+        return Ok(Admission::Always);
+    }
+    if let Some(n) = spec.strip_prefix("queue:") {
+        let max_queued = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("queue:<N> expects an integer, got {n:?}"))?;
+        return Ok(Admission::QueueCap { max_queued });
+    }
+    if let Some(s) = spec.strip_prefix("deadline:") {
+        let slack = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("deadline:<slack> expects a number, got {s:?}"))?;
+        return Ok(Admission::Deadline { slack });
+    }
+    bail!("unknown admission spec {spec:?} (want always | queue:<N> | deadline:<slack>)")
+}
+
 fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
     let ctx = Ctx::load(&args.get_or("artifacts", "artifacts"), args.switch("synthetic"))?;
     let platform = Platform::by_name(&args.get_or("platform", "desktop"))?;
@@ -94,50 +125,100 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
     let zoo = ctx.zoo_for(&platform);
     let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
 
-    let slo_idx = args.get_usize("slo")?.unwrap_or(12);
-    let mut slos = BTreeMap::new();
-    let mut universe = Vec::new();
-    for (name, tz) in &zoo.tasks {
-        let grid = slo_grid(&TaskRanges::measure(tz, &lm));
-        universe.extend(grid.iter().copied());
-        slos.insert(name.clone(), grid[slo_idx.min(grid.len() - 1)]);
+    let tasks: Vec<String> = profiles.keys().cloned().collect();
+
+    // --- construct (or load) the typed scenario -------------------------
+    // A scenario file carries its own SLO schedule; the grid-derived
+    // SLO config only applies when the scenario is built from flags.
+    let mut slo_note = String::new();
+    let scenario = if let Some(path) = args.get("scenario-file") {
+        Scenario::load(path)?
+    } else {
+        let slo_idx = args.get_usize("slo")?.unwrap_or(12);
+        let mut slos = BTreeMap::new();
+        let mut universe = Vec::new();
+        for (name, tz) in &zoo.tasks {
+            let grid = slo_grid(&TaskRanges::measure(tz, &lm));
+            universe.extend(grid.iter().copied());
+            slos.insert(name.clone(), grid[slo_idx.min(grid.len() - 1)]);
+        }
+        slo_note = format!(" | SLO grid idx {slo_idx}");
+        let kind = args.get_or("scenario", "closed");
+        let base = match kind.as_str() {
+            "closed" => Scenario::closed_loop(&tasks, slos.clone())
+                .with_queries(args.get_usize("queries")?.unwrap_or(100))
+                .with_stagger_ms(args.get_f64("stagger-ms")?.unwrap_or(0.0)),
+            "poisson" => Scenario::poisson(
+                &tasks,
+                slos.clone(),
+                args.get_f64("rate-qps")?.unwrap_or(20.0),
+                args.get_f64("horizon-ms")?.unwrap_or(5_000.0),
+            ),
+            "bursty" => Scenario::bursty(
+                &tasks,
+                slos.clone(),
+                args.get_f64("rate-qps")?.unwrap_or(20.0),
+                args.get_f64("burst-qps")?.unwrap_or(80.0),
+                args.get_f64("period-ms")?.unwrap_or(1_000.0),
+                args.get_f64("horizon-ms")?.unwrap_or(5_000.0),
+            ),
+            other => bail!("unknown scenario {other:?} (want closed|poisson|bursty)"),
+        };
+        base.with_universe(universe)
+            .with_admission(parse_admission(&args.get_or("admission", "always"))?)
+            .with_seed(args.get_usize("seed")?.unwrap_or(0) as u64)
+    };
+    if let Some(path) = args.get("save-scenario") {
+        scenario.save(path)?;
+        println!("wrote scenario to {path}");
     }
 
-    let rt;
-    let mut coord = Coordinator::new(zoo, &lm, &profiles);
-    if args.switch("real") {
-        rt = Runtime::new()?;
-        coord = coord.with_runtime(&rt);
-    }
-
+    // --- build the server and run ---------------------------------------
     let opts = ServeOpts {
-        queries_per_task: args.get_usize("queries")?.unwrap_or(100),
         memory_budget_frac: args.get_f64("budget")?.unwrap_or(1.0),
         policy,
         ..Default::default()
     };
-    let tasks: Vec<String> = profiles.keys().cloned().collect();
-    let arrival = &arrival_combinations(&tasks)[0];
-    let report = coord.serve(&slos, &universe, arrival, &opts)?;
+    let rt;
+    let mut builder = Server::builder(zoo, &lm, &profiles).opts(opts);
+    if args.switch("real") {
+        rt = Runtime::new()?;
+        builder = builder.runtime(&rt);
+    }
+    let server = builder.build();
+    let report = server.run(&scenario)?;
 
-    println!("policy: {} | platform: {} | SLO grid idx {}", policy.name(), lm.platform.name, slo_idx);
+    println!(
+        "scenario: {} | policy: {} | platform: {}{}",
+        scenario.name,
+        policy.name(),
+        lm.platform.name,
+        slo_note,
+    );
     for o in &report.outcomes {
         println!(
-            "  {:<10} acc={:<6} mean={:.3} ms p95={:.3} ms slo=({:.3}, {:.2} ms) {}",
+            "  {:<10} acc={:<6} mean={:.3} ms p50={:.3} p95={:.3} p99={:.3} queue={:.3} ms \
+             done={} drop={} slo=({:.3}, {:.2} ms) {}",
             o.task,
             o.accuracy.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
             o.mean_latency_ms,
+            o.p50_latency_ms,
             o.p95_latency_ms,
+            o.p99_latency_ms,
+            o.mean_queueing_ms,
+            o.queries_completed,
+            o.queries_dropped,
             o.slo_accuracy,
             o.slo_latency_ms,
             if o.violated() { "VIOLATED" } else { "ok" },
         );
     }
     println!(
-        "violation rate: {:.1} % | throughput: {:.1} q/s | makespan {:.1} ms",
+        "violation rate: {:.1} % | throughput: {:.1} q/s | makespan {:.1} ms | dropped {}",
         100.0 * report.violation_rate(),
         report.throughput_qps(),
         report.makespan_ms,
+        report.total_dropped,
     );
     Ok(())
 }

@@ -5,6 +5,32 @@ use std::collections::BTreeMap;
 
 use crate::util::stats;
 
+/// One request's life cycle through the serving engine — emitted per
+/// query by `scenario::Session::submit` (arrival → queueing → placement
+/// → completion → SLO verdict).
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub task: String,
+    /// When the query entered the system (virtual ms).
+    pub arrival_ms: f64,
+    /// When its first subgraph stage started executing.
+    pub start_ms: f64,
+    /// When its last stage completed.
+    pub finish_ms: f64,
+    /// Inference (service) latency — the SLO-judged quantity: stage
+    /// executions plus any switch penalty charged to this query.
+    pub service_ms: f64,
+    /// Time spent waiting before the first stage started.
+    pub queueing_ms: f64,
+    /// Rejected by admission control (or had no runnable variant):
+    /// nothing was booked for it.
+    pub dropped: bool,
+    /// Per-request latency verdict against the task's SLO at submit
+    /// time (`None` when dropped).
+    pub slo_ok: Option<bool>,
+}
+
 /// Outcome of serving one task under one SLO configuration.
 #[derive(Clone, Debug)]
 pub struct TaskOutcome {
@@ -14,8 +40,14 @@ pub struct TaskOutcome {
     pub accuracy: Option<f64>,
     /// Mean per-query end-to-end latency (virtual ms).
     pub mean_latency_ms: f64,
+    pub p50_latency_ms: f64,
     pub p95_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    /// Mean time queries spent queued before their first stage ran.
+    pub mean_queueing_ms: f64,
     pub queries_completed: usize,
+    /// Queries rejected by admission control (open-loop overload).
+    pub queries_dropped: usize,
     /// SLO bounds it was judged against.
     pub slo_accuracy: f64,
     pub slo_latency_ms: f64,
@@ -41,6 +73,11 @@ pub struct RunReport {
     /// Total virtual time to drain all queries (ms).
     pub makespan_ms: f64,
     pub total_queries: usize,
+    /// Queries rejected by admission control across all tasks.
+    pub total_dropped: usize,
+    /// Per-request event log (arrival/queueing/placement/completion),
+    /// in submission order. Empty for legacy aggregate-only callers.
+    pub requests: Vec<RequestOutcome>,
 }
 
 impl RunReport {
@@ -151,8 +188,12 @@ mod tests {
             task: "t".into(),
             accuracy: acc,
             mean_latency_ms: lat,
+            p50_latency_ms: lat,
             p95_latency_ms: lat,
+            p99_latency_ms: lat,
+            mean_queueing_ms: 0.0,
             queries_completed: 100,
+            queries_dropped: 0,
             slo_accuracy: 0.8,
             slo_latency_ms: 50.0,
         }
@@ -172,6 +213,7 @@ mod tests {
             outcomes: vec![outcome(Some(0.9), 40.0), outcome(Some(0.7), 40.0)],
             makespan_ms: 2000.0,
             total_queries: 400,
+            ..Default::default()
         };
         assert!((r.violation_rate() - 0.5).abs() < 1e-12);
         assert!((r.throughput_qps() - 200.0).abs() < 1e-9);
@@ -184,11 +226,13 @@ mod tests {
             outcomes: vec![outcome(Some(0.9), 40.0)],
             makespan_ms: 1000.0,
             total_queries: 100,
+            ..Default::default()
         });
         agg.push(&RunReport {
             outcomes: vec![outcome(None, 0.0)],
             makespan_ms: 1000.0,
             total_queries: 50,
+            ..Default::default()
         });
         assert!((agg.mean_violation_pct() - 50.0).abs() < 1e-9);
         assert!((agg.mean_throughput() - 75.0).abs() < 1e-9);

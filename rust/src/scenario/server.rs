@@ -1,0 +1,871 @@
+//! The serving facade: `ServerBuilder` → `Server` → `Session`.
+//!
+//! A [`Server`] owns the planning engine ([`Coordinator`]) — profiles,
+//! latency model, memory pool, optional PJRT runtime — and executes
+//! [`Scenario`]s. `Server::run` drives a whole scenario to a
+//! [`RunReport`]; `Server::session` + [`Session::submit`] is the
+//! per-request path, emitting one [`RequestOutcome`] event per query
+//! (arrival → queueing → placement → completion → SLO verdict).
+//!
+//! Phase 3+4 of the paper's Fig. 6 pipeline live here: virtual timing
+//! comes from the platform model via `SocSim`; when a runtime is
+//! attached, the first query of each task also executes the *real*
+//! PJRT chain (correct logits; real wall time is the caller's to
+//! record). SLO feedback switches variants mid-run when a task is
+//! observed violating (the runtime-rescheduling path of Fig. 5a).
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::baselines::{self, Policy};
+use crate::coordinator::{Coordinator, Prepared, ServeOpts};
+use crate::metrics::{RequestOutcome, RunReport, TaskOutcome};
+use crate::profiler::TaskProfile;
+use crate::runtime::Runtime;
+use crate::soc::{BlobId, LatencyModel, Processor, SocSim};
+use crate::stitching::Composition;
+use crate::util::stats;
+use crate::workload::{placement_orders, Query, Slo};
+use crate::zoo::Zoo;
+
+use super::{Admission, Scenario};
+
+/// Queries observed before a feedback-switch decision re-evaluates.
+const FEEDBACK_WINDOW: usize = 20;
+
+/// Builder for a [`Server`]: the only way to construct one.
+pub struct ServerBuilder<'a> {
+    zoo: &'a Zoo,
+    lm: &'a LatencyModel,
+    profiles: &'a BTreeMap<String, TaskProfile>,
+    runtime: Option<&'a Runtime>,
+    opts: ServeOpts,
+}
+
+impl<'a> ServerBuilder<'a> {
+    pub fn new(
+        zoo: &'a Zoo,
+        lm: &'a LatencyModel,
+        profiles: &'a BTreeMap<String, TaskProfile>,
+    ) -> Self {
+        Self { zoo, lm, profiles, runtime: None, opts: ServeOpts::default() }
+    }
+
+    /// Attach a live PJRT runtime: the first query of each task then
+    /// executes the real stitched chain.
+    pub fn runtime(mut self, rt: &'a Runtime) -> Self {
+        self.runtime = Some(rt);
+        self
+    }
+
+    /// Replace the whole option block at once.
+    pub fn opts(mut self, opts: ServeOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.opts.policy = policy;
+        self
+    }
+
+    /// Memory budget as a fraction of full-preload bytes (Fig. 14 axis).
+    pub fn memory_budget_frac(mut self, frac: f64) -> Self {
+        self.opts.memory_budget_frac = frac;
+        self
+    }
+
+    pub fn feedback_switching(mut self, on: bool) -> Self {
+        self.opts.feedback_switching = on;
+        self
+    }
+
+    pub fn verify_selection(mut self, on: bool) -> Self {
+        self.opts.verify_selection = on;
+        self
+    }
+
+    pub fn judge_on_truth(mut self, on: bool) -> Self {
+        self.opts.judge_on_truth = on;
+        self
+    }
+
+    /// Force a placement order instead of optimizing over Ω (Fig. 13).
+    pub fn force_order(mut self, order: Vec<Processor>) -> Self {
+        self.opts.force_order = Some(order);
+        self
+    }
+
+    pub fn build(self) -> Server<'a> {
+        let mut coord = Coordinator::new(self.zoo, self.lm, self.profiles);
+        if let Some(rt) = self.runtime {
+            coord = coord.with_runtime(rt);
+        }
+        Server { coord, opts: self.opts, plan_cache: RefCell::new(BTreeMap::new()) }
+    }
+}
+
+/// Exact planning-cache key: SLO map + universe, with f64 bounds
+/// compared bitwise (cheaper than formatting, no collision risk).
+type PlanKey = (Vec<(String, u64, u64)>, Vec<(u64, u64)>);
+
+fn plan_key(slos: &BTreeMap<String, Slo>, universe: &[Slo]) -> PlanKey {
+    (
+        slos.iter()
+            .map(|(name, s)| {
+                (name.clone(), s.min_accuracy.to_bits(), s.max_latency_ms.to_bits())
+            })
+            .collect(),
+        universe
+            .iter()
+            .map(|s| (s.min_accuracy.to_bits(), s.max_latency_ms.to_bits()))
+            .collect(),
+    )
+}
+
+/// Look up one phase's SLO configuration (shared bounds check).
+fn phase_slos<'b>(
+    scenario: &'b Scenario,
+    phase: usize,
+) -> Result<&'b BTreeMap<String, Slo>> {
+    scenario.schedule.get(phase).ok_or_else(|| {
+        anyhow::anyhow!(
+            "scenario {:?} has {} phase(s), no phase {phase}",
+            scenario.name,
+            scenario.schedule.len()
+        )
+    })
+}
+
+/// The serving facade. Construct via [`Server::builder`].
+pub struct Server<'a> {
+    coord: Coordinator<'a>,
+    opts: ServeOpts,
+    /// Planning is deterministic in (SLOs, universe) for fixed opts, so
+    /// repeated runs of the same phase (e.g. sweeps over arrival
+    /// orders) reuse one `Prepared` instead of re-optimizing.
+    plan_cache: RefCell<BTreeMap<PlanKey, Prepared>>,
+}
+
+impl<'a> Server<'a> {
+    pub fn builder(
+        zoo: &'a Zoo,
+        lm: &'a LatencyModel,
+        profiles: &'a BTreeMap<String, TaskProfile>,
+    ) -> ServerBuilder<'a> {
+        ServerBuilder::new(zoo, lm, profiles)
+    }
+
+    pub fn opts(&self) -> &ServeOpts {
+        &self.opts
+    }
+
+    /// The internal planning engine (read-only escape hatch).
+    pub fn coordinator(&self) -> &Coordinator<'a> {
+        &self.coord
+    }
+
+    /// Plan + preload one SLO configuration (phases 1–2), memoized per
+    /// (SLOs, universe). Exposed so callers can inspect selections and
+    /// placement before (or without) serving.
+    pub fn prepare(
+        &self,
+        slos: &BTreeMap<String, Slo>,
+        universe: &[Slo],
+    ) -> Result<Prepared> {
+        let key = plan_key(slos, universe);
+        if let Some(p) = self.plan_cache.borrow().get(&key) {
+            return Ok(p.clone());
+        }
+        let p = self.coord.prepare(slos, universe, &self.opts)?;
+        self.plan_cache.borrow_mut().insert(key, p.clone());
+        Ok(p)
+    }
+
+    /// Run a whole scenario. Multi-phase schedules are merged into one
+    /// report (outcomes and events concatenated, makespans summed);
+    /// use [`Server::run_schedule`] for per-phase reports.
+    pub fn run(&self, scenario: &Scenario) -> Result<RunReport> {
+        let mut reports = self.run_schedule(scenario)?;
+        if reports.len() == 1 {
+            return Ok(reports.pop().unwrap());
+        }
+        let mut merged = RunReport::default();
+        for r in reports {
+            merged.makespan_ms += r.makespan_ms;
+            merged.total_queries += r.total_queries;
+            merged.total_dropped += r.total_dropped;
+            merged.outcomes.extend(r.outcomes);
+            merged.requests.extend(r.requests);
+        }
+        Ok(merged)
+    }
+
+    /// Run every phase of the scenario's SLO schedule, one report per
+    /// phase. Multi-phase schedules keep a persistent memory pool
+    /// across phases (§3.4 / Fig. 14): each re-plan pays compile+load
+    /// for whatever the budgeted pool does not hold.
+    pub fn run_schedule(&self, scenario: &Scenario) -> Result<Vec<RunReport>> {
+        if scenario.schedule.is_empty() {
+            bail!("scenario {:?} has an empty SLO schedule", scenario.name);
+        }
+        let universe = scenario.slo_universe();
+        if scenario.schedule.len() == 1 {
+            let prepared = self.prepare(&scenario.schedule[0], &universe)?;
+            let mut session = self.session_with(scenario, 0, prepared)?;
+            session.drive(&scenario.stream(0))?;
+            return Ok(vec![session.finish()]);
+        }
+        let (preload_plan, mut pool) = self.coord.build_pool(&universe, &self.opts)?;
+        let mut reports = Vec::with_capacity(scenario.schedule.len());
+        for (phase, slos) in scenario.schedule.iter().enumerate() {
+            let prepared = self.coord.prepare_with_pool(
+                slos,
+                &self.opts,
+                preload_plan.clone(),
+                pool.clone(),
+            )?;
+            let mut session = self.session_with(scenario, phase, prepared)?;
+            session.drive(&scenario.stream(phase))?;
+            // Carry the *post-serve* pool forward so blobs loaded by
+            // mid-phase feedback switches stay resident for the next
+            // phase (the pool really is persistent across phases).
+            pool = session.prepared.pool.clone();
+            reports.push(session.finish());
+        }
+        Ok(reports)
+    }
+
+    /// Open a serving session for one phase of a scenario — the
+    /// per-request path. Plans (memoized) and initializes per-task
+    /// state; the caller then [`Session::submit`]s queries and
+    /// [`Session::finish`]es for the report.
+    pub fn session<'s>(
+        &'s self,
+        scenario: &Scenario,
+        phase: usize,
+    ) -> Result<Session<'s, 'a>> {
+        let slos = phase_slos(scenario, phase)?;
+        let prepared = self.prepare(slos, &scenario.slo_universe())?;
+        self.session_with(scenario, phase, prepared)
+    }
+
+    fn session_with<'s>(
+        &'s self,
+        scenario: &Scenario,
+        phase: usize,
+        prepared: Prepared,
+    ) -> Result<Session<'s, 'a>> {
+        let slos = phase_slos(scenario, phase)?;
+        let platform = &self.coord.lm.platform;
+        let s = self.coord.zoo.subgraphs;
+        let sim = SocSim::new(&platform.processor_list());
+        let np_assign = baselines::np_task_processor(self.coord.profiles, platform);
+        let orders_omega = placement_orders(platform, s);
+
+        let mut states: BTreeMap<String, TaskState> = BTreeMap::new();
+        for name in &scenario.tasks {
+            if states.contains_key(name) {
+                bail!("scenario lists task {name:?} more than once");
+            }
+            let Some(p) = self.coord.profiles.get(name) else {
+                bail!("scenario references unknown task {name:?}");
+            };
+            if !slos.contains_key(name) {
+                bail!("scenario phase {phase} has no SLO for task {name:?}");
+            }
+            let order: Vec<Processor> = if self.opts.policy.is_partitioned() {
+                prepared.order.clone()
+            } else {
+                vec![np_assign[name]; s]
+            };
+            // NP execution runs all T tasks concurrently on one
+            // processor and pays the co-execution slowdown κ; the
+            // pipeline time-multiplexes exclusively and does not.
+            let coexec = if self.opts.policy.is_partitioned() {
+                1.0
+            } else {
+                1.0 + platform.coexec_slowdown
+                    * (scenario.tasks.len().saturating_sub(1)) as f64
+            };
+            // Best-effort serving: a task with no SLO-feasible variant
+            // still runs (real systems do not refuse service) — it takes
+            // the minimum-latency *pure* variant supported on its order
+            // and is judged (and will violate) against its SLO.
+            let planned = prepared.selections.get(name).copied().flatten();
+            let sel = planned.or_else(|| {
+                let mut best: Option<crate::optimizer::Selection> = None;
+                for i in 0..p.space.n_variants {
+                    let k = p.space.pure_index(i);
+                    let comp = p.space.composition(k);
+                    if let Some(l) = p.latency_est(&comp, &order) {
+                        if best.map(|b| l < b.latency_ms).unwrap_or(true) {
+                            best = Some(crate::optimizer::Selection {
+                                stitched_index: k,
+                                latency_ms: l,
+                                accuracy: p.accuracy(k),
+                            });
+                        }
+                    }
+                }
+                best
+            });
+            let accuracy = match (planned, sel) {
+                // Planned feasible: judge on truth when available.
+                (Some(_), Some(sel)) => {
+                    Some(self.coord.judged_accuracy(p, sel.stitched_index, &self.opts))
+                }
+                // Judged infeasible: no accuracy → counted as violated.
+                _ => None,
+            };
+            states.insert(
+                name.clone(),
+                TaskState {
+                    comp: sel.map(|sel| p.space.composition(sel.stitched_index)),
+                    accuracy,
+                    ready_ms: 0.0,
+                    pending_penalty_ms: prepared
+                        .switch_penalty_ms
+                        .get(name)
+                        .copied()
+                        .unwrap_or(0.0),
+                    latencies: Vec::new(),
+                    queueing: Vec::new(),
+                    switches: 0,
+                    dropped: 0,
+                    inflight: VecDeque::new(),
+                    ran_real: false,
+                    order,
+                    coexec,
+                },
+            );
+        }
+
+        Ok(Session {
+            server: self,
+            prepared,
+            slos: slos.clone(),
+            admission: scenario.admission,
+            self_clocked: matches!(scenario.arrival, super::Arrival::ClosedLoop { .. }),
+            tasks: scenario.tasks.clone(),
+            sim,
+            states,
+            orders_omega,
+            requests: Vec::new(),
+        })
+    }
+}
+
+/// Per-task mutable serving state.
+struct TaskState {
+    comp: Option<Composition>,
+    accuracy: Option<f64>,
+    /// When this task's previous query finished (per-task FIFO).
+    ready_ms: f64,
+    /// One-off latency charged to the next query (switch cost).
+    pending_penalty_ms: f64,
+    latencies: Vec<f64>,
+    queueing: Vec<f64>,
+    switches: usize,
+    dropped: usize,
+    /// Completion times of admitted queries (queue-cap accounting).
+    inflight: VecDeque<f64>,
+    ran_real: bool,
+    /// Stage → processor for this task (pipeline order or NP repeat).
+    order: Vec<Processor>,
+    /// Co-execution slowdown factor for NP policies.
+    coexec: f64,
+}
+
+/// One in-flight serving run: accepts queries, books them on the
+/// simulated SoC, and accumulates per-request events.
+pub struct Session<'s, 'a> {
+    server: &'s Server<'a>,
+    prepared: Prepared,
+    slos: BTreeMap<String, Slo>,
+    admission: Admission,
+    /// Closed-loop scenarios are self-clocking: a query only *exists*
+    /// once its predecessor completes, so its effective arrival is the
+    /// predecessor's completion, not the nominal stagger offset.
+    self_clocked: bool,
+    tasks: Vec<String>,
+    sim: SocSim,
+    states: BTreeMap<String, TaskState>,
+    orders_omega: Vec<Vec<Processor>>,
+    requests: Vec<RequestOutcome>,
+}
+
+impl<'s, 'a> Session<'s, 'a> {
+    /// Submit one query: admission check, stage-by-stage booking on
+    /// the pipeline, SLO feedback, optional real PJRT execution.
+    /// Returns (and records) the query's [`RequestOutcome`].
+    pub fn submit(&mut self, q: &Query) -> Result<RequestOutcome> {
+        let coord = &self.server.coord;
+        let opts = &self.server.opts;
+        let platform = &coord.lm.platform;
+        let Some(slo) = self.slos.get(&q.task).copied() else {
+            bail!("query {} targets task {:?} with no SLO in this session", q.id, q.task);
+        };
+        let self_clocked = self.self_clocked;
+        let Some(st) = self.states.get_mut(&q.task) else {
+            bail!("query {} targets task {:?} not in this scenario", q.id, q.task);
+        };
+
+        // No runnable variant at all: nothing to book.
+        let Some(comp) = st.comp.clone() else {
+            st.dropped += 1;
+            let ev = dropped_event(q, None);
+            self.requests.push(ev.clone());
+            return Ok(ev);
+        };
+
+        // A closed-loop query only exists once its predecessor finishes
+        // (self-clocking), so it can never be "late"; an open-loop query
+        // arrives at its nominal time regardless of backlog.
+        let effective_arrival = if self_clocked {
+            q.arrival_ms.max(st.ready_ms)
+        } else {
+            q.arrival_ms
+        };
+
+        // --- admission control (per-task backlog) -----------------------
+        while st
+            .inflight
+            .front()
+            .map(|&done| done <= effective_arrival)
+            .unwrap_or(false)
+        {
+            st.inflight.pop_front();
+        }
+        let backlog_ms = (st.ready_ms - effective_arrival).max(0.0);
+        let admit = match self.admission {
+            Admission::Always => true,
+            Admission::QueueCap { max_queued } => st.inflight.len() <= max_queued,
+            Admission::Deadline { slack } => backlog_ms <= slack * slo.max_latency_ms,
+        };
+        if !admit {
+            st.dropped += 1;
+            let ev = dropped_event(q, Some(backlog_ms));
+            self.requests.push(ev.clone());
+            return Ok(ev);
+        }
+
+        // --- stage-by-stage booking on the pipeline ---------------------
+        // The SLO-judged quantity is the *service* (inference) latency —
+        // the sum of stage executions plus any switch cost hitting this
+        // query — matching the paper's per-inference latency SLOs.
+        // Queueing delay from arrivals and co-running tasks still shapes
+        // the virtual timeline and therefore throughput (Fig. 11) and
+        // placement effects (Fig. 13).
+        let tz = coord.zoo.task(&q.task)?;
+        let penalty = st.pending_penalty_ms;
+        let issue = effective_arrival.max(st.ready_ms) + penalty;
+        let mut service = penalty;
+        st.pending_penalty_ms = 0.0;
+        let mut stage_ready = issue;
+        let mut start_ms = issue;
+        let mut supported = true;
+        for (j, &vi) in comp.0.iter().enumerate() {
+            let proc = st.order[j];
+            let Some(ms) = coord.lm.subgraph_ms(tz, vi, j, proc).map(|m| m * st.coexec)
+            else {
+                // Unsupported on this processor: violation-by-
+                // construction (infinite latency); stop serving the task.
+                st.comp = None;
+                supported = false;
+                break;
+            };
+            let hop = if j > 0 { 1.0 + platform.interproc_overhead } else { 1.0 };
+            let (start, end) = self.sim.book(proc, stage_ready, ms * hop);
+            if j == 0 {
+                start_ms = start;
+            }
+            service += ms * hop;
+            stage_ready = end;
+        }
+        if !supported {
+            st.dropped += 1;
+            let ev = dropped_event(q, None);
+            self.requests.push(ev.clone());
+            return Ok(ev);
+        }
+        // The switch penalty is part of *service* (it delays this
+        // query's inference), so it is excluded from queueing:
+        // finish − arrival = queueing + service on an idle pipeline.
+        let queueing_ms = (start_ms - effective_arrival - penalty).max(0.0);
+        st.latencies.push(service);
+        st.queueing.push(queueing_ms);
+        st.ready_ms = stage_ready;
+        st.inflight.push_back(stage_ready);
+
+        // --- SLO feedback: switch variants when violating ---------------
+        let served = st.latencies.len();
+        if opts.feedback_switching
+            && opts.policy == Policy::SparseLoom
+            && served > 0
+            && served % FEEDBACK_WINDOW == 0
+        {
+            if let Some(p) = coord.profiles.get(&q.task) {
+                let recent =
+                    &st.latencies[st.latencies.len().saturating_sub(FEEDBACK_WINDOW)..];
+                let mean = stats::mean(recent);
+                if mean > slo.max_latency_ms {
+                    if let Some(new_sel) = coord.switch_variant(
+                        p,
+                        &slo,
+                        &self.prepared.order,
+                        &self.orders_omega,
+                        mean,
+                    ) {
+                        let new_comp = p.space.composition(new_sel.stitched_index);
+                        // Charge load for blobs not resident.
+                        let mut penalty = 0.0;
+                        for (j, &vi) in new_comp.0.iter().enumerate() {
+                            let id = BlobId::new(&q.task, vi, j);
+                            if !self.prepared.pool.touch(&id) {
+                                let bytes = tz.variants[vi].subgraphs[j].bytes;
+                                penalty += coord.lm.load_ms(bytes, st.order[j]);
+                                self.prepared.pool.make_room(bytes);
+                                self.prepared.pool.load(id, bytes);
+                            }
+                        }
+                        st.pending_penalty_ms += penalty;
+                        st.comp = Some(new_comp);
+                        st.accuracy = Some(coord.judged_accuracy(
+                            p,
+                            new_sel.stitched_index,
+                            opts,
+                        ));
+                        st.switches += 1;
+                    }
+                }
+            }
+        }
+
+        // --- optional real execution through PJRT -----------------------
+        if let Some(rt) = coord.runtime {
+            if !st.ran_real {
+                st.ran_real = true;
+                let dim = tz.input_dim;
+                let input: Vec<f32> =
+                    (0..dim).map(|i| (i as f32 * 0.13).cos()).collect();
+                let comp_idx = st.comp.as_ref().unwrap_or(&comp).0.clone();
+                let _ = rt.run_chain(coord.zoo, &q.task, &comp_idx, 1, &input)?;
+            }
+        }
+
+        let ev = RequestOutcome {
+            id: q.id,
+            task: q.task.clone(),
+            arrival_ms: q.arrival_ms,
+            start_ms,
+            finish_ms: stage_ready,
+            service_ms: service,
+            queueing_ms,
+            dropped: false,
+            slo_ok: Some(service <= slo.max_latency_ms),
+        };
+        self.requests.push(ev.clone());
+        Ok(ev)
+    }
+
+    /// Submit a whole stream in simulated-time order: at every step the
+    /// task whose next query would issue earliest goes first. For open
+    /// loops this follows arrival order; for closed loops (all arrivals
+    /// at the stagger offset) it reproduces the paper's self-clocking
+    /// round-robin.
+    pub fn drive(&mut self, queries: &[Query]) -> Result<()> {
+        let order: Vec<String> = self.tasks.clone();
+        let mut pending: BTreeMap<&str, VecDeque<&Query>> = BTreeMap::new();
+        for q in queries {
+            if !self.states.contains_key(&q.task) {
+                bail!(
+                    "query {} targets task {:?} not in this scenario",
+                    q.id,
+                    q.task
+                );
+            }
+            pending.entry(q.task.as_str()).or_default().push_back(q);
+        }
+        loop {
+            let mut next: Option<(&str, f64)> = None;
+            for name in &order {
+                let Some(queue) = pending.get(name.as_str()) else { continue };
+                let Some(q) = queue.front() else { continue };
+                let ready = self
+                    .states
+                    .get(name.as_str())
+                    .map(|st| st.ready_ms)
+                    .unwrap_or(0.0);
+                let issue = q.arrival_ms.max(ready);
+                if next.map(|(_, t)| issue < t).unwrap_or(true) {
+                    next = Some((name.as_str(), issue));
+                }
+            }
+            let Some((task, _)) = next else { break };
+            let q = pending.get_mut(task).unwrap().pop_front().unwrap();
+            self.submit(q)?;
+        }
+        Ok(())
+    }
+
+    /// Events recorded so far (submission order).
+    pub fn events(&self) -> &[RequestOutcome] {
+        &self.requests
+    }
+
+    /// Variant switches performed so far (feedback rescheduling).
+    pub fn switches(&self) -> usize {
+        self.states.values().map(|st| st.switches).sum()
+    }
+
+    /// Close the session: judge every task against its SLO and return
+    /// the report (per-task percentiles + the full event log).
+    pub fn finish(self) -> RunReport {
+        let mut outcomes = Vec::with_capacity(self.tasks.len());
+        let mut total_queries = 0usize;
+        let mut total_dropped = 0usize;
+        for name in &self.tasks {
+            let st = &self.states[name];
+            let slo = &self.slos[name];
+            total_queries += st.latencies.len();
+            total_dropped += st.dropped;
+            outcomes.push(TaskOutcome {
+                task: name.clone(),
+                accuracy: st.accuracy,
+                mean_latency_ms: stats::mean(&st.latencies),
+                p50_latency_ms: stats::percentile(&st.latencies, 50.0),
+                p95_latency_ms: stats::percentile(&st.latencies, 95.0),
+                p99_latency_ms: stats::percentile(&st.latencies, 99.0),
+                mean_queueing_ms: stats::mean(&st.queueing),
+                queries_completed: st.latencies.len(),
+                queries_dropped: st.dropped,
+                slo_accuracy: slo.min_accuracy,
+                slo_latency_ms: slo.max_latency_ms,
+            });
+        }
+        RunReport {
+            outcomes,
+            makespan_ms: self.sim.horizon_ms,
+            total_queries,
+            total_dropped,
+            requests: self.requests,
+        }
+    }
+}
+
+fn dropped_event(q: &Query, backlog_ms: Option<f64>) -> RequestOutcome {
+    RequestOutcome {
+        id: q.id,
+        task: q.task.clone(),
+        arrival_ms: q.arrival_ms,
+        start_ms: q.arrival_ms,
+        finish_ms: q.arrival_ms,
+        service_ms: 0.0,
+        queueing_ms: backlog_ms.unwrap_or(0.0),
+        dropped: true,
+        slo_ok: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::tests::{setup, slos};
+    use crate::scenario::Scenario;
+
+    fn tiny_tasks() -> Vec<String> {
+        vec!["tiny".to_string()]
+    }
+
+    #[test]
+    fn closed_loop_scenario_matches_legacy_report_shape() {
+        // The legacy `Coordinator::serve` contract for one SLO config:
+        // 100 queries served, positive throughput, zero violations
+        // under a lax SLO — now expressed as a Scenario through Server.
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let s = slos(0.5, 1e9);
+        let uni: Vec<Slo> = s.values().copied().collect();
+        let sc = Scenario::closed_loop(&tiny_tasks(), s).with_universe(uni);
+        let report = server.run(&sc).unwrap();
+        assert_eq!(report.total_queries, 100);
+        assert_eq!(report.outcomes.len(), 1);
+        assert!(report.throughput_qps() > 0.0);
+        assert_eq!(report.violation_rate(), 0.0);
+        assert_eq!(report.total_dropped, 0);
+        // Event log covers every query with ordered percentiles.
+        assert_eq!(report.requests.len(), 100);
+        let o = &report.outcomes[0];
+        assert!(o.p50_latency_ms <= o.p95_latency_ms + 1e-12);
+        assert!(o.p95_latency_ms <= o.p99_latency_ms + 1e-12);
+        assert!(o.mean_queueing_ms >= 0.0);
+    }
+
+    #[test]
+    fn impossible_slo_violates() {
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let sc = Scenario::closed_loop(&tiny_tasks(), slos(2.0, 1e9));
+        let report = server.run(&sc).unwrap();
+        assert_eq!(report.violation_rate(), 1.0);
+    }
+
+    #[test]
+    fn smaller_budget_cannot_beat_full_budget() {
+        let (zoo, lm, profiles) = setup();
+        let s = slos(0.75, 50.0);
+        let uni: Vec<Slo> = s.values().copied().collect();
+        let sc = Scenario::closed_loop(&tiny_tasks(), s).with_universe(uni);
+        let full = Server::builder(&zoo, &lm, &profiles)
+            .memory_budget_frac(1.0)
+            .build()
+            .run(&sc)
+            .unwrap();
+        let tiny = Server::builder(&zoo, &lm, &profiles)
+            .memory_budget_frac(0.05)
+            .build()
+            .run(&sc)
+            .unwrap();
+        assert!(tiny.violation_rate() >= full.violation_rate());
+    }
+
+    #[test]
+    fn all_policies_serve_without_panic() {
+        let (zoo, lm, profiles) = setup();
+        let sc = Scenario::closed_loop(&tiny_tasks(), slos(0.6, 200.0));
+        for policy in Policy::all() {
+            let server = Server::builder(&zoo, &lm, &profiles).policy(policy).build();
+            let r = server.run(&sc).unwrap();
+            assert!(r.total_queries > 0, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn poisson_open_loop_serves_and_reports_queueing() {
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        // ~40 qps against a ~18 ms service time: mild overload, queues
+        // must form but everything is admitted.
+        let sc = Scenario::poisson(&tiny_tasks(), slos(0.5, 1e9), 40.0, 3_000.0)
+            .with_seed(5);
+        let report = server.run(&sc).unwrap();
+        assert!(report.total_queries > 50, "{}", report.total_queries);
+        assert_eq!(report.total_dropped, 0);
+        assert_eq!(report.requests.len(), report.total_queries);
+        let o = &report.outcomes[0];
+        assert!(o.mean_queueing_ms > 0.0, "open-loop overload must queue");
+        // Arrivals are respected: no request starts before it arrives.
+        assert!(report
+            .requests
+            .iter()
+            .all(|r| r.start_ms >= r.arrival_ms - 1e-9));
+    }
+
+    #[test]
+    fn admission_control_sheds_load_under_overload() {
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let slo = slos(0.5, 50.0);
+        let heavy = Scenario::poisson(&tiny_tasks(), slo.clone(), 200.0, 2_000.0)
+            .with_seed(7);
+        let open = server.run(&heavy).unwrap();
+        assert_eq!(open.total_dropped, 0);
+
+        let capped = server
+            .run(&heavy.clone().with_admission(Admission::QueueCap { max_queued: 4 }))
+            .unwrap();
+        assert!(capped.total_dropped > 0, "queue cap must shed load");
+        assert!(capped.outcomes[0].mean_queueing_ms < open.outcomes[0].mean_queueing_ms);
+
+        let deadline = server
+            .run(&heavy.with_admission(Admission::Deadline { slack: 2.0 }))
+            .unwrap();
+        assert!(deadline.total_dropped > 0, "deadline admission must shed load");
+        // Dropped + completed covers the whole arrival stream.
+        assert_eq!(
+            deadline.total_queries + deadline.total_dropped,
+            deadline.requests.len()
+        );
+    }
+
+    #[test]
+    fn closed_loop_is_self_clocking_under_admission() {
+        // A closed-loop query only exists when its predecessor finishes,
+        // so admission control must never shed it and (with one task) no
+        // queueing delay can accumulate.
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        for admission in [
+            Admission::QueueCap { max_queued: 0 },
+            Admission::Deadline { slack: 1.0 },
+        ] {
+            let sc = Scenario::closed_loop(&tiny_tasks(), slos(0.5, 50.0))
+                .with_admission(admission);
+            let r = server.run(&sc).unwrap();
+            assert_eq!(r.total_dropped, 0, "{admission:?}: closed loop never queues");
+            assert_eq!(r.total_queries, 100);
+            assert!(r.outcomes[0].mean_queueing_ms < 1e-9, "{admission:?}");
+        }
+    }
+
+    #[test]
+    fn drive_rejects_unknown_task_queries() {
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let sc = Scenario::trace(
+            &tiny_tasks(),
+            slos(0.5, 1e9),
+            vec![crate::workload::Query {
+                task: "ghost".into(),
+                arrival_ms: 0.0,
+                id: 0,
+            }],
+        );
+        assert!(server.run(&sc).is_err(), "unknown-task trace must error");
+        // submit() reports the same condition as an error, not a panic.
+        let mut session = server.session(&sc, 0).unwrap();
+        let q = crate::workload::Query { task: "ghost".into(), arrival_ms: 0.0, id: 1 };
+        assert!(session.submit(&q).is_err());
+    }
+
+    #[test]
+    fn scheduled_scenario_yields_one_report_per_phase() {
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles)
+            .memory_budget_frac(0.2)
+            .build();
+        let sc = Scenario::closed_loop(&tiny_tasks(), slos(0.5, 1e9))
+            .with_queries(25)
+            .with_schedule(vec![slos(0.5, 1e9), slos(0.9, 30.0), slos(0.5, 1e9)]);
+        let reports = server.run_schedule(&sc).unwrap();
+        assert_eq!(reports.len(), 3);
+        for r in &reports {
+            assert_eq!(r.total_queries, 25);
+        }
+        // The merged view sums phases.
+        let merged = server.run(&sc).unwrap();
+        assert_eq!(merged.total_queries, 75);
+        assert_eq!(merged.outcomes.len(), 3);
+    }
+
+    #[test]
+    fn session_submit_emits_events() {
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let sc = Scenario::closed_loop(&tiny_tasks(), slos(0.5, 1e9)).with_queries(3);
+        let mut session = server.session(&sc, 0).unwrap();
+        for q in sc.stream(0) {
+            let ev = session.submit(&q).unwrap();
+            assert_eq!(ev.task, "tiny");
+            assert!(!ev.dropped);
+            assert!(ev.finish_ms >= ev.start_ms);
+            assert_eq!(ev.slo_ok, Some(true));
+        }
+        assert_eq!(session.events().len(), 3);
+        let report = session.finish();
+        assert_eq!(report.total_queries, 3);
+    }
+}

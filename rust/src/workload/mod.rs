@@ -166,6 +166,9 @@ pub fn closed_loop_stream(
 }
 
 /// Open-loop Poisson stream at `rate_qps` per task for `horizon_ms`.
+/// Arrivals are sorted, ids are unique across tasks, and the stream is
+/// a pure function of the `Rng` state (deterministic replay). A rate of
+/// zero yields an empty stream.
 pub fn poisson_stream(
     tasks: &[String],
     rate_qps: f64,
@@ -174,6 +177,9 @@ pub fn poisson_stream(
 ) -> Vec<Query> {
     let mut out = Vec::new();
     let mut id = 0u64;
+    if rate_qps <= 0.0 || horizon_ms <= 0.0 {
+        return out;
+    }
     for task in tasks {
         let mut t = 0.0;
         loop {
@@ -183,6 +189,44 @@ pub fn poisson_stream(
             }
             out.push(Query { task: task.clone(), arrival_ms: t, id });
             id += 1;
+        }
+    }
+    out.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
+    out
+}
+
+/// Open-loop bursty stream: a two-level modulated Poisson process. Each
+/// period of `period_ms` spends its first half at `base_qps` and its
+/// second half at `burst_qps` (per task), generated by thinning against
+/// the peak rate so the stream stays exact and deterministic under a
+/// fixed `Rng`. Ids are unique; arrivals are sorted.
+pub fn bursty_stream(
+    tasks: &[String],
+    base_qps: f64,
+    burst_qps: f64,
+    period_ms: f64,
+    horizon_ms: f64,
+    rng: &mut Rng,
+) -> Vec<Query> {
+    let peak = base_qps.max(burst_qps);
+    let mut out = Vec::new();
+    if peak <= 0.0 || period_ms <= 0.0 || horizon_ms <= 0.0 {
+        return out;
+    }
+    let mut id = 0u64;
+    for task in tasks {
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(peak / 1000.0);
+            if t >= horizon_ms {
+                break;
+            }
+            let in_burst = (t % period_ms) >= period_ms / 2.0;
+            let rate = if in_burst { burst_qps } else { base_qps };
+            if rng.f64() < rate / peak {
+                out.push(Query { task: task.clone(), arrival_ms: t, id });
+                id += 1;
+            }
         }
     }
     out.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
@@ -287,6 +331,26 @@ mod tests {
     }
 
     #[test]
+    fn closed_loop_ids_unique_and_stagger_applied() {
+        let order = vec!["x".to_string(), "y".to_string(), "z".to_string()];
+        let qs = closed_loop_stream(&order, 10, 2.5);
+        let mut ids: Vec<u64> = qs.iter().map(|q| q.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 30, "ids must be unique");
+        // Task at slot k arrives offset by k × stagger.
+        for (slot, task) in order.iter().enumerate() {
+            assert!(qs
+                .iter()
+                .filter(|q| &q.task == task)
+                .all(|q| (q.arrival_ms - slot as f64 * 2.5).abs() < 1e-12));
+        }
+        // Zero stagger: everything arrives at t = 0.
+        let flat = closed_loop_stream(&order, 3, 0.0);
+        assert!(flat.iter().all(|q| q.arrival_ms == 0.0));
+    }
+
+    #[test]
     fn poisson_stream_sorted_and_rate_sane() {
         let mut rng = Rng::new(1);
         let tasks = vec!["a".to_string()];
@@ -294,6 +358,70 @@ mod tests {
         // 100 qps over 10 s ⇒ ~1000 queries.
         assert!((800..1200).contains(&qs.len()), "{}", qs.len());
         assert!(qs.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+    }
+
+    #[test]
+    fn poisson_stream_ids_unique_across_tasks() {
+        let mut rng = Rng::new(4);
+        let tasks = vec!["a".to_string(), "b".to_string()];
+        let qs = poisson_stream(&tasks, 50.0, 2_000.0, &mut rng);
+        let mut ids: Vec<u64> = qs.iter().map(|q| q.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), qs.len(), "ids must be unique");
+        assert!(qs.iter().any(|q| q.task == "a"));
+        assert!(qs.iter().any(|q| q.task == "b"));
+    }
+
+    #[test]
+    fn poisson_stream_deterministic_under_fixed_seed() {
+        let tasks = vec!["a".to_string(), "b".to_string()];
+        let a = poisson_stream(&tasks, 80.0, 3_000.0, &mut Rng::new(7));
+        let b = poisson_stream(&tasks, 80.0, 3_000.0, &mut Rng::new(7));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.task, y.task);
+            assert_eq!(x.id, y.id);
+            assert!((x.arrival_ms - y.arrival_ms).abs() < 1e-12);
+        }
+        // A different seed gives a different stream.
+        let c = poisson_stream(&tasks, 80.0, 3_000.0, &mut Rng::new(8));
+        assert!(
+            c.len() != a.len()
+                || a.iter().zip(&c).any(|(x, y)| x.arrival_ms != y.arrival_ms)
+        );
+    }
+
+    #[test]
+    fn poisson_stream_empty_at_zero_rate() {
+        let mut rng = Rng::new(3);
+        let tasks = vec!["a".to_string()];
+        assert!(poisson_stream(&tasks, 0.0, 10_000.0, &mut rng).is_empty());
+        assert!(poisson_stream(&tasks, 10.0, 0.0, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn bursty_stream_rate_modulated_and_deterministic() {
+        let tasks = vec!["a".to_string()];
+        let a = bursty_stream(&tasks, 20.0, 200.0, 1_000.0, 20_000.0, &mut Rng::new(11));
+        let b = bursty_stream(&tasks, 20.0, 200.0, 1_000.0, 20_000.0, &mut Rng::new(11));
+        assert_eq!(a.len(), b.len());
+        assert!(a.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        let mut ids: Vec<u64> = a.iter().map(|q| q.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), a.len());
+        // Burst halves must hold clearly more arrivals than base halves.
+        let (mut base_n, mut burst_n) = (0usize, 0usize);
+        for q in &a {
+            if (q.arrival_ms % 1_000.0) >= 500.0 {
+                burst_n += 1;
+            } else {
+                base_n += 1;
+            }
+        }
+        assert!(burst_n > 3 * base_n, "burst {burst_n} vs base {base_n}");
+        assert!(bursty_stream(&tasks, 0.0, 0.0, 1_000.0, 5_000.0, &mut Rng::new(1)).is_empty());
     }
 
     #[test]

@@ -8,10 +8,10 @@
 use std::collections::BTreeMap;
 
 use sparseloom::baselines::Policy;
-use sparseloom::coordinator::{Coordinator, ServeOpts};
 use sparseloom::experiments::Ctx;
 use sparseloom::metrics::Aggregate;
 use sparseloom::profiler::{evaluate_estimators, ProfilerConfig};
+use sparseloom::scenario::{Scenario, Server};
 use sparseloom::soc::Platform;
 use sparseloom::workload::{placement_orders, slo_grid, Slo, TaskRanges};
 
@@ -41,14 +41,17 @@ fn all_policies_serve_all_platforms() {
     for platform in Platform::all() {
         let lm = ctx.lm(platform.clone());
         let profiles = ctx.profiles(&lm, &cfg).unwrap();
-        let coord = Coordinator::new(ctx.zoo_for(&platform), &lm, &profiles);
+        let zoo = ctx.zoo_for(&platform);
         let (grids, universe) = grid_slos(&ctx, &lm);
         let slos: BTreeMap<String, Slo> =
             grids.iter().map(|(n, g)| (n.clone(), g[12])).collect();
         let arrival: Vec<String> = profiles.keys().cloned().collect();
+        let sc = Scenario::closed_loop(&arrival, slos)
+            .with_queries(20)
+            .with_universe(universe);
         for policy in Policy::all() {
-            let opts = ServeOpts { policy, queries_per_task: 20, ..Default::default() };
-            let r = coord.serve(&slos, &universe, &arrival, &opts).unwrap();
+            let server = Server::builder(zoo, &lm, &profiles).policy(policy).build();
+            let r = server.run(&sc).unwrap();
             assert_eq!(
                 r.total_queries,
                 20 * profiles.len(),
@@ -67,19 +70,21 @@ fn sparseloom_not_worse_than_baselines_on_violations() {
     let platform = Platform::desktop();
     let lm = ctx.lm(platform.clone());
     let profiles = ctx.profiles(&lm, &cfg).unwrap();
-    let coord = Coordinator::new(ctx.zoo_for(&platform), &lm, &profiles);
+    let zoo = ctx.zoo_for(&platform);
     let (grids, universe) = grid_slos(&ctx, &lm);
     let arrival: Vec<String> = profiles.keys().cloned().collect();
 
     let mut rates = BTreeMap::new();
     for policy in Policy::all() {
+        let server = Server::builder(zoo, &lm, &profiles).policy(policy).build();
         let mut agg = Aggregate::default();
-        let opts = ServeOpts { policy, queries_per_task: 20, ..Default::default() };
         for i in 0..25 {
             let slos: BTreeMap<String, Slo> =
                 grids.iter().map(|(n, g)| (n.clone(), g[i])).collect();
-            let r = coord.serve(&slos, &universe, &arrival, &opts).unwrap();
-            agg.push(&r);
+            let sc = Scenario::closed_loop(&arrival, slos)
+                .with_queries(20)
+                .with_universe(universe.clone());
+            agg.push(&server.run(&sc).unwrap());
         }
         rates.insert(policy.name(), agg.mean_violation_pct());
     }
@@ -122,22 +127,21 @@ fn memory_budget_monotone_on_real_zoo() {
     let platform = Platform::desktop();
     let lm = ctx.lm(platform.clone());
     let profiles = ctx.profiles(&lm, &ProfilerConfig::default()).unwrap();
-    let coord = Coordinator::new(ctx.zoo_for(&platform), &lm, &profiles);
+    let zoo = ctx.zoo_for(&platform);
     let (grids, universe) = grid_slos(&ctx, &lm);
     let slos: BTreeMap<String, Slo> =
         grids.iter().map(|(n, g)| (n.clone(), g[12])).collect();
     let arrival: Vec<String> = profiles.keys().cloned().collect();
     let run = |frac: f64| {
-        let opts = ServeOpts {
-            memory_budget_frac: frac,
-            queries_per_task: 20,
-            ..Default::default()
-        };
-        let prepared = coord.prepare(&slos, &universe, &opts).unwrap();
+        let server = Server::builder(zoo, &lm, &profiles)
+            .memory_budget_frac(frac)
+            .build();
+        let prepared = server.prepare(&slos, &universe).unwrap();
         let penalty: f64 = prepared.switch_penalty_ms.values().sum();
-        let r = coord
-            .serve_prepared(prepared, &slos, &arrival, &opts)
-            .unwrap();
+        let sc = Scenario::closed_loop(&arrival, slos.clone())
+            .with_queries(20)
+            .with_universe(universe.clone());
+        let r = server.run(&sc).unwrap();
         (penalty, r.violation_rate())
     };
     let (pen_full, _) = run(1.0);
@@ -146,6 +150,33 @@ fn memory_budget_monotone_on_real_zoo() {
         pen_tiny >= pen_full,
         "smaller budget cannot reduce switch cost ({pen_tiny} < {pen_full})"
     );
+}
+
+#[test]
+fn poisson_scenario_end_to_end_on_real_zoo() {
+    let Some(ctx) = ctx() else { return };
+    let platform = Platform::desktop();
+    let lm = ctx.lm(platform.clone());
+    let profiles = ctx.profiles(&lm, &ProfilerConfig::default()).unwrap();
+    let zoo = ctx.zoo_for(&platform);
+    let (grids, universe) = grid_slos(&ctx, &lm);
+    let slos: BTreeMap<String, Slo> =
+        grids.iter().map(|(n, g)| (n.clone(), g[12])).collect();
+    let tasks: Vec<String> = profiles.keys().cloned().collect();
+    let server = Server::builder(zoo, &lm, &profiles).build();
+    let sc = Scenario::poisson(&tasks, slos, 20.0, 5_000.0)
+        .with_universe(universe)
+        .with_seed(1);
+    let r = server.run(&sc).unwrap();
+    assert!(r.total_queries > 0);
+    assert_eq!(r.requests.len(), r.total_queries + r.total_dropped);
+    for o in &r.outcomes {
+        assert!(o.p50_latency_ms <= o.p99_latency_ms + 1e-9, "{o:?}");
+    }
+    // Replay determinism: same scenario, same stream, same report shape.
+    let r2 = server.run(&sc).unwrap();
+    assert_eq!(r.total_queries, r2.total_queries);
+    assert!((r.makespan_ms - r2.makespan_ms).abs() < 1e-6);
 }
 
 #[test]

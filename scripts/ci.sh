@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build, test, and (when available) format check.
+# Run from anywhere; operates on the repository root.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+# rustfmt is optional in minimal toolchains; tolerate its absence but
+# fail on real formatting drift when it is installed.
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --all -- --check
+else
+    echo "== cargo fmt --check skipped (rustfmt not installed) =="
+fi
+
+echo "CI OK"
