@@ -1,0 +1,12 @@
+# Build-path entry points. The only Python step is the artifact export;
+# everything else is `cargo` (see scripts/ci.sh for the tier-1 gate).
+
+.PHONY: artifacts ci
+
+# Export the L1/L2 model-zoo artifacts the Rust serving system consumes
+# (manifest, HLO text, weight blobs, probe/eval tensors, oracles).
+artifacts:
+	cd python/compile && python3 aot.py --out ../../artifacts
+
+ci:
+	scripts/ci.sh

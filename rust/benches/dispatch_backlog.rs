@@ -1,0 +1,30 @@
+//! Backlog dispatch bench: bursty overload served by the single-server
+//! unbatched baseline vs adaptive batching and multi-server sharding
+//! (the `exp backlog` study). Runs on the real artifact zoo when
+//! `artifacts/` is present, else on the synthetic fixture — so it always
+//! produces the comparison table.
+//!
+//! Run: `cargo bench --bench dispatch_backlog`
+
+use sparseloom::experiments::{endtoend, Ctx};
+use sparseloom::fixtures;
+use sparseloom::profiler::ProfilerConfig;
+use sparseloom::soc::Platform;
+
+fn main() -> anyhow::Result<()> {
+    match Ctx::load("artifacts", false) {
+        Ok(ctx) => {
+            let platform = Platform::desktop();
+            let lm = ctx.lm(platform.clone());
+            let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
+            let zoo = ctx.zoo_for(&platform);
+            println!("{}", endtoend::backlog_comparison(zoo, &lm, &profiles)?);
+        }
+        Err(_) => {
+            eprintln!("(no artifacts/ — running on the synthetic fixture zoo)\n");
+            let (zoo, lm, profiles) = fixtures::trio();
+            println!("{}", endtoend::backlog_comparison(&zoo, &lm, &profiles)?);
+        }
+    }
+    Ok(())
+}

@@ -1,6 +1,7 @@
 //! End-to-end experiments: Figs. 10/11 (violation rate and throughput
-//! vs the six baselines across three SoCs) and Figs. 15/16 (accuracy-
-//! and latency-guaranteed SLOs).
+//! vs the six baselines across three SoCs), Figs. 15/16 (accuracy- and
+//! latency-guaranteed SLOs), and the beyond-the-paper backlog study
+//! (batched + sharded dispatch under bursty overload).
 
 use std::collections::BTreeMap;
 
@@ -8,15 +9,17 @@ use anyhow::Result;
 
 use super::Ctx;
 use crate::baselines::Policy;
-use crate::metrics::{render_table, Aggregate};
-use crate::profiler::ProfilerConfig;
-use crate::scenario::{Scenario, Server};
-use crate::soc::Platform;
+use crate::coordinator::ServeOpts;
+use crate::metrics::{render_table, Aggregate, RunReport};
+use crate::profiler::{ProfilerConfig, TaskProfile};
+use crate::scenario::{Admission, Dispatch, Scenario, Server, ShardedServer, Sharding};
+use crate::soc::{LatencyModel, Platform};
 use crate::util::Rng;
 use crate::workload::{
     accuracy_guaranteed, arrival_combinations, latency_guaranteed, slo_grid,
     Slo, TaskRanges,
 };
+use crate::zoo::Zoo;
 
 /// How many arrival combinations to average over (paper: all 24; we
 /// subsample deterministically to keep experiment wall-time short —
@@ -179,4 +182,108 @@ pub fn fig16(ctx: &Ctx) -> Result<String> {
         "Fig. 16 — violation rate (%) under latency-guaranteed SLOs",
         "[paper: SparseLoom reduces violations by up to 68.2 %]",
     ))
+}
+
+/// Backlog study (beyond the paper): bursty overload served by the
+/// single-server unbatched baseline vs batched and/or sharded dispatch.
+pub fn backlog(ctx: &Ctx) -> Result<String> {
+    let platform = Platform::desktop();
+    let lm = ctx.lm(platform.clone());
+    let zoo = ctx.zoo_for(&platform);
+    let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
+    backlog_comparison(zoo, &lm, &profiles)
+}
+
+/// Core of the backlog study, parameterized over the zoo so
+/// `benches/dispatch_backlog.rs` can run it on the synthetic fixture
+/// when `artifacts/` is absent. Rates are derived from the measured
+/// per-task latency ranges: bursts demand ~4× the pipeline's capacity,
+/// the base load ~25 %.
+pub fn backlog_comparison(
+    zoo: &Zoo,
+    lm: &LatencyModel,
+    profiles: &BTreeMap<String, TaskProfile>,
+) -> Result<String> {
+    let tasks: Vec<String> = profiles.keys().cloned().collect();
+    let mut slos: BTreeMap<String, Slo> = BTreeMap::new();
+    let mut universe = Vec::new();
+    let mut lat_sum = 0.0;
+    for name in &tasks {
+        let ranges = TaskRanges::measure(zoo.task(name)?, lm);
+        lat_sum += ranges.lat_min_ms;
+        let grid = slo_grid(&ranges);
+        universe.extend(grid.iter().copied());
+        slos.insert(name.clone(), grid[12]);
+    }
+    let mean_lat = (lat_sum / tasks.len() as f64).max(1e-6);
+    let per_task = tasks.len() as f64;
+    let base_qps = 250.0 / mean_lat / per_task;
+    let burst_qps = 4_000.0 / mean_lat / per_task;
+
+    let base = Scenario::bursty(&tasks, slos, base_qps, burst_qps, 500.0, 6_000.0)
+        .with_name("backlog")
+        .with_seed(11)
+        .with_universe(universe)
+        .with_admission(Admission::Deadline { slack: 2.0 });
+
+    let configs: Vec<(&str, usize, usize, Admission)> = vec![
+        ("1 shard, unbatched", 1, 1, Admission::Deadline { slack: 2.0 }),
+        ("1 shard, batch<=4", 1, 4, Admission::Deadline { slack: 2.0 }),
+        ("2 shards, unbatched", 2, 1, Admission::Deadline { slack: 2.0 }),
+        ("2 shards, batch<=4", 2, 4, Admission::Deadline { slack: 2.0 }),
+        (
+            "2 shards, batch<=4, fair",
+            2,
+            4,
+            Admission::Fair { slack: 2.0, weights: BTreeMap::new() },
+        ),
+    ];
+    let mut rows = Vec::new();
+    let mut baseline: Option<RunReport> = None;
+    let mut best: Option<RunReport> = None;
+    for (label, shards, max_batch, admission) in configs {
+        let sc = base
+            .clone()
+            .with_admission(admission)
+            .with_dispatch(Dispatch::batched(max_batch))
+            .with_sharding(Sharding::hash(shards));
+        let sharded =
+            ShardedServer::build(zoo, lm, profiles, ServeOpts::default(), sc.sharding.clone());
+        let report = sharded.run(&sc)?.aggregate;
+        rows.push(vec![
+            label.to_string(),
+            format!("{}", report.total_queries),
+            format!("{}", report.total_dropped),
+            format!("{:.1}", 100.0 * report.violation_rate()),
+            format!("{:.1}", report.throughput_qps()),
+            format!("{:.2}", report.mean_batch_size()),
+            format!("{:.3}", report.fairness_index()),
+            format!("{:.0}", report.makespan_ms),
+        ]);
+        if baseline.is_none() {
+            baseline = Some(report.clone());
+        }
+        if label == "2 shards, batch<=4" {
+            best = Some(report);
+        }
+    }
+    let mut out = String::from(
+        "Backlog — bursty overload: single server vs batched/sharded dispatch\n\n",
+    );
+    out.push_str(&render_table(
+        &["config", "done", "dropped", "viol%", "qps", "batch", "fairness", "makespan"],
+        &rows,
+    ));
+    let (b, s) = (baseline.unwrap(), best.unwrap());
+    out.push_str(&format!(
+        "\n2 shards × batch 4 vs baseline: completed {} vs {} ({:+}), \
+         dropped {} vs {} ({:+})\n",
+        s.total_queries,
+        b.total_queries,
+        s.total_queries as i64 - b.total_queries as i64,
+        s.total_dropped,
+        b.total_dropped,
+        s.total_dropped as i64 - b.total_dropped as i64,
+    ));
+    Ok(out)
 }

@@ -165,11 +165,12 @@ fn read_base_cache(path: &Path) -> Result<BaseLatencies> {
     Ok(base)
 }
 
-/// All experiment ids, in paper order.
+/// All experiment ids: the paper's figures/tables in paper order, plus
+/// the beyond-the-paper `backlog` dispatch study.
 pub const ALL: &[&str] = &[
     "fig3", "fig4", "table1", "table2", "fig5", "fig7", "fig8", "fig9",
     "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16",
-    "table5", "overhead", "ablate",
+    "table5", "overhead", "ablate", "backlog",
 ];
 
 /// Dispatch one experiment by id; returns the printed report.
@@ -193,6 +194,7 @@ pub fn run(ctx: &Ctx, id: &str) -> Result<String> {
         "fig11" => endtoend::fig11(ctx)?,
         "fig15" => endtoend::fig15(ctx)?,
         "fig16" => endtoend::fig16(ctx)?,
+        "backlog" => endtoend::backlog(ctx)?,
         other => anyhow::bail!("unknown experiment {other:?}; ids: {ALL:?}"),
     };
     Ok(out)

@@ -1,0 +1,197 @@
+//! Synthetic in-memory fixtures: a tiny zoo + platform model + profiles
+//! that need no `artifacts/` directory on disk.
+//!
+//! Everything downstream of the profiler (scenarios, dispatch, sharding,
+//! experiments) is exercisable from these fixtures alone, which is what
+//! doc-examples, benches, and PJRT-free environments use. The task
+//! models are stand-ins (2 subgraphs × 3 variants per task), but the
+//! *structure* the scheduler cares about — heterogeneous per-task
+//! latencies, dense/INT8/structured variant trade-offs, per-processor
+//! scaling — matches the real artifact zoos.
+//!
+//! ```
+//! use sparseloom::fixtures;
+//! use sparseloom::scenario::{Scenario, Server};
+//!
+//! let (zoo, lm, profiles) = fixtures::tiny();
+//! let server = Server::builder(&zoo, &lm, &profiles).build();
+//! let scenario = Scenario::closed_loop(&fixtures::task_names(&zoo),
+//!                                      fixtures::slos(&zoo, 0.5, 1e9))
+//!     .with_queries(5);
+//! assert_eq!(server.run(&scenario).unwrap().total_queries, 5);
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::gbdt::GbdtParams;
+use crate::profiler::{profile_task, ProfilerConfig, TaskProfile};
+use crate::soc::{BaseLatencies, LatencyModel, Platform};
+use crate::stitching::StitchSpace;
+use crate::workload::Slo;
+use crate::zoo::{
+    DType, KernelPath, Precision, SubgraphWeights, TaskVariant, TaskZoo, TensorSpec,
+    VariantSpec, VariantType, Zoo,
+};
+
+/// Subgraphs per fixture task (pipeline stages).
+pub const SUBGRAPHS: usize = 2;
+
+fn variant(
+    name: &str,
+    vtype: VariantType,
+    sparsity: f64,
+    kernel_path: KernelPath,
+    accuracy: f64,
+    bytes: u64,
+) -> TaskVariant {
+    TaskVariant {
+        spec: VariantSpec {
+            name: name.into(),
+            vtype,
+            sparsity,
+            kernel_path,
+            precision: Precision::Fp32,
+        },
+        accuracy,
+        subgraphs: (0..SUBGRAPHS)
+            .map(|_| SubgraphWeights {
+                file: PathBuf::from("/dev/null"),
+                bytes,
+                params: vec![TensorSpec { dtype: DType::F32, shape: vec![4] }],
+            })
+            .collect(),
+    }
+}
+
+fn synthetic_task(name: &str, top_accuracy: f64) -> TaskZoo {
+    TaskZoo {
+        name: name.into(),
+        family: "synthetic".into(),
+        input_dim: 8,
+        iface: vec![8; SUBGRAPHS + 1],
+        variants: vec![
+            variant("dense", VariantType::Dense, 0.0, KernelPath::Dense, top_accuracy, 1000),
+            variant(
+                "int8",
+                VariantType::Int8,
+                0.0,
+                KernelPath::Dense,
+                top_accuracy - 0.05,
+                400,
+            ),
+            variant(
+                "struct50",
+                VariantType::Structured,
+                0.5,
+                KernelPath::BlockSparse,
+                top_accuracy - 0.15,
+                600,
+            ),
+        ],
+        hlo: BTreeMap::new(),
+    }
+}
+
+/// Build a fixture from `(task name, top accuracy, base latency ms)`
+/// triples: the zoo, a desktop latency model seeded with those base
+/// latencies, and estimator-mode profiles with oracle truth attached.
+pub fn build(specs: &[(&str, f64, f64)]) -> (Zoo, LatencyModel, BTreeMap<String, TaskProfile>) {
+    let mut tasks = BTreeMap::new();
+    let mut base = BaseLatencies::new();
+    for &(name, accuracy, base_ms) in specs {
+        tasks.insert(name.to_string(), synthetic_task(name, accuracy));
+        for sg in 0..SUBGRAPHS {
+            base.set(name, sg, KernelPath::Dense, base_ms);
+            base.set(name, sg, KernelPath::BlockSparse, base_ms * 0.8);
+        }
+    }
+    let zoo = Zoo {
+        root: PathBuf::from("/nonexistent"),
+        seed: 0,
+        zoo_name: "fixture".into(),
+        subgraphs: SUBGRAPHS,
+        n_classes: 10,
+        batch_sizes: vec![1, 256],
+        probe_batch: 4,
+        n_eval: 512,
+        tasks,
+    };
+    let lm = LatencyModel::new(Platform::desktop(), base);
+    let cfg = ProfilerConfig {
+        train_samples: 6,
+        gbdt: GbdtParams {
+            n_trees: 120,
+            max_depth: 3,
+            eta: 0.2,
+            min_leaf: 1,
+            subsample: 1.0,
+            seed: 1,
+        },
+        seed: 23,
+    };
+    let mut profiles = BTreeMap::new();
+    for (name, tz) in &zoo.tasks {
+        let space = StitchSpace::for_task(tz);
+        // Oracle: mean of the parent-variant accuracies per position.
+        let oracle: Vec<f64> = space
+            .iter()
+            .map(|c| {
+                c.0.iter().map(|&i| tz.variants[i].accuracy).sum::<f64>()
+                    / SUBGRAPHS as f64
+            })
+            .collect();
+        profiles.insert(name.clone(), profile_task(tz, &lm, &oracle, &cfg, true));
+    }
+    (zoo, lm, profiles)
+}
+
+/// One-task fixture (task `"tiny"`, ~10 ms base latency per subgraph).
+pub fn tiny() -> (Zoo, LatencyModel, BTreeMap<String, TaskProfile>) {
+    build(&[("tiny", 0.90, 10.0)])
+}
+
+/// Three heterogeneous tasks (`alpha`/`beta`/`gamma` at 8/12/16 ms base
+/// latency) — enough structure for sharding and fairness scenarios.
+pub fn trio() -> (Zoo, LatencyModel, BTreeMap<String, TaskProfile>) {
+    build(&[("alpha", 0.92, 8.0), ("beta", 0.88, 12.0), ("gamma", 0.85, 16.0)])
+}
+
+/// A uniform SLO map over every task of a fixture zoo.
+pub fn slos(zoo: &Zoo, min_accuracy: f64, max_latency_ms: f64) -> BTreeMap<String, Slo> {
+    zoo.tasks
+        .keys()
+        .map(|name| (name.clone(), Slo { min_accuracy, max_latency_ms }))
+        .collect()
+}
+
+/// Task names in zoo (BTreeMap) order.
+pub fn task_names(zoo: &Zoo) -> Vec<String> {
+    zoo.tasks.keys().cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixtures_profile_without_artifacts() {
+        let (zoo, lm, profiles) = trio();
+        assert_eq!(zoo.tasks.len(), 3);
+        assert_eq!(profiles.len(), 3);
+        for (name, p) in &profiles {
+            assert_eq!(p.space.len(), 9, "{name}: 3 variants × 2 subgraphs");
+            assert!(p.acc_truth.is_some());
+        }
+        // Heterogeneous base latencies survive into the latency model.
+        let a = lm
+            .subgraph_ms(zoo.task("alpha").unwrap(), 0, 0, crate::soc::Processor::Cpu)
+            .unwrap();
+        let g = lm
+            .subgraph_ms(zoo.task("gamma").unwrap(), 0, 0, crate::soc::Processor::Cpu)
+            .unwrap();
+        assert!(g > a, "gamma ({g} ms) must be slower than alpha ({a} ms)");
+        assert_eq!(slos(&zoo, 0.5, 40.0).len(), 3);
+        assert_eq!(task_names(&zoo), vec!["alpha", "beta", "gamma"]);
+    }
+}

@@ -24,6 +24,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod exec;
 pub mod experiments;
+pub mod fixtures;
 pub mod gbdt;
 pub mod json;
 pub mod metrics;

@@ -16,9 +16,10 @@ use sparseloom::baselines::Policy;
 use sparseloom::cli::{App, Command};
 use sparseloom::coordinator::ServeOpts;
 use sparseloom::experiments::{self, Ctx};
+use sparseloom::metrics::RunReport;
 use sparseloom::profiler::ProfilerConfig;
 use sparseloom::runtime::Runtime;
-use sparseloom::scenario::{Admission, Scenario, Server};
+use sparseloom::scenario::{Admission, Dispatch, Scenario, Server, ShardedServer, Sharding};
 use sparseloom::soc::Platform;
 use sparseloom::workload::{slo_grid, TaskRanges};
 use sparseloom::zoo::Zoo;
@@ -41,7 +42,10 @@ fn app() -> App {
                 .opt("horizon-ms", "open loop: stream horizon", Some("5000"))
                 .opt("burst-qps", "bursty: second-half-of-period rate", Some("80"))
                 .opt("period-ms", "bursty: rate square-wave period", Some("1000"))
-                .opt("admission", "always | queue:<N> | deadline:<slack>", Some("always"))
+                .opt("admission", "always | queue:<N> | deadline:<slack> | fair[:<slack>]", Some("always"))
+                .opt("shards", "partition tasks across N servers (task-name hash)", Some("1"))
+                .opt("max-batch", "coalesce up to K same-task queries under backlog", Some("1"))
+                .opt("min-queue", "waiting queries before batching kicks in", Some("2"))
                 .opt("seed", "arrival-stream seed", Some("0"))
                 .opt("slo", "grid index 0..24 of the SLO config", Some("12"))
                 .opt("budget", "memory budget fraction of full preload", Some("1.0"))
@@ -96,7 +100,8 @@ fn main() {
     }
 }
 
-/// Parse `always` / `queue:<N>` / `deadline:<slack>` admission specs.
+/// Parse `always` / `queue:<N>` / `deadline:<slack>` / `fair[:<slack>]`
+/// admission specs.
 fn parse_admission(spec: &str) -> Result<Admission> {
     if spec.eq_ignore_ascii_case("always") || spec.eq_ignore_ascii_case("none") {
         return Ok(Admission::Always);
@@ -113,7 +118,19 @@ fn parse_admission(spec: &str) -> Result<Admission> {
             .map_err(|_| anyhow::anyhow!("deadline:<slack> expects a number, got {s:?}"))?;
         return Ok(Admission::Deadline { slack });
     }
-    bail!("unknown admission spec {spec:?} (want always | queue:<N> | deadline:<slack>)")
+    if spec.eq_ignore_ascii_case("fair") {
+        return Ok(Admission::Fair { slack: 2.0, weights: BTreeMap::new() });
+    }
+    if let Some(s) = spec.strip_prefix("fair:") {
+        let slack = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fair:<slack> expects a number, got {s:?}"))?;
+        return Ok(Admission::Fair { slack, weights: BTreeMap::new() });
+    }
+    bail!(
+        "unknown admission spec {spec:?} \
+         (want always | queue:<N> | deadline:<slack> | fair[:<slack>])"
+    )
 }
 
 fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
@@ -166,6 +183,11 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         };
         base.with_universe(universe)
             .with_admission(parse_admission(&args.get_or("admission", "always"))?)
+            .with_dispatch(Dispatch {
+                max_batch: args.get_usize("max-batch")?.unwrap_or(1).max(1),
+                min_queue: args.get_usize("min-queue")?.unwrap_or(2),
+            })
+            .with_sharding(Sharding::hash(args.get_usize("shards")?.unwrap_or(1)))
             .with_seed(args.get_usize("seed")?.unwrap_or(0) as u64)
     };
     if let Some(path) = args.get("save-scenario") {
@@ -173,28 +195,59 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         println!("wrote scenario to {path}");
     }
 
-    // --- build the server and run ---------------------------------------
+    // The header reads from the *scenario* (not the raw flags), so a
+    // saved scenario file and the printed report always agree.
+    println!(
+        "scenario: {} | policy: {} | platform: {}{} | admission: {} | shards: {} | max-batch: {}",
+        scenario.name,
+        policy.name(),
+        lm.platform.name,
+        slo_note,
+        scenario.admission.label(),
+        scenario.sharding.shards,
+        scenario.dispatch.max_batch,
+    );
+
+    // --- build the server(s) and run ------------------------------------
     let opts = ServeOpts {
         memory_budget_frac: args.get_f64("budget")?.unwrap_or(1.0),
         policy,
         ..Default::default()
     };
-    let rt;
-    let mut builder = Server::builder(zoo, &lm, &profiles).opts(opts);
-    if args.switch("real") {
-        rt = Runtime::new()?;
-        builder = builder.runtime(&rt);
+    if scenario.sharding.shards > 1 {
+        if args.switch("real") {
+            bail!("--real is single-server only (drop --shards or run with 1 shard)");
+        }
+        let sharded =
+            ShardedServer::build(zoo, &lm, &profiles, opts, scenario.sharding.clone());
+        let report = sharded.run(&scenario)?;
+        for (i, shard) in report.per_shard.iter().enumerate() {
+            println!(
+                "  shard {i}: {} done | {} dropped | {} batches | makespan {:.1} ms",
+                shard.total_queries,
+                shard.total_dropped,
+                shard.total_batches,
+                shard.makespan_ms,
+            );
+        }
+        print_outcomes(&report.aggregate);
+        print_summary(&report.aggregate);
+    } else {
+        let rt;
+        let mut builder = Server::builder(zoo, &lm, &profiles).opts(opts);
+        if args.switch("real") {
+            rt = Runtime::new()?;
+            builder = builder.runtime(&rt);
+        }
+        let server = builder.build();
+        let report = server.run(&scenario)?;
+        print_outcomes(&report);
+        print_summary(&report);
     }
-    let server = builder.build();
-    let report = server.run(&scenario)?;
+    Ok(())
+}
 
-    println!(
-        "scenario: {} | policy: {} | platform: {}{}",
-        scenario.name,
-        policy.name(),
-        lm.platform.name,
-        slo_note,
-    );
+fn print_outcomes(report: &RunReport) {
     for o in &report.outcomes {
         println!(
             "  {:<10} acc={:<6} mean={:.3} ms p50={:.3} p95={:.3} p99={:.3} queue={:.3} ms \
@@ -213,14 +266,19 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
             if o.violated() { "VIOLATED" } else { "ok" },
         );
     }
+}
+
+fn print_summary(report: &RunReport) {
     println!(
-        "violation rate: {:.1} % | throughput: {:.1} q/s | makespan {:.1} ms | dropped {}",
+        "violation rate: {:.1} % | throughput: {:.1} q/s | makespan {:.1} ms | dropped {} \
+         | mean batch {:.2} | fairness {:.3}",
         100.0 * report.violation_rate(),
         report.throughput_qps(),
         report.makespan_ms,
         report.total_dropped,
+        report.mean_batch_size(),
+        report.fairness_index(),
     );
-    Ok(())
 }
 
 fn cmd_exp(args: &sparseloom::cli::Args) -> Result<()> {

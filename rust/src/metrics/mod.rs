@@ -48,6 +48,11 @@ pub struct TaskOutcome {
     pub queries_completed: usize,
     /// Queries rejected by admission control (open-loop overload).
     pub queries_dropped: usize,
+    /// Dispatch batches that served this task (a lone query counts as
+    /// one batch; equals `queries_completed` when batching is off).
+    pub batches: usize,
+    /// Largest coalesced batch dispatched for this task.
+    pub max_batch: usize,
     /// SLO bounds it was judged against.
     pub slo_accuracy: f64,
     pub slo_latency_ms: f64,
@@ -75,6 +80,9 @@ pub struct RunReport {
     pub total_queries: usize,
     /// Queries rejected by admission control across all tasks.
     pub total_dropped: usize,
+    /// Dispatch batches across all tasks (= `total_queries` when the
+    /// dispatcher never coalesces).
+    pub total_batches: usize,
     /// Per-request event log (arrival/queueing/placement/completion),
     /// in submission order. Empty for legacy aggregate-only callers.
     pub requests: Vec<RequestOutcome>,
@@ -96,6 +104,93 @@ impl RunReport {
             return 0.0;
         }
         self.total_queries as f64 / (self.makespan_ms / 1000.0)
+    }
+
+    /// Mean coalesced batch size (1.0 when batching never kicked in;
+    /// 0.0 when nothing completed).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.total_batches == 0 {
+            return 0.0;
+        }
+        self.total_queries as f64 / self.total_batches as f64
+    }
+
+    /// Jain fairness index over per-task completion *ratios*
+    /// (completed / offered): 1.0 when every task gets the same share of
+    /// its offered load served, → 1/T when one task monopolizes
+    /// admission. Scale-free, so tasks with different arrival rates
+    /// compare fairly. Tasks that were offered no queries are excluded —
+    /// an idle task is neither fairly nor unfairly served, and counting
+    /// it would dilute real starvation.
+    pub fn fairness_index(&self) -> f64 {
+        let xs: Vec<f64> = self
+            .outcomes
+            .iter()
+            .filter(|o| o.queries_completed + o.queries_dropped > 0)
+            .map(|o| {
+                o.queries_completed as f64
+                    / (o.queries_completed + o.queries_dropped) as f64
+            })
+            .collect();
+        if xs.is_empty() {
+            return 1.0;
+        }
+        let sum: f64 = xs.iter().sum();
+        let sq: f64 = xs.iter().map(|x| x * x).sum();
+        if sq <= 0.0 {
+            return 1.0;
+        }
+        (sum * sum) / (xs.len() as f64 * sq)
+    }
+
+    /// Fold `other` into `self` as a *sequential* continuation (phases
+    /// of a schedule): makespans sum, query/batch counts sum, outcomes
+    /// and event logs concatenate.
+    pub fn merge_sequential(&mut self, other: RunReport) {
+        self.makespan_ms += other.makespan_ms;
+        self.fold_counts(other);
+    }
+
+    /// Fold `other` into `self` as a *parallel* sibling (shards on
+    /// separate hardware): wall-clock is the slower of the two, counts
+    /// sum, outcomes and event logs concatenate.
+    pub fn merge_parallel(&mut self, other: RunReport) {
+        self.makespan_ms = self.makespan_ms.max(other.makespan_ms);
+        self.fold_counts(other);
+    }
+
+    fn fold_counts(&mut self, other: RunReport) {
+        self.total_queries += other.total_queries;
+        self.total_dropped += other.total_dropped;
+        self.total_batches += other.total_batches;
+        self.outcomes.extend(other.outcomes);
+        self.requests.extend(other.requests);
+    }
+}
+
+/// A sharded run: one report per shard plus the cross-shard aggregate.
+/// Shards are independent simulated SoCs running in parallel, so the
+/// aggregate's makespan is the *maximum* over shards while query counts,
+/// outcomes, and event logs are summed/concatenated.
+#[derive(Clone, Debug, Default)]
+pub struct ShardedReport {
+    /// Per-shard reports, indexed by shard id (empty shards yield
+    /// default reports).
+    pub per_shard: Vec<RunReport>,
+    /// The cross-shard roll-up (max makespan, summed counts).
+    pub aggregate: RunReport,
+}
+
+impl ShardedReport {
+    /// Violation rate of the aggregate report.
+    pub fn violation_rate(&self) -> f64 {
+        self.aggregate.violation_rate()
+    }
+
+    /// Combined throughput: total queries over the slowest shard's
+    /// makespan (shards run in parallel).
+    pub fn throughput_qps(&self) -> f64 {
+        self.aggregate.throughput_qps()
     }
 }
 
@@ -194,8 +289,19 @@ mod tests {
             mean_queueing_ms: 0.0,
             queries_completed: 100,
             queries_dropped: 0,
+            batches: 100,
+            max_batch: 1,
             slo_accuracy: 0.8,
             slo_latency_ms: 50.0,
+        }
+    }
+
+    fn outcome_served(completed: usize, dropped: usize) -> TaskOutcome {
+        TaskOutcome {
+            queries_completed: completed,
+            queries_dropped: dropped,
+            batches: completed,
+            ..outcome(Some(0.9), 40.0)
         }
     }
 
@@ -236,6 +342,82 @@ mod tests {
         });
         assert!((agg.mean_violation_pct() - 50.0).abs() < 1e-9);
         assert!((agg.mean_throughput() - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fairness_index_even_vs_starved() {
+        let even = RunReport {
+            outcomes: vec![outcome_served(80, 20), outcome_served(40, 10)],
+            ..Default::default()
+        };
+        assert!((even.fairness_index() - 1.0).abs() < 1e-12, "equal ratios");
+        let starved = RunReport {
+            outcomes: vec![outcome_served(100, 0), outcome_served(5, 95)],
+            ..Default::default()
+        };
+        let f = starved.fairness_index();
+        assert!(f < 0.7, "one starved task must drag the index down: {f}");
+        assert!(f >= 0.5, "Jain index is bounded below by 1/T: {f}");
+        // Idle tasks (zero offered) are excluded, not counted as fair.
+        let with_idle = RunReport {
+            outcomes: vec![
+                outcome_served(100, 0),
+                outcome_served(5, 95),
+                outcome_served(0, 0),
+            ],
+            ..Default::default()
+        };
+        assert!(
+            (with_idle.fairness_index() - f).abs() < 1e-12,
+            "an idle task must not dilute starvation"
+        );
+        // Empty report is vacuously fair.
+        assert_eq!(RunReport::default().fairness_index(), 1.0);
+    }
+
+    #[test]
+    fn merge_folds_sequential_and_parallel() {
+        let part = |q: usize, ms: f64| RunReport {
+            total_queries: q,
+            total_batches: q,
+            makespan_ms: ms,
+            ..Default::default()
+        };
+        let mut seq = part(10, 100.0);
+        seq.merge_sequential(part(5, 50.0));
+        assert_eq!(seq.total_queries, 15);
+        assert_eq!(seq.total_batches, 15);
+        assert!((seq.makespan_ms - 150.0).abs() < 1e-12, "phases sum");
+        let mut par = part(10, 100.0);
+        par.merge_parallel(part(5, 50.0));
+        assert_eq!(par.total_queries, 15);
+        assert!((par.makespan_ms - 100.0).abs() < 1e-12, "shards take the max");
+    }
+
+    #[test]
+    fn mean_batch_size_and_defaults() {
+        let r = RunReport {
+            total_queries: 60,
+            total_batches: 20,
+            ..Default::default()
+        };
+        assert!((r.mean_batch_size() - 3.0).abs() < 1e-12);
+        assert_eq!(RunReport::default().mean_batch_size(), 0.0);
+    }
+
+    #[test]
+    fn sharded_report_delegates_to_aggregate() {
+        let sr = ShardedReport {
+            per_shard: vec![RunReport::default(), RunReport::default()],
+            aggregate: RunReport {
+                outcomes: vec![outcome(Some(0.9), 40.0), outcome(None, 0.0)],
+                makespan_ms: 1000.0,
+                total_queries: 100,
+                ..Default::default()
+            },
+        };
+        assert!((sr.violation_rate() - 0.5).abs() < 1e-12);
+        assert!((sr.throughput_qps() - 100.0).abs() < 1e-9);
     }
 
     #[test]

@@ -73,6 +73,24 @@ impl TaskProfile {
         Some(total)
     }
 
+    /// Batch-aware Eq. 5 hook: the additive estimate scaled by a batch
+    /// service factor (`LatencyModel::batch_factor` for the platform's
+    /// `batch_marginal`); at `batch_factor = 1.0` it is exactly
+    /// [`TaskProfile::latency_est`]. The serving engine books batches
+    /// via `LatencyModel::subgraph_batch_ms`; this estimator-side twin
+    /// exists for batch-aware *planning* (Algorithm 1 currently
+    /// optimizes batch-1 latency only — see the ROADMAP item), so
+    /// selection logic can score candidate variants at a target batch
+    /// size without touching the platform model.
+    pub fn latency_est_batch(
+        &self,
+        comp: &Composition,
+        order: &[Processor],
+        batch_factor: f64,
+    ) -> Option<f64> {
+        self.latency_est(comp, order).map(|l| l * batch_factor)
+    }
+
     /// "Ground-truth" end-to-end latency: additive plus the per-hop
     /// inter-processor overhead the estimator ignores (§5.4 ≈ 5 %).
     pub fn latency_true(&self, comp: &Composition, order: &[Processor]) -> Option<f64> {
@@ -362,6 +380,23 @@ mod tests {
             assert!((p.acc_pred[k] - oracle[k]).abs() < 0.08,
                     "pure variant {i}: pred {} vs true {}", p.acc_pred[k], oracle[k]);
         }
+    }
+
+    #[test]
+    fn latency_est_batch_scales_by_factor() {
+        let (tz, lm) = setup();
+        let oracle = fake_oracle(&tz);
+        let p = profile_task(&tz, &lm, &oracle, &ProfilerConfig::default(), false);
+        use Processor::*;
+        let comp = Composition(vec![0, 0]);
+        let est = p.latency_est(&comp, &[Cpu, Gpu]).unwrap();
+        // Identity at factor 1, linear otherwise (mirrors the platform
+        // model's batch_factor contract).
+        assert_eq!(p.latency_est_batch(&comp, &[Cpu, Gpu], 1.0).unwrap(), est);
+        let f = lm.batch_factor(4);
+        let batched = p.latency_est_batch(&comp, &[Cpu, Gpu], f).unwrap();
+        assert!((batched - est * f).abs() < 1e-12);
+        assert!(batched > est && batched < 4.0 * est);
     }
 
     #[test]

@@ -1,0 +1,654 @@
+//! The dispatch subsystem: adaptive batching under backlog and
+//! multi-server sharding.
+//!
+//! `scenario::Server` places one query at a time on one simulated SoC,
+//! which is exactly right for the paper's closed-loop protocol and
+//! degrades exactly where it shouldn't under bursty open-loop traffic:
+//! backlog piles up per task while every stage still pays full
+//! single-query occupancy, and every task contends for one set of
+//! processors. This module adds the two scale mechanisms ROADMAP names:
+//!
+//! * **Adaptive batching** — a [`Dispatcher`] sits between the arrival
+//!   stream and [`Session::submit`]. When a task's queue exceeds
+//!   [`Dispatch::min_queue`], it coalesces up to [`Dispatch::max_batch`]
+//!   consecutive same-task queries into one
+//!   [`Session::submit_batch`] call: one placement decision, one booking
+//!   per stage at the batch-aware occupancy
+//!   (`LatencyModel::batch_factor`), which drains backlog strictly
+//!   faster than dispatching queries alone. Batches are FIFO prefixes of
+//!   the task queue, so requests are never reordered within a task.
+//! * **Sharding** — a [`ShardedServer`] partitions the task set across N
+//!   independent [`Server`]s ([`Sharding`]: hash or explicit map), each
+//!   with its own planning cache, memory pool, and simulated SoC.
+//!   Arrival streams are generated once per scenario (identical per-task
+//!   arrivals to the unsharded run) and routed per query; the result is
+//!   one `RunReport` per shard plus a cross-shard aggregate
+//!   ([`crate::metrics::ShardedReport`]).
+//!
+//! Cross-task *admission fairness* rides along in
+//! [`Admission::Fair`](super::Admission::Fair), judged per shard inside
+//! the session.
+//!
+//! ```
+//! use sparseloom::coordinator::ServeOpts;
+//! use sparseloom::fixtures;
+//! use sparseloom::scenario::{Dispatch, Scenario, ShardedServer, Sharding};
+//!
+//! let (zoo, lm, profiles) = fixtures::trio();
+//! let scenario = Scenario::bursty(&fixtures::task_names(&zoo),
+//!                                 fixtures::slos(&zoo, 0.5, 1e9),
+//!                                 5.0, 60.0, 500.0, 2_000.0)
+//!     .with_seed(7)
+//!     .with_dispatch(Dispatch::batched(4))
+//!     .with_sharding(Sharding::hash(2));
+//!
+//! let sharded = ShardedServer::build(&zoo, &lm, &profiles,
+//!                                    ServeOpts::default(),
+//!                                    scenario.sharding.clone());
+//! let report = sharded.run(&scenario).unwrap();
+//! assert_eq!(report.per_shard.len(), 2);
+//! // Every arrival is accounted for: completed + dropped = events.
+//! assert_eq!(report.aggregate.total_queries + report.aggregate.total_dropped,
+//!            report.aggregate.requests.len());
+//! ```
+
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::ServeOpts;
+use crate::metrics::{RunReport, ShardedReport};
+use crate::profiler::TaskProfile;
+use crate::soc::LatencyModel;
+use crate::workload::{shard_of_task, Query, Slo};
+use crate::zoo::Zoo;
+
+use super::server::{Server, Session};
+use super::Scenario;
+
+/// Adaptive-batching configuration: when and how hard to coalesce.
+///
+/// The default is the *identity* dispatch (`max_batch = 1`): every query
+/// is placed alone and serving behaves exactly as if this module did not
+/// exist. Batching only changes anything for open-loop scenarios —
+/// closed loops are self-clocking and never build backlog.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dispatch {
+    /// Largest number of same-task queries coalesced into one placement
+    /// decision. `1` disables batching.
+    pub max_batch: usize,
+    /// Backlog threshold: coalescing starts only once at least this
+    /// many queries of one task are already waiting at dispatch time.
+    /// Below the threshold queries dispatch alone, keeping per-query
+    /// latency untouched when the system is keeping up.
+    pub min_queue: usize,
+}
+
+impl Default for Dispatch {
+    fn default() -> Self {
+        Self { max_batch: 1, min_queue: 2 }
+    }
+}
+
+impl Dispatch {
+    /// The identity dispatch: no batching (same as `Default`).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Batch up to `max_batch` queries with the default backlog
+    /// threshold.
+    pub fn batched(max_batch: usize) -> Self {
+        Self { max_batch: max_batch.max(1), ..Self::default() }
+    }
+
+    /// Whether this configuration can ever coalesce.
+    pub fn is_batching(&self) -> bool {
+        self.max_batch > 1
+    }
+}
+
+/// How tasks map to shards.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardAssignment {
+    /// FNV-1a hash of the task name modulo the shard count
+    /// ([`crate::workload::shard_of_task`]) — deterministic across runs
+    /// and processes.
+    Hash,
+    /// Explicit task → shard map. Out-of-range indices wrap modulo the
+    /// shard count; tasks absent from the map fall back to the hash
+    /// rule.
+    Explicit(BTreeMap<String, usize>),
+}
+
+/// Multi-server sharding configuration: how many servers, and which
+/// tasks each one owns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sharding {
+    /// Number of independent servers. `1` (the default) means no
+    /// sharding.
+    pub shards: usize,
+    /// Task → shard rule.
+    pub assignment: ShardAssignment,
+}
+
+impl Default for Sharding {
+    fn default() -> Self {
+        Self { shards: 1, assignment: ShardAssignment::Hash }
+    }
+}
+
+impl Sharding {
+    /// Hash-partition tasks across `shards` servers.
+    pub fn hash(shards: usize) -> Self {
+        Self { shards: shards.max(1), assignment: ShardAssignment::Hash }
+    }
+
+    /// Explicitly map tasks to `shards` servers (unlisted tasks hash).
+    pub fn explicit(map: BTreeMap<String, usize>, shards: usize) -> Self {
+        Self { shards: shards.max(1), assignment: ShardAssignment::Explicit(map) }
+    }
+
+    /// Which shard serves `task`.
+    pub fn shard_of(&self, task: &str) -> usize {
+        let n = self.shards.max(1);
+        match &self.assignment {
+            ShardAssignment::Hash => shard_of_task(task, n),
+            ShardAssignment::Explicit(map) => match map.get(task) {
+                Some(&shard) => shard % n,
+                None => shard_of_task(task, n),
+            },
+        }
+    }
+}
+
+/// Replays an arrival stream into a [`Session`], coalescing same-task
+/// FIFO runs into batches when backlog builds.
+///
+/// At every step the dispatcher issues for the task whose next query
+/// would start earliest (exactly like [`Session::drive`]); if at least
+/// [`Dispatch::min_queue`] queries of that task are already waiting at
+/// that instant, the waiting FIFO prefix — never more than
+/// [`Dispatch::max_batch`] — is submitted as one batch. Queries that
+/// have not yet arrived at issue time are never pulled into a batch, so
+/// batching cannot reorder a task's queries or violate causality.
+pub struct Dispatcher {
+    cfg: Dispatch,
+}
+
+impl Dispatcher {
+    /// A dispatcher for one batching configuration.
+    pub fn new(cfg: Dispatch) -> Self {
+        Self { cfg }
+    }
+
+    /// The batching configuration this dispatcher applies.
+    pub fn config(&self) -> &Dispatch {
+        &self.cfg
+    }
+
+    /// Drive a whole stream through `session` in simulated-time order —
+    /// the one replay loop behind both [`Session::drive`] (which
+    /// delegates here with the identity dispatch) and batched serving.
+    ///
+    /// With the identity dispatch — or a self-clocking (closed-loop)
+    /// session, which cannot build backlog — every query dispatches
+    /// alone.
+    pub fn drive(&self, session: &mut Session, queries: &[Query]) -> Result<()> {
+        let batching = self.cfg.is_batching() && !session.is_self_clocked();
+        let order: Vec<String> = session.task_order().to_vec();
+        let mut pending: BTreeMap<&str, VecDeque<&Query>> = BTreeMap::new();
+        for q in queries {
+            if session.ready_of(&q.task).is_none() {
+                bail!(
+                    "query {} targets task {:?} not in this scenario",
+                    q.id,
+                    q.task
+                );
+            }
+            pending.entry(q.task.as_str()).or_default().push_back(q);
+        }
+        loop {
+            // Earliest-issue task first (arrival vs per-task FIFO ready).
+            let mut next: Option<(&str, f64)> = None;
+            for name in &order {
+                let Some(queue) = pending.get(name.as_str()) else { continue };
+                let Some(q) = queue.front() else { continue };
+                let ready = session.ready_of(name).unwrap_or(0.0);
+                let issue = q.arrival_ms.max(ready);
+                if next.map(|(_, t)| issue < t).unwrap_or(true) {
+                    next = Some((name.as_str(), issue));
+                }
+            }
+            let Some((task, issue)) = next else { break };
+            let queue = pending.get_mut(task).unwrap();
+            // The FIFO prefix already waiting at issue time; the head
+            // always qualifies (issue ≥ its arrival by construction).
+            let take = if batching {
+                let waiting =
+                    queue.iter().take_while(|q| q.arrival_ms <= issue).count();
+                if waiting >= self.cfg.min_queue.max(1) {
+                    waiting.min(self.cfg.max_batch)
+                } else {
+                    1
+                }
+            } else {
+                1
+            };
+            let batch: Vec<&Query> =
+                (0..take).map(|_| queue.pop_front().unwrap()).collect();
+            session.submit_batch(&batch)?;
+        }
+        Ok(())
+    }
+}
+
+/// N independent [`Server`]s — each with its own planning cache, memory
+/// pool, and simulated SoC — serving a partition of the task set.
+///
+/// Sharding models scaling *out*: shards run in parallel on separate
+/// (simulated) hardware, so the aggregate report takes the maximum
+/// makespan across shards while summing query counts. Per-task arrival
+/// streams are identical to the unsharded run (streams are generated
+/// from the scenario, then routed), which makes single-server and
+/// sharded runs directly comparable.
+///
+/// The sharded path is simulation-only: attach a PJRT runtime to a plain
+/// [`Server`] instead when real execution is needed.
+pub struct ShardedServer<'a> {
+    shards: Vec<Server<'a>>,
+    sharding: Sharding,
+}
+
+impl<'a> ShardedServer<'a> {
+    /// Build `sharding.shards` servers over the shared zoo, latency
+    /// model, and profiles, all with the same serving options.
+    pub fn build(
+        zoo: &'a Zoo,
+        lm: &'a LatencyModel,
+        profiles: &'a BTreeMap<String, TaskProfile>,
+        opts: ServeOpts,
+        sharding: Sharding,
+    ) -> ShardedServer<'a> {
+        let n = sharding.shards.max(1);
+        let shards = (0..n)
+            .map(|_| Server::builder(zoo, lm, profiles).opts(opts.clone()).build())
+            .collect();
+        ShardedServer { shards, sharding: Sharding { shards: n, ..sharding } }
+    }
+
+    /// Number of shards (≥ 1).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard serves `task` under this server's assignment.
+    pub fn shard_of(&self, task: &str) -> usize {
+        self.sharding.shard_of(task)
+    }
+
+    /// The shard servers themselves (e.g. to inspect per-shard plans).
+    pub fn servers(&self) -> &[Server<'a>] {
+        &self.shards
+    }
+
+    /// Run a whole scenario across the shards: generate each phase's
+    /// stream once, route queries to their task's shard — routing
+    /// follows this server's **build-time** [`Sharding`], so build from
+    /// `scenario.sharding` (as the CLI does) when the scenario declares
+    /// one — and drive every shard's session through the scenario's
+    /// [`Dispatch`] config. Each
+    /// shard plans against the scenario restricted to its own partition
+    /// (task list *and* SLO schedule filtered; an explicit `universe` is
+    /// kept as-is, an empty one derives per shard), so a shard's
+    /// budgeted selections cover only tasks it actually serves.
+    ///
+    /// Multi-phase schedules are merged per shard with the same
+    /// summation [`Server::run`] applies, but each phase plans against a
+    /// freshly budgeted pool — the persistent cross-phase pool of
+    /// `Server::run_schedule` (§3.4 switch-cost dynamics) is not modeled
+    /// on the sharded path.
+    pub fn run(&self, scenario: &Scenario) -> Result<ShardedReport> {
+        let n = self.shards.len();
+        let mut shard_tasks: Vec<Vec<String>> = vec![Vec::new(); n];
+        for task in &scenario.tasks {
+            shard_tasks[self.shard_of(task)].push(task.clone());
+        }
+        let dispatcher = Dispatcher::new(scenario.dispatch.clone());
+        let mut per_shard: Vec<RunReport> = vec![RunReport::default(); n];
+        for phase in 0..scenario.phases() {
+            let mut parts: Vec<Vec<Query>> = vec![Vec::new(); n];
+            for q in scenario.stream(phase) {
+                let shard = self.shard_of(&q.task);
+                parts[shard].push(q);
+            }
+            for (i, server) in self.shards.iter().enumerate() {
+                if shard_tasks[i].is_empty() {
+                    continue;
+                }
+                // Restrict the scenario to this shard's partition: the
+                // task list and every schedule entry. SLOs of foreign
+                // tasks would otherwise leak into this shard's planning
+                // and (budget < 1) preloading.
+                let schedule: Vec<BTreeMap<String, Slo>> = scenario
+                    .schedule
+                    .iter()
+                    .map(|cfg| {
+                        cfg.iter()
+                            .filter(|&(t, _)| shard_tasks[i].contains(t))
+                            .map(|(t, slo)| (t.clone(), *slo))
+                            .collect()
+                    })
+                    .collect();
+                let sub = scenario
+                    .clone()
+                    .with_tasks(&shard_tasks[i])
+                    .with_schedule(schedule);
+                let mut session = server.session(&sub, phase)?;
+                dispatcher.drive(&mut session, &parts[i])?;
+                // Phases of one shard are sequential, like Server::run.
+                per_shard[i].merge_sequential(session.finish());
+            }
+        }
+        let mut aggregate = RunReport::default();
+        for report in &per_shard {
+            // Shards are parallel SoCs: wall-clock is the slowest shard.
+            aggregate.merge_parallel(report.clone());
+        }
+        Ok(ShardedReport { per_shard, aggregate })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::tests::{setup, slos};
+    use crate::fixtures;
+    use crate::scenario::Admission;
+    use crate::workload::Slo;
+
+    fn tiny_tasks() -> Vec<String> {
+        vec!["tiny".to_string()]
+    }
+
+    /// A dense same-task arrival ramp that must build backlog.
+    fn ramp(task: &str, n: usize, gap_ms: f64) -> Vec<Query> {
+        (0..n)
+            .map(|i| Query {
+                task: task.to_string(),
+                arrival_ms: i as f64 * gap_ms,
+                id: i as u64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batching_never_reorders_requests_within_a_task() {
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        // ~17 ms service vs 1 ms inter-arrival: heavy backlog.
+        let sc = Scenario::trace(&tiny_tasks(), slos(0.5, 1e9), ramp("tiny", 40, 1.0))
+            .with_dispatch(Dispatch { max_batch: 4, min_queue: 2 });
+        let report = server.run(&sc).unwrap();
+        assert_eq!(report.total_queries, 40);
+        assert!(
+            report.total_batches < 40,
+            "backlog must trigger coalescing ({} batches)",
+            report.total_batches
+        );
+        assert!(report.mean_batch_size() > 1.0);
+        assert!(report.outcomes[0].max_batch > 1);
+        assert!(report.outcomes[0].max_batch <= 4);
+        // FIFO within the task: ids in arrival order, times monotone.
+        let ids: Vec<u64> = report.requests.iter().map(|r| r.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted, "batching must not reorder a task's queries");
+        for w in report.requests.windows(2) {
+            assert!(w[1].start_ms >= w[0].start_ms - 1e-9);
+            assert!(w[1].finish_ms >= w[0].finish_ms - 1e-9);
+        }
+    }
+
+    #[test]
+    fn below_threshold_dispatch_matches_unbatched_run() {
+        // A batching dispatcher whose threshold is never reached must
+        // reproduce the unbatched run event-for-event.
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let base = Scenario::poisson(&tiny_tasks(), slos(0.5, 1e9), 30.0, 3_000.0)
+            .with_seed(5);
+        let plain = server.run(&base).unwrap();
+        let gated = server
+            .run(
+                &base
+                    .clone()
+                    .with_dispatch(Dispatch { max_batch: 8, min_queue: usize::MAX }),
+            )
+            .unwrap();
+        assert_eq!(plain.total_queries, gated.total_queries);
+        assert_eq!(plain.total_batches, gated.total_batches);
+        assert!((plain.makespan_ms - gated.makespan_ms).abs() < 1e-6);
+        for (a, b) in plain.requests.iter().zip(&gated.requests) {
+            assert_eq!(a.id, b.id);
+            assert!((a.start_ms - b.start_ms).abs() < 1e-9);
+            assert!((a.finish_ms - b.finish_ms).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn batching_drains_backlog_faster() {
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let sc = Scenario::trace(&tiny_tasks(), slos(0.5, 1e9), ramp("tiny", 60, 1.0));
+        let alone = server.run(&sc).unwrap();
+        let batched = server
+            .run(&sc.clone().with_dispatch(Dispatch::batched(4)))
+            .unwrap();
+        assert_eq!(alone.total_queries, batched.total_queries);
+        assert!(
+            batched.makespan_ms < alone.makespan_ms,
+            "batch 4 must drain faster: {} vs {} ms",
+            batched.makespan_ms,
+            alone.makespan_ms
+        );
+        // Sub-linear batch cost ⇒ strictly higher throughput.
+        assert!(batched.throughput_qps() > alone.throughput_qps());
+    }
+
+    #[test]
+    fn sharding_partitions_tasks_and_aggregates_reports() {
+        let (zoo, lm, profiles) = fixtures::trio();
+        let tasks = fixtures::task_names(&zoo);
+        let slo_map = fixtures::slos(&zoo, 0.5, 1e9);
+        let sc = Scenario::poisson(&tasks, slo_map, 10.0, 2_000.0).with_seed(3);
+
+        let single = Server::builder(&zoo, &lm, &profiles).build().run(&sc).unwrap();
+        let sharded = ShardedServer::build(
+            &zoo,
+            &lm,
+            &profiles,
+            ServeOpts::default(),
+            Sharding::hash(2),
+        );
+        let report = sharded.run(&sc).unwrap();
+
+        assert_eq!(report.per_shard.len(), 2);
+        // Every task is served by exactly one shard.
+        let served: usize = report.per_shard.iter().map(|r| r.outcomes.len()).sum();
+        assert_eq!(served, tasks.len());
+        // Aggregate counts are the per-shard sums; makespan is the max.
+        assert_eq!(
+            report.aggregate.total_queries,
+            report.per_shard.iter().map(|r| r.total_queries).sum::<usize>()
+        );
+        let max_ms = report
+            .per_shard
+            .iter()
+            .map(|r| r.makespan_ms)
+            .fold(0.0f64, f64::max);
+        assert!((report.aggregate.makespan_ms - max_ms).abs() < 1e-9);
+        // Same arrivals, everything admitted: identical completed counts.
+        assert_eq!(report.aggregate.total_queries, single.total_queries);
+        assert_eq!(report.aggregate.total_dropped, 0);
+        // Less contention can only finish no later than the single SoC.
+        assert!(report.aggregate.makespan_ms <= single.makespan_ms + 1e-6);
+    }
+
+    #[test]
+    fn explicit_assignment_and_fallbacks() {
+        let sharding = Sharding::explicit(
+            BTreeMap::from([("alpha".to_string(), 1), ("beta".to_string(), 5)]),
+            2,
+        );
+        assert_eq!(sharding.shard_of("alpha"), 1);
+        // Out-of-range indices wrap instead of panicking.
+        assert_eq!(sharding.shard_of("beta"), 1);
+        // Unlisted tasks fall back to the hash rule.
+        assert_eq!(
+            sharding.shard_of("gamma"),
+            crate::workload::shard_of_task("gamma", 2)
+        );
+        // Degenerate configs are clamped.
+        assert_eq!(Sharding::hash(0).shards, 1);
+        assert_eq!(Dispatch::batched(0).max_batch, 1);
+        assert!(!Dispatch::none().is_batching());
+    }
+
+    #[test]
+    fn sharded_batched_beats_single_server_under_backlog() {
+        // The headline property: a bursty overload scenario completes
+        // strictly more requests with 2 shards × batch-4 dispatch than
+        // the single-server unbatched baseline under the same deadline
+        // admission (see `experiments::endtoend::backlog_comparison`).
+        let (zoo, lm, profiles) = fixtures::trio();
+        let tasks = fixtures::task_names(&zoo);
+        let slo_map = fixtures::slos(&zoo, 0.5, 60.0);
+        let sc = Scenario::bursty(&tasks, slo_map, 4.0, 120.0, 500.0, 4_000.0)
+            .with_seed(11)
+            .with_admission(Admission::Deadline { slack: 2.0 });
+
+        let single = Server::builder(&zoo, &lm, &profiles).build().run(&sc).unwrap();
+        assert!(single.total_dropped > 0, "baseline must actually be overloaded");
+
+        let scaled = ShardedServer::build(
+            &zoo,
+            &lm,
+            &profiles,
+            ServeOpts::default(),
+            Sharding::hash(2),
+        )
+        .run(&sc.clone().with_dispatch(Dispatch::batched(4)))
+        .unwrap();
+
+        assert!(
+            scaled.aggregate.total_queries > single.total_queries,
+            "2 shards × batch 4 must complete strictly more: {} vs {}",
+            scaled.aggregate.total_queries,
+            single.total_queries
+        );
+        assert!(scaled.aggregate.total_dropped < single.total_dropped);
+    }
+
+    #[test]
+    fn fair_with_single_task_equals_deadline() {
+        // With no other tasks the share clause can never fire (both
+        // sides of the strict comparison are zero), so Fair must shed
+        // exactly like Deadline — a single-task shard keeps admission
+        // control.
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let heavy = Scenario::poisson(&tiny_tasks(), slos(0.5, 50.0), 200.0, 2_000.0)
+            .with_seed(7);
+        let deadline = server
+            .run(&heavy.clone().with_admission(Admission::Deadline { slack: 2.0 }))
+            .unwrap();
+        let fair = server
+            .run(&heavy.with_admission(Admission::Fair {
+                slack: 2.0,
+                weights: BTreeMap::new(),
+            }))
+            .unwrap();
+        assert!(deadline.total_dropped > 0, "overload must shed");
+        assert_eq!(fair.total_dropped, deadline.total_dropped);
+        assert_eq!(fair.total_queries, deadline.total_queries);
+        assert!((fair.makespan_ms - deadline.makespan_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fair_admission_protects_weighted_task_burst() {
+        let (zoo, lm, profiles) = fixtures::trio();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        // alpha and beta flood (1 query/ms each); deadline admission
+        // throttles them at their own generous budget (2 × 100 ms), so
+        // by t ≈ 400 ms both hold ≈ 200 ms of standing backlog. Then
+        // gamma — the latency-critical tenant with a tight 2 × 30 ms
+        // budget — takes a 20-query burst at t = 600 ms. Under plain
+        // `Deadline` the burst's own queue blows gamma's small budget
+        // after a handful of queries and the tail is shed; under
+        // weighted-fair admission gamma's per-weight backlog (8× weight)
+        // stays well under the floods' standing per-weight backlog, so
+        // the whole burst is admitted.
+        let mut queries = ramp("alpha", 1_500, 1.0);
+        for (k, q) in ramp("beta", 1_500, 1.0).into_iter().enumerate() {
+            queries.push(Query { id: 5_000 + k as u64, ..q });
+        }
+        for i in 0..20u64 {
+            queries.push(Query {
+                task: "gamma".to_string(),
+                arrival_ms: 600.0 + 0.1 * i as f64,
+                id: 10_000 + i,
+            });
+        }
+        let tasks: Vec<String> =
+            ["alpha", "beta", "gamma"].iter().map(|s| s.to_string()).collect();
+        let mut slo_map = BTreeMap::new();
+        for flood in ["alpha", "beta"] {
+            slo_map
+                .insert(flood.to_string(), Slo { min_accuracy: 0.5, max_latency_ms: 100.0 });
+        }
+        slo_map.insert("gamma".to_string(), Slo { min_accuracy: 0.5, max_latency_ms: 30.0 });
+        let base = Scenario::trace(&tasks, slo_map, queries);
+
+        let deadline = server
+            .run(&base.clone().with_admission(Admission::Deadline { slack: 2.0 }))
+            .unwrap();
+        let fair = server
+            .run(&base.with_admission(Admission::Fair {
+                slack: 2.0,
+                weights: BTreeMap::from([("gamma".to_string(), 8.0)]),
+            }))
+            .unwrap();
+
+        let completed = |r: &RunReport, task: &str| {
+            r.outcomes
+                .iter()
+                .find(|o| o.task == task)
+                .map(|o| o.queries_completed)
+                .unwrap()
+        };
+        // Plain deadline admission sheds most of the burst…
+        assert!(deadline.outcomes.iter().any(|o| o.queries_dropped > 0));
+        assert!(
+            completed(&deadline, "gamma") < 10,
+            "deadline admission must shed the burst tail (completed {})",
+            completed(&deadline, "gamma")
+        );
+        // …while weighted-fair admission keeps the weighted task whole.
+        assert_eq!(
+            completed(&fair, "gamma"),
+            20,
+            "fair admission must keep the weighted task's burst whole"
+        );
+        // The floods are still shed at their own deadline budget.
+        assert!(
+            fair.outcomes.iter().find(|o| o.task == "alpha").unwrap().queries_dropped > 0,
+            "fair admission must still throttle the flood"
+        );
+        // The index stays within Jain bounds on both runs.
+        for r in [&deadline, &fair] {
+            let f = r.fairness_index();
+            assert!((1.0 / 3.0..=1.0).contains(&f), "Jain bounds: {f}");
+        }
+    }
+}

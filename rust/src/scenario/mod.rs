@@ -15,11 +15,50 @@
 //! paper never measured — open-loop throughput, overload, bursty
 //! traffic — is the same API with a different [`Arrival`].
 //!
+//! Under backlog, the [`dispatch`] subsystem takes over: a
+//! [`Dispatcher`] coalesces same-task queries into batches
+//! ([`Dispatch`]), a [`ShardedServer`] partitions tasks across several
+//! independent servers ([`Sharding`]), and [`Admission::Fair`] keeps one
+//! bursty task from starving the rest.
+//!
 //! Scenarios serialize to JSON (`to_json`/`from_json`, `save`/`load`)
 //! so the CLI can run workloads from files. See DESIGN.md §Scenario.
+//!
+//! The full walkthrough — builder → scenario → run → report — needs no
+//! artifacts on disk thanks to [`crate::fixtures`]:
+//!
+//! ```
+//! use sparseloom::fixtures;
+//! use sparseloom::scenario::{Admission, Scenario, Server};
+//!
+//! let (zoo, lm, profiles) = fixtures::tiny();
+//!
+//! // 1. Build a server (planning engine + memory pool + plan cache).
+//! let server = Server::builder(&zoo, &lm, &profiles)
+//!     .memory_budget_frac(1.0)
+//!     .build();
+//!
+//! // 2. Describe the workload as a typed scenario.
+//! let scenario = Scenario::closed_loop(&fixtures::task_names(&zoo),
+//!                                      fixtures::slos(&zoo, 0.5, 1e9))
+//!     .with_queries(10)
+//!     .with_admission(Admission::Always);
+//!
+//! // 3. Run it and read the report.
+//! let report = server.run(&scenario).unwrap();
+//! assert_eq!(report.total_queries, 10);
+//! assert_eq!(report.violation_rate(), 0.0);
+//!
+//! // Scenarios round-trip through JSON for file-driven serving.
+//! let json = scenario.to_json().to_string_pretty();
+//! let back = Scenario::from_json(&sparseloom::json::parse(&json).unwrap()).unwrap();
+//! assert_eq!(back.tasks, scenario.tasks);
+//! ```
 
+pub mod dispatch;
 pub mod server;
 
+pub use dispatch::{Dispatch, Dispatcher, ShardAssignment, ShardedServer, Sharding};
 pub use server::{Server, ServerBuilder, Session};
 
 use std::collections::BTreeMap;
@@ -58,7 +97,7 @@ pub enum Arrival {
 /// backed up when it arrives. Closed-loop scenarios are self-clocking —
 /// a query only exists once its predecessor completes — so their
 /// backlog is always zero and every policy admits everything there.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Admission {
     /// Admit everything (queues grow without bound under overload).
     Always,
@@ -69,6 +108,40 @@ pub enum Admission {
     /// `slack × max_latency_ms` of its task's SLO — it cannot possibly
     /// be worth serving.
     Deadline { slack: f64 },
+    /// Weighted-fair deadline admission. Every task keeps the plain
+    /// [`Admission::Deadline`] budget (`slack × max_latency_ms`), and is
+    /// *additionally* admitted while its per-weight backlog is strictly
+    /// under a margin of the **other** tasks' per-weight backlog
+    /// (`backlog/w < 0.75 × Σ_others backlog / Σ_others w`). A heavy
+    /// task whose standing backlog dwarfs the rest is shed at its
+    /// deadline budget exactly as under `Deadline`; a latency-critical
+    /// task (tight SLO ⇒ tiny deadline budget) riding out a short burst
+    /// stays admitted as long as its backlog remains small next to the
+    /// heavy tasks' — plain `Deadline` would shed its burst tail even
+    /// though it is nowhere near its fair share of the system. With no
+    /// other tasks, or under perfectly symmetric load, the share clause
+    /// never fires and `Fair` behaves exactly like `Deadline`.
+    Fair {
+        /// Deadline slack, as in [`Admission::Deadline`].
+        slack: f64,
+        /// Per-task fair-share weights; tasks not listed weigh 1.0, so
+        /// an empty map means an equal split.
+        weights: BTreeMap<String, f64>,
+    },
+}
+
+impl Admission {
+    /// Short human label printed in CLI report headers, matching the
+    /// JSON `kind` tags — so saved scenario files and printed reports
+    /// agree on the policy in effect.
+    pub fn label(&self) -> String {
+        match self {
+            Admission::Always => "always".into(),
+            Admission::QueueCap { max_queued } => format!("queue_cap:{max_queued}"),
+            Admission::Deadline { slack } => format!("deadline:{slack}"),
+            Admission::Fair { slack, .. } => format!("fair:{slack}"),
+        }
+    }
 }
 
 /// A typed serving scenario: tasks + arrival process + SLO schedule +
@@ -92,6 +165,17 @@ pub struct Scenario {
     /// Empty ⇒ derived from `schedule`.
     pub universe: Vec<Slo>,
     pub admission: Admission,
+    /// Adaptive batching under backlog (identity dispatch by default:
+    /// every query is placed alone).
+    pub dispatch: Dispatch,
+    /// Multi-server sharding (a single server by default). This is the
+    /// scenario's *declared* deployment: the CLI (and any caller)
+    /// builds a [`ShardedServer`] from it. Routing itself follows the
+    /// server's build-time [`Sharding`] — pass this field to
+    /// `ShardedServer::build` (as the CLI does) so the file and the run
+    /// agree. A plain `Server::run` serves the whole task set on one
+    /// simulated SoC regardless.
+    pub sharding: Sharding,
     /// Seed for the open-loop arrival generators (deterministic replay).
     pub seed: u64,
 }
@@ -110,6 +194,8 @@ impl Scenario {
             schedule: vec![slos],
             universe: Vec::new(),
             admission: Admission::Always,
+            dispatch: Dispatch::default(),
+            sharding: Sharding::default(),
             seed: 0,
         }
     }
@@ -204,6 +290,29 @@ impl Scenario {
         self
     }
 
+    /// Configure adaptive batching under backlog (see [`Dispatch`]).
+    pub fn with_dispatch(mut self, dispatch: Dispatch) -> Scenario {
+        self.dispatch = dispatch;
+        self
+    }
+
+    /// Configure multi-server sharding (see [`Sharding`]).
+    pub fn with_sharding(mut self, sharding: Sharding) -> Scenario {
+        self.sharding = sharding;
+        self
+    }
+
+    /// Replace the task set / arrival order, keeping everything else —
+    /// [`ShardedServer`] uses this (together with a filtered
+    /// [`Scenario::with_schedule`]) to restrict a scenario to one
+    /// shard's partition. Schedule entries for absent tasks don't break
+    /// a session, but they do participate in planning/preloading —
+    /// filter them too when that matters.
+    pub fn with_tasks(mut self, tasks: &[String]) -> Scenario {
+        self.tasks = tasks.to_vec();
+        self
+    }
+
     pub fn with_seed(mut self, seed: u64) -> Scenario {
         self.seed = seed;
         self
@@ -293,15 +402,42 @@ impl Scenario {
                 ),
             ]),
         };
-        let admission = match self.admission {
+        let admission = match &self.admission {
             Admission::Always => Json::obj(vec![("kind", Json::Str("always".into()))]),
             Admission::QueueCap { max_queued } => Json::obj(vec![
                 ("kind", Json::Str("queue_cap".into())),
-                ("max_queued", Json::Num(max_queued as f64)),
+                ("max_queued", Json::Num(*max_queued as f64)),
             ]),
             Admission::Deadline { slack } => Json::obj(vec![
                 ("kind", Json::Str("deadline".into())),
-                ("slack", Json::Num(slack)),
+                ("slack", Json::Num(*slack)),
+            ]),
+            Admission::Fair { slack, weights } => Json::obj(vec![
+                ("kind", Json::Str("fair".into())),
+                ("slack", Json::Num(*slack)),
+                (
+                    "weights",
+                    Json::Obj(
+                        weights
+                            .iter()
+                            .map(|(task, w)| (task.clone(), Json::Num(*w)))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        };
+        let assignment = match &self.sharding.assignment {
+            ShardAssignment::Hash => Json::obj(vec![("kind", Json::Str("hash".into()))]),
+            ShardAssignment::Explicit(map) => Json::obj(vec![
+                ("kind", Json::Str("explicit".into())),
+                (
+                    "map",
+                    Json::Obj(
+                        map.iter()
+                            .map(|(task, shard)| (task.clone(), Json::Num(*shard as f64)))
+                            .collect(),
+                    ),
+                ),
             ]),
         };
         Json::obj(vec![
@@ -315,6 +451,20 @@ impl Scenario {
             ),
             ("arrival", arrival),
             ("admission", admission),
+            (
+                "dispatch",
+                Json::obj(vec![
+                    ("max_batch", Json::Num(self.dispatch.max_batch as f64)),
+                    ("min_queue", Json::Num(self.dispatch.min_queue as f64)),
+                ]),
+            ),
+            (
+                "sharding",
+                Json::obj(vec![
+                    ("shards", Json::Num(self.sharding.shards as f64)),
+                    ("assignment", assignment),
+                ]),
+            ),
             (
                 "schedule",
                 Json::arr(self.schedule.iter().map(|cfg| {
@@ -418,8 +568,78 @@ impl Scenario {
                 "deadline" => Admission::Deadline {
                     slack: adm.req("slack")?.as_f64().context("admission.slack")?,
                 },
+                "fair" => {
+                    let weights = match adm.get("weights") {
+                        None => BTreeMap::new(),
+                        Some(w) => w
+                            .as_obj()
+                            .context("admission.weights must be an object")?
+                            .iter()
+                            .map(|(task, v)| {
+                                Ok((
+                                    task.clone(),
+                                    v.as_f64().with_context(|| {
+                                        format!("admission.weights.{task} must be a number")
+                                    })?,
+                                ))
+                            })
+                            .collect::<Result<BTreeMap<_, _>>>()?,
+                    };
+                    Admission::Fair {
+                        slack: adm.req("slack")?.as_f64().context("admission.slack")?,
+                        weights,
+                    }
+                }
                 other => bail!("unknown admission kind {other:?}"),
             },
+        };
+
+        let dispatch = match v.get("dispatch") {
+            None => Dispatch::default(),
+            Some(d) => Dispatch {
+                max_batch: d
+                    .req("max_batch")?
+                    .as_usize()
+                    .context("dispatch.max_batch")?,
+                min_queue: match d.get("min_queue") {
+                    None => Dispatch::default().min_queue,
+                    Some(x) => x.as_usize().context("dispatch.min_queue")?,
+                },
+            },
+        };
+
+        let sharding = match v.get("sharding") {
+            None => Sharding::default(),
+            Some(s) => {
+                let shards = s.req("shards")?.as_usize().context("sharding.shards")?;
+                let assignment = match s.get("assignment") {
+                    None => ShardAssignment::Hash,
+                    Some(a) => match a
+                        .req("kind")?
+                        .as_str()
+                        .context("sharding.assignment.kind")?
+                    {
+                        "hash" => ShardAssignment::Hash,
+                        "explicit" => ShardAssignment::Explicit(
+                            a.req("map")?
+                                .as_obj()
+                                .context("sharding.assignment.map must be an object")?
+                                .iter()
+                                .map(|(task, v)| {
+                                    Ok((
+                                        task.clone(),
+                                        v.as_usize().with_context(|| {
+                                            format!("shard index for task {task:?}")
+                                        })?,
+                                    ))
+                                })
+                                .collect::<Result<BTreeMap<_, _>>>()?,
+                        ),
+                        other => bail!("unknown shard assignment kind {other:?}"),
+                    },
+                };
+                Sharding { shards, assignment }
+            }
         };
 
         let schedule: Vec<BTreeMap<String, Slo>> = v
@@ -448,7 +668,17 @@ impl Scenario {
                 .collect::<Result<_>>()?,
         };
 
-        Ok(Scenario { name, tasks, arrival, schedule, universe, admission, seed })
+        Ok(Scenario {
+            name,
+            tasks,
+            arrival,
+            schedule,
+            universe,
+            admission,
+            dispatch,
+            sharding,
+            seed,
+        })
     }
 
     /// Write the scenario as pretty JSON.
@@ -570,6 +800,28 @@ mod tests {
                 .with_admission(Admission::QueueCap { max_queued: 8 }),
             Scenario::bursty(&tasks(), slos(), 5.0, 80.0, 1_000.0, 4_000.0)
                 .with_admission(Admission::Deadline { slack: 3.0 }),
+            // The dispatch/sharding/fair-admission block, with the
+            // largest representable seed (string-encoded through JSON).
+            Scenario::bursty(&tasks(), slos(), 10.0, 120.0, 500.0, 3_000.0)
+                .with_seed(u64::MAX)
+                .with_admission(Admission::Fair {
+                    slack: 1.5,
+                    weights: BTreeMap::from([("a".to_string(), 2.0)]),
+                })
+                .with_dispatch(Dispatch { max_batch: 4, min_queue: 3 })
+                .with_sharding(Sharding {
+                    shards: 2,
+                    assignment: ShardAssignment::Explicit(BTreeMap::from([
+                        ("a".to_string(), 0),
+                        ("b".to_string(), 1),
+                    ])),
+                }),
+            Scenario::poisson(&tasks(), slos(), 15.0, 2_000.0)
+                // 2^53 + 1: the first u64 a JSON f64 cannot represent —
+                // must survive exactly via the string encoding.
+                .with_seed((1u64 << 53) + 1)
+                .with_admission(Admission::Fair { slack: 2.0, weights: BTreeMap::new() })
+                .with_sharding(Sharding::hash(3)),
             Scenario::trace(
                 &tasks(),
                 slos(),
@@ -587,6 +839,8 @@ mod tests {
             assert_eq!(back.tasks, sc.tasks);
             assert_eq!(back.seed, sc.seed);
             assert_eq!(back.admission, sc.admission);
+            assert_eq!(back.dispatch, sc.dispatch);
+            assert_eq!(back.sharding, sc.sharding);
             assert_eq!(back.schedule, sc.schedule);
             assert_eq!(back.universe.len(), sc.universe.len());
             // Streams replay identically through the round trip.
@@ -598,6 +852,34 @@ mod tests {
                 assert!((x.arrival_ms - y.arrival_ms).abs() < 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn legacy_json_defaults_dispatch_and_sharding() {
+        // Files written before the dispatch subsystem existed carry no
+        // `dispatch`/`sharding` keys: they must parse to the identity
+        // configuration (no batching, one shard).
+        let legacy = crate::json::parse(
+            r#"{"tasks": ["a"], "arrival": {"kind": "poisson", "rate_qps": 5, "horizon_ms": 100},
+                "schedule": [{"a": {"min_accuracy": 0.5, "max_latency_ms": 50}}]}"#,
+        )
+        .unwrap();
+        let sc = Scenario::from_json(&legacy).unwrap();
+        assert_eq!(sc.dispatch, Dispatch::default());
+        assert_eq!(sc.sharding, Sharding::default());
+        assert_eq!(sc.dispatch.max_batch, 1, "default must not batch");
+        assert_eq!(sc.sharding.shards, 1, "default must not shard");
+    }
+
+    #[test]
+    fn admission_labels_match_json_kinds() {
+        assert_eq!(Admission::Always.label(), "always");
+        assert_eq!(Admission::QueueCap { max_queued: 4 }.label(), "queue_cap:4");
+        assert_eq!(Admission::Deadline { slack: 2.0 }.label(), "deadline:2");
+        assert_eq!(
+            Admission::Fair { slack: 1.5, weights: BTreeMap::new() }.label(),
+            "fair:1.5"
+        );
     }
 
     #[test]

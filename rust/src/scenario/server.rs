@@ -13,6 +13,32 @@
 //! PJRT chain (correct logits; real wall time is the caller's to
 //! record). SLO feedback switches variants mid-run when a task is
 //! observed violating (the runtime-rescheduling path of Fig. 5a).
+//!
+//! Streams are replayed through the [`super::dispatch::Dispatcher`],
+//! which coalesces same-task queries into [`Session::submit_batch`]
+//! calls when the scenario enables batching; the per-request path is
+//! otherwise [`Session::submit`]:
+//!
+//! ```
+//! use sparseloom::fixtures;
+//! use sparseloom::scenario::{Scenario, Server};
+//!
+//! let (zoo, lm, profiles) = fixtures::tiny();
+//! let server = Server::builder(&zoo, &lm, &profiles).build();
+//! let scenario = Scenario::closed_loop(&fixtures::task_names(&zoo),
+//!                                      fixtures::slos(&zoo, 0.5, 1e9))
+//!     .with_queries(3);
+//!
+//! let mut session = server.session(&scenario, 0).unwrap();
+//! for q in scenario.stream(0) {
+//!     let outcome = session.submit(&q).unwrap();
+//!     assert!(!outcome.dropped);
+//!     assert!(outcome.finish_ms >= outcome.start_ms);
+//! }
+//! let report = session.finish();
+//! assert_eq!(report.total_queries, 3);
+//! assert_eq!(report.total_batches, 3, "unbatched: one batch per query");
+//! ```
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, VecDeque};
@@ -30,10 +56,20 @@ use crate::util::stats;
 use crate::workload::{placement_orders, Query, Slo};
 use crate::zoo::Zoo;
 
+use super::dispatch::{Dispatch, Dispatcher};
 use super::{Admission, Scenario};
 
 /// Queries observed before a feedback-switch decision re-evaluates.
 const FEEDBACK_WINDOW: usize = 20;
+
+/// Hysteresis for [`Admission::Fair`]'s share clause: a task is only
+/// admitted past its deadline budget while its per-weight backlog is
+/// under this fraction of the *other* tasks' per-weight backlog.
+/// Without the margin, the one-service-quantum leapfrog between
+/// equally-backlogged tasks (whoever booked last looks more backlogged)
+/// would let symmetric floods admit each other forever, silently
+/// disabling the deadline floor.
+const FAIR_SHARE_MARGIN: f64 = 0.75;
 
 /// Builder for a [`Server`]: the only way to construct one.
 pub struct ServerBuilder<'a> {
@@ -194,11 +230,7 @@ impl<'a> Server<'a> {
         }
         let mut merged = RunReport::default();
         for r in reports {
-            merged.makespan_ms += r.makespan_ms;
-            merged.total_queries += r.total_queries;
-            merged.total_dropped += r.total_dropped;
-            merged.outcomes.extend(r.outcomes);
-            merged.requests.extend(r.requests);
+            merged.merge_sequential(r);
         }
         Ok(merged)
     }
@@ -212,10 +244,14 @@ impl<'a> Server<'a> {
             bail!("scenario {:?} has an empty SLO schedule", scenario.name);
         }
         let universe = scenario.slo_universe();
+        // The dispatcher honors the scenario's batching config; with the
+        // default identity dispatch it replays exactly like
+        // `Session::drive`.
+        let dispatcher = Dispatcher::new(scenario.dispatch.clone());
         if scenario.schedule.len() == 1 {
             let prepared = self.prepare(&scenario.schedule[0], &universe)?;
             let mut session = self.session_with(scenario, 0, prepared)?;
-            session.drive(&scenario.stream(0))?;
+            dispatcher.drive(&mut session, &scenario.stream(0))?;
             return Ok(vec![session.finish()]);
         }
         let (preload_plan, mut pool) = self.coord.build_pool(&universe, &self.opts)?;
@@ -228,7 +264,7 @@ impl<'a> Server<'a> {
                 pool.clone(),
             )?;
             let mut session = self.session_with(scenario, phase, prepared)?;
-            session.drive(&scenario.stream(phase))?;
+            dispatcher.drive(&mut session, &scenario.stream(phase))?;
             // Carry the *post-serve* pool forward so blobs loaded by
             // mid-phase feedback switches stay resident for the next
             // phase (the pool really is persistent across phases).
@@ -335,6 +371,8 @@ impl<'a> Server<'a> {
                     queueing: Vec::new(),
                     switches: 0,
                     dropped: 0,
+                    batches: 0,
+                    max_batch: 0,
                     inflight: VecDeque::new(),
                     ran_real: false,
                     order,
@@ -347,7 +385,7 @@ impl<'a> Server<'a> {
             server: self,
             prepared,
             slos: slos.clone(),
-            admission: scenario.admission,
+            admission: scenario.admission.clone(),
             self_clocked: matches!(scenario.arrival, super::Arrival::ClosedLoop { .. }),
             tasks: scenario.tasks.clone(),
             sim,
@@ -370,6 +408,10 @@ struct TaskState {
     queueing: Vec<f64>,
     switches: usize,
     dropped: usize,
+    /// Dispatch batches served (a lone query counts as one batch).
+    batches: usize,
+    /// Largest coalesced batch served for this task.
+    max_batch: usize,
     /// Completion times of admitted queries (queue-cap accounting).
     inflight: VecDeque<f64>,
     ran_real: bool,
@@ -400,68 +442,157 @@ pub struct Session<'s, 'a> {
 impl<'s, 'a> Session<'s, 'a> {
     /// Submit one query: admission check, stage-by-stage booking on
     /// the pipeline, SLO feedback, optional real PJRT execution.
-    /// Returns (and records) the query's [`RequestOutcome`].
+    /// Returns (and records) the query's [`RequestOutcome`]. Exactly a
+    /// single-query [`Session::submit_batch`].
     pub fn submit(&mut self, q: &Query) -> Result<RequestOutcome> {
+        let mut evs = self.submit_batch(std::slice::from_ref(&q))?;
+        Ok(evs.pop().expect("one outcome per submitted query"))
+    }
+
+    /// Submit a coalesced batch of same-task queries: per-query
+    /// admission against the pre-batch backlog, then **one** placement
+    /// decision booking each pipeline stage once for the whole batch at
+    /// the batch-aware stage occupancy (`LatencyModel::batch_factor`).
+    /// Every query of the batch completes when the batch does, so each
+    /// admitted query's service latency is the full batch service time —
+    /// batching trades per-query latency for throughput. Returns (and
+    /// records) one [`RequestOutcome`] per input query, in input order.
+    ///
+    /// Queries must all target the same task and be in per-task FIFO
+    /// order (the [`super::dispatch::Dispatcher`] guarantees both).
+    pub fn submit_batch(&mut self, batch: &[&Query]) -> Result<Vec<RequestOutcome>> {
+        let Some(first) = batch.first() else {
+            bail!("submit_batch needs at least one query");
+        };
+        let task = &first.task;
+        if batch.iter().any(|q| &q.task != task) {
+            bail!("batch mixes tasks (dispatcher invariant violated)");
+        }
         let coord = &self.server.coord;
         let opts = &self.server.opts;
         let platform = &coord.lm.platform;
-        let Some(slo) = self.slos.get(&q.task).copied() else {
-            bail!("query {} targets task {:?} with no SLO in this session", q.id, q.task);
+        let Some(slo) = self.slos.get(task).copied() else {
+            bail!(
+                "query {} targets task {:?} with no SLO in this session",
+                first.id,
+                task
+            );
         };
         let self_clocked = self.self_clocked;
-        let Some(st) = self.states.get_mut(&q.task) else {
-            bail!("query {} targets task {:?} not in this scenario", q.id, q.task);
+        let tz = coord.zoo.task(task)?;
+
+        // Weighted-fair admission compares this task's backlog against
+        // the *other* tasks'; snapshot the cross-task state before taking
+        // this task's mutable state. `ready_ms` of other tasks cannot
+        // move while this batch books, so the snapshot stays exact.
+        // (slack, own weight, Σ other weights, other tasks' ready_ms)
+        let fair: Option<(f64, f64, f64, Vec<f64>)> = match &self.admission {
+            Admission::Fair { slack, weights } => {
+                let w_of = |t: &str| weights.get(t).copied().unwrap_or(1.0);
+                let mut sum_w_others = 0.0;
+                let mut others = Vec::with_capacity(self.states.len());
+                for (name, st) in &self.states {
+                    if name != task {
+                        sum_w_others += w_of(name);
+                        others.push(st.ready_ms);
+                    }
+                }
+                Some((*slack, w_of(task), sum_w_others, others))
+            }
+            _ => None,
+        };
+
+        let Some(st) = self.states.get_mut(task) else {
+            bail!(
+                "query {} targets task {:?} not in this scenario",
+                first.id,
+                task
+            );
         };
 
         // No runnable variant at all: nothing to book.
         let Some(comp) = st.comp.clone() else {
-            st.dropped += 1;
-            let ev = dropped_event(q, None);
-            self.requests.push(ev.clone());
-            return Ok(ev);
+            st.dropped += batch.len();
+            let evs: Vec<RequestOutcome> =
+                batch.iter().map(|q| dropped_event(q, None)).collect();
+            self.requests.extend(evs.iter().cloned());
+            return Ok(evs);
         };
 
+        // --- per-query admission against the pre-batch backlog ----------
         // A closed-loop query only exists once its predecessor finishes
         // (self-clocking), so it can never be "late"; an open-loop query
         // arrives at its nominal time regardless of backlog.
-        let effective_arrival = if self_clocked {
-            q.arrival_ms.max(st.ready_ms)
-        } else {
-            q.arrival_ms
-        };
-
-        // --- admission control (per-task backlog) -----------------------
-        while st
-            .inflight
-            .front()
-            .map(|&done| done <= effective_arrival)
-            .unwrap_or(false)
-        {
-            st.inflight.pop_front();
+        let mut events: Vec<Option<RequestOutcome>> =
+            (0..batch.len()).map(|_| None).collect();
+        // (input index, effective arrival) of every admitted query.
+        let mut admitted: Vec<(usize, f64)> = Vec::with_capacity(batch.len());
+        let mut batch_arrival = f64::NEG_INFINITY;
+        for (i, q) in batch.iter().enumerate() {
+            let effective_arrival = if self_clocked {
+                q.arrival_ms.max(st.ready_ms)
+            } else {
+                q.arrival_ms
+            };
+            while st
+                .inflight
+                .front()
+                .map(|&done| done <= effective_arrival)
+                .unwrap_or(false)
+            {
+                st.inflight.pop_front();
+            }
+            let backlog_ms = (st.ready_ms - effective_arrival).max(0.0);
+            let admit = match &self.admission {
+                Admission::Always => true,
+                Admission::QueueCap { max_queued } => {
+                    st.inflight.len() + admitted.len() <= *max_queued
+                }
+                Admission::Deadline { slack } => {
+                    backlog_ms <= slack * slo.max_latency_ms
+                }
+                Admission::Fair { .. } => {
+                    let (slack, w_self, sum_w_others, others) =
+                        fair.as_ref().expect("fair context prepared above");
+                    let others_backlog: f64 = others
+                        .iter()
+                        .map(|&ready| (ready - effective_arrival).max(0.0))
+                        .sum();
+                    // Deadline floor, plus the share clause: own
+                    // per-weight backlog strictly under the margin of
+                    // the others' per-weight backlog. With no other
+                    // tasks both sides are zero and Fair is exactly
+                    // Deadline.
+                    backlog_ms <= slack * slo.max_latency_ms
+                        || backlog_ms * sum_w_others
+                            < FAIR_SHARE_MARGIN * w_self * others_backlog
+                }
+            };
+            if admit {
+                admitted.push((i, effective_arrival));
+                batch_arrival = batch_arrival.max(effective_arrival);
+            } else {
+                st.dropped += 1;
+                events[i] = Some(dropped_event(q, Some(backlog_ms)));
+            }
         }
-        let backlog_ms = (st.ready_ms - effective_arrival).max(0.0);
-        let admit = match self.admission {
-            Admission::Always => true,
-            Admission::QueueCap { max_queued } => st.inflight.len() <= max_queued,
-            Admission::Deadline { slack } => backlog_ms <= slack * slo.max_latency_ms,
-        };
-        if !admit {
-            st.dropped += 1;
-            let ev = dropped_event(q, Some(backlog_ms));
-            self.requests.push(ev.clone());
-            return Ok(ev);
+        if admitted.is_empty() {
+            let evs: Vec<RequestOutcome> =
+                events.into_iter().map(|e| e.expect("all dropped")).collect();
+            self.requests.extend(evs.iter().cloned());
+            return Ok(evs);
         }
 
         // --- stage-by-stage booking on the pipeline ---------------------
         // The SLO-judged quantity is the *service* (inference) latency —
         // the sum of stage executions plus any switch cost hitting this
-        // query — matching the paper's per-inference latency SLOs.
+        // batch — matching the paper's per-inference latency SLOs.
         // Queueing delay from arrivals and co-running tasks still shapes
         // the virtual timeline and therefore throughput (Fig. 11) and
         // placement effects (Fig. 13).
-        let tz = coord.zoo.task(&q.task)?;
+        let b = admitted.len();
         let penalty = st.pending_penalty_ms;
-        let issue = effective_arrival.max(st.ready_ms) + penalty;
+        let issue = batch_arrival.max(st.ready_ms) + penalty;
         let mut service = penalty;
         st.pending_penalty_ms = 0.0;
         let mut stage_ready = issue;
@@ -469,7 +600,12 @@ impl<'s, 'a> Session<'s, 'a> {
         let mut supported = true;
         for (j, &vi) in comp.0.iter().enumerate() {
             let proc = st.order[j];
-            let Some(ms) = coord.lm.subgraph_ms(tz, vi, j, proc).map(|m| m * st.coexec)
+            // The batch-aware latency model: stage occupancy for `b`
+            // coalesced queries (exactly `subgraph_ms` at b = 1).
+            let Some(ms) = coord
+                .lm
+                .subgraph_batch_ms(tz, vi, j, proc, b)
+                .map(|m| m * st.coexec)
             else {
                 // Unsupported on this processor: violation-by-
                 // construction (infinite latency); stop serving the task.
@@ -486,28 +622,51 @@ impl<'s, 'a> Session<'s, 'a> {
             stage_ready = end;
         }
         if !supported {
-            st.dropped += 1;
-            let ev = dropped_event(q, None);
-            self.requests.push(ev.clone());
-            return Ok(ev);
+            st.dropped += b;
+            for &(i, _) in &admitted {
+                events[i] = Some(dropped_event(batch[i], None));
+            }
+            let evs: Vec<RequestOutcome> =
+                events.into_iter().map(|e| e.expect("all dropped")).collect();
+            self.requests.extend(evs.iter().cloned());
+            return Ok(evs);
         }
-        // The switch penalty is part of *service* (it delays this
-        // query's inference), so it is excluded from queueing:
-        // finish − arrival = queueing + service on an idle pipeline.
-        let queueing_ms = (start_ms - effective_arrival - penalty).max(0.0);
-        st.latencies.push(service);
-        st.queueing.push(queueing_ms);
+
+        // --- per-query completion accounting ----------------------------
         st.ready_ms = stage_ready;
-        st.inflight.push_back(stage_ready);
+        st.batches += 1;
+        st.max_batch = st.max_batch.max(b);
+        for &(i, effective_arrival) in &admitted {
+            // The switch penalty is part of *service* (it delays this
+            // query's inference), so it is excluded from queueing:
+            // finish − arrival = queueing + service on an idle pipeline.
+            let queueing_ms = (start_ms - effective_arrival - penalty).max(0.0);
+            st.latencies.push(service);
+            st.queueing.push(queueing_ms);
+            st.inflight.push_back(stage_ready);
+            events[i] = Some(RequestOutcome {
+                id: batch[i].id,
+                task: task.clone(),
+                arrival_ms: batch[i].arrival_ms,
+                start_ms,
+                finish_ms: stage_ready,
+                service_ms: service,
+                queueing_ms,
+                dropped: false,
+                slo_ok: Some(service <= slo.max_latency_ms),
+            });
+        }
 
         // --- SLO feedback: switch variants when violating ---------------
         let served = st.latencies.len();
         if opts.feedback_switching
             && opts.policy == Policy::SparseLoom
-            && served > 0
-            && served % FEEDBACK_WINDOW == 0
+            // Trigger whenever this batch crossed a window boundary —
+            // for single-query batches this is the classic
+            // `served % FEEDBACK_WINDOW == 0` check.
+            && served / FEEDBACK_WINDOW > (served - b) / FEEDBACK_WINDOW
         {
-            if let Some(p) = coord.profiles.get(&q.task) {
+            if let Some(p) = coord.profiles.get(task) {
                 let recent =
                     &st.latencies[st.latencies.len().saturating_sub(FEEDBACK_WINDOW)..];
                 let mean = stats::mean(recent);
@@ -523,7 +682,7 @@ impl<'s, 'a> Session<'s, 'a> {
                         // Charge load for blobs not resident.
                         let mut penalty = 0.0;
                         for (j, &vi) in new_comp.0.iter().enumerate() {
-                            let id = BlobId::new(&q.task, vi, j);
+                            let id = BlobId::new(task, vi, j);
                             if !self.prepared.pool.touch(&id) {
                                 let bytes = tz.variants[vi].subgraphs[j].bytes;
                                 penalty += coord.lm.load_ms(bytes, st.order[j]);
@@ -552,68 +711,47 @@ impl<'s, 'a> Session<'s, 'a> {
                 let input: Vec<f32> =
                     (0..dim).map(|i| (i as f32 * 0.13).cos()).collect();
                 let comp_idx = st.comp.as_ref().unwrap_or(&comp).0.clone();
-                let _ = rt.run_chain(coord.zoo, &q.task, &comp_idx, 1, &input)?;
+                let _ = rt.run_chain(coord.zoo, task, &comp_idx, 1, &input)?;
             }
         }
 
-        let ev = RequestOutcome {
-            id: q.id,
-            task: q.task.clone(),
-            arrival_ms: q.arrival_ms,
-            start_ms,
-            finish_ms: stage_ready,
-            service_ms: service,
-            queueing_ms,
-            dropped: false,
-            slo_ok: Some(service <= slo.max_latency_ms),
-        };
-        self.requests.push(ev.clone());
-        Ok(ev)
+        let evs: Vec<RequestOutcome> = events
+            .into_iter()
+            .map(|e| e.expect("one outcome per query"))
+            .collect();
+        self.requests.extend(evs.iter().cloned());
+        Ok(evs)
     }
 
     /// Submit a whole stream in simulated-time order: at every step the
     /// task whose next query would issue earliest goes first. For open
     /// loops this follows arrival order; for closed loops (all arrivals
     /// at the stagger offset) it reproduces the paper's self-clocking
-    /// round-robin.
+    /// round-robin. This is [`super::dispatch::Dispatcher::drive`] with
+    /// the identity dispatch (one shared replay loop).
     pub fn drive(&mut self, queries: &[Query]) -> Result<()> {
-        let order: Vec<String> = self.tasks.clone();
-        let mut pending: BTreeMap<&str, VecDeque<&Query>> = BTreeMap::new();
-        for q in queries {
-            if !self.states.contains_key(&q.task) {
-                bail!(
-                    "query {} targets task {:?} not in this scenario",
-                    q.id,
-                    q.task
-                );
-            }
-            pending.entry(q.task.as_str()).or_default().push_back(q);
-        }
-        loop {
-            let mut next: Option<(&str, f64)> = None;
-            for name in &order {
-                let Some(queue) = pending.get(name.as_str()) else { continue };
-                let Some(q) = queue.front() else { continue };
-                let ready = self
-                    .states
-                    .get(name.as_str())
-                    .map(|st| st.ready_ms)
-                    .unwrap_or(0.0);
-                let issue = q.arrival_ms.max(ready);
-                if next.map(|(_, t)| issue < t).unwrap_or(true) {
-                    next = Some((name.as_str(), issue));
-                }
-            }
-            let Some((task, _)) = next else { break };
-            let q = pending.get_mut(task).unwrap().pop_front().unwrap();
-            self.submit(q)?;
-        }
-        Ok(())
+        Dispatcher::new(Dispatch::none()).drive(self, queries)
     }
 
     /// Events recorded so far (submission order).
     pub fn events(&self) -> &[RequestOutcome] {
         &self.requests
+    }
+
+    /// Closed-loop sessions are self-clocking: backlog is zero by
+    /// construction, so the dispatcher never batches them.
+    pub(crate) fn is_self_clocked(&self) -> bool {
+        self.self_clocked
+    }
+
+    /// Task iteration order (the scenario's task list).
+    pub(crate) fn task_order(&self) -> &[String] {
+        &self.tasks
+    }
+
+    /// When `task`'s previous query finishes (`None` for unknown tasks).
+    pub(crate) fn ready_of(&self, task: &str) -> Option<f64> {
+        self.states.get(task).map(|st| st.ready_ms)
     }
 
     /// Variant switches performed so far (feedback rescheduling).
@@ -627,11 +765,13 @@ impl<'s, 'a> Session<'s, 'a> {
         let mut outcomes = Vec::with_capacity(self.tasks.len());
         let mut total_queries = 0usize;
         let mut total_dropped = 0usize;
+        let mut total_batches = 0usize;
         for name in &self.tasks {
             let st = &self.states[name];
             let slo = &self.slos[name];
             total_queries += st.latencies.len();
             total_dropped += st.dropped;
+            total_batches += st.batches;
             outcomes.push(TaskOutcome {
                 task: name.clone(),
                 accuracy: st.accuracy,
@@ -642,6 +782,8 @@ impl<'s, 'a> Session<'s, 'a> {
                 mean_queueing_ms: stats::mean(&st.queueing),
                 queries_completed: st.latencies.len(),
                 queries_dropped: st.dropped,
+                batches: st.batches,
+                max_batch: st.max_batch,
                 slo_accuracy: slo.min_accuracy,
                 slo_latency_ms: slo.max_latency_ms,
             });
@@ -651,6 +793,7 @@ impl<'s, 'a> Session<'s, 'a> {
             makespan_ms: self.sim.horizon_ms,
             total_queries,
             total_dropped,
+            total_batches,
             requests: self.requests,
         }
     }
@@ -803,7 +946,7 @@ mod tests {
             Admission::Deadline { slack: 1.0 },
         ] {
             let sc = Scenario::closed_loop(&tiny_tasks(), slos(0.5, 50.0))
-                .with_admission(admission);
+                .with_admission(admission.clone());
             let r = server.run(&sc).unwrap();
             assert_eq!(r.total_dropped, 0, "{admission:?}: closed loop never queues");
             assert_eq!(r.total_queries, 100);

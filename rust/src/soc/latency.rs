@@ -124,6 +124,31 @@ impl LatencyModel {
         Some(total)
     }
 
+    /// Batch service-time multiplier: a coalesced batch of `batch`
+    /// same-task queries occupies each stage for
+    /// `1 + batch_marginal·(batch−1)` single-query latencies. The factor
+    /// is 1.0 at batch 1 (the unbatched path is unchanged) and grows
+    /// strictly sub-linearly, which is what makes batching under backlog
+    /// a throughput win: per-query occupancy `factor/batch` falls as the
+    /// batch grows.
+    pub fn batch_factor(&self, batch: usize) -> f64 {
+        1.0 + self.platform.batch_marginal * batch.saturating_sub(1) as f64
+    }
+
+    /// Batch-aware `subgraph_ms`: the stage occupancy of serving `batch`
+    /// coalesced queries of variant `vi`'s subgraph `sg` on `proc`.
+    pub fn subgraph_batch_ms(
+        &self,
+        tz: &TaskZoo,
+        vi: usize,
+        sg: usize,
+        proc: Processor,
+        batch: usize,
+    ) -> Option<f64> {
+        self.subgraph_ms(tz, vi, sg, proc)
+            .map(|ms| ms * self.batch_factor(batch))
+    }
+
     /// Compile-time cost (ms) of preparing one subgraph's executable for
     /// `proc` (paper Fig. 5a: ≈23.7× inference).
     pub fn compile_ms(&self, bytes: u64, proc: Processor) -> f64 {
@@ -251,6 +276,23 @@ pub mod tests {
         let lm = LatencyModel::new(plat, base_for(&tz));
         let cpu = lm.subgraph_ms(&tz, 0, 0, Processor::Cpu).unwrap();
         assert!((cpu - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_factor_sublinear_and_identity_at_one() {
+        let tz = tiny_taskzoo();
+        let lm = LatencyModel::new(Platform::desktop(), base_for(&tz));
+        assert!((lm.batch_factor(1) - 1.0).abs() < 1e-12);
+        for b in 2..=8usize {
+            let f = lm.batch_factor(b);
+            assert!(f > 1.0, "batch {b} must cost more than one query");
+            assert!(f < b as f64, "batch {b} must amortize (factor {f})");
+            // Per-query occupancy falls monotonically with batch size.
+            assert!(f / b as f64 < lm.batch_factor(b - 1) / (b - 1) as f64);
+        }
+        let single = lm.subgraph_ms(&tz, 0, 0, Processor::Cpu).unwrap();
+        let batched = lm.subgraph_batch_ms(&tz, 0, 0, Processor::Cpu, 4).unwrap();
+        assert!((batched - single * lm.batch_factor(4)).abs() < 1e-9);
     }
 
     #[test]

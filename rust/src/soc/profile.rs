@@ -121,6 +121,12 @@ pub struct Platform {
     /// Hetero²Pipe [45] measures and the paper's §1 cites. Pipelined
     /// subgraph execution time-multiplexes exclusively and does not pay it.
     pub coexec_slowdown: f64,
+    /// Marginal cost of growing a batch: a coalesced batch of `b`
+    /// same-task queries costs `1 + batch_marginal·(b−1)` single-query
+    /// latencies per stage (weights and dispatch amortize across the
+    /// batch; activation compute still scales). Values < 1 are what make
+    /// batching under backlog profitable (`LatencyModel::batch_factor`).
+    pub batch_marginal: f64,
 }
 
 impl Platform {
@@ -180,6 +186,7 @@ impl Platform {
             interproc_overhead: 0.075,
             dvfs_slowdown: 1.0,
             coexec_slowdown: 0.30,
+            batch_marginal: 0.32,
         }
     }
 
@@ -224,6 +231,7 @@ impl Platform {
             interproc_overhead: 0.080,
             dvfs_slowdown: 1.0,
             coexec_slowdown: 0.35,
+            batch_marginal: 0.38,
         }
     }
 
@@ -260,6 +268,7 @@ impl Platform {
             interproc_overhead: 0.070,
             dvfs_slowdown: 1.0,
             coexec_slowdown: 0.40,
+            batch_marginal: 0.30,
         }
     }
 

@@ -233,6 +233,19 @@ pub fn bursty_stream(
     out
 }
 
+/// Deterministic task → shard assignment: FNV-1a over the task name,
+/// modulo the shard count. Stable across runs, platforms, and processes
+/// (no `DefaultHasher` seed dependence), so saved scenarios and printed
+/// reports always agree on who serves what.
+pub fn shard_of_task(task: &str, shards: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in task.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % shards.max(1) as u64) as usize
+}
+
 /// Convenience: per-task SLO grids for a whole zoo on a platform.
 pub fn grids_for_zoo(zoo: &Zoo, lm: &LatencyModel) -> Vec<(String, Vec<Slo>)> {
     zoo.tasks
@@ -422,6 +435,27 @@ mod tests {
         }
         assert!(burst_n > 3 * base_n, "burst {burst_n} vs base {base_n}");
         assert!(bursty_stream(&tasks, 0.0, 0.0, 1_000.0, 5_000.0, &mut Rng::new(1)).is_empty());
+    }
+
+    #[test]
+    fn shard_assignment_deterministic_and_in_range() {
+        let names = ["imgcls", "audio", "nlp", "det", "alpha", "beta", "gamma"];
+        for shards in 1..=4usize {
+            for name in names {
+                let s = shard_of_task(name, shards);
+                assert!(s < shards, "{name} → {s} out of range for {shards}");
+                assert_eq!(s, shard_of_task(name, shards), "must be stable");
+            }
+        }
+        // Zero shards is clamped rather than panicking.
+        assert_eq!(shard_of_task("x", 0), 0);
+        // The hash actually spreads: over 26 names and 2 shards, both
+        // shards must receive someone.
+        let mut seen = [false; 2];
+        for c in b'a'..=b'z' {
+            seen[shard_of_task(&(c as char).to_string(), 2)] = true;
+        }
+        assert!(seen[0] && seen[1], "degenerate hash");
     }
 
     #[test]

@@ -11,6 +11,11 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Rustdoc must stay warning-free (broken intra-doc links, bad code
+# fences); doc-examples themselves run as doc-tests under `cargo test`.
+echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 # rustfmt is optional in minimal toolchains; tolerate its absence but
 # fail on real formatting drift when it is installed.
 if cargo fmt --version >/dev/null 2>&1; then
