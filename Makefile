@@ -1,7 +1,7 @@
 # Build-path entry points. The only Python step is the artifact export;
 # everything else is `cargo` (see scripts/ci.sh for the tier-1 gate).
 
-.PHONY: artifacts ci
+.PHONY: artifacts ci bench
 
 # Export the L1/L2 model-zoo artifacts the Rust serving system consumes
 # (manifest, HLO text, weight blobs, probe/eval tensors, oracles).
@@ -10,3 +10,9 @@ artifacts:
 
 ci:
 	scripts/ci.sh
+
+# Dispatch + planner benchmarks (artifact-free: both fall back to the
+# synthetic fixture zoo when artifacts/ is absent).
+bench:
+	cargo bench --bench dispatch_backlog
+	cargo bench --bench planner_cost

@@ -11,7 +11,8 @@ use std::collections::BTreeMap;
 
 use sparseloom::experiments::Ctx;
 use sparseloom::metrics::render_table;
-use sparseloom::preloader::{coverage, full_preload_bytes, preload, Hotness};
+use sparseloom::planner::memory;
+use sparseloom::preloader::{coverage, full_preload_bytes, Hotness};
 use sparseloom::profiler::ProfilerConfig;
 use sparseloom::scenario::{Scenario, Server};
 use sparseloom::soc::Platform;
@@ -50,7 +51,7 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     for frac in [0.1, 0.15, 0.25, 0.4, 0.55, 0.75, 1.0] {
         let budget = (full as f64 * frac) as u64;
-        let plan = preload(&refs, budget);
+        let plan = memory::preload(&refs, budget);
         // Mean feasible-config coverage over tasks.
         let mut cov = 0.0;
         for (name, p) in &profiles {

@@ -11,7 +11,7 @@ use sparseloom::coordinator::{Coordinator, ServeOpts};
 use sparseloom::experiments::Ctx;
 use sparseloom::scenario::{Scenario, Server};
 use sparseloom::gbdt::{Gbdt, GbdtParams};
-use sparseloom::optimizer::{feasible_set, optimize};
+use sparseloom::planner::{algo, CostModel};
 use sparseloom::preloader::Hotness;
 use sparseloom::profiler::{features, ProfilerConfig};
 use sparseloom::soc::Platform;
@@ -66,12 +66,13 @@ fn main() -> anyhow::Result<()> {
         acc
     });
 
+    let unit = CostModel::unit();
     b.case("alg1: feasible_set (Θ) one task", || {
-        feasible_set(p, &slos[&task], &orders).len()
+        algo::feasible_set(&unit, p, &slos[&task], &orders).len()
     });
 
     b.case("alg1: optimize() 4 tasks × 6 orders", || {
-        optimize(&profiles, &slos, &orders).mean_latency_ms
+        algo::optimize(&unit, &profiles, &slos, &orders).mean_latency_ms
     });
 
     b.case("alg2: hotness over |Ψ|=100", || {

@@ -1,0 +1,92 @@
+//! Planner cost-model microbench: the pruned `feasible_set` walk vs a
+//! naive reference on the |Ω| × V^S hot loop, plus batch-aware
+//! Algorithm 1 end-to-end. Artifact-free (synthetic fixture zoo), so it
+//! always runs.
+//!
+//! Run: `cargo bench --bench planner_cost` (also via `make bench`)
+
+use std::collections::BTreeMap;
+
+use sparseloom::benchkit::Bench;
+use sparseloom::fixtures;
+use sparseloom::planner::{algo, CostModel};
+use sparseloom::profiler::TaskProfile;
+use sparseloom::soc::Processor;
+use sparseloom::workload::{placement_orders, Slo};
+
+/// The pre-prune reference walk: full |Ω| latency scan per candidate.
+fn naive_feasible_set(
+    cost: &CostModel,
+    p: &TaskProfile,
+    slo: &Slo,
+    orders: &[Vec<Processor>],
+) -> usize {
+    let mut n = 0usize;
+    for k in 0..p.space.len() {
+        if p.accuracy(k) < slo.min_accuracy {
+            continue;
+        }
+        let comp = p.space.composition(k);
+        let ok = orders.iter().any(|o| {
+            cost.latency(p, &comp, o)
+                .map(|l| l <= slo.max_latency_ms)
+                .unwrap_or(false)
+        });
+        if ok {
+            n += 1;
+        }
+    }
+    n
+}
+
+fn main() {
+    let (zoo, lm, profiles) = fixtures::trio();
+    let orders = placement_orders(&lm.platform, zoo.subgraphs);
+    let p = &profiles["beta"];
+    let unit = CostModel::unit();
+    let batched = CostModel::batch_aware(&lm, 4.0);
+    // A tight-but-satisfiable bound: the regime where the order-level
+    // and partial-sum prunes actually cut work.
+    let tight = Slo { min_accuracy: 0.6, max_latency_ms: 9.0 };
+    let lax = Slo { min_accuracy: 0.0, max_latency_ms: 1e9 };
+    let slos: BTreeMap<String, Slo> = profiles
+        .keys()
+        .map(|n| (n.clone(), Slo { min_accuracy: 0.5, max_latency_ms: 30.0 }))
+        .collect();
+
+    println!("\n== planner cost (synthetic trio fixture) ==\n");
+    Bench::header();
+    let mut b = Bench::new();
+
+    b.case("feasible_set naive, tight SLO", || {
+        naive_feasible_set(&unit, p, &tight, &orders)
+    });
+    b.case("feasible_set pruned, tight SLO", || {
+        algo::feasible_set(&unit, p, &tight, &orders).len()
+    });
+    b.case("feasible_set naive, lax SLO", || {
+        naive_feasible_set(&unit, p, &lax, &orders)
+    });
+    b.case("feasible_set pruned, lax SLO", || {
+        algo::feasible_set(&unit, p, &lax, &orders).len()
+    });
+    b.case("feasible_set pruned, batch-aware", || {
+        algo::feasible_set(&batched, p, &tight, &orders).len()
+    });
+    b.case("optimize batch-1, 3 tasks", || {
+        algo::optimize(&unit, &profiles, &slos, &orders).mean_latency_ms
+    });
+    b.case("optimize batch-aware, 3 tasks", || {
+        algo::optimize(&batched, &profiles, &slos, &orders).mean_latency_ms
+    });
+
+    // Sanity: the prune must not change the result.
+    for (cost, name) in [(&unit, "unit"), (&batched, "batched")] {
+        for slo in [tight, lax] {
+            let pruned = algo::feasible_set(cost, p, &slo, &orders).len();
+            let naive = naive_feasible_set(cost, p, &slo, &orders);
+            assert_eq!(pruned, naive, "prune changed the result ({name})");
+        }
+    }
+    println!("\nprune equivalence OK");
+}

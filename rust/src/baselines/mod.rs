@@ -15,7 +15,8 @@
 
 use std::collections::BTreeMap;
 
-use crate::optimizer::{optimize, optimize_pure_only, Plan, Selection};
+use crate::optimizer::{Plan, Selection};
+use crate::planner::{algo, CostModel};
 use crate::profiler::TaskProfile;
 use crate::soc::{Platform, Processor};
 use crate::workload::{placement_orders, Slo};
@@ -114,11 +115,16 @@ pub fn np_processor(platform: &Platform) -> Processor {
 
 /// Plan for a policy. `task_proc` assigns each task a processor for NP
 /// policies (round-robin by task index, the common multi-DNN practice).
+///
+/// `cost` is the planner's cost model: SparseLoom plans through it
+/// (batch-aware when the serving layer expects coalescing); the
+/// baselines stay batch-naive — the systems they model plan at batch 1.
 pub fn plan(
     policy: Policy,
     profiles: &BTreeMap<String, TaskProfile>,
     slos: &BTreeMap<String, Slo>,
     platform: &Platform,
+    cost: &CostModel,
 ) -> Plan {
     let s = profiles
         .values()
@@ -128,18 +134,15 @@ pub fn plan(
     match policy {
         Policy::SparseLoom => {
             let orders = placement_orders(platform, s);
-            optimize(profiles, slos, &orders)
+            algo::optimize(cost, profiles, slos, &orders)
         }
         Policy::AvP => {
             // Adaptive pure variants, but the *fixed* N-G-C order —
             // these systems don't co-optimize placement.
             let orders = vec![fixed_ngc_order(platform, s)];
-            optimize_pure_only(profiles, slos, &orders)
+            algo::optimize_pure_only(&CostModel::unit(), profiles, slos, &orders)
         }
-        Policy::AvNp => {
-            let plans = np_plans(profiles, slos, platform, s, true);
-            plans
-        }
+        Policy::AvNp => np_plans(profiles, slos, platform, s, true),
         Policy::SvAoP | Policy::SvLoP => {
             let order = fixed_ngc_order(platform, s);
             let mut selections = BTreeMap::new();
@@ -204,8 +207,10 @@ fn np_plans(
     let mut lat_sum = 0.0;
     let mut n = 0usize;
     for (name, p) in profiles.iter() {
+        // SLO-driven like the planner: profiles without an SLO entry
+        // (shard-filtered maps) are left unplanned instead of panicking.
+        let Some(slo) = slos.get(name) else { continue };
         let order = np_order(proc, s);
-        let slo = &slos[name];
         let mut best: Option<Selection> = None;
         for i in 0..p.space.n_variants {
             let k = p.space.pure_index(i);
@@ -338,7 +343,7 @@ mod tests {
     #[test]
     fn sv_ao_picks_max_accuracy() {
         let (profiles, plat) = setup();
-        let plan = plan(Policy::SvAoP, &profiles, &slos(), &plat);
+        let plan = plan(Policy::SvAoP, &profiles, &slos(), &plat, &CostModel::unit());
         let sel = plan.selections["tiny"].unwrap();
         assert!((sel.accuracy - 0.9).abs() < 0.05, "dense is accuracy-optimal");
     }
@@ -346,7 +351,7 @@ mod tests {
     #[test]
     fn sv_lo_picks_min_latency() {
         let (profiles, plat) = setup();
-        let plan = plan(Policy::SvLoP, &profiles, &slos(), &plat);
+        let plan = plan(Policy::SvLoP, &profiles, &slos(), &plat, &CostModel::unit());
         let p = &profiles["tiny"];
         let sel = plan.selections["tiny"].unwrap();
         let order = fixed_ngc_order(&plat, 2);
@@ -365,8 +370,8 @@ mod tests {
             "tiny".to_string(),
             Slo { min_accuracy: 0.99, max_latency_ms: 0.001 },
         )]);
-        let a = plan(Policy::SvAoP, &profiles, &slos(), &plat);
-        let b = plan(Policy::SvAoP, &profiles, &strict, &plat);
+        let a = plan(Policy::SvAoP, &profiles, &slos(), &plat, &CostModel::unit());
+        let b = plan(Policy::SvAoP, &profiles, &strict, &plat, &CostModel::unit());
         assert_eq!(
             a.selections["tiny"].unwrap().stitched_index,
             b.selections["tiny"].unwrap().stitched_index
@@ -380,17 +385,17 @@ mod tests {
             "tiny".to_string(),
             Slo { min_accuracy: 2.0, max_latency_ms: 1e9 },
         )]);
-        let p = plan(Policy::AvNp, &profiles, &strict, &plat);
+        let p = plan(Policy::AvNp, &profiles, &strict, &plat, &CostModel::unit());
         assert!(p.selections["tiny"].is_none(), "infeasible must be None");
     }
 
     #[test]
     fn partitioned_policies_use_multiple_processors() {
         let (profiles, plat) = setup();
-        let p = plan(Policy::SparseLoom, &profiles, &slos(), &plat);
+        let p = plan(Policy::SparseLoom, &profiles, &slos(), &plat, &CostModel::unit());
         let unique: std::collections::HashSet<_> = p.order.iter().collect();
         assert!(unique.len() > 1, "pipelined across processors");
-        let np = plan(Policy::SvAoNp, &profiles, &slos(), &plat);
+        let np = plan(Policy::SvAoNp, &profiles, &slos(), &plat, &CostModel::unit());
         let unique_np: std::collections::HashSet<_> = np.order.iter().collect();
         assert_eq!(unique_np.len(), 1, "NP runs on one processor");
     }
@@ -400,7 +405,7 @@ mod tests {
         let (profiles, plat) = setup();
         let p = &profiles["tiny"];
         for policy in Policy::baselines() {
-            let pl = plan(policy, &profiles, &slos(), &plat);
+            let pl = plan(policy, &profiles, &slos(), &plat, &CostModel::unit());
             if let Some(sel) = pl.selections["tiny"] {
                 assert!(
                     p.space.composition(sel.stitched_index).is_pure(),

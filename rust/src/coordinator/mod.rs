@@ -19,8 +19,9 @@ use anyhow::Result;
 
 use crate::baselines::{self, Policy};
 use crate::metrics::SwitchBreakdown;
-use crate::optimizer::{feasible_set, Selection};
-use crate::preloader::{full_preload_bytes, preload, Hotness, PreloadPlan};
+use crate::optimizer::Selection;
+use crate::planner::{algo, memory, CostModel};
+use crate::preloader::{full_preload_bytes, Hotness, PreloadPlan};
 use crate::profiler::TaskProfile;
 use crate::runtime::Runtime;
 use crate::soc::{BlobId, LatencyModel, MemoryPool, Processor};
@@ -47,6 +48,12 @@ pub struct ServeOpts {
     /// accuracy before committing (a handful of extra profiling runs
     /// per task — cheap insurance against estimator error).
     pub verify_selection: bool,
+    /// Expected mean coalesced batch size for batch-aware planning
+    /// (`planner::CostModel`): 1.0 is the paper's batch-1 planning;
+    /// set it to the dispatch operating point (e.g. `max_batch`) when
+    /// serving batched backlog so Algorithm 1 scores candidates at the
+    /// occupancy the engine will actually book.
+    pub batch_hint: f64,
 }
 
 impl Default for ServeOpts {
@@ -58,6 +65,7 @@ impl Default for ServeOpts {
             judge_on_truth: true,
             force_order: None,
             verify_selection: true,
+            batch_hint: 1.0,
         }
     }
 }
@@ -130,7 +138,7 @@ impl<'a> Coordinator<'a> {
                 })
                 .collect();
             let refs: Vec<_> = pairs.iter().map(|(tz, h)| (*tz, h)).collect();
-            preload(&refs, budget)
+            memory::preload(&refs, budget)
         } else {
             // Baselines preload every variant subgraph (the memory-heavy
             // practice §2.2 describes), budget permitting, zoo order.
@@ -183,14 +191,13 @@ impl<'a> Coordinator<'a> {
         let s = self.subgraphs();
         let orders = placement_orders(platform, s);
         pool.clear_active();
-        let mut plan = baselines::plan(opts.policy, self.profiles, slos, platform);
+        // The planner's cost model: exactly Eq. 5 at the default
+        // batch_hint of 1.0, batch-aware otherwise.
+        let cost = CostModel::batch_aware(self.lm, opts.batch_hint);
+        let mut plan = baselines::plan(opts.policy, self.profiles, slos, platform, &cost);
         if let Some(fo) = &opts.force_order {
             // Fig. 13 mode: re-plan with Ω restricted to the forced order.
-            plan = crate::optimizer::optimize(
-                self.profiles,
-                slos,
-                std::slice::from_ref(fo),
-            );
+            plan = algo::optimize(&cost, self.profiles, slos, std::slice::from_ref(fo));
         }
 
         // --- selection refinement: prefer preloaded, verify truth -------
@@ -205,7 +212,7 @@ impl<'a> Coordinator<'a> {
             for (name, sel) in plan.selections.iter_mut() {
                 let p = &self.profiles[name];
                 let slo = &slos[name];
-                let theta = feasible_set(p, slo, &orders);
+                let theta = algo::feasible_set(&cost, p, slo, &orders);
                 if theta.is_empty() {
                     continue;
                 }
@@ -214,7 +221,7 @@ impl<'a> Coordinator<'a> {
                     .iter()
                     .filter_map(|&k| {
                         let comp = p.space.composition(k);
-                        p.latency_est(&comp, &plan.order).map(|l| {
+                        cost.latency(p, &comp, &plan.order).map(|l| {
                             (!self.resident(&pool, name, &comp), l, k)
                         })
                     })
@@ -319,7 +326,7 @@ impl<'a> Coordinator<'a> {
         omega: &[Vec<Processor>],
         observed_mean: f64,
     ) -> Option<Selection> {
-        let theta = feasible_set(p, slo, omega);
+        let theta = algo::feasible_set(&CostModel::unit(), p, slo, omega);
         let mut best: Option<Selection> = None;
         for &k in &theta.indices {
             let c = p.space.composition(k);
@@ -407,8 +414,8 @@ pub mod tests {
         let coord = Coordinator::new(&zoo, &lm, &profiles);
         let s = slos(0.5, 1e9);
         let uni: Vec<Slo> = s.values().copied().collect();
-        let mut opts = ServeOpts::default();
-        opts.memory_budget_frac = 0.0; // nothing preloaded
+        // Nothing preloaded: cold start must pay compile+load.
+        let opts = ServeOpts { memory_budget_frac: 0.0, ..Default::default() };
         let prepared = coord.prepare(&s, &uni, &opts).unwrap();
         let penalty = prepared.switch_penalty_ms["tiny"];
         assert!(penalty > 0.0, "cold start must pay compile+load");

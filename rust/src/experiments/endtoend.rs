@@ -12,7 +12,9 @@ use crate::baselines::Policy;
 use crate::coordinator::ServeOpts;
 use crate::metrics::{render_table, Aggregate, RunReport};
 use crate::profiler::{ProfilerConfig, TaskProfile};
-use crate::scenario::{Admission, Dispatch, Scenario, Server, ShardedServer, Sharding};
+use crate::scenario::{
+    Admission, Dispatch, PlannerConfig, Scenario, Server, ShardedServer, Sharding,
+};
 use crate::soc::{LatencyModel, Platform};
 use crate::util::Rng;
 use crate::workload::{
@@ -226,30 +228,55 @@ pub fn backlog_comparison(
         .with_universe(universe)
         .with_admission(Admission::Deadline { slack: 2.0 });
 
-    let configs: Vec<(&str, usize, usize, Admission)> = vec![
-        ("1 shard, unbatched", 1, 1, Admission::Deadline { slack: 2.0 }),
-        ("1 shard, batch<=4", 1, 4, Admission::Deadline { slack: 2.0 }),
-        ("2 shards, unbatched", 2, 1, Admission::Deadline { slack: 2.0 }),
-        ("2 shards, batch<=4", 2, 4, Admission::Deadline { slack: 2.0 }),
+    let configs: Vec<(&str, usize, usize, Admission, bool)> = vec![
+        ("1 shard, unbatched", 1, 1, Admission::Deadline { slack: 2.0 }, false),
+        ("1 shard, batch<=4", 1, 4, Admission::Deadline { slack: 2.0 }, false),
+        ("2 shards, unbatched", 2, 1, Admission::Deadline { slack: 2.0 }, false),
+        ("2 shards, batch<=4", 2, 4, Admission::Deadline { slack: 2.0 }, false),
         (
             "2 shards, batch<=4, fair",
             2,
             4,
             Admission::Fair { slack: 2.0, weights: BTreeMap::new() },
+            false,
+        ),
+        // The planner arm: batch-aware Algorithm 1 + online re-planning
+        // (hottest task migrates off a saturated shard, per-task FIFO
+        // preserved, budgets split by hotness).
+        (
+            "2 shards, batch<=4, replan",
+            2,
+            4,
+            Admission::Deadline { slack: 2.0 },
+            true,
         ),
     ];
     let mut rows = Vec::new();
     let mut baseline: Option<RunReport> = None;
-    let mut best: Option<RunReport> = None;
-    for (label, shards, max_batch, admission) in configs {
-        let sc = base
+    let mut static_sharded: Option<RunReport> = None;
+    let mut replanned: Option<RunReport> = None;
+    for (label, shards, max_batch, admission, replan) in configs {
+        let mut sc = base
             .clone()
             .with_admission(admission)
             .with_dispatch(Dispatch::batched(max_batch))
             .with_sharding(Sharding::hash(shards));
-        let sharded =
-            ShardedServer::build(zoo, lm, profiles, ServeOpts::default(), sc.sharding.clone());
-        let report = sharded.run(&sc)?.aggregate;
+        let opts = if replan {
+            sc = sc.with_planner(PlannerConfig::replanning());
+            // Batch-aware Algorithm 1 at the dispatch operating point.
+            ServeOpts { batch_hint: max_batch.max(1) as f64, ..Default::default() }
+        } else {
+            ServeOpts::default()
+        };
+        let sharded = ShardedServer::build(zoo, lm, profiles, opts, sc.sharding.clone());
+        let full = sharded.run(&sc)?;
+        let mean_util = if full.budget_utilization.is_empty() {
+            0.0
+        } else {
+            full.budget_utilization.iter().sum::<f64>()
+                / full.budget_utilization.len() as f64
+        };
+        let report = full.aggregate;
         rows.push(vec![
             label.to_string(),
             format!("{}", report.total_queries),
@@ -258,23 +285,31 @@ pub fn backlog_comparison(
             format!("{:.1}", report.throughput_qps()),
             format!("{:.2}", report.mean_batch_size()),
             format!("{:.3}", report.fairness_index()),
+            format!("{}", full.migrations),
+            format!("{:.0}%", 100.0 * mean_util),
             format!("{:.0}", report.makespan_ms),
         ]);
         if baseline.is_none() {
             baseline = Some(report.clone());
         }
         if label == "2 shards, batch<=4" {
-            best = Some(report);
+            static_sharded = Some(report.clone());
+        }
+        if replan {
+            replanned = Some(report);
         }
     }
     let mut out = String::from(
-        "Backlog — bursty overload: single server vs batched/sharded dispatch\n\n",
+        "Backlog — bursty overload: single server vs batched/sharded/replanned dispatch\n\n",
     );
     out.push_str(&render_table(
-        &["config", "done", "dropped", "viol%", "qps", "batch", "fairness", "makespan"],
+        &[
+            "config", "done", "dropped", "viol%", "qps", "batch", "fairness",
+            "mig", "util", "makespan",
+        ],
         &rows,
     ));
-    let (b, s) = (baseline.unwrap(), best.unwrap());
+    let (b, s) = (baseline.unwrap(), static_sharded.unwrap());
     out.push_str(&format!(
         "\n2 shards × batch 4 vs baseline: completed {} vs {} ({:+}), \
          dropped {} vs {} ({:+})\n",
@@ -284,6 +319,17 @@ pub fn backlog_comparison(
         s.total_dropped,
         b.total_dropped,
         s.total_dropped as i64 - b.total_dropped as i64,
+    ));
+    let r = replanned.unwrap();
+    out.push_str(&format!(
+        "replan vs static sharding: completed {} vs {} ({:+}), \
+         dropped {} vs {} ({:+})\n",
+        r.total_queries,
+        s.total_queries,
+        r.total_queries as i64 - s.total_queries as i64,
+        r.total_dropped,
+        s.total_dropped,
+        r.total_dropped as i64 - s.total_dropped as i64,
     ));
     Ok(out)
 }

@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use super::Ctx;
 use crate::metrics::render_table;
-use crate::optimizer::feasible_set;
+use crate::planner::{algo, CostModel};
 use crate::profiler::{profile_task_exhaustive, TaskProfile};
 use crate::runtime::Runtime;
 use crate::soc::{order_label, Platform};
@@ -47,7 +47,7 @@ pub fn fig3(ctx: &Ctx) -> Result<String> {
             let ladder = slo_ladder(&TaskRanges::measure(tz, &lm));
             let slo = ladder[c];
             n += 1;
-            let theta = feasible_set(p, &slo, &orders);
+            let theta = algo::feasible_set(&CostModel::unit(), p, &slo, &orders);
             if theta.is_empty() {
                 viol_with += 1;
             }

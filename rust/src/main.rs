@@ -19,7 +19,9 @@ use sparseloom::experiments::{self, Ctx};
 use sparseloom::metrics::RunReport;
 use sparseloom::profiler::ProfilerConfig;
 use sparseloom::runtime::Runtime;
-use sparseloom::scenario::{Admission, Dispatch, Scenario, Server, ShardedServer, Sharding};
+use sparseloom::scenario::{
+    Admission, Dispatch, PlannerConfig, Scenario, Server, ShardedServer, Sharding,
+};
 use sparseloom::soc::Platform;
 use sparseloom::workload::{slo_grid, TaskRanges};
 use sparseloom::zoo::Zoo;
@@ -46,6 +48,8 @@ fn app() -> App {
                 .opt("shards", "partition tasks across N servers (task-name hash)", Some("1"))
                 .opt("max-batch", "coalesce up to K same-task queries under backlog", Some("1"))
                 .opt("min-queue", "waiting queries before batching kicks in", Some("2"))
+                .opt("batch-hint", "plan batch-aware at this expected batch size (default: max-batch when --replan)", None)
+                .switch("replan", "online re-planning: migrate the hottest task off a saturated shard")
                 .opt("seed", "arrival-stream seed", Some("0"))
                 .opt("slo", "grid index 0..24 of the SLO config", Some("12"))
                 .opt("budget", "memory budget fraction of full preload", Some("1.0"))
@@ -188,6 +192,11 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
                 min_queue: args.get_usize("min-queue")?.unwrap_or(2),
             })
             .with_sharding(Sharding::hash(args.get_usize("shards")?.unwrap_or(1)))
+            .with_planner(if args.switch("replan") {
+                PlannerConfig::replanning()
+            } else {
+                PlannerConfig::default()
+            })
             .with_seed(args.get_usize("seed")?.unwrap_or(0) as u64)
     };
     if let Some(path) = args.get("save-scenario") {
@@ -198,7 +207,7 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
     // The header reads from the *scenario* (not the raw flags), so a
     // saved scenario file and the printed report always agree.
     println!(
-        "scenario: {} | policy: {} | platform: {}{} | admission: {} | shards: {} | max-batch: {}",
+        "scenario: {} | policy: {} | platform: {}{} | admission: {} | shards: {} | max-batch: {} | replan: {}",
         scenario.name,
         policy.name(),
         lm.platform.name,
@@ -206,12 +215,23 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         scenario.admission.label(),
         scenario.sharding.shards,
         scenario.dispatch.max_batch,
+        scenario.planner.replan,
     );
 
     // --- build the server(s) and run ------------------------------------
+    // Batch-aware planning: explicit --batch-hint wins; a batch-aware
+    // planner config defaults to the dispatch operating point.
+    let batch_hint = match args.get_f64("batch-hint")? {
+        Some(h) => h.max(1.0),
+        None if scenario.planner.batch_aware => {
+            scenario.dispatch.max_batch.max(1) as f64
+        }
+        None => 1.0,
+    };
     let opts = ServeOpts {
         memory_budget_frac: args.get_f64("budget")?.unwrap_or(1.0),
         policy,
+        batch_hint,
         ..Default::default()
     };
     if scenario.sharding.shards > 1 {
@@ -222,12 +242,23 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
             ShardedServer::build(zoo, &lm, &profiles, opts, scenario.sharding.clone());
         let report = sharded.run(&scenario)?;
         for (i, shard) in report.per_shard.iter().enumerate() {
+            let util = report
+                .budget_utilization
+                .get(i)
+                .map(|u| format!(" | pool {:.0}%", 100.0 * u))
+                .unwrap_or_default();
             println!(
-                "  shard {i}: {} done | {} dropped | {} batches | makespan {:.1} ms",
+                "  shard {i}: {} done | {} dropped | {} batches | makespan {:.1} ms{util}",
                 shard.total_queries,
                 shard.total_dropped,
                 shard.total_batches,
                 shard.makespan_ms,
+            );
+        }
+        if report.replans > 0 || report.migrations > 0 {
+            println!(
+                "  replan: {} saturation event(s), {} migration(s)",
+                report.replans, report.migrations,
             );
         }
         print_outcomes(&report.aggregate);

@@ -179,6 +179,14 @@ pub struct ShardedReport {
     pub per_shard: Vec<RunReport>,
     /// The cross-shard roll-up (max makespan, summed counts).
     pub aggregate: RunReport,
+    /// Replan evaluations triggered by shard saturation (0 on the
+    /// static path).
+    pub replans: usize,
+    /// Task migrations actually applied (bounded re-sharding).
+    pub migrations: usize,
+    /// Per-shard memory-pool budget utilization (used/capacity) at the
+    /// end of the last served phase.
+    pub budget_utilization: Vec<f64>,
 }
 
 impl ShardedReport {
@@ -415,6 +423,7 @@ mod tests {
                 total_queries: 100,
                 ..Default::default()
             },
+            ..Default::default()
         };
         assert!((sr.violation_rate() - 0.5).abs() < 1e-12);
         assert!((sr.throughput_qps() - 100.0).abs() < 1e-9);

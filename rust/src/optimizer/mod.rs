@@ -1,15 +1,14 @@
-//! Sparsity-Aware Optimizer (paper §3.3, Algorithm 1).
+//! Sparsity-Aware Optimizer (paper §3.3, Algorithm 1) — legacy façade.
 //!
-//! Jointly picks one **global processor placement order** `p⃗*` shared
-//! by all tasks and, given it, the per-task stitched variant with the
-//! lowest latency among those satisfying both SLO constraints:
-//!
-//! 1. Θᵗ = { ṽ | A(ṽ) ≥ SLOᵗ_acc ∧ ∃p⃗∈Ω: Lat(ṽ, p⃗) ≤ SLOᵗ_lat }
-//! 2. p⃗* = argmin_{p⃗∈Ω} (1/T) Σ_t min_{ṽ∈Θᵗ} Lat(ṽ, p⃗)
-//! 3. ṽᵗ* = argmin_{ṽ∈Θᵗ} Lat(ṽ | p⃗*)
+//! The algorithm itself lives in `crate::planner::algo` (batch-aware,
+//! pruned, with an explicit `CostModel`); this module keeps the plan
+//! *types* plus thin deprecated shims of the original free functions at
+//! the unit (batch-1) cost model, so external callers keep compiling.
+//! The Algorithm 1 math notes moved to DESIGN.md §"Algorithm 1".
 
 use std::collections::BTreeMap;
 
+use crate::planner::{algo, CostModel};
 use crate::profiler::TaskProfile;
 use crate::soc::Processor;
 use crate::stitching::Composition;
@@ -34,40 +33,15 @@ impl CandidateSet {
 }
 
 /// Step 1 of Alg. 1: compute Θᵗ.
+#[deprecated(
+    note = "use planner::algo::feasible_set with a CostModel (pruned, batch-aware)"
+)]
 pub fn feasible_set(
     profile: &TaskProfile,
     slo: &Slo,
     orders: &[Vec<Processor>],
 ) -> CandidateSet {
-    // Odometer walk over the base-V digits: the canonical index order
-    // without allocating a Composition per candidate (this sits inside
-    // the hotness loop — |Ψ| × V^S calls; see EXPERIMENTS.md §Perf).
-    let v = profile.space.n_variants;
-    let s = profile.space.n_subgraphs;
-    let mut digits = vec![0usize; s];
-    let mut indices = Vec::new();
-    for k in 0..profile.space.len() {
-        if profile.accuracy(k) >= slo.min_accuracy {
-            let ok = orders.iter().any(|o| {
-                profile
-                    .latency_est_digits(&digits, o)
-                    .map(|l| l <= slo.max_latency_ms)
-                    .unwrap_or(false)
-            });
-            if ok {
-                indices.push(k);
-            }
-        }
-        // increment base-V odometer (little-endian on the last digit)
-        for j in (0..s).rev() {
-            digits[j] += 1;
-            if digits[j] < v {
-                break;
-            }
-            digits[j] = 0;
-        }
-    }
-    CandidateSet { indices }
+    algo::feasible_set(&CostModel::unit(), profile, slo, orders)
 }
 
 /// The optimizer's decision for a whole SLO configuration.
@@ -106,103 +80,33 @@ impl Plan {
 /// Algorithm 1, complete: joint placement-order + variant selection.
 ///
 /// `profiles` and `slos` are keyed by task name; `orders` is Ω.
+/// Planning is SLO-driven: profiles without an SLO entry are left
+/// unplanned (historically this indexed `slos` by every profile and
+/// panicked on shard-filtered SLO maps).
+#[deprecated(note = "use planner::algo::optimize with a CostModel (batch-aware)")]
 pub fn optimize(
     profiles: &BTreeMap<String, TaskProfile>,
     slos: &BTreeMap<String, Slo>,
     orders: &[Vec<Processor>],
 ) -> Plan {
-    assert!(!orders.is_empty(), "empty order set Ω");
-
-    // Step 1: Θᵗ per task.
-    let theta: BTreeMap<&str, CandidateSet> = profiles
-        .iter()
-        .map(|(name, p)| {
-            let slo = &slos[name];
-            (name.as_str(), feasible_set(p, slo, orders))
-        })
-        .collect();
-
-    // Step 2: pick p⃗* minimizing mean best latency over tasks.
-    let mut best: Option<(f64, usize)> = None;
-    for (oi, order) in orders.iter().enumerate() {
-        let mut sum = 0.0;
-        let mut counted = 0usize;
-        for (name, p) in profiles {
-            let cands = &theta[name.as_str()];
-            let mut task_best = f64::INFINITY;
-            for &k in &cands.indices {
-                let comp = p.space.composition(k);
-                if let Some(l) = p.latency_est(&comp, order) {
-                    if l < task_best {
-                        task_best = l;
-                    }
-                }
-            }
-            if task_best.is_finite() {
-                sum += task_best;
-                counted += 1;
-            }
-        }
-        if counted == 0 {
-            continue;
-        }
-        let mean = sum / counted as f64;
-        if best.map(|(b, _)| mean < b).unwrap_or(true) {
-            best = Some((mean, oi));
-        }
-    }
-    let (mean_latency_ms, oi) = best.unwrap_or((f64::INFINITY, 0));
-    let order = orders[oi].clone();
-
-    // Step 3: final per-task selection under p⃗*.
-    let mut selections = BTreeMap::new();
-    for (name, p) in profiles {
-        let cands = &theta[name.as_str()];
-        let mut choice: Option<Selection> = None;
-        for &k in &cands.indices {
-            let comp = p.space.composition(k);
-            if let Some(l) = p.latency_est(&comp, &order) {
-                if choice.map(|c| l < c.latency_ms).unwrap_or(true) {
-                    choice = Some(Selection {
-                        stitched_index: k,
-                        latency_ms: l,
-                        accuracy: p.accuracy(k),
-                    });
-                }
-            }
-        }
-        selections.insert(name.clone(), choice);
-    }
-
-    Plan { order, selections, mean_latency_ms }
+    algo::optimize(&CostModel::unit(), profiles, slos, orders)
 }
 
 /// Restricted optimizer used by the no-stitching baselines: only pure
 /// compositions are considered (classic adaptive-variant selection).
+#[deprecated(note = "use planner::algo::optimize_pure_only with a CostModel")]
 pub fn optimize_pure_only(
     profiles: &BTreeMap<String, TaskProfile>,
     slos: &BTreeMap<String, Slo>,
     orders: &[Vec<Processor>],
 ) -> Plan {
-    let restricted: BTreeMap<String, TaskProfile> = profiles
-        .iter()
-        .map(|(name, p)| {
-            let mut r = p.clone();
-            // Suppress all non-pure variants by zeroing their accuracy
-            // (they will fail any positive accuracy SLO) — latency table
-            // untouched so pure entries behave identically.
-            for k in 0..r.space.len() {
-                if !r.space.composition(k).is_pure() {
-                    r.acc_pred[k] = -1.0;
-                }
-            }
-            (name.clone(), r)
-        })
-        .collect();
-    optimize(&restricted, slos, orders)
+    algo::optimize_pure_only(&CostModel::unit(), profiles, slos, orders)
 }
 
+// The shim tests double as behavioral pins for the canonical
+// `planner::algo` implementation the shims delegate to.
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::profiler::{profile_task, ProfilerConfig};

@@ -1,0 +1,353 @@
+//! Batch-aware Algorithm 1 with a pruned candidate walk.
+//!
+//! This is the canonical implementation of the paper's Sparsity-Aware
+//! Optimizer (§3.3); `crate::optimizer`'s free functions are thin
+//! deprecated shims over it at the unit (batch-1) [`CostModel`]. The
+//! math notes live in DESIGN.md §"Algorithm 1".
+//!
+//! Two prunes speed up the |Ω| × V^S hot loop without changing its
+//! result (asserted by `pruned_feasible_set_matches_reference`):
+//!
+//! * **Order-level**: an order whose per-position latency *minima*
+//!   already exceed the SLO bound cannot make any candidate feasible
+//!   and is dropped from the scan entirely.
+//! * **Candidate-level**: the accuracy digit is order-independent, so a
+//!   failed accuracy check skips the whole per-order latency scan; the
+//!   per-order partial latency sum aborts as soon as it crosses the
+//!   bound, and the order scan short-circuits on the first feasible
+//!   order.
+
+use std::collections::BTreeMap;
+
+use crate::optimizer::{CandidateSet, Plan, Selection};
+use crate::profiler::TaskProfile;
+use crate::soc::Processor;
+use crate::workload::Slo;
+
+use super::cost::CostModel;
+
+/// Lower bound on any candidate's latency under `order`: the sum over
+/// positions of the fastest supported variant there. `None` when some
+/// position supports no variant at all on its assigned processor.
+fn order_lower_bound(p: &TaskProfile, order: &[Processor]) -> Option<f64> {
+    let mut total = 0.0;
+    for (j, proc) in order.iter().enumerate() {
+        let mut best = f64::INFINITY;
+        for cell in &p.sg_lat[j] {
+            if let Some(ms) = cell[proc.idx()] {
+                if ms < best {
+                    best = ms;
+                }
+            }
+        }
+        if !best.is_finite() {
+            return None;
+        }
+        total += best;
+    }
+    Some(total)
+}
+
+/// Early-exit Eq. 5: is the additive latency of `digits` under `order`
+/// within `bound`? Aborts the digit walk as soon as the partial sum
+/// crosses the bound or a position is unsupported.
+fn within_bound(
+    p: &TaskProfile,
+    digits: &[usize],
+    order: &[Processor],
+    bound: f64,
+) -> bool {
+    let mut total = 0.0;
+    for (j, (&vi, proc)) in digits.iter().zip(order).enumerate() {
+        match p.sg_lat[j][vi][proc.idx()] {
+            Some(ms) => {
+                total += ms;
+                if total > bound {
+                    return false;
+                }
+            }
+            None => return false,
+        }
+    }
+    true
+}
+
+/// Step 1 of Algorithm 1 (pruned, batch-aware): compute Θᵗ — the
+/// stitched indices whose estimated accuracy meets the SLO and whose
+/// batch-scaled latency fits the bound under at least one order in Ω.
+pub fn feasible_set(
+    cost: &CostModel,
+    profile: &TaskProfile,
+    slo: &Slo,
+    orders: &[Vec<Processor>],
+) -> CandidateSet {
+    let v = profile.space.n_variants;
+    let s = profile.space.n_subgraphs;
+    // The batch factor scales every candidate equally, so it folds into
+    // the latency bound once instead of into every partial sum.
+    let bound = slo.max_latency_ms / cost.batch_factor(&profile.task);
+    let live: Vec<&[Processor]> = orders
+        .iter()
+        .map(|o| o.as_slice())
+        .filter(|o| order_lower_bound(profile, o).map(|lb| lb <= bound).unwrap_or(false))
+        .collect();
+    let mut indices = Vec::new();
+    if live.is_empty() {
+        return CandidateSet { indices };
+    }
+    let mut digits = vec![0usize; s];
+    for k in 0..profile.space.len() {
+        if profile.accuracy(k) >= slo.min_accuracy
+            && live.iter().any(|o| within_bound(profile, &digits, o, bound))
+        {
+            indices.push(k);
+        }
+        // increment base-V odometer (little-endian on the last digit)
+        for j in (0..s).rev() {
+            digits[j] += 1;
+            if digits[j] < v {
+                break;
+            }
+            digits[j] = 0;
+        }
+    }
+    CandidateSet { indices }
+}
+
+/// Algorithm 1, complete (batch-aware): joint placement-order + variant
+/// selection. Equivalent to [`optimize_weighted`] with no weights.
+///
+/// Planning is driven by the SLO map: tasks with an SLO but no profile
+/// are skipped, and profiles without an SLO are left unplanned — shard
+/// sub-scenarios hand the planner exactly this shape (their schedules
+/// are filtered to the shard's partition while the profile map stays
+/// global).
+pub fn optimize(
+    cost: &CostModel,
+    profiles: &BTreeMap<String, TaskProfile>,
+    slos: &BTreeMap<String, Slo>,
+    orders: &[Vec<Processor>],
+) -> Plan {
+    optimize_weighted(cost, profiles, slos, orders, &BTreeMap::new())
+}
+
+/// [`optimize`] with per-task arrival weights: step 2's objective
+/// becomes the *weighted* mean best latency, so tasks expected to see
+/// more traffic (the `PlanContext::arrival_hint`) pull the shared
+/// placement order toward their optimum. Missing weights default to
+/// 1.0; an empty map reproduces the paper's unweighted objective.
+pub fn optimize_weighted(
+    cost: &CostModel,
+    profiles: &BTreeMap<String, TaskProfile>,
+    slos: &BTreeMap<String, Slo>,
+    orders: &[Vec<Processor>],
+    weights: &BTreeMap<String, f64>,
+) -> Plan {
+    assert!(!orders.is_empty(), "empty order set Ω");
+
+    let planned: Vec<(&String, &TaskProfile, &Slo)> = slos
+        .iter()
+        .filter_map(|(name, slo)| profiles.get(name).map(|p| (name, p, slo)))
+        .collect();
+
+    // Step 1: Θᵗ per planned task.
+    let theta: BTreeMap<&str, CandidateSet> = planned
+        .iter()
+        .map(|&(name, p, slo)| (name.as_str(), feasible_set(cost, p, slo, orders)))
+        .collect();
+
+    // Step 2: pick p⃗* minimizing the (weighted) mean best latency.
+    let mut best: Option<(f64, usize)> = None;
+    for (oi, order) in orders.iter().enumerate() {
+        let mut sum = 0.0;
+        let mut weight_sum = 0.0;
+        for &(name, p, _) in &planned {
+            let cands = &theta[name.as_str()];
+            let mut task_best = f64::INFINITY;
+            for &k in &cands.indices {
+                let comp = p.space.composition(k);
+                if let Some(l) = cost.latency(p, &comp, order) {
+                    if l < task_best {
+                        task_best = l;
+                    }
+                }
+            }
+            if task_best.is_finite() {
+                let w = weights.get(name.as_str()).copied().unwrap_or(1.0).max(0.0);
+                sum += w * task_best;
+                weight_sum += w;
+            }
+        }
+        if weight_sum <= 0.0 {
+            continue;
+        }
+        let mean = sum / weight_sum;
+        if best.map(|(b, _)| mean < b).unwrap_or(true) {
+            best = Some((mean, oi));
+        }
+    }
+    let (mean_latency_ms, oi) = best.unwrap_or((f64::INFINITY, 0));
+    let order = orders[oi].clone();
+
+    // Step 3: final per-task selection under p⃗*.
+    let mut selections = BTreeMap::new();
+    for &(name, p, _) in &planned {
+        let cands = &theta[name.as_str()];
+        let mut choice: Option<Selection> = None;
+        for &k in &cands.indices {
+            let comp = p.space.composition(k);
+            if let Some(l) = cost.latency(p, &comp, &order) {
+                if choice.map(|c| l < c.latency_ms).unwrap_or(true) {
+                    choice = Some(Selection {
+                        stitched_index: k,
+                        latency_ms: l,
+                        accuracy: p.accuracy(k),
+                    });
+                }
+            }
+        }
+        selections.insert(name.clone(), choice);
+    }
+
+    Plan { order, selections, mean_latency_ms }
+}
+
+/// Restricted Algorithm 1 for the no-stitching baselines: only pure
+/// compositions are considered (classic adaptive-variant selection).
+pub fn optimize_pure_only(
+    cost: &CostModel,
+    profiles: &BTreeMap<String, TaskProfile>,
+    slos: &BTreeMap<String, Slo>,
+    orders: &[Vec<Processor>],
+) -> Plan {
+    let restricted: BTreeMap<String, TaskProfile> = profiles
+        .iter()
+        .map(|(name, p)| {
+            let mut r = p.clone();
+            // Suppress all non-pure variants by zeroing their accuracy
+            // (they will fail any positive accuracy SLO) — latency table
+            // untouched so pure entries behave identically.
+            for k in 0..r.space.len() {
+                if !r.space.composition(k).is_pure() {
+                    r.acc_pred[k] = -1.0;
+                }
+            }
+            (name.clone(), r)
+        })
+        .collect();
+    optimize(cost, &restricted, slos, orders)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixtures;
+    use crate::soc::LatencyModel;
+
+    fn setup() -> (BTreeMap<String, TaskProfile>, LatencyModel, Vec<Vec<Processor>>) {
+        let (zoo, lm, profiles) = fixtures::trio();
+        let orders =
+            crate::workload::placement_orders(&lm.platform, zoo.subgraphs);
+        (profiles, lm, orders)
+    }
+
+    /// The unpruned reference walk (the pre-planner `feasible_set`).
+    fn reference_feasible_set(
+        cost: &CostModel,
+        p: &TaskProfile,
+        slo: &Slo,
+        orders: &[Vec<Processor>],
+    ) -> Vec<usize> {
+        let mut out = Vec::new();
+        for k in 0..p.space.len() {
+            if p.accuracy(k) < slo.min_accuracy {
+                continue;
+            }
+            let comp = p.space.composition(k);
+            let ok = orders.iter().any(|o| {
+                cost.latency(p, &comp, o)
+                    .map(|l| l <= slo.max_latency_ms)
+                    .unwrap_or(false)
+            });
+            if ok {
+                out.push(k);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pruned_feasible_set_matches_reference() {
+        let (profiles, lm, orders) = setup();
+        // Sweep bounds from impossible to lax; the pruned walk must
+        // agree with the naive reference at every point, batch-aware
+        // included.
+        for hint in [1.0, 3.0] {
+            let cost = CostModel::batch_aware(&lm, hint);
+            for p in profiles.values() {
+                for acc in [0.0, 0.8, 0.95] {
+                    for lat in [0.001, 5.0, 12.0, 30.0, 1e9] {
+                        let slo = Slo { min_accuracy: acc, max_latency_ms: lat };
+                        let pruned = feasible_set(&cost, p, &slo, &orders);
+                        let naive = reference_feasible_set(&cost, p, &slo, &orders);
+                        assert_eq!(
+                            pruned.indices, naive,
+                            "{} acc={acc} lat={lat} hint={hint}",
+                            p.task
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_hint_only_shrinks_feasible_sets() {
+        let (profiles, lm, orders) = setup();
+        let p = &profiles["alpha"];
+        let slo = Slo { min_accuracy: 0.5, max_latency_ms: 20.0 };
+        let unit = feasible_set(&CostModel::unit(), p, &slo, &orders);
+        let batched =
+            feasible_set(&CostModel::batch_aware(&lm, 4.0), p, &slo, &orders);
+        assert!(batched.len() <= unit.len());
+        // A batched-feasible candidate is always batch-1 feasible.
+        for k in &batched.indices {
+            assert!(unit.indices.contains(k));
+        }
+    }
+
+    #[test]
+    fn optimize_skips_tasks_without_slos() {
+        // Shard sub-scenarios plan with a filtered SLO map over the full
+        // profile map; the planner must plan exactly the SLO'd tasks.
+        let (profiles, _lm, orders) = setup();
+        let slos = BTreeMap::from([(
+            "beta".to_string(),
+            Slo { min_accuracy: 0.5, max_latency_ms: 1e9 },
+        )]);
+        let plan = optimize(&CostModel::unit(), &profiles, &slos, &orders);
+        assert_eq!(plan.selections.len(), 1);
+        assert!(plan.selections["beta"].is_some());
+        assert!(orders.contains(&plan.order));
+    }
+
+    #[test]
+    fn arrival_weights_can_steer_the_order() {
+        let (profiles, _lm, orders) = setup();
+        let slos: BTreeMap<String, Slo> = profiles
+            .keys()
+            .map(|n| (n.clone(), Slo { min_accuracy: 0.0, max_latency_ms: 1e9 }))
+            .collect();
+        let cost = CostModel::unit();
+        // Degenerate all-weight-on-one-task objective: the joint order
+        // must be at least as good for that task as the unweighted one.
+        let heavy = BTreeMap::from([("gamma".to_string(), 1e6)]);
+        let weighted = optimize_weighted(&cost, &profiles, &slos, &orders, &heavy);
+        let solo_slos = BTreeMap::from([("gamma".to_string(), slos["gamma"])]);
+        let solo = optimize(&cost, &profiles, &solo_slos, &orders);
+        let gamma_best = |plan: &Plan| plan.selections["gamma"].unwrap().latency_ms;
+        // Tolerance: the residual unit weights can shift the weighted
+        // argmin by at most (Σ other latencies)/1e6 ≈ microseconds.
+        assert!(gamma_best(&weighted) <= gamma_best(&solo) + 1e-3);
+    }
+}

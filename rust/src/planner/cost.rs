@@ -1,0 +1,145 @@
+//! The planner's explicit cost model.
+//!
+//! Every latency the planner evaluates flows through a [`CostModel`],
+//! which scales the paper's additive Eq. 5 estimate by a per-task batch
+//! service factor. At the default (batch-1) hints the model is exactly
+//! the paper's estimator; with hints from the dispatcher's observed
+//! `mean_batch_size` (or the scenario's `Dispatch::max_batch` operating
+//! point) Algorithm 1 plans for the occupancy the serving engine will
+//! actually book via `LatencyModel::subgraph_batch_ms`.
+
+use std::collections::BTreeMap;
+
+use crate::profiler::TaskProfile;
+use crate::soc::{LatencyModel, Processor};
+use crate::stitching::Composition;
+
+/// Batch-aware latency evaluation for planning.
+///
+/// The factor for a task with expected mean batch size `b` is
+/// `1 + batch_marginal · (b − 1)` — the continuous extension of
+/// `LatencyModel::batch_factor` (identical at integer `b`, and exactly
+/// 1.0 at `b = 1`, so the unit model reproduces batch-1 planning
+/// bit-for-bit).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// `Platform::batch_marginal` — 0.0 for the unit (batch-1) model.
+    batch_marginal: f64,
+    /// Expected mean batch size for tasks without a per-task hint.
+    default_hint: f64,
+    /// Per-task expected mean batch sizes (observed `mean_batch_size`).
+    hints: BTreeMap<String, f64>,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self { batch_marginal: 0.0, default_hint: 1.0, hints: BTreeMap::new() }
+    }
+}
+
+impl CostModel {
+    /// The identity model: every latency is the plain Eq. 5 estimate
+    /// (the paper's batch-1 planning).
+    pub fn unit() -> Self {
+        Self::default()
+    }
+
+    /// Batch-aware model for a platform: `default_hint` is the expected
+    /// mean coalesced batch size (clamped to ≥ 1).
+    pub fn batch_aware(lm: &LatencyModel, default_hint: f64) -> Self {
+        Self {
+            batch_marginal: lm.platform.batch_marginal,
+            default_hint: default_hint.max(1.0),
+            hints: BTreeMap::new(),
+        }
+    }
+
+    /// Override the expected batch size for one task.
+    pub fn with_hint(mut self, task: &str, mean_batch: f64) -> Self {
+        self.hints.insert(task.to_string(), mean_batch.max(1.0));
+        self
+    }
+
+    /// Merge per-task hints (observed mean batch sizes).
+    pub fn with_hints(mut self, hints: BTreeMap<String, f64>) -> Self {
+        for (task, mean_batch) in hints {
+            self.hints.insert(task, mean_batch.max(1.0));
+        }
+        self
+    }
+
+    /// Expected mean batch size for `task` (≥ 1).
+    pub fn hint_for(&self, task: &str) -> f64 {
+        self.hints
+            .get(task)
+            .copied()
+            .unwrap_or(self.default_hint)
+            .max(1.0)
+    }
+
+    /// Batch service factor for `task` (1.0 at batch 1).
+    pub fn batch_factor(&self, task: &str) -> f64 {
+        1.0 + self.batch_marginal * (self.hint_for(task) - 1.0)
+    }
+
+    /// Batch-aware Eq. 5 for a composition, via
+    /// `TaskProfile::latency_est_batch`. (The hot-loop odometer walk in
+    /// `planner::algo` instead folds the factor into its latency
+    /// *bound* once per task — same arithmetic, no per-candidate
+    /// multiply.)
+    pub fn latency(
+        &self,
+        p: &TaskProfile,
+        comp: &Composition,
+        order: &[Processor],
+    ) -> Option<f64> {
+        p.latency_est_batch(comp, order, self.batch_factor(&p.task))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixtures;
+
+    #[test]
+    fn unit_model_is_identity() {
+        let (_zoo, _lm, profiles) = fixtures::tiny();
+        let p = &profiles["tiny"];
+        let cost = CostModel::unit();
+        assert_eq!(cost.batch_factor("tiny"), 1.0);
+        use Processor::*;
+        let comp = Composition(vec![0, 0]);
+        let order = [Cpu, Gpu];
+        assert_eq!(cost.latency(p, &comp, &order), p.latency_est(&comp, &order));
+    }
+
+    #[test]
+    fn batch_factor_matches_latency_model_at_integers() {
+        let (_zoo, lm, profiles) = fixtures::tiny();
+        let p = &profiles["tiny"];
+        let cost = CostModel::batch_aware(&lm, 4.0);
+        assert!((cost.batch_factor("tiny") - lm.batch_factor(4)).abs() < 1e-12);
+        use Processor::*;
+        let comp = Composition(vec![0, 0]);
+        let order = [Cpu, Gpu];
+        let base = p.latency_est(&comp, &order).unwrap();
+        let batched = cost.latency(p, &comp, &order).unwrap();
+        assert!((batched - base * lm.batch_factor(4)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hints_override_default_and_clamp_to_one() {
+        let (_zoo, lm, _profiles) = fixtures::tiny();
+        let cost = CostModel::batch_aware(&lm, 2.0)
+            .with_hint("hot", 6.0)
+            .with_hint("degenerate", 0.0);
+        assert!(cost.batch_factor("hot") > cost.batch_factor("other"));
+        assert_eq!(cost.hint_for("degenerate"), 1.0);
+        assert_eq!(cost.batch_factor("degenerate"), 1.0);
+        let merged = CostModel::unit()
+            .with_hints(BTreeMap::from([("a".to_string(), 3.0)]));
+        assert_eq!(merged.hint_for("a"), 3.0);
+        assert_eq!(merged.hint_for("b"), 1.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Memory planning: Algorithm 2 preloading and hotness-driven budget
+//! splits.
+//!
+//! The canonical home of the greedy hotness-ordered preloader
+//! (`crate::preloader::preload` is a thin deprecated shim over
+//! [`preload`]), plus the budget-split machinery the replan path uses:
+//! a shard's pool budget is divided across its tasks **proportionally
+//! to hotness mass** instead of evenly, so a task whose subgraphs cover
+//! many SLO configurations keeps more resident working set.
+
+use std::collections::BTreeMap;
+
+use crate::preloader::{Hotness, PreloadPlan};
+use crate::soc::BlobId;
+use crate::zoo::TaskZoo;
+
+fn blob_bytes(tz: &TaskZoo, variant: usize, sg: usize) -> u64 {
+    tz.variants[variant].subgraphs[sg].bytes
+}
+
+/// Algorithm 2: greedy hotness-ordered preloading under a global budget.
+///
+/// Iterates hotness *ranks* in the outer loop (rank 0 of every
+/// task/position first), not tasks — a task-sequential walk (Alg. 2 as
+/// literally written) lets early tasks exhaust the budget before later
+/// tasks load even their hottest subgraph. Rank-interleaving keeps the
+/// greedy invariant (never load a colder blob while a hotter one at the
+/// same position would fit) and is task-fair; DESIGN.md notes the
+/// refinement.
+pub fn preload(tasks: &[(&TaskZoo, &Hotness)], budget_bytes: u64) -> PreloadPlan {
+    let mut plan = PreloadPlan { budget_bytes, ..Default::default() };
+    let mut used = 0u64;
+    let max_rank = tasks
+        .iter()
+        .map(|(_, h)| h.scores.first().map(|r| r.len()).unwrap_or(0))
+        .max()
+        .unwrap_or(0);
+    for rank in 0..max_rank {
+        for (tz, hot) in tasks {
+            let s = hot.scores.len();
+            for j in 0..s {
+                let ranked = hot.ranked_at(j);
+                let Some(&(i, score)) = ranked.get(rank) else { continue };
+                if score <= 0.0 {
+                    continue; // never feasible anywhere — skip cold blobs
+                }
+                let id = BlobId::new(&tz.name, i, j);
+                if plan.contains(&id) {
+                    continue;
+                }
+                let bytes = blob_bytes(tz, i, j);
+                if used + bytes > budget_bytes {
+                    continue;
+                }
+                used += bytes;
+                plan.blobs.push(id);
+            }
+        }
+    }
+    plan.total_bytes = used;
+    plan
+}
+
+/// Total hotness mass of one task: Σ over positions and variants of the
+/// Eq. 7 scores. Proportional to how often the task's subgraphs appear
+/// in SLO-feasible variant sets across Ψ.
+pub fn hotness_mass(h: &Hotness) -> f64 {
+    h.scores.iter().map(|row| row.iter().sum::<f64>()).sum()
+}
+
+/// Split `budget_bytes` across tasks proportionally to hotness mass
+/// (an all-cold task set splits evenly). The shares sum to exactly
+/// `budget_bytes`: fractional shares floor and the remainder goes to
+/// the last task in slice order.
+pub fn split_budget_by_hotness(
+    tasks: &[(&TaskZoo, &Hotness)],
+    budget_bytes: u64,
+) -> BTreeMap<String, u64> {
+    let mut out = BTreeMap::new();
+    let n = tasks.len();
+    if n == 0 {
+        return out;
+    }
+    let masses: Vec<f64> = tasks.iter().map(|(_, h)| hotness_mass(h)).collect();
+    let total: f64 = masses.iter().sum();
+    let weights: Vec<f64> = if total <= 0.0 {
+        vec![1.0 / n as f64; n]
+    } else {
+        masses.iter().map(|m| m / total).collect()
+    };
+    let mut assigned = 0u64;
+    for (i, (tz, _)) in tasks.iter().enumerate() {
+        let share = if i + 1 == n {
+            budget_bytes.saturating_sub(assigned)
+        } else {
+            (budget_bytes as f64 * weights[i]).floor() as u64
+        };
+        assigned = assigned.saturating_add(share);
+        out.insert(tz.name.clone(), share);
+    }
+    out
+}
+
+/// Per-task budgeted preload: rank-greedy within each task under its
+/// own share from [`split_budget_by_hotness`]. Unlike the
+/// global-budget [`preload`], one task's bulk cannot crowd out another
+/// task's hot set — the per-shard memory-budget mode. Exactly
+/// [`preload`] applied per task at its own budget.
+pub fn preload_split(
+    tasks: &[(&TaskZoo, &Hotness)],
+    budgets: &BTreeMap<String, u64>,
+) -> PreloadPlan {
+    let mut plan = PreloadPlan::default();
+    for (tz, hot) in tasks {
+        let budget = budgets.get(&tz.name).copied().unwrap_or(0);
+        let part = preload(&[(*tz, *hot)], budget);
+        plan.blobs.extend(part.blobs);
+        plan.total_bytes += part.total_bytes;
+        plan.budget_bytes += part.budget_bytes;
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixtures;
+    use crate::preloader::full_preload_bytes;
+    use crate::workload::{placement_orders, Slo};
+
+    fn trio_hotness() -> (crate::zoo::Zoo, Vec<(String, Hotness)>) {
+        let (zoo, lm, profiles) = fixtures::trio();
+        let orders = placement_orders(&lm.platform, zoo.subgraphs);
+        let universe = vec![
+            Slo { min_accuracy: 0.0, max_latency_ms: 1e9 },
+            Slo { min_accuracy: 0.8, max_latency_ms: 1e9 },
+            Slo { min_accuracy: 0.88, max_latency_ms: 1e9 },
+        ];
+        let hot: Vec<(String, Hotness)> = profiles
+            .iter()
+            .map(|(name, p)| (name.clone(), Hotness::compute(p, &universe, &orders)))
+            .collect();
+        (zoo, hot)
+    }
+
+    fn pairs<'a>(
+        zoo: &'a crate::zoo::Zoo,
+        hot: &'a [(String, Hotness)],
+    ) -> Vec<(&'a crate::zoo::TaskZoo, &'a Hotness)> {
+        hot.iter()
+            .map(|(name, h)| (zoo.task(name).unwrap(), h))
+            .collect()
+    }
+
+    #[test]
+    fn split_shares_sum_to_budget_and_track_mass() {
+        let (zoo, hot) = trio_hotness();
+        let refs = pairs(&zoo, &hot);
+        for budget in [0u64, 999, 12_345] {
+            let split = split_budget_by_hotness(&refs, budget);
+            assert_eq!(split.len(), 3);
+            assert_eq!(split.values().sum::<u64>(), budget);
+        }
+        // Higher mass ⇒ no smaller share (up to rounding).
+        let split = split_budget_by_hotness(&refs, 1_000_000);
+        for (a, ha) in &hot {
+            for (b, hb) in &hot {
+                if hotness_mass(ha) > hotness_mass(hb) + 1e-9 {
+                    assert!(split[a] + 2 >= split[b], "{a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_preload_respects_per_task_shares() {
+        let (zoo, hot) = trio_hotness();
+        let refs = pairs(&zoo, &hot);
+        let full = full_preload_bytes(&refs.iter().map(|(tz, _)| *tz).collect::<Vec<_>>());
+        let budgets = split_budget_by_hotness(&refs, full / 3);
+        let plan = preload_split(&refs, &budgets);
+        assert!(plan.total_bytes <= full / 3);
+        // Per-task bytes stay within each task's own share.
+        for (tz, _) in &refs {
+            let bytes: u64 = plan
+                .blobs
+                .iter()
+                .filter(|b| b.task == tz.name)
+                .map(|b| tz.variants[b.variant].subgraphs[b.subgraph].bytes)
+                .sum();
+            assert!(
+                bytes <= budgets[&tz.name],
+                "{}: {bytes} > {}",
+                tz.name,
+                budgets[&tz.name]
+            );
+        }
+        // Under a generous split every task loads its hottest blob.
+        let budgets = split_budget_by_hotness(&refs, full);
+        let plan = preload_split(&refs, &budgets);
+        for (tz, h) in &refs {
+            let ranked = h.ranked_at(0);
+            assert!(plan.contains(&BlobId::new(&tz.name, ranked[0].0, 0)));
+        }
+    }
+
+    #[test]
+    fn canonical_preload_matches_shim() {
+        // The deprecated shim must stay behaviorally identical.
+        let (zoo, hot) = trio_hotness();
+        let refs = pairs(&zoo, &hot);
+        let full = full_preload_bytes(&refs.iter().map(|(tz, _)| *tz).collect::<Vec<_>>());
+        for budget in [full / 7, full / 2, full] {
+            let canonical = preload(&refs, budget);
+            #[allow(deprecated)]
+            let shim = crate::preloader::preload(&refs, budget);
+            assert_eq!(canonical.blobs, shim.blobs);
+            assert_eq!(canonical.total_bytes, shim.total_bytes);
+        }
+    }
+}

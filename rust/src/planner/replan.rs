@@ -1,0 +1,68 @@
+//! Online re-planning types: what the dispatcher observes when a shard
+//! saturates, and the bounded migration the planner answers with.
+//!
+//! The contract (`Planner::replan`) is deliberately incremental: the
+//! planner never rebuilds the whole deployment mid-run. It moves **one
+//! task per decision** — the hottest movable task on the saturated
+//! shard — to the least-loaded shard, and re-runs variant selection
+//! *only* for that task against its hotness share of the target shard's
+//! memory budget. Per-task FIFO order is preserved by construction: the
+//! migrated task's first query on the new shard is floored at the old
+//! shard's last completion (`Session::adopt_task`).
+
+use std::collections::BTreeMap;
+
+use crate::optimizer::Selection;
+use crate::soc::Processor;
+use crate::workload::Slo;
+
+/// The sharded deployment the planner last committed to — the `prior`
+/// argument of `Planner::replan`.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Current task → shard assignment.
+    pub assignment: BTreeMap<String, usize>,
+    /// Number of shards (≥ 2 for replanning to be meaningful).
+    pub shards: usize,
+    /// The active phase's SLO configuration.
+    pub slos: BTreeMap<String, Slo>,
+    /// The SLO universe Ψ hotness is scored over.
+    pub universe: Vec<Slo>,
+}
+
+/// What the dispatcher observed when a shard crossed its saturation
+/// threshold — the `observed` argument of `Planner::replan`.
+#[derive(Clone, Debug)]
+pub struct ShardObservation {
+    /// The shard whose backlog crossed the threshold.
+    pub saturated: usize,
+    /// Per-shard total backlog (ms) at observation time.
+    pub shard_backlog_ms: Vec<f64>,
+    /// Each shard session's committed placement order p⃗* — a migrant is
+    /// re-selected against the **target's** order (a variant feasible
+    /// somewhere in Ω may be unsupported or SLO-infeasible on the order
+    /// the target actually serves under). A missing/empty entry falls
+    /// back to the full Ω.
+    pub shard_orders: Vec<Vec<Processor>>,
+    /// Per-shard memory-pool capacity (bytes) — the migrant's budget
+    /// share is its hotness split of the **target's** pool.
+    pub shard_pool_bytes: Vec<u64>,
+    /// Tasks on the saturated shard that still have queued work — the
+    /// only migration candidates (moving a drained task helps nobody).
+    pub movable: Vec<String>,
+    /// Observed mean coalesced batch size per task (the batch hint for
+    /// re-selection).
+    pub mean_batch: BTreeMap<String, f64>,
+}
+
+/// One bounded re-sharding step: move `task` from shard `from` to shard
+/// `to`, serving it there with `selection` (re-chosen batch-aware under
+/// the hotness budget split), or the target session's best-effort
+/// fallback when `None`.
+#[derive(Clone, Debug)]
+pub struct Migration {
+    pub task: String,
+    pub from: usize,
+    pub to: usize,
+    pub selection: Option<Selection>,
+}

@@ -8,7 +8,7 @@
 //! at each position under a global memory budget.
 
 
-use crate::optimizer::feasible_set;
+use crate::planner::{algo, CostModel};
 use crate::profiler::TaskProfile;
 use crate::soc::{BlobId, Processor};
 use crate::workload::Slo;
@@ -116,59 +116,15 @@ impl PreloadPlan {
     }
 }
 
-/// Memory cost of one subgraph blob.
-fn blob_bytes(tz: &TaskZoo, variant: usize, sg: usize) -> u64 {
-    tz.variants[variant].subgraphs[sg].bytes
-}
-
 /// Algorithm 2: greedy hotness-ordered preloading under a global budget.
-///
-/// Iterates tasks in the given order, and within each task positions
-/// j = 1..S, loading candidates by descending hotness while the
-/// cumulative size fits `budget_bytes`.
+#[deprecated(
+    note = "use planner::memory::preload (or preload_split for per-task hotness budgets)"
+)]
 pub fn preload(
     tasks: &[(&TaskZoo, &Hotness)],
     budget_bytes: u64,
 ) -> PreloadPlan {
-    let mut plan = PreloadPlan { budget_bytes, ..Default::default() };
-    let mut used = 0u64;
-    // Greedy by descending hotness under the global budget. We iterate
-    // hotness *ranks* in the outer loop (rank 0 of every task/position
-    // first), not tasks — a task-sequential walk (Alg. 2 as literally
-    // written) lets early tasks exhaust the budget before later tasks
-    // load even their hottest subgraph. Rank-interleaving keeps the
-    // greedy invariant (never load a colder blob while a hotter one at
-    // the same position would fit) and is task-fair; DESIGN.md notes
-    // the refinement.
-    let max_rank = tasks
-        .iter()
-        .map(|(_, h)| h.scores.first().map(|r| r.len()).unwrap_or(0))
-        .max()
-        .unwrap_or(0);
-    for rank in 0..max_rank {
-        for (tz, hot) in tasks {
-            let s = hot.scores.len();
-            for j in 0..s {
-                let ranked = hot.ranked_at(j);
-                let Some(&(i, score)) = ranked.get(rank) else { continue };
-                if score <= 0.0 {
-                    continue; // never feasible anywhere — skip cold blobs
-                }
-                let id = BlobId::new(&tz.name, i, j);
-                if plan.contains(&id) {
-                    continue;
-                }
-                let bytes = blob_bytes(tz, i, j);
-                if used + bytes > budget_bytes {
-                    continue;
-                }
-                used += bytes;
-                plan.blobs.push(id);
-            }
-        }
-    }
-    plan.total_bytes = used;
-    plan
+    crate::planner::memory::preload(tasks, budget_bytes)
 }
 
 /// Bytes needed to preload *everything* (the "full preloading" reference
@@ -202,7 +158,7 @@ pub fn coverage(
     let mut covered = 0usize;
     let mut considered = 0usize;
     for slo in slo_set {
-        let theta = feasible_set(profile, slo, orders);
+        let theta = algo::feasible_set(&CostModel::unit(), profile, slo, orders);
         if theta.is_empty() {
             continue; // nothing could satisfy σ even with full memory
         }
@@ -226,7 +182,10 @@ pub fn coverage(
     }
 }
 
+// Exercises the deprecated `preload` shim on purpose — it must stay
+// behaviorally identical to `planner::memory::preload`.
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::profiler::{profile_task, ProfilerConfig};
@@ -294,7 +253,7 @@ mod tests {
         let h = Hotness::compute(&p, &slos(), &orders);
         let expected: f64 = slos()
             .iter()
-            .filter(|s| !feasible_set(&p, s, &orders).is_empty())
+            .filter(|s| !algo::feasible_set(&CostModel::unit(), &p, s, &orders).is_empty())
             .count() as f64;
         for j in 0..2 {
             let sum: f64 = h.scores[j].iter().sum();

@@ -58,13 +58,14 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::ServeOpts;
 use crate::metrics::{RunReport, ShardedReport};
+use crate::planner::{Planner, ShardObservation, ShardPlan, SparsityAwarePlanner};
 use crate::profiler::TaskProfile;
-use crate::soc::LatencyModel;
+use crate::soc::{LatencyModel, Processor};
 use crate::workload::{shard_of_task, Query, Slo};
 use crate::zoo::Zoo;
 
 use super::server::{Server, Session};
-use super::Scenario;
+use super::{Arrival, Scenario};
 
 /// Adaptive-batching configuration: when and how hard to coalesce.
 ///
@@ -105,6 +106,20 @@ impl Dispatch {
     /// Whether this configuration can ever coalesce.
     pub fn is_batching(&self) -> bool {
         self.max_batch > 1
+    }
+
+    /// How many of `waiting` already-arrived same-task queries one
+    /// dispatch decision takes: the FIFO prefix up to `max_batch` once
+    /// at least `min_queue` wait; 1 when `batching` is off or the
+    /// threshold is not met. The single coalescing rule shared by
+    /// [`Dispatcher::drive`] and the replan drive — change it here and
+    /// both paths stay comparable.
+    pub fn take(&self, waiting: usize, batching: bool) -> usize {
+        if batching && waiting >= self.min_queue.max(1) {
+            waiting.min(self.max_batch)
+        } else {
+            1
+        }
     }
 }
 
@@ -224,17 +239,8 @@ impl Dispatcher {
             let queue = pending.get_mut(task).unwrap();
             // The FIFO prefix already waiting at issue time; the head
             // always qualifies (issue ≥ its arrival by construction).
-            let take = if batching {
-                let waiting =
-                    queue.iter().take_while(|q| q.arrival_ms <= issue).count();
-                if waiting >= self.cfg.min_queue.max(1) {
-                    waiting.min(self.cfg.max_batch)
-                } else {
-                    1
-                }
-            } else {
-                1
-            };
+            let waiting = queue.iter().take_while(|q| q.arrival_ms <= issue).count();
+            let take = self.cfg.take(waiting, batching);
             let batch: Vec<&Query> =
                 (0..take).map(|_| queue.pop_front().unwrap()).collect();
             session.submit_batch(&batch)?;
@@ -309,6 +315,16 @@ impl<'a> ShardedServer<'a> {
     /// `Server::run_schedule` (§3.4 switch-cost dynamics) is not modeled
     /// on the sharded path.
     pub fn run(&self, scenario: &Scenario) -> Result<ShardedReport> {
+        // The online re-planning path (scenario.planner.replan) drives
+        // all shards through one interleaved loop so it can observe
+        // cross-shard backlog and migrate tasks mid-phase. Closed loops
+        // are self-clocking (no backlog) and never saturate.
+        if scenario.planner.replan
+            && self.shards.len() > 1
+            && !matches!(scenario.arrival, Arrival::ClosedLoop { .. })
+        {
+            return self.run_replan(scenario);
+        }
         let n = self.shards.len();
         let mut shard_tasks: Vec<Vec<String>> = vec![Vec::new(); n];
         for task in &scenario.tasks {
@@ -316,6 +332,7 @@ impl<'a> ShardedServer<'a> {
         }
         let dispatcher = Dispatcher::new(scenario.dispatch.clone());
         let mut per_shard: Vec<RunReport> = vec![RunReport::default(); n];
+        let mut budget_utilization = vec![0.0f64; n];
         for phase in 0..scenario.phases() {
             let mut parts: Vec<Vec<Query>> = vec![Vec::new(); n];
             for q in scenario.stream(phase) {
@@ -326,26 +343,10 @@ impl<'a> ShardedServer<'a> {
                 if shard_tasks[i].is_empty() {
                     continue;
                 }
-                // Restrict the scenario to this shard's partition: the
-                // task list and every schedule entry. SLOs of foreign
-                // tasks would otherwise leak into this shard's planning
-                // and (budget < 1) preloading.
-                let schedule: Vec<BTreeMap<String, Slo>> = scenario
-                    .schedule
-                    .iter()
-                    .map(|cfg| {
-                        cfg.iter()
-                            .filter(|&(t, _)| shard_tasks[i].contains(t))
-                            .map(|(t, slo)| (t.clone(), *slo))
-                            .collect()
-                    })
-                    .collect();
-                let sub = scenario
-                    .clone()
-                    .with_tasks(&shard_tasks[i])
-                    .with_schedule(schedule);
+                let sub = sub_scenario(scenario, &shard_tasks[i]);
                 let mut session = server.session(&sub, phase)?;
                 dispatcher.drive(&mut session, &parts[i])?;
+                budget_utilization[i] = session.pool_utilization();
                 // Phases of one shard are sequential, like Server::run.
                 per_shard[i].merge_sequential(session.finish());
             }
@@ -355,8 +356,227 @@ impl<'a> ShardedServer<'a> {
             // Shards are parallel SoCs: wall-clock is the slowest shard.
             aggregate.merge_parallel(report.clone());
         }
-        Ok(ShardedReport { per_shard, aggregate })
+        Ok(ShardedReport {
+            per_shard,
+            aggregate,
+            replans: 0,
+            migrations: 0,
+            budget_utilization,
+        })
     }
+
+    /// The online re-planning drive: every shard gets a session (empty
+    /// shards included — they are migration targets), queries are
+    /// issued in global simulated-time order, and after each booking
+    /// the just-served shard's backlog is checked against its
+    /// saturation threshold (`PlannerConfig::saturation_slack ×` the
+    /// mean SLO latency bound of its tasks). On saturation,
+    /// `Planner::replan` proposes one bounded migration: the hottest
+    /// still-queued task moves to the least-loaded shard, its variant
+    /// re-selected batch-aware under its hotness share of the target
+    /// pool budget, and its first query there floored at the source
+    /// shard's last completion (per-task FIFO is never reordered).
+    fn run_replan(&self, scenario: &Scenario) -> Result<ShardedReport> {
+        let n = self.shards.len();
+        let coord = self.shards[0].coordinator();
+        let planner = SparsityAwarePlanner::new(coord.zoo, coord.lm, coord.profiles);
+        let universe = scenario.slo_universe();
+        let mut assignment: BTreeMap<String, usize> = scenario
+            .tasks
+            .iter()
+            .map(|t| (t.clone(), self.shard_of(t)))
+            .collect();
+        let mut per_shard: Vec<RunReport> = vec![RunReport::default(); n];
+        let mut budget_utilization = vec![0.0f64; n];
+        let mut replans = 0usize;
+        let mut migrations = 0usize;
+        for phase in 0..scenario.phases() {
+            let slos = &scenario.schedule[phase];
+            let mut sessions = Vec::with_capacity(n);
+            for (i, server) in self.shards.iter().enumerate() {
+                let tasks_i: Vec<String> = scenario
+                    .tasks
+                    .iter()
+                    .filter(|t| assignment[*t] == i)
+                    .cloned()
+                    .collect();
+                sessions.push(server.session(&sub_scenario(scenario, &tasks_i), phase)?);
+            }
+            // Committed placement orders + pool capacities per shard:
+            // the planner re-selects a migrant against the target's.
+            let shard_orders: Vec<Vec<Processor>> = sessions
+                .iter()
+                .map(|s| s.planned_order().to_vec())
+                .collect();
+            let shard_pool_bytes: Vec<u64> =
+                sessions.iter().map(|s| s.pool_capacity()).collect();
+            let mut pending: BTreeMap<String, VecDeque<Query>> = BTreeMap::new();
+            for q in scenario.stream(phase) {
+                if !assignment.contains_key(&q.task) {
+                    bail!(
+                        "query {} targets task {:?} not in this scenario",
+                        q.id,
+                        q.task
+                    );
+                }
+                pending.entry(q.task.clone()).or_default().push_back(q);
+            }
+            let batching = scenario.dispatch.is_batching();
+            let mut budget_left = scenario.planner.max_migrations;
+            loop {
+                // Globally earliest-issue task first, across all shards.
+                let mut next: Option<(&String, f64)> = None;
+                for task in &scenario.tasks {
+                    let Some(queue) = pending.get(task) else { continue };
+                    let Some(q) = queue.front() else { continue };
+                    let ready = sessions[assignment[task]]
+                        .ready_of(task)
+                        .unwrap_or(0.0);
+                    let issue = q.arrival_ms.max(ready);
+                    if next.map(|(_, t)| issue < t).unwrap_or(true) {
+                        next = Some((task, issue));
+                    }
+                }
+                let Some((task, issue)) = next else { break };
+                let task = task.clone();
+                let shard = assignment[&task];
+                let queue = pending.get_mut(&task).unwrap();
+                // Same coalescing rule as Dispatcher::drive.
+                let waiting =
+                    queue.iter().take_while(|q| q.arrival_ms <= issue).count();
+                let take = scenario.dispatch.take(waiting, batching);
+                let batch: Vec<Query> =
+                    (0..take).map(|_| queue.pop_front().unwrap()).collect();
+                let refs: Vec<&Query> = batch.iter().collect();
+                sessions[shard].submit_batch(&refs)?;
+
+                if budget_left == 0 {
+                    continue;
+                }
+                // --- saturation check -------------------------------------
+                // Backlog as admission sees it: per task, the queueing
+                // delay its *next pending* query is headed for
+                // (ready − arrival), summed per shard. Tasks with no
+                // queued work contribute nothing.
+                let mut shard_backlog = vec![0.0f64; n];
+                for (t, &si) in &assignment {
+                    let Some(front) = pending.get(t).and_then(|q| q.front()) else {
+                        continue;
+                    };
+                    let ready = sessions[si].ready_of(t).unwrap_or(0.0);
+                    shard_backlog[si] += (ready - front.arrival_ms).max(0.0);
+                }
+                let mut slo_sum = 0.0;
+                let mut slo_n = 0usize;
+                for (t, &si) in &assignment {
+                    if si == shard {
+                        if let Some(slo) = slos.get(t) {
+                            slo_sum += slo.max_latency_ms;
+                            slo_n += 1;
+                        }
+                    }
+                }
+                if slo_n == 0 {
+                    continue;
+                }
+                let threshold =
+                    scenario.planner.saturation_slack * slo_sum / slo_n as f64;
+                if shard_backlog[shard] <= threshold {
+                    continue;
+                }
+                // Cheap pre-checks before invoking the planner (the
+                // hotness scan is the expensive part): a strictly
+                // less-loaded target must exist, and some task on the
+                // saturated shard must still have queued work AND not
+                // have been served by another shard this phase (a
+                // second adoption would break FIFO floors).
+                let has_target = shard_backlog
+                    .iter()
+                    .enumerate()
+                    .any(|(i2, &b)| i2 != shard && b < shard_backlog[shard]);
+                let movable: Vec<String> = scenario
+                    .tasks
+                    .iter()
+                    .filter(|t| assignment[*t] == shard)
+                    .filter(|t| {
+                        pending.get(*t).map(|q| !q.is_empty()).unwrap_or(false)
+                    })
+                    .filter(|t| {
+                        !sessions.iter().enumerate().any(|(i2, s)| {
+                            i2 != shard && s.ready_of(t).is_some()
+                        })
+                    })
+                    .cloned()
+                    .collect();
+                if !has_target || movable.is_empty() {
+                    continue;
+                }
+                replans += 1;
+                let mut mean_batch = BTreeMap::new();
+                for t in &scenario.tasks {
+                    if let Some(mb) = sessions[assignment[t]].mean_batch_of(t) {
+                        mean_batch.insert(t.clone(), mb);
+                    }
+                }
+                let prior = ShardPlan {
+                    assignment: assignment.clone(),
+                    shards: n,
+                    slos: slos.clone(),
+                    universe: universe.clone(),
+                };
+                let observed = ShardObservation {
+                    saturated: shard,
+                    shard_backlog_ms: shard_backlog,
+                    shard_orders: shard_orders.clone(),
+                    shard_pool_bytes: shard_pool_bytes.clone(),
+                    movable,
+                    mean_batch,
+                };
+                let Some(mig) = planner.replan(&prior, &observed) else {
+                    continue;
+                };
+                debug_assert!(sessions[mig.to].ready_of(&mig.task).is_none());
+                let Some(slo) = slos.get(&mig.task).copied() else { continue };
+                let floor = sessions[mig.from].ready_of(&mig.task).unwrap_or(0.0);
+                sessions[mig.to].adopt_task(&mig.task, slo, mig.selection, floor)?;
+                assignment.insert(mig.task.clone(), mig.to);
+                migrations += 1;
+                budget_left -= 1;
+            }
+            for (i, session) in sessions.into_iter().enumerate() {
+                budget_utilization[i] = session.pool_utilization();
+                per_shard[i].merge_sequential(session.finish());
+            }
+        }
+        let mut aggregate = RunReport::default();
+        for report in &per_shard {
+            aggregate.merge_parallel(report.clone());
+        }
+        Ok(ShardedReport {
+            per_shard,
+            aggregate,
+            replans,
+            migrations,
+            budget_utilization,
+        })
+    }
+}
+
+/// Restrict a scenario to one shard's partition: the task list and
+/// every schedule entry. SLOs of foreign tasks would otherwise leak
+/// into the shard's planning and (budget < 1) preloading.
+fn sub_scenario(scenario: &Scenario, tasks: &[String]) -> Scenario {
+    let schedule: Vec<BTreeMap<String, Slo>> = scenario
+        .schedule
+        .iter()
+        .map(|cfg| {
+            cfg.iter()
+                .filter(|&(t, _)| tasks.contains(t))
+                .map(|(t, slo)| (t.clone(), *slo))
+                .collect()
+        })
+        .collect();
+    scenario.clone().with_tasks(tasks).with_schedule(schedule)
 }
 
 #[cfg(test)]
@@ -364,7 +584,7 @@ mod tests {
     use super::*;
     use crate::coordinator::tests::{setup, slos};
     use crate::fixtures;
-    use crate::scenario::Admission;
+    use crate::scenario::{Admission, PlannerConfig};
     use crate::workload::Slo;
 
     fn tiny_tasks() -> Vec<String> {
@@ -551,6 +771,135 @@ mod tests {
     }
 
     #[test]
+    fn replan_beats_static_sharding_under_backlog() {
+        // The acceptance property: under bursty overload with a skewed
+        // static partition (three flooded tasks share shard 0, one
+        // idles on shard 1), the batch-aware plan with online
+        // re-planning completes at least as many requests with fewer
+        // SLO-shed drops than the PR 2 static sharded baseline — and
+        // never reorders queries within a task.
+        let (zoo, lm, profiles) = fixtures::build(&[
+            ("alpha", 0.92, 8.0),
+            ("beta", 0.88, 12.0),
+            ("delta", 0.90, 10.0),
+            ("gamma", 0.85, 16.0),
+        ]);
+        let tasks = fixtures::task_names(&zoo);
+        let slo_map = fixtures::slos(&zoo, 0.5, 60.0);
+        let sharding = Sharding::explicit(
+            BTreeMap::from([
+                ("alpha".to_string(), 0),
+                ("beta".to_string(), 0),
+                ("delta".to_string(), 0),
+                ("gamma".to_string(), 1),
+            ]),
+            2,
+        );
+        let sc = Scenario::bursty(&tasks, slo_map, 4.0, 100.0, 500.0, 4_000.0)
+            .with_seed(11)
+            .with_admission(Admission::Deadline { slack: 2.0 })
+            .with_dispatch(Dispatch::batched(4))
+            .with_sharding(sharding.clone());
+
+        let static_run = ShardedServer::build(
+            &zoo,
+            &lm,
+            &profiles,
+            ServeOpts::default(),
+            sharding.clone(),
+        )
+        .run(&sc)
+        .unwrap();
+        assert!(
+            static_run.aggregate.total_dropped > 0,
+            "the static partition must actually be overloaded"
+        );
+        assert_eq!(static_run.migrations, 0, "static path never migrates");
+
+        let replan_sc = sc
+            .clone()
+            .with_planner(PlannerConfig { max_migrations: 2, ..PlannerConfig::replanning() });
+        // Batch-aware Algorithm 1 at the dispatch operating point.
+        let opts = ServeOpts { batch_hint: 4.0, ..Default::default() };
+        let replanned = ShardedServer::build(&zoo, &lm, &profiles, opts, sharding)
+            .run(&replan_sc)
+            .unwrap();
+
+        assert!(replanned.migrations >= 1, "saturation must trigger a migration");
+        assert!(replanned.replans >= replanned.migrations);
+        assert!(
+            replanned.aggregate.total_queries >= static_run.aggregate.total_queries,
+            "replan must complete at least as many: {} vs {}",
+            replanned.aggregate.total_queries,
+            static_run.aggregate.total_queries
+        );
+        assert!(
+            replanned.aggregate.total_dropped < static_run.aggregate.total_dropped,
+            "replan must shed less: {} vs {}",
+            replanned.aggregate.total_dropped,
+            static_run.aggregate.total_dropped
+        );
+        // Per-shard budget utilization is reported for every shard.
+        assert_eq!(replanned.budget_utilization.len(), 2);
+        assert!(replanned.budget_utilization.iter().all(|&u| (0.0..=1.0).contains(&u)));
+        // Planner::replan never reorders queries within a task: in
+        // id (= per-task arrival) order, completions stay monotone
+        // even across the migration boundary.
+        for task in ["alpha", "beta", "delta", "gamma"] {
+            let mut reqs: Vec<_> = replanned
+                .aggregate
+                .requests
+                .iter()
+                .filter(|r| r.task == task && !r.dropped)
+                .collect();
+            reqs.sort_by_key(|r| r.id);
+            for w in reqs.windows(2) {
+                assert!(
+                    w[1].start_ms >= w[0].start_ms - 1e-9,
+                    "{task}: query {} started before query {}",
+                    w[1].id,
+                    w[0].id
+                );
+                assert!(w[1].finish_ms >= w[0].finish_ms - 1e-9, "{task}");
+            }
+        }
+    }
+
+    #[test]
+    fn replan_noop_without_saturation_or_on_closed_loops() {
+        // A replan-enabled run that never saturates must match the
+        // static path's outcome counts; closed loops take the static
+        // path outright (self-clocking ⇒ no backlog to observe).
+        let (zoo, lm, profiles) = fixtures::trio();
+        let tasks = fixtures::task_names(&zoo);
+        let light = Scenario::poisson(&tasks, fixtures::slos(&zoo, 0.5, 1e9), 2.0, 2_000.0)
+            .with_seed(3);
+        let build = || {
+            ShardedServer::build(
+                &zoo,
+                &lm,
+                &profiles,
+                ServeOpts::default(),
+                Sharding::hash(2),
+            )
+        };
+        let plain = build().run(&light).unwrap();
+        let replan = build()
+            .run(&light.clone().with_planner(PlannerConfig::replanning()))
+            .unwrap();
+        assert_eq!(replan.migrations, 0, "no saturation ⇒ no migration");
+        assert_eq!(replan.aggregate.total_queries, plain.aggregate.total_queries);
+        assert_eq!(replan.aggregate.total_dropped, plain.aggregate.total_dropped);
+
+        let closed = Scenario::closed_loop(&tasks, fixtures::slos(&zoo, 0.5, 1e9))
+            .with_queries(5)
+            .with_planner(PlannerConfig::replanning());
+        let r = build().run(&closed).unwrap();
+        assert_eq!(r.migrations, 0);
+        assert_eq!(r.aggregate.total_queries, 15);
+    }
+
+    #[test]
     fn fair_with_single_task_equals_deadline() {
         // With no other tasks the share clause can never fire (both
         // sides of the strict comparison are zero), so Fair must shed
@@ -573,6 +922,63 @@ mod tests {
         assert_eq!(fair.total_dropped, deadline.total_dropped);
         assert_eq!(fair.total_queries, deadline.total_queries);
         assert!((fair.makespan_ms - deadline.makespan_ms).abs() < 1e-9);
+        // Asserted, not assumed: the two runs agree event-for-event.
+        assert_eq!(fair.requests.len(), deadline.requests.len());
+        for (f, d) in fair.requests.iter().zip(&deadline.requests) {
+            assert_eq!(f.id, d.id);
+            assert_eq!(f.dropped, d.dropped);
+            assert!((f.start_ms - d.start_ms).abs() < 1e-9);
+            assert!((f.finish_ms - d.finish_ms).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fair_admission_degenerate_weights_never_divide_by_zero() {
+        // Explicit zero weights must be inert, not a division hazard:
+        // with every weight zero the share clause compares 0 < 0 and
+        // Fair degrades to exactly Deadline — finite outcomes, no NaN
+        // timestamps, identical event logs.
+        let (zoo, lm, profiles) = fixtures::trio();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let tasks = fixtures::task_names(&zoo);
+        let heavy = Scenario::poisson(&tasks, fixtures::slos(&zoo, 0.5, 40.0), 120.0, 2_000.0)
+            .with_seed(9);
+        let deadline = server
+            .run(&heavy.clone().with_admission(Admission::Deadline { slack: 1.5 }))
+            .unwrap();
+        assert!(deadline.total_dropped > 0, "overload must shed");
+        let zero_weights: BTreeMap<String, f64> =
+            tasks.iter().map(|t| (t.clone(), 0.0)).collect();
+        let fair = server
+            .run(&heavy.clone().with_admission(Admission::Fair {
+                slack: 1.5,
+                weights: zero_weights,
+            }))
+            .unwrap();
+        assert_eq!(fair.total_dropped, deadline.total_dropped);
+        assert_eq!(fair.total_queries, deadline.total_queries);
+        assert_eq!(fair.requests.len(), deadline.requests.len());
+        for (f, d) in fair.requests.iter().zip(&deadline.requests) {
+            assert_eq!((f.id, f.dropped), (d.id, d.dropped));
+            assert!(f.start_ms.is_finite() && f.finish_ms.is_finite());
+            assert!((f.finish_ms - d.finish_ms).abs() < 1e-9);
+        }
+        // A single zero-weighted task among weighted floods loses only
+        // its share-clause bonus — it still keeps the Deadline floor,
+        // so every outcome stays finite and accounted.
+        let one_zero = server
+            .run(&heavy.with_admission(Admission::Fair {
+                slack: 1.5,
+                weights: BTreeMap::from([("alpha".to_string(), 0.0)]),
+            }))
+            .unwrap();
+        assert_eq!(
+            one_zero.total_queries + one_zero.total_dropped,
+            one_zero.requests.len()
+        );
+        assert!(one_zero.requests.iter().all(|r| r.finish_ms.is_finite()));
+        let f = one_zero.fairness_index();
+        assert!(f.is_finite() && f > 0.0);
     }
 
     #[test]

@@ -144,6 +144,45 @@ impl Admission {
     }
 }
 
+/// Planner knobs: batch-aware Algorithm 1 and online re-planning.
+///
+/// The default is the PR 2 regime — batch-1 planning, frozen at
+/// startup. `replan` turns on the `ShardedServer` replan path: when a
+/// shard's total backlog crosses `saturation_slack ×` the mean SLO
+/// latency bound of its tasks, `planner::Planner::replan` migrates the
+/// hottest still-queued task to the least-loaded shard (at most
+/// `max_migrations` per phase, per-task FIFO preserved).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlannerConfig {
+    /// Plan at the dispatch batch operating point instead of batch 1
+    /// (callers set `ServeOpts::batch_hint` from `Dispatch::max_batch`).
+    pub batch_aware: bool,
+    /// Enable online re-planning (bounded shard migration).
+    pub replan: bool,
+    /// Saturation threshold multiplier on the shard's mean SLO latency.
+    pub saturation_slack: f64,
+    /// Bounded re-sharding: at most this many migrations per phase.
+    pub max_migrations: usize,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        Self {
+            batch_aware: false,
+            replan: false,
+            saturation_slack: 4.0,
+            max_migrations: 1,
+        }
+    }
+}
+
+impl PlannerConfig {
+    /// Batch-aware planning + online re-planning, default thresholds.
+    pub fn replanning() -> Self {
+        Self { batch_aware: true, replan: true, ..Self::default() }
+    }
+}
+
 /// A typed serving scenario: tasks + arrival process + SLO schedule +
 /// admission policy. Construct with the `closed_loop` / `poisson` /
 /// `bursty` / `trace` constructors and refine with the `with_*`
@@ -176,6 +215,9 @@ pub struct Scenario {
     /// agree. A plain `Server::run` serves the whole task set on one
     /// simulated SoC regardless.
     pub sharding: Sharding,
+    /// Planner knobs: batch-aware Algorithm 1 + online re-planning
+    /// (identity planner config by default — PR 2 behavior).
+    pub planner: PlannerConfig,
     /// Seed for the open-loop arrival generators (deterministic replay).
     pub seed: u64,
 }
@@ -196,6 +238,7 @@ impl Scenario {
             admission: Admission::Always,
             dispatch: Dispatch::default(),
             sharding: Sharding::default(),
+            planner: PlannerConfig::default(),
             seed: 0,
         }
     }
@@ -299,6 +342,12 @@ impl Scenario {
     /// Configure multi-server sharding (see [`Sharding`]).
     pub fn with_sharding(mut self, sharding: Sharding) -> Scenario {
         self.sharding = sharding;
+        self
+    }
+
+    /// Configure the planner (see [`PlannerConfig`]).
+    pub fn with_planner(mut self, planner: PlannerConfig) -> Scenario {
+        self.planner = planner;
         self
     }
 
@@ -463,6 +512,21 @@ impl Scenario {
                 Json::obj(vec![
                     ("shards", Json::Num(self.sharding.shards as f64)),
                     ("assignment", assignment),
+                ]),
+            ),
+            (
+                "planner",
+                Json::obj(vec![
+                    ("batch_aware", Json::Bool(self.planner.batch_aware)),
+                    ("replan", Json::Bool(self.planner.replan)),
+                    (
+                        "saturation_slack",
+                        Json::Num(self.planner.saturation_slack),
+                    ),
+                    (
+                        "max_migrations",
+                        Json::Num(self.planner.max_migrations as f64),
+                    ),
                 ]),
             ),
             (
@@ -642,6 +706,31 @@ impl Scenario {
             }
         };
 
+        let planner = match v.get("planner") {
+            None => PlannerConfig::default(),
+            Some(p) => {
+                let d = PlannerConfig::default();
+                PlannerConfig {
+                    batch_aware: match p.get("batch_aware") {
+                        None => d.batch_aware,
+                        Some(x) => x.as_bool().context("planner.batch_aware")?,
+                    },
+                    replan: match p.get("replan") {
+                        None => d.replan,
+                        Some(x) => x.as_bool().context("planner.replan")?,
+                    },
+                    saturation_slack: match p.get("saturation_slack") {
+                        None => d.saturation_slack,
+                        Some(x) => x.as_f64().context("planner.saturation_slack")?,
+                    },
+                    max_migrations: match p.get("max_migrations") {
+                        None => d.max_migrations,
+                        Some(x) => x.as_usize().context("planner.max_migrations")?,
+                    },
+                }
+            }
+        };
+
         let schedule: Vec<BTreeMap<String, Slo>> = v
             .req("schedule")?
             .as_arr()
@@ -677,6 +766,7 @@ impl Scenario {
             admission,
             dispatch,
             sharding,
+            planner,
             seed,
         })
     }
@@ -800,8 +890,9 @@ mod tests {
                 .with_admission(Admission::QueueCap { max_queued: 8 }),
             Scenario::bursty(&tasks(), slos(), 5.0, 80.0, 1_000.0, 4_000.0)
                 .with_admission(Admission::Deadline { slack: 3.0 }),
-            // The dispatch/sharding/fair-admission block, with the
-            // largest representable seed (string-encoded through JSON).
+            // The dispatch/sharding/fair-admission/planner block, with
+            // the largest representable seed (string-encoded through
+            // JSON).
             Scenario::bursty(&tasks(), slos(), 10.0, 120.0, 500.0, 3_000.0)
                 .with_seed(u64::MAX)
                 .with_admission(Admission::Fair {
@@ -815,6 +906,12 @@ mod tests {
                         ("a".to_string(), 0),
                         ("b".to_string(), 1),
                     ])),
+                })
+                .with_planner(PlannerConfig {
+                    batch_aware: true,
+                    replan: true,
+                    saturation_slack: 2.5,
+                    max_migrations: 3,
                 }),
             Scenario::poisson(&tasks(), slos(), 15.0, 2_000.0)
                 // 2^53 + 1: the first u64 a JSON f64 cannot represent —
@@ -841,6 +938,7 @@ mod tests {
             assert_eq!(back.admission, sc.admission);
             assert_eq!(back.dispatch, sc.dispatch);
             assert_eq!(back.sharding, sc.sharding);
+            assert_eq!(back.planner, sc.planner);
             assert_eq!(back.schedule, sc.schedule);
             assert_eq!(back.universe.len(), sc.universe.len());
             // Streams replay identically through the round trip.
@@ -867,8 +965,10 @@ mod tests {
         let sc = Scenario::from_json(&legacy).unwrap();
         assert_eq!(sc.dispatch, Dispatch::default());
         assert_eq!(sc.sharding, Sharding::default());
+        assert_eq!(sc.planner, PlannerConfig::default());
         assert_eq!(sc.dispatch.max_batch, 1, "default must not batch");
         assert_eq!(sc.sharding.shards, 1, "default must not shard");
+        assert!(!sc.planner.replan, "default must not replan");
     }
 
     #[test]

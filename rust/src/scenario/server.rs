@@ -128,6 +128,13 @@ impl<'a> ServerBuilder<'a> {
         self
     }
 
+    /// Expected mean coalesced batch size for batch-aware planning
+    /// (1.0 — the default — is the paper's batch-1 planning).
+    pub fn batch_hint(mut self, hint: f64) -> Self {
+        self.opts.batch_hint = hint.max(1.0);
+        self
+    }
+
     /// Force a placement order instead of optimizing over Ω (Fig. 13).
     pub fn force_order(mut self, order: Vec<Processor>) -> Self {
         self.opts.force_order = Some(order);
@@ -331,23 +338,7 @@ impl<'a> Server<'a> {
             // the minimum-latency *pure* variant supported on its order
             // and is judged (and will violate) against its SLO.
             let planned = prepared.selections.get(name).copied().flatten();
-            let sel = planned.or_else(|| {
-                let mut best: Option<crate::optimizer::Selection> = None;
-                for i in 0..p.space.n_variants {
-                    let k = p.space.pure_index(i);
-                    let comp = p.space.composition(k);
-                    if let Some(l) = p.latency_est(&comp, &order) {
-                        if best.map(|b| l < b.latency_ms).unwrap_or(true) {
-                            best = Some(crate::optimizer::Selection {
-                                stitched_index: k,
-                                latency_ms: l,
-                                accuracy: p.accuracy(k),
-                            });
-                        }
-                    }
-                }
-                best
-            });
+            let sel = planned.or_else(|| best_pure_selection(p, &order));
             let accuracy = match (planned, sel) {
                 // Planned feasible: judge on truth when available.
                 (Some(_), Some(sel)) => {
@@ -754,6 +745,133 @@ impl<'s, 'a> Session<'s, 'a> {
         self.states.get(task).map(|st| st.ready_ms)
     }
 
+    /// Observed mean coalesced batch size for `task` (1.0 before any
+    /// batch completed; `None` for unknown tasks).
+    pub(crate) fn mean_batch_of(&self, task: &str) -> Option<f64> {
+        self.states.get(task).map(|st| {
+            if st.batches == 0 {
+                1.0
+            } else {
+                st.latencies.len() as f64 / st.batches as f64
+            }
+        })
+    }
+
+    /// Memory-pool budget utilization (used/capacity) of this session's
+    /// pool.
+    pub fn pool_utilization(&self) -> f64 {
+        let cap = self.prepared.pool.capacity();
+        if cap == 0 {
+            0.0
+        } else {
+            self.prepared.pool.used() as f64 / cap as f64
+        }
+    }
+
+    /// Memory-pool capacity (bytes) of this session's pool.
+    pub fn pool_capacity(&self) -> u64 {
+        self.prepared.pool.capacity()
+    }
+
+    /// The committed placement order p⃗* this session serves partitioned
+    /// tasks under (migrant re-selection is judged against it).
+    pub(crate) fn planned_order(&self) -> &[Processor] {
+        &self.prepared.order
+    }
+
+    /// Adopt a migrated task mid-session (the replan path of
+    /// `super::dispatch`): serve `task` from here on with `selection`
+    /// (the planner's re-selection; best-effort pure fallback when
+    /// `None`), never starting before `ready_floor_ms` — the source
+    /// shard's last completion for the task, which preserves per-task
+    /// FIFO order across the migration. Compile+load for non-resident
+    /// blobs of the adopted composition is charged to the task's first
+    /// query here, exactly like a planned cold start.
+    pub(crate) fn adopt_task(
+        &mut self,
+        task: &str,
+        slo: Slo,
+        selection: Option<crate::optimizer::Selection>,
+        ready_floor_ms: f64,
+    ) -> Result<()> {
+        if self.states.contains_key(task) {
+            bail!("session already serves task {task:?}");
+        }
+        let coord = &self.server.coord;
+        let opts = &self.server.opts;
+        let Some(p) = coord.profiles.get(task) else {
+            bail!("cannot adopt unknown task {task:?}");
+        };
+        let s = coord.zoo.subgraphs;
+        let order: Vec<Processor> = if opts.policy.is_partitioned() {
+            self.prepared.order.clone()
+        } else {
+            let np = baselines::np_task_processor(coord.profiles, &coord.lm.platform);
+            vec![np[task]; s]
+        };
+        let coexec = if opts.policy.is_partitioned() {
+            1.0
+        } else {
+            // The adopted task joins self.tasks.len() incumbents — and
+            // the incumbents now contend with one more co-runner, so
+            // their factors are refreshed too (the slowdown is mutual).
+            let factor =
+                1.0 + coord.lm.platform.coexec_slowdown * self.tasks.len() as f64;
+            for st in self.states.values_mut() {
+                st.coexec = factor;
+            }
+            factor
+        };
+        let planned = selection;
+        let sel = planned.or_else(|| best_pure_selection(p, &order));
+        let accuracy = match (planned, sel) {
+            (Some(_), Some(sel)) => {
+                Some(coord.judged_accuracy(p, sel.stitched_index, opts))
+            }
+            _ => None,
+        };
+        // Charge compile+load for whatever the adopted composition
+        // needs that is not resident in this shard's pool.
+        let mut penalty = 0.0;
+        if let Some(sel) = &sel {
+            let tz = coord.zoo.task(task)?;
+            let comp = p.space.composition(sel.stitched_index);
+            for (j, &vi) in comp.0.iter().enumerate() {
+                let id = BlobId::new(task, vi, j);
+                if !self.prepared.pool.touch(&id) {
+                    let bytes = tz.variants[vi].subgraphs[j].bytes;
+                    let proc = order[j.min(order.len() - 1)];
+                    penalty += coord.lm.compile_ms(bytes, proc)
+                        + coord.lm.load_ms(bytes, proc);
+                    self.prepared.pool.make_room(bytes);
+                    self.prepared.pool.load(id, bytes);
+                }
+            }
+        }
+        self.tasks.push(task.to_string());
+        self.slos.insert(task.to_string(), slo);
+        self.states.insert(
+            task.to_string(),
+            TaskState {
+                comp: sel.map(|sel| p.space.composition(sel.stitched_index)),
+                accuracy,
+                ready_ms: ready_floor_ms,
+                pending_penalty_ms: penalty,
+                latencies: Vec::new(),
+                queueing: Vec::new(),
+                switches: 0,
+                dropped: 0,
+                batches: 0,
+                max_batch: 0,
+                inflight: VecDeque::new(),
+                ran_real: false,
+                order,
+                coexec,
+            },
+        );
+        Ok(())
+    }
+
     /// Variant switches performed so far (feedback rescheduling).
     pub fn switches(&self) -> usize {
         self.states.values().map(|st| st.switches).sum()
@@ -797,6 +915,30 @@ impl<'s, 'a> Session<'s, 'a> {
             requests: self.requests,
         }
     }
+}
+
+/// The best-effort fallback: minimum-latency *pure* variant supported
+/// on `order` (used when planning found no feasible variant, and for
+/// migrated tasks whose re-selection came back empty).
+fn best_pure_selection(
+    p: &TaskProfile,
+    order: &[Processor],
+) -> Option<crate::optimizer::Selection> {
+    let mut best: Option<crate::optimizer::Selection> = None;
+    for i in 0..p.space.n_variants {
+        let k = p.space.pure_index(i);
+        let comp = p.space.composition(k);
+        if let Some(l) = p.latency_est(&comp, order) {
+            if best.map(|b| l < b.latency_ms).unwrap_or(true) {
+                best = Some(crate::optimizer::Selection {
+                    stitched_index: k,
+                    latency_ms: l,
+                    accuracy: p.accuracy(k),
+                });
+            }
+        }
+    }
+    best
 }
 
 fn dropped_event(q: &Query, backlog_ms: Option<f64>) -> RequestOutcome {

@@ -11,16 +11,19 @@
 
 use std::collections::BTreeMap;
 
-use sparseloom::optimizer::{feasible_set, optimize};
-use sparseloom::preloader::{full_preload_bytes, preload, Hotness};
+use sparseloom::planner::{algo, memory, CostModel};
+use sparseloom::preloader::{full_preload_bytes, Hotness};
 use sparseloom::profiler::{profile_task, ProfilerConfig, TaskProfile};
 use sparseloom::propcheck::{check, usize_in, vec_of, Gen};
+use sparseloom::scenario::{
+    Admission, Dispatch, PlannerConfig, Scenario, ShardAssignment, Sharding,
+};
 use sparseloom::soc::{
     BaseLatencies, BlobId, LatencyModel, MemoryPool, Platform, Processor, SocSim,
 };
 use sparseloom::stitching::{Composition, StitchSpace};
 use sparseloom::util::Rng;
-use sparseloom::workload::{placement_orders, Slo};
+use sparseloom::workload::{placement_orders, Query, Slo};
 use sparseloom::zoo::{
     DType, HloArtifact, KernelPath, Precision, SubgraphWeights, TaskVariant,
     TaskZoo, TensorSpec, VariantSpec, VariantType,
@@ -160,11 +163,11 @@ fn prop_optimizer_respects_slos() {
         };
         let profiles = BTreeMap::from([(p.task.clone(), p.clone())]);
         let slos = BTreeMap::from([(p.task.clone(), slo)]);
-        let plan = optimize(&profiles, &slos, &orders);
+        let plan = algo::optimize(&CostModel::unit(), &profiles, &slos, &orders);
         if !orders.contains(&plan.order) {
             return Err(format!("order {:?} ∉ Ω", plan.order));
         }
-        let theta = feasible_set(&p, &slo, &orders);
+        let theta = algo::feasible_set(&CostModel::unit(), &p, &slo, &orders);
         match plan.selections[&p.task] {
             Some(sel) => {
                 if theta.indices.is_empty() {
@@ -195,7 +198,7 @@ fn prop_selected_variant_is_minimal_under_chosen_order() {
         let slo = Slo { min_accuracy: 0.0, max_latency_ms: f64::INFINITY };
         let profiles = BTreeMap::from([(p.task.clone(), p.clone())]);
         let slos = BTreeMap::from([(p.task.clone(), slo)]);
-        let plan = optimize(&profiles, &slos, &orders);
+        let plan = algo::optimize(&CostModel::unit(), &profiles, &slos, &orders);
         let sel = plan.selections[&p.task].ok_or("nothing selected")?;
         for k in 0..p.space.len() {
             if let Some(l) = p.latency_est(&p.space.composition(k), &plan.order) {
@@ -226,7 +229,7 @@ fn prop_preloader_never_exceeds_budget() {
         let h = Hotness::compute(&p, &slos, &orders);
         let full = full_preload_bytes(&[&tz]);
         let budget = (dims[1] as u64).min(full * 2);
-        let plan = preload(&[(&tz, &h)], budget);
+        let plan = memory::preload(&[(&tz, &h)], budget);
         if plan.total_bytes > budget {
             return Err(format!("{} > {budget}", plan.total_bytes));
         }
@@ -255,7 +258,7 @@ fn prop_hotness_nonnegative_and_normalized() {
         let h = Hotness::compute(&p, &slos, &orders);
         let feasible_cfgs = slos
             .iter()
-            .filter(|s| !feasible_set(&p, s, &orders).is_empty())
+            .filter(|s| !algo::feasible_set(&CostModel::unit(), &p, s, &orders).is_empty())
             .count() as f64;
         for (j, row) in h.scores.iter().enumerate() {
             let sum: f64 = row.iter().sum();
@@ -324,6 +327,161 @@ fn prop_memory_pool_capacity_invariant() {
             }
             if pool.used() > pool.capacity() {
                 return Err(format!("op {i}: used {} > cap", pool.used()));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Scenario JSON schema round-trip (arbitrary scenarios, all fields).
+// ---------------------------------------------------------------------
+
+fn arbitrary_scenario(seed: u64) -> Scenario {
+    let mut rng = Rng::new(seed);
+    let n_tasks = 1 + rng.below(4);
+    let tasks: Vec<String> = (0..n_tasks).map(|i| format!("t{i}")).collect();
+    fn slo(rng: &mut Rng) -> Slo {
+        Slo {
+            min_accuracy: rng.f64(),
+            max_latency_ms: 1.0 + 200.0 * rng.f64(),
+        }
+    }
+    let phases = 1 + rng.below(3);
+    let mut schedule: Vec<std::collections::BTreeMap<String, Slo>> = Vec::new();
+    for _ in 0..phases {
+        let mut cfg = std::collections::BTreeMap::new();
+        for t in &tasks {
+            cfg.insert(t.clone(), slo(&mut rng));
+        }
+        schedule.push(cfg);
+    }
+    let first = schedule[0].clone();
+    let mut sc = match rng.below(4) {
+        0 => Scenario::closed_loop(&tasks, first)
+            .with_queries(1 + rng.below(50))
+            .with_stagger_ms(5.0 * rng.f64()),
+        1 => Scenario::poisson(
+            &tasks,
+            first,
+            1.0 + 50.0 * rng.f64(),
+            100.0 + 2_000.0 * rng.f64(),
+        ),
+        2 => Scenario::bursty(
+            &tasks,
+            first,
+            1.0 + 10.0 * rng.f64(),
+            20.0 + 100.0 * rng.f64(),
+            50.0 + 500.0 * rng.f64(),
+            100.0 + 2_000.0 * rng.f64(),
+        ),
+        _ => {
+            let n_q = rng.below(20);
+            let mut queries = Vec::new();
+            for i in 0..n_q {
+                queries.push(Query {
+                    task: tasks[rng.below(tasks.len())].clone(),
+                    arrival_ms: 100.0 * rng.f64(),
+                    id: i as u64,
+                });
+            }
+            Scenario::trace(&tasks, first, queries)
+        }
+    };
+    sc = sc.with_schedule(schedule);
+    let admission = match rng.below(4) {
+        0 => Admission::Always,
+        1 => Admission::QueueCap { max_queued: rng.below(16) },
+        2 => Admission::Deadline { slack: 0.5 + 3.0 * rng.f64() },
+        _ => {
+            let mut weights = std::collections::BTreeMap::new();
+            for t in &tasks {
+                if rng.f64() < 0.5 {
+                    weights.insert(t.clone(), 4.0 * rng.f64());
+                }
+            }
+            Admission::Fair { slack: 0.5 + 2.0 * rng.f64(), weights }
+        }
+    };
+    sc = sc.with_admission(admission);
+    sc = sc.with_dispatch(Dispatch {
+        max_batch: 1 + rng.below(8),
+        min_queue: rng.below(6),
+    });
+    let shards = 1 + rng.below(3);
+    let assignment = if rng.f64() < 0.5 {
+        ShardAssignment::Hash
+    } else {
+        let mut map = std::collections::BTreeMap::new();
+        for t in &tasks {
+            if rng.f64() < 0.7 {
+                map.insert(t.clone(), rng.below(shards + 1));
+            }
+        }
+        ShardAssignment::Explicit(map)
+    };
+    sc = sc.with_sharding(Sharding { shards, assignment });
+    sc = sc.with_planner(PlannerConfig {
+        batch_aware: rng.f64() < 0.5,
+        replan: rng.f64() < 0.5,
+        saturation_slack: 1.0 + 4.0 * rng.f64(),
+        max_migrations: rng.below(4),
+    });
+    if rng.f64() < 0.5 {
+        let n_uni = rng.below(4);
+        let mut universe = Vec::new();
+        for _ in 0..n_uni {
+            universe.push(slo(&mut rng));
+        }
+        sc = sc.with_universe(universe);
+    }
+    sc.with_seed(rng.next_u64())
+}
+
+#[test]
+fn prop_scenario_json_schema_roundtrip() {
+    // The full schema — arrival kinds, admission (incl. Fair weights),
+    // the PR 2 dispatch/sharding fields, the planner config, schedule,
+    // universe, u64 seeds — must survive to_json → parse → from_json
+    // exactly, as both a field-level and a re-serialization identity.
+    let gen = usize_in(0, 1_000_000);
+    check("scenario_json_roundtrip", &gen, 150, 19, |&seed| {
+        let sc = arbitrary_scenario(seed as u64);
+        let text = sc.to_json().to_string_pretty();
+        let parsed =
+            sparseloom::json::parse(&text).map_err(|e| format!("parse: {e}"))?;
+        let back =
+            Scenario::from_json(&parsed).map_err(|e| format!("from_json: {e}"))?;
+        if back.name != sc.name
+            || back.tasks != sc.tasks
+            || back.seed != sc.seed
+            || back.admission != sc.admission
+            || back.dispatch != sc.dispatch
+            || back.sharding != sc.sharding
+            || back.planner != sc.planner
+            || back.schedule != sc.schedule
+            || back.universe != sc.universe
+        {
+            return Err("field mismatch after round-trip".into());
+        }
+        // Serialization is a fixed point (covers Arrival, which has no
+        // PartialEq) and streams replay identically per phase.
+        if back.to_json() != sc.to_json() {
+            return Err("re-serialization differs".into());
+        }
+        for phase in 0..sc.phases() {
+            let a = sc.stream(phase);
+            let b = back.stream(phase);
+            if a.len() != b.len() {
+                return Err(format!("phase {phase} stream length differs"));
+            }
+            for (x, y) in a.iter().zip(&b) {
+                if x.task != y.task
+                    || x.id != y.id
+                    || (x.arrival_ms - y.arrival_ms).abs() > 1e-12
+                {
+                    return Err(format!("phase {phase} stream differs"));
+                }
             }
         }
         Ok(())

@@ -16,6 +16,15 @@ cargo test -q
 echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
+# Lints across every target (tests, benches, examples). clippy is
+# optional in minimal toolchains; when installed, warnings are errors.
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy --all-targets (-D warnings) =="
+    cargo clippy --all-targets --quiet -- -D warnings
+else
+    echo "== cargo clippy skipped (clippy not installed) =="
+fi
+
 # rustfmt is optional in minimal toolchains; tolerate its absence but
 # fail on real formatting drift when it is installed.
 if cargo fmt --version >/dev/null 2>&1; then
