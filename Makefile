@@ -1,7 +1,7 @@
 # Build-path entry points. The only Python step is the artifact export;
 # everything else is `cargo` (see scripts/ci.sh for the tier-1 gate).
 
-.PHONY: artifacts ci bench
+.PHONY: artifacts ci bench backlog
 
 # Export the L1/L2 model-zoo artifacts the Rust serving system consumes
 # (manifest, HLO text, weight blobs, probe/eval tensors, oracles).
@@ -11,8 +11,12 @@ artifacts:
 ci:
 	scripts/ci.sh
 
-# Dispatch + planner benchmarks (artifact-free: both fall back to the
-# synthetic fixture zoo when artifacts/ is absent).
-bench:
+# The `exp backlog` study with all arms — static / replan / steal /
+# steal+warm — plus the estimated-vs-true arrival-rate telemetry table.
+# Artifact-free: falls back to the synthetic fixture zoo.
+backlog:
 	cargo bench --bench dispatch_backlog
+
+# All benchmarks: the backlog study plus the Algorithm 1 microbench.
+bench: backlog
 	cargo bench --bench planner_cost

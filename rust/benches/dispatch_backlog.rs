@@ -1,8 +1,10 @@
 //! Backlog dispatch bench: bursty overload served by the single-server
-//! unbatched baseline vs adaptive batching and multi-server sharding
-//! (the `exp backlog` study). Runs on the real artifact zoo when
-//! `artifacts/` is present, else on the synthetic fixture — so it always
-//! produces the comparison table.
+//! unbatched baseline vs adaptive batching, multi-server sharding, and
+//! the online arms — replan, telemetry-driven stealing, and steal+warm
+//! migration (the `exp backlog` study, all arms; `make backlog`). Runs
+//! on the real artifact zoo when `artifacts/` is present, else on the
+//! synthetic fixture — so it always produces the comparison table,
+//! including the estimated-vs-true arrival-rate telemetry table.
 //!
 //! Run: `cargo bench --bench dispatch_backlog`
 

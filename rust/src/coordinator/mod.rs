@@ -27,7 +27,7 @@ use crate::runtime::Runtime;
 use crate::soc::{BlobId, LatencyModel, MemoryPool, Processor};
 use crate::stitching::Composition;
 use crate::workload::{placement_orders, Slo};
-use crate::zoo::Zoo;
+use crate::zoo::{TaskZoo, Zoo};
 
 /// Serving options (planning + monitoring policy knobs). Workload shape
 /// — arrival process, query counts, SLO schedule — lives in
@@ -110,31 +110,49 @@ impl<'a> Coordinator<'a> {
     }
 
     /// Phase 2 (Alg. 2): build the preload plan + memory pool once for
-    /// an SLO universe Ψ and a budget. The pool persists across SLO
-    /// changes (scheduled scenarios).
+    /// an SLO universe Ψ and a budget, over every profiled task. The
+    /// pool persists across SLO changes (scheduled scenarios).
     pub fn build_pool(
         &self,
         slo_universe: &[Slo],
         opts: &ServeOpts,
     ) -> Result<(PreloadPlan, MemoryPool)> {
+        let names: Vec<&String> = self.profiles.keys().collect();
+        self.build_pool_over(&names, slo_universe, opts)
+    }
+
+    /// As [`Coordinator::build_pool`], restricted to `tasks`: the
+    /// budget fraction applies to the full-preload bytes of exactly
+    /// those tasks, and only their subgraphs preload.
+    /// [`Coordinator::prepare`] passes the served SLO configuration's
+    /// task set, so a sharded deployment gives every shard a pool that
+    /// holds its *own partition* rather than the whole fleet's — which
+    /// is why a migrating task pays compile+load on arrival unless
+    /// warm migration carries its blobs across.
+    fn build_pool_over(
+        &self,
+        tasks: &[&String],
+        slo_universe: &[Slo],
+        opts: &ServeOpts,
+    ) -> Result<(PreloadPlan, MemoryPool)> {
         let platform = &self.lm.platform;
         let s = self.subgraphs();
-        let task_zoos: Vec<_> = self
-            .profiles
-            .keys()
-            .map(|name| self.zoo.task(name))
+        let task_zoos: Vec<_> = tasks
+            .iter()
+            .map(|&name| self.zoo.task(name))
             .collect::<Result<Vec<_>>>()?;
-        let full_bytes = full_preload_bytes(&task_zoos);
-        let budget = (full_bytes as f64 * opts.memory_budget_frac).round() as u64;
+        let budget = self.pool_budget(&task_zoos, opts);
         let orders = placement_orders(platform, s);
 
         let preload_plan = if opts.policy == Policy::SparseLoom {
-            let pairs: Vec<_> = self
-                .profiles
+            // task_zoos is index-aligned with `tasks` (collected above
+            // with hard error propagation — no silent drops here).
+            let pairs: Vec<_> = tasks
                 .iter()
-                .map(|(name, p)| {
-                    let tz = self.zoo.task(name).unwrap();
-                    (tz, Hotness::compute(p, slo_universe, &orders))
+                .zip(&task_zoos)
+                .filter_map(|(&name, &tz)| {
+                    let p = self.profiles.get(name)?;
+                    Some((tz, Hotness::compute(p, slo_universe, &orders)))
                 })
                 .collect();
             let refs: Vec<_> = pairs.iter().map(|(tz, h)| (*tz, h)).collect();
@@ -167,15 +185,48 @@ impl<'a> Coordinator<'a> {
         Ok((preload_plan, pool))
     }
 
-    /// Phase 1+2: plan and preload for one SLO configuration.
+    /// Phase 1+2: plan and preload for one SLO configuration. The pool
+    /// is budgeted and preloaded over the configuration's own task set
+    /// (for a full deployment that is every profiled task; for a
+    /// shard's sub-scenario it is the shard's partition). An *empty*
+    /// partition — a spare shard held as a migration target — still
+    /// gets real pool capacity (budgeted over the whole fleet,
+    /// preloading nothing), so migrants can land warm instead of
+    /// finding a zero-byte pool.
     pub fn prepare(
         &self,
         slos: &BTreeMap<String, Slo>,
         slo_universe: &[Slo],
         opts: &ServeOpts,
     ) -> Result<Prepared> {
-        let (preload_plan, pool) = self.build_pool(slo_universe, opts)?;
+        let names: Vec<&String> = self
+            .profiles
+            .keys()
+            .filter(|name| slos.contains_key(*name))
+            .collect();
+        let (preload_plan, pool) = if names.is_empty() {
+            let task_zoos: Vec<_> = self
+                .profiles
+                .keys()
+                .map(|name| self.zoo.task(name))
+                .collect::<Result<Vec<_>>>()?;
+            let budget = self.pool_budget(&task_zoos, opts);
+            (
+                PreloadPlan { budget_bytes: budget, ..Default::default() },
+                MemoryPool::new(budget.max(1)),
+            )
+        } else {
+            self.build_pool_over(&names, slo_universe, opts)?
+        };
         self.prepare_with_pool(slos, opts, preload_plan, pool)
+    }
+
+    /// The one pool-budget formula: `memory_budget_frac ×` the
+    /// full-preload bytes of `task_zoos` (Fig. 14's axis). Shared by
+    /// every pool-construction path so shard and spare-shard pools can
+    /// never diverge on rounding.
+    fn pool_budget(&self, task_zoos: &[&TaskZoo], opts: &ServeOpts) -> u64 {
+        (full_preload_bytes(task_zoos) as f64 * opts.memory_budget_frac).round() as u64
     }
 
     /// Plan + refine selections against an existing pool state; charge

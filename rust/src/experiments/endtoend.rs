@@ -228,46 +228,67 @@ pub fn backlog_comparison(
         .with_universe(universe)
         .with_admission(Admission::Deadline { slack: 2.0 });
 
-    let configs: Vec<(&str, usize, usize, Admission, bool)> = vec![
-        ("1 shard, unbatched", 1, 1, Admission::Deadline { slack: 2.0 }, false),
-        ("1 shard, batch<=4", 1, 4, Admission::Deadline { slack: 2.0 }, false),
-        ("2 shards, unbatched", 2, 1, Admission::Deadline { slack: 2.0 }, false),
-        ("2 shards, batch<=4", 2, 4, Admission::Deadline { slack: 2.0 }, false),
+    let deadline = Admission::Deadline { slack: 2.0 };
+    let configs: Vec<(&str, usize, usize, Admission, PlannerConfig)> = vec![
+        ("1 shard, unbatched", 1, 1, deadline.clone(), PlannerConfig::default()),
+        ("1 shard, batch<=4", 1, 4, deadline.clone(), PlannerConfig::default()),
+        ("2 shards, unbatched", 2, 1, deadline.clone(), PlannerConfig::default()),
+        ("2 shards, batch<=4", 2, 4, deadline.clone(), PlannerConfig::default()),
         (
             "2 shards, batch<=4, fair",
             2,
             4,
             Admission::Fair { slack: 2.0, weights: BTreeMap::new() },
-            false,
+            PlannerConfig::default(),
         ),
         // The planner arm: batch-aware Algorithm 1 + online re-planning
         // (hottest task migrates off a saturated shard, per-task FIFO
-        // preserved, budgets split by hotness).
+        // preserved, budgets split by traffic-weighted hotness).
         (
             "2 shards, batch<=4, replan",
             2,
             4,
-            Admission::Deadline { slack: 2.0 },
-            true,
+            deadline.clone(),
+            PlannerConfig::replanning(),
+        ),
+        // Telemetry-driven query-level work stealing, no whole-task
+        // migration.
+        (
+            "2 shards, batch<=4, steal",
+            2,
+            4,
+            deadline.clone(),
+            PlannerConfig::stealing(),
+        ),
+        // The full online stack: replan + steal + warm migration (pool
+        // contents travel with the migrant — no cold recompiles).
+        (
+            "2 shards, batch<=4, steal+warm",
+            2,
+            4,
+            deadline,
+            PlannerConfig::online(),
         ),
     ];
     let mut rows = Vec::new();
     let mut baseline: Option<RunReport> = None;
     let mut static_sharded: Option<RunReport> = None;
     let mut replanned: Option<RunReport> = None;
-    for (label, shards, max_batch, admission, replan) in configs {
-        let mut sc = base
-            .clone()
-            .with_admission(admission)
-            .with_dispatch(Dispatch::batched(max_batch))
-            .with_sharding(Sharding::hash(shards));
-        let opts = if replan {
-            sc = sc.with_planner(PlannerConfig::replanning());
+    let mut steal_warm: Option<RunReport> = None;
+    let mut steal_warm_rates: BTreeMap<String, f64> = BTreeMap::new();
+    for (label, shards, max_batch, admission, planner) in configs {
+        let opts = if planner.batch_aware {
             // Batch-aware Algorithm 1 at the dispatch operating point.
             ServeOpts { batch_hint: max_batch.max(1) as f64, ..Default::default() }
         } else {
             ServeOpts::default()
         };
+        let sc = base
+            .clone()
+            .with_admission(admission)
+            .with_dispatch(Dispatch::batched(max_batch))
+            .with_sharding(Sharding::hash(shards))
+            .with_planner(planner);
         let sharded = ShardedServer::build(zoo, lm, profiles, opts, sc.sharding.clone());
         let full = sharded.run(&sc)?;
         let mean_util = if full.budget_utilization.is_empty() {
@@ -286,6 +307,8 @@ pub fn backlog_comparison(
             format!("{:.2}", report.mean_batch_size()),
             format!("{:.3}", report.fairness_index()),
             format!("{}", full.migrations),
+            format!("{}", full.steals),
+            format!("{}", report.cold_compiles),
             format!("{:.0}%", 100.0 * mean_util),
             format!("{:.0}", report.makespan_ms),
         ]);
@@ -295,17 +318,22 @@ pub fn backlog_comparison(
         if label == "2 shards, batch<=4" {
             static_sharded = Some(report.clone());
         }
-        if replan {
-            replanned = Some(report);
+        if label == "2 shards, batch<=4, replan" {
+            replanned = Some(report.clone());
+        }
+        if label == "2 shards, batch<=4, steal+warm" {
+            steal_warm = Some(report);
+            steal_warm_rates = full.arrival_est_qps.clone();
         }
     }
     let mut out = String::from(
-        "Backlog — bursty overload: single server vs batched/sharded/replanned dispatch\n\n",
+        "Backlog — bursty overload: single server vs batched/sharded/replanned/\
+         stolen dispatch\n\n",
     );
     out.push_str(&render_table(
         &[
             "config", "done", "dropped", "viol%", "qps", "batch", "fairness",
-            "mig", "util", "makespan",
+            "mig", "steal", "coldc", "util", "makespan",
         ],
         &rows,
     ));
@@ -331,5 +359,37 @@ pub fn backlog_comparison(
         s.total_dropped,
         r.total_dropped as i64 - s.total_dropped as i64,
     ));
+    let w = steal_warm.unwrap();
+    out.push_str(&format!(
+        "steal+warm vs replan: completed {} vs {} ({:+}), dropped {} vs {} ({:+}), \
+         cold compiles {} vs {}\n",
+        w.total_queries,
+        r.total_queries,
+        w.total_queries as i64 - r.total_queries as i64,
+        w.total_dropped,
+        r.total_dropped,
+        w.total_dropped as i64 - r.total_dropped as i64,
+        w.cold_compiles,
+        r.cold_compiles,
+    ));
+
+    // Telemetry quality: estimated vs true mean arrival rate per task
+    // (a square-wave bursty stream spends half of each period at each
+    // rate, so the true mean is (base + burst) / 2; the EWMA is
+    // unit-tested to land within 25 % on the Poisson fixture).
+    let true_qps = 0.5 * (base_qps + burst_qps);
+    let mut rate_rows = Vec::new();
+    for task in &tasks {
+        let est = steal_warm_rates.get(task).copied();
+        rate_rows.push(vec![
+            task.clone(),
+            format!("{true_qps:.2}"),
+            est.map(|e| format!("{e:.2}")).unwrap_or_else(|| "-".into()),
+            est.map(|e| format!("{:+.0}%", 100.0 * (e - true_qps) / true_qps))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    out.push_str("\narrival-rate telemetry (steal+warm arm): estimated vs true\n");
+    out.push_str(&render_table(&["task", "true qps", "ewma qps", "err"], &rate_rows));
     Ok(out)
 }

@@ -157,6 +157,19 @@ pub fn trio() -> (Zoo, LatencyModel, BTreeMap<String, TaskProfile>) {
     build(&[("alpha", 0.92, 8.0), ("beta", 0.88, 12.0), ("gamma", 0.85, 16.0)])
 }
 
+/// Four heterogeneous tasks — the backlog fixture of the replan and
+/// steal/warm-migration studies: `alpha`/`beta`/`delta` are pinned
+/// together on one shard (the saturating partition) while `gamma`
+/// idles on the other.
+pub fn quartet() -> (Zoo, LatencyModel, BTreeMap<String, TaskProfile>) {
+    build(&[
+        ("alpha", 0.92, 8.0),
+        ("beta", 0.88, 12.0),
+        ("delta", 0.90, 10.0),
+        ("gamma", 0.85, 16.0),
+    ])
+}
+
 /// A uniform SLO map over every task of a fixture zoo.
 pub fn slos(zoo: &Zoo, min_accuracy: f64, max_latency_ms: f64) -> BTreeMap<String, Slo> {
     zoo.tasks

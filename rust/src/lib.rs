@@ -43,6 +43,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod soc;
 pub mod stitching;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 pub mod zoo;

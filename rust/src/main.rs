@@ -50,6 +50,8 @@ fn app() -> App {
                 .opt("min-queue", "waiting queries before batching kicks in", Some("2"))
                 .opt("batch-hint", "plan batch-aware at this expected batch size (default: max-batch when --replan)", None)
                 .switch("replan", "online re-planning: migrate the hottest task off a saturated shard")
+                .switch("steal", "telemetry-driven work stealing: an underloaded shard serves a saturated shard's waiting batches")
+                .switch("warm-migrate", "carry a migrant's pool contents to the target shard (cross-shard load instead of cold compile); implies --replan unless --steal is set")
                 .opt("seed", "arrival-stream seed", Some("0"))
                 .opt("slo", "grid index 0..24 of the SLO config", Some("12"))
                 .opt("budget", "memory budget fraction of full preload", Some("1.0"))
@@ -192,10 +194,26 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
                 min_queue: args.get_usize("min-queue")?.unwrap_or(2),
             })
             .with_sharding(Sharding::hash(args.get_usize("shards")?.unwrap_or(1)))
-            .with_planner(if args.switch("replan") {
-                PlannerConfig::replanning()
-            } else {
-                PlannerConfig::default()
+            .with_planner({
+                let mut pc = if args.switch("replan") {
+                    PlannerConfig::replanning()
+                } else {
+                    PlannerConfig::default()
+                };
+                if args.switch("steal") {
+                    pc.batch_aware = true;
+                    pc.steal = true;
+                }
+                if args.switch("warm-migrate") {
+                    pc.warm_migrate = true;
+                    // Warm migration only acts on the online adoption
+                    // paths; alone it would be a silent no-op.
+                    if !pc.replan && !pc.steal {
+                        pc.replan = true;
+                        pc.batch_aware = true;
+                    }
+                }
+                pc
             })
             .with_seed(args.get_usize("seed")?.unwrap_or(0) as u64)
     };
@@ -207,7 +225,7 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
     // The header reads from the *scenario* (not the raw flags), so a
     // saved scenario file and the printed report always agree.
     println!(
-        "scenario: {} | policy: {} | platform: {}{} | admission: {} | shards: {} | max-batch: {} | replan: {}",
+        "scenario: {} | policy: {} | platform: {}{} | admission: {} | shards: {} | max-batch: {} | replan: {} | steal: {} | warm: {}",
         scenario.name,
         policy.name(),
         lm.platform.name,
@@ -216,6 +234,8 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         scenario.sharding.shards,
         scenario.dispatch.max_batch,
         scenario.planner.replan,
+        scenario.planner.steal,
+        scenario.planner.warm_migrate,
     );
 
     // --- build the server(s) and run ------------------------------------
@@ -255,11 +275,24 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
                 shard.makespan_ms,
             );
         }
-        if report.replans > 0 || report.migrations > 0 {
+        if report.replans > 0 || report.migrations > 0 || report.steals > 0 {
             println!(
-                "  replan: {} saturation event(s), {} migration(s)",
-                report.replans, report.migrations,
+                "  online: {} saturation event(s), {} migration(s), {} stolen batch(es), \
+                 {} cold compile(s), {} warm load(s)",
+                report.replans,
+                report.migrations,
+                report.steals,
+                report.aggregate.cold_compiles,
+                report.aggregate.warm_loads,
             );
+        }
+        if !report.arrival_est_qps.is_empty() {
+            let est: Vec<String> = report
+                .arrival_est_qps
+                .iter()
+                .map(|(task, qps)| format!("{task} {qps:.1}"))
+                .collect();
+            println!("  telemetry est rate (qps): {}", est.join(" | "));
         }
         print_outcomes(&report.aggregate);
         print_summary(&report.aggregate);

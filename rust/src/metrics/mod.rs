@@ -83,6 +83,12 @@ pub struct RunReport {
     /// Dispatch batches across all tasks (= `total_queries` when the
     /// dispatcher never coalesces).
     pub total_batches: usize,
+    /// Blobs compiled from scratch for a mid-run adoption (migration or
+    /// steal) — the cold path warm migration exists to avoid.
+    pub cold_compiles: usize,
+    /// Blobs that arrived warm from another shard's pool (load, never
+    /// compile) during adoption.
+    pub warm_loads: usize,
     /// Per-request event log (arrival/queueing/placement/completion),
     /// in submission order. Empty for legacy aggregate-only callers.
     pub requests: Vec<RequestOutcome>,
@@ -121,15 +127,26 @@ impl RunReport {
     /// admission. Scale-free, so tasks with different arrival rates
     /// compare fairly. Tasks that were offered no queries are excluded —
     /// an idle task is neither fairly nor unfairly served, and counting
-    /// it would dilute real starvation.
+    /// it would dilute real starvation. Outcomes are grouped by task
+    /// name first: a task served by several shards (work stealing
+    /// splits one task's queries across sessions) contributes a single
+    /// ratio over its combined counts, not one ratio per fragment.
+    /// Degenerate inputs are vacuously fair (1.0, never NaN): an empty
+    /// task set, an all-idle task set, and the all-zero ratio vector
+    /// (everything offered was dropped) all have no service shares to
+    /// be unequal about.
     pub fn fairness_index(&self) -> f64 {
-        let xs: Vec<f64> = self
-            .outcomes
-            .iter()
-            .filter(|o| o.queries_completed + o.queries_dropped > 0)
-            .map(|o| {
-                o.queries_completed as f64
-                    / (o.queries_completed + o.queries_dropped) as f64
+        let mut by_task: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+        for o in &self.outcomes {
+            let e = by_task.entry(o.task.as_str()).or_insert((0, 0));
+            e.0 += o.queries_completed;
+            e.1 += o.queries_dropped;
+        }
+        let xs: Vec<f64> = by_task
+            .values()
+            .filter(|&&(completed, dropped)| completed + dropped > 0)
+            .map(|&(completed, dropped)| {
+                completed as f64 / (completed + dropped) as f64
             })
             .collect();
         if xs.is_empty() {
@@ -163,6 +180,8 @@ impl RunReport {
         self.total_queries += other.total_queries;
         self.total_dropped += other.total_dropped;
         self.total_batches += other.total_batches;
+        self.cold_compiles += other.cold_compiles;
+        self.warm_loads += other.warm_loads;
         self.outcomes.extend(other.outcomes);
         self.requests.extend(other.requests);
     }
@@ -184,9 +203,16 @@ pub struct ShardedReport {
     pub replans: usize,
     /// Task migrations actually applied (bounded re-sharding).
     pub migrations: usize,
+    /// Batches served by a shard other than the task's home shard
+    /// (query-granularity work stealing; 0 on the static path).
+    pub steals: usize,
     /// Per-shard memory-pool budget utilization (used/capacity) at the
     /// end of the last served phase.
     pub budget_utilization: Vec<f64>,
+    /// Telemetry's per-task EWMA arrival-rate estimates (qps) at the
+    /// end of the run (empty on the static path, which runs no
+    /// telemetry).
+    pub arrival_est_qps: BTreeMap<String, f64>,
 }
 
 impl ShardedReport {
@@ -313,6 +339,10 @@ mod tests {
         }
     }
 
+    fn outcome_named(name: &str, completed: usize, dropped: usize) -> TaskOutcome {
+        TaskOutcome { task: name.into(), ..outcome_served(completed, dropped) }
+    }
+
     #[test]
     fn violation_predicate() {
         assert!(!outcome(Some(0.9), 40.0).violated());
@@ -355,12 +385,12 @@ mod tests {
     #[test]
     fn fairness_index_even_vs_starved() {
         let even = RunReport {
-            outcomes: vec![outcome_served(80, 20), outcome_served(40, 10)],
+            outcomes: vec![outcome_named("a", 80, 20), outcome_named("b", 40, 10)],
             ..Default::default()
         };
         assert!((even.fairness_index() - 1.0).abs() < 1e-12, "equal ratios");
         let starved = RunReport {
-            outcomes: vec![outcome_served(100, 0), outcome_served(5, 95)],
+            outcomes: vec![outcome_named("a", 100, 0), outcome_named("b", 5, 95)],
             ..Default::default()
         };
         let f = starved.fairness_index();
@@ -369,9 +399,9 @@ mod tests {
         // Idle tasks (zero offered) are excluded, not counted as fair.
         let with_idle = RunReport {
             outcomes: vec![
-                outcome_served(100, 0),
-                outcome_served(5, 95),
-                outcome_served(0, 0),
+                outcome_named("a", 100, 0),
+                outcome_named("b", 5, 95),
+                outcome_named("c", 0, 0),
             ],
             ..Default::default()
         };
@@ -384,10 +414,62 @@ mod tests {
     }
 
     #[test]
+    fn fairness_index_merges_multi_shard_fragments() {
+        // Work stealing splits one task's queries across sessions, so a
+        // sharded aggregate holds several TaskOutcome fragments for the
+        // same task: the index must judge the task's *combined* ratio,
+        // not one ratio per fragment.
+        let split = RunReport {
+            outcomes: vec![
+                outcome_named("a", 60, 40), // home shard: all the drops…
+                outcome_named("a", 40, 0),  // …thief shard: clean
+                outcome_named("b", 80, 20),
+            ],
+            ..Default::default()
+        };
+        // Combined: a = 100/140, b = 80/100 — nearly equal shares.
+        let merged = RunReport {
+            outcomes: vec![outcome_named("a", 100, 40), outcome_named("b", 80, 20)],
+            ..Default::default()
+        };
+        assert!(
+            (split.fairness_index() - merged.fairness_index()).abs() < 1e-12,
+            "fragments of one task must merge before the Jain computation"
+        );
+        assert!(split.fairness_index() > 0.99);
+    }
+
+    #[test]
+    fn fairness_index_degenerate_inputs_never_nan() {
+        // Empty task set: vacuously fair, not NaN.
+        let empty = RunReport::default();
+        let f = empty.fairness_index();
+        assert!(f.is_finite());
+        assert_eq!(f, 1.0, "empty task set is vacuously fair");
+        // All-idle task set (nothing offered anywhere).
+        let idle = RunReport {
+            outcomes: vec![outcome_named("a", 0, 0), outcome_named("b", 0, 0)],
+            ..Default::default()
+        };
+        assert_eq!(idle.fairness_index(), 1.0, "idle tasks are excluded");
+        // Everything offered was dropped: the all-zero ratio vector has
+        // no service shares to be unequal about.
+        let starved = RunReport {
+            outcomes: vec![outcome_named("a", 0, 10), outcome_named("b", 0, 3)],
+            ..Default::default()
+        };
+        let f = starved.fairness_index();
+        assert!(f.is_finite(), "all-dropped must not divide 0/0");
+        assert_eq!(f, 1.0);
+    }
+
+    #[test]
     fn merge_folds_sequential_and_parallel() {
         let part = |q: usize, ms: f64| RunReport {
             total_queries: q,
             total_batches: q,
+            cold_compiles: 1,
+            warm_loads: 2,
             makespan_ms: ms,
             ..Default::default()
         };
@@ -395,10 +477,13 @@ mod tests {
         seq.merge_sequential(part(5, 50.0));
         assert_eq!(seq.total_queries, 15);
         assert_eq!(seq.total_batches, 15);
+        assert_eq!(seq.cold_compiles, 2, "adoption counters sum");
+        assert_eq!(seq.warm_loads, 4);
         assert!((seq.makespan_ms - 150.0).abs() < 1e-12, "phases sum");
         let mut par = part(10, 100.0);
         par.merge_parallel(part(5, 50.0));
         assert_eq!(par.total_queries, 15);
+        assert_eq!(par.cold_compiles, 2);
         assert!((par.makespan_ms - 100.0).abs() < 1e-12, "shards take the max");
     }
 

@@ -76,12 +76,32 @@ pub fn split_budget_by_hotness(
     tasks: &[(&TaskZoo, &Hotness)],
     budget_bytes: u64,
 ) -> BTreeMap<String, u64> {
+    split_budget_by_hotness_weighted(tasks, budget_bytes, &BTreeMap::new())
+}
+
+/// [`split_budget_by_hotness`] with per-task traffic weights (e.g. the
+/// telemetry arrival-rate estimates): each task's effective mass is its
+/// Eq. 7 hotness mass × its weight, so budgets follow *served heat* —
+/// a memory-hot task that receives no traffic cedes budget to one that
+/// does. Missing weights default to 1.0; an empty map reproduces the
+/// unweighted split exactly.
+pub fn split_budget_by_hotness_weighted(
+    tasks: &[(&TaskZoo, &Hotness)],
+    budget_bytes: u64,
+    traffic: &BTreeMap<String, f64>,
+) -> BTreeMap<String, u64> {
     let mut out = BTreeMap::new();
     let n = tasks.len();
     if n == 0 {
         return out;
     }
-    let masses: Vec<f64> = tasks.iter().map(|(_, h)| hotness_mass(h)).collect();
+    let masses: Vec<f64> = tasks
+        .iter()
+        .map(|(tz, h)| {
+            let w = traffic.get(&tz.name).copied().unwrap_or(1.0).max(0.0);
+            hotness_mass(h) * w
+        })
+        .collect();
     let total: f64 = masses.iter().sum();
     let weights: Vec<f64> = if total <= 0.0 {
         vec![1.0 / n as f64; n]
@@ -169,6 +189,42 @@ mod tests {
                     assert!(split[a] + 2 >= split[b], "{a} vs {b}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn weighted_split_follows_traffic() {
+        let (zoo, hot) = trio_hotness();
+        let refs = pairs(&zoo, &hot);
+        let budget = 1_000_000u64;
+        // Empty weights reproduce the unweighted split exactly.
+        let plain = split_budget_by_hotness(&refs, budget);
+        let empty = split_budget_by_hotness_weighted(&refs, budget, &BTreeMap::new());
+        assert_eq!(plain, empty);
+        // Skewing all traffic onto alpha must grow alpha's share and
+        // shrink the others', while shares still sum to the budget.
+        let traffic = BTreeMap::from([
+            ("alpha".to_string(), 50.0),
+            ("beta".to_string(), 1.0),
+            ("gamma".to_string(), 1.0),
+        ]);
+        let skewed = split_budget_by_hotness_weighted(&refs, budget, &traffic);
+        assert_eq!(skewed.values().sum::<u64>(), budget);
+        assert!(
+            skewed["alpha"] > plain["alpha"],
+            "{} vs {}",
+            skewed["alpha"],
+            plain["alpha"]
+        );
+        assert!(skewed["beta"] < plain["beta"]);
+        // All-zero weights degrade to the even split, never divide by
+        // zero.
+        let zeros: BTreeMap<String, f64> =
+            ["alpha", "beta", "gamma"].iter().map(|t| (t.to_string(), 0.0)).collect();
+        let even = split_budget_by_hotness_weighted(&refs, budget, &zeros);
+        assert_eq!(even.values().sum::<u64>(), budget);
+        for share in even.values() {
+            assert!((*share as i64 - (budget / 3) as i64).abs() <= 1);
         }
     }
 

@@ -9,20 +9,33 @@
 //! [`Planner::replan`] entry point for online re-sharding:
 //!
 //! ```text
-//! PlanContext { slos, arrival_hint, batch_hint, memory_budget, Ψ }
+//! telemetry::Telemetry ──▶ PlanContext { slos, arrival_hint, batch_hint,
+//!      │       (plan_context)            memory_budget, Ψ }
+//!      │                       │
+//!      │                       ▼ Planner::plan
+//!      │              CostModel (latency_est_batch × batch_factor)
+//!      │                   ├─ algo::optimize_weighted  — Algorithm 1
+//!      │                   └─ memory::{split_budget_by_hotness_weighted,
+//!      │                              preload} — Algorithm 2
+//!      │                       ▼
+//!      │              Plan { order, selections, preload, task_budgets }
 //!      │
-//!      ▼ Planner::plan
-//! CostModel (latency_est_batch × batch_factor)
-//!      ├─ algo::optimize_weighted  — Algorithm 1, pruned + batch-aware
-//!      └─ memory::{split_budget_by_hotness, preload} — Algorithm 2
-//!      ▼
-//! Plan { order, selections, preload, task_budgets }
-//!
-//! saturation (scenario::dispatch) ──▶ Planner::replan(prior, observed)
-//!      ▼
-//! Migration { hottest movable task → least-loaded shard,
-//!             variant re-selected under its hotness budget share }
+//!      └─▶ saturation (scenario::dispatch) ──▶ Planner::replan(prior, observed)
+//!                              ▼
+//!          Migration { hottest movable task (Eq. 7 mass × observed qps)
+//!                      → least-loaded shard, variant re-selected under
+//!                      its traffic-weighted budget share }
 //! ```
+//!
+//! `arrival_hint` no longer needs to be hand-supplied: the serving
+//! layer's `telemetry::Telemetry` estimates it online (EWMA + sliding
+//! window). The online drive feeds the estimates into `replan` via
+//! `ShardObservation::arrival_qps` on every saturation event;
+//! `Telemetry::plan_context` is the corresponding front door for
+//! callers re-running the *full* `Planner::plan` from observed traffic
+//! (there is nothing to observe at first-prepare time, so startup
+//! plans stay unweighted). Hand-set hints remain possible for offline
+//! what-if planning.
 //!
 //! The old entry points (`optimizer::optimize`, `optimizer::feasible_set`,
 //! `preloader::preload`) remain as thin deprecated shims so external
@@ -56,9 +69,11 @@ pub struct PlanContext {
     /// The SLO universe Ψ hotness is scored over (empty ⇒ the SLO
     /// configuration itself).
     pub universe: Vec<Slo>,
-    /// Expected per-task arrival rate — step 2's placement objective
-    /// weights tasks by it (missing tasks weigh 1.0; empty map =
-    /// the paper's unweighted mean).
+    /// Per-task arrival rate (qps) — step 2's placement objective and
+    /// the budget split weight tasks by it (missing tasks weigh 1.0;
+    /// empty map = the paper's unweighted mean). Fed automatically by
+    /// `telemetry::Telemetry::plan_context` from the live EWMA
+    /// estimators; set it by hand only for offline what-if planning.
     pub arrival_hint: BTreeMap<String, f64>,
     /// Expected mean coalesced batch size per task (overrides
     /// `default_batch_hint`).
@@ -223,10 +238,12 @@ impl<'a> SparsityAwarePlanner<'a> {
     /// committed placement order** (a variant feasible somewhere in Ω
     /// may be unsupported or SLO-infeasible on the order the target
     /// actually serves under): batch-aware feasible set, then the
-    /// fastest candidate whose weights fit the task's hotness share of
-    /// the target shard's pool (fallback: fastest feasible regardless
-    /// of share — the pool evicts colder blobs at load time).
-    fn reselect(
+    /// fastest candidate whose weights fit the task's traffic-weighted
+    /// hotness share of the target shard's pool (fallback: fastest
+    /// feasible regardless of share — the pool evicts colder blobs at
+    /// load time). Also used by the stealing drive to pick the thief's
+    /// serving variant at adoption.
+    pub(crate) fn reselect(
         &self,
         task: &str,
         prior: &ShardPlan,
@@ -263,7 +280,11 @@ impl<'a> SparsityAwarePlanner<'a> {
         let refs: Vec<(&TaskZoo, &Hotness)> =
             pairs.iter().map(|(ntz, h)| (*ntz, h)).collect();
         let target_pool = observed.shard_pool_bytes.get(to).copied().unwrap_or(0);
-        let budgets = memory::split_budget_by_hotness(&refs, target_pool);
+        let budgets = memory::split_budget_by_hotness_weighted(
+            &refs,
+            target_pool,
+            &observed.arrival_qps,
+        );
         let share = budgets.get(task).copied().unwrap_or(0);
 
         let cost = CostModel::batch_aware(self.lm, 1.0)
@@ -317,7 +338,14 @@ impl Planner for SparsityAwarePlanner<'_> {
         let pairs = self.hotness_pairs(&ctx.slos, &universe)?;
         let refs: Vec<(&TaskZoo, &Hotness)> =
             pairs.iter().map(|(tz, h)| (*tz, h)).collect();
-        let task_budgets = memory::split_budget_by_hotness(&refs, ctx.memory_budget);
+        // Budgets follow served heat: Eq. 7 hotness × the arrival hint
+        // (live telemetry when the context came from
+        // `Telemetry::plan_context`; 1.0 everywhere when unhinted).
+        let task_budgets = memory::split_budget_by_hotness_weighted(
+            &refs,
+            ctx.memory_budget,
+            &ctx.arrival_hint,
+        );
         let preload = memory::preload(&refs, ctx.memory_budget);
         Ok(Plan {
             order: alg1.order,
@@ -333,12 +361,21 @@ impl Planner for SparsityAwarePlanner<'_> {
             return None;
         }
         let from = observed.saturated;
-        // Victim: the hottest movable task on the saturated shard
-        // (cached — Ψ and Ω are fixed per planner instance).
+        // Victim: the hottest movable task on the saturated shard —
+        // Eq. 7 mass (cached; Ψ and Ω are fixed per planner instance)
+        // weighted by the observed arrival rate, so the task actually
+        // driving the backlog moves first. Missing estimates weigh 1.0
+        // (pure memory hotness, the pre-telemetry behavior).
         let mut victim: Option<(f64, &String)> = None;
         for name in &observed.movable {
             let Some(h) = self.hotness_of(name, &prior.universe) else { continue };
-            let mass = memory::hotness_mass(&h);
+            let traffic = observed
+                .arrival_qps
+                .get(name)
+                .copied()
+                .unwrap_or(1.0)
+                .max(0.0);
+            let mass = memory::hotness_mass(&h) * traffic;
             if victim.map(|(m, _)| mass > m).unwrap_or(true) {
                 victim = Some((mass, name));
             }
@@ -437,6 +474,7 @@ mod tests {
             shard_pool_bytes: vec![1_000_000; 3],
             movable: vec!["alpha".to_string(), "beta".to_string()],
             mean_batch: BTreeMap::new(),
+            arrival_qps: BTreeMap::new(),
         };
         let mig = planner.replan(&prior, &observed).expect("must migrate");
         assert_eq!(mig.from, 0);
@@ -457,7 +495,24 @@ mod tests {
         };
         assert!(planner.replan(&prior, &worse).is_none());
         // …or when nothing is movable.
-        let drained = ShardObservation { movable: Vec::new(), ..observed };
+        let drained = ShardObservation { movable: Vec::new(), ..observed.clone() };
         assert!(planner.replan(&prior, &drained).is_none());
+
+        // Telemetry steers the victim: with observed traffic heavily
+        // skewed onto one movable task, that task moves regardless of
+        // which has the larger raw Eq. 7 mass.
+        for flooded in ["alpha", "beta"] {
+            let other = if flooded == "alpha" { "beta" } else { "alpha" };
+            let rates = BTreeMap::from([
+                (flooded.to_string(), 200.0),
+                (other.to_string(), 0.5),
+            ]);
+            let skewed = ShardObservation { arrival_qps: rates, ..observed.clone() };
+            let mig = planner.replan(&prior, &skewed).expect("must migrate");
+            assert_eq!(
+                mig.task, flooded,
+                "the traffic-flooded task must be the victim"
+            );
+        }
     }
 }

@@ -53,6 +53,11 @@ pub struct ShardObservation {
     /// Observed mean coalesced batch size per task (the batch hint for
     /// re-selection).
     pub mean_batch: BTreeMap<String, f64>,
+    /// Telemetry's per-task arrival-rate estimates (qps). Victim
+    /// scoring and the migrant's budget share weight Eq. 7 hotness by
+    /// these; tasks without an estimate weigh 1.0, and an empty map
+    /// reproduces pure memory-hotness scoring.
+    pub arrival_qps: BTreeMap<String, f64>,
 }
 
 /// One bounded re-sharding step: move `task` from shard `from` to shard

@@ -29,6 +29,18 @@
 //! [`Admission::Fair`](super::Admission::Fair), judged per shard inside
 //! the session.
 //!
+//! On top of the static paths sits the **online drive**
+//! (`PlannerConfig::{replan, steal, warm_migrate}`): all shards run
+//! through one interleaved simulated-time loop whose every
+//! [`crate::metrics::RequestOutcome`] feeds a
+//! [`crate::telemetry::Telemetry`] handle. Telemetry's backlog and
+//! arrival-rate estimates drive whole-task migration
+//! (`Planner::replan`), query-granularity work stealing (an
+//! underloaded shard serves a saturated shard's waiting batches), and
+//! warm migration (a migrant's pool contents travel with it — a
+//! cross-shard load instead of a cold compile+load). See DESIGN.md
+//! §Telemetry for the protocols and the FIFO-preservation argument.
+//!
 //! ```
 //! use sparseloom::coordinator::ServeOpts;
 //! use sparseloom::fixtures;
@@ -61,6 +73,7 @@ use crate::metrics::{RunReport, ShardedReport};
 use crate::planner::{Planner, ShardObservation, ShardPlan, SparsityAwarePlanner};
 use crate::profiler::TaskProfile;
 use crate::soc::{LatencyModel, Processor};
+use crate::telemetry::Telemetry;
 use crate::workload::{shard_of_task, Query, Slo};
 use crate::zoo::Zoo;
 
@@ -112,11 +125,18 @@ impl Dispatch {
     /// dispatch decision takes: the FIFO prefix up to `max_batch` once
     /// at least `min_queue` wait; 1 when `batching` is off or the
     /// threshold is not met. The single coalescing rule shared by
-    /// [`Dispatcher::drive`] and the replan drive — change it here and
+    /// [`Dispatcher::drive`] and the online drive — change it here and
     /// both paths stay comparable.
+    ///
+    /// The result is always ≥ 1, deterministically: `take(0, _)` is 1
+    /// (the head query always qualifies — it is the reason dispatch is
+    /// happening), and a degenerate hand-built `max_batch = 0` behaves
+    /// like `max_batch = 1` rather than dispatching nothing (the
+    /// constructors already clamp, but a struct literal can bypass
+    /// them). Pinned by `take_edge_cases_are_deterministic`.
     pub fn take(&self, waiting: usize, batching: bool) -> usize {
         if batching && waiting >= self.min_queue.max(1) {
-            waiting.min(self.max_batch)
+            waiting.min(self.max_batch.max(1))
         } else {
             1
         }
@@ -315,15 +335,16 @@ impl<'a> ShardedServer<'a> {
     /// `Server::run_schedule` (§3.4 switch-cost dynamics) is not modeled
     /// on the sharded path.
     pub fn run(&self, scenario: &Scenario) -> Result<ShardedReport> {
-        // The online re-planning path (scenario.planner.replan) drives
-        // all shards through one interleaved loop so it can observe
-        // cross-shard backlog and migrate tasks mid-phase. Closed loops
-        // are self-clocking (no backlog) and never saturate.
-        if scenario.planner.replan
+        // The online path (scenario.planner.replan / .steal) drives all
+        // shards through one interleaved loop so telemetry can observe
+        // cross-shard backlog and migrate tasks — or steal individual
+        // batches — mid-phase. Closed loops are self-clocking (no
+        // backlog) and never saturate.
+        if (scenario.planner.replan || scenario.planner.steal)
             && self.shards.len() > 1
             && !matches!(scenario.arrival, Arrival::ClosedLoop { .. })
         {
-            return self.run_replan(scenario);
+            return self.run_online(scenario);
         }
         let n = self.shards.len();
         let mut shard_tasks: Vec<Vec<String>> = vec![Vec::new(); n];
@@ -361,26 +382,53 @@ impl<'a> ShardedServer<'a> {
             aggregate,
             replans: 0,
             migrations: 0,
+            steals: 0,
             budget_utilization,
+            arrival_est_qps: BTreeMap::new(),
         })
     }
 
-    /// The online re-planning drive: every shard gets a session (empty
-    /// shards included — they are migration targets), queries are
-    /// issued in global simulated-time order, and after each booking
-    /// the just-served shard's backlog is checked against its
-    /// saturation threshold (`PlannerConfig::saturation_slack ×` the
-    /// mean SLO latency bound of its tasks). On saturation,
-    /// `Planner::replan` proposes one bounded migration: the hottest
-    /// still-queued task moves to the least-loaded shard, its variant
-    /// re-selected batch-aware under its hotness share of the target
-    /// pool budget, and its first query there floored at the source
-    /// shard's last completion (per-task FIFO is never reordered).
-    fn run_replan(&self, scenario: &Scenario) -> Result<ShardedReport> {
+    /// The online drive — re-planning and/or work stealing, driven by
+    /// [`Telemetry`]: every shard gets a session (empty shards included
+    /// — they are migration targets), queries are issued in global
+    /// simulated-time order, and every [`crate::metrics::RequestOutcome`]
+    /// feeds the per-task arrival estimators and per-shard load
+    /// accounting.
+    ///
+    /// **Stealing** (`PlannerConfig::steal`): before a batch is issued,
+    /// if its home shard's backlog exceeds the saturation threshold
+    /// (`saturation_slack ×` the mean SLO latency bound of its tasks)
+    /// and another shard sits under *half* the home backlog, the batch
+    /// is served there instead — query-granularity load balancing.
+    /// Warm thieves (already serving the task, or holding a complete
+    /// variant in pool) win; a cold thief may bootstrap-adopt only
+    /// while the task is still single-homed, bounding cold adoptions
+    /// to one per task per phase. Per-task FIFO survives because every
+    /// shard serving a task shares one ready floor, re-synced to the
+    /// latest completion after every batch.
+    ///
+    /// **Re-planning** (`PlannerConfig::replan`): after each booking
+    /// the home shard's backlog is checked against the same threshold;
+    /// on saturation `Planner::replan` proposes one bounded migration —
+    /// the hottest still-queued task (Eq. 7 mass × telemetry arrival
+    /// rate) moves to the least-loaded shard, its variant re-selected
+    /// batch-aware under its traffic-weighted share of the target pool
+    /// budget, its first query floored at the source's last completion.
+    ///
+    /// **Warm migration** (`PlannerConfig::warm_migrate`): both
+    /// adoption paths carry the migrant's resident pool entries to the
+    /// target — charged against the target's budget, evicting cold
+    /// entries if needed — so the move pays a cross-shard load instead
+    /// of a cold compile+load. A replanned migrant's entries *move*
+    /// (the source's budget frees up); a stolen task's entries *copy*
+    /// (the home keeps serving it too).
+    fn run_online(&self, scenario: &Scenario) -> Result<ShardedReport> {
         let n = self.shards.len();
         let coord = self.shards[0].coordinator();
         let planner = SparsityAwarePlanner::new(coord.zoo, coord.lm, coord.profiles);
         let universe = scenario.slo_universe();
+        let cfg = &scenario.planner;
+        let mut telemetry = Telemetry::new(n);
         let mut assignment: BTreeMap<String, usize> = scenario
             .tasks
             .iter()
@@ -421,8 +469,21 @@ impl<'a> ShardedServer<'a> {
                 }
                 pending.entry(q.task.clone()).or_default().push_back(q);
             }
+            // Which shards hold serving state for each task this phase
+            // (the home first; steal/migration adopters appended). All
+            // of them share one FIFO ready floor, re-synced after every
+            // batch of the task completes anywhere.
+            let mut serving: BTreeMap<String, Vec<usize>> = assignment
+                .iter()
+                .map(|(t, &s)| (t.clone(), vec![s]))
+                .collect();
             let batching = scenario.dispatch.is_batching();
-            let mut budget_left = scenario.planner.max_migrations;
+            let mut budget_left = cfg.max_migrations;
+            // Saturation thresholds depend only on the assignment (and
+            // this phase's SLOs): cached here, recomputed on migration.
+            let mut thresholds: Vec<Option<f64>> = (0..n)
+                .map(|i| saturation_threshold(cfg.saturation_slack, slos, &assignment, i))
+                .collect();
             loop {
                 // Globally earliest-issue task first, across all shards.
                 let mut next: Option<(&String, f64)> = None;
@@ -439,7 +500,101 @@ impl<'a> ShardedServer<'a> {
                 }
                 let Some((task, issue)) = next else { break };
                 let task = task.clone();
-                let shard = assignment[&task];
+                let home = assignment[&task];
+
+                // --- telemetry-driven query-level work stealing -------
+                // The home shard's backlog is a cheap scalar scan; the
+                // full per-shard vector (thief selection) is only built
+                // once the home is actually saturated.
+                let mut serve_on = home;
+                if cfg.steal {
+                    let home_backlog =
+                        backlog_of_shard(&sessions, &pending, &assignment, home);
+                    telemetry.observe_backlog(home, home_backlog);
+                    let saturated = thresholds[home]
+                        .map(|thr| home_backlog > thr)
+                        .unwrap_or(false);
+                    if saturated {
+                        let backlog =
+                            backlog_per_shard(&sessions, &pending, &assignment, n);
+                        for (i, &b) in backlog.iter().enumerate() {
+                            telemetry.observe_backlog(i, b);
+                        }
+                        // Thief: least-backlogged shard under half the
+                        // home's backlog; warm beats cold, and a cold
+                        // shard may bootstrap-adopt only a single-homed
+                        // task (one cold adoption per task per phase).
+                        let mut warm_best: Option<(f64, usize)> = None;
+                        let mut cold_best: Option<(f64, usize)> = None;
+                        for (i, &b) in backlog.iter().enumerate() {
+                            if i == home || 2.0 * b >= backlog[home] {
+                                continue;
+                            }
+                            let slot = (b, i);
+                            if sessions[i].has_warm_variant(&task) {
+                                if warm_best.map(|w| slot < w).unwrap_or(true) {
+                                    warm_best = Some(slot);
+                                }
+                            } else if cold_best.map(|c| slot < c).unwrap_or(true) {
+                                cold_best = Some(slot);
+                            }
+                        }
+                        let bootstrap = if serving[&task].len() == 1 {
+                            cold_best
+                        } else {
+                            None
+                        };
+                        if let Some((_, thief)) = warm_best.or(bootstrap) {
+                            if sessions[thief].ready_of(&task).is_none() {
+                                if let Some(slo) = slos.get(&task).copied() {
+                                    let prior = ShardPlan {
+                                        assignment: assignment.clone(),
+                                        shards: n,
+                                        slos: slos.clone(),
+                                        universe: universe.clone(),
+                                    };
+                                    let observed = ShardObservation {
+                                        saturated: home,
+                                        shard_backlog_ms: backlog.clone(),
+                                        shard_orders: shard_orders.clone(),
+                                        shard_pool_bytes: shard_pool_bytes.clone(),
+                                        movable: vec![task.clone()],
+                                        mean_batch: observed_mean_batch(
+                                            &sessions,
+                                            &assignment,
+                                            &scenario.tasks,
+                                        ),
+                                        arrival_qps: telemetry.arrival_hint(),
+                                    };
+                                    let selection =
+                                        planner.reselect(&task, &prior, &observed, thief);
+                                    // A stolen task's pool entries are
+                                    // *copied* — the home keeps serving
+                                    // it between steals.
+                                    let warm_blobs = if cfg.warm_migrate {
+                                        Some(sessions[home].pool_task_blobs(&task))
+                                    } else {
+                                        None
+                                    };
+                                    let floor =
+                                        sessions[home].ready_of(&task).unwrap_or(0.0);
+                                    sessions[thief].adopt_task(
+                                        &task, slo, selection, floor, warm_blobs,
+                                    )?;
+                                    serving
+                                        .get_mut(&task)
+                                        .expect("known task")
+                                        .push(thief);
+                                }
+                            }
+                            if sessions[thief].ready_of(&task).is_some() {
+                                serve_on = thief;
+                                telemetry.note_steal(thief);
+                            }
+                        }
+                    }
+                }
+
                 let queue = pending.get_mut(&task).unwrap();
                 // Same coalescing rule as Dispatcher::drive.
                 let waiting =
@@ -448,62 +603,56 @@ impl<'a> ShardedServer<'a> {
                 let batch: Vec<Query> =
                     (0..take).map(|_| queue.pop_front().unwrap()).collect();
                 let refs: Vec<&Query> = batch.iter().collect();
-                sessions[shard].submit_batch(&refs)?;
+                let evs = sessions[serve_on].submit_batch(&refs)?;
+                for ev in &evs {
+                    telemetry.observe_outcome(serve_on, ev);
+                }
+                // FIFO across the shards serving this task: raise every
+                // floor to the latest completion.
+                if serving[&task].len() > 1 {
+                    sync_ready_floors(&mut sessions, &serving[&task], &task);
+                }
 
-                if budget_left == 0 {
+                if !cfg.replan || budget_left == 0 {
                     continue;
                 }
                 // --- saturation check -------------------------------------
-                // Backlog as admission sees it: per task, the queueing
-                // delay its *next pending* query is headed for
-                // (ready − arrival), summed per shard. Tasks with no
-                // queued work contribute nothing.
-                let mut shard_backlog = vec![0.0f64; n];
-                for (t, &si) in &assignment {
-                    let Some(front) = pending.get(t).and_then(|q| q.front()) else {
-                        continue;
-                    };
-                    let ready = sessions[si].ready_of(t).unwrap_or(0.0);
-                    shard_backlog[si] += (ready - front.arrival_ms).max(0.0);
-                }
-                let mut slo_sum = 0.0;
-                let mut slo_n = 0usize;
-                for (t, &si) in &assignment {
-                    if si == shard {
-                        if let Some(slo) = slos.get(t) {
-                            slo_sum += slo.max_latency_ms;
-                            slo_n += 1;
-                        }
-                    }
-                }
-                if slo_n == 0 {
+                // Same two-step shape as the steal path: scalar check
+                // first, full vector only on saturation.
+                let Some(threshold) = thresholds[home] else {
+                    continue;
+                };
+                let home_backlog =
+                    backlog_of_shard(&sessions, &pending, &assignment, home);
+                telemetry.observe_backlog(home, home_backlog);
+                if home_backlog <= threshold {
                     continue;
                 }
-                let threshold =
-                    scenario.planner.saturation_slack * slo_sum / slo_n as f64;
-                if shard_backlog[shard] <= threshold {
-                    continue;
+                let shard_backlog = backlog_per_shard(&sessions, &pending, &assignment, n);
+                for (i, &b) in shard_backlog.iter().enumerate() {
+                    telemetry.observe_backlog(i, b);
                 }
                 // Cheap pre-checks before invoking the planner (the
                 // hotness scan is the expensive part): a strictly
                 // less-loaded target must exist, and some task on the
                 // saturated shard must still have queued work AND not
                 // have been served by another shard this phase (a
-                // second adoption would break FIFO floors).
+                // second adoption would break the one-floor-per-shard
+                // invariant of whole-task migration).
                 let has_target = shard_backlog
                     .iter()
                     .enumerate()
-                    .any(|(i2, &b)| i2 != shard && b < shard_backlog[shard]);
+                    .any(|(i2, &b)| i2 != home && b < shard_backlog[home]);
                 let movable: Vec<String> = scenario
                     .tasks
                     .iter()
-                    .filter(|t| assignment[*t] == shard)
+                    .filter(|t| assignment[*t] == home)
                     .filter(|t| {
                         pending.get(*t).map(|q| !q.is_empty()).unwrap_or(false)
                     })
                     .filter(|t| {
                         !sessions.iter().enumerate().any(|(i2, s)| {
-                            i2 != shard && s.ready_of(t).is_some()
+                            i2 != home && s.ready_of(t).is_some()
                         })
                     })
                     .cloned()
@@ -512,12 +661,6 @@ impl<'a> ShardedServer<'a> {
                     continue;
                 }
                 replans += 1;
-                let mut mean_batch = BTreeMap::new();
-                for t in &scenario.tasks {
-                    if let Some(mb) = sessions[assignment[t]].mean_batch_of(t) {
-                        mean_batch.insert(t.clone(), mb);
-                    }
-                }
                 let prior = ShardPlan {
                     assignment: assignment.clone(),
                     shards: n,
@@ -525,12 +668,17 @@ impl<'a> ShardedServer<'a> {
                     universe: universe.clone(),
                 };
                 let observed = ShardObservation {
-                    saturated: shard,
+                    saturated: home,
                     shard_backlog_ms: shard_backlog,
                     shard_orders: shard_orders.clone(),
                     shard_pool_bytes: shard_pool_bytes.clone(),
                     movable,
-                    mean_batch,
+                    mean_batch: observed_mean_batch(
+                        &sessions,
+                        &assignment,
+                        &scenario.tasks,
+                    ),
+                    arrival_qps: telemetry.arrival_hint(),
                 };
                 let Some(mig) = planner.replan(&prior, &observed) else {
                     continue;
@@ -538,8 +686,30 @@ impl<'a> ShardedServer<'a> {
                 debug_assert!(sessions[mig.to].ready_of(&mig.task).is_none());
                 let Some(slo) = slos.get(&mig.task).copied() else { continue };
                 let floor = sessions[mig.from].ready_of(&mig.task).unwrap_or(0.0);
-                sessions[mig.to].adopt_task(&mig.task, slo, mig.selection, floor)?;
+                // A replanned migrant's pool entries *move* with it —
+                // the source's budget share frees up.
+                let warm_blobs = if cfg.warm_migrate {
+                    Some(sessions[mig.from].take_task_blobs(&mig.task))
+                } else {
+                    None
+                };
+                sessions[mig.to].adopt_task(
+                    &mig.task,
+                    slo,
+                    mig.selection,
+                    floor,
+                    warm_blobs,
+                )?;
+                let adopters = serving.get_mut(&mig.task).expect("known task");
+                if !adopters.contains(&mig.to) {
+                    adopters.push(mig.to);
+                }
                 assignment.insert(mig.task.clone(), mig.to);
+                thresholds = (0..n)
+                    .map(|i| {
+                        saturation_threshold(cfg.saturation_slack, slos, &assignment, i)
+                    })
+                    .collect();
                 migrations += 1;
                 budget_left -= 1;
             }
@@ -557,8 +727,111 @@ impl<'a> ShardedServer<'a> {
             aggregate,
             replans,
             migrations,
+            // Telemetry is the one tracking site for stolen batches.
+            steals: telemetry.steals() as usize,
             budget_utilization,
+            arrival_est_qps: telemetry.rates(),
         })
+    }
+}
+
+/// Per-shard queueing backlog as admission sees it: per task, the
+/// delay its *next pending* query is headed for (ready − arrival),
+/// summed over each shard's tasks. Tasks with no queued work
+/// contribute nothing.
+fn backlog_per_shard(
+    sessions: &[Session<'_, '_>],
+    pending: &BTreeMap<String, VecDeque<Query>>,
+    assignment: &BTreeMap<String, usize>,
+    n: usize,
+) -> Vec<f64> {
+    let mut backlog = vec![0.0f64; n];
+    for (t, &si) in assignment {
+        let Some(front) = pending.get(t).and_then(|q| q.front()) else {
+            continue;
+        };
+        let ready = sessions[si].ready_of(t).unwrap_or(0.0);
+        backlog[si] += (ready - front.arrival_ms).max(0.0);
+    }
+    backlog
+}
+
+/// One shard's queueing backlog alone — the allocation-free scalar the
+/// per-batch saturation checks use ([`backlog_per_shard`] restricted
+/// to `shard`).
+fn backlog_of_shard(
+    sessions: &[Session<'_, '_>],
+    pending: &BTreeMap<String, VecDeque<Query>>,
+    assignment: &BTreeMap<String, usize>,
+    shard: usize,
+) -> f64 {
+    let mut backlog = 0.0f64;
+    for (t, &si) in assignment {
+        if si != shard {
+            continue;
+        }
+        let Some(front) = pending.get(t).and_then(|q| q.front()) else {
+            continue;
+        };
+        let ready = sessions[si].ready_of(t).unwrap_or(0.0);
+        backlog += (ready - front.arrival_ms).max(0.0);
+    }
+    backlog
+}
+
+/// One shard's saturation threshold: `slack ×` the mean SLO latency
+/// bound of its tasks (`None` when the shard has no SLO'd tasks).
+fn saturation_threshold(
+    slack: f64,
+    slos: &BTreeMap<String, Slo>,
+    assignment: &BTreeMap<String, usize>,
+    shard: usize,
+) -> Option<f64> {
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for (t, &si) in assignment {
+        if si == shard {
+            if let Some(slo) = slos.get(t) {
+                sum += slo.max_latency_ms;
+                count += 1;
+            }
+        }
+    }
+    if count == 0 {
+        None
+    } else {
+        Some(slack * sum / count as f64)
+    }
+}
+
+/// Observed mean coalesced batch size per task (the batch hint for
+/// migrant re-selection), read from each task's home session.
+fn observed_mean_batch(
+    sessions: &[Session<'_, '_>],
+    assignment: &BTreeMap<String, usize>,
+    tasks: &[String],
+) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for t in tasks {
+        if let Some(mb) = sessions[assignment[t]].mean_batch_of(t) {
+            out.insert(t.clone(), mb);
+        }
+    }
+    out
+}
+
+/// Raise every serving shard's FIFO floor for `task` to the latest
+/// completion among them — the invariant that keeps a stolen task's
+/// queries ordered no matter which shard serves the next batch.
+fn sync_ready_floors(sessions: &mut [Session<'_, '_>], serving: &[usize], task: &str) {
+    let mut floor = 0.0f64;
+    for &i in serving {
+        if let Some(r) = sessions[i].ready_of(task) {
+            floor = floor.max(r);
+        }
+    }
+    for &i in serving {
+        sessions[i].raise_ready_floor(task, floor);
     }
 }
 
@@ -724,15 +997,43 @@ mod tests {
         assert_eq!(sharding.shard_of("alpha"), 1);
         // Out-of-range indices wrap instead of panicking.
         assert_eq!(sharding.shard_of("beta"), 1);
-        // Unlisted tasks fall back to the hash rule.
-        assert_eq!(
-            sharding.shard_of("gamma"),
-            crate::workload::shard_of_task("gamma", 2)
-        );
+        // Every unlisted task falls back to the hash rule, bit-for-bit.
+        for task in ["gamma", "delta", "tiny", "task00", "task17"] {
+            assert_eq!(
+                sharding.shard_of(task),
+                crate::workload::shard_of_task(task, 2),
+                "{task} must hash-fall-back"
+            );
+        }
         // Degenerate configs are clamped.
         assert_eq!(Sharding::hash(0).shards, 1);
         assert_eq!(Dispatch::batched(0).max_batch, 1);
         assert!(!Dispatch::none().is_batching());
+    }
+
+    #[test]
+    fn take_edge_cases_are_deterministic() {
+        // The coalescing rule's corners, pinned: `take` never returns 0
+        // and never exceeds the waiting count or (clamped) max_batch.
+        let d = Dispatch { max_batch: 4, min_queue: 2 };
+        assert_eq!(d.take(0, true), 1, "the head query always dispatches");
+        assert_eq!(d.take(0, false), 1);
+        assert_eq!(d.take(1, true), 1, "below min_queue: no coalescing");
+        assert_eq!(d.take(2, true), 2);
+        assert_eq!(d.take(7, true), 4, "capped at max_batch");
+        assert_eq!(d.take(7, false), 1, "batching off: always 1");
+        // A hand-built degenerate max_batch = 0 behaves like 1 — it
+        // must never dispatch an empty batch (the drive loops rely on
+        // every step consuming at least one query).
+        let degenerate = Dispatch { max_batch: 0, min_queue: 0 };
+        assert_eq!(degenerate.take(0, true), 1);
+        assert_eq!(degenerate.take(5, true), 1, "max_batch 0 ≡ max_batch 1");
+        assert_eq!(degenerate.take(5, false), 1);
+        // min_queue = 0 behaves like 1 (the head always qualifies).
+        let eager = Dispatch { max_batch: 3, min_queue: 0 };
+        assert_eq!(eager.take(1, true), 1);
+        assert_eq!(eager.take(2, true), 2);
+        assert_eq!(eager.take(9, true), 3);
     }
 
     #[test]
@@ -770,6 +1071,20 @@ mod tests {
         assert!(scaled.aggregate.total_dropped < single.total_dropped);
     }
 
+    /// The skewed explicit partition of the backlog studies: the three
+    /// flood tasks share shard 0, `gamma` idles on shard 1.
+    fn skewed_sharding() -> Sharding {
+        Sharding::explicit(
+            BTreeMap::from([
+                ("alpha".to_string(), 0),
+                ("beta".to_string(), 0),
+                ("delta".to_string(), 0),
+                ("gamma".to_string(), 1),
+            ]),
+            2,
+        )
+    }
+
     #[test]
     fn replan_beats_static_sharding_under_backlog() {
         // The acceptance property: under bursty overload with a skewed
@@ -778,23 +1093,10 @@ mod tests {
         // re-planning completes at least as many requests with fewer
         // SLO-shed drops than the PR 2 static sharded baseline — and
         // never reorders queries within a task.
-        let (zoo, lm, profiles) = fixtures::build(&[
-            ("alpha", 0.92, 8.0),
-            ("beta", 0.88, 12.0),
-            ("delta", 0.90, 10.0),
-            ("gamma", 0.85, 16.0),
-        ]);
+        let (zoo, lm, profiles) = fixtures::quartet();
         let tasks = fixtures::task_names(&zoo);
         let slo_map = fixtures::slos(&zoo, 0.5, 60.0);
-        let sharding = Sharding::explicit(
-            BTreeMap::from([
-                ("alpha".to_string(), 0),
-                ("beta".to_string(), 0),
-                ("delta".to_string(), 0),
-                ("gamma".to_string(), 1),
-            ]),
-            2,
-        );
+        let sharding = skewed_sharding();
         let sc = Scenario::bursty(&tasks, slo_map, 4.0, 100.0, 500.0, 4_000.0)
             .with_seed(11)
             .with_admission(Admission::Deadline { slack: 2.0 })
@@ -863,6 +1165,138 @@ mod tests {
                 assert!(w[1].finish_ms >= w[0].finish_ms - 1e-9, "{task}");
             }
         }
+    }
+
+    #[test]
+    fn stealing_warm_migration_beats_replan_under_backlog() {
+        // The telemetry-control-plane acceptance property, on the same
+        // backlog fixture as `replan_beats_static_sharding_under_backlog`:
+        // with query-level stealing + warm migration on top of
+        // re-planning, the steal+warm arm completes at least as many
+        // requests with fewer drops and *strictly fewer cold compiles*
+        // than the PR 3 replan baseline — and per-task FIFO order still
+        // holds across every steal and migration.
+        let (zoo, lm, profiles) = fixtures::quartet();
+        let tasks = fixtures::task_names(&zoo);
+        let slo_map = fixtures::slos(&zoo, 0.5, 60.0);
+        let sharding = skewed_sharding();
+        let sc = Scenario::bursty(&tasks, slo_map, 4.0, 100.0, 500.0, 4_000.0)
+            .with_seed(11)
+            .with_admission(Admission::Deadline { slack: 2.0 })
+            .with_dispatch(Dispatch::batched(4))
+            .with_sharding(sharding.clone());
+        let opts = ServeOpts { batch_hint: 4.0, ..Default::default() };
+
+        // PR 3 baseline: whole-task re-planning, cold adoption.
+        let replan_sc = sc.clone().with_planner(PlannerConfig {
+            max_migrations: 2,
+            ..PlannerConfig::replanning()
+        });
+        let replan =
+            ShardedServer::build(&zoo, &lm, &profiles, opts.clone(), sharding.clone())
+                .run(&replan_sc)
+                .unwrap();
+        assert!(replan.migrations >= 1, "the baseline must actually migrate");
+        assert_eq!(replan.steals, 0, "the replan-only path never steals");
+        assert!(
+            replan.aggregate.cold_compiles >= 1,
+            "a cold adoption must compile the migrant's blobs"
+        );
+        assert_eq!(replan.aggregate.warm_loads, 0, "nothing transfers cold");
+
+        // The full online stack: replan + steal + warm migration.
+        let warm_sc = sc.clone().with_planner(PlannerConfig {
+            max_migrations: 2,
+            ..PlannerConfig::online()
+        });
+        let warm = ShardedServer::build(&zoo, &lm, &profiles, opts, sharding)
+            .run(&warm_sc)
+            .unwrap();
+
+        assert!(warm.steals >= 1, "saturation must trigger query stealing");
+        assert!(
+            warm.aggregate.warm_loads >= 1,
+            "adoption must carry pool contents across shards"
+        );
+        assert!(
+            warm.aggregate.total_queries >= replan.aggregate.total_queries,
+            "steal+warm must complete at least as many: {} vs {}",
+            warm.aggregate.total_queries,
+            replan.aggregate.total_queries
+        );
+        assert!(
+            warm.aggregate.total_dropped < replan.aggregate.total_dropped,
+            "steal+warm must shed less: {} vs {}",
+            warm.aggregate.total_dropped,
+            replan.aggregate.total_dropped
+        );
+        assert!(
+            warm.aggregate.cold_compiles < replan.aggregate.cold_compiles,
+            "warm migration must strictly reduce cold compiles: {} vs {}",
+            warm.aggregate.cold_compiles,
+            replan.aggregate.cold_compiles
+        );
+        // Telemetry reports an arrival-rate estimate for served tasks.
+        assert!(
+            !warm.arrival_est_qps.is_empty(),
+            "the online drive must report telemetry estimates"
+        );
+        for (task, qps) in &warm.arrival_est_qps {
+            assert!(qps.is_finite() && *qps > 0.0, "{task}: {qps}");
+        }
+        // Per-task FIFO order holds across steals and migrations: in id
+        // (= per-task arrival) order, starts and completions stay
+        // monotone even when consecutive queries ran on different
+        // shards.
+        for task in ["alpha", "beta", "delta", "gamma"] {
+            let mut reqs: Vec<_> = warm
+                .aggregate
+                .requests
+                .iter()
+                .filter(|r| r.task == task && !r.dropped)
+                .collect();
+            reqs.sort_by_key(|r| r.id);
+            for w in reqs.windows(2) {
+                assert!(
+                    w[1].start_ms >= w[0].start_ms - 1e-9,
+                    "{task}: query {} started before query {}",
+                    w[1].id,
+                    w[0].id
+                );
+                assert!(w[1].finish_ms >= w[0].finish_ms - 1e-9, "{task}");
+            }
+        }
+    }
+
+    #[test]
+    fn steal_only_noop_without_saturation() {
+        // A steal-enabled run that never saturates must match the
+        // static path's outcome counts exactly — stealing is a backlog
+        // response, not a steady-state rebalancer.
+        let (zoo, lm, profiles) = fixtures::trio();
+        let tasks = fixtures::task_names(&zoo);
+        let light = Scenario::poisson(&tasks, fixtures::slos(&zoo, 0.5, 1e9), 2.0, 2_000.0)
+            .with_seed(3);
+        let build = || {
+            ShardedServer::build(
+                &zoo,
+                &lm,
+                &profiles,
+                ServeOpts::default(),
+                Sharding::hash(2),
+            )
+        };
+        let plain = build().run(&light).unwrap();
+        let stealing = build()
+            .run(&light.clone().with_planner(PlannerConfig::stealing()))
+            .unwrap();
+        assert_eq!(stealing.steals, 0, "no saturation ⇒ no stealing");
+        assert_eq!(stealing.migrations, 0, "steal-only path never migrates");
+        assert_eq!(stealing.aggregate.total_queries, plain.aggregate.total_queries);
+        assert_eq!(stealing.aggregate.total_dropped, plain.aggregate.total_dropped);
+        assert_eq!(stealing.aggregate.cold_compiles, 0);
+        // The online drive still reports telemetry estimates.
+        assert!(!stealing.arrival_est_qps.is_empty());
     }
 
     #[test]

@@ -144,14 +144,21 @@ impl Admission {
     }
 }
 
-/// Planner knobs: batch-aware Algorithm 1 and online re-planning.
+/// Planner knobs: batch-aware Algorithm 1, online re-planning, and the
+/// telemetry-driven steal/warm-migration paths.
 ///
 /// The default is the PR 2 regime — batch-1 planning, frozen at
-/// startup. `replan` turns on the `ShardedServer` replan path: when a
+/// startup. `replan` turns on the `ShardedServer` online path: when a
 /// shard's total backlog crosses `saturation_slack ×` the mean SLO
 /// latency bound of its tasks, `planner::Planner::replan` migrates the
-/// hottest still-queued task to the least-loaded shard (at most
-/// `max_migrations` per phase, per-task FIFO preserved).
+/// hottest still-queued task (Eq. 7 mass × observed arrival rate) to
+/// the least-loaded shard (at most `max_migrations` per phase, per-task
+/// FIFO preserved). `steal` adds query-granularity work stealing on the
+/// same saturation signal: an underloaded shard serves waiting batches
+/// of a saturated shard's tasks (warm shards preferred; per-task FIFO
+/// preserved by cross-shard ready floors). `warm_migrate` makes both
+/// adoption paths carry the migrant's resident pool entries to the
+/// target — a cross-shard load instead of a cold compile+load.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PlannerConfig {
     /// Plan at the dispatch batch operating point instead of batch 1
@@ -159,6 +166,11 @@ pub struct PlannerConfig {
     pub batch_aware: bool,
     /// Enable online re-planning (bounded shard migration).
     pub replan: bool,
+    /// Enable telemetry-driven query-granularity work stealing.
+    pub steal: bool,
+    /// Carry a migrant's pool contents across shards (skip the cold
+    /// compile) on migration and steal adoption.
+    pub warm_migrate: bool,
     /// Saturation threshold multiplier on the shard's mean SLO latency.
     pub saturation_slack: f64,
     /// Bounded re-sharding: at most this many migrations per phase.
@@ -170,6 +182,8 @@ impl Default for PlannerConfig {
         Self {
             batch_aware: false,
             replan: false,
+            steal: false,
+            warm_migrate: false,
             saturation_slack: 4.0,
             max_migrations: 1,
         }
@@ -180,6 +194,29 @@ impl PlannerConfig {
     /// Batch-aware planning + online re-planning, default thresholds.
     pub fn replanning() -> Self {
         Self { batch_aware: true, replan: true, ..Self::default() }
+    }
+
+    /// Batch-aware planning + work stealing, no whole-task re-planning.
+    pub fn stealing() -> Self {
+        Self { batch_aware: true, steal: true, ..Self::default() }
+    }
+
+    /// The full online stack: batch-aware planning, re-planning, work
+    /// stealing, and warm migration.
+    pub fn online() -> Self {
+        Self {
+            batch_aware: true,
+            replan: true,
+            steal: true,
+            warm_migrate: true,
+            ..Self::default()
+        }
+    }
+
+    /// Builder: enable warm migration on top of any base config.
+    pub fn with_warm_migration(mut self) -> Self {
+        self.warm_migrate = true;
+        self
     }
 }
 
@@ -519,6 +556,8 @@ impl Scenario {
                 Json::obj(vec![
                     ("batch_aware", Json::Bool(self.planner.batch_aware)),
                     ("replan", Json::Bool(self.planner.replan)),
+                    ("steal", Json::Bool(self.planner.steal)),
+                    ("warm_migrate", Json::Bool(self.planner.warm_migrate)),
                     (
                         "saturation_slack",
                         Json::Num(self.planner.saturation_slack),
@@ -719,6 +758,14 @@ impl Scenario {
                         None => d.replan,
                         Some(x) => x.as_bool().context("planner.replan")?,
                     },
+                    steal: match p.get("steal") {
+                        None => d.steal,
+                        Some(x) => x.as_bool().context("planner.steal")?,
+                    },
+                    warm_migrate: match p.get("warm_migrate") {
+                        None => d.warm_migrate,
+                        Some(x) => x.as_bool().context("planner.warm_migrate")?,
+                    },
                     saturation_slack: match p.get("saturation_slack") {
                         None => d.saturation_slack,
                         Some(x) => x.as_f64().context("planner.saturation_slack")?,
@@ -910,6 +957,8 @@ mod tests {
                 .with_planner(PlannerConfig {
                     batch_aware: true,
                     replan: true,
+                    steal: true,
+                    warm_migrate: true,
                     saturation_slack: 2.5,
                     max_migrations: 3,
                 }),
@@ -969,6 +1018,8 @@ mod tests {
         assert_eq!(sc.dispatch.max_batch, 1, "default must not batch");
         assert_eq!(sc.sharding.shards, 1, "default must not shard");
         assert!(!sc.planner.replan, "default must not replan");
+        assert!(!sc.planner.steal, "default must not steal");
+        assert!(!sc.planner.warm_migrate, "default must not warm-migrate");
     }
 
     #[test]

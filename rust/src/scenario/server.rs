@@ -41,7 +41,7 @@
 //! ```
 
 use std::cell::RefCell;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use anyhow::{bail, Result};
 
@@ -383,6 +383,8 @@ impl<'a> Server<'a> {
             states,
             orders_omega,
             requests: Vec::new(),
+            cold_compiles: 0,
+            warm_loads: 0,
         })
     }
 }
@@ -428,6 +430,11 @@ pub struct Session<'s, 'a> {
     states: BTreeMap<String, TaskState>,
     orders_omega: Vec<Vec<Processor>>,
     requests: Vec<RequestOutcome>,
+    /// Blobs compiled from scratch for a mid-session adoption
+    /// (migration/steal cold path).
+    cold_compiles: usize,
+    /// Blobs that arrived warm from another shard's pool at adoption.
+    warm_loads: usize,
 }
 
 impl<'s, 'a> Session<'s, 'a> {
@@ -779,20 +786,76 @@ impl<'s, 'a> Session<'s, 'a> {
         &self.prepared.order
     }
 
-    /// Adopt a migrated task mid-session (the replan path of
-    /// `super::dispatch`): serve `task` from here on with `selection`
+    /// Raise `task`'s per-task FIFO floor: its next query here cannot
+    /// issue before `ms`. The stealing drive calls this on every shard
+    /// serving a task after each of its batches completes anywhere, so
+    /// a task's queries stay FIFO-ordered across the shards serving it.
+    pub(crate) fn raise_ready_floor(&mut self, task: &str, ms: f64) {
+        if let Some(st) = self.states.get_mut(task) {
+            if ms > st.ready_ms {
+                st.ready_ms = ms;
+            }
+        }
+    }
+
+    /// Resident pool entries belonging to `task` (the warm-migration
+    /// payload when the task is *copied* — stealing, where the source
+    /// keeps serving it too).
+    pub(crate) fn pool_task_blobs(&self, task: &str) -> Vec<(BlobId, u64)> {
+        self.prepared.pool.task_blobs(task)
+    }
+
+    /// Remove and return `task`'s resident pool entries (the
+    /// warm-migration payload when the task *leaves* this shard — its
+    /// budget share frees up for the remaining tenants).
+    pub(crate) fn take_task_blobs(&mut self, task: &str) -> Vec<(BlobId, u64)> {
+        let blobs = self.prepared.pool.task_blobs(task);
+        for (id, _) in &blobs {
+            self.prepared.pool.evict(id);
+        }
+        blobs
+    }
+
+    /// Whether this session could serve `task` warm: it already serves
+    /// it (adopted earlier), or its pool holds the complete blob set of
+    /// at least one of the task's pure variants.
+    pub(crate) fn has_warm_variant(&self, task: &str) -> bool {
+        if self.states.contains_key(task) {
+            return true;
+        }
+        let Some(p) = self.server.coord.profiles.get(task) else {
+            return false;
+        };
+        (0..p.space.n_variants).any(|i| {
+            let comp = p.space.composition(p.space.pure_index(i));
+            comp.0.iter().enumerate().all(|(j, &vi)| {
+                self.prepared.pool.contains(&BlobId::new(task, vi, j))
+            })
+        })
+    }
+
+    /// Adopt a migrated (or stolen) task mid-session (the online path
+    /// of `super::dispatch`): serve `task` from here on with `selection`
     /// (the planner's re-selection; best-effort pure fallback when
     /// `None`), never starting before `ready_floor_ms` — the source
     /// shard's last completion for the task, which preserves per-task
-    /// FIFO order across the migration. Compile+load for non-resident
-    /// blobs of the adopted composition is charged to the task's first
-    /// query here, exactly like a planned cold start.
+    /// FIFO order across the migration.
+    ///
+    /// `warm` is the warm-migration payload: the source shard's
+    /// resident pool entries for the task. They are inserted into this
+    /// shard's pool — charged against its budget, evicting cold entries
+    /// via `make_room` if needed — and any blob of the adopted
+    /// composition that arrived warm is charged a cross-shard **load**
+    /// (never a compile) on the task's first query here. Blobs the
+    /// composition needs that did not arrive warm pay the full cold
+    /// compile+load, exactly like a planned cold start.
     pub(crate) fn adopt_task(
         &mut self,
         task: &str,
         slo: Slo,
         selection: Option<crate::optimizer::Selection>,
         ready_floor_ms: f64,
+        warm: Option<Vec<(BlobId, u64)>>,
     ) -> Result<()> {
         if self.states.contains_key(task) {
             bail!("session already serves task {task:?}");
@@ -830,21 +893,75 @@ impl<'s, 'a> Session<'s, 'a> {
             }
             _ => None,
         };
-        // Charge compile+load for whatever the adopted composition
-        // needs that is not resident in this shard's pool.
+        // The adopted composition's blob ids — known before any pool
+        // motion so the warm transfer can prioritize them.
+        let comp_ids: BTreeSet<BlobId> = sel
+            .map(|sel| {
+                p.space
+                    .composition(sel.stitched_index)
+                    .0
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &vi)| BlobId::new(task, vi, j))
+                    .collect()
+            })
+            .unwrap_or_default();
+        // Warm migration: the migrant's pool contents arrive with it,
+        // charged against this shard's budget. Composition blobs go
+        // first and may evict cold entries (`make_room`, then pinned
+        // active); the rest land opportunistically — only if they fit
+        // as-is, so extras can never evict what the first query needs.
+        // `warm_set` remembers blobs that *actually transferred* so the
+        // penalty loop below charges them a cross-shard load, not a
+        // compile; payload blobs already resident here (a warm thief)
+        // transfer nothing and stay free.
+        let mut warm_set: BTreeSet<BlobId> = BTreeSet::new();
+        if let Some(blobs) = warm {
+            let (needed, extra): (Vec<_>, Vec<_>) = blobs
+                .into_iter()
+                .partition(|(id, _)| comp_ids.contains(id));
+            for (id, bytes) in needed.into_iter().chain(extra) {
+                let is_needed = comp_ids.contains(&id);
+                if self.prepared.pool.contains(&id) {
+                    if is_needed {
+                        self.prepared.pool.set_active(&id, true);
+                    }
+                    continue;
+                }
+                if is_needed {
+                    self.prepared.pool.make_room(bytes);
+                }
+                if self.prepared.pool.load(id.clone(), bytes) {
+                    self.warm_loads += 1;
+                    if is_needed {
+                        self.prepared.pool.set_active(&id, true);
+                    }
+                    warm_set.insert(id);
+                }
+            }
+        }
+        // Charge the adopted composition's first-query penalty: a
+        // cross-shard load for warm-transferred blobs, full cold
+        // compile+load for everything else not resident.
         let mut penalty = 0.0;
         if let Some(sel) = &sel {
             let tz = coord.zoo.task(task)?;
             let comp = p.space.composition(sel.stitched_index);
             for (j, &vi) in comp.0.iter().enumerate() {
                 let id = BlobId::new(task, vi, j);
-                if !self.prepared.pool.touch(&id) {
-                    let bytes = tz.variants[vi].subgraphs[j].bytes;
-                    let proc = order[j.min(order.len() - 1)];
+                let bytes = tz.variants[vi].subgraphs[j].bytes;
+                let proc = order[j.min(order.len() - 1)];
+                if warm_set.contains(&id) {
+                    self.prepared.pool.touch(&id);
+                    penalty += coord.lm.load_ms(bytes, proc);
+                } else if !self.prepared.pool.touch(&id) {
                     penalty += coord.lm.compile_ms(bytes, proc)
                         + coord.lm.load_ms(bytes, proc);
+                    self.cold_compiles += 1;
                     self.prepared.pool.make_room(bytes);
-                    self.prepared.pool.load(id, bytes);
+                    if self.prepared.pool.load(id.clone(), bytes) {
+                        self.prepared.pool.set_active(&id, true);
+                    }
                 }
             }
         }
@@ -912,6 +1029,8 @@ impl<'s, 'a> Session<'s, 'a> {
             total_queries,
             total_dropped,
             total_batches,
+            cold_compiles: self.cold_compiles,
+            warm_loads: self.warm_loads,
             requests: self.requests,
         }
     }

@@ -141,6 +141,17 @@ impl MemoryPool {
         }
     }
 
+    /// Resident blobs belonging to `task`, with their sizes — the
+    /// source set of a warm migration (the migrant's pool contents
+    /// travel with it instead of recompiling on the target shard).
+    pub fn task_blobs(&self, task: &str) -> Vec<(BlobId, u64)> {
+        self.resident
+            .iter()
+            .filter(|(id, _)| id.task == task)
+            .map(|(id, &bytes)| (id.clone(), bytes))
+            .collect()
+    }
+
     pub fn set_active(&mut self, id: &BlobId, active: bool) {
         if self.resident.contains_key(id) {
             self.active.insert(id.clone(), active);
@@ -222,6 +233,21 @@ mod tests {
         pool.load(id(0, 0), 90);
         pool.set_active(&id(0, 0), true);
         assert!(!pool.make_room(50));
+    }
+
+    #[test]
+    fn task_blobs_filters_by_task() {
+        let mut pool = MemoryPool::new(1000);
+        pool.load(BlobId::new("a", 0, 0), 10);
+        pool.load(BlobId::new("a", 0, 1), 20);
+        pool.load(BlobId::new("b", 1, 0), 30);
+        let mut a = pool.task_blobs("a");
+        a.sort();
+        assert_eq!(
+            a,
+            vec![(BlobId::new("a", 0, 0), 10), (BlobId::new("a", 0, 1), 20)]
+        );
+        assert_eq!(pool.task_blobs("c"), Vec::new());
     }
 
     #[test]

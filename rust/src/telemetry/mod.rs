@@ -1,0 +1,431 @@
+//! Online telemetry control plane: per-task arrival-rate estimation,
+//! hotness tracking, and per-shard load accounting.
+//!
+//! Until this module, the planner was blind to the traffic it served:
+//! `PlanContext::arrival_hint` had to be supplied by hand, and the
+//! replan drive scored migration victims on memory hotness alone. The
+//! [`Telemetry`] handle closes that loop. It ingests
+//! [`RequestOutcome`] events as the server runs and maintains, per
+//! task:
+//!
+//! * an **EWMA arrival-rate** estimate — a bias-corrected
+//!   exponentially weighted moving average of inter-arrival gaps
+//!   (`m ← α·gap + (1−α)·m`, estimate `m / (1 − (1−α)ᵏ)` after `k`
+//!   gaps — the Adam-style correction makes early estimates behave
+//!   like a running mean instead of anchoring on the first gap),
+//!   reported as `1000/ĝ` qps. The stationary relative error on a
+//!   Poisson stream is `√(α/(2−α))` of the true gap (≈ 5 % at the
+//!   default α = 0.005), comfortably inside the 25 % band the backlog
+//!   study asserts;
+//! * a **sliding-window rate** — arrivals inside the trailing
+//!   [`TelemetryConfig::window_ms`] over the window length — the fast,
+//!   bursty-phase signal the EWMA deliberately smooths over;
+//! * **hotness** — the task's share of all observed arrivals, the
+//!   traffic weight that multiplies Eq. 7 memory hotness in budget
+//!   splits and victim scoring;
+//!
+//! and per shard: latest queueing backlog, cumulative busy time
+//! (occupancy), completion/drop counts, and stolen batches.
+//!
+//! Consumers:
+//!
+//! * the `ShardedServer` online drive reads shard backlog/warmness to
+//!   trigger query-level work stealing, and hands
+//!   [`Telemetry::arrival_hint`] to `Planner::replan` via
+//!   `ShardObservation::arrival_qps` on every saturation event, so
+//!   victim scoring and the migrant's budget share follow observed
+//!   traffic;
+//! * [`Telemetry::plan_context`] builds a [`PlanContext`] whose
+//!   `arrival_hint` is the live EWMA estimates — the front door for
+//!   re-running a *full* `Planner::plan` from observed traffic instead
+//!   of hand-supplied hints (startup plans have no traffic to observe
+//!   yet and stay unweighted).
+//!
+//! ```
+//! use sparseloom::telemetry::Telemetry;
+//! use sparseloom::util::Rng;
+//! use sparseloom::workload::poisson_stream;
+//!
+//! let mut t = Telemetry::new(2);
+//! let stream = poisson_stream(&["a".to_string()], 50.0, 60_000.0, &mut Rng::new(1));
+//! for q in &stream {
+//!     t.observe_arrival(&q.task, q.arrival_ms);
+//! }
+//! let est = t.rate_qps("a").unwrap();
+//! assert!((est - 50.0).abs() / 50.0 < 0.25, "EWMA within 25 %: {est}");
+//! ```
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::metrics::RequestOutcome;
+use crate::planner::PlanContext;
+use crate::workload::Slo;
+
+/// Estimator knobs. The defaults favor stability: the EWMA averages
+/// over an effective `2/α − 1 ≈ 399` recent gaps (the bias correction
+/// makes it a plain running mean until that many have been seen), and
+/// the window spans one second of virtual time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryConfig {
+    /// EWMA smoothing factor for inter-arrival gaps (0 < α ≤ 1).
+    pub ewma_alpha: f64,
+    /// Sliding-window length (virtual ms) for the windowed rate.
+    pub window_ms: f64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        Self { ewma_alpha: 0.005, window_ms: 1_000.0 }
+    }
+}
+
+/// Per-task online estimator state.
+#[derive(Clone, Debug, Default)]
+struct TaskStats {
+    arrivals: u64,
+    completed: u64,
+    dropped: u64,
+    /// Uncorrected EWMA accumulator of inter-arrival gaps (ms),
+    /// initialized at 0 — `rate_qps` applies the `1 − (1−α)ᵏ` bias
+    /// correction.
+    ewma_gap_ms: f64,
+    /// Gaps observed so far (k of the bias correction).
+    gaps: u64,
+    last_arrival_ms: Option<f64>,
+    /// Arrival timestamps inside the sliding window, oldest first.
+    window: VecDeque<f64>,
+}
+
+/// Per-shard load accounting.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    /// Latest observed total queueing backlog (ms).
+    pub backlog_ms: f64,
+    /// Cumulative booked service time (ms) — the occupancy numerator.
+    pub busy_ms: f64,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Batches this shard served for tasks homed on another shard.
+    pub stolen_batches: u64,
+}
+
+/// The telemetry handle: feed it [`RequestOutcome`]s (or raw arrivals)
+/// and read rate/hotness/load estimates back. All state is windowed or
+/// exponentially discounted — memory is O(tasks + shards + window).
+#[derive(Clone, Debug)]
+pub struct Telemetry {
+    cfg: TelemetryConfig,
+    tasks: BTreeMap<String, TaskStats>,
+    shards: Vec<ShardStats>,
+}
+
+impl Telemetry {
+    /// Telemetry over `n_shards` shards with default estimator knobs
+    /// (use 1 for a single server).
+    pub fn new(n_shards: usize) -> Telemetry {
+        Self::with_config(n_shards, TelemetryConfig::default())
+    }
+
+    pub fn with_config(n_shards: usize, cfg: TelemetryConfig) -> Telemetry {
+        Telemetry {
+            cfg,
+            tasks: BTreeMap::new(),
+            shards: vec![ShardStats::default(); n_shards.max(1)],
+        }
+    }
+
+    pub fn config(&self) -> &TelemetryConfig {
+        &self.cfg
+    }
+
+    /// Ingest one arrival. Arrivals of one task must be fed in
+    /// non-decreasing time order (per-task FIFO dispatch order, which
+    /// every drive loop already guarantees).
+    pub fn observe_arrival(&mut self, task: &str, arrival_ms: f64) {
+        let alpha = self.cfg.ewma_alpha.clamp(1e-6, 1.0);
+        let window = self.cfg.window_ms.max(1e-9);
+        let st = self.tasks.entry(task.to_string()).or_default();
+        st.arrivals += 1;
+        if let Some(last) = st.last_arrival_ms {
+            let gap = (arrival_ms - last).max(0.0);
+            st.ewma_gap_ms = alpha * gap + (1.0 - alpha) * st.ewma_gap_ms;
+            st.gaps += 1;
+        }
+        st.last_arrival_ms = Some(arrival_ms);
+        st.window.push_back(arrival_ms);
+        while st
+            .window
+            .front()
+            .map(|&t| t + window < arrival_ms)
+            .unwrap_or(false)
+        {
+            st.window.pop_front();
+        }
+    }
+
+    /// Ingest one request outcome served (or dropped) by `shard`:
+    /// updates the task's arrival estimators and the shard's
+    /// completion/occupancy counters.
+    pub fn observe_outcome(&mut self, shard: usize, ev: &RequestOutcome) {
+        self.observe_arrival(&ev.task, ev.arrival_ms);
+        if ev.dropped {
+            if let Some(st) = self.tasks.get_mut(&ev.task) {
+                st.dropped += 1;
+            }
+        } else if let Some(st) = self.tasks.get_mut(&ev.task) {
+            st.completed += 1;
+        }
+        if let Some(sh) = self.shards.get_mut(shard) {
+            if ev.dropped {
+                sh.dropped += 1;
+            } else {
+                sh.completed += 1;
+                sh.busy_ms += ev.service_ms;
+            }
+        }
+    }
+
+    /// Record the latest observed queueing backlog of `shard`.
+    pub fn observe_backlog(&mut self, shard: usize, backlog_ms: f64) {
+        if let Some(sh) = self.shards.get_mut(shard) {
+            sh.backlog_ms = backlog_ms.max(0.0);
+        }
+    }
+
+    /// Record one stolen batch served by `shard`.
+    pub fn note_steal(&mut self, shard: usize) {
+        if let Some(sh) = self.shards.get_mut(shard) {
+            sh.stolen_batches += 1;
+        }
+    }
+
+    /// EWMA arrival-rate estimate for `task` (qps), bias-corrected so
+    /// early values behave like a running mean of the gaps seen so
+    /// far. `None` before two arrivals (a single point has no gap), or
+    /// when every observed gap was ~0 (a degenerate burst has no
+    /// finite rate).
+    pub fn rate_qps(&self, task: &str) -> Option<f64> {
+        let st = self.tasks.get(task)?;
+        if st.gaps == 0 {
+            return None;
+        }
+        let alpha = self.cfg.ewma_alpha.clamp(1e-6, 1.0);
+        let correction = 1.0 - (1.0 - alpha).powf(st.gaps as f64);
+        let gap = st.ewma_gap_ms / correction.max(1e-12);
+        if gap <= 1e-9 {
+            return None;
+        }
+        Some(1_000.0 / gap)
+    }
+
+    /// Sliding-window arrival rate for `task` (qps) looking back
+    /// [`TelemetryConfig::window_ms`] from `now_ms` — the fast signal
+    /// for burst detection. `None` for unobserved tasks.
+    pub fn window_rate_qps(&self, task: &str, now_ms: f64) -> Option<f64> {
+        let st = self.tasks.get(task)?;
+        let w = self.cfg.window_ms.max(1e-9);
+        let n = st
+            .window
+            .iter()
+            .filter(|&&t| t + w >= now_ms && t <= now_ms)
+            .count();
+        Some(1_000.0 * n as f64 / w)
+    }
+
+    /// `task`'s share of all observed arrivals (0..1; 0.0 for
+    /// unobserved tasks) — the traffic-hotness weight.
+    pub fn hotness(&self, task: &str) -> f64 {
+        let total: u64 = self.tasks.values().map(|st| st.arrivals).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.tasks
+            .get(task)
+            .map(|st| st.arrivals as f64 / total as f64)
+            .unwrap_or(0.0)
+    }
+
+    /// Every task with an EWMA estimate, as the planner's arrival-hint
+    /// map (qps).
+    pub fn arrival_hint(&self) -> BTreeMap<String, f64> {
+        self.tasks
+            .keys()
+            .filter_map(|t| self.rate_qps(t).map(|q| (t.clone(), q)))
+            .collect()
+    }
+
+    /// Alias of [`Telemetry::arrival_hint`] for report surfaces.
+    pub fn rates(&self) -> BTreeMap<String, f64> {
+        self.arrival_hint()
+    }
+
+    /// Per-shard load accounting.
+    pub fn shards(&self) -> &[ShardStats] {
+        &self.shards
+    }
+
+    /// Fraction of `[0, now_ms]` shard `shard` spent booked (0.0 when
+    /// nothing elapsed). Can exceed 1.0 when batching overlaps stages.
+    pub fn occupancy(&self, shard: usize, now_ms: f64) -> f64 {
+        if now_ms <= 0.0 {
+            return 0.0;
+        }
+        self.shards
+            .get(shard)
+            .map(|sh| sh.busy_ms / now_ms)
+            .unwrap_or(0.0)
+    }
+
+    /// Total stolen batches across shards.
+    pub fn steals(&self) -> u64 {
+        self.shards.iter().map(|sh| sh.stolen_batches).sum()
+    }
+
+    /// Build a [`PlanContext`] whose `arrival_hint` is the live EWMA
+    /// estimates — the automatic replacement for hand-supplied hints.
+    /// Tasks without an estimate yet keep the planner's 1.0 default
+    /// weight.
+    pub fn plan_context(
+        &self,
+        slos: BTreeMap<String, Slo>,
+        universe: Vec<Slo>,
+        memory_budget: u64,
+    ) -> PlanContext {
+        PlanContext::new(slos, memory_budget)
+            .with_universe(universe)
+            .with_arrival_hint(self.arrival_hint())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::workload::poisson_stream;
+
+    fn feed_poisson(rate_qps: f64, horizon_ms: f64, seed: u64) -> Telemetry {
+        let mut t = Telemetry::new(2);
+        let tasks = vec!["a".to_string()];
+        for q in poisson_stream(&tasks, rate_qps, horizon_ms, &mut Rng::new(seed)) {
+            t.observe_arrival(&q.task, q.arrival_ms);
+        }
+        t
+    }
+
+    #[test]
+    fn ewma_rate_within_25pct_of_poisson_ground_truth() {
+        // The acceptance bound of the backlog study: on the Poisson
+        // fixture the EWMA estimate lands within 25 % of the true rate
+        // (stationary relative error √(α/(2−α)) ≈ 5 % at α = 0.005 —
+        // the 25 % band sits ~4σ out).
+        for (rate, seed) in [(50.0, 1u64), (20.0, 7)] {
+            let t = feed_poisson(rate, 60_000.0, seed);
+            let est = t.rate_qps("a").expect("estimate after thousands of arrivals");
+            let err = (est - rate).abs() / rate;
+            assert!(
+                err < 0.25,
+                "EWMA {est:.2} qps vs true {rate} qps (err {:.0} %)",
+                100.0 * err
+            );
+        }
+    }
+
+    #[test]
+    fn estimators_start_empty_and_need_two_arrivals() {
+        let mut t = Telemetry::new(1);
+        assert!(t.rate_qps("a").is_none());
+        assert!(t.window_rate_qps("a", 0.0).is_none());
+        assert_eq!(t.hotness("a"), 0.0);
+        t.observe_arrival("a", 10.0);
+        assert!(t.rate_qps("a").is_none(), "one arrival has no gap");
+        t.observe_arrival("a", 30.0);
+        // A single 20 ms gap ⇒ 50 qps exactly.
+        let est = t.rate_qps("a").unwrap();
+        assert!((est - 50.0).abs() < 1e-9, "{est}");
+        assert_eq!(t.arrival_hint().len(), 1);
+    }
+
+    #[test]
+    fn window_rate_tracks_the_recent_burst_only() {
+        let mut t = Telemetry::with_config(
+            1,
+            TelemetryConfig { ewma_alpha: 0.02, window_ms: 100.0 },
+        );
+        // A sparse prefix, then a 10-query burst in the last 100 ms.
+        for i in 0..5 {
+            t.observe_arrival("a", 1_000.0 * i as f64);
+        }
+        for i in 0..10 {
+            t.observe_arrival("a", 4_900.0 + 10.0 * i as f64);
+        }
+        let w = t.window_rate_qps("a", 5_000.0).unwrap();
+        // 10-11 arrivals inside [4900, 5000] ⇒ ~100 qps; the EWMA still
+        // remembers the sparse prefix and sits far lower.
+        assert!(w >= 90.0, "window rate must see the burst: {w}");
+        let ewma = t.rate_qps("a").unwrap();
+        assert!(ewma < w, "EWMA smooths over the burst: {ewma} vs {w}");
+    }
+
+    #[test]
+    fn hotness_is_arrival_share() {
+        let mut t = Telemetry::new(1);
+        for i in 0..30 {
+            t.observe_arrival("hot", i as f64);
+        }
+        for i in 0..10 {
+            t.observe_arrival("cold", i as f64);
+        }
+        assert!((t.hotness("hot") - 0.75).abs() < 1e-12);
+        assert!((t.hotness("cold") - 0.25).abs() < 1e-12);
+        assert_eq!(t.hotness("absent"), 0.0);
+    }
+
+    #[test]
+    fn outcomes_update_shard_accounting() {
+        use crate::metrics::RequestOutcome;
+        let mut t = Telemetry::new(2);
+        let ev = |id: u64, arrival: f64, dropped: bool| RequestOutcome {
+            id,
+            task: "a".into(),
+            arrival_ms: arrival,
+            start_ms: arrival,
+            finish_ms: arrival + 5.0,
+            service_ms: 5.0,
+            queueing_ms: 0.0,
+            dropped,
+            slo_ok: if dropped { None } else { Some(true) },
+        };
+        t.observe_outcome(0, &ev(0, 0.0, false));
+        t.observe_outcome(0, &ev(1, 10.0, false));
+        t.observe_outcome(1, &ev(2, 20.0, true));
+        t.observe_backlog(0, 42.0);
+        t.note_steal(1);
+        let sh = t.shards();
+        assert_eq!(sh[0].completed, 2);
+        assert!((sh[0].busy_ms - 10.0).abs() < 1e-12);
+        assert!((sh[0].backlog_ms - 42.0).abs() < 1e-12);
+        assert_eq!(sh[1].dropped, 1);
+        assert_eq!(sh[1].stolen_batches, 1);
+        assert_eq!(t.steals(), 1);
+        assert!(t.occupancy(0, 20.0) > 0.0);
+        assert_eq!(t.occupancy(0, 0.0), 0.0);
+        // Out-of-range shards are ignored, not a panic.
+        t.observe_outcome(9, &ev(3, 30.0, false));
+        t.observe_backlog(9, 1.0);
+        t.note_steal(9);
+    }
+
+    #[test]
+    fn plan_context_carries_live_estimates() {
+        use crate::workload::Slo;
+        let t = feed_poisson(40.0, 30_000.0, 3);
+        let slos = BTreeMap::from([(
+            "a".to_string(),
+            Slo { min_accuracy: 0.5, max_latency_ms: 100.0 },
+        )]);
+        let ctx = t.plan_context(slos, Vec::new(), 10_000);
+        let hint = ctx.arrival_hint.get("a").copied().expect("hint filled");
+        assert!((hint - 40.0).abs() / 40.0 < 0.25, "{hint}");
+        assert_eq!(ctx.memory_budget, 10_000);
+    }
+}

@@ -459,6 +459,38 @@ mod tests {
     }
 
     #[test]
+    fn shard_of_task_distribution_stays_balanced() {
+        // Distribution sanity over the fixture-zoo naming universe (the
+        // synthetic task names plus a numbered family, as the backlog
+        // benches generate): for 2–4 shards, no shard may receive more
+        // than 2× the mean load. FNV-1a is deterministic, so this pins
+        // the actual assignment quality, not a statistical hope.
+        let mut names: Vec<String> = ["tiny", "alpha", "beta", "gamma", "delta"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        for i in 0..27 {
+            names.push(format!("task{i:02}"));
+        }
+        for shards in 2..=4usize {
+            let mut counts = vec![0usize; shards];
+            for name in &names {
+                counts[shard_of_task(name, shards)] += 1;
+            }
+            let mean = names.len() as f64 / shards as f64;
+            for (shard, &c) in counts.iter().enumerate() {
+                assert!(
+                    (c as f64) <= 2.0 * mean,
+                    "shard {shard} got {c} of {} tasks (mean {mean:.1})",
+                    names.len()
+                );
+            }
+            // Nothing is lost either: counts cover every task.
+            assert_eq!(counts.iter().sum::<usize>(), names.len());
+        }
+    }
+
+    #[test]
     fn placement_orders_desktop_and_orin() {
         let d = placement_orders(&Platform::desktop(), 3);
         assert_eq!(d.len(), 6); // 3! non-overlapping orders

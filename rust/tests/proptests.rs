@@ -424,6 +424,8 @@ fn arbitrary_scenario(seed: u64) -> Scenario {
     sc = sc.with_planner(PlannerConfig {
         batch_aware: rng.f64() < 0.5,
         replan: rng.f64() < 0.5,
+        steal: rng.f64() < 0.5,
+        warm_migrate: rng.f64() < 0.5,
         saturation_slack: 1.0 + 4.0 * rng.f64(),
         max_migrations: rng.below(4),
     });

@@ -11,6 +11,13 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Bench targets are plain main()s (harness = false): running them under
+# `cargo test` compile-checks every bench and executes it once — each
+# falls back to the synthetic fixture zoo (or exits cleanly) when
+# artifacts/ is absent, so this stays fast and hermetic.
+echo "== cargo test -q --benches =="
+cargo test -q --benches
+
 # Rustdoc must stay warning-free (broken intra-doc links, bad code
 # fences); doc-examples themselves run as doc-tests under `cargo test`.
 echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
