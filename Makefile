@@ -1,18 +1,25 @@
 # Build-path entry points. The only Python step is the artifact export;
-# everything else is `cargo` (see scripts/ci.sh for the tier-1 gate).
+# everything else is `cargo` (see scripts/ci.sh for the tiered gates).
 
-.PHONY: artifacts ci bench backlog
+.PHONY: artifacts ci check bench backlog
 
 # Export the L1/L2 model-zoo artifacts the Rust serving system consumes
 # (manifest, HLO text, weight blobs, probe/eval tensors, oracles).
 artifacts:
 	cd python/compile && python3 aot.py --out ../../artifacts
 
+# Both CI tiers: tier 1 (build + test) then tier 2 (benches, rustdoc,
+# clippy, fmt, and the hermetic CLI smoke stage).
 ci:
 	scripts/ci.sh
 
+# Tier 1 only — the fast inner-loop gate (build + test).
+check:
+	CI_TIER=1 scripts/ci.sh
+
 # The `exp backlog` study with all arms — static / replan / steal /
-# steal+warm — plus the estimated-vs-true arrival-rate telemetry table.
+# steal+warm / predictive — plus the estimated-vs-true arrival-rate
+# telemetry table and the per-task SLO forecast.
 # Artifact-free: falls back to the synthetic fixture zoo.
 backlog:
 	cargo bench --bench dispatch_backlog

@@ -20,12 +20,12 @@ fn main() -> anyhow::Result<()> {
             let lm = ctx.lm(platform.clone());
             let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
             let zoo = ctx.zoo_for(&platform);
-            println!("{}", endtoend::backlog_comparison(zoo, &lm, &profiles)?);
+            println!("{}", endtoend::backlog_comparison(zoo, &lm, &profiles, 6_000.0)?);
         }
         Err(_) => {
             eprintln!("(no artifacts/ — running on the synthetic fixture zoo)\n");
             let (zoo, lm, profiles) = fixtures::trio();
-            println!("{}", endtoend::backlog_comparison(&zoo, &lm, &profiles)?);
+            println!("{}", endtoend::backlog_comparison(&zoo, &lm, &profiles, 6_000.0)?);
         }
     }
     Ok(())

@@ -187,24 +187,35 @@ pub fn fig16(ctx: &Ctx) -> Result<String> {
 }
 
 /// Backlog study (beyond the paper): bursty overload served by the
-/// single-server unbatched baseline vs batched and/or sharded dispatch.
+/// single-server unbatched baseline vs batched and/or sharded dispatch,
+/// at the default 6 s stream horizon (`exp all` / `exp backlog`).
 pub fn backlog(ctx: &Ctx) -> Result<String> {
+    backlog_with(ctx, 6_000.0)
+}
+
+/// [`backlog`] at an explicit stream horizon — `exp backlog
+/// --horizon-ms N` routes here on the artifacts path too, so the flag
+/// is never silently ignored.
+pub fn backlog_with(ctx: &Ctx, horizon_ms: f64) -> Result<String> {
     let platform = Platform::desktop();
     let lm = ctx.lm(platform.clone());
     let zoo = ctx.zoo_for(&platform);
     let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
-    backlog_comparison(zoo, &lm, &profiles)
+    backlog_comparison(zoo, &lm, &profiles, horizon_ms)
 }
 
-/// Core of the backlog study, parameterized over the zoo so
+/// Core of the backlog study, parameterized over the zoo (so
 /// `benches/dispatch_backlog.rs` can run it on the synthetic fixture
-/// when `artifacts/` is absent. Rates are derived from the measured
-/// per-task latency ranges: bursts demand ~4× the pipeline's capacity,
-/// the base load ~25 %.
+/// when `artifacts/` is absent) and the stream horizon (so the CI
+/// smoke stage can run a tiny hermetic instance via
+/// `exp backlog --fixture --horizon-ms ...`). Rates are derived from
+/// the measured per-task latency ranges: bursts demand ~4× the
+/// pipeline's capacity, the base load ~25 %.
 pub fn backlog_comparison(
     zoo: &Zoo,
     lm: &LatencyModel,
     profiles: &BTreeMap<String, TaskProfile>,
+    horizon_ms: f64,
 ) -> Result<String> {
     let tasks: Vec<String> = profiles.keys().cloned().collect();
     let mut slos: BTreeMap<String, Slo> = BTreeMap::new();
@@ -222,7 +233,7 @@ pub fn backlog_comparison(
     let base_qps = 250.0 / mean_lat / per_task;
     let burst_qps = 4_000.0 / mean_lat / per_task;
 
-    let base = Scenario::bursty(&tasks, slos, base_qps, burst_qps, 500.0, 6_000.0)
+    let base = Scenario::bursty(&tasks, slos, base_qps, burst_qps, 500.0, horizon_ms.max(500.0))
         .with_name("backlog")
         .with_seed(11)
         .with_universe(universe)
@@ -269,12 +280,25 @@ pub fn backlog_comparison(
             deadline,
             PlannerConfig::online(),
         ),
+        // The predictive arm: forecast-driven admission (shed on
+        // projected queueing, before deadline slack is exhausted) plus
+        // forecast-triggered replan/steal/warm-migration.
+        (
+            "2 shards, batch<=4, predictive",
+            2,
+            4,
+            Admission::Predictive { horizon_ms: 100.0, headroom: 2.0 },
+            PlannerConfig::predictive(),
+        ),
     ];
     let mut rows = Vec::new();
     let mut baseline: Option<RunReport> = None;
     let mut static_sharded: Option<RunReport> = None;
+    let mut fair_arm: Option<RunReport> = None;
     let mut replanned: Option<RunReport> = None;
     let mut steal_warm: Option<RunReport> = None;
+    let mut predictive: Option<RunReport> = None;
+    let mut predictive_forecast: BTreeMap<String, f64> = BTreeMap::new();
     let mut steal_warm_rates: BTreeMap<String, f64> = BTreeMap::new();
     for (label, shards, max_batch, admission, planner) in configs {
         let opts = if planner.batch_aware {
@@ -302,6 +326,7 @@ pub fn backlog_comparison(
             label.to_string(),
             format!("{}", report.total_queries),
             format!("{}", report.total_dropped),
+            format!("{}", report.slo_misses()),
             format!("{:.1}", 100.0 * report.violation_rate()),
             format!("{:.1}", report.throughput_qps()),
             format!("{:.2}", report.mean_batch_size()),
@@ -318,22 +343,29 @@ pub fn backlog_comparison(
         if label == "2 shards, batch<=4" {
             static_sharded = Some(report.clone());
         }
+        if label == "2 shards, batch<=4, fair" {
+            fair_arm = Some(report.clone());
+        }
         if label == "2 shards, batch<=4, replan" {
             replanned = Some(report.clone());
         }
         if label == "2 shards, batch<=4, steal+warm" {
-            steal_warm = Some(report);
+            steal_warm = Some(report.clone());
             steal_warm_rates = full.arrival_est_qps.clone();
+        }
+        if label == "2 shards, batch<=4, predictive" {
+            predictive_forecast = report.slo_forecast.clone();
+            predictive = Some(report);
         }
     }
     let mut out = String::from(
         "Backlog — bursty overload: single server vs batched/sharded/replanned/\
-         stolen dispatch\n\n",
+         stolen/predictive dispatch\n\n",
     );
     out.push_str(&render_table(
         &[
-            "config", "done", "dropped", "viol%", "qps", "batch", "fairness",
-            "mig", "steal", "coldc", "util", "makespan",
+            "config", "done", "dropped", "miss", "viol%", "qps", "batch",
+            "fairness", "mig", "steal", "coldc", "util", "makespan",
         ],
         &rows,
     ));
@@ -372,6 +404,34 @@ pub fn backlog_comparison(
         w.cold_compiles,
         r.cold_compiles,
     ));
+    let (f, p) = (fair_arm.unwrap(), predictive.unwrap());
+    out.push_str(&format!(
+        "predictive vs reactive fair: completed {} vs {} ({:+}), \
+         dropped {} vs {} ({:+}), per-request SLO misses {} vs {}\n",
+        p.total_queries,
+        f.total_queries,
+        p.total_queries as i64 - f.total_queries as i64,
+        p.total_dropped,
+        f.total_dropped,
+        p.total_dropped as i64 - f.total_dropped as i64,
+        p.slo_misses(),
+        f.slo_misses(),
+    ));
+
+    // The predictive arm's per-task SLO forecast: projected violation
+    // rate over the next horizon (observed miss share × forecast load).
+    let mut forecast_rows = Vec::new();
+    for task in &tasks {
+        forecast_rows.push(vec![
+            task.clone(),
+            predictive_forecast
+                .get(task)
+                .map(|p| format!("{:.0}%", 100.0 * p))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    out.push_str("\nper-task SLO violation forecast (predictive arm)\n");
+    out.push_str(&render_table(&["task", "forecast"], &forecast_rows));
 
     // Telemetry quality: estimated vs true mean arrival rate per task
     // (a square-wave bursty stream spends half of each period at each

@@ -16,6 +16,7 @@ use sparseloom::baselines::Policy;
 use sparseloom::cli::{App, Command};
 use sparseloom::coordinator::ServeOpts;
 use sparseloom::experiments::{self, Ctx};
+use sparseloom::fixtures;
 use sparseloom::metrics::RunReport;
 use sparseloom::profiler::ProfilerConfig;
 use sparseloom::runtime::Runtime;
@@ -44,7 +45,7 @@ fn app() -> App {
                 .opt("horizon-ms", "open loop: stream horizon", Some("5000"))
                 .opt("burst-qps", "bursty: second-half-of-period rate", Some("80"))
                 .opt("period-ms", "bursty: rate square-wave period", Some("1000"))
-                .opt("admission", "always | queue:<N> | deadline:<slack> | fair[:<slack>]", Some("always"))
+                .opt("admission", "always | queue:<N> | deadline:<slack> | fair[:<slack>] | predictive[:<headroom>[:<horizon-ms>]]", Some("always"))
                 .opt("shards", "partition tasks across N servers (task-name hash)", Some("1"))
                 .opt("max-batch", "coalesce up to K same-task queries under backlog", Some("1"))
                 .opt("min-queue", "waiting queries before batching kicks in", Some("2"))
@@ -52,14 +53,18 @@ fn app() -> App {
                 .switch("replan", "online re-planning: migrate the hottest task off a saturated shard")
                 .switch("steal", "telemetry-driven work stealing: an underloaded shard serves a saturated shard's waiting batches")
                 .switch("warm-migrate", "carry a migrant's pool contents to the target shard (cross-shard load instead of cold compile); implies --replan unless --steal is set")
+                .switch("predictive", "trigger replan/steal on forecast (not observed) shard backlog and feed projected arrival rates to the planner; implies --replan unless --steal is set")
                 .opt("seed", "arrival-stream seed", Some("0"))
                 .opt("slo", "grid index 0..24 of the SLO config", Some("12"))
                 .opt("budget", "memory budget fraction of full preload", Some("1.0"))
                 .switch("real", "execute real PJRT chains during serving")
-                .switch("synthetic", "flops-derived base latencies (no PJRT)"),
+                .switch("synthetic", "flops-derived base latencies (no PJRT)")
+                .switch("fixture", "serve the synthetic in-memory fixture zoo (hermetic; needs no artifacts/)"),
             Command::new("exp", "regenerate a paper table/figure")
                 .opt("artifacts", "artifact directory", Some("artifacts"))
-                .switch("synthetic", "flops-derived base latencies (no PJRT)"),
+                .opt("horizon-ms", "backlog study: bursty stream horizon", Some("6000"))
+                .switch("synthetic", "flops-derived base latencies (no PJRT)")
+                .switch("fixture", "run `exp backlog` on the in-memory fixture zoo (hermetic)"),
             Command::new("profile", "build the estimator profile and report quality")
                 .opt("artifacts", "artifact directory", Some("artifacts"))
                 .opt("platform", "desktop|laptop|orin", Some("desktop"))
@@ -133,20 +138,52 @@ fn parse_admission(spec: &str) -> Result<Admission> {
             .map_err(|_| anyhow::anyhow!("fair:<slack> expects a number, got {s:?}"))?;
         return Ok(Admission::Fair { slack, weights: BTreeMap::new() });
     }
+    if spec.eq_ignore_ascii_case("predictive") {
+        return Ok(Admission::Predictive { horizon_ms: 250.0, headroom: 1.0 });
+    }
+    if let Some(rest) = spec.strip_prefix("predictive:") {
+        let (head, horizon) = match rest.split_once(':') {
+            Some((h, hz)) => (h, Some(hz)),
+            None => (rest, None),
+        };
+        let headroom: f64 = head.parse().map_err(|_| {
+            anyhow::anyhow!("predictive:<headroom> expects a number, got {head:?}")
+        })?;
+        let horizon_ms: f64 = match horizon {
+            None => 250.0,
+            Some(hz) => hz.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "predictive:<headroom>:<horizon-ms> expects a number, got {hz:?}"
+                )
+            })?,
+        };
+        return Ok(Admission::Predictive { horizon_ms, headroom });
+    }
     bail!(
         "unknown admission spec {spec:?} \
-         (want always | queue:<N> | deadline:<slack> | fair[:<slack>])"
+         (want always | queue:<N> | deadline:<slack> | fair[:<slack>] \
+          | predictive[:<headroom>[:<horizon-ms>]])"
     )
 }
 
 fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
-    let ctx = Ctx::load(&args.get_or("artifacts", "artifacts"), args.switch("synthetic"))?;
     let platform = Platform::by_name(&args.get_or("platform", "desktop"))?;
     let policy = Policy::parse(&args.get_or("policy", "SparseLoom"))
         .ok_or_else(|| anyhow::anyhow!("unknown policy"))?;
-    let lm = ctx.lm(platform.clone());
-    let zoo = ctx.zoo_for(&platform);
-    let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
+    // `--fixture` serves the synthetic in-memory zoo — fully hermetic
+    // (the CI smoke stage relies on this); otherwise artifacts load.
+    let ctx;
+    let fixture_zoo;
+    let (zoo, lm, profiles): (&Zoo, _, _) = if args.switch("fixture") {
+        let (z, lm, profiles) = fixtures::quartet();
+        fixture_zoo = z;
+        (&fixture_zoo, lm, profiles)
+    } else {
+        ctx = Ctx::load(&args.get_or("artifacts", "artifacts"), args.switch("synthetic"))?;
+        let lm = ctx.lm(platform.clone());
+        let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
+        (ctx.zoo_for(&platform), lm, profiles)
+    };
 
     let tasks: Vec<String> = profiles.keys().cloned().collect();
 
@@ -213,6 +250,14 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
                         pc.batch_aware = true;
                     }
                 }
+                if args.switch("predictive") {
+                    pc.predictive = true;
+                    // Forecast triggers only act on the online paths.
+                    if !pc.replan && !pc.steal {
+                        pc.replan = true;
+                        pc.batch_aware = true;
+                    }
+                }
                 pc
             })
             .with_seed(args.get_usize("seed")?.unwrap_or(0) as u64)
@@ -225,7 +270,7 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
     // The header reads from the *scenario* (not the raw flags), so a
     // saved scenario file and the printed report always agree.
     println!(
-        "scenario: {} | policy: {} | platform: {}{} | admission: {} | shards: {} | max-batch: {} | replan: {} | steal: {} | warm: {}",
+        "scenario: {} | policy: {} | platform: {}{} | admission: {} | shards: {} | max-batch: {} | replan: {} | steal: {} | warm: {} | predictive: {}",
         scenario.name,
         policy.name(),
         lm.platform.name,
@@ -236,6 +281,7 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         scenario.planner.replan,
         scenario.planner.steal,
         scenario.planner.warm_migrate,
+        scenario.planner.predictive,
     );
 
     // --- build the server(s) and run ------------------------------------
@@ -295,6 +341,7 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
             println!("  telemetry est rate (qps): {}", est.join(" | "));
         }
         print_outcomes(&report.aggregate);
+        print_forecast(&report.aggregate);
         print_summary(&report.aggregate);
     } else {
         let rt;
@@ -306,9 +353,24 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         let server = builder.build();
         let report = server.run(&scenario)?;
         print_outcomes(&report);
+        print_forecast(&report);
         print_summary(&report);
     }
     Ok(())
+}
+
+/// Per-task projected SLO violation rates (worst shard fragment), when
+/// the run produced any.
+fn print_forecast(report: &RunReport) {
+    if report.slo_forecast.is_empty() {
+        return;
+    }
+    let parts: Vec<String> = report
+        .slo_forecast
+        .iter()
+        .map(|(task, p)| format!("{task} {:.0}%", 100.0 * p))
+        .collect();
+    println!("  slo forecast (next horizon): {}", parts.join(" | "));
 }
 
 fn print_outcomes(report: &RunReport) {
@@ -346,6 +408,22 @@ fn print_summary(report: &RunReport) {
 }
 
 fn cmd_exp(args: &sparseloom::cli::Args) -> Result<()> {
+    // Hermetic path first: `exp backlog --fixture` runs the backlog
+    // study on the in-memory fixture zoo, before any artifact load —
+    // the CI smoke stage exercises exactly this.
+    if args.switch("fixture") {
+        if !args.positional.iter().all(|p| p == "backlog") || args.positional.is_empty()
+        {
+            bail!("--fixture supports only `exp backlog` (got {:?})", args.positional);
+        }
+        let horizon_ms = args.get_f64("horizon-ms")?.unwrap_or(6_000.0);
+        let (zoo, lm, profiles) = fixtures::quartet();
+        let out = experiments::endtoend::backlog_comparison(
+            &zoo, &lm, &profiles, horizon_ms,
+        )?;
+        println!("{out}");
+        return Ok(());
+    }
     let ctx = Ctx::load(&args.get_or("artifacts", "artifacts"), args.switch("synthetic"))?;
     let ids: Vec<String> = if args.positional.is_empty()
         || args.positional.iter().any(|p| p == "all")
@@ -354,8 +432,14 @@ fn cmd_exp(args: &sparseloom::cli::Args) -> Result<()> {
     } else {
         args.positional.clone()
     };
+    let horizon_ms = args.get_f64("horizon-ms")?.unwrap_or(6_000.0);
     for id in &ids {
-        let out = experiments::run(&ctx, id)?;
+        // The backlog study honors --horizon-ms on this path too.
+        let out = if id == "backlog" {
+            experiments::endtoend::backlog_with(&ctx, horizon_ms)?
+        } else {
+            experiments::run(&ctx, id)?
+        };
         println!("{out}");
         println!("{}", "=".repeat(78));
     }

@@ -89,6 +89,12 @@ pub struct RunReport {
     /// Blobs that arrived warm from another shard's pool (load, never
     /// compile) during adoption.
     pub warm_loads: usize,
+    /// Per-task projected SLO violation rate over the forecast horizon
+    /// (observed violation share × forecast load factor, in [0, 1]) —
+    /// filled by `Session::finish`; empty for legacy aggregate-only
+    /// callers. Merges take the per-task maximum (a task served by
+    /// several shards is as at-risk as its worst fragment).
+    pub slo_forecast: BTreeMap<String, f64>,
     /// Per-request event log (arrival/queueing/placement/completion),
     /// in submission order. Empty for legacy aggregate-only callers.
     pub requests: Vec<RequestOutcome>,
@@ -110,6 +116,17 @@ impl RunReport {
             return 0.0;
         }
         self.total_queries as f64 / (self.makespan_ms / 1000.0)
+    }
+
+    /// Completed requests whose per-request latency verdict failed
+    /// (`slo_ok == Some(false)`) — the per-request violation count the
+    /// predictive-admission study compares across arms. Dropped
+    /// requests carry no verdict and are not misses.
+    pub fn slo_misses(&self) -> usize {
+        self.requests
+            .iter()
+            .filter(|r| r.slo_ok == Some(false))
+            .count()
     }
 
     /// Mean coalesced batch size (1.0 when batching never kicked in;
@@ -182,6 +199,12 @@ impl RunReport {
         self.total_batches += other.total_batches;
         self.cold_compiles += other.cold_compiles;
         self.warm_loads += other.warm_loads;
+        for (task, p) in other.slo_forecast {
+            let e = self.slo_forecast.entry(task).or_insert(0.0);
+            if p > *e {
+                *e = p;
+            }
+        }
         self.outcomes.extend(other.outcomes);
         self.requests.extend(other.requests);
     }
@@ -219,6 +242,13 @@ impl ShardedReport {
     /// Violation rate of the aggregate report.
     pub fn violation_rate(&self) -> f64 {
         self.aggregate.violation_rate()
+    }
+
+    /// Cross-shard SLO forecast: per task, the worst projected
+    /// violation rate over the shards that served it (the aggregate's
+    /// max-merged map).
+    pub fn slo_forecast(&self) -> &BTreeMap<String, f64> {
+        &self.aggregate.slo_forecast
     }
 
     /// Combined throughput: total queries over the slowest shard's
@@ -461,6 +491,51 @@ mod tests {
         let f = starved.fairness_index();
         assert!(f.is_finite(), "all-dropped must not divide 0/0");
         assert_eq!(f, 1.0);
+    }
+
+    #[test]
+    fn slo_misses_counts_failed_verdicts_only() {
+        let req = |id: u64, slo_ok: Option<bool>, dropped: bool| RequestOutcome {
+            id,
+            task: "t".into(),
+            arrival_ms: 0.0,
+            start_ms: 0.0,
+            finish_ms: 1.0,
+            service_ms: 1.0,
+            queueing_ms: 0.0,
+            dropped,
+            slo_ok,
+        };
+        let r = RunReport {
+            requests: vec![
+                req(0, Some(true), false),
+                req(1, Some(false), false),
+                req(2, Some(false), false),
+                req(3, None, true), // dropped: no verdict, not a miss
+            ],
+            ..Default::default()
+        };
+        assert_eq!(r.slo_misses(), 2);
+        assert_eq!(RunReport::default().slo_misses(), 0);
+    }
+
+    #[test]
+    fn merge_takes_worst_slo_forecast_per_task() {
+        let part = |entries: Vec<(&str, f64)>| RunReport {
+            slo_forecast: entries
+                .into_iter()
+                .map(|(t, p)| (t.to_string(), p))
+                .collect(),
+            ..Default::default()
+        };
+        let mut a = part(vec![("x", 0.2), ("y", 0.9)]);
+        a.merge_parallel(part(vec![("x", 0.6), ("z", 0.1)]));
+        assert_eq!(a.slo_forecast["x"], 0.6, "worst fragment wins");
+        assert_eq!(a.slo_forecast["y"], 0.9);
+        assert_eq!(a.slo_forecast["z"], 0.1);
+        // ShardedReport exposes the aggregate map.
+        let sr = ShardedReport { aggregate: a.clone(), ..Default::default() };
+        assert_eq!(sr.slo_forecast()["x"], 0.6);
     }
 
     #[test]

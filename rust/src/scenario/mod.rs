@@ -128,6 +128,27 @@ pub enum Admission {
         /// an empty map means an equal split.
         weights: BTreeMap<String, f64>,
     },
+    /// Predictive admission (forecast-driven shedding). Every policy
+    /// above is *reactive*: it sheds only once the observed backlog has
+    /// already blown the budget. `Predictive` sheds on the *projected*
+    /// queueing delay instead: each task fits a Holt trend over its own
+    /// backlog series (`telemetry::forecast::TrendTracker`), and a
+    /// query is dropped when `backlog + max(0, trend) × horizon_ms`
+    /// exceeds `headroom × max_latency_ms` — during a building burst
+    /// the growth term is positive, so shedding starts *before* the
+    /// backlog itself crosses the budget. On a flat or draining queue
+    /// the growth term is zero and `Predictive{headroom: s}` admits
+    /// exactly like `Deadline{slack: s}`; a query facing an empty queue
+    /// is always admitted (shedding it could not relieve anything, and
+    /// closed loops stay lossless). See DESIGN.md §Forecasting.
+    Predictive {
+        /// Forecast horizon (virtual ms) the backlog trend is
+        /// projected over.
+        horizon_ms: f64,
+        /// Budget multiplier on the task's SLO latency bound (the
+        /// predictive counterpart of the deadline `slack`).
+        headroom: f64,
+    },
 }
 
 impl Admission {
@@ -140,6 +161,9 @@ impl Admission {
             Admission::QueueCap { max_queued } => format!("queue_cap:{max_queued}"),
             Admission::Deadline { slack } => format!("deadline:{slack}"),
             Admission::Fair { slack, .. } => format!("fair:{slack}"),
+            Admission::Predictive { horizon_ms, headroom } => {
+                format!("predictive:{headroom}:{horizon_ms}")
+            }
         }
     }
 }
@@ -159,6 +183,14 @@ impl Admission {
 /// preserved by cross-shard ready floors). `warm_migrate` makes both
 /// adoption paths carry the migrant's resident pool entries to the
 /// target — a cross-shard load instead of a cold compile+load.
+/// `predictive` switches both online triggers (steal and replan) from
+/// the observed shard backlog to `max(observed, forecast)` — the
+/// Holt-projected backlog `horizon_ms` ahead — so migration and
+/// stealing start while the burst is still building (the observed
+/// crossing is the degenerate horizon-0 forecast, so a predictive run
+/// never reacts *later* than a reactive one); the replan
+/// `ShardObservation::arrival_qps` then carries projected rather than
+/// trailing rates.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PlannerConfig {
     /// Plan at the dispatch batch operating point instead of batch 1
@@ -171,6 +203,12 @@ pub struct PlannerConfig {
     /// Carry a migrant's pool contents across shards (skip the cold
     /// compile) on migration and steal adoption.
     pub warm_migrate: bool,
+    /// Trigger the online paths on *forecast* shard backlog (never
+    /// later than the observed trigger) and feed projected arrival
+    /// rates into replanning.
+    pub predictive: bool,
+    /// Forecast horizon (virtual ms) for the predictive triggers.
+    pub horizon_ms: f64,
     /// Saturation threshold multiplier on the shard's mean SLO latency.
     pub saturation_slack: f64,
     /// Bounded re-sharding: at most this many migrations per phase.
@@ -184,6 +222,8 @@ impl Default for PlannerConfig {
             replan: false,
             steal: false,
             warm_migrate: false,
+            predictive: false,
+            horizon_ms: 250.0,
             saturation_slack: 4.0,
             max_migrations: 1,
         }
@@ -217,6 +257,12 @@ impl PlannerConfig {
     pub fn with_warm_migration(mut self) -> Self {
         self.warm_migrate = true;
         self
+    }
+
+    /// The predictive stack: the full online config with both triggers
+    /// switched to forecast backlog and projected arrival hints.
+    pub fn predictive() -> Self {
+        Self { predictive: true, ..Self::online() }
     }
 }
 
@@ -511,6 +557,11 @@ impl Scenario {
                     ),
                 ),
             ]),
+            Admission::Predictive { horizon_ms, headroom } => Json::obj(vec![
+                ("kind", Json::Str("predictive".into())),
+                ("horizon_ms", Json::Num(*horizon_ms)),
+                ("headroom", Json::Num(*headroom)),
+            ]),
         };
         let assignment = match &self.sharding.assignment {
             ShardAssignment::Hash => Json::obj(vec![("kind", Json::Str("hash".into()))]),
@@ -558,6 +609,8 @@ impl Scenario {
                     ("replan", Json::Bool(self.planner.replan)),
                     ("steal", Json::Bool(self.planner.steal)),
                     ("warm_migrate", Json::Bool(self.planner.warm_migrate)),
+                    ("predictive", Json::Bool(self.planner.predictive)),
+                    ("horizon_ms", Json::Num(self.planner.horizon_ms)),
                     (
                         "saturation_slack",
                         Json::Num(self.planner.saturation_slack),
@@ -693,6 +746,16 @@ impl Scenario {
                         weights,
                     }
                 }
+                "predictive" => Admission::Predictive {
+                    horizon_ms: adm
+                        .req("horizon_ms")?
+                        .as_f64()
+                        .context("admission.horizon_ms")?,
+                    headroom: adm
+                        .req("headroom")?
+                        .as_f64()
+                        .context("admission.headroom")?,
+                },
                 other => bail!("unknown admission kind {other:?}"),
             },
         };
@@ -765,6 +828,14 @@ impl Scenario {
                     warm_migrate: match p.get("warm_migrate") {
                         None => d.warm_migrate,
                         Some(x) => x.as_bool().context("planner.warm_migrate")?,
+                    },
+                    predictive: match p.get("predictive") {
+                        None => d.predictive,
+                        Some(x) => x.as_bool().context("planner.predictive")?,
+                    },
+                    horizon_ms: match p.get("horizon_ms") {
+                        None => d.horizon_ms,
+                        Some(x) => x.as_f64().context("planner.horizon_ms")?,
                     },
                     saturation_slack: match p.get("saturation_slack") {
                         None => d.saturation_slack,
@@ -959,9 +1030,17 @@ mod tests {
                     replan: true,
                     steal: true,
                     warm_migrate: true,
+                    predictive: true,
+                    horizon_ms: 125.0,
                     saturation_slack: 2.5,
                     max_migrations: 3,
                 }),
+            Scenario::bursty(&tasks(), slos(), 8.0, 90.0, 400.0, 2_500.0)
+                .with_admission(Admission::Predictive {
+                    horizon_ms: 200.0,
+                    headroom: 1.25,
+                })
+                .with_planner(PlannerConfig::predictive()),
             Scenario::poisson(&tasks(), slos(), 15.0, 2_000.0)
                 // 2^53 + 1: the first u64 a JSON f64 cannot represent —
                 // must survive exactly via the string encoding.
@@ -1020,6 +1099,7 @@ mod tests {
         assert!(!sc.planner.replan, "default must not replan");
         assert!(!sc.planner.steal, "default must not steal");
         assert!(!sc.planner.warm_migrate, "default must not warm-migrate");
+        assert!(!sc.planner.predictive, "default must not forecast");
     }
 
     #[test]
@@ -1031,6 +1111,19 @@ mod tests {
             Admission::Fair { slack: 1.5, weights: BTreeMap::new() }.label(),
             "fair:1.5"
         );
+        assert_eq!(
+            Admission::Predictive { horizon_ms: 250.0, headroom: 1.5 }.label(),
+            "predictive:1.5:250"
+        );
+    }
+
+    #[test]
+    fn predictive_planner_config_builds_on_online() {
+        let pc = PlannerConfig::predictive();
+        assert!(pc.predictive && pc.replan && pc.steal && pc.warm_migrate);
+        assert!(pc.batch_aware);
+        assert!(pc.horizon_ms > 0.0);
+        assert!(!PlannerConfig::online().predictive);
     }
 
     #[test]

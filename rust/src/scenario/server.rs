@@ -52,6 +52,7 @@ use crate::profiler::TaskProfile;
 use crate::runtime::Runtime;
 use crate::soc::{BlobId, LatencyModel, Processor, SocSim};
 use crate::stitching::Composition;
+use crate::telemetry::forecast::{self, RateForecaster, TrendTracker};
 use crate::util::stats;
 use crate::workload::{placement_orders, Query, Slo};
 use crate::zoo::Zoo;
@@ -61,6 +62,11 @@ use super::{Admission, Scenario};
 
 /// Queries observed before a feedback-switch decision re-evaluates.
 const FEEDBACK_WINDOW: usize = 20;
+
+/// Horizon (virtual ms) the end-of-run SLO forecast projects over when
+/// the scenario's admission does not carry one
+/// ([`Admission::Predictive`] supplies its own).
+const DEFAULT_FORECAST_HORIZON_MS: f64 = 500.0;
 
 /// Hysteresis for [`Admission::Fair`]'s share clause: a task is only
 /// admitted past its deadline budget while its per-weight backlog is
@@ -368,6 +374,9 @@ impl<'a> Server<'a> {
                     ran_real: false,
                     order,
                     coexec,
+                    misses: 0,
+                    rate: RateForecaster::default(),
+                    backlog_trend: TrendTracker::default(),
                 },
             );
         }
@@ -412,6 +421,15 @@ struct TaskState {
     order: Vec<Processor>,
     /// Co-execution slowdown factor for NP policies.
     coexec: f64,
+    /// Completed queries whose service latency missed the SLO bound —
+    /// the observed share the end-of-run SLO forecast projects.
+    misses: usize,
+    /// Holt trend + burst detector over this task's arrival rate (the
+    /// SLO-forecast load factor).
+    rate: RateForecaster,
+    /// Holt trend over this task's observed queueing backlog — the
+    /// growth term of [`Admission::Predictive`].
+    backlog_trend: TrendTracker,
 }
 
 /// One in-flight serving run: accepts queries, books them on the
@@ -541,6 +559,11 @@ impl<'s, 'a> Session<'s, 'a> {
                 st.inflight.pop_front();
             }
             let backlog_ms = (st.ready_ms - effective_arrival).max(0.0);
+            // Every arrival feeds the per-task forecasters regardless
+            // of policy (deterministic, and the end-of-run SLO
+            // forecast wants them on reactive runs too).
+            st.rate.observe(effective_arrival);
+            st.backlog_trend.observe(effective_arrival, backlog_ms);
             let admit = match &self.admission {
                 Admission::Always => true,
                 Admission::QueueCap { max_queued } => {
@@ -564,6 +587,18 @@ impl<'s, 'a> Session<'s, 'a> {
                     backlog_ms <= slack * slo.max_latency_ms
                         || backlog_ms * sum_w_others
                             < FAIR_SHARE_MARGIN * w_self * others_backlog
+                }
+                Admission::Predictive { horizon_ms, headroom } => {
+                    // Shed on the *projected* queueing delay: observed
+                    // backlog plus the fitted growth over the horizon.
+                    // An empty queue always admits (shedding there
+                    // relieves nothing, and closed loops never build
+                    // backlog, so they stay lossless); a flat or
+                    // draining queue degenerates to Deadline with
+                    // slack = headroom.
+                    backlog_ms <= 0.0
+                        || backlog_ms + st.backlog_trend.projected_growth(*horizon_ms)
+                            <= headroom * slo.max_latency_ms
                 }
             };
             if admit {
@@ -641,6 +676,9 @@ impl<'s, 'a> Session<'s, 'a> {
             let queueing_ms = (start_ms - effective_arrival - penalty).max(0.0);
             st.latencies.push(service);
             st.queueing.push(queueing_ms);
+            if service > slo.max_latency_ms {
+                st.misses += 1;
+            }
             st.inflight.push_back(stage_ready);
             events[i] = Some(RequestOutcome {
                 id: batch[i].id,
@@ -984,6 +1022,9 @@ impl<'s, 'a> Session<'s, 'a> {
                 ran_real: false,
                 order,
                 coexec,
+                misses: 0,
+                rate: RateForecaster::default(),
+                backlog_trend: TrendTracker::default(),
             },
         );
         Ok(())
@@ -995,8 +1036,18 @@ impl<'s, 'a> Session<'s, 'a> {
     }
 
     /// Close the session: judge every task against its SLO and return
-    /// the report (per-task percentiles + the full event log).
+    /// the report (per-task percentiles + the full event log), plus
+    /// the per-task SLO forecast — the observed violation share scaled
+    /// by each task's projected-over-trailing load factor (horizon
+    /// from [`Admission::Predictive`] when in effect, else the default
+    /// `DEFAULT_FORECAST_HORIZON_MS` of 500 ms).
     pub fn finish(self) -> RunReport {
+        let horizon_ms = match &self.admission {
+            Admission::Predictive { horizon_ms, .. } => *horizon_ms,
+            _ => DEFAULT_FORECAST_HORIZON_MS,
+        };
+        let now_ms = self.sim.horizon_ms;
+        let mut slo_forecast = std::collections::BTreeMap::new();
         let mut outcomes = Vec::with_capacity(self.tasks.len());
         let mut total_queries = 0usize;
         let mut total_dropped = 0usize;
@@ -1007,6 +1058,16 @@ impl<'s, 'a> Session<'s, 'a> {
             total_queries += st.latencies.len();
             total_dropped += st.dropped;
             total_batches += st.batches;
+            if !st.latencies.is_empty() {
+                let miss_rate = st.misses as f64 / st.latencies.len() as f64;
+                slo_forecast.insert(
+                    name.clone(),
+                    forecast::project_violation_rate(
+                        miss_rate,
+                        st.rate.load_factor(now_ms, horizon_ms),
+                    ),
+                );
+            }
             outcomes.push(TaskOutcome {
                 task: name.clone(),
                 accuracy: st.accuracy,
@@ -1031,6 +1092,7 @@ impl<'s, 'a> Session<'s, 'a> {
             total_batches,
             cold_compiles: self.cold_compiles,
             warm_loads: self.warm_loads,
+            slo_forecast,
             requests: self.requests,
         }
     }
@@ -1205,6 +1267,7 @@ mod tests {
         for admission in [
             Admission::QueueCap { max_queued: 0 },
             Admission::Deadline { slack: 1.0 },
+            Admission::Predictive { horizon_ms: 250.0, headroom: 1.0 },
         ] {
             let sc = Scenario::closed_loop(&tiny_tasks(), slos(0.5, 50.0))
                 .with_admission(admission.clone());
@@ -1213,6 +1276,43 @@ mod tests {
             assert_eq!(r.total_queries, 100);
             assert!(r.outcomes[0].mean_queueing_ms < 1e-9, "{admission:?}");
         }
+    }
+
+    #[test]
+    fn predictive_admission_bounds_queueing_and_forecasts() {
+        // Sustained overload: predictive admission must shed, and every
+        // query it does admit was admitted under the headroom budget —
+        // with a single unbatched task, realized queueing equals the
+        // backlog the admission decision saw, so no completed query can
+        // have waited past headroom × bound. The report carries a
+        // per-task SLO forecast in [0, 1].
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let heavy = Scenario::poisson(&tiny_tasks(), slos(0.5, 50.0), 200.0, 2_000.0)
+            .with_seed(7);
+        let headroom = 2.0;
+        let pred = server
+            .run(&heavy.clone().with_admission(Admission::Predictive {
+                horizon_ms: 250.0,
+                headroom,
+            }))
+            .unwrap();
+        assert!(pred.total_dropped > 0, "overload must shed");
+        assert_eq!(pred.total_queries + pred.total_dropped, pred.requests.len());
+        let budget = headroom * 50.0;
+        for r in pred.requests.iter().filter(|r| !r.dropped) {
+            assert!(
+                r.queueing_ms <= budget + 1e-6,
+                "query {} admitted with queueing {} past the {budget} ms budget",
+                r.id,
+                r.queueing_ms
+            );
+        }
+        assert!(!pred.slo_forecast.is_empty(), "report must carry the forecast");
+        assert!(pred
+            .slo_forecast
+            .values()
+            .all(|p| p.is_finite() && (0.0..=1.0).contains(p)));
     }
 
     #[test]

@@ -1,0 +1,515 @@
+//! Short-horizon load forecasting: time-aware Holt (double-EWMA)
+//! trend fitting plus a burst detector on rate acceleration.
+//!
+//! The telemetry estimators of the base module are *trailing*: the
+//! EWMA and the sliding window both describe traffic that has already
+//! arrived. Everything predictive in the control plane — shedding
+//! before deadline slack is exhausted (`Admission::Predictive`),
+//! migrating before a shard actually saturates (the forecast replan
+//! trigger), projecting SLO violation rates — needs the *next* `H` ms,
+//! which is this module's job. Two building blocks:
+//!
+//! * [`TrendTracker`] — a time-aware Holt filter over an arbitrary
+//!   scalar series (windowed rate, shard backlog): level
+//!   `ℓ ← α·x + (1−α)·(ℓ + b·Δt)` and trend
+//!   `b ← β·(ℓ' − ℓ)/Δt + (1−β)·b`, with the trend kept per
+//!   millisecond so irregular sample spacing (samples land on arrival
+//!   timestamps, gated to ≥ `sample_ms` apart) projects correctly:
+//!   `x̂(t + H) = ℓ + b·(t − t_last + H)`.
+//! * [`RateForecaster`] — a sliding arrival window feeding a
+//!   [`TrendTracker`] with windowed-rate samples, plus a burst
+//!   detector: a sample whose acceleration `(x_k − x_{k−1})/Δt`
+//!   exceeds [`ForecastConfig::burst_accel_qps_per_s`] *and* sits
+//!   above [`ForecastConfig::burst_ratio`] × the fitted level flags a
+//!   burst, and the projection then floors at the raw windowed rate —
+//!   the Holt level deliberately lags a square-wave edge, the raw
+//!   window does not.
+//!
+//! Everything is deterministic in the observed timestamps (no wall
+//! clock, no randomness), which the determinism integration test
+//! relies on. Cold starts are total: zero or one sample projects the
+//! last observation (or 0.0), never NaN.
+//!
+//! ```
+//! use sparseloom::telemetry::forecast::RateForecaster;
+//!
+//! let mut f = RateForecaster::default();
+//! for i in 0..200 {
+//!     f.observe(10.0 * i as f64); // steady 100 qps
+//! }
+//! let p = f.projected_qps(2_000.0, 500.0);
+//! // Two seconds in, the Holt transient still overshoots a little.
+//! assert!((p - 100.0).abs() / 100.0 < 0.35, "{p}");
+//! ```
+
+use std::collections::VecDeque;
+
+/// Knobs for the Holt fit and the burst detector. The defaults favor a
+/// responsive fit (the forecaster exists to catch bursts the trailing
+/// EWMA smooths over): level gain 0.3, trend gain 0.15, one rate
+/// sample per 100 ms of virtual time over a 1 s window.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ForecastConfig {
+    /// Holt level smoothing gain α (0 < α ≤ 1).
+    pub alpha: f64,
+    /// Holt trend smoothing gain β (0 < β ≤ 1).
+    pub beta: f64,
+    /// Sliding-window length (virtual ms) for the rate samples.
+    pub window_ms: f64,
+    /// Minimum spacing (virtual ms) between Holt samples.
+    pub sample_ms: f64,
+    /// Burst threshold on rate acceleration between consecutive
+    /// samples (qps per second).
+    pub burst_accel_qps_per_s: f64,
+    /// A bursting sample must also exceed this multiple of the fitted
+    /// level (keeps steady-state Poisson noise from flagging).
+    pub burst_ratio: f64,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        Self {
+            alpha: 0.3,
+            beta: 0.15,
+            window_ms: 1_000.0,
+            sample_ms: 100.0,
+            burst_accel_qps_per_s: 50.0,
+            burst_ratio: 1.5,
+        }
+    }
+}
+
+/// A time-aware Holt (double-EWMA) filter over one scalar series.
+/// Feed it `(now_ms, value)` observations in non-decreasing time order
+/// and read `level + trend × horizon` projections back. Samples closer
+/// than `sample_ms` to the previous one are ignored, so callers may
+/// observe on every event.
+#[derive(Clone, Debug)]
+pub struct TrendTracker {
+    alpha: f64,
+    beta: f64,
+    sample_ms: f64,
+    level: f64,
+    trend_per_ms: f64,
+    last_sample_ms: f64,
+    samples: u64,
+}
+
+impl Default for TrendTracker {
+    fn default() -> Self {
+        // Backlog-style defaults: same gains as the rate fit, sampled
+        // at up to 20 Hz of virtual time.
+        Self::new(0.3, 0.15, 50.0)
+    }
+}
+
+impl TrendTracker {
+    pub fn new(alpha: f64, beta: f64, sample_ms: f64) -> TrendTracker {
+        TrendTracker {
+            alpha: alpha.clamp(1e-6, 1.0),
+            beta: beta.clamp(1e-6, 1.0),
+            sample_ms: sample_ms.max(1e-9),
+            level: 0.0,
+            trend_per_ms: 0.0,
+            last_sample_ms: 0.0,
+            samples: 0,
+        }
+    }
+
+    /// Ingest one observation. Observations must be fed in
+    /// non-decreasing time order; ones closer than `sample_ms` to the
+    /// last accepted sample are dropped. Returns whether the
+    /// observation was accepted as a sample.
+    pub fn observe(&mut self, now_ms: f64, value: f64) -> bool {
+        if !now_ms.is_finite() || !value.is_finite() {
+            return false;
+        }
+        if self.samples == 0 {
+            self.level = value;
+            self.last_sample_ms = now_ms;
+            self.samples = 1;
+            return true;
+        }
+        let dt = now_ms - self.last_sample_ms;
+        if dt < self.sample_ms {
+            return false;
+        }
+        let predicted = self.level + self.trend_per_ms * dt;
+        let new_level = self.alpha * value + (1.0 - self.alpha) * predicted;
+        self.trend_per_ms = self.beta * ((new_level - self.level) / dt)
+            + (1.0 - self.beta) * self.trend_per_ms;
+        self.level = new_level;
+        self.last_sample_ms = now_ms;
+        self.samples += 1;
+        true
+    }
+
+    /// Projection `horizon_ms` past `now_ms`, clamped at 0 (rates and
+    /// backlogs are non-negative). 0.0 before any sample.
+    pub fn forecast(&self, now_ms: f64, horizon_ms: f64) -> f64 {
+        if self.samples == 0 {
+            return 0.0;
+        }
+        let ahead = (now_ms - self.last_sample_ms).max(0.0) + horizon_ms.max(0.0);
+        (self.level + self.trend_per_ms * ahead).max(0.0)
+    }
+
+    /// The projected *increase* over the next `horizon_ms`: positive
+    /// trend × horizon, 0 when the series is flat or falling — the
+    /// growth term predictive admission adds to the observed backlog.
+    pub fn projected_growth(&self, horizon_ms: f64) -> f64 {
+        self.trend_per_ms.max(0.0) * horizon_ms.max(0.0)
+    }
+
+    /// Fitted level (0.0 before any sample).
+    pub fn level(&self) -> f64 {
+        if self.samples == 0 { 0.0 } else { self.level }
+    }
+
+    /// Fitted trend, in value units per millisecond.
+    pub fn trend_per_ms(&self) -> f64 {
+        self.trend_per_ms
+    }
+
+    /// Accepted samples so far.
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// Timestamp of the last accepted sample (0.0 before any).
+    pub fn last_sample_ms(&self) -> f64 {
+        self.last_sample_ms
+    }
+}
+
+/// Per-task arrival-rate forecaster: sliding window → rate samples →
+/// [`TrendTracker`], plus the burst flag. Feed every arrival (of one
+/// task, non-decreasing times) through [`RateForecaster::observe`].
+#[derive(Clone, Debug)]
+pub struct RateForecaster {
+    cfg: ForecastConfig,
+    window: VecDeque<f64>,
+    holt: TrendTracker,
+    last_rate: f64,
+    burst: bool,
+}
+
+impl Default for RateForecaster {
+    fn default() -> Self {
+        Self::new(ForecastConfig::default())
+    }
+}
+
+impl RateForecaster {
+    pub fn new(cfg: ForecastConfig) -> RateForecaster {
+        let holt = TrendTracker::new(cfg.alpha, cfg.beta, cfg.sample_ms);
+        RateForecaster { cfg, window: VecDeque::new(), holt, last_rate: 0.0, burst: false }
+    }
+
+    pub fn config(&self) -> &ForecastConfig {
+        &self.cfg
+    }
+
+    /// Ingest one arrival timestamp (non-decreasing per task).
+    pub fn observe(&mut self, arrival_ms: f64) {
+        if !arrival_ms.is_finite() {
+            return;
+        }
+        let w = self.cfg.window_ms.max(1e-9);
+        self.window.push_back(arrival_ms);
+        while self
+            .window
+            .front()
+            .map(|&t| t + w < arrival_ms)
+            .unwrap_or(false)
+        {
+            self.window.pop_front();
+        }
+        if self.holt.samples() == 0 {
+            let x = self.window_rate_qps(arrival_ms);
+            self.holt.observe(arrival_ms, x);
+            self.last_rate = x;
+            return;
+        }
+        let dt = arrival_ms - self.holt.last_sample_ms();
+        if dt < self.cfg.sample_ms.max(1e-9) {
+            return;
+        }
+        let x = self.window_rate_qps(arrival_ms);
+        let accel_qps_per_s = (x - self.last_rate) / dt * 1_000.0;
+        self.burst = accel_qps_per_s > self.cfg.burst_accel_qps_per_s
+            && x > self.cfg.burst_ratio * self.holt.level().max(1e-9);
+        self.holt.observe(arrival_ms, x);
+        self.last_rate = x;
+    }
+
+    /// Raw windowed arrival rate at `now_ms` (same convention as
+    /// `Telemetry::window_rate_qps`: arrivals in the trailing window
+    /// over the full window length).
+    pub fn window_rate_qps(&self, now_ms: f64) -> f64 {
+        let w = self.cfg.window_ms.max(1e-9);
+        let n = self
+            .window
+            .iter()
+            .filter(|&&t| t + w >= now_ms && t <= now_ms)
+            .count();
+        1_000.0 * n as f64 / w
+    }
+
+    /// Projected arrival rate (qps) `horizon_ms` past `now_ms`. During
+    /// a detected burst the projection floors at the *current* raw
+    /// windowed rate (the Holt level lags a square-wave edge; the raw
+    /// window does not, and it self-decays once arrivals stop). 0.0
+    /// before any observation, never negative, never NaN.
+    ///
+    /// Sampling is arrival-driven, so a task that goes silent would
+    /// otherwise keep (and linearly extrapolate) its last fitted burst
+    /// forever: once nothing has been observed for a full window, the
+    /// fit is declared stale and the projection falls back to the raw
+    /// windowed rate at `now_ms` — which empties with `now` and reads
+    /// ~0 for an idle task, exactly like the trailing estimators.
+    pub fn projected_qps(&self, now_ms: f64, horizon_ms: f64) -> f64 {
+        if self.holt.samples() == 0 {
+            return 0.0;
+        }
+        if now_ms - self.holt.last_sample_ms() > self.cfg.window_ms.max(1e-9) {
+            return self.window_rate_qps(now_ms);
+        }
+        let mut p = self.holt.forecast(now_ms, horizon_ms);
+        if self.burst {
+            p = p.max(self.window_rate_qps(now_ms));
+        }
+        p.max(0.0)
+    }
+
+    /// Forecast load relative to the fitted current level:
+    /// `projected / level`, 1.0 before any observation. The SLO
+    /// forecast scales the observed violation share by this factor.
+    pub fn load_factor(&self, now_ms: f64, horizon_ms: f64) -> f64 {
+        if self.holt.samples() == 0 {
+            return 1.0;
+        }
+        let f = self.projected_qps(now_ms, horizon_ms) / self.holt.level().max(1e-9);
+        if f.is_finite() { f.max(0.0) } else { 1.0 }
+    }
+
+    /// Whether the latest sample flagged a burst (rate acceleration
+    /// above threshold and above the fitted level).
+    pub fn is_burst(&self) -> bool {
+        self.burst
+    }
+
+    /// Fitted rate level (qps).
+    pub fn level_qps(&self) -> f64 {
+        self.holt.level()
+    }
+
+    /// Fitted rate trend (qps per ms).
+    pub fn trend_qps_per_ms(&self) -> f64 {
+        self.holt.trend_per_ms()
+    }
+
+    /// Accepted Holt samples so far.
+    pub fn samples(&self) -> u64 {
+        self.holt.samples()
+    }
+}
+
+/// Clamp a forecast probability into [0, 1]; non-finite inputs map to
+/// 0 (a broken estimate must read "no signal", never poison a report).
+pub fn clamp01(x: f64) -> f64 {
+    if x.is_finite() {
+        x.clamp(0.0, 1.0)
+    } else {
+        0.0
+    }
+}
+
+/// Projected violation rate: the observed violation share scaled by
+/// the forecast load factor, clamped into [0, 1]. First-order model:
+/// violations under this serving engine come from batch growth and
+/// queue pressure, both of which scale with offered load over the
+/// horizon.
+pub fn project_violation_rate(observed_miss_rate: f64, load_factor: f64) -> f64 {
+    clamp01(observed_miss_rate * load_factor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Arrivals at a fixed `qps` over [0, horizon_ms).
+    fn steady(f: &mut RateForecaster, qps: f64, from_ms: f64, to_ms: f64) {
+        let gap = 1_000.0 / qps;
+        let mut t = from_ms;
+        while t < to_ms {
+            f.observe(t);
+            t += gap;
+        }
+    }
+
+    #[test]
+    fn empty_forecaster_is_total_and_zero() {
+        let f = RateForecaster::default();
+        assert_eq!(f.projected_qps(0.0, 500.0), 0.0);
+        assert_eq!(f.projected_qps(1e9, 0.0), 0.0);
+        assert_eq!(f.window_rate_qps(123.0), 0.0);
+        assert_eq!(f.load_factor(0.0, 500.0), 1.0);
+        assert!(!f.is_burst());
+        assert_eq!(f.samples(), 0);
+        let t = TrendTracker::default();
+        assert_eq!(t.forecast(0.0, 1_000.0), 0.0);
+        assert_eq!(t.projected_growth(1_000.0), 0.0);
+        assert_eq!(t.level(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_cold_start_never_nans_or_panics() {
+        let mut f = RateForecaster::default();
+        f.observe(42.0);
+        assert_eq!(f.samples(), 1);
+        for (now, h) in [(42.0, 0.0), (42.0, 500.0), (1e6, 1e6), (0.0, 0.0)] {
+            let p = f.projected_qps(now, h);
+            assert!(p.is_finite() && p >= 0.0, "({now}, {h}) → {p}");
+            let lf = f.load_factor(now, h);
+            assert!(lf.is_finite() && lf >= 0.0, "({now}, {h}) → {lf}");
+        }
+        let mut t = TrendTracker::default();
+        t.observe(10.0, 7.5);
+        assert_eq!(t.samples(), 1);
+        assert!((t.level() - 7.5).abs() < 1e-12);
+        assert_eq!(t.trend_per_ms(), 0.0, "one sample has no trend");
+        assert!(t.forecast(10.0, 1_000.0).is_finite());
+        // Non-finite observations are rejected, not absorbed.
+        t.observe(20.0, f64::NAN);
+        assert!(t.level().is_finite());
+        f.observe(f64::INFINITY);
+        assert!(f.projected_qps(50.0, 100.0).is_finite());
+    }
+
+    #[test]
+    fn constant_rate_has_no_trend() {
+        let mut f = RateForecaster::default();
+        steady(&mut f, 100.0, 0.0, 6_000.0);
+        // Trend decays to ~0 once the window is saturated.
+        assert!(
+            f.trend_qps_per_ms().abs() < 0.02,
+            "constant rate must fit a flat trend: {}",
+            f.trend_qps_per_ms()
+        );
+        let p = f.projected_qps(6_000.0, 500.0);
+        assert!((p - 100.0).abs() / 100.0 < 0.15, "projection ≈ rate: {p}");
+        // The load factor sits near 1 on a flat series.
+        let lf = f.load_factor(6_000.0, 500.0);
+        assert!((lf - 1.0).abs() < 0.15, "{lf}");
+        let mut t = TrendTracker::default();
+        for i in 0..50 {
+            t.observe(100.0 * i as f64, 40.0);
+        }
+        assert!(t.trend_per_ms().abs() < 1e-9);
+        assert!((t.forecast(5_000.0, 1_000.0) - 40.0).abs() < 1e-6);
+        assert_eq!(t.projected_growth(1_000.0), 0.0);
+    }
+
+    #[test]
+    fn linear_ramp_projects_ahead_within_tolerance() {
+        // Rate ramps 20 → 220 qps over 4 s (slope 0.05 qps/ms); the
+        // projection 1 s ahead must land near the extrapolated 270 qps
+        // and strictly above the current windowed rate.
+        let mut f = RateForecaster::default();
+        let mut t = 0.0;
+        while t < 4_000.0 {
+            f.observe(t);
+            let rate = 20.0 + 0.05 * t;
+            t += 1_000.0 / rate;
+        }
+        assert!(
+            f.trend_qps_per_ms() > 0.02,
+            "ramp must fit a positive trend: {}",
+            f.trend_qps_per_ms()
+        );
+        let now_rate = f.window_rate_qps(4_000.0);
+        let p = f.projected_qps(4_000.0, 1_000.0);
+        assert!(p > now_rate, "projection must lead the ramp: {p} vs {now_rate}");
+        let true_future = 270.0;
+        assert!(
+            (p - true_future).abs() / true_future < 0.35,
+            "projection {p} vs extrapolated {true_future}"
+        );
+        // The same ramp through a bare TrendTracker is exact: linear
+        // series, time-aware updates ⇒ trend converges to the slope.
+        let mut tt = TrendTracker::default();
+        for i in 0..60 {
+            let now = 100.0 * i as f64;
+            tt.observe(now, 5.0 + 0.2 * now);
+        }
+        assert!((tt.trend_per_ms() - 0.2).abs() < 0.02, "{}", tt.trend_per_ms());
+        let last = 100.0 * 59.0;
+        let proj = tt.forecast(last, 500.0);
+        let truth = 5.0 + 0.2 * (last + 500.0);
+        assert!((proj - truth).abs() / truth < 0.1, "{proj} vs {truth}");
+        assert!(tt.projected_growth(500.0) > 50.0);
+    }
+
+    #[test]
+    fn burst_detector_fires_on_acceleration_only() {
+        let mut f = RateForecaster::default();
+        // Long steady 10 qps prefix: no burst.
+        steady(&mut f, 10.0, 0.0, 5_000.0);
+        assert!(!f.is_burst(), "steady traffic must not flag");
+        let level_before = f.level_qps();
+        // Square-wave edge to 200 qps.
+        steady(&mut f, 200.0, 5_000.0, 5_600.0);
+        assert!(f.is_burst(), "a 20× rate edge must flag a burst");
+        // During the burst the projection floors at the raw windowed
+        // rate, far above the lagging Holt level.
+        let p = f.projected_qps(5_600.0, 200.0);
+        assert!(
+            p > 2.0 * level_before,
+            "burst projection {p} must leave the old level {level_before} behind"
+        );
+        // Back to steady: the flag clears once acceleration stops.
+        steady(&mut f, 200.0, 5_600.0, 9_000.0);
+        assert!(!f.is_burst(), "sustained rate is the new normal, not a burst");
+    }
+
+    #[test]
+    fn silent_task_projection_decays_instead_of_extrapolating() {
+        // A task that bursts and then goes silent gets no further
+        // samples; the projection must not keep extrapolating the
+        // burst fit forever. Once a full window has passed with no
+        // arrivals, the stale fit yields to the raw window — which is
+        // empty — so the projection reads ~0, like the trailing rates.
+        let mut f = RateForecaster::default();
+        steady(&mut f, 10.0, 0.0, 3_000.0);
+        steady(&mut f, 200.0, 3_000.0, 3_600.0);
+        let during = f.projected_qps(3_600.0, 250.0);
+        assert!(during > 50.0, "the burst itself must project hot: {during}");
+        // 5 s of silence (>> the 1 s window): projection decays to 0.
+        let after = f.projected_qps(8_600.0, 250.0);
+        assert_eq!(after, 0.0, "an idle task must not project load");
+        assert!(f.load_factor(8_600.0, 250.0) < 0.1);
+    }
+
+    #[test]
+    fn trend_tracker_ignores_subsample_spacing() {
+        let mut t = TrendTracker::new(0.5, 0.5, 100.0);
+        assert!(t.observe(0.0, 1.0));
+        assert!(!t.observe(1.0, 1e9), "closer than sample_ms: dropped");
+        assert!(!t.observe(99.9, 1e9));
+        assert_eq!(t.samples(), 1);
+        assert!((t.level() - 1.0).abs() < 1e-12);
+        assert!(t.observe(100.0, 2.0));
+        assert_eq!(t.samples(), 2);
+    }
+
+    #[test]
+    fn violation_projection_clamps() {
+        assert_eq!(project_violation_rate(0.0, 5.0), 0.0);
+        assert_eq!(project_violation_rate(0.5, 1.0), 0.5);
+        assert_eq!(project_violation_rate(0.8, 3.0), 1.0, "clamped at 1");
+        assert_eq!(project_violation_rate(f64::NAN, 1.0), 0.0);
+        assert_eq!(project_violation_rate(0.5, f64::INFINITY), 0.0);
+        assert_eq!(clamp01(-0.2), 0.0);
+    }
+}

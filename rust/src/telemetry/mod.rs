@@ -41,6 +41,17 @@
 //!   of hand-supplied hints (startup plans have no traffic to observe
 //!   yet and stay unweighted).
 //!
+//! On top of the trailing estimators sits the [`forecast`] layer
+//! (PR 5): every task additionally feeds a
+//! [`forecast::RateForecaster`] (Holt trend over the windowed rate +
+//! burst detector) and every shard a [`forecast::TrendTracker`] over
+//! its observed backlog, so consumers can ask for *projected* state —
+//! [`Telemetry::projected_rate_qps`] /
+//! [`Telemetry::projected_arrival_hint`] (the predictive
+//! `PlanContext::arrival_hint`), [`Telemetry::forecast_shard_backlog_ms`]
+//! (the forecast replan trigger), and [`Telemetry::slo_forecast`]
+//! (projected per-task violation rates). See DESIGN.md §Forecasting.
+//!
 //! ```
 //! use sparseloom::telemetry::Telemetry;
 //! use sparseloom::util::Rng;
@@ -55,11 +66,15 @@
 //! assert!((est - 50.0).abs() / 50.0 < 0.25, "EWMA within 25 %: {est}");
 //! ```
 
-use std::collections::{BTreeMap, VecDeque};
+pub mod forecast;
+
+use std::collections::BTreeMap;
 
 use crate::metrics::RequestOutcome;
 use crate::planner::PlanContext;
 use crate::workload::Slo;
+
+use self::forecast::{RateForecaster, TrendTracker};
 
 /// Estimator knobs. The defaults favor stability: the EWMA averages
 /// over an effective `2/α − 1 ≈ 399` recent gaps (the bias correction
@@ -92,8 +107,29 @@ struct TaskStats {
     /// Gaps observed so far (k of the bias correction).
     gaps: u64,
     last_arrival_ms: Option<f64>,
-    /// Arrival timestamps inside the sliding window, oldest first.
-    window: VecDeque<f64>,
+    /// Cumulative service time of completed requests (ms) and how many
+    /// of them missed their per-request latency SLO — the observed
+    /// violation share [`Telemetry::slo_forecast`] projects forward.
+    service_sum_ms: f64,
+    slo_misses: u64,
+    /// Sliding arrival window + Holt trend + burst detector. The one
+    /// owner of the window timestamps: `window_rate_qps` reads through
+    /// it, and it is built over [`TelemetryConfig::window_ms`].
+    forecast: RateForecaster,
+}
+
+impl TaskStats {
+    /// Fresh stats whose forecaster windows over `window_ms` (the
+    /// telemetry config's window, not the forecast default).
+    fn with_window(window_ms: f64) -> TaskStats {
+        TaskStats {
+            forecast: RateForecaster::new(forecast::ForecastConfig {
+                window_ms,
+                ..forecast::ForecastConfig::default()
+            }),
+            ..TaskStats::default()
+        }
+    }
 }
 
 /// Per-shard load accounting.
@@ -101,6 +137,9 @@ struct TaskStats {
 pub struct ShardStats {
     /// Latest observed total queueing backlog (ms).
     pub backlog_ms: f64,
+    /// Holt trend over the observed backlog series — the projection
+    /// behind [`Telemetry::forecast_shard_backlog_ms`].
+    pub backlog_trend: TrendTracker,
     /// Cumulative booked service time (ms) — the occupancy numerator.
     pub busy_ms: f64,
     pub completed: u64,
@@ -144,7 +183,10 @@ impl Telemetry {
     pub fn observe_arrival(&mut self, task: &str, arrival_ms: f64) {
         let alpha = self.cfg.ewma_alpha.clamp(1e-6, 1.0);
         let window = self.cfg.window_ms.max(1e-9);
-        let st = self.tasks.entry(task.to_string()).or_default();
+        let st = self
+            .tasks
+            .entry(task.to_string())
+            .or_insert_with(|| TaskStats::with_window(window));
         st.arrivals += 1;
         if let Some(last) = st.last_arrival_ms {
             let gap = (arrival_ms - last).max(0.0);
@@ -152,15 +194,9 @@ impl Telemetry {
             st.gaps += 1;
         }
         st.last_arrival_ms = Some(arrival_ms);
-        st.window.push_back(arrival_ms);
-        while st
-            .window
-            .front()
-            .map(|&t| t + window < arrival_ms)
-            .unwrap_or(false)
-        {
-            st.window.pop_front();
-        }
+        // The forecaster owns the sliding window (one copy of the
+        // timestamps): it trims it and samples the windowed rate here.
+        st.forecast.observe(arrival_ms);
     }
 
     /// Ingest one request outcome served (or dropped) by `shard`:
@@ -174,6 +210,10 @@ impl Telemetry {
             }
         } else if let Some(st) = self.tasks.get_mut(&ev.task) {
             st.completed += 1;
+            st.service_sum_ms += ev.service_ms;
+            if ev.slo_ok == Some(false) {
+                st.slo_misses += 1;
+            }
         }
         if let Some(sh) = self.shards.get_mut(shard) {
             if ev.dropped {
@@ -185,10 +225,13 @@ impl Telemetry {
         }
     }
 
-    /// Record the latest observed queueing backlog of `shard`.
-    pub fn observe_backlog(&mut self, shard: usize, backlog_ms: f64) {
+    /// Record the latest observed queueing backlog of `shard` at
+    /// virtual time `now_ms` (the timestamp feeds the backlog trend
+    /// behind [`Telemetry::forecast_shard_backlog_ms`]).
+    pub fn observe_backlog(&mut self, shard: usize, backlog_ms: f64, now_ms: f64) {
         if let Some(sh) = self.shards.get_mut(shard) {
             sh.backlog_ms = backlog_ms.max(0.0);
+            sh.backlog_trend.observe(now_ms, backlog_ms.max(0.0));
         }
     }
 
@@ -223,13 +266,114 @@ impl Telemetry {
     /// for burst detection. `None` for unobserved tasks.
     pub fn window_rate_qps(&self, task: &str, now_ms: f64) -> Option<f64> {
         let st = self.tasks.get(task)?;
-        let w = self.cfg.window_ms.max(1e-9);
-        let n = st
-            .window
+        Some(st.forecast.window_rate_qps(now_ms))
+    }
+
+    /// Projected arrival rate for `task` (qps) `horizon_ms` past
+    /// `now_ms`: the Holt trend fit over the windowed rate, floored at
+    /// the raw windowed rate during a detected burst. Falls back to
+    /// the trailing EWMA before the forecaster has a sample; `None`
+    /// for unobserved tasks.
+    pub fn projected_rate_qps(
+        &self,
+        task: &str,
+        now_ms: f64,
+        horizon_ms: f64,
+    ) -> Option<f64> {
+        let st = self.tasks.get(task)?;
+        if st.forecast.samples() == 0 {
+            return self.rate_qps(task);
+        }
+        Some(st.forecast.projected_qps(now_ms, horizon_ms))
+    }
+
+    /// Whether `task`'s latest rate sample flagged a burst (rate
+    /// acceleration above the detector threshold).
+    pub fn is_burst(&self, task: &str) -> bool {
+        self.tasks
+            .get(task)
+            .map(|st| st.forecast.is_burst())
+            .unwrap_or(false)
+    }
+
+    /// The *predictive* arrival-hint map: per task, the projected
+    /// rather than trailing rate (qps). Tasks whose projection is zero
+    /// or unavailable are omitted and keep the planner's default
+    /// weight — the forecast counterpart of [`Telemetry::arrival_hint`].
+    pub fn projected_arrival_hint(
+        &self,
+        now_ms: f64,
+        horizon_ms: f64,
+    ) -> BTreeMap<String, f64> {
+        self.tasks
+            .keys()
+            .filter_map(|t| {
+                self.projected_rate_qps(t, now_ms, horizon_ms)
+                    .filter(|q| q.is_finite() && *q > 0.0)
+                    .map(|q| (t.clone(), q))
+            })
+            .collect()
+    }
+
+    /// Projected queueing backlog of `shard` (ms) `horizon_ms` past
+    /// `now_ms` — the level + trend fit over the observed backlog
+    /// series, clamped at 0. 0.0 for unknown shards or before any
+    /// observation. The forecast replan trigger compares
+    /// `max(observed, forecast)` against the saturation threshold, so
+    /// a falling trend can never *suppress* a crossing the observed
+    /// backlog already made.
+    pub fn forecast_shard_backlog_ms(
+        &self,
+        shard: usize,
+        now_ms: f64,
+        horizon_ms: f64,
+    ) -> f64 {
+        self.shards
+            .get(shard)
+            .map(|sh| sh.backlog_trend.forecast(now_ms, horizon_ms))
+            .unwrap_or(0.0)
+    }
+
+    /// Projected per-task SLO violation rates over the next
+    /// `horizon_ms`: the observed per-request violation share scaled
+    /// by the forecast load factor (projected / fitted current rate),
+    /// clamped into [0, 1]. Only tasks in `slos` with at least one
+    /// completion appear — a task that has not served anything has no
+    /// violation share to project.
+    ///
+    /// Same formula ([`forecast::project_violation_rate`]) as the
+    /// per-session `RunReport::slo_forecast` that `Session::finish`
+    /// fills from its own counters — this is the telemetry-side view
+    /// for callers driving servers through raw outcomes (the session
+    /// cannot be asked mid-run, telemetry can).
+    pub fn slo_forecast(
+        &self,
+        slos: &BTreeMap<String, Slo>,
+        now_ms: f64,
+        horizon_ms: f64,
+    ) -> BTreeMap<String, f64> {
+        self.tasks
             .iter()
-            .filter(|&&t| t + w >= now_ms && t <= now_ms)
-            .count();
-        Some(1_000.0 * n as f64 / w)
+            .filter(|(name, st)| slos.contains_key(*name) && st.completed > 0)
+            .map(|(name, st)| {
+                let miss_rate = st.slo_misses as f64 / st.completed as f64;
+                let factor = st.forecast.load_factor(now_ms, horizon_ms);
+                (
+                    name.clone(),
+                    forecast::project_violation_rate(miss_rate, factor),
+                )
+            })
+            .collect()
+    }
+
+    /// Mean service latency of `task`'s completed requests (ms) —
+    /// `None` before the first completion.
+    pub fn mean_service_ms(&self, task: &str) -> Option<f64> {
+        let st = self.tasks.get(task)?;
+        if st.completed == 0 {
+            return None;
+        }
+        Some(st.service_sum_ms / st.completed as f64)
     }
 
     /// `task`'s share of all observed arrivals (0..1; 0.0 for
@@ -398,7 +542,7 @@ mod tests {
         t.observe_outcome(0, &ev(0, 0.0, false));
         t.observe_outcome(0, &ev(1, 10.0, false));
         t.observe_outcome(1, &ev(2, 20.0, true));
-        t.observe_backlog(0, 42.0);
+        t.observe_backlog(0, 42.0, 20.0);
         t.note_steal(1);
         let sh = t.shards();
         assert_eq!(sh[0].completed, 2);
@@ -409,10 +553,96 @@ mod tests {
         assert_eq!(t.steals(), 1);
         assert!(t.occupancy(0, 20.0) > 0.0);
         assert_eq!(t.occupancy(0, 0.0), 0.0);
+        // Mean service over completions only (drops contribute nothing).
+        assert!((t.mean_service_ms("a").unwrap() - 5.0).abs() < 1e-12);
+        assert!(t.mean_service_ms("ghost").is_none());
         // Out-of-range shards are ignored, not a panic.
         t.observe_outcome(9, &ev(3, 30.0, false));
-        t.observe_backlog(9, 1.0);
+        t.observe_backlog(9, 1.0, 30.0);
         t.note_steal(9);
+    }
+
+    #[test]
+    fn shard_backlog_forecast_tracks_the_trend() {
+        let mut t = Telemetry::new(2);
+        // Shard 0: backlog climbing 1 ms per ms; shard 1: flat.
+        for i in 0..20 {
+            let now = 100.0 * i as f64;
+            t.observe_backlog(0, now, now);
+            t.observe_backlog(1, 30.0, now);
+        }
+        let now = 1_900.0;
+        let f0 = t.forecast_shard_backlog_ms(0, now, 500.0);
+        assert!(
+            f0 > t.shards()[0].backlog_ms,
+            "a rising backlog must project above the last observation: {f0}"
+        );
+        let f1 = t.forecast_shard_backlog_ms(1, now, 500.0);
+        assert!((f1 - 30.0).abs() < 1.0, "flat backlog projects flat: {f1}");
+        // Unknown shards and cold trackers are total.
+        assert_eq!(t.forecast_shard_backlog_ms(9, now, 500.0), 0.0);
+        assert_eq!(Telemetry::new(1).forecast_shard_backlog_ms(0, 0.0, 500.0), 0.0);
+    }
+
+    #[test]
+    fn projected_hint_follows_burst_faster_than_ewma() {
+        let mut t = Telemetry::new(1);
+        // 10 qps for 10 s, then a 200 qps burst for 600 ms.
+        let mut now = 0.0;
+        while now < 10_000.0 {
+            t.observe_arrival("a", now);
+            now += 100.0;
+        }
+        while now < 10_600.0 {
+            t.observe_arrival("a", now);
+            now += 5.0;
+        }
+        let trailing = t.rate_qps("a").unwrap();
+        let projected = t.projected_rate_qps("a", now, 250.0).unwrap();
+        assert!(
+            projected > 2.0 * trailing,
+            "projection must see the burst the EWMA smooths over: \
+             {projected} vs {trailing}"
+        );
+        assert!(t.is_burst("a"), "the rate edge must flag a burst");
+        let hint = t.projected_arrival_hint(now, 250.0);
+        assert!((hint["a"] - projected).abs() < 1e-9);
+        // Unobserved tasks stay absent (planner default weight).
+        assert!(t.projected_rate_qps("ghost", now, 250.0).is_none());
+        assert!(!t.is_burst("ghost"));
+    }
+
+    #[test]
+    fn slo_forecast_scales_observed_misses_by_projected_load() {
+        use crate::metrics::RequestOutcome;
+        let mut t = Telemetry::new(1);
+        let ev = |id: u64, arrival: f64, ok: bool| RequestOutcome {
+            id,
+            task: "a".into(),
+            arrival_ms: arrival,
+            start_ms: arrival,
+            finish_ms: arrival + 10.0,
+            service_ms: 10.0,
+            queueing_ms: 0.0,
+            dropped: false,
+            slo_ok: Some(ok),
+        };
+        // Steady 20 qps; half the completions violate.
+        for i in 0..100u64 {
+            t.observe_outcome(0, &ev(i, 50.0 * i as f64, i % 2 == 0));
+        }
+        let slos = BTreeMap::from([(
+            "a".to_string(),
+            Slo { min_accuracy: 0.5, max_latency_ms: 5.0 },
+        )]);
+        let now = 5_000.0;
+        let f = t.slo_forecast(&slos, now, 500.0);
+        let p = f["a"];
+        assert!((0.0..=1.0).contains(&p), "forecast is a probability: {p}");
+        // Flat load ⇒ the projection stays near the observed 50 %.
+        assert!((p - 0.5).abs() < 0.2, "flat load keeps the miss share: {p}");
+        // Tasks outside the SLO map (or never completed) are absent.
+        assert!(t.slo_forecast(&BTreeMap::new(), now, 500.0).is_empty());
     }
 
     #[test]

@@ -1,0 +1,113 @@
+//! Determinism guard: the same scenario (including its JSON on-disk
+//! form) with the same seed must produce a bit-identical `RunReport`
+//! across runs. The forecasting layer (PR 5) sits on every serving
+//! path, so this pins it — and every future estimator — to virtual
+//! time only: no wall clock, no ambient randomness, no map-iteration
+//! nondeterminism may leak into a report.
+//!
+//! Runs entirely on the synthetic fixture zoo (no artifacts needed).
+
+use sparseloom::coordinator::ServeOpts;
+use sparseloom::fixtures;
+use sparseloom::metrics::{RunReport, ShardedReport};
+use sparseloom::scenario::{
+    Admission, Dispatch, PlannerConfig, Scenario, Server, ShardedServer, Sharding,
+};
+
+/// Bit-exact report equality: counts, per-request timeline, and the
+/// forecast map (f64s compared through `to_bits` — "close" is not
+/// deterministic, identical is).
+fn assert_identical(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.total_queries, b.total_queries);
+    assert_eq!(a.total_dropped, b.total_dropped);
+    assert_eq!(a.total_batches, b.total_batches);
+    assert_eq!(a.cold_compiles, b.cold_compiles);
+    assert_eq!(a.warm_loads, b.warm_loads);
+    assert_eq!(a.makespan_ms.to_bits(), b.makespan_ms.to_bits());
+    assert_eq!(a.requests.len(), b.requests.len());
+    for (x, y) in a.requests.iter().zip(&b.requests) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.task, y.task);
+        assert_eq!(x.dropped, y.dropped);
+        assert_eq!(x.slo_ok, y.slo_ok);
+        assert_eq!(x.arrival_ms.to_bits(), y.arrival_ms.to_bits(), "query {}", x.id);
+        assert_eq!(x.start_ms.to_bits(), y.start_ms.to_bits(), "query {}", x.id);
+        assert_eq!(x.finish_ms.to_bits(), y.finish_ms.to_bits(), "query {}", x.id);
+        assert_eq!(x.service_ms.to_bits(), y.service_ms.to_bits(), "query {}", x.id);
+        assert_eq!(x.queueing_ms.to_bits(), y.queueing_ms.to_bits(), "query {}", x.id);
+    }
+    assert_eq!(a.slo_forecast.len(), b.slo_forecast.len());
+    for ((ta, pa), (tb, pb)) in a.slo_forecast.iter().zip(&b.slo_forecast) {
+        assert_eq!(ta, tb);
+        assert_eq!(pa.to_bits(), pb.to_bits(), "forecast for {ta}");
+    }
+}
+
+fn json_round_trip(sc: &Scenario) -> Scenario {
+    let text = sc.to_json().to_string_pretty();
+    Scenario::from_json(&sparseloom::json::parse(&text).unwrap()).unwrap()
+}
+
+#[test]
+fn sharded_online_predictive_run_is_deterministic() {
+    // The maximal moving-parts configuration: bursty arrivals, batching,
+    // sharding, predictive admission, and the full forecast-triggered
+    // online stack (replan + steal + warm migration).
+    let (zoo, lm, profiles) = fixtures::quartet();
+    let tasks = fixtures::task_names(&zoo);
+    let slos = fixtures::slos(&zoo, 0.5, 60.0);
+    let sc = Scenario::bursty(&tasks, slos, 4.0, 100.0, 500.0, 3_000.0)
+        .with_seed(11)
+        .with_admission(Admission::Predictive { horizon_ms: 100.0, headroom: 2.0 })
+        .with_dispatch(Dispatch::batched(4))
+        .with_sharding(Sharding::hash(2))
+        .with_planner(PlannerConfig { max_migrations: 2, ..PlannerConfig::predictive() });
+
+    let run = |s: &Scenario| -> ShardedReport {
+        let opts = ServeOpts { batch_hint: 4.0, ..Default::default() };
+        ShardedServer::build(&zoo, &lm, &profiles, opts, s.sharding.clone())
+            .run(s)
+            .unwrap()
+    };
+    let a = run(&sc);
+    let b = run(&sc);
+    let c = run(&json_round_trip(&sc));
+
+    for other in [&b, &c] {
+        assert_eq!(a.replans, other.replans);
+        assert_eq!(a.migrations, other.migrations);
+        assert_eq!(a.steals, other.steals);
+        assert_identical(&a.aggregate, &other.aggregate);
+        assert_eq!(a.per_shard.len(), other.per_shard.len());
+        for (x, y) in a.per_shard.iter().zip(&other.per_shard) {
+            assert_identical(x, y);
+        }
+        assert_eq!(a.arrival_est_qps.len(), other.arrival_est_qps.len());
+        for ((ta, qa), (tb, qb)) in
+            a.arrival_est_qps.iter().zip(&other.arrival_est_qps)
+        {
+            assert_eq!(ta, tb);
+            assert_eq!(qa.to_bits(), qb.to_bits(), "rate estimate for {ta}");
+        }
+    }
+}
+
+#[test]
+fn single_server_predictive_run_is_deterministic() {
+    let (zoo, lm, profiles) = fixtures::trio();
+    let tasks = fixtures::task_names(&zoo);
+    let sc = Scenario::poisson(&tasks, fixtures::slos(&zoo, 0.5, 50.0), 60.0, 2_500.0)
+        .with_seed(7)
+        .with_admission(Admission::Predictive { horizon_ms: 250.0, headroom: 1.5 })
+        .with_dispatch(Dispatch::batched(4));
+    let server = Server::builder(&zoo, &lm, &profiles).build();
+    let a = server.run(&sc).unwrap();
+    let b = server.run(&sc).unwrap();
+    let c = Server::builder(&zoo, &lm, &profiles)
+        .build()
+        .run(&json_round_trip(&sc))
+        .unwrap();
+    assert_identical(&a, &b);
+    assert_identical(&a, &c);
+    assert!(a.total_queries > 0, "the run must actually serve something");
+}

@@ -389,10 +389,14 @@ fn arbitrary_scenario(seed: u64) -> Scenario {
         }
     };
     sc = sc.with_schedule(schedule);
-    let admission = match rng.below(4) {
+    let admission = match rng.below(5) {
         0 => Admission::Always,
         1 => Admission::QueueCap { max_queued: rng.below(16) },
         2 => Admission::Deadline { slack: 0.5 + 3.0 * rng.f64() },
+        3 => Admission::Predictive {
+            horizon_ms: 20.0 + 500.0 * rng.f64(),
+            headroom: 0.5 + 2.0 * rng.f64(),
+        },
         _ => {
             let mut weights = std::collections::BTreeMap::new();
             for t in &tasks {
@@ -426,6 +430,8 @@ fn arbitrary_scenario(seed: u64) -> Scenario {
         replan: rng.f64() < 0.5,
         steal: rng.f64() < 0.5,
         warm_migrate: rng.f64() < 0.5,
+        predictive: rng.f64() < 0.5,
+        horizon_ms: 50.0 + 500.0 * rng.f64(),
         saturation_slack: 1.0 + 4.0 * rng.f64(),
         max_migrations: rng.below(4),
     });

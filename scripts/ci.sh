@@ -1,44 +1,105 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build, test, and (when available) format check.
-# Run from anywhere; operates on the repository root.
+# Tiered CI entry point. Run from anywhere; operates on the repo root.
+#
+#   CI_TIER=1  → tier 1 only: cargo build --release + cargo test -q
+#                (the ROADMAP tier-1 gate; `make check` runs this)
+#   CI_TIER=2  → tier 2 only: benches, rustdoc, clippy, fmt, and the
+#                hermetic CLI smoke stage (assumes the code builds —
+#                the smoke stage builds the release binary itself)
+#   unset      → both tiers, tier 1 first so its failures surface fast
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
-echo "== cargo build --release =="
-cargo build --release
+TIER="${CI_TIER:-all}"
 
-echo "== cargo test -q =="
-cargo test -q
+tier1() {
+    echo "== [tier 1] cargo build --release =="
+    cargo build --release
 
-# Bench targets are plain main()s (harness = false): running them under
-# `cargo test` compile-checks every bench and executes it once — each
-# falls back to the synthetic fixture zoo (or exits cleanly) when
-# artifacts/ is absent, so this stays fast and hermetic.
-echo "== cargo test -q --benches =="
-cargo test -q --benches
+    echo "== [tier 1] cargo test -q =="
+    cargo test -q
+}
 
-# Rustdoc must stay warning-free (broken intra-doc links, bad code
-# fences); doc-examples themselves run as doc-tests under `cargo test`.
-echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
-RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+tier2() {
+    # Bench targets are plain main()s (harness = false): running them
+    # under `cargo test` compile-checks every bench and executes it once
+    # — each falls back to the synthetic fixture zoo (or exits cleanly)
+    # when artifacts/ is absent, so this stays fast and hermetic.
+    echo "== [tier 2] cargo test -q --benches =="
+    cargo test -q --benches
 
-# Lints across every target (tests, benches, examples). clippy is
-# optional in minimal toolchains; when installed, warnings are errors.
-if cargo clippy --version >/dev/null 2>&1; then
-    echo "== cargo clippy --all-targets (-D warnings) =="
-    cargo clippy --all-targets --quiet -- -D warnings
-else
-    echo "== cargo clippy skipped (clippy not installed) =="
-fi
+    # Rustdoc must stay warning-free (broken intra-doc links, bad code
+    # fences); doc-examples themselves run as doc-tests under tier 1.
+    echo "== [tier 2] cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
-# rustfmt is optional in minimal toolchains; tolerate its absence but
-# fail on real formatting drift when it is installed.
-if cargo fmt --version >/dev/null 2>&1; then
-    echo "== cargo fmt --check =="
-    cargo fmt --all -- --check
-else
-    echo "== cargo fmt --check skipped (rustfmt not installed) =="
-fi
+    # Lints across every target (tests, benches, examples). clippy is
+    # optional in minimal toolchains; when installed, warnings are errors.
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "== [tier 2] cargo clippy --all-targets (-D warnings) =="
+        cargo clippy --all-targets --quiet -- -D warnings
+    else
+        echo "== [tier 2] cargo clippy skipped (clippy not installed) =="
+    fi
 
-echo "CI OK"
+    # rustfmt is optional in minimal toolchains; tolerate its absence but
+    # fail on real formatting drift when it is installed.
+    if cargo fmt --version >/dev/null 2>&1; then
+        echo "== [tier 2] cargo fmt --check =="
+        cargo fmt --all -- --check
+    else
+        echo "== [tier 2] cargo fmt --check skipped (rustfmt not installed) =="
+    fi
+
+    smoke
+}
+
+# Hermetic CLI smoke: the serving CLI and the backlog study must run
+# end-to-end on the in-memory fixture zoo (no artifacts/), with the
+# online flags exercised and non-empty report output — so CLI flags
+# cannot rot unnoticed between releases.
+smoke() {
+    echo "== [tier 2] CLI smoke (fixture zoo, hermetic) =="
+    cargo build --release
+    local bin=target/release/sparseloom
+    local out
+
+    out="$("$bin" serve --fixture --scenario bursty --rate-qps 20 \
+        --burst-qps 120 --period-ms 400 --horizon-ms 1500 \
+        --admission predictive --shards 2 --max-batch 4 --steal --replan)"
+    printf '%s\n' "$out"
+    if ! grep -q "violation rate" <<<"$out"; then
+        echo "CLI smoke FAILED: serve produced no summary line" >&2
+        exit 1
+    fi
+    if ! grep -q "scenario: bursty" <<<"$out"; then
+        echo "CLI smoke FAILED: serve produced no scenario header" >&2
+        exit 1
+    fi
+
+    out="$("$bin" exp backlog --fixture --horizon-ms 1500)"
+    printf '%s\n' "$out"
+    # Match the arm's table row, not the report title (which would
+    # pass vacuously even if the arm itself disappeared).
+    if ! grep -q "batch<=4, predictive" <<<"$out"; then
+        echo "CLI smoke FAILED: exp backlog missing the predictive arm" >&2
+        exit 1
+    fi
+    if ! grep -q "Backlog" <<<"$out"; then
+        echo "CLI smoke FAILED: exp backlog produced no report" >&2
+        exit 1
+    fi
+}
+
+case "$TIER" in
+    1) tier1 ;;
+    2) tier2 ;;
+    all) tier1; tier2 ;;
+    *)
+        echo "unknown CI_TIER=${TIER} (want 1, 2, or unset for both)" >&2
+        exit 2
+        ;;
+esac
+
+echo "CI OK (tier: ${TIER})"
