@@ -1,0 +1,325 @@
+//! Pass group 3: plan/stitch feasibility against a zoo (`SL-FEA-*`).
+//!
+//! Structural checks first — every task resolvable, every profile's
+//! V^S space aligned with the zoo's interface (subgraph count, variant
+//! alphabet, predictor table length), the space itself representable —
+//! then, only when the structure is sound, a *probe*: run the real
+//! planning + preloading pipeline per declared shard per phase and
+//! check what comes back (selection indices in-bounds, per-task budgets
+//! within the shard pool, preload sets that fit). The probe uses the
+//! same `Coordinator::prepare` / `SparsityAwarePlanner::plan` code the
+//! server runs at session open, so `lint` rejects exactly the plans
+//! that would fail (or worse, panic) at serve time.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::{Coordinator, ServeOpts};
+use crate::planner::{PlanContext, Planner, SparsityAwarePlanner};
+use crate::profiler::TaskProfile;
+use crate::scenario::Scenario;
+use crate::soc::LatencyModel;
+use crate::workload::Slo;
+use crate::zoo::Zoo;
+
+use super::{Diagnostic, Report};
+
+/// Lint a scenario's plan/stitch feasibility against a concrete zoo +
+/// latency model + profile set. Never panics: the zoo probe only runs
+/// once the structural pass is clean.
+pub fn lint_feasibility(
+    sc: &Scenario,
+    zoo: &Zoo,
+    lm: &LatencyModel,
+    profiles: &BTreeMap<String, TaskProfile>,
+    opts: &ServeOpts,
+) -> Report {
+    let mut r = Report::new();
+    for name in &sc.tasks {
+        lint_task_structure(name, zoo, profiles, &mut r);
+    }
+    if r.has_errors() {
+        r.push(Diagnostic::info(
+            "SL-FEA-008",
+            "probe",
+            "zoo probe skipped: structural errors above would make planning unreliable",
+        ));
+        return r;
+    }
+    probe(sc, zoo, lm, profiles, opts, &mut r);
+    r
+}
+
+/// Structural alignment of one task across zoo, profile, and V^S space.
+fn lint_task_structure(
+    name: &str,
+    zoo: &Zoo,
+    profiles: &BTreeMap<String, TaskProfile>,
+    r: &mut Report,
+) {
+    let at = format!("task {name:?}");
+    let (Some(tz), Some(p)) = (zoo.tasks.get(name), profiles.get(name)) else {
+        r.push(Diagnostic::error(
+            "SL-FEA-001",
+            at,
+            "task unknown to the zoo or has no profile",
+        ));
+        return;
+    };
+    let mut aligned = true;
+    let mut misalign = |what: String| {
+        r.push(Diagnostic::error("SL-FEA-003", format!("task {name:?}"), what));
+    };
+    if tz.iface.len() != zoo.subgraphs + 1 {
+        aligned = false;
+        misalign(format!(
+            "interface has {} boundaries, want S+1 = {}",
+            tz.iface.len(),
+            zoo.subgraphs + 1
+        ));
+    }
+    if p.space.n_subgraphs != zoo.subgraphs {
+        aligned = false;
+        misalign(format!(
+            "profile space spans {} subgraph position(s), zoo pipelines have {}",
+            p.space.n_subgraphs, zoo.subgraphs
+        ));
+    }
+    if p.space.n_variants != tz.variants.len() {
+        aligned = false;
+        misalign(format!(
+            "profile space has a {}-variant alphabet, zoo ships {} variant(s)",
+            p.space.n_variants,
+            tz.variants.len()
+        ));
+    }
+    for (i, v) in tz.variants.iter().enumerate() {
+        if v.subgraphs.len() != zoo.subgraphs {
+            aligned = false;
+            misalign(format!(
+                "variant {} ({:?}) has {} subgraph(s), want {}",
+                i,
+                v.spec.name,
+                v.subgraphs.len(),
+                zoo.subgraphs
+            ));
+        }
+    }
+    match p.space.try_len() {
+        Err(e) => r.push(Diagnostic::error(
+            "SL-FEA-006",
+            format!("task {name:?}"),
+            format!("stitched space is not representable: {e}"),
+        )),
+        Ok(n) if aligned && p.acc_pred.len() != n => {
+            r.push(Diagnostic::error(
+                "SL-FEA-003",
+                format!("task {name:?}"),
+                format!(
+                    "accuracy predictor covers {} composition(s), V^S = {n}",
+                    p.acc_pred.len()
+                ),
+            ));
+        }
+        Ok(_) => {}
+    }
+}
+
+/// Run the real planning pipeline per declared shard per phase and
+/// check the resulting selections, budgets, and preload sets.
+fn probe(
+    sc: &Scenario,
+    zoo: &Zoo,
+    lm: &LatencyModel,
+    profiles: &BTreeMap<String, TaskProfile>,
+    opts: &ServeOpts,
+    r: &mut Report,
+) {
+    let universe = sc.slo_universe();
+    let shards = sc.sharding.shards.max(1);
+    let coord = Coordinator::new(zoo, lm, profiles);
+    let planner = SparsityAwarePlanner::new(zoo, lm, profiles);
+    for (phase, cfg) in sc.schedule.iter().enumerate() {
+        for shard in 0..shards {
+            let slos: BTreeMap<String, Slo> = sc
+                .tasks
+                .iter()
+                .filter(|t| sc.sharding.shard_of(t) == shard)
+                .filter_map(|t| cfg.get(t).map(|&slo| (t.clone(), slo)))
+                .collect();
+            if slos.is_empty() {
+                continue;
+            }
+            let at = if shards > 1 {
+                format!("phase {phase}, shard {shard}")
+            } else {
+                format!("phase {phase}")
+            };
+            let prepared = match coord.prepare(&slos, &universe, opts) {
+                Ok(p) => p,
+                Err(e) => {
+                    r.push(Diagnostic::error(
+                        "SL-FEA-008",
+                        at,
+                        format!("server preparation failed: {e}"),
+                    ));
+                    continue;
+                }
+            };
+            for (task, sel) in &prepared.selections {
+                match sel {
+                    None => r.push(Diagnostic::warn(
+                        "SL-FEA-007",
+                        format!("{at}, task {task:?}"),
+                        "no SLO-feasible stitched variant: the engine will serve the \
+                         best pure variant and judge it as violating",
+                    )),
+                    Some(sel) => {
+                        let len = profiles[task].space.try_len().unwrap_or(0);
+                        if sel.stitched_index >= len {
+                            r.push(Diagnostic::error(
+                                "SL-FEA-002",
+                                format!("{at}, task {task:?}"),
+                                format!(
+                                    "selected composition index {} out of bounds for \
+                                     V^S = {len}",
+                                    sel.stitched_index
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+            let plan = &prepared.preload_plan;
+            if plan.total_bytes > plan.budget_bytes {
+                r.push(Diagnostic::error(
+                    "SL-FEA-005",
+                    at.clone(),
+                    format!(
+                        "preload set ({} B) exceeds its budget ({} B)",
+                        plan.total_bytes, plan.budget_bytes
+                    ),
+                ));
+            }
+            if prepared.pool.used() > prepared.pool.capacity() {
+                r.push(Diagnostic::error(
+                    "SL-FEA-005",
+                    at.clone(),
+                    format!(
+                        "memory pool oversubscribed: {} B resident in a {} B pool",
+                        prepared.pool.used(),
+                        prepared.pool.capacity()
+                    ),
+                ));
+            }
+            let ctx = PlanContext::new(slos, prepared.pool.capacity())
+                .with_universe(universe.clone());
+            match planner.plan(&ctx) {
+                Err(e) => r.push(Diagnostic::error(
+                    "SL-FEA-008",
+                    at,
+                    format!("planner failed: {e}"),
+                )),
+                Ok(plan) => {
+                    let total: u64 = plan.task_budgets.values().sum();
+                    if total > ctx.memory_budget {
+                        r.push(Diagnostic::error(
+                            "SL-FEA-004",
+                            at,
+                            format!(
+                                "per-task budgets sum to {} B, over the {} B shard pool",
+                                total, ctx.memory_budget
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixtures;
+    use crate::scenario::Sharding;
+    use crate::stitching::StitchSpace;
+
+    fn codes(r: &Report) -> Vec<&'static str> {
+        r.diagnostics.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn clean_fixture_scenario_is_feasible() {
+        let (zoo, lm, profiles) = fixtures::quartet();
+        let sc = crate::scenario::Scenario::closed_loop(
+            &fixtures::task_names(&zoo),
+            fixtures::slos(&zoo, 0.5, 1e9),
+        );
+        let r = lint_feasibility(&sc, &zoo, &lm, &profiles, &ServeOpts::default());
+        assert!(!r.has_errors(), "{}", r.render_text());
+    }
+
+    #[test]
+    fn sharded_scenario_probes_each_partition() {
+        let (zoo, lm, profiles) = fixtures::quartet();
+        let sc = crate::scenario::Scenario::poisson(
+            &fixtures::task_names(&zoo),
+            fixtures::slos(&zoo, 0.5, 1e9),
+            20.0,
+            500.0,
+        )
+        .with_sharding(Sharding::hash(2));
+        let r = lint_feasibility(&sc, &zoo, &lm, &profiles, &ServeOpts::default());
+        assert!(!r.has_errors(), "{}", r.render_text());
+    }
+
+    #[test]
+    fn unknown_task_is_a_structural_error() {
+        let (zoo, lm, profiles) = fixtures::tiny();
+        let sc = crate::scenario::Scenario::closed_loop(
+            &["tiny".to_string(), "ghost".to_string()],
+            fixtures::slos(&zoo, 0.5, 1e9),
+        );
+        let r = lint_feasibility(&sc, &zoo, &lm, &profiles, &ServeOpts::default());
+        assert!(codes(&r).contains(&"SL-FEA-001"), "{}", r.render_text());
+        // Structural errors fence off the probe.
+        assert!(codes(&r).contains(&"SL-FEA-008"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn misaligned_profile_is_rejected_without_probing() {
+        let (zoo, lm, mut profiles) = fixtures::tiny();
+        profiles.get_mut("tiny").unwrap().acc_pred.pop();
+        let sc = crate::scenario::Scenario::closed_loop(
+            &["tiny".to_string()],
+            fixtures::slos(&zoo, 0.5, 1e9),
+        );
+        let r = lint_feasibility(&sc, &zoo, &lm, &profiles, &ServeOpts::default());
+        assert!(codes(&r).contains(&"SL-FEA-003"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn unrepresentable_space_is_typed() {
+        let (zoo, lm, mut profiles) = fixtures::tiny();
+        profiles.get_mut("tiny").unwrap().space =
+            StitchSpace { n_variants: 3, n_subgraphs: usize::BITS as usize };
+        let sc = crate::scenario::Scenario::closed_loop(
+            &["tiny".to_string()],
+            fixtures::slos(&zoo, 0.5, 1e9),
+        );
+        let r = lint_feasibility(&sc, &zoo, &lm, &profiles, &ServeOpts::default());
+        assert!(codes(&r).contains(&"SL-FEA-006"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn infeasible_slo_warns_but_does_not_block() {
+        let (zoo, lm, profiles) = fixtures::tiny();
+        let sc = crate::scenario::Scenario::closed_loop(
+            &["tiny".to_string()],
+            fixtures::slos(&zoo, 0.999, 1e9),
+        );
+        let r = lint_feasibility(&sc, &zoo, &lm, &profiles, &ServeOpts::default());
+        assert!(codes(&r).contains(&"SL-FEA-007"), "{}", r.render_text());
+        assert!(!r.has_errors(), "{}", r.render_text());
+    }
+}

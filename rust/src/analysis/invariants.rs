@@ -1,0 +1,475 @@
+//! Pass group 4: dynamic invariant verification (`SL-INV-*`).
+//!
+//! Replays a finished session's [`RequestOutcome`] stream and checks
+//! the engine's serving invariants *after the fact* — the `serve
+//! --verify` contract:
+//!
+//! - **SL-INV-001, per-task FIFO**: within a task, queries start in
+//!   submission (id) order — the engine never reorders a task's queue.
+//! - **SL-INV-002, ready-floor monotonicity**: within a task,
+//!   completions are nondecreasing in id order (each query's ready
+//!   floor is its predecessor's finish), and every event's clock is
+//!   sane (`arrival ≤ start ≤ finish`, nonnegative service/queueing).
+//! - **SL-INV-003, budget conservation**: the event log, the per-task
+//!   outcomes, and the report totals all account for the same queries —
+//!   nothing double-counted, nothing vanished; dropped requests carry
+//!   no SLO verdict; pool utilization stays within capacity.
+//! - **SL-INV-004, NaN-free metrics**: every reported number is finite.
+//! - **SL-INV-005** (info): FIFO/monotonicity skipped for a task whose
+//!   log holds duplicate query ids — the signature of a merged
+//!   multi-phase log, where per-phase clocks restart and id order is no
+//!   longer submission order.
+//!
+//! Dropped requests are excluded from the ordering checks: a drop is
+//! decided at arrival (its event pins `start = finish = arrival`), so
+//! it legally "finishes" before earlier-admitted queries complete.
+//!
+//! One diagnostic is emitted per (task, check): the first offending
+//! event is named, rather than one line per violation — a broken
+//! invariant usually breaks for a whole stream at once.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::{RequestOutcome, RunReport, ShardedReport};
+
+use super::{Diagnostic, Report};
+
+/// Clock comparisons tolerate accumulated f64 error, matching the
+/// engine's own test tolerances.
+const TOL: f64 = 1e-6;
+
+/// Verify the serving invariants over a raw event stream.
+pub fn verify_events(events: &[RequestOutcome]) -> Report {
+    let mut r = Report::new();
+    check_event_sanity(events, &mut r);
+    let mut by_task: BTreeMap<&str, Vec<&RequestOutcome>> = BTreeMap::new();
+    for e in events.iter().filter(|e| !e.dropped) {
+        by_task.entry(e.task.as_str()).or_default().push(e);
+    }
+    for (task, mut evs) in by_task {
+        evs.sort_by_key(|e| e.id);
+        if evs.windows(2).any(|w| w[0].id == w[1].id) {
+            r.push(Diagnostic::info(
+                "SL-INV-005",
+                format!("task {task:?}"),
+                "duplicate query ids (merged multi-phase log): FIFO and \
+                 ready-floor ordering not checkable across phases",
+            ));
+            continue;
+        }
+        if let Some(w) = evs.windows(2).find(|w| w[1].start_ms < w[0].start_ms - TOL) {
+            r.push(Diagnostic::error(
+                "SL-INV-001",
+                format!("task {task:?}"),
+                format!(
+                    "per-task FIFO violated: query {} started at {} ms, before \
+                     query {}'s start at {} ms",
+                    w[1].id, w[1].start_ms, w[0].id, w[0].start_ms
+                ),
+            ));
+        }
+        if let Some(w) = evs.windows(2).find(|w| w[1].finish_ms < w[0].finish_ms - TOL) {
+            r.push(Diagnostic::error(
+                "SL-INV-002",
+                format!("task {task:?}"),
+                format!(
+                    "ready floor violated: query {} finished at {} ms, before \
+                     query {}'s finish at {} ms",
+                    w[1].id, w[1].finish_ms, w[0].id, w[0].finish_ms
+                ),
+            ));
+        }
+    }
+    r
+}
+
+/// Per-event clock sanity + finiteness, one diagnostic per task per kind.
+fn check_event_sanity(events: &[RequestOutcome], r: &mut Report) {
+    let mut clock_flagged: BTreeMap<&str, ()> = BTreeMap::new();
+    let mut nan_flagged: BTreeMap<&str, ()> = BTreeMap::new();
+    for e in events {
+        let fields = [e.arrival_ms, e.start_ms, e.finish_ms, e.service_ms, e.queueing_ms];
+        if fields.iter().any(|x| !x.is_finite()) {
+            if nan_flagged.insert(e.task.as_str(), ()).is_none() {
+                r.push(Diagnostic::error(
+                    "SL-INV-004",
+                    format!("task {:?}", e.task),
+                    format!("query {} carries a non-finite timing field", e.id),
+                ));
+            }
+            continue;
+        }
+        let bad_clock = e.start_ms < e.arrival_ms - TOL
+            || e.finish_ms < e.start_ms - TOL
+            || e.service_ms < -TOL
+            || e.queueing_ms < -TOL;
+        if bad_clock && clock_flagged.insert(e.task.as_str(), ()).is_none() {
+            r.push(Diagnostic::error(
+                "SL-INV-002",
+                format!("task {:?}", e.task),
+                format!(
+                    "query {} has an inconsistent clock: arrival {} ms, start {} ms, \
+                     finish {} ms, service {} ms, queueing {} ms",
+                    e.id, e.arrival_ms, e.start_ms, e.finish_ms, e.service_ms, e.queueing_ms
+                ),
+            ));
+        }
+    }
+}
+
+/// Verify one run report: the event-stream invariants plus budget
+/// conservation between the event log, the per-task outcomes, and the
+/// report totals, and NaN-freedom of every reported metric.
+pub fn verify_report(report: &RunReport) -> Report {
+    let mut r = verify_events(&report.requests);
+    check_conservation(report, &mut r);
+    check_metric_finiteness(report, &mut r);
+    r
+}
+
+fn check_conservation(report: &RunReport, r: &mut Report) {
+    let completed_sum: usize = report.outcomes.iter().map(|o| o.queries_completed).sum();
+    let dropped_sum: usize = report.outcomes.iter().map(|o| o.queries_dropped).sum();
+    let batch_sum: usize = report.outcomes.iter().map(|o| o.batches).sum();
+    if !report.outcomes.is_empty() {
+        if completed_sum != report.total_queries {
+            r.push(Diagnostic::error(
+                "SL-INV-003",
+                "outcomes",
+                format!(
+                    "per-task completions sum to {completed_sum}, report says {}",
+                    report.total_queries
+                ),
+            ));
+        }
+        if dropped_sum != report.total_dropped {
+            r.push(Diagnostic::error(
+                "SL-INV-003",
+                "outcomes",
+                format!(
+                    "per-task drops sum to {dropped_sum}, report says {}",
+                    report.total_dropped
+                ),
+            ));
+        }
+        if batch_sum != report.total_batches {
+            r.push(Diagnostic::error(
+                "SL-INV-003",
+                "outcomes",
+                format!(
+                    "per-task batches sum to {batch_sum}, report says {}",
+                    report.total_batches
+                ),
+            ));
+        }
+    }
+    if report.total_batches > report.total_queries {
+        r.push(Diagnostic::error(
+            "SL-INV-003",
+            "totals",
+            format!(
+                "{} batches served only {} queries: a batch holds at least one query",
+                report.total_batches, report.total_queries
+            ),
+        ));
+    }
+    if !report.requests.is_empty() {
+        let served = report.requests.iter().filter(|e| !e.dropped).count();
+        let shed = report.requests.len() - served;
+        if served != report.total_queries {
+            r.push(Diagnostic::error(
+                "SL-INV-003",
+                "requests",
+                format!(
+                    "event log holds {served} completed request(s), report says {}",
+                    report.total_queries
+                ),
+            ));
+        }
+        if shed != report.total_dropped {
+            r.push(Diagnostic::error(
+                "SL-INV-003",
+                "requests",
+                format!(
+                    "event log holds {shed} dropped request(s), report says {}",
+                    report.total_dropped
+                ),
+            ));
+        }
+        if let Some(e) = report.requests.iter().find(|e| e.dropped && e.slo_ok.is_some()) {
+            r.push(Diagnostic::error(
+                "SL-INV-003",
+                format!("task {:?}", e.task),
+                format!(
+                    "dropped query {} carries an SLO verdict: drops are never judged",
+                    e.id
+                ),
+            ));
+        }
+    }
+}
+
+fn push_nonfinite(r: &mut Report, at: String, what: &str) {
+    r.push(Diagnostic::error(
+        "SL-INV-004",
+        at,
+        format!("{what} is not finite"),
+    ));
+}
+
+fn check_metric_finiteness(report: &RunReport, r: &mut Report) {
+    if !report.makespan_ms.is_finite() {
+        push_nonfinite(r, "makespan_ms".into(), "makespan");
+    }
+    for o in &report.outcomes {
+        let at = format!("task {:?}", o.task);
+        let stats = [
+            ("mean latency", o.mean_latency_ms),
+            ("p50 latency", o.p50_latency_ms),
+            ("p95 latency", o.p95_latency_ms),
+            ("p99 latency", o.p99_latency_ms),
+            ("mean queueing", o.mean_queueing_ms),
+            ("SLO accuracy bound", o.slo_accuracy),
+            ("SLO latency bound", o.slo_latency_ms),
+        ];
+        for (what, x) in stats {
+            if !x.is_finite() {
+                push_nonfinite(r, at.clone(), what);
+            }
+        }
+        if let Some(acc) = o.accuracy {
+            if !acc.is_finite() {
+                push_nonfinite(r, at.clone(), "served accuracy");
+            }
+        }
+    }
+    for (task, p) in &report.slo_forecast {
+        if !p.is_finite() || !(0.0..=1.0).contains(p) {
+            r.push(Diagnostic::error(
+                "SL-INV-004",
+                format!("slo_forecast.{task}"),
+                format!("projected violation rate {p} outside [0, 1]"),
+            ));
+        }
+    }
+    for (what, x) in [
+        ("violation rate", report.violation_rate()),
+        ("throughput", report.throughput_qps()),
+        ("fairness index", report.fairness_index()),
+        ("mean batch size", report.mean_batch_size()),
+    ] {
+        if !x.is_finite() {
+            push_nonfinite(r, "derived".into(), what);
+        }
+    }
+}
+
+/// Verify a sharded run: every shard report, the cross-shard aggregate,
+/// conservation between the two, and the sharded-only telemetry fields.
+pub fn verify_sharded(report: &ShardedReport) -> Report {
+    let mut r = Report::new();
+    for (i, shard) in report.per_shard.iter().enumerate() {
+        merge_prefixed(&mut r, verify_report(shard), &format!("shard {i}"));
+    }
+    merge_prefixed(&mut r, verify_report(&report.aggregate), "aggregate");
+    if !report.per_shard.is_empty() {
+        let q: usize = report.per_shard.iter().map(|s| s.total_queries).sum();
+        let d: usize = report.per_shard.iter().map(|s| s.total_dropped).sum();
+        if q != report.aggregate.total_queries || d != report.aggregate.total_dropped {
+            r.push(Diagnostic::error(
+                "SL-INV-003",
+                "aggregate",
+                format!(
+                    "shards served {q} (+{d} dropped) but the aggregate says {} (+{})",
+                    report.aggregate.total_queries, report.aggregate.total_dropped
+                ),
+            ));
+        }
+    }
+    for (i, &u) in report.budget_utilization.iter().enumerate() {
+        if !u.is_finite() {
+            r.push(Diagnostic::error(
+                "SL-INV-004",
+                format!("shard {i}"),
+                "budget utilization is not finite",
+            ));
+        } else if !(0.0..=1.0 + TOL).contains(&u) {
+            r.push(Diagnostic::error(
+                "SL-INV-003",
+                format!("shard {i}"),
+                format!("budget utilization {u} outside [0, 1]: pool over capacity"),
+            ));
+        }
+    }
+    for (task, &qps) in &report.arrival_est_qps {
+        if !qps.is_finite() || qps < 0.0 {
+            r.push(Diagnostic::error(
+                "SL-INV-004",
+                format!("arrival_est.{task}"),
+                format!("estimated arrival rate {qps} qps is not a finite nonnegative"),
+            ));
+        }
+    }
+    r
+}
+
+fn merge_prefixed(into: &mut Report, sub: Report, prefix: &str) {
+    for mut d in sub.diagnostics {
+        d.at = format!("{prefix}, {}", d.at);
+        into.push(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixtures;
+    use crate::scenario::{Scenario, Server};
+
+    fn event(id: u64, arrival: f64, start: f64, finish: f64) -> RequestOutcome {
+        RequestOutcome {
+            id,
+            task: "t".into(),
+            arrival_ms: arrival,
+            start_ms: start,
+            finish_ms: finish,
+            service_ms: finish - start,
+            queueing_ms: start - arrival,
+            dropped: false,
+            slo_ok: Some(true),
+        }
+    }
+
+    fn codes(r: &Report) -> Vec<&'static str> {
+        r.diagnostics.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn real_run_satisfies_all_invariants() {
+        let (zoo, lm, profiles) = fixtures::trio();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let sc = Scenario::closed_loop(
+            &fixtures::task_names(&zoo),
+            fixtures::slos(&zoo, 0.5, 1e9),
+        )
+        .with_queries(20);
+        let report = server.run(&sc).unwrap();
+        let r = verify_report(&report);
+        assert!(r.is_empty(), "{}", r.render_text());
+    }
+
+    #[test]
+    fn fifo_violation_is_flagged() {
+        let evs = vec![event(0, 0.0, 10.0, 20.0), event(1, 1.0, 5.0, 25.0)];
+        let r = verify_events(&evs);
+        assert!(codes(&r).contains(&"SL-INV-001"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn ready_floor_violation_is_flagged() {
+        let evs = vec![event(0, 0.0, 1.0, 30.0), event(1, 1.0, 2.0, 20.0)];
+        let r = verify_events(&evs);
+        assert!(codes(&r).contains(&"SL-INV-002"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn inconsistent_clock_is_flagged_once_per_task() {
+        let evs = vec![
+            event(0, 10.0, 5.0, 20.0), // starts before it arrives
+            event(1, 10.0, 6.0, 21.0), // also broken, same task: one diag
+        ];
+        let r = verify_events(&evs);
+        assert_eq!(
+            codes(&r).iter().filter(|&&c| c == "SL-INV-002").count(),
+            1,
+            "{}",
+            r.render_text()
+        );
+    }
+
+    #[test]
+    fn dropped_requests_are_exempt_from_ordering() {
+        // Query 1 is dropped at arrival (finish = arrival = 1.0), long
+        // before query 0 completes — legal, drops decide at arrival.
+        let mut drop = event(1, 1.0, 1.0, 1.0);
+        drop.dropped = true;
+        drop.slo_ok = None;
+        drop.service_ms = 0.0;
+        drop.queueing_ms = 0.0;
+        let evs = vec![event(0, 0.0, 10.0, 20.0), drop];
+        let r = verify_events(&evs);
+        assert!(r.is_empty(), "{}", r.render_text());
+    }
+
+    #[test]
+    fn duplicate_ids_skip_ordering_with_a_note() {
+        // A merged two-phase log: ids restart, clocks restart.
+        let evs = vec![
+            event(0, 0.0, 5.0, 15.0),
+            event(1, 1.0, 15.0, 25.0),
+            event(0, 0.0, 2.0, 12.0),
+            event(1, 1.0, 12.0, 22.0),
+        ];
+        let r = verify_events(&evs);
+        assert!(codes(&r).contains(&"SL-INV-005"), "{}", r.render_text());
+        assert!(!r.has_errors(), "{}", r.render_text());
+    }
+
+    #[test]
+    fn conservation_mismatch_is_flagged() {
+        let (zoo, lm, profiles) = fixtures::tiny();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let sc = Scenario::closed_loop(
+            &fixtures::task_names(&zoo),
+            fixtures::slos(&zoo, 0.5, 1e9),
+        )
+        .with_queries(5);
+        let mut report = server.run(&sc).unwrap();
+        report.total_queries += 1;
+        let r = verify_report(&report);
+        assert!(codes(&r).contains(&"SL-INV-003"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn judged_drop_is_flagged() {
+        let (zoo, lm, profiles) = fixtures::tiny();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let sc = Scenario::closed_loop(
+            &fixtures::task_names(&zoo),
+            fixtures::slos(&zoo, 0.5, 1e9),
+        )
+        .with_queries(5);
+        let mut report = server.run(&sc).unwrap();
+        report.requests[2].dropped = true;
+        report.requests[2].slo_ok = Some(true);
+        let r = verify_report(&report);
+        // The forged drop breaks both the drop accounting and the
+        // no-verdict rule.
+        assert!(codes(&r).contains(&"SL-INV-003"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn nan_metrics_are_flagged() {
+        let mut evs = vec![event(0, 0.0, 1.0, 2.0)];
+        evs[0].service_ms = f64::NAN;
+        let r = verify_events(&evs);
+        assert!(codes(&r).contains(&"SL-INV-004"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn sharded_utilization_and_conservation() {
+        let clean = ShardedReport::default();
+        assert!(verify_sharded(&clean).is_empty());
+        let over = ShardedReport {
+            budget_utilization: vec![0.5, 1.7],
+            ..Default::default()
+        };
+        let r = verify_sharded(&over);
+        assert!(codes(&r).contains(&"SL-INV-003"), "{}", r.render_text());
+        let mut skewed = ShardedReport::default();
+        skewed.per_shard.push(RunReport { total_queries: 3, ..Default::default() });
+        skewed.aggregate.total_queries = 5;
+        let r = verify_sharded(&skewed);
+        assert!(codes(&r).contains(&"SL-INV-003"), "{}", r.render_text());
+    }
+}

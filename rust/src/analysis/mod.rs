@@ -1,0 +1,257 @@
+//! `sparselint` — static analysis & invariant verification for
+//! scenarios, plans, and stitched variants (DESIGN.md §Static analysis).
+//!
+//! The stack has five interacting config surfaces (arrivals, admission,
+//! dispatch, sharding, planner) plus the combinatorial V^S stitched
+//! space; this module rejects bad configurations *before* a replay
+//! starts instead of panicking mid-run. Four pass groups:
+//!
+//! 1. **Scenario well-formedness** ([`scenario::lint_scenario`], codes
+//!    `SL-SCN-*`): duplicate tasks, phases missing SLOs, universe ⊉
+//!    schedule, nonpositive rates/horizons, admission parameter ranges,
+//!    sharding maps naming unknown tasks or out-of-range shards,
+//!    `max_batch == 0` footguns.
+//! 2. **Cross-layer consistency** (same entry point, codes `SL-XLY-*`):
+//!    `predictive` without a positive `horizon_ms`, `steal`/
+//!    `warm_migrate` with `shards < 2`, replan knobs on a single-server
+//!    run.
+//! 3. **Plan/stitch feasibility against a zoo**
+//!    ([`feasibility::lint_feasibility`], codes `SL-FEA-*`): every
+//!    selection's composition index in-bounds for V^S, interface
+//!    alignment across subgraph positions, per-task budgets summing
+//!    within the shard pool, preload sets that fit.
+//! 4. **Dynamic invariant verification** ([`invariants`], codes
+//!    `SL-INV-*`): replay a session's `RequestOutcome` stream and check
+//!    per-task FIFO, ready-floor monotonicity, budget conservation, and
+//!    NaN-free metrics.
+//!
+//! Every diagnostic carries a stable reason code, a severity, a
+//! location, and a message; a [`Report`] renders as aligned text or
+//! JSON. Error-level checks are enforced fail-fast at `Session` open
+//! and `ShardedServer::build`; the full pass set runs from
+//! `sparseloom lint <scenario.json>`, and `serve --verify` runs the
+//! invariant verifier over the finished run.
+
+pub mod feasibility;
+pub mod invariants;
+pub mod scenario;
+
+pub use feasibility::lint_feasibility;
+pub use scenario::lint_scenario;
+
+use anyhow::{bail, Result};
+
+use crate::json::Json;
+
+/// Diagnostic severity. `Error` diagnostics make `lint` exit nonzero
+/// and are enforced fail-fast at session open / sharded build; `Warn`
+/// flags configurations that run but almost certainly do not mean what
+/// they say; `Info` is advisory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    /// Fixed-width label used in text rendering and JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// One finding: a stable reason code, severity, a location within the
+/// analyzed object (`"schedule[1]"`, `"task \"beta\""`, `"shard 2"`),
+/// and a human message.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Stable reason code (`SL-SCN-001` …). Codes are append-only: a
+    /// retired check's code is never reused.
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Where in the scenario/plan/event stream the finding anchors.
+    pub at: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, at: impl Into<String>, message: impl Into<String>) -> Self {
+        Self { code, severity: Severity::Error, at: at.into(), message: message.into() }
+    }
+
+    pub fn warn(code: &'static str, at: impl Into<String>, message: impl Into<String>) -> Self {
+        Self { code, severity: Severity::Warn, at: at.into(), message: message.into() }
+    }
+
+    pub fn info(code: &'static str, at: impl Into<String>, message: impl Into<String>) -> Self {
+        Self { code, severity: Severity::Info, at: at.into(), message: message.into() }
+    }
+
+    /// One text line: `error SL-SCN-004 [schedule[1]] message`.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<5} {} [{}] {}",
+            self.severity.label(),
+            self.code,
+            self.at,
+            self.message
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::Str(self.code.to_string())),
+            ("severity", Json::Str(self.severity.label().to_string())),
+            ("at", Json::Str(self.at.clone())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+/// An ordered collection of diagnostics from one or more passes.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diagnostics.push(d);
+    }
+
+    /// Fold another pass's findings into this report.
+    pub fn merge(&mut self, other: Report) {
+        self.diagnostics.extend(other.diagnostics);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    pub fn notes(&self) -> usize {
+        self.count(Severity::Info)
+    }
+
+    fn count(&self, sev: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == sev).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.errors() > 0
+    }
+
+    /// Summary line: `2 error(s), 1 warning(s), 0 note(s)`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} error(s), {} warning(s), {} note(s)",
+            self.errors(),
+            self.warnings(),
+            self.notes()
+        )
+    }
+
+    /// Full text rendering: one line per diagnostic (most severe
+    /// first, original order within a severity), then the summary.
+    pub fn render_text(&self) -> String {
+        let mut lines: Vec<String> = Vec::with_capacity(self.diagnostics.len() + 1);
+        for sev in [Severity::Error, Severity::Warn, Severity::Info] {
+            for d in &self.diagnostics {
+                if d.severity == sev {
+                    lines.push(d.render());
+                }
+            }
+        }
+        lines.push(self.summary());
+        lines.join("\n")
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("errors", Json::Num(self.errors() as f64)),
+            ("warnings", Json::Num(self.warnings() as f64)),
+            ("notes", Json::Num(self.notes() as f64)),
+            (
+                "diagnostics",
+                Json::arr(self.diagnostics.iter().map(Diagnostic::to_json)),
+            ),
+        ])
+    }
+
+    /// Fail-fast gate: `Err` listing every Error-level diagnostic when
+    /// any exist (the `Session` open / `ShardedServer::build` contract),
+    /// `Ok` otherwise — warnings never block.
+    pub fn fail_on_errors(&self, what: &str) -> Result<()> {
+        if !self.has_errors() {
+            return Ok(());
+        }
+        let lines: Vec<String> = self
+            .diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(Diagnostic::render)
+            .collect();
+        bail!("{what} rejected by sparselint:\n{}", lines.join("\n"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        let mut r = Report::new();
+        r.push(Diagnostic::warn("SL-SCN-010", "dispatch", "max_batch == 0 behaves as 1"));
+        r.push(Diagnostic::error("SL-SCN-002", "tasks[1]", "duplicate task \"a\""));
+        r.push(Diagnostic::info("SL-XLY-007", "planner", "batch_aware at max_batch 1"));
+        r
+    }
+
+    #[test]
+    fn counts_and_gate() {
+        let r = sample();
+        assert_eq!(r.errors(), 1);
+        assert_eq!(r.warnings(), 1);
+        assert_eq!(r.notes(), 1);
+        assert!(r.has_errors());
+        let err = r.fail_on_errors("scenario").unwrap_err().to_string();
+        assert!(err.contains("SL-SCN-002"), "{err}");
+        assert!(!err.contains("SL-SCN-010"), "warnings must not block: {err}");
+        let clean = Report::new();
+        assert!(clean.fail_on_errors("scenario").is_ok());
+    }
+
+    #[test]
+    fn text_orders_by_severity_and_summarizes() {
+        let text = sample().render_text();
+        let first = text.lines().next().unwrap();
+        assert!(first.starts_with("error"), "{text}");
+        assert!(text.ends_with("1 error(s), 1 warning(s), 1 note(s)"), "{text}");
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let j = sample().to_json();
+        assert_eq!(j.req("errors").unwrap().as_usize(), Some(1));
+        let ds = j.req("diagnostics").unwrap().as_arr().unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds[1].req("code").unwrap().as_str(), Some("SL-SCN-002"));
+        assert_eq!(ds[1].req("severity").unwrap().as_str(), Some("error"));
+    }
+}

@@ -1,0 +1,682 @@
+//! Pass groups 1–2: scenario well-formedness (`SL-SCN-*`) and
+//! cross-layer consistency (`SL-XLY-*`).
+//!
+//! [`lint_scenario`] runs both groups over a [`Scenario`] with no zoo
+//! in sight — everything here is decidable from the file alone. The
+//! fail-fast subsets live here too: [`session_gate`] (Error-level
+//! checks enforced when a `Session` opens, restricted to conditions
+//! that are also valid for the per-shard sub-scenarios the sharded
+//! drive opens) and [`build_gate`] (enforced at
+//! `ShardedServer::build`).
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+use crate::profiler::TaskProfile;
+use crate::scenario::{Admission, Arrival, Scenario, ShardAssignment, Sharding};
+use crate::workload::Slo;
+
+use super::{Diagnostic, Report};
+
+/// Lint a scenario: well-formedness (group 1) + cross-layer
+/// consistency (group 2). Pure — never panics, never touches a zoo.
+pub fn lint_scenario(sc: &Scenario) -> Report {
+    let mut r = Report::new();
+    lint_tasks(sc, &mut r);
+    lint_schedule(sc, &mut r);
+    lint_universe(sc, &mut r);
+    lint_arrival(sc, &mut r, true);
+    lint_admission(&sc.admission, &mut r);
+    lint_dispatch(sc, &mut r);
+    lint_sharding_vs_tasks(&sc.sharding, &sc.tasks, &mut r);
+    lint_cross_layer(sc, &mut r);
+    r
+}
+
+/// Error-level checks enforced when a [`crate::scenario::Session`]
+/// opens for `phase`. Restricted to conditions that hold for per-shard
+/// sub-scenarios too (filtered task list + schedule, original arrival/
+/// sharding/planner blocks): duplicate tasks, tasks without a profile,
+/// tasks without an SLO in this phase, malformed SLO bounds in this
+/// phase, and nonpositive arrival parameters.
+pub fn session_gate(
+    sc: &Scenario,
+    phase: usize,
+    profiles: &BTreeMap<String, TaskProfile>,
+) -> Report {
+    let mut r = Report::new();
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    let slos = sc.schedule.get(phase);
+    for (i, name) in sc.tasks.iter().enumerate() {
+        if !seen.insert(name.as_str()) {
+            r.push(Diagnostic::error(
+                "SL-SCN-002",
+                format!("tasks[{i}]"),
+                format!("scenario lists task {name:?} more than once"),
+            ));
+            continue;
+        }
+        if !profiles.contains_key(name) {
+            r.push(Diagnostic::error(
+                "SL-FEA-001",
+                format!("tasks[{i}]"),
+                format!("scenario references unknown task {name:?} (no profile on this server)"),
+            ));
+        }
+        match slos.and_then(|cfg| cfg.get(name)) {
+            None => r.push(Diagnostic::error(
+                "SL-SCN-004",
+                format!("schedule[{phase}]"),
+                format!("scenario phase {phase} has no SLO for task {name:?}"),
+            )),
+            Some(slo) => lint_slo_bounds(slo, &format!("schedule[{phase}].{name}"), &mut r),
+        }
+    }
+    lint_arrival(sc, &mut r, false);
+    r
+}
+
+/// Error-level checks enforced at `ShardedServer::build`: an explicit
+/// assignment must only name tasks the servers can actually serve, and
+/// must keep shard indices inside the shard count. (`Sharding::shard_of`
+/// keeps its documented wrap/fallback behavior for raw use; a *built*
+/// deployment rejects the config instead.)
+pub fn build_gate(
+    sharding: &Sharding,
+    profiles: &BTreeMap<String, TaskProfile>,
+) -> Report {
+    let mut r = Report::new();
+    let n = sharding.shards.max(1);
+    if let ShardAssignment::Explicit(map) = &sharding.assignment {
+        for (task, &shard) in map {
+            if !profiles.contains_key(task) {
+                r.push(Diagnostic::error(
+                    "SL-SCN-008",
+                    format!("sharding.map.{task}"),
+                    format!("sharding map names unknown task {task:?}"),
+                ));
+            }
+            if shard >= n {
+                r.push(Diagnostic::error(
+                    "SL-SCN-009",
+                    format!("sharding.map.{task}"),
+                    format!("shard index {shard} out of range for {n} shard(s)"),
+                ));
+            }
+        }
+    }
+    r
+}
+
+// ---- group 1: well-formedness ---------------------------------------
+
+fn lint_tasks(sc: &Scenario, r: &mut Report) {
+    if sc.tasks.is_empty() {
+        r.push(Diagnostic::error(
+            "SL-SCN-001",
+            "tasks",
+            "scenario has an empty task list: nothing would be served",
+        ));
+    }
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    for (i, name) in sc.tasks.iter().enumerate() {
+        if !seen.insert(name.as_str()) {
+            r.push(Diagnostic::error(
+                "SL-SCN-002",
+                format!("tasks[{i}]"),
+                format!("scenario lists task {name:?} more than once"),
+            ));
+        }
+    }
+}
+
+fn lint_schedule(sc: &Scenario, r: &mut Report) {
+    if sc.schedule.is_empty() {
+        r.push(Diagnostic::error(
+            "SL-SCN-003",
+            "schedule",
+            "scenario has an empty SLO schedule: no phase to serve",
+        ));
+        return;
+    }
+    for (phase, cfg) in sc.schedule.iter().enumerate() {
+        for name in &sc.tasks {
+            if !cfg.contains_key(name) {
+                r.push(Diagnostic::error(
+                    "SL-SCN-004",
+                    format!("schedule[{phase}]"),
+                    format!("phase {phase} has no SLO for task {name:?}"),
+                ));
+            }
+        }
+        for (name, slo) in cfg {
+            lint_slo_bounds(slo, &format!("schedule[{phase}].{name}"), r);
+        }
+    }
+}
+
+// NaN bounds are Errors (every comparison against NaN is false, so a
+// NaN SLO silently reports zero violations — the gate must refuse it).
+// Merely *unsatisfiable* bounds (accuracy > 1, latency ≤ 0) are Warns:
+// the engine legally serves them best-effort and judges them as
+// violating — the "impossible SLO" experiments depend on that.
+fn lint_slo_bounds(slo: &Slo, at: &str, r: &mut Report) {
+    if slo.min_accuracy.is_nan() || slo.max_latency_ms.is_nan() {
+        r.push(Diagnostic::error(
+            "SL-SCN-012",
+            at.to_string(),
+            "NaN SLO bound: comparisons against NaN are all false, so violations \
+             would go unreported",
+        ));
+        return;
+    }
+    if !(0.0..=1.0).contains(&slo.min_accuracy) {
+        r.push(Diagnostic::warn(
+            "SL-SCN-012",
+            at.to_string(),
+            format!(
+                "min_accuracy {} outside [0, 1]: this SLO is unsatisfiable (or \
+                 trivial) by construction",
+                slo.min_accuracy
+            ),
+        ));
+    }
+    if slo.max_latency_ms <= 0.0 {
+        r.push(Diagnostic::warn(
+            "SL-SCN-012",
+            at.to_string(),
+            format!(
+                "max_latency_ms {} is not positive: every served query will violate",
+                slo.max_latency_ms
+            ),
+        ));
+    }
+}
+
+fn lint_universe(sc: &Scenario, r: &mut Report) {
+    for (i, slo) in sc.universe.iter().enumerate() {
+        lint_slo_bounds(slo, &format!("universe[{i}]"), r);
+    }
+    if sc.universe.is_empty() {
+        return; // Ψ derives from the schedule: superset by construction.
+    }
+    for (phase, cfg) in sc.schedule.iter().enumerate() {
+        for (name, slo) in cfg {
+            if !sc.universe.iter().any(|u| u == slo) {
+                r.push(Diagnostic::error(
+                    "SL-SCN-005",
+                    format!("schedule[{phase}].{name}"),
+                    format!(
+                        "SLO (acc ≥ {}, lat ≤ {} ms) served in phase {phase} is missing \
+                         from the explicit universe Ψ: the preloader would never \
+                         optimize for it",
+                        slo.min_accuracy, slo.max_latency_ms
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Arrival-process parameter checks. `full` adds the trace-content
+/// checks that only make sense for the top-level scenario (the sharded
+/// drive routes one shared stream, so per-shard sub-scenarios legally
+/// carry trace entries for other shards' tasks).
+fn lint_arrival(sc: &Scenario, r: &mut Report, full: bool) {
+    let bad = |x: f64| !x.is_finite() || x <= 0.0;
+    match &sc.arrival {
+        Arrival::ClosedLoop { queries, stagger_ms } => {
+            if *queries == 0 {
+                r.push(Diagnostic::warn(
+                    "SL-SCN-013",
+                    "arrival",
+                    "closed loop with 0 queries per task: the run is empty",
+                ));
+            }
+            if !stagger_ms.is_finite() || *stagger_ms < 0.0 {
+                r.push(Diagnostic::error(
+                    "SL-SCN-006",
+                    "arrival.stagger_ms",
+                    format!("stagger_ms {stagger_ms} must be finite and ≥ 0"),
+                ));
+            }
+        }
+        Arrival::PoissonOpenLoop { rate_qps, horizon_ms } => {
+            if bad(*rate_qps) {
+                r.push(Diagnostic::error(
+                    "SL-SCN-006",
+                    "arrival.rate_qps",
+                    format!("rate_qps {rate_qps} must be finite and > 0"),
+                ));
+            }
+            if bad(*horizon_ms) {
+                r.push(Diagnostic::error(
+                    "SL-SCN-006",
+                    "arrival.horizon_ms",
+                    format!("horizon_ms {horizon_ms} must be finite and > 0"),
+                ));
+            }
+        }
+        Arrival::Bursty { base_qps, burst_qps, period_ms, horizon_ms } => {
+            if !base_qps.is_finite() || *base_qps < 0.0 {
+                r.push(Diagnostic::error(
+                    "SL-SCN-006",
+                    "arrival.base_qps",
+                    format!("base_qps {base_qps} must be finite and ≥ 0"),
+                ));
+            }
+            if bad(*burst_qps) {
+                r.push(Diagnostic::error(
+                    "SL-SCN-006",
+                    "arrival.burst_qps",
+                    format!("burst_qps {burst_qps} must be finite and > 0"),
+                ));
+            }
+            if bad(*period_ms) {
+                r.push(Diagnostic::error(
+                    "SL-SCN-006",
+                    "arrival.period_ms",
+                    format!("period_ms {period_ms} must be finite and > 0"),
+                ));
+            }
+            if bad(*horizon_ms) {
+                r.push(Diagnostic::error(
+                    "SL-SCN-006",
+                    "arrival.horizon_ms",
+                    format!("horizon_ms {horizon_ms} must be finite and > 0"),
+                ));
+            }
+        }
+        Arrival::Trace(queries) => {
+            if !full {
+                return;
+            }
+            if queries.is_empty() {
+                r.push(Diagnostic::warn(
+                    "SL-SCN-013",
+                    "arrival",
+                    "empty trace: the run is empty",
+                ));
+            }
+            let tasks: BTreeSet<&str> = sc.tasks.iter().map(String::as_str).collect();
+            let mut last_arrival: BTreeMap<&str, f64> = BTreeMap::new();
+            for (i, q) in queries.iter().enumerate() {
+                if !q.arrival_ms.is_finite() || q.arrival_ms < 0.0 {
+                    r.push(Diagnostic::error(
+                        "SL-SCN-006",
+                        format!("arrival.queries[{i}]"),
+                        format!("arrival_ms {} must be finite and ≥ 0", q.arrival_ms),
+                    ));
+                }
+                if !tasks.contains(q.task.as_str()) {
+                    r.push(Diagnostic::error(
+                        "SL-SCN-011",
+                        format!("arrival.queries[{i}]"),
+                        format!("trace query {} targets task {:?} not in the scenario", q.id, q.task),
+                    ));
+                } else if let Some(&prev) = last_arrival.get(q.task.as_str()) {
+                    if q.arrival_ms < prev {
+                        r.push(Diagnostic::warn(
+                            "SL-SCN-011",
+                            format!("arrival.queries[{i}]"),
+                            format!(
+                                "trace arrivals for task {:?} go back in time \
+                                 ({} ms after {} ms): FIFO order follows trace \
+                                 position, not arrival stamps",
+                                q.task, q.arrival_ms, prev
+                            ),
+                        ));
+                    }
+                }
+                last_arrival.insert(q.task.as_str(), q.arrival_ms);
+            }
+        }
+    }
+}
+
+fn lint_admission(adm: &Admission, r: &mut Report) {
+    let bad = |x: f64| !x.is_finite() || x <= 0.0;
+    match adm {
+        Admission::Always | Admission::QueueCap { .. } => {}
+        Admission::Deadline { slack } => {
+            if bad(*slack) {
+                r.push(Diagnostic::error(
+                    "SL-SCN-007",
+                    "admission.slack",
+                    format!("deadline slack {slack} must be finite and > 0"),
+                ));
+            }
+        }
+        Admission::Fair { slack, weights } => {
+            if bad(*slack) {
+                r.push(Diagnostic::error(
+                    "SL-SCN-007",
+                    "admission.slack",
+                    format!("fair slack {slack} must be finite and > 0"),
+                ));
+            }
+            for (task, w) in weights {
+                if bad(*w) {
+                    r.push(Diagnostic::error(
+                        "SL-SCN-007",
+                        format!("admission.weights.{task}"),
+                        format!("fair-share weight {w} must be finite and > 0"),
+                    ));
+                }
+            }
+        }
+        Admission::Predictive { horizon_ms, headroom } => {
+            if bad(*horizon_ms) {
+                r.push(Diagnostic::error(
+                    "SL-SCN-007",
+                    "admission.horizon_ms",
+                    format!("predictive horizon_ms {horizon_ms} must be finite and > 0"),
+                ));
+            }
+            if bad(*headroom) {
+                r.push(Diagnostic::error(
+                    "SL-SCN-007",
+                    "admission.headroom",
+                    format!("predictive headroom {headroom} must be finite and > 0"),
+                ));
+            }
+        }
+    }
+}
+
+fn lint_dispatch(sc: &Scenario, r: &mut Report) {
+    if sc.dispatch.max_batch == 0 {
+        r.push(Diagnostic::warn(
+            "SL-SCN-010",
+            "dispatch.max_batch",
+            "max_batch == 0 behaves as 1 (the take rule clamps): say 1 if you mean no batching",
+        ));
+    }
+    if sc.dispatch.is_batching() && sc.dispatch.min_queue == 0 {
+        r.push(Diagnostic::warn(
+            "SL-SCN-010",
+            "dispatch.min_queue",
+            "min_queue == 0 behaves as 1: coalescing still needs a waiting query",
+        ));
+    }
+    if sc.sharding.shards == 0 {
+        r.push(Diagnostic::warn(
+            "SL-SCN-010",
+            "sharding.shards",
+            "shards == 0 is clamped to 1: say 1 if you mean a single server",
+        ));
+    }
+}
+
+fn lint_sharding_vs_tasks(sharding: &Sharding, tasks: &[String], r: &mut Report) {
+    let n = sharding.shards.max(1);
+    if let ShardAssignment::Explicit(map) = &sharding.assignment {
+        for (task, &shard) in map {
+            if !tasks.iter().any(|t| t == task) {
+                r.push(Diagnostic::error(
+                    "SL-SCN-008",
+                    format!("sharding.map.{task}"),
+                    format!("sharding map names task {task:?} not in the scenario"),
+                ));
+            }
+            if shard >= n {
+                r.push(Diagnostic::error(
+                    "SL-SCN-009",
+                    format!("sharding.map.{task}"),
+                    format!("shard index {shard} out of range for {n} shard(s)"),
+                ));
+            }
+        }
+    }
+}
+
+// ---- group 2: cross-layer consistency --------------------------------
+
+fn lint_cross_layer(sc: &Scenario, r: &mut Report) {
+    let p = &sc.planner;
+    let online = p.replan || p.steal;
+    if p.predictive && (!p.horizon_ms.is_finite() || p.horizon_ms <= 0.0) {
+        r.push(Diagnostic::error(
+            "SL-XLY-001",
+            "planner.horizon_ms",
+            format!(
+                "predictive triggers need a positive forecast horizon, got {}",
+                p.horizon_ms
+            ),
+        ));
+    }
+    if sc.sharding.shards < 2 {
+        if p.steal {
+            r.push(Diagnostic::warn(
+                "SL-XLY-002",
+                "planner.steal",
+                "work stealing needs ≥ 2 shards: with one server there is nobody to steal from",
+            ));
+        }
+        if p.warm_migrate {
+            r.push(Diagnostic::warn(
+                "SL-XLY-002",
+                "planner.warm_migrate",
+                "warm migration needs ≥ 2 shards: there is no other pool to carry blobs to",
+            ));
+        }
+        if p.replan {
+            r.push(Diagnostic::warn(
+                "SL-XLY-003",
+                "planner.replan",
+                "online re-planning acts on a sharded run: with shards < 2 the knob never fires",
+            ));
+        }
+    }
+    if online && (!p.saturation_slack.is_finite() || p.saturation_slack <= 0.0) {
+        r.push(Diagnostic::error(
+            "SL-XLY-004",
+            "planner.saturation_slack",
+            format!(
+                "online paths trigger on saturation_slack × mean SLO latency; \
+                 {} would saturate immediately (or never)",
+                p.saturation_slack
+            ),
+        ));
+    }
+    if p.warm_migrate && !online {
+        r.push(Diagnostic::warn(
+            "SL-XLY-005",
+            "planner.warm_migrate",
+            "warm_migrate only acts on the replan/steal adoption paths: alone it is a silent no-op",
+        ));
+    }
+    if p.replan && p.max_migrations == 0 {
+        r.push(Diagnostic::warn(
+            "SL-XLY-006",
+            "planner.max_migrations",
+            "replan with max_migrations == 0 evaluates migrations it may never apply",
+        ));
+    }
+    if p.batch_aware && sc.dispatch.max_batch <= 1 {
+        r.push(Diagnostic::info(
+            "SL-XLY-007",
+            "planner.batch_aware",
+            "batch-aware planning with max_batch ≤ 1 plans at the batch-1 operating point anyway",
+        ));
+    }
+    if matches!(sc.arrival, Arrival::ClosedLoop { .. }) && sc.admission != Admission::Always {
+        r.push(Diagnostic::info(
+            "SL-XLY-008",
+            "admission",
+            "closed loops are self-clocking and never build backlog: this admission policy never sheds",
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{Dispatch, PlannerConfig};
+    use crate::workload::Query;
+
+    fn slos() -> BTreeMap<String, Slo> {
+        BTreeMap::from([
+            ("a".to_string(), Slo { min_accuracy: 0.8, max_latency_ms: 40.0 }),
+            ("b".to_string(), Slo { min_accuracy: 0.9, max_latency_ms: 25.0 }),
+        ])
+    }
+
+    fn tasks() -> Vec<String> {
+        vec!["a".to_string(), "b".to_string()]
+    }
+
+    fn codes(r: &Report) -> Vec<&'static str> {
+        r.diagnostics.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn clean_scenario_is_clean() {
+        let sc = Scenario::closed_loop(&tasks(), slos());
+        let r = lint_scenario(&sc);
+        assert!(r.is_empty(), "{}", r.render_text());
+    }
+
+    #[test]
+    fn duplicate_and_missing_slo() {
+        let mut sc = Scenario::closed_loop(&tasks(), slos());
+        sc.tasks.push("a".to_string());
+        sc.schedule[0].remove("b");
+        let r = lint_scenario(&sc);
+        assert!(codes(&r).contains(&"SL-SCN-002"), "{}", r.render_text());
+        assert!(codes(&r).contains(&"SL-SCN-004"), "{}", r.render_text());
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn universe_must_cover_schedule() {
+        let sc = Scenario::closed_loop(&tasks(), slos())
+            .with_universe(vec![Slo { min_accuracy: 0.8, max_latency_ms: 40.0 }]);
+        let r = lint_scenario(&sc);
+        // b's SLO (0.9, 25 ms) is served but absent from Ψ.
+        assert!(codes(&r).contains(&"SL-SCN-005"), "{}", r.render_text());
+        // A covering universe is clean.
+        let ok = Scenario::closed_loop(&tasks(), slos()).with_universe(vec![
+            Slo { min_accuracy: 0.8, max_latency_ms: 40.0 },
+            Slo { min_accuracy: 0.9, max_latency_ms: 25.0 },
+        ]);
+        assert!(lint_scenario(&ok).is_empty());
+    }
+
+    #[test]
+    fn nonpositive_rates_and_admission_ranges() {
+        let sc = Scenario::poisson(&tasks(), slos(), 0.0, -5.0)
+            .with_admission(Admission::Predictive { horizon_ms: -1.0, headroom: 0.0 });
+        let r = lint_scenario(&sc);
+        let c = codes(&r);
+        assert_eq!(c.iter().filter(|&&x| x == "SL-SCN-006").count(), 2, "{}", r.render_text());
+        assert_eq!(c.iter().filter(|&&x| x == "SL-SCN-007").count(), 2, "{}", r.render_text());
+    }
+
+    #[test]
+    fn sharding_map_unknown_task_and_range() {
+        let sc = Scenario::closed_loop(&tasks(), slos()).with_sharding(Sharding {
+            shards: 2,
+            assignment: ShardAssignment::Explicit(BTreeMap::from([
+                ("a".to_string(), 0),
+                ("ghost".to_string(), 1),
+                ("b".to_string(), 7),
+            ])),
+        });
+        let r = lint_scenario(&sc);
+        let c = codes(&r);
+        assert!(c.contains(&"SL-SCN-008"), "{}", r.render_text());
+        assert!(c.contains(&"SL-SCN-009"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn footguns_warn_but_do_not_block() {
+        let sc = Scenario::poisson(&tasks(), slos(), 10.0, 1000.0)
+            .with_dispatch(Dispatch { max_batch: 0, min_queue: 2 });
+        let r = lint_scenario(&sc);
+        assert!(codes(&r).contains(&"SL-SCN-010"));
+        assert!(!r.has_errors(), "{}", r.render_text());
+        assert!(r.fail_on_errors("scenario").is_ok());
+    }
+
+    #[test]
+    fn trace_checks() {
+        let sc = Scenario::trace(
+            &tasks(),
+            slos(),
+            vec![
+                Query { task: "a".into(), arrival_ms: 5.0, id: 0 },
+                Query { task: "ghost".into(), arrival_ms: 1.0, id: 1 },
+                Query { task: "a".into(), arrival_ms: 2.0, id: 2 },
+            ],
+        );
+        let r = lint_scenario(&sc);
+        let c = codes(&r);
+        // Unknown task errors; the time-travel arrival only warns.
+        assert_eq!(c.iter().filter(|&&x| x == "SL-SCN-011").count(), 2, "{}", r.render_text());
+        assert_eq!(r.errors(), 1, "{}", r.render_text());
+    }
+
+    #[test]
+    fn cross_layer_lints() {
+        // Online knobs on one shard: warnings, not errors.
+        let sc = Scenario::poisson(&tasks(), slos(), 10.0, 1000.0)
+            .with_planner(PlannerConfig::online());
+        let r = lint_scenario(&sc);
+        let c = codes(&r);
+        assert!(c.contains(&"SL-XLY-002"), "{}", r.render_text());
+        assert!(c.contains(&"SL-XLY-003"), "{}", r.render_text());
+        assert!(!r.has_errors());
+
+        // Predictive without a horizon is an error.
+        let mut pc = PlannerConfig::predictive();
+        pc.horizon_ms = 0.0;
+        let sc = Scenario::poisson(&tasks(), slos(), 10.0, 1000.0)
+            .with_sharding(Sharding::hash(2))
+            .with_planner(pc);
+        assert!(codes(&lint_scenario(&sc)).contains(&"SL-XLY-001"));
+
+        // Lone warm_migrate is a silent no-op.
+        let mut pc = PlannerConfig::default();
+        pc.warm_migrate = true;
+        let sc = Scenario::poisson(&tasks(), slos(), 10.0, 1000.0)
+            .with_sharding(Sharding::hash(2))
+            .with_planner(pc);
+        assert!(codes(&lint_scenario(&sc)).contains(&"SL-XLY-005"));
+
+        // Closed loop + shedding admission: advisory note only.
+        let sc = Scenario::closed_loop(&tasks(), slos())
+            .with_admission(Admission::Deadline { slack: 2.0 });
+        let r = lint_scenario(&sc);
+        assert!(codes(&r).contains(&"SL-XLY-008"));
+        assert_eq!(r.errors(), 0);
+    }
+
+    #[test]
+    fn build_gate_rejects_bad_explicit_maps() {
+        let (_zoo, _lm, profiles) = crate::fixtures::tiny();
+        let good = Sharding::explicit(BTreeMap::from([("tiny".to_string(), 0)]), 2);
+        assert!(build_gate(&good, &profiles).fail_on_errors("sharding").is_ok());
+        let unknown = Sharding::explicit(BTreeMap::from([("ghost".to_string(), 0)]), 2);
+        assert!(build_gate(&unknown, &profiles).has_errors());
+        let out_of_range = Sharding::explicit(BTreeMap::from([("tiny".to_string(), 5)]), 2);
+        assert!(build_gate(&out_of_range, &profiles).has_errors());
+    }
+
+    #[test]
+    fn session_gate_matches_engine_contract() {
+        let (_zoo, _lm, profiles) = crate::fixtures::tiny();
+        let sc = Scenario::closed_loop(&["tiny".to_string()], BTreeMap::from([(
+            "tiny".to_string(),
+            Slo { min_accuracy: 0.5, max_latency_ms: 1e9 },
+        )]));
+        assert!(session_gate(&sc, 0, &profiles).is_empty());
+        // Unknown task, missing phase SLO, duplicate: all errors.
+        let bad = sc.clone().with_tasks(&["tiny".to_string(), "ghost".to_string()]);
+        let r = session_gate(&bad, 0, &profiles);
+        assert!(codes(&r).contains(&"SL-FEA-001"));
+        assert!(codes(&r).contains(&"SL-SCN-004"));
+        let dup = sc.with_tasks(&["tiny".to_string(), "tiny".to_string()]);
+        assert!(codes(&session_gate(&dup, 0, &profiles)).contains(&"SL-SCN-002"));
+    }
+}

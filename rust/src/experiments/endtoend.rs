@@ -313,7 +313,7 @@ pub fn backlog_comparison(
             .with_dispatch(Dispatch::batched(max_batch))
             .with_sharding(Sharding::hash(shards))
             .with_planner(planner);
-        let sharded = ShardedServer::build(zoo, lm, profiles, opts, sc.sharding.clone());
+        let sharded = ShardedServer::build(zoo, lm, profiles, opts, sc.sharding.clone())?;
         let full = sharded.run(&sc)?;
         let mean_util = if full.budget_utilization.is_empty() {
             0.0

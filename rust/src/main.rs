@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   serve       run a serving scenario (closed-loop, Poisson, bursty, file)
+//!   lint        static-analyze Scenario JSON files (sparselint)
 //!   exp         regenerate a paper table/figure (or `all`)
 //!   profile     build + report the performance profile (estimators)
 //!   calibrate   measure PJRT base latencies and write the cache
@@ -12,8 +13,10 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+use sparseloom::analysis;
 use sparseloom::baselines::Policy;
 use sparseloom::cli::{App, Command};
+use sparseloom::json::Json;
 use sparseloom::coordinator::ServeOpts;
 use sparseloom::experiments::{self, Ctx};
 use sparseloom::fixtures;
@@ -59,7 +62,14 @@ fn app() -> App {
                 .opt("budget", "memory budget fraction of full preload", Some("1.0"))
                 .switch("real", "execute real PJRT chains during serving")
                 .switch("synthetic", "flops-derived base latencies (no PJRT)")
-                .switch("fixture", "serve the synthetic in-memory fixture zoo (hermetic; needs no artifacts/)"),
+                .switch("fixture", "serve the synthetic in-memory fixture zoo (hermetic; needs no artifacts/)")
+                .switch("verify", "replay the finished run through the sparselint invariant verifier (SL-INV-*); violations fail the command"),
+            Command::new("lint", "static-analyze Scenario JSON files (sparselint)")
+                .opt("artifacts", "artifact directory for the zoo feasibility pass", Some("artifacts"))
+                .opt("platform", "desktop|laptop|orin", Some("desktop"))
+                .switch("fixture", "run the feasibility pass against the in-memory fixture zoo (hermetic; needs no artifacts/)")
+                .switch("synthetic", "flops-derived base latencies (no PJRT)")
+                .switch("json", "emit diagnostics as JSON instead of text"),
             Command::new("exp", "regenerate a paper table/figure")
                 .opt("artifacts", "artifact directory", Some("artifacts"))
                 .opt("horizon-ms", "backlog study: bursty stream horizon", Some("6000"))
@@ -96,6 +106,7 @@ fn main() {
         Ok((cmd, args)) => {
             let r = match cmd.name {
                 "serve" => cmd_serve(&args),
+                "lint" => cmd_lint(&args),
                 "exp" => cmd_exp(&args),
                 "profile" => cmd_profile(&args),
                 "calibrate" => cmd_calibrate(&args),
@@ -305,7 +316,7 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
             bail!("--real is single-server only (drop --shards or run with 1 shard)");
         }
         let sharded =
-            ShardedServer::build(zoo, &lm, &profiles, opts, scenario.sharding.clone());
+            ShardedServer::build(zoo, &lm, &profiles, opts, scenario.sharding.clone())?;
         let report = sharded.run(&scenario)?;
         for (i, shard) in report.per_shard.iter().enumerate() {
             let util = report
@@ -343,6 +354,18 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         print_outcomes(&report.aggregate);
         print_forecast(&report.aggregate);
         print_summary(&report.aggregate);
+        if args.switch("verify") {
+            let inv = analysis::invariants::verify_sharded(&report);
+            if !inv.is_empty() {
+                println!("{}", inv.render_text());
+            }
+            inv.fail_on_errors("run invariants")?;
+            println!(
+                "invariants OK: {} request event(s) across {} shard(s) verified",
+                report.aggregate.requests.len(),
+                report.per_shard.len(),
+            );
+        }
     } else {
         let rt;
         let mut builder = Server::builder(zoo, &lm, &profiles).opts(opts);
@@ -355,7 +378,97 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         print_outcomes(&report);
         print_forecast(&report);
         print_summary(&report);
+        if args.switch("verify") {
+            let inv = analysis::invariants::verify_report(&report);
+            if !inv.is_empty() {
+                println!("{}", inv.render_text());
+            }
+            inv.fail_on_errors("run invariants")?;
+            println!(
+                "invariants OK: {} request event(s) across 1 shard(s) verified",
+                report.requests.len(),
+            );
+        }
     }
+    Ok(())
+}
+
+fn cmd_lint(args: &sparseloom::cli::Args) -> Result<()> {
+    if args.positional.is_empty() {
+        bail!("usage: sparseloom lint <scenario.json>... [--fixture] [--json]");
+    }
+    // Pass group 3 (plan/stitch feasibility) needs a concrete zoo.
+    // `--fixture` lints against the hermetic in-memory quartet — the CI
+    // path; otherwise artifacts are used when they load, and the pass
+    // is skipped with a note when they do not.
+    let feas = if args.switch("fixture") {
+        Some(fixtures::quartet())
+    } else {
+        match Ctx::load(&args.get_or("artifacts", "artifacts"), args.switch("synthetic")) {
+            Ok(ctx) => {
+                let platform = Platform::by_name(&args.get_or("platform", "desktop"))?;
+                let lm = ctx.lm(platform.clone());
+                let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
+                Some((ctx.zoo_for(&platform).clone(), lm, profiles))
+            }
+            Err(_) => None,
+        }
+    };
+
+    let json_out = args.switch("json");
+    let mut any_errors = false;
+    let mut per_file = Vec::new();
+    for path in &args.positional {
+        let report = match Scenario::load(path) {
+            Ok(sc) => {
+                let mut r = analysis::lint_scenario(&sc);
+                match &feas {
+                    Some((zoo, lm, profiles)) => r.merge(analysis::lint_feasibility(
+                        &sc,
+                        zoo,
+                        lm,
+                        profiles,
+                        &ServeOpts::default(),
+                    )),
+                    None => r.push(analysis::Diagnostic::info(
+                        "SL-FEA-008",
+                        "probe",
+                        "zoo probe skipped: no artifacts loaded (pass --fixture, or point \
+                         --artifacts at a built zoo)",
+                    )),
+                }
+                r
+            }
+            // A file that does not even load as a Scenario is itself a
+            // finding, never a crash (the corrupted-corpus contract).
+            Err(e) => {
+                let mut r = analysis::Report::new();
+                r.push(analysis::Diagnostic::error(
+                    "SL-SCN-000",
+                    path.as_str(),
+                    format!("not a loadable scenario: {e:#}"),
+                ));
+                r
+            }
+        };
+        any_errors |= report.has_errors();
+        if json_out {
+            per_file.push(Json::obj(vec![
+                ("file", Json::Str(path.clone())),
+                ("report", report.to_json()),
+            ]));
+        } else {
+            println!("== {path}");
+            println!("{}", report.render_text());
+        }
+    }
+    if json_out {
+        println!("{}", Json::arr(per_file).to_string_pretty());
+    }
+    if any_errors {
+        bail!("lint found Error-level diagnostics");
+    }
+    println!("lint OK: {} file(s) free of errors", args.positional.len());
     Ok(())
 }
 

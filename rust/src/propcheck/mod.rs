@@ -61,6 +61,21 @@ pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
     })
 }
 
+/// Pick uniformly from a fixed, nonempty set of values; shrinks toward
+/// earlier entries (put the "most boring" value first). Used by the
+/// sparselint corrupted-corpus property to pick a corruption kind.
+pub fn choice<T: Clone + PartialEq + 'static>(items: Vec<T>) -> Gen<T> {
+    assert!(!items.is_empty(), "choice() needs at least one item");
+    let items = std::rc::Rc::new(items);
+    let i2 = std::rc::Rc::clone(&items);
+    Gen::new(move |rng| items[rng.below(items.len())].clone()).with_shrink(move |v| {
+        match i2.iter().position(|x| x == v) {
+            Some(0) | None => Vec::new(),
+            Some(i) => vec![i2[0].clone(), i2[i - 1].clone()],
+        }
+    })
+}
+
 /// Vec of fixed length from an element generator (shrinks elements).
 pub fn vec_of<T: Clone + 'static>(elem: Gen<T>, len: usize) -> Gen<Vec<T>> {
     let elem = std::rc::Rc::new(elem);
@@ -165,6 +180,18 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn choice_samples_and_shrinks_toward_front() {
+        let g = choice(vec!["a", "b", "c"]);
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            assert!(["a", "b", "c"].contains(&g.sample(&mut rng)));
+        }
+        assert!(g.shrinks(&"a").is_empty(), "front item is fully shrunk");
+        assert!(g.shrinks(&"c").contains(&"a"));
+        assert!(g.shrinks(&"c").contains(&"b"));
     }
 
     #[test]

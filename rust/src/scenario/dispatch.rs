@@ -56,7 +56,7 @@
 //!
 //! let sharded = ShardedServer::build(&zoo, &lm, &profiles,
 //!                                    ServeOpts::default(),
-//!                                    scenario.sharding.clone());
+//!                                    scenario.sharding.clone()).unwrap();
 //! let report = sharded.run(&scenario).unwrap();
 //! assert_eq!(report.per_shard.len(), 2);
 //! // Every arrival is accounted for: completed + dropped = events.
@@ -150,9 +150,12 @@ pub enum ShardAssignment {
     /// ([`crate::workload::shard_of_task`]) — deterministic across runs
     /// and processes.
     Hash,
-    /// Explicit task → shard map. Out-of-range indices wrap modulo the
-    /// shard count; tasks absent from the map fall back to the hash
-    /// rule.
+    /// Explicit task → shard map; tasks absent from the map fall back
+    /// to the hash rule. Raw [`Sharding::shard_of`] wraps out-of-range
+    /// indices modulo the shard count, but a *built* deployment
+    /// ([`ShardedServer::build`]) rejects maps that name unknown tasks
+    /// or out-of-range shards (`SL-SCN-008`/`SL-SCN-009`) instead of
+    /// silently rerouting them.
     Explicit(BTreeMap<String, usize>),
 }
 
@@ -289,18 +292,26 @@ pub struct ShardedServer<'a> {
 impl<'a> ShardedServer<'a> {
     /// Build `sharding.shards` servers over the shared zoo, latency
     /// model, and profiles, all with the same serving options.
+    ///
+    /// Fail-fast sparselint gate: an explicit assignment naming a task
+    /// with no profile (`SL-SCN-008`) or a shard index outside the
+    /// shard count (`SL-SCN-009`) is rejected with coded diagnostics —
+    /// such a map would silently hash- or wrap-route the task somewhere
+    /// the operator did not ask for.
     pub fn build(
         zoo: &'a Zoo,
         lm: &'a LatencyModel,
         profiles: &'a BTreeMap<String, TaskProfile>,
         opts: ServeOpts,
         sharding: Sharding,
-    ) -> ShardedServer<'a> {
+    ) -> Result<ShardedServer<'a>> {
+        crate::analysis::scenario::build_gate(&sharding, profiles)
+            .fail_on_errors("sharding")?;
         let n = sharding.shards.max(1);
         let shards = (0..n)
             .map(|_| Server::builder(zoo, lm, profiles).opts(opts.clone()).build())
             .collect();
-        ShardedServer { shards, sharding: Sharding { shards: n, ..sharding } }
+        Ok(ShardedServer { shards, sharding: Sharding { shards: n, ..sharding } })
     }
 
     /// Number of shards (≥ 1).
@@ -1006,7 +1017,8 @@ mod tests {
             &profiles,
             ServeOpts::default(),
             Sharding::hash(2),
-        );
+        )
+        .unwrap();
         let report = sharded.run(&sc).unwrap();
 
         assert_eq!(report.per_shard.len(), 2);
@@ -1102,6 +1114,7 @@ mod tests {
             ServeOpts::default(),
             Sharding::hash(2),
         )
+        .unwrap()
         .run(&sc.clone().with_dispatch(Dispatch::batched(4)))
         .unwrap();
 
@@ -1153,6 +1166,7 @@ mod tests {
             ServeOpts::default(),
             sharding.clone(),
         )
+        .unwrap()
         .run(&sc)
         .unwrap();
         assert!(
@@ -1167,6 +1181,7 @@ mod tests {
         // Batch-aware Algorithm 1 at the dispatch operating point.
         let opts = ServeOpts { batch_hint: 4.0, ..Default::default() };
         let replanned = ShardedServer::build(&zoo, &lm, &profiles, opts, sharding)
+            .unwrap()
             .run(&replan_sc)
             .unwrap();
 
@@ -1237,6 +1252,7 @@ mod tests {
         });
         let replan =
             ShardedServer::build(&zoo, &lm, &profiles, opts.clone(), sharding.clone())
+                .unwrap()
                 .run(&replan_sc)
                 .unwrap();
         assert!(replan.migrations >= 1, "the baseline must actually migrate");
@@ -1253,6 +1269,7 @@ mod tests {
             ..PlannerConfig::online()
         });
         let warm = ShardedServer::build(&zoo, &lm, &profiles, opts, sharding)
+            .unwrap()
             .run(&warm_sc)
             .unwrap();
 
@@ -1343,6 +1360,7 @@ mod tests {
             ServeOpts::default(),
             sharding.clone(),
         )
+        .unwrap()
         .run(&fair_sc)
         .unwrap();
         assert!(
@@ -1364,6 +1382,7 @@ mod tests {
             });
         let opts = ServeOpts { batch_hint: 4.0, ..Default::default() };
         let pred = ShardedServer::build(&zoo, &lm, &profiles, opts, sharding)
+            .unwrap()
             .run(&pred_sc)
             .unwrap();
 
@@ -1422,6 +1441,7 @@ mod tests {
                 ServeOpts::default(),
                 Sharding::hash(2),
             )
+            .unwrap()
         };
         let plain = build().run(&light).unwrap();
         let stealing = build()
@@ -1453,6 +1473,7 @@ mod tests {
                 ServeOpts::default(),
                 Sharding::hash(2),
             )
+            .unwrap()
         };
         let plain = build().run(&light).unwrap();
         let replan = build()

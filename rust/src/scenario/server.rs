@@ -308,6 +308,14 @@ impl<'a> Server<'a> {
         prepared: Prepared,
     ) -> Result<Session<'s, 'a>> {
         let slos = phase_slos(scenario, phase)?;
+        // Fail-fast sparselint gate: duplicate tasks, tasks without a
+        // profile, tasks without a (well-formed) SLO in this phase, and
+        // bad arrival parameters are rejected with coded diagnostics
+        // before any serving state is built. Restricted to checks that
+        // also hold for the per-shard sub-scenarios the sharded drive
+        // opens (see `analysis::scenario::session_gate`).
+        crate::analysis::scenario::session_gate(scenario, phase, self.coord.profiles)
+            .fail_on_errors(&format!("scenario {:?}", scenario.name))?;
         let platform = &self.coord.lm.platform;
         let s = self.coord.zoo.subgraphs;
         let sim = SocSim::new(&platform.processor_list());
@@ -316,15 +324,9 @@ impl<'a> Server<'a> {
 
         let mut states: BTreeMap<String, TaskState> = BTreeMap::new();
         for name in &scenario.tasks {
-            if states.contains_key(name) {
-                bail!("scenario lists task {name:?} more than once");
-            }
             let Some(p) = self.coord.profiles.get(name) else {
                 bail!("scenario references unknown task {name:?}");
             };
-            if !slos.contains_key(name) {
-                bail!("scenario phase {phase} has no SLO for task {name:?}");
-            }
             let order: Vec<Processor> = if self.opts.policy.is_partitioned() {
                 prepared.order.clone()
             } else {

@@ -13,22 +13,60 @@
 
 use crate::zoo::{TaskZoo, VariantType};
 
+/// Typed failures of the V^S index arithmetic — the `Result` error the
+/// static analyzer (`crate::analysis`) consumes instead of a panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StitchError {
+    /// V = 0 or S = 0: the space has no compositions to index.
+    Degenerate { v: usize, s: usize },
+    /// `k ≥ V^S`: the index does not decode to S base-V digits.
+    IndexOutOfRange { k: usize, v: usize, s: usize },
+    /// `V^S` (or `V^{S-1}`) does not fit in `usize` — the silent
+    /// release-mode wrap `pow` used to allow.
+    SpaceOverflow { v: usize, s: usize },
+}
+
+impl std::fmt::Display for StitchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StitchError::Degenerate { v, s } => {
+                write!(f, "degenerate stitch space V={v}, S={s}")
+            }
+            StitchError::IndexOutOfRange { k, v, s } => {
+                write!(f, "index {k} out of range for V={v}, S={s}")
+            }
+            StitchError::SpaceOverflow { v, s } => {
+                write!(f, "V^S overflows usize for V={v}, S={s}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StitchError {}
+
 /// A stitched variant: which original variant supplies each subgraph.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Composition(pub Vec<usize>);
 
 impl Composition {
-    /// Decode from the canonical base-V index.
-    pub fn from_index(k: usize, v: usize, s: usize) -> Composition {
-        assert!(v > 0 && s > 0);
+    /// Decode from the canonical base-V index. Fails (typed, no panic)
+    /// on a degenerate space or an out-of-range index — the analyzer's
+    /// plan-feasibility pass relies on this to reject bad plans before
+    /// serving starts.
+    pub fn from_index(k: usize, v: usize, s: usize) -> Result<Composition, StitchError> {
+        if v == 0 || s == 0 {
+            return Err(StitchError::Degenerate { v, s });
+        }
         let mut digits = vec![0usize; s];
         let mut rem = k;
         for j in (0..s).rev() {
             digits[j] = rem % v;
             rem /= v;
         }
-        assert_eq!(rem, 0, "index {k} out of range for V={v}, S={s}");
-        Composition(digits)
+        if rem != 0 {
+            return Err(StitchError::IndexOutOfRange { k, v, s });
+        }
+        Ok(Composition(digits))
     }
 
     /// Encode to the canonical base-V index.
@@ -86,17 +124,37 @@ impl StitchSpace {
         Self::new(zoo.n_variants(), zoo.iface.len() - 1)
     }
 
-    /// |space| = V^S.
+    /// |space| = V^S. Panics (with a typed message, never a silent
+    /// release-mode wrap) when V^S overflows `usize`; use
+    /// [`StitchSpace::try_len`] to handle that case.
     pub fn len(&self) -> usize {
-        self.n_variants.pow(self.n_subgraphs as u32)
+        self.try_len().expect("stitch space size")
+    }
+
+    /// |space| = V^S via `checked_pow`: `Err(SpaceOverflow)` instead of
+    /// the silent wraparound unchecked `pow` produces in release builds.
+    pub fn try_len(&self) -> Result<usize, StitchError> {
+        let (v, s) = (self.n_variants, self.n_subgraphs);
+        if v == 0 || s == 0 {
+            return Err(StitchError::Degenerate { v, s });
+        }
+        u32::try_from(s)
+            .ok()
+            .and_then(|s32| v.checked_pow(s32))
+            .ok_or(StitchError::SpaceOverflow { v, s })
     }
 
     pub fn is_empty(&self) -> bool {
         false // V ≥ 1 and S ≥ 1 always yield at least one composition
     }
 
+    /// Decode index `k`, panicking on out-of-range — internal call
+    /// sites guarantee `k < len()`. External inputs (plan files,
+    /// analyzer probes) should go through [`Composition::from_index`]
+    /// and handle the `Result`.
     pub fn composition(&self, k: usize) -> Composition {
         Composition::from_index(k, self.n_variants, self.n_subgraphs)
+            .expect("stitched index in range")
     }
 
     pub fn index(&self, c: &Composition) -> usize {
@@ -115,9 +173,19 @@ impl StitchSpace {
     }
 
     /// How many compositions contain original-variant subgraph (j, i)?
-    /// (V^{S-1} — each other position free; used by hotness sanity tests.)
+    /// (V^{S-1} — each other position free; used by hotness sanity
+    /// tests.) Checked like [`StitchSpace::len`]: panics on overflow
+    /// instead of wrapping silently.
     pub fn occurrences_per_subgraph(&self) -> usize {
-        self.n_variants.pow(self.n_subgraphs as u32 - 1)
+        let (v, s) = (self.n_variants, self.n_subgraphs);
+        if v == 0 || s == 0 {
+            return 0;
+        }
+        u32::try_from(s - 1)
+            .ok()
+            .and_then(|s32| v.checked_pow(s32))
+            .ok_or(StitchError::SpaceOverflow { v, s })
+            .expect("per-subgraph occurrence count")
     }
 }
 
@@ -192,8 +260,41 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn out_of_range_index_panics() {
-        Composition::from_index(1000, 10, 3);
+    fn out_of_range_index_is_typed_error() {
+        assert_eq!(
+            Composition::from_index(1000, 10, 3),
+            Err(StitchError::IndexOutOfRange { k: 1000, v: 10, s: 3 })
+        );
+        assert_eq!(
+            Composition::from_index(999, 10, 3),
+            Ok(Composition(vec![9, 9, 9]))
+        );
+        assert_eq!(
+            Composition::from_index(0, 0, 3),
+            Err(StitchError::Degenerate { v: 0, s: 3 })
+        );
+    }
+
+    #[test]
+    fn space_size_overflow_is_typed_not_silent() {
+        // 2^BITS overflows usize by exactly one bit.
+        let sp = StitchSpace { n_variants: 2, n_subgraphs: usize::BITS as usize };
+        assert_eq!(
+            sp.try_len(),
+            Err(StitchError::SpaceOverflow {
+                v: 2,
+                s: usize::BITS as usize
+            })
+        );
+        // The largest power that still fits decodes fine.
+        let ok = StitchSpace { n_variants: 2, n_subgraphs: usize::BITS as usize - 1 };
+        assert_eq!(ok.try_len(), Ok(1usize << (usize::BITS - 1)));
+        // Degenerate shapes are typed too (struct literals can bypass
+        // the constructor's assert).
+        let degenerate = StitchSpace { n_variants: 0, n_subgraphs: 2 };
+        assert_eq!(
+            degenerate.try_len(),
+            Err(StitchError::Degenerate { v: 0, s: 2 })
+        );
     }
 }

@@ -1,0 +1,307 @@
+//! sparselint integration: the lint → serve contract.
+//!
+//! Three properties, all on the synthetic fixture zoo (no artifacts):
+//!
+//! 1. Any generated `Scenario` that round-trips JSON and passes
+//!    `lint_scenario` with no errors serves without panicking (and
+//!    without an engine error — the session gate is a strict subset of
+//!    the lint, so a clean lint means a clean open).
+//! 2. A corrupted-scenario corpus — structural corruptions applied to a
+//!    clean scenario, plus byte-level mutations of its JSON text —
+//!    always yields diagnostics (or a typed load error), never a panic.
+//! 3. A real run's event stream satisfies every `SL-INV-*` invariant
+//!    (the `serve --verify` path), and the fail-fast gates reject the
+//!    configurations the analyzer calls errors.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use sparseloom::analysis::{invariants, lint_scenario};
+use sparseloom::coordinator::ServeOpts;
+use sparseloom::fixtures;
+use sparseloom::propcheck::{check, choice, usize_in, vec_of};
+use sparseloom::scenario::{
+    Admission, Dispatch, PlannerConfig, Scenario, Server, ShardAssignment, ShardedServer,
+    Sharding,
+};
+use sparseloom::workload::Query;
+
+fn round_trip(sc: &Scenario) -> Scenario {
+    let text = sc.to_json().to_string_pretty();
+    Scenario::from_json(&sparseloom::json::parse(&text).unwrap()).unwrap()
+}
+
+/// Decode an 8-digit parameter vector into a scenario over the trio
+/// fixture. Intentionally spans footgun territory (max_batch 0, shard
+/// counts above the task count, every admission kind, every planner
+/// flag combination) — the property filters on the lint verdict.
+fn scenario_from(params: &[usize], tasks: &[String]) -> Scenario {
+    let slos = |acc: f64, lat: f64| {
+        tasks
+            .iter()
+            .map(|t| {
+                (t.clone(), sparseloom::workload::Slo { min_accuracy: acc, max_latency_ms: lat })
+            })
+            .collect::<BTreeMap<_, _>>()
+    };
+    let base = match params[0] % 3 {
+        0 => Scenario::closed_loop(tasks, slos(0.5, 1e9))
+            .with_queries(params[1] % 5)
+            .with_stagger_ms(params[2] as f64 * 0.5),
+        1 => Scenario::poisson(
+            tasks,
+            slos(0.5, 1e9),
+            (params[1] + 1) as f64 * 2.0,
+            300.0,
+        ),
+        _ => Scenario::bursty(
+            tasks,
+            slos(0.5, 60.0),
+            params[1] as f64,
+            (params[2] + 1) as f64 * 10.0,
+            100.0,
+            400.0,
+        ),
+    };
+    let admission = match params[3] % 5 {
+        0 => Admission::Always,
+        1 => Admission::QueueCap { max_queued: params[4] },
+        2 => Admission::Deadline { slack: params[4] as f64 * 0.5 + 0.5 },
+        3 => Admission::Fair { slack: 2.0, weights: BTreeMap::new() },
+        _ => Admission::Predictive { horizon_ms: 50.0, headroom: 1.5 },
+    };
+    let flags = params[7];
+    base.with_admission(admission)
+        .with_dispatch(Dispatch { max_batch: params[5] % 4, min_queue: params[6] % 3 })
+        .with_sharding(Sharding::hash(params[4] % 3 + 1))
+        .with_planner(PlannerConfig {
+            batch_aware: flags & 1 != 0,
+            replan: flags & 2 != 0,
+            steal: flags & 4 != 0,
+            warm_migrate: flags & 8 != 0,
+            predictive: flags & 16 != 0,
+            ..PlannerConfig::default()
+        })
+        .with_seed(params[0] as u64)
+}
+
+#[test]
+fn lint_clean_round_tripped_scenarios_serve_without_panicking() {
+    let (zoo, lm, profiles) = fixtures::trio();
+    let tasks = fixtures::task_names(&zoo);
+    let gen = vec_of(usize_in(0, 11), 8);
+    check("lint-clean scenarios serve", &gen, 60, 42, |params| {
+        let sc = round_trip(&scenario_from(params, &tasks));
+        if lint_scenario(&sc).has_errors() {
+            return Ok(()); // the property only covers lint-clean inputs
+        }
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if sc.sharding.shards > 1 {
+                ShardedServer::build(&zoo, &lm, &profiles, ServeOpts::default(), sc.sharding.clone())
+                    .and_then(|s| s.run(&sc))
+                    .map(|_| ())
+            } else {
+                Server::builder(&zoo, &lm, &profiles).build().run(&sc).map(|_| ())
+            }
+        }));
+        match outcome {
+            Err(_) => Err(format!("serving panicked on a lint-clean scenario: {params:?}")),
+            Ok(Err(e)) => Err(format!("lint-clean scenario rejected at serve time: {e:#}")),
+            Ok(Ok(())) => Ok(()),
+        }
+    });
+}
+
+/// Structural corruptions of a clean scenario. Every one of these must
+/// surface as diagnostics from the analyzer — and serving the corrupted
+/// scenario must fail with an error (or run degraded), never panic.
+#[test]
+fn corrupted_corpus_yields_diagnostics_never_panics() {
+    let (zoo, lm, profiles) = fixtures::trio();
+    let tasks = fixtures::task_names(&zoo);
+    let clean = Scenario::closed_loop(
+        &tasks,
+        fixtures::slos(&zoo, 0.5, 1e9),
+    )
+    .with_queries(3);
+    assert!(lint_scenario(&clean).is_empty(), "baseline must be clean");
+
+    let corruptions: Vec<(&str, fn(&mut Scenario))> = vec![
+        ("duplicate task", |sc| {
+            let t = sc.tasks[0].clone();
+            sc.tasks.push(t);
+        }),
+        ("empty task list", |sc| sc.tasks.clear()),
+        ("empty schedule", |sc| sc.schedule.clear()),
+        ("missing phase SLO", |sc| {
+            let t = sc.tasks[0].clone();
+            sc.schedule[0].remove(&t);
+        }),
+        ("NaN SLO bound", |sc| {
+            let t = sc.tasks[0].clone();
+            sc.schedule[0].get_mut(&t).unwrap().min_accuracy = f64::NAN;
+        }),
+        ("universe misses a served SLO", |sc| {
+            sc.universe =
+                vec![sparseloom::workload::Slo { min_accuracy: 0.9, max_latency_ms: 1.0 }];
+        }),
+        ("negative trace arrival", |sc| {
+            let t = sc.tasks[0].clone();
+            sc.arrival = sparseloom::scenario::Arrival::Trace(vec![Query {
+                task: t,
+                arrival_ms: -5.0,
+                id: 0,
+            }]);
+        }),
+        ("trace targets unknown task", |sc| {
+            sc.arrival = sparseloom::scenario::Arrival::Trace(vec![Query {
+                task: "ghost".into(),
+                arrival_ms: 1.0,
+                id: 0,
+            }]);
+        }),
+        ("nonpositive admission slack", |sc| {
+            sc.admission = Admission::Deadline { slack: 0.0 };
+        }),
+        ("sharding map ghost task", |sc| {
+            sc.sharding =
+                Sharding::explicit(BTreeMap::from([("ghost".to_string(), 0)]), 2);
+        }),
+        ("sharding map out of range", |sc| {
+            let t = sc.tasks[0].clone();
+            sc.sharding = Sharding::explicit(BTreeMap::from([(t, 9)]), 2);
+        }),
+        ("predictive planner without horizon", |sc| {
+            sc.planner = PlannerConfig { horizon_ms: 0.0, ..PlannerConfig::predictive() };
+            sc.sharding = Sharding::hash(2);
+        }),
+        ("online planner with zero slack", |sc| {
+            sc.planner =
+                PlannerConfig { saturation_slack: 0.0, ..PlannerConfig::replanning() };
+            sc.sharding = Sharding::hash(2);
+        }),
+    ];
+
+    for (what, corrupt) in &corruptions {
+        let mut sc = clean.clone();
+        corrupt(&mut sc);
+        let report = lint_scenario(&sc);
+        assert!(!report.is_empty(), "{what}: the analyzer must say something");
+        let ran = catch_unwind(AssertUnwindSafe(|| {
+            if sc.sharding.shards > 1 {
+                ShardedServer::build(&zoo, &lm, &profiles, ServeOpts::default(), sc.sharding.clone())
+                    .and_then(|s| s.run(&sc))
+                    .map(|_| ())
+            } else {
+                Server::builder(&zoo, &lm, &profiles).build().run(&sc).map(|_| ())
+            }
+        }));
+        assert!(ran.is_ok(), "{what}: serving a corrupted scenario must not panic");
+        if report.has_errors() && !matches!(sc.sharding.assignment, ShardAssignment::Hash) {
+            // Build-gate errors reject before any session opens.
+            assert!(ran.unwrap().is_err(), "{what}: the build gate must refuse");
+        }
+    }
+}
+
+/// Byte-level corruption: truncation or character substitution anywhere
+/// in the JSON text loads as a typed error or a (lintable) scenario —
+/// the loader and analyzer never panic on garbage.
+#[test]
+fn mutated_json_text_never_panics() {
+    let (zoo, _lm, _profiles) = fixtures::trio();
+    let clean = Scenario::closed_loop(&fixtures::task_names(&zoo), fixtures::slos(&zoo, 0.5, 1e9));
+    let text = clean.to_json().to_string_pretty();
+    let len = text.len();
+    let gen = vec_of(usize_in(0, len - 1), 2);
+    let junk = choice(vec!['}', '"', ':', 'x', '-']);
+    let junk_pool: Vec<char> = {
+        let mut rng = sparseloom::util::Rng::new(9);
+        (0..64).map(|_| junk.sample(&mut rng)).collect()
+    };
+    check("mutated scenario JSON loads or errors", &gen, 120, 7, |pos| {
+        let (cut, sub) = (pos[0], pos[1]);
+        let truncated: String = text.chars().take(cut).collect();
+        let mut swapped: Vec<char> = text.chars().collect();
+        swapped[sub] = junk_pool[(cut + sub) % junk_pool.len()];
+        let swapped: String = swapped.into_iter().collect();
+        for candidate in [truncated, swapped] {
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                sparseloom::json::parse(&candidate)
+                    .ok()
+                    .and_then(|v| Scenario::from_json(&v).ok())
+                    .map(|sc| lint_scenario(&sc).summary())
+            }));
+            if outcome.is_err() {
+                return Err(format!("panic on mutated JSON (cut {cut}, sub {sub})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn real_runs_pass_the_invariant_verifier() {
+    // Single server, closed loop (the `serve --verify` default path).
+    let (zoo, lm, profiles) = fixtures::trio();
+    let sc = Scenario::closed_loop(&fixtures::task_names(&zoo), fixtures::slos(&zoo, 0.5, 1e9))
+        .with_queries(20);
+    let report = Server::builder(&zoo, &lm, &profiles).build().run(&sc).unwrap();
+    let inv = invariants::verify_report(&report);
+    assert!(inv.is_empty(), "{}", inv.render_text());
+
+    // The maximal sharded online configuration under backlog.
+    let (zoo, lm, profiles) = fixtures::quartet();
+    let sc = Scenario::bursty(
+        &fixtures::task_names(&zoo),
+        fixtures::slos(&zoo, 0.5, 60.0),
+        4.0,
+        100.0,
+        500.0,
+        3_000.0,
+    )
+    .with_seed(11)
+    .with_admission(Admission::Predictive { horizon_ms: 100.0, headroom: 2.0 })
+    .with_dispatch(Dispatch::batched(4))
+    .with_sharding(Sharding::hash(2))
+    .with_planner(PlannerConfig { max_migrations: 2, ..PlannerConfig::predictive() });
+    let opts = ServeOpts { batch_hint: 4.0, ..Default::default() };
+    let report = ShardedServer::build(&zoo, &lm, &profiles, opts, sc.sharding.clone())
+        .unwrap()
+        .run(&sc)
+        .unwrap();
+    let inv = invariants::verify_sharded(&report);
+    assert!(inv.is_empty(), "{}", inv.render_text());
+}
+
+#[test]
+fn fail_fast_gates_reject_what_the_analyzer_rejects() {
+    let (zoo, lm, profiles) = fixtures::trio();
+    let tasks = fixtures::task_names(&zoo);
+
+    // Session gate: a duplicated task is refused with its reason code.
+    let mut dup = Scenario::closed_loop(&tasks, fixtures::slos(&zoo, 0.5, 1e9));
+    dup.tasks.push(tasks[0].clone());
+    let err = Server::builder(&zoo, &lm, &profiles)
+        .build()
+        .run(&dup)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("SL-SCN-002"), "{err}");
+
+    // Build gate: an out-of-range explicit map is refused at build.
+    let bad = Sharding::explicit(BTreeMap::from([(tasks[0].clone(), 9)]), 2);
+    let err = ShardedServer::build(&zoo, &lm, &profiles, ServeOpts::default(), bad)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("SL-SCN-009"), "{err}");
+
+    // Example scenario files shipped in-repo stay lint-clean (what the
+    // CI tier-2 `sparseloom lint` stage enforces, minus the zoo probe).
+    for file in ["closed_loop.json", "bursty_sharded.json", "predictive_phases.json"] {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/scenarios/");
+        let sc = Scenario::load(format!("{path}{file}")).unwrap();
+        let r = lint_scenario(&sc);
+        assert!(!r.has_errors(), "{file}:\n{}", r.render_text());
+    }
+}

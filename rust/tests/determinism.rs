@@ -66,6 +66,7 @@ fn sharded_online_predictive_run_is_deterministic() {
     let run = |s: &Scenario| -> ShardedReport {
         let opts = ServeOpts { batch_hint: 4.0, ..Default::default() };
         ShardedServer::build(&zoo, &lm, &profiles, opts, s.sharding.clone())
+            .unwrap()
             .run(s)
             .unwrap()
     };

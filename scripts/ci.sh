@@ -4,8 +4,11 @@
 #   CI_TIER=1  → tier 1 only: cargo build --release + cargo test -q
 #                (the ROADMAP tier-1 gate; `make check` runs this)
 #   CI_TIER=2  → tier 2 only: benches, rustdoc, clippy, fmt, and the
-#                hermetic CLI smoke stage (assumes the code builds —
-#                the smoke stage builds the release binary itself)
+#                hermetic CLI smoke stage — serve/backlog runs plus the
+#                sparselint stage (lint every shipped scenario, exercise
+#                the corrupt-input path, and a serve --verify replay).
+#                Assumes nothing is prebuilt; the smoke stage builds the
+#                release binary itself.
 #   unset      → both tiers, tier 1 first so its failures surface fast
 set -euo pipefail
 
@@ -88,6 +91,51 @@ smoke() {
     fi
     if ! grep -q "Backlog" <<<"$out"; then
         echo "CLI smoke FAILED: exp backlog produced no report" >&2
+        exit 1
+    fi
+
+    lint_smoke "$bin"
+}
+
+# sparselint stage: every checked-in example scenario must lint clean
+# (Error diagnostics exit nonzero), a deliberately corrupt file must
+# produce diagnostics without crashing, and a verified serve must
+# replay its run through the SL-INV-* invariant checks.
+lint_smoke() {
+    local bin="$1"
+    local out
+
+    echo "== [tier 2] sparseloom lint over examples/scenarios =="
+    out="$("$bin" lint examples/scenarios/*.json --fixture)"
+    printf '%s\n' "$out"
+    if ! grep -q "lint OK" <<<"$out"; then
+        echo "lint smoke FAILED: shipped scenarios no longer lint clean" >&2
+        exit 1
+    fi
+
+    # Error diagnostics must flip the exit code — and a file that is
+    # not even JSON must yield a diagnostic, never a crash.
+    local corrupt
+    corrupt="$(mktemp)"
+    printf '{ "tasks": ["alpha", "alpha"], broken' >"$corrupt"
+    if out="$("$bin" lint "$corrupt" --fixture 2>&1)"; then
+        echo "lint smoke FAILED: corrupt scenario exited zero" >&2
+        rm -f "$corrupt"
+        exit 1
+    fi
+    printf '%s\n' "$out"
+    rm -f "$corrupt"
+    if ! grep -q "SL-SCN-000" <<<"$out"; then
+        echo "lint smoke FAILED: corrupt scenario produced no diagnostic" >&2
+        exit 1
+    fi
+
+    echo "== [tier 2] serve --fixture --verify (invariant replay) =="
+    out="$("$bin" serve --fixture --scenario-file examples/scenarios/bursty_sharded.json \
+        --verify)"
+    printf '%s\n' "$out"
+    if ! grep -q "invariants OK" <<<"$out"; then
+        echo "lint smoke FAILED: serve --verify did not confirm run invariants" >&2
         exit 1
     fi
 }
