@@ -46,7 +46,47 @@ pub fn lint_feasibility(
         return r;
     }
     probe(sc, zoo, lm, profiles, opts, &mut r);
+    lint_warm_migrate_links(sc, zoo, lm, &mut r);
     r
+}
+
+/// `SL-XLY-009` — warm migration only pays off when carrying a compiled
+/// blob across the shard link is cheaper than rebuilding it cold. When
+/// even the cheapest link is priced above the most expensive cold
+/// rebuild (compile + load) anywhere in the scenario's zoo slice, every
+/// migration the planner attempts is strictly worse than recompiling.
+fn lint_warm_migrate_links(sc: &Scenario, zoo: &Zoo, lm: &LatencyModel, r: &mut Report) {
+    if !sc.planner.warm_migrate {
+        return;
+    }
+    let Some(links) = &sc.faults.links else { return };
+    let Some(cheapest_link) = links.min_transfer_ms() else { return };
+    let procs = lm.platform.processor_list();
+    let mut worst_rebuild = 0.0f64;
+    for name in &sc.tasks {
+        let Some(tz) = zoo.tasks.get(name) else { continue };
+        for v in &tz.variants {
+            for sg in &v.subgraphs {
+                for &proc in &procs {
+                    let c = lm.compile_ms(sg.bytes, proc) + lm.load_ms(sg.bytes, proc);
+                    if c > worst_rebuild {
+                        worst_rebuild = c;
+                    }
+                }
+            }
+        }
+    }
+    if worst_rebuild > 0.0 && cheapest_link > worst_rebuild {
+        r.push(Diagnostic::warn(
+            "SL-XLY-009",
+            "planner.warm_migrate",
+            format!(
+                "cheapest link transfer ({cheapest_link} ms) exceeds the most expensive \
+                 cold rebuild in the zoo ({worst_rebuild:.3} ms): warm migration is \
+                 strictly worse than recompiling on the destination"
+            ),
+        ));
+    }
 }
 
 /// Structural alignment of one task across zoo, profile, and V^S space.
@@ -309,6 +349,47 @@ mod tests {
         );
         let r = lint_feasibility(&sc, &zoo, &lm, &profiles, &ServeOpts::default());
         assert!(codes(&r).contains(&"SL-FEA-006"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn warm_migrate_priced_out_by_links_warns() {
+        use crate::scenario::{FaultProfile, LinkMatrix, PlannerConfig};
+        let (zoo, lm, profiles) = fixtures::quartet();
+        let sc = crate::scenario::Scenario::poisson(
+            &fixtures::task_names(&zoo),
+            fixtures::slos(&zoo, 0.5, 1e9),
+            20.0,
+            500.0,
+        )
+        .with_sharding(Sharding::hash(2))
+        .with_planner(PlannerConfig::online())
+        .with_faults(FaultProfile {
+            links: Some(LinkMatrix {
+                transfer_ms: vec![vec![0.0, 1e6], vec![1e6, 0.0]],
+            }),
+            ..FaultProfile::default()
+        });
+        let r = lint_feasibility(&sc, &zoo, &lm, &profiles, &ServeOpts::default());
+        assert!(codes(&r).contains(&"SL-XLY-009"), "{}", r.render_text());
+        assert!(!r.has_errors(), "{}", r.render_text());
+
+        // Cheap links don't warn: migration can genuinely win.
+        let cheap = crate::scenario::Scenario::poisson(
+            &fixtures::task_names(&zoo),
+            fixtures::slos(&zoo, 0.5, 1e9),
+            20.0,
+            500.0,
+        )
+        .with_sharding(Sharding::hash(2))
+        .with_planner(PlannerConfig::online())
+        .with_faults(FaultProfile {
+            links: Some(LinkMatrix {
+                transfer_ms: vec![vec![0.0, 0.01], vec![0.01, 0.0]],
+            }),
+            ..FaultProfile::default()
+        });
+        let r = lint_feasibility(&cheap, &zoo, &lm, &profiles, &ServeOpts::default());
+        assert!(!codes(&r).contains(&"SL-XLY-009"), "{}", r.render_text());
     }
 
     #[test]

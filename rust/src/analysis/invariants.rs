@@ -262,6 +262,29 @@ fn check_metric_finiteness(report: &RunReport, r: &mut Report) {
             push_nonfinite(r, "derived".into(), what);
         }
     }
+    for (what, x) in [
+        ("downtime", report.downtime_ms),
+        ("throttled time", report.throttled_ms),
+    ] {
+        if !x.is_finite() {
+            push_nonfinite(r, "faults".into(), what);
+        } else if x < 0.0 {
+            r.push(Diagnostic::error(
+                "SL-INV-003",
+                "faults".into(),
+                format!("{what} {x} ms is negative: fault accounting only accrues"),
+            ));
+        }
+    }
+    for (i, &lat) in report.recoveries.iter().enumerate() {
+        if !lat.is_finite() || lat < 0.0 {
+            r.push(Diagnostic::error(
+                "SL-INV-004",
+                format!("recoveries[{i}]"),
+                format!("recovery latency {lat} ms is not a finite nonnegative"),
+            ));
+        }
+    }
 }
 
 /// Verify a sharded run: every shard report, the cross-shard aggregate,
@@ -309,6 +332,16 @@ pub fn verify_sharded(report: &ShardedReport) -> Report {
                 format!("estimated arrival rate {qps} qps is not a finite nonnegative"),
             ));
         }
+    }
+    if !report.link_cost_ms.is_finite() || report.link_cost_ms < 0.0 {
+        r.push(Diagnostic::error(
+            "SL-INV-004",
+            "link_cost_ms",
+            format!(
+                "cross-shard link cost {} ms is not a finite nonnegative",
+                report.link_cost_ms
+            ),
+        ));
     }
     r
 }
@@ -454,6 +487,22 @@ mod tests {
         evs[0].service_ms = f64::NAN;
         let r = verify_events(&evs);
         assert!(codes(&r).contains(&"SL-INV-004"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn fault_accounting_fields_are_checked() {
+        let mut report = ShardedReport::default();
+        report.aggregate.downtime_ms = -5.0;
+        report.aggregate.recoveries.push(f64::NAN);
+        report.link_cost_ms = f64::INFINITY;
+        let r = verify_sharded(&report);
+        assert!(codes(&r).contains(&"SL-INV-003"), "{}", r.render_text());
+        assert_eq!(
+            codes(&r).iter().filter(|&&c| c == "SL-INV-004").count(),
+            2,
+            "{}",
+            r.render_text()
+        );
     }
 
     #[test]

@@ -13,7 +13,9 @@ use std::collections::BTreeMap;
 use std::collections::BTreeSet;
 
 use crate::profiler::TaskProfile;
-use crate::scenario::{Admission, Arrival, Scenario, ShardAssignment, Sharding};
+use crate::scenario::{
+    Admission, Arrival, Expect, FaultProfile, Scenario, ShardAssignment, Sharding,
+};
 use crate::workload::Slo;
 
 use super::{Diagnostic, Report};
@@ -29,6 +31,7 @@ pub fn lint_scenario(sc: &Scenario) -> Report {
     lint_admission(&sc.admission, &mut r);
     lint_dispatch(sc, &mut r);
     lint_sharding_vs_tasks(&sc.sharding, &sc.tasks, &mut r);
+    lint_faults(sc, &mut r);
     lint_cross_layer(sc, &mut r);
     r
 }
@@ -76,14 +79,18 @@ pub fn session_gate(
     r
 }
 
-/// Error-level checks enforced at `ShardedServer::build`: an explicit
-/// assignment must only name tasks the servers can actually serve, and
-/// must keep shard indices inside the shard count. (`Sharding::shard_of`
-/// keeps its documented wrap/fallback behavior for raw use; a *built*
-/// deployment rejects the config instead.)
+/// Error-level checks enforced at `ShardedServer::build` (and again at
+/// `run` for the fault profile, which arrives with the scenario rather
+/// than the deployment): an explicit assignment must only name tasks the
+/// servers can actually serve and keep shard indices inside the shard
+/// count, and a non-default fault profile must be well-formed and name
+/// only shards that exist. (`Sharding::shard_of` keeps its documented
+/// wrap/fallback behavior for raw use; a *built* deployment rejects the
+/// config instead.)
 pub fn build_gate(
     sharding: &Sharding,
     profiles: &BTreeMap<String, TaskProfile>,
+    faults: &FaultProfile,
 ) -> Report {
     let mut r = Report::new();
     let n = sharding.shards.max(1);
@@ -104,6 +111,10 @@ pub fn build_gate(
                 ));
             }
         }
+    }
+    if !faults.is_default() {
+        lint_fault_shapes(faults, &mut r);
+        lint_fault_shards(faults, sharding, &mut r);
     }
     r
 }
@@ -430,6 +441,214 @@ fn lint_sharding_vs_tasks(sharding: &Sharding, tasks: &[String], r: &mut Report)
     }
 }
 
+// ---- fault-lab profile checks (`SL-SCN-014..017`) --------------------
+
+fn lint_faults(sc: &Scenario, r: &mut Report) {
+    lint_fault_shapes(&sc.faults, r);
+    lint_fault_shards(&sc.faults, &sc.sharding, r);
+    // A crash window that opens at or past the arrival horizon never
+    // fires: arrivals stop before it, so the run silently ignores it.
+    let horizon = match &sc.arrival {
+        Arrival::PoissonOpenLoop { horizon_ms, .. } | Arrival::Bursty { horizon_ms, .. } => {
+            Some(*horizon_ms)
+        }
+        _ => None,
+    };
+    if let Some(h) = horizon {
+        for (i, w) in sc.faults.crashes.iter().enumerate() {
+            if w.start_ms.is_finite() && h.is_finite() && w.start_ms >= h {
+                r.push(Diagnostic::warn(
+                    "SL-SCN-014",
+                    format!("faults.crashes[{i}]"),
+                    format!(
+                        "crash window opens at {} ms, at or past the {h} ms arrival \
+                         horizon: no arrival can ever hit it",
+                        w.start_ms
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Shape checks that need no sharding context: window bounds, ramp and
+/// throttle parameters, link-matrix geometry.
+fn lint_fault_shapes(faults: &FaultProfile, r: &mut Report) {
+    for (i, w) in faults.crashes.iter().enumerate() {
+        if !w.start_ms.is_finite() || !w.end_ms.is_finite() || w.start_ms < 0.0 {
+            r.push(Diagnostic::error(
+                "SL-SCN-014",
+                format!("faults.crashes[{i}]"),
+                format!(
+                    "crash window [{}, {}) must have finite, non-negative bounds",
+                    w.start_ms, w.end_ms
+                ),
+            ));
+        } else if w.end_ms <= w.start_ms {
+            r.push(Diagnostic::error(
+                "SL-SCN-014",
+                format!("faults.crashes[{i}]"),
+                format!(
+                    "crash window [{}, {}) is empty: end must exceed start",
+                    w.start_ms, w.end_ms
+                ),
+            ));
+        }
+    }
+    for (i, d) in faults.degradations.iter().enumerate() {
+        if !d.factor.is_finite() || d.factor <= 0.0 {
+            r.push(Diagnostic::error(
+                "SL-SCN-015",
+                format!("faults.degradations[{i}]"),
+                format!("degradation factor {} must be finite and > 0", d.factor),
+            ));
+        }
+        if !d.start_ms.is_finite()
+            || d.start_ms < 0.0
+            || !d.ramp_ms.is_finite()
+            || d.ramp_ms < 0.0
+        {
+            r.push(Diagnostic::error(
+                "SL-SCN-015",
+                format!("faults.degradations[{i}]"),
+                format!(
+                    "degradation start {} ms / ramp {} ms must be finite and ≥ 0",
+                    d.start_ms, d.ramp_ms
+                ),
+            ));
+        }
+    }
+    if let Some(curve) = &faults.throttle {
+        let mut prev: Option<f64> = None;
+        for (i, s) in curve.steps.iter().enumerate() {
+            if !s.factor.is_finite() || s.factor <= 0.0 {
+                r.push(Diagnostic::error(
+                    "SL-SCN-015",
+                    format!("faults.throttle.steps[{i}]"),
+                    format!("throttle factor {} must be finite and > 0", s.factor),
+                ));
+            }
+            if !s.busy_ms.is_finite() || s.busy_ms < 0.0 {
+                r.push(Diagnostic::error(
+                    "SL-SCN-015",
+                    format!("faults.throttle.steps[{i}]"),
+                    format!("throttle step busy_ms {} must be finite and ≥ 0", s.busy_ms),
+                ));
+            } else {
+                if let Some(p) = prev {
+                    if s.busy_ms <= p {
+                        r.push(Diagnostic::error(
+                            "SL-SCN-015",
+                            format!("faults.throttle.steps[{i}]"),
+                            format!(
+                                "throttle steps must be strictly increasing in busy_ms \
+                                 ({} after {p}): factor lookup is a sorted scan",
+                                s.busy_ms
+                            ),
+                        ));
+                    }
+                }
+                prev = Some(s.busy_ms);
+            }
+        }
+    }
+    if let Some(links) = &faults.links {
+        let n = links.transfer_ms.len();
+        for (i, row) in links.transfer_ms.iter().enumerate() {
+            if row.len() != n {
+                r.push(Diagnostic::error(
+                    "SL-SCN-016",
+                    format!("faults.links[{i}]"),
+                    format!(
+                        "link matrix must be square: row {i} has {} entries, expected {n}",
+                        row.len()
+                    ),
+                ));
+                continue;
+            }
+            for (j, &c) in row.iter().enumerate() {
+                if !c.is_finite() || c < 0.0 {
+                    r.push(Diagnostic::error(
+                        "SL-SCN-016",
+                        format!("faults.links[{i}][{j}]"),
+                        format!("link cost {c} must be finite and ≥ 0"),
+                    ));
+                } else if i == j && c != 0.0 {
+                    r.push(Diagnostic::error(
+                        "SL-SCN-016",
+                        format!("faults.links[{i}][{j}]"),
+                        format!("self-link cost must be 0, got {c}: a shard does not pay to reach itself"),
+                    ));
+                }
+            }
+        }
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let fwd = links.transfer_ms.get(i).and_then(|row| row.get(j));
+                let rev = links.transfer_ms.get(j).and_then(|row| row.get(i));
+                if let (Some(&a), Some(&b)) = (fwd, rev) {
+                    if a.is_finite() && b.is_finite() && a != b {
+                        r.push(Diagnostic::error(
+                            "SL-SCN-016",
+                            format!("faults.links[{i}][{j}]"),
+                            format!("link matrix must be symmetric: cost {a} ≠ reverse cost {b}"),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Every fault entry must name a shard the deployment actually has, and
+/// a link matrix must be sized to the shard count.
+fn lint_fault_shards(faults: &FaultProfile, sharding: &Sharding, r: &mut Report) {
+    let n = sharding.shards.max(1);
+    for (i, w) in faults.crashes.iter().enumerate() {
+        if w.shard >= n {
+            r.push(Diagnostic::error(
+                "SL-SCN-017",
+                format!("faults.crashes[{i}]"),
+                format!("crash window names shard {} but the deployment has {n} shard(s)", w.shard),
+            ));
+        }
+    }
+    for (i, d) in faults.degradations.iter().enumerate() {
+        if d.shard >= n {
+            r.push(Diagnostic::error(
+                "SL-SCN-017",
+                format!("faults.degradations[{i}]"),
+                format!("degradation names shard {} but the deployment has {n} shard(s)", d.shard),
+            ));
+        }
+    }
+    for (i, e) in faults.expects.iter().enumerate() {
+        if let Expect::RecoveryWithin { shard, .. } = e {
+            if *shard >= n {
+                r.push(Diagnostic::error(
+                    "SL-SCN-017",
+                    format!("faults.expects[{i}]"),
+                    format!(
+                        "recovery_within names shard {shard} but the deployment has {n} shard(s)"
+                    ),
+                ));
+            }
+        }
+    }
+    if let Some(links) = &faults.links {
+        if links.transfer_ms.len() != n {
+            r.push(Diagnostic::error(
+                "SL-SCN-016",
+                "faults.links",
+                format!(
+                    "link matrix has {} row(s) but the deployment has {n} shard(s)",
+                    links.transfer_ms.len()
+                ),
+            ));
+        }
+    }
+}
+
 // ---- group 2: cross-layer consistency --------------------------------
 
 fn lint_cross_layer(sc: &Scenario, r: &mut Report) {
@@ -655,12 +874,151 @@ mod tests {
     #[test]
     fn build_gate_rejects_bad_explicit_maps() {
         let (_zoo, _lm, profiles) = crate::fixtures::tiny();
+        let inert = FaultProfile::default();
         let good = Sharding::explicit(BTreeMap::from([("tiny".to_string(), 0)]), 2);
-        assert!(build_gate(&good, &profiles).fail_on_errors("sharding").is_ok());
+        assert!(build_gate(&good, &profiles, &inert).fail_on_errors("sharding").is_ok());
         let unknown = Sharding::explicit(BTreeMap::from([("ghost".to_string(), 0)]), 2);
-        assert!(build_gate(&unknown, &profiles).has_errors());
+        assert!(build_gate(&unknown, &profiles, &inert).has_errors());
         let out_of_range = Sharding::explicit(BTreeMap::from([("tiny".to_string(), 5)]), 2);
-        assert!(build_gate(&out_of_range, &profiles).has_errors());
+        assert!(build_gate(&out_of_range, &profiles, &inert).has_errors());
+    }
+
+    #[test]
+    fn fault_lints_catch_malformed_profiles() {
+        use crate::scenario::{CrashWindow, Degradation, RejoinMode, ThrottleCurve, ThrottleStep};
+        let base = || Scenario::poisson(&tasks(), slos(), 10.0, 1000.0);
+
+        // Empty crash window (end ≤ start) is an error.
+        let sc = base().with_faults(FaultProfile {
+            crashes: vec![CrashWindow {
+                shard: 0,
+                start_ms: 50.0,
+                end_ms: 50.0,
+                rejoin: RejoinMode::Cold,
+            }],
+            ..FaultProfile::default()
+        });
+        let r = lint_scenario(&sc);
+        assert!(codes(&r).contains(&"SL-SCN-014"), "{}", r.render_text());
+        assert!(r.has_errors());
+
+        // A window that opens past the arrival horizon only warns.
+        let sc = base().with_faults(FaultProfile {
+            crashes: vec![CrashWindow {
+                shard: 0,
+                start_ms: 2000.0,
+                end_ms: 2500.0,
+                rejoin: RejoinMode::Cold,
+            }],
+            ..FaultProfile::default()
+        });
+        let r = lint_scenario(&sc);
+        assert!(codes(&r).contains(&"SL-SCN-014"), "{}", r.render_text());
+        assert!(!r.has_errors(), "{}", r.render_text());
+
+        // Nonpositive degradation factor and unsorted throttle steps.
+        let sc = base().with_faults(FaultProfile {
+            degradations: vec![Degradation {
+                shard: 0,
+                start_ms: 0.0,
+                ramp_ms: 100.0,
+                factor: 0.0,
+            }],
+            throttle: Some(ThrottleCurve {
+                steps: vec![
+                    ThrottleStep { busy_ms: 50.0, factor: 1.5 },
+                    ThrottleStep { busy_ms: 10.0, factor: 2.0 },
+                ],
+            }),
+            ..FaultProfile::default()
+        });
+        let r = lint_scenario(&sc);
+        assert_eq!(
+            codes(&r).iter().filter(|&&x| x == "SL-SCN-015").count(),
+            2,
+            "{}",
+            r.render_text()
+        );
+    }
+
+    #[test]
+    fn fault_lints_catch_bad_link_matrices_and_shard_ranges() {
+        use crate::scenario::{CrashWindow, LinkMatrix, RejoinMode};
+        let two_shards = || {
+            Scenario::poisson(&tasks(), slos(), 10.0, 1000.0).with_sharding(Sharding::hash(2))
+        };
+
+        // Asymmetric + self-loop cost: both SL-SCN-016 errors.
+        let sc = two_shards().with_faults(FaultProfile {
+            links: Some(LinkMatrix {
+                transfer_ms: vec![vec![0.0, 3.0], vec![5.0, 1.0]],
+            }),
+            ..FaultProfile::default()
+        });
+        let r = lint_scenario(&sc);
+        assert_eq!(
+            codes(&r).iter().filter(|&&x| x == "SL-SCN-016").count(),
+            2,
+            "{}",
+            r.render_text()
+        );
+
+        // Link matrix sized for 3 shards on a 2-shard deployment.
+        let sc = two_shards().with_faults(FaultProfile {
+            links: Some(LinkMatrix {
+                transfer_ms: vec![vec![0.0; 3], vec![0.0; 3], vec![0.0; 3]],
+            }),
+            ..FaultProfile::default()
+        });
+        assert!(codes(&lint_scenario(&sc)).contains(&"SL-SCN-016"));
+
+        // Crash window and recovery expectation naming a ghost shard.
+        let sc = two_shards().with_faults(FaultProfile {
+            crashes: vec![CrashWindow {
+                shard: 5,
+                start_ms: 10.0,
+                end_ms: 20.0,
+                rejoin: RejoinMode::Warm,
+            }],
+            expects: vec![Expect::RecoveryWithin { shard: 9, ms: 50.0 }],
+            ..FaultProfile::default()
+        });
+        let r = lint_scenario(&sc);
+        assert_eq!(
+            codes(&r).iter().filter(|&&x| x == "SL-SCN-017").count(),
+            2,
+            "{}",
+            r.render_text()
+        );
+    }
+
+    #[test]
+    fn build_gate_rejects_bad_fault_profiles() {
+        use crate::scenario::{CrashWindow, RejoinMode};
+        let (_zoo, _lm, profiles) = crate::fixtures::tiny();
+        let sharding = Sharding::hash(2);
+        let bad = FaultProfile {
+            crashes: vec![CrashWindow {
+                shard: 7,
+                start_ms: 0.0,
+                end_ms: 10.0,
+                rejoin: RejoinMode::Cold,
+            }],
+            ..FaultProfile::default()
+        };
+        let r = build_gate(&sharding, &profiles, &bad);
+        assert!(codes(&r).contains(&"SL-SCN-017"), "{}", r.render_text());
+        // A well-formed profile on a shard that exists passes the gate.
+        let ok = FaultProfile {
+            crashes: vec![CrashWindow {
+                shard: 1,
+                start_ms: 0.0,
+                end_ms: 10.0,
+                rejoin: RejoinMode::Warm,
+            }],
+            ..FaultProfile::default()
+        };
+        assert!(build_gate(&sharding, &profiles, &ok).fail_on_errors("faults").is_ok());
     }
 
     #[test]

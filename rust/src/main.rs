@@ -20,7 +20,7 @@ use sparseloom::json::Json;
 use sparseloom::coordinator::ServeOpts;
 use sparseloom::experiments::{self, Ctx};
 use sparseloom::fixtures;
-use sparseloom::metrics::RunReport;
+use sparseloom::metrics::{RunReport, ShardedReport};
 use sparseloom::profiler::ProfilerConfig;
 use sparseloom::runtime::Runtime;
 use sparseloom::scenario::{
@@ -351,6 +351,19 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
                 .collect();
             println!("  telemetry est rate (qps): {}", est.join(" | "));
         }
+        if report.aggregate.downtime_ms > 0.0
+            || report.aggregate.throttled_ms > 0.0
+            || report.link_cost_ms > 0.0
+        {
+            println!(
+                "  faults: {:.1} ms down | {:.1} ms throttled | {:.1} ms link cost | \
+                 {} recovery(ies)",
+                report.aggregate.downtime_ms,
+                report.aggregate.throttled_ms,
+                report.link_cost_ms,
+                report.aggregate.recoveries.len(),
+            );
+        }
         print_outcomes(&report.aggregate);
         print_forecast(&report.aggregate);
         print_summary(&report.aggregate);
@@ -366,6 +379,7 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
                 report.per_shard.len(),
             );
         }
+        check_fault_expects(&scenario, &report)?;
     } else {
         let rt;
         let mut builder = Server::builder(zoo, &lm, &profiles).opts(opts);
@@ -389,7 +403,30 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
                 report.requests.len(),
             );
         }
+        // The expect vocabulary is defined over sharded reports; a
+        // single-server run is the one-shard special case.
+        let wrapped = ShardedReport {
+            per_shard: vec![report.clone()],
+            aggregate: report,
+            ..Default::default()
+        };
+        check_fault_expects(&scenario, &wrapped)?;
     }
+    Ok(())
+}
+
+/// Check a scenario's declarative `expect` clauses against the finished
+/// run; failed clauses are `SL-EXP-*` errors and fail the command.
+fn check_fault_expects(scenario: &Scenario, report: &ShardedReport) -> Result<()> {
+    if scenario.faults.expects.is_empty() {
+        return Ok(());
+    }
+    let exp = scenario.faults.check_expects(report);
+    if !exp.is_empty() {
+        println!("{}", exp.render_text());
+    }
+    exp.fail_on_errors("fault expectations")?;
+    println!("expectations OK: {} clause(s)", scenario.faults.expects.len());
     Ok(())
 }
 

@@ -98,6 +98,17 @@ pub struct RunReport {
     /// Per-request event log (arrival/queueing/placement/completion),
     /// in submission order. Empty for legacy aggregate-only callers.
     pub requests: Vec<RequestOutcome>,
+    /// Virtual time this session's shard spent inside crash windows
+    /// (fault lab; 0 without a fault profile).
+    pub downtime_ms: f64,
+    /// Extra virtual time bookings paid to DVFS-style thermal
+    /// throttling on the session's SoC clock (fault lab; 0 without a
+    /// throttle curve).
+    pub throttled_ms: f64,
+    /// Recovery latencies, one per crash window the session rejoined
+    /// from: the gap between the window end and the first completion
+    /// that finished after it (fault lab; empty without crashes).
+    pub recoveries: Vec<f64>,
 }
 
 impl RunReport {
@@ -199,6 +210,9 @@ impl RunReport {
         self.total_batches += other.total_batches;
         self.cold_compiles += other.cold_compiles;
         self.warm_loads += other.warm_loads;
+        self.downtime_ms += other.downtime_ms;
+        self.throttled_ms += other.throttled_ms;
+        self.recoveries.extend(other.recoveries);
         for (task, p) in other.slo_forecast {
             let e = self.slo_forecast.entry(task).or_insert(0.0);
             if p > *e {
@@ -236,6 +250,9 @@ pub struct ShardedReport {
     /// end of the run (empty on the static path, which runs no
     /// telemetry).
     pub arrival_est_qps: BTreeMap<String, f64>,
+    /// Total cross-shard link cost (virtual ms) steal/warm-migrate
+    /// adoptions paid under a fault-lab link matrix (0 without one).
+    pub link_cost_ms: f64,
 }
 
 impl ShardedReport {

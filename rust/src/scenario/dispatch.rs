@@ -77,6 +77,7 @@ use crate::telemetry::Telemetry;
 use crate::workload::{shard_of_task, Query, Slo};
 use crate::zoo::Zoo;
 
+use super::faults::FaultProfile;
 use super::server::{Server, Session};
 use super::{Arrival, Scenario};
 
@@ -305,7 +306,7 @@ impl<'a> ShardedServer<'a> {
         opts: ServeOpts,
         sharding: Sharding,
     ) -> Result<ShardedServer<'a>> {
-        crate::analysis::scenario::build_gate(&sharding, profiles)
+        crate::analysis::scenario::build_gate(&sharding, profiles, &FaultProfile::default())
             .fail_on_errors("sharding")?;
         let n = sharding.shards.max(1);
         let shards = (0..n)
@@ -346,6 +347,18 @@ impl<'a> ShardedServer<'a> {
     /// `Server::run_schedule` (§3.4 switch-cost dynamics) is not modeled
     /// on the sharded path.
     pub fn run(&self, scenario: &Scenario) -> Result<ShardedReport> {
+        // Fail-fast sparselint gate on the fault overlay: a profile
+        // naming shards this deployment does not have, or a malformed
+        // link matrix, would otherwise silently never fire (or
+        // mis-price transfers).
+        if !scenario.faults.is_default() {
+            crate::analysis::scenario::build_gate(
+                &self.sharding,
+                self.shards[0].coordinator().profiles,
+                &scenario.faults,
+            )
+            .fail_on_errors("fault profile")?;
+        }
         // The online path (scenario.planner.replan / .steal) drives all
         // shards through one interleaved loop so telemetry can observe
         // cross-shard backlog and migrate tasks — or steal individual
@@ -375,7 +388,7 @@ impl<'a> ShardedServer<'a> {
                 if shard_tasks[i].is_empty() {
                     continue;
                 }
-                let sub = sub_scenario(scenario, &shard_tasks[i]);
+                let sub = sub_scenario(scenario, &shard_tasks[i], i);
                 let mut session = server.session(&sub, phase)?;
                 dispatcher.drive(&mut session, &parts[i])?;
                 budget_utilization[i] = session.pool_utilization();
@@ -396,6 +409,7 @@ impl<'a> ShardedServer<'a> {
             steals: 0,
             budget_utilization,
             arrival_est_qps: BTreeMap::new(),
+            link_cost_ms: 0.0,
         })
     }
 
@@ -458,6 +472,9 @@ impl<'a> ShardedServer<'a> {
         let mut budget_utilization = vec![0.0f64; n];
         let mut replans = 0usize;
         let mut migrations = 0usize;
+        // Fault lab: total virtual ms adoptions paid to cross-shard
+        // link transfers under `scenario.faults.links`.
+        let mut link_cost_ms = 0.0f64;
         for phase in 0..scenario.phases() {
             let slos = &scenario.schedule[phase];
             let mut sessions = Vec::with_capacity(n);
@@ -468,7 +485,7 @@ impl<'a> ShardedServer<'a> {
                     .filter(|t| assignment[*t] == i)
                     .cloned()
                     .collect();
-                sessions.push(server.session(&sub_scenario(scenario, &tasks_i), phase)?);
+                sessions.push(server.session(&sub_scenario(scenario, &tasks_i, i), phase)?);
             }
             // Committed placement orders + pool capacities per shard:
             // the planner re-selects a migrant against the target's.
@@ -616,8 +633,15 @@ impl<'a> ShardedServer<'a> {
                                     } else {
                                         None
                                     };
-                                    let floor =
+                                    let mut floor =
                                         sessions[home].ready_of(&task).unwrap_or(0.0);
+                                    // Fault lab: adoption pays the
+                                    // topology's transfer price.
+                                    if let Some(links) = &scenario.faults.links {
+                                        let c = links.cost(home, thief);
+                                        floor += c;
+                                        link_cost_ms += c;
+                                    }
                                     sessions[thief].adopt_task(
                                         &task, slo, selection, floor, warm_blobs,
                                     )?;
@@ -631,6 +655,69 @@ impl<'a> ShardedServer<'a> {
                                 serve_on = thief;
                                 telemetry.note_steal(thief);
                             }
+                        }
+                    }
+                }
+
+                // --- fault lab: crash redirect ------------------------
+                // The shard picked to serve is inside a crash window at
+                // issue time. With stealing enabled the batch reroutes
+                // to a live shard (warm targets first), paying the link
+                // transfer price if the task must be adopted there;
+                // without it the batch stays home and the session's
+                // swallow rule drops it — which is exactly the
+                // no-adaptation baseline the fault-recovery suite
+                // measures against.
+                if cfg.steal
+                    && !scenario.faults.crashes.is_empty()
+                    && scenario.faults.down_at(serve_on, issue)
+                {
+                    // Rank live shards: already serving < warm pool <
+                    // cold; ties break to the lowest index —
+                    // deterministic.
+                    let mut target: Option<(usize, usize)> = None;
+                    for i in 0..n {
+                        if i == serve_on || scenario.faults.down_at(i, issue) {
+                            continue;
+                        }
+                        let rank = if sessions[i].ready_of(&task).is_some() {
+                            0
+                        } else if sessions[i].has_warm_variant(&task) {
+                            1
+                        } else {
+                            2
+                        };
+                        let cand = (rank, i);
+                        if target.map(|t| cand < t).unwrap_or(true) {
+                            target = Some(cand);
+                        }
+                    }
+                    if let Some((_, dst)) = target {
+                        if sessions[dst].ready_of(&task).is_none() {
+                            if let Some(slo) = slos.get(&task).copied() {
+                                // The payload is the crashed shard's
+                                // pre-crash pool snapshot (state was
+                                // replicated before the window opened).
+                                let warm_blobs = if cfg.warm_migrate {
+                                    Some(sessions[serve_on].pool_task_blobs(&task))
+                                } else {
+                                    None
+                                };
+                                let mut floor =
+                                    sessions[serve_on].ready_of(&task).unwrap_or(0.0);
+                                if let Some(links) = &scenario.faults.links {
+                                    let c = links.cost(serve_on, dst);
+                                    floor += c;
+                                    link_cost_ms += c;
+                                }
+                                sessions[dst]
+                                    .adopt_task(&task, slo, None, floor, warm_blobs)?;
+                                serving.get_mut(&task).expect("known task").push(dst);
+                            }
+                        }
+                        if sessions[dst].ready_of(&task).is_some() {
+                            serve_on = dst;
+                            telemetry.note_steal(dst);
                         }
                     }
                 }
@@ -739,7 +826,13 @@ impl<'a> ShardedServer<'a> {
                 };
                 debug_assert!(sessions[mig.to].ready_of(&mig.task).is_none());
                 let Some(slo) = slos.get(&mig.task).copied() else { continue };
-                let floor = sessions[mig.from].ready_of(&mig.task).unwrap_or(0.0);
+                let mut floor = sessions[mig.from].ready_of(&mig.task).unwrap_or(0.0);
+                // Fault lab: migration pays the topology's transfer price.
+                if let Some(links) = &scenario.faults.links {
+                    let c = links.cost(mig.from, mig.to);
+                    floor += c;
+                    link_cost_ms += c;
+                }
                 // A replanned migrant's pool entries *move* with it —
                 // the source's budget share frees up.
                 let warm_blobs = if cfg.warm_migrate {
@@ -785,6 +878,7 @@ impl<'a> ShardedServer<'a> {
             steals: telemetry.steals() as usize,
             budget_utilization,
             arrival_est_qps: telemetry.rates(),
+            link_cost_ms,
         })
     }
 }
@@ -889,10 +983,13 @@ fn sync_ready_floors(sessions: &mut [Session<'_, '_>], serving: &[usize], task: 
     }
 }
 
-/// Restrict a scenario to one shard's partition: the task list and
-/// every schedule entry. SLOs of foreign tasks would otherwise leak
-/// into the shard's planning and (budget < 1) preloading.
-fn sub_scenario(scenario: &Scenario, tasks: &[String]) -> Scenario {
+/// Restrict a scenario to one shard's partition: the task list, every
+/// schedule entry, and the fault profile — re-indexed so the shard's
+/// own crash windows and degradations sit at shard 0 (the session's
+/// view of itself; cross-shard concerns drop out, see
+/// [`FaultProfile::for_shard`]). SLOs of foreign tasks would otherwise
+/// leak into the shard's planning and (budget < 1) preloading.
+fn sub_scenario(scenario: &Scenario, tasks: &[String], shard: usize) -> Scenario {
     let schedule: Vec<BTreeMap<String, Slo>> = scenario
         .schedule
         .iter()
@@ -903,7 +1000,11 @@ fn sub_scenario(scenario: &Scenario, tasks: &[String]) -> Scenario {
                 .collect()
         })
         .collect();
-    scenario.clone().with_tasks(tasks).with_schedule(schedule)
+    scenario
+        .clone()
+        .with_tasks(tasks)
+        .with_schedule(schedule)
+        .with_faults(scenario.faults.for_shard(shard))
 }
 
 #[cfg(test)]

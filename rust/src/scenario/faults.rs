@@ -1,0 +1,750 @@
+//! Deterministic fault & degradation lab (DESIGN.md §Fault lab).
+//!
+//! A [`FaultProfile`] is a declarative overlay on a [`super::Scenario`]
+//! describing *unhealthy* conditions: per-shard crash/recover windows
+//! (a crashed shard swallows the work queued or arriving during the
+//! window and rejoins with a cold or warm pool), slow-shard degradation
+//! ramps (a latency multiplier that rises over `ramp_ms`), a DVFS-style
+//! thermal throttle curve driven by each processor's accumulated busy
+//! time on the simulated SoC clock, and cross-shard link costs that
+//! make steal/warm-migrate adoption pay a topology-dependent transfer
+//! price.
+//!
+//! Every fault is a pure function of *virtual time* (window bounds,
+//! ramp positions, busy-time thresholds) — the lab adds no randomness
+//! of its own, so a scenario with a fault profile replays bit-identical
+//! under its arrival seed, which is what `tests/determinism.rs` pins.
+//!
+//! The profile also carries declarative [`Expect`] clauses ("task X
+//! completes ≥ N despite shard 1 crashing") checked after a run via
+//! [`FaultProfile::check_expects`]; failures surface as `SL-EXP-*`
+//! error diagnostics, so `serve` on a scenario with expectations is
+//! itself a recovery test.
+
+use anyhow::{bail, Context, Result};
+
+use crate::analysis::{Diagnostic, Report};
+use crate::json::Json;
+use crate::metrics::ShardedReport;
+
+/// How a crashed shard's memory pool comes back at the end of the
+/// window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejoinMode {
+    /// The pool is wiped: every resident task pays compile + load again
+    /// on its first post-rejoin batch.
+    Cold,
+    /// The pool survives (e.g. the crash was a transient stall, not a
+    /// power cycle): service resumes at the window end with warm state.
+    Warm,
+}
+
+impl RejoinMode {
+    fn tag(self) -> &'static str {
+        match self {
+            RejoinMode::Cold => "cold",
+            RejoinMode::Warm => "warm",
+        }
+    }
+}
+
+/// One crash/recover window on one shard. While `start_ms <= t <
+/// end_ms` the shard serves nothing: queries arriving during the
+/// window — and queries still queued when it opens — are lost (unless
+/// an online path redirects them to a live shard first).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CrashWindow {
+    pub shard: usize,
+    pub start_ms: f64,
+    pub end_ms: f64,
+    pub rejoin: RejoinMode,
+}
+
+impl CrashWindow {
+    /// Is the shard down at virtual time `t`?
+    pub fn active_at(&self, t: f64) -> bool {
+        t >= self.start_ms && t < self.end_ms
+    }
+
+    /// Does the window swallow a query that arrived at `arrival_ms` and
+    /// would start no earlier than `ready_ms`? Covers both queries
+    /// arriving mid-window and queries queued when the window opens.
+    pub fn swallows(&self, arrival_ms: f64, ready_ms: f64) -> bool {
+        arrival_ms < self.end_ms && arrival_ms.max(ready_ms) >= self.start_ms
+    }
+}
+
+/// A slow-shard degradation ramp: service times on the shard are
+/// multiplied by a factor that ramps linearly from 1 at `start_ms` to
+/// `factor` at `start_ms + ramp_ms` and stays there. Overlapping ramps
+/// multiply.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Degradation {
+    pub shard: usize,
+    pub start_ms: f64,
+    pub ramp_ms: f64,
+    pub factor: f64,
+}
+
+impl Degradation {
+    /// The multiplier this ramp contributes at virtual time `t`.
+    pub fn factor_at(&self, t: f64) -> f64 {
+        let progress = if self.ramp_ms > 0.0 {
+            ((t - self.start_ms) / self.ramp_ms).clamp(0.0, 1.0)
+        } else if t >= self.start_ms {
+            1.0
+        } else {
+            0.0
+        };
+        1.0 + (self.factor - 1.0) * progress
+    }
+}
+
+/// One step of a DVFS-style throttle curve: once a processor's
+/// accumulated busy time reaches `busy_ms`, its service times are
+/// multiplied by `factor` (the thermal governor has dropped the clock).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ThrottleStep {
+    pub busy_ms: f64,
+    pub factor: f64,
+}
+
+/// A busy-time → slowdown step function applied per processor on the
+/// simulated SoC clock. Steps must be sorted by `busy_ms`; the factor
+/// before the first step is 1.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ThrottleCurve {
+    pub steps: Vec<ThrottleStep>,
+}
+
+impl ThrottleCurve {
+    /// The slowdown factor in effect after `busy_ms` of accumulated
+    /// work (1.0 before the first step).
+    pub fn factor_at(&self, busy_ms: f64) -> f64 {
+        let mut f = 1.0;
+        for s in &self.steps {
+            if busy_ms >= s.busy_ms {
+                f = s.factor;
+            } else {
+                break;
+            }
+        }
+        f
+    }
+
+    /// The curve as plain `(busy_ms, factor)` pairs — the form
+    /// [`crate::soc::SocSim::set_throttle`] takes, keeping `soc`
+    /// independent of this module.
+    pub fn as_steps(&self) -> Vec<(f64, f64)> {
+        self.steps.iter().map(|s| (s.busy_ms, s.factor)).collect()
+    }
+}
+
+/// Cross-shard transfer costs: `transfer_ms[from][to]` is the virtual
+/// latency a steal/warm-migrate adoption pays to move task state from
+/// shard `from` to shard `to`. Must be square, symmetric, with a zero
+/// diagonal (linted as `SL-SCN-016`).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct LinkMatrix {
+    pub transfer_ms: Vec<Vec<f64>>,
+}
+
+impl LinkMatrix {
+    /// Transfer cost from shard `from` to shard `to` (0 when the matrix
+    /// does not cover the pair).
+    pub fn cost(&self, from: usize, to: usize) -> f64 {
+        self.transfer_ms
+            .get(from)
+            .and_then(|row| row.get(to))
+            .copied()
+            .unwrap_or(0.0)
+    }
+
+    /// Smallest off-diagonal cost, if any transfer is possible.
+    pub fn min_transfer_ms(&self) -> Option<f64> {
+        let mut best = f64::INFINITY;
+        let mut any = false;
+        for (i, row) in self.transfer_ms.iter().enumerate() {
+            for (j, &ms) in row.iter().enumerate() {
+                if i != j {
+                    any = true;
+                    best = best.min(ms);
+                }
+            }
+        }
+        if any {
+            Some(best)
+        } else {
+            None
+        }
+    }
+}
+
+/// A declarative post-run assertion on a fault scenario — the lab's
+/// test vocabulary. Checked by [`FaultProfile::check_expects`]; each
+/// failed clause is an `SL-EXP-*` error diagnostic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expect {
+    /// At least `at_least` requests complete (non-dropped) — for one
+    /// task when `task` is set, across the whole run otherwise.
+    MinCompleted { task: Option<String>, at_least: usize },
+    /// At most `at_most` requests are dropped across the run.
+    MaxDropped { at_most: usize },
+    /// The aggregate SLO violation rate stays at or under `at_most`.
+    MaxViolationRate { at_most: f64 },
+    /// Every crash window on `shard` recovers — first post-rejoin
+    /// completion — within `ms` of the window end.
+    RecoveryWithin { shard: usize, ms: f64 },
+}
+
+/// The declarative fault overlay on a scenario. `Default` is the empty
+/// profile: no crashes, no degradation, no throttle, no link costs —
+/// and the runtime takes the exact pre-fault-lab code paths, so legacy
+/// scenarios replay bit-identically.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultProfile {
+    pub crashes: Vec<CrashWindow>,
+    pub degradations: Vec<Degradation>,
+    pub throttle: Option<ThrottleCurve>,
+    pub links: Option<LinkMatrix>,
+    pub expects: Vec<Expect>,
+}
+
+impl FaultProfile {
+    /// True when the profile injects nothing and asserts nothing.
+    pub fn is_default(&self) -> bool {
+        self.crashes.is_empty()
+            && self.degradations.is_empty()
+            && self.throttle.is_none()
+            && self.links.is_none()
+            && self.expects.is_empty()
+    }
+
+    /// The profile as seen from inside shard `shard`'s own session:
+    /// crash windows and degradations for that shard re-indexed to
+    /// shard 0, the throttle curve kept (it is per processor, not per
+    /// shard), link costs and expectations dropped (both are
+    /// cross-shard concerns handled by `ShardedServer`).
+    pub fn for_shard(&self, shard: usize) -> FaultProfile {
+        FaultProfile {
+            crashes: self
+                .crashes
+                .iter()
+                .filter(|w| w.shard == shard)
+                .map(|w| CrashWindow { shard: 0, ..w.clone() })
+                .collect(),
+            degradations: self
+                .degradations
+                .iter()
+                .filter(|d| d.shard == shard)
+                .map(|d| Degradation { shard: 0, ..d.clone() })
+                .collect(),
+            throttle: self.throttle.clone(),
+            links: None,
+            expects: Vec::new(),
+        }
+    }
+
+    /// Is shard `shard` inside one of its crash windows at time `t`?
+    pub fn down_at(&self, shard: usize, t: f64) -> bool {
+        self.crashes
+            .iter()
+            .any(|w| w.shard == shard && w.active_at(t))
+    }
+
+    /// Would a query on `shard` with this (arrival, ready-floor) pair
+    /// be swallowed by one of the shard's crash windows?
+    pub fn swallowed_by(&self, shard: usize, arrival_ms: f64, ready_ms: f64) -> bool {
+        self.crashes
+            .iter()
+            .any(|w| w.shard == shard && w.swallows(arrival_ms, ready_ms))
+    }
+
+    /// The combined degradation multiplier on `shard` at time `t`
+    /// (exactly 1.0 when no ramp touches the shard).
+    pub fn degradation_factor(&self, shard: usize, t: f64) -> f64 {
+        let mut f = 1.0;
+        for d in &self.degradations {
+            if d.shard == shard {
+                f *= d.factor_at(t);
+            }
+        }
+        f
+    }
+
+    /// Largest shard index any fault entry names (for the sharding
+    /// cross-check lint).
+    pub fn max_shard_named(&self) -> Option<usize> {
+        let crash = self.crashes.iter().map(|w| w.shard);
+        let degr = self.degradations.iter().map(|d| d.shard);
+        let exp = self.expects.iter().filter_map(|e| match e {
+            Expect::RecoveryWithin { shard, .. } => Some(*shard),
+            _ => None,
+        });
+        crash.chain(degr).chain(exp).max()
+    }
+
+    // ---- post-run assertions -------------------------------------------
+
+    /// Check every [`Expect`] clause against a finished sharded run.
+    /// Failures are `SL-EXP-*` error diagnostics; an empty report means
+    /// every expectation held.
+    pub fn check_expects(&self, report: &ShardedReport) -> Report {
+        let mut r = Report::new();
+        for (i, e) in self.expects.iter().enumerate() {
+            let at = format!("expects[{i}]");
+            match e {
+                Expect::MinCompleted { task, at_least } => {
+                    let done = report
+                        .aggregate
+                        .requests
+                        .iter()
+                        .filter(|q| !q.dropped)
+                        .filter(|q| match task {
+                            Some(t) => &q.task == t,
+                            None => true,
+                        })
+                        .count();
+                    if done < *at_least {
+                        let scope = match task {
+                            Some(t) => format!("task {t:?}"),
+                            None => "run".to_string(),
+                        };
+                        r.push(Diagnostic::error(
+                            "SL-EXP-001",
+                            at,
+                            format!("{scope} completed {done} request(s), expected >= {at_least}"),
+                        ));
+                    }
+                }
+                Expect::MaxDropped { at_most } => {
+                    let dropped = report.aggregate.total_dropped;
+                    if dropped > *at_most {
+                        r.push(Diagnostic::error(
+                            "SL-EXP-002",
+                            at,
+                            format!("run dropped {dropped} request(s), expected <= {at_most}"),
+                        ));
+                    }
+                }
+                Expect::MaxViolationRate { at_most } => {
+                    let rate = report.aggregate.violation_rate();
+                    if rate > *at_most {
+                        r.push(Diagnostic::error(
+                            "SL-EXP-003",
+                            at,
+                            format!("violation rate {rate:.3}, expected <= {at_most}"),
+                        ));
+                    }
+                }
+                Expect::RecoveryWithin { shard, ms } => {
+                    let windows =
+                        self.crashes.iter().filter(|w| w.shard == *shard).count();
+                    let recs: &[f64] = report
+                        .per_shard
+                        .get(*shard)
+                        .map(|s| s.recoveries.as_slice())
+                        .unwrap_or(&[]);
+                    if recs.len() < windows {
+                        r.push(Diagnostic::error(
+                            "SL-EXP-004",
+                            at,
+                            format!(
+                                "shard {shard} recovered from {} of {windows} crash \
+                                 window(s) (no post-rejoin completion observed)",
+                                recs.len()
+                            ),
+                        ));
+                    } else if let Some(worst) =
+                        recs.iter().copied().reduce(f64::max)
+                    {
+                        if worst > *ms {
+                            r.push(Diagnostic::error(
+                                "SL-EXP-004",
+                                at,
+                                format!(
+                                    "shard {shard} worst recovery latency {worst:.1} ms, \
+                                     expected <= {ms}"
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        r
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        if !self.crashes.is_empty() {
+            fields.push((
+                "crashes",
+                Json::arr(self.crashes.iter().map(|w| {
+                    Json::obj(vec![
+                        ("shard", Json::Num(w.shard as f64)),
+                        ("start_ms", Json::Num(w.start_ms)),
+                        ("end_ms", Json::Num(w.end_ms)),
+                        ("rejoin", Json::Str(w.rejoin.tag().into())),
+                    ])
+                })),
+            ));
+        }
+        if !self.degradations.is_empty() {
+            fields.push((
+                "degradations",
+                Json::arr(self.degradations.iter().map(|d| {
+                    Json::obj(vec![
+                        ("shard", Json::Num(d.shard as f64)),
+                        ("start_ms", Json::Num(d.start_ms)),
+                        ("ramp_ms", Json::Num(d.ramp_ms)),
+                        ("factor", Json::Num(d.factor)),
+                    ])
+                })),
+            ));
+        }
+        if let Some(curve) = &self.throttle {
+            fields.push((
+                "throttle",
+                Json::obj(vec![(
+                    "steps",
+                    Json::arr(curve.steps.iter().map(|s| {
+                        Json::obj(vec![
+                            ("busy_ms", Json::Num(s.busy_ms)),
+                            ("factor", Json::Num(s.factor)),
+                        ])
+                    })),
+                )]),
+            ));
+        }
+        if let Some(links) = &self.links {
+            fields.push((
+                "links",
+                Json::obj(vec![(
+                    "transfer_ms",
+                    Json::arr(
+                        links
+                            .transfer_ms
+                            .iter()
+                            .map(|row| Json::arr(row.iter().map(|&ms| Json::Num(ms)))),
+                    ),
+                )]),
+            ));
+        }
+        if !self.expects.is_empty() {
+            fields.push((
+                "expects",
+                Json::arr(self.expects.iter().map(|e| match e {
+                    Expect::MinCompleted { task, at_least } => {
+                        let mut f = vec![("kind", Json::Str("min_completed".into()))];
+                        if let Some(t) = task {
+                            f.push(("task", Json::Str(t.clone())));
+                        }
+                        f.push(("at_least", Json::Num(*at_least as f64)));
+                        Json::obj(f)
+                    }
+                    Expect::MaxDropped { at_most } => Json::obj(vec![
+                        ("kind", Json::Str("max_dropped".into())),
+                        ("at_most", Json::Num(*at_most as f64)),
+                    ]),
+                    Expect::MaxViolationRate { at_most } => Json::obj(vec![
+                        ("kind", Json::Str("max_violation_rate".into())),
+                        ("at_most", Json::Num(*at_most)),
+                    ]),
+                    Expect::RecoveryWithin { shard, ms } => Json::obj(vec![
+                        ("kind", Json::Str("recovery_within".into())),
+                        ("shard", Json::Num(*shard as f64)),
+                        ("ms", Json::Num(*ms)),
+                    ]),
+                })),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<FaultProfile> {
+        let crashes = match v.get("crashes") {
+            None => Vec::new(),
+            Some(ws) => ws
+                .as_arr()
+                .context("faults.crashes must be an array")?
+                .iter()
+                .map(|w| {
+                    let rejoin = match w.get("rejoin").and_then(|r| r.as_str()) {
+                        None | Some("cold") => RejoinMode::Cold,
+                        Some("warm") => RejoinMode::Warm,
+                        Some(other) => bail!("unknown rejoin mode {other:?}"),
+                    };
+                    Ok(CrashWindow {
+                        shard: w.req("shard")?.as_usize().context("crash.shard")?,
+                        start_ms: w
+                            .req("start_ms")?
+                            .as_f64()
+                            .context("crash.start_ms")?,
+                        end_ms: w.req("end_ms")?.as_f64().context("crash.end_ms")?,
+                        rejoin,
+                    })
+                })
+                .collect::<Result<_>>()?,
+        };
+        let degradations = match v.get("degradations") {
+            None => Vec::new(),
+            Some(ds) => ds
+                .as_arr()
+                .context("faults.degradations must be an array")?
+                .iter()
+                .map(|d| {
+                    Ok(Degradation {
+                        shard: d.req("shard")?.as_usize().context("degradation.shard")?,
+                        start_ms: d
+                            .req("start_ms")?
+                            .as_f64()
+                            .context("degradation.start_ms")?,
+                        ramp_ms: d
+                            .req("ramp_ms")?
+                            .as_f64()
+                            .context("degradation.ramp_ms")?,
+                        factor: d
+                            .req("factor")?
+                            .as_f64()
+                            .context("degradation.factor")?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+        };
+        let throttle = match v.get("throttle") {
+            None => None,
+            Some(t) => {
+                let steps = t
+                    .req("steps")?
+                    .as_arr()
+                    .context("faults.throttle.steps must be an array")?
+                    .iter()
+                    .map(|s| {
+                        Ok(ThrottleStep {
+                            busy_ms: s
+                                .req("busy_ms")?
+                                .as_f64()
+                                .context("throttle.busy_ms")?,
+                            factor: s
+                                .req("factor")?
+                                .as_f64()
+                                .context("throttle.factor")?,
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                Some(ThrottleCurve { steps })
+            }
+        };
+        let links = match v.get("links") {
+            None => None,
+            Some(l) => {
+                let transfer_ms = l
+                    .req("transfer_ms")?
+                    .as_arr()
+                    .context("faults.links.transfer_ms must be an array")?
+                    .iter()
+                    .map(|row| {
+                        row.as_arr()
+                            .context("links.transfer_ms rows must be arrays")?
+                            .iter()
+                            .map(|ms| {
+                                ms.as_f64().context("links.transfer_ms entries")
+                            })
+                            .collect::<Result<Vec<f64>>>()
+                    })
+                    .collect::<Result<_>>()?;
+                Some(LinkMatrix { transfer_ms })
+            }
+        };
+        let expects = match v.get("expects") {
+            None => Vec::new(),
+            Some(es) => es
+                .as_arr()
+                .context("faults.expects must be an array")?
+                .iter()
+                .map(|e| {
+                    let kind = e.req("kind")?.as_str().context("expect.kind")?;
+                    Ok(match kind {
+                        "min_completed" => Expect::MinCompleted {
+                            task: e
+                                .get("task")
+                                .and_then(|t| t.as_str())
+                                .map(|t| t.to_string()),
+                            at_least: e
+                                .req("at_least")?
+                                .as_usize()
+                                .context("expect.at_least")?,
+                        },
+                        "max_dropped" => Expect::MaxDropped {
+                            at_most: e
+                                .req("at_most")?
+                                .as_usize()
+                                .context("expect.at_most")?,
+                        },
+                        "max_violation_rate" => Expect::MaxViolationRate {
+                            at_most: e
+                                .req("at_most")?
+                                .as_f64()
+                                .context("expect.at_most")?,
+                        },
+                        "recovery_within" => Expect::RecoveryWithin {
+                            shard: e.req("shard")?.as_usize().context("expect.shard")?,
+                            ms: e.req("ms")?.as_f64().context("expect.ms")?,
+                        },
+                        other => bail!("unknown expect kind {other:?}"),
+                    })
+                })
+                .collect::<Result<_>>()?,
+        };
+        Ok(FaultProfile { crashes, degradations, throttle, links, expects })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FaultProfile {
+        FaultProfile {
+            crashes: vec![CrashWindow {
+                shard: 1,
+                start_ms: 500.0,
+                end_ms: 1_200.0,
+                rejoin: RejoinMode::Warm,
+            }],
+            degradations: vec![Degradation {
+                shard: 0,
+                start_ms: 100.0,
+                ramp_ms: 400.0,
+                factor: 3.0,
+            }],
+            throttle: Some(ThrottleCurve {
+                steps: vec![
+                    ThrottleStep { busy_ms: 200.0, factor: 1.5 },
+                    ThrottleStep { busy_ms: 800.0, factor: 2.0 },
+                ],
+            }),
+            links: Some(LinkMatrix {
+                transfer_ms: vec![vec![0.0, 4.0], vec![4.0, 0.0]],
+            }),
+            expects: vec![
+                Expect::MinCompleted { task: Some("gamma".into()), at_least: 5 },
+                Expect::MaxViolationRate { at_most: 0.9 },
+            ],
+        }
+    }
+
+    #[test]
+    fn default_profile_is_inert() {
+        let p = FaultProfile::default();
+        assert!(p.is_default());
+        assert!(!p.down_at(0, 100.0));
+        assert!(!p.swallowed_by(0, 10.0, 20.0));
+        assert_eq!(p.degradation_factor(0, 1_000.0).to_bits(), 1.0f64.to_bits());
+        assert_eq!(p.max_shard_named(), None);
+    }
+
+    #[test]
+    fn crash_window_swallow_semantics() {
+        let w = CrashWindow {
+            shard: 0,
+            start_ms: 100.0,
+            end_ms: 200.0,
+            rejoin: RejoinMode::Cold,
+        };
+        // Arrives mid-window.
+        assert!(w.swallows(150.0, 150.0));
+        // Arrived earlier but still queued when the window opened.
+        assert!(w.swallows(50.0, 120.0));
+        // Served before the crash.
+        assert!(!w.swallows(50.0, 60.0));
+        // Arrives after rejoin.
+        assert!(!w.swallows(250.0, 250.0));
+        assert!(w.active_at(100.0) && w.active_at(199.9));
+        assert!(!w.active_at(200.0));
+    }
+
+    #[test]
+    fn degradation_ramps_linearly_and_saturates() {
+        let d = Degradation { shard: 0, start_ms: 100.0, ramp_ms: 200.0, factor: 3.0 };
+        assert_eq!(d.factor_at(0.0), 1.0);
+        assert_eq!(d.factor_at(100.0), 1.0);
+        assert!((d.factor_at(200.0) - 2.0).abs() < 1e-12);
+        assert_eq!(d.factor_at(300.0), 3.0);
+        assert_eq!(d.factor_at(10_000.0), 3.0);
+        // Zero-ramp degrades as a step.
+        let step = Degradation { shard: 0, start_ms: 50.0, ramp_ms: 0.0, factor: 2.0 };
+        assert_eq!(step.factor_at(49.0), 1.0);
+        assert_eq!(step.factor_at(50.0), 2.0);
+    }
+
+    #[test]
+    fn throttle_curve_is_a_step_function() {
+        let c = ThrottleCurve {
+            steps: vec![
+                ThrottleStep { busy_ms: 100.0, factor: 1.5 },
+                ThrottleStep { busy_ms: 400.0, factor: 2.5 },
+            ],
+        };
+        assert_eq!(c.factor_at(0.0), 1.0);
+        assert_eq!(c.factor_at(99.9), 1.0);
+        assert_eq!(c.factor_at(100.0), 1.5);
+        assert_eq!(c.factor_at(399.9), 1.5);
+        assert_eq!(c.factor_at(400.0), 2.5);
+        assert_eq!(c.as_steps(), vec![(100.0, 1.5), (400.0, 2.5)]);
+    }
+
+    #[test]
+    fn for_shard_reindexes_and_drops_cross_shard_concerns() {
+        let p = sample();
+        let s1 = p.for_shard(1);
+        assert_eq!(s1.crashes.len(), 1);
+        assert_eq!(s1.crashes[0].shard, 0, "re-indexed to the session's view");
+        assert!(s1.degradations.is_empty());
+        assert!(s1.throttle.is_some(), "throttle is per processor, kept");
+        assert!(s1.links.is_none() && s1.expects.is_empty());
+        let s0 = p.for_shard(0);
+        assert!(s0.crashes.is_empty());
+        assert_eq!(s0.degradations.len(), 1);
+        assert_eq!(p.max_shard_named(), Some(1));
+    }
+
+    #[test]
+    fn link_matrix_costs_and_min_transfer() {
+        let links = LinkMatrix {
+            transfer_ms: vec![vec![0.0, 7.0], vec![3.0, 0.0]],
+        };
+        assert_eq!(links.cost(0, 1), 7.0);
+        assert_eq!(links.cost(1, 0), 3.0);
+        assert_eq!(links.cost(5, 0), 0.0, "out-of-range pairs cost nothing");
+        assert_eq!(links.min_transfer_ms(), Some(3.0));
+        assert_eq!(LinkMatrix::default().min_transfer_ms(), None);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_every_field() {
+        let p = sample();
+        let text = p.to_json().to_string_pretty();
+        let back = FaultProfile::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p);
+        // The empty profile round-trips through an empty object.
+        let empty = FaultProfile::default();
+        let text = empty.to_json().to_string_pretty();
+        let back = FaultProfile::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert!(back.is_default());
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_kinds() {
+        let bad = crate::json::parse(
+            r#"{"crashes": [{"shard": 0, "start_ms": 1, "end_ms": 2, "rejoin": "hot"}]}"#,
+        )
+        .unwrap();
+        assert!(FaultProfile::from_json(&bad).is_err());
+        let bad = crate::json::parse(r#"{"expects": [{"kind": "teleport"}]}"#).unwrap();
+        assert!(FaultProfile::from_json(&bad).is_err());
+    }
+}

@@ -56,9 +56,14 @@
 //! ```
 
 pub mod dispatch;
+pub mod faults;
 pub mod server;
 
 pub use dispatch::{Dispatch, Dispatcher, ShardAssignment, ShardedServer, Sharding};
+pub use faults::{
+    CrashWindow, Degradation, Expect, FaultProfile, LinkMatrix, RejoinMode, ThrottleCurve,
+    ThrottleStep,
+};
 pub use server::{Server, ServerBuilder, Session};
 
 use std::collections::BTreeMap;
@@ -301,6 +306,11 @@ pub struct Scenario {
     /// Planner knobs: batch-aware Algorithm 1 + online re-planning
     /// (identity planner config by default — PR 2 behavior).
     pub planner: PlannerConfig,
+    /// Declarative fault & degradation overlay (crash windows, slow
+    /// ramps, thermal throttling, link costs, `expect` clauses). The
+    /// default empty profile injects nothing — legacy scenarios replay
+    /// bit-identically. See [`faults`].
+    pub faults: FaultProfile,
     /// Seed for the open-loop arrival generators (deterministic replay).
     pub seed: u64,
 }
@@ -322,6 +332,7 @@ impl Scenario {
             dispatch: Dispatch::default(),
             sharding: Sharding::default(),
             planner: PlannerConfig::default(),
+            faults: FaultProfile::default(),
             seed: 0,
         }
     }
@@ -431,6 +442,12 @@ impl Scenario {
     /// Configure the planner (see [`PlannerConfig`]).
     pub fn with_planner(mut self, planner: PlannerConfig) -> Scenario {
         self.planner = planner;
+        self
+    }
+
+    /// Overlay a fault & degradation profile (see [`faults`]).
+    pub fn with_faults(mut self, faults: FaultProfile) -> Scenario {
+        self.faults = faults;
         self
     }
 
@@ -577,7 +594,7 @@ impl Scenario {
                 ),
             ]),
         };
-        Json::obj(vec![
+        let mut fields: Vec<(&str, Json)> = vec![
             ("name", Json::Str(self.name.clone())),
             // u64 seeds go through strings: JSON numbers are f64 and
             // corrupt values above 2^53, breaking deterministic replay.
@@ -635,7 +652,13 @@ impl Scenario {
                 "universe",
                 Json::arr(self.universe.iter().map(slo_to_json)),
             ),
-        ])
+        ];
+        // The fault overlay is omitted when empty so pre-fault-lab
+        // files and their round-tripped forms stay byte-stable.
+        if !self.faults.is_default() {
+            fields.push(("faults", self.faults.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<Scenario> {
@@ -875,6 +898,13 @@ impl Scenario {
                 .collect::<Result<_>>()?,
         };
 
+        // Back-compat: files written before the fault lab carry no
+        // `faults` key and parse to the inert empty profile.
+        let faults = match v.get("faults") {
+            None => FaultProfile::default(),
+            Some(f) => FaultProfile::from_json(f).context("faults")?,
+        };
+
         Ok(Scenario {
             name,
             tasks,
@@ -885,6 +915,7 @@ impl Scenario {
             dispatch,
             sharding,
             planner,
+            faults,
             seed,
         })
     }
@@ -1056,6 +1087,36 @@ mod tests {
                 ],
             )
             .with_universe(vec![Slo { min_accuracy: 0.7, max_latency_ms: 99.0 }]),
+            // The full fault-lab overlay: crash window, degradation
+            // ramp, throttle curve, link matrix, and expect clauses.
+            Scenario::bursty(&tasks(), slos(), 6.0, 100.0, 400.0, 3_000.0)
+                .with_seed(23)
+                .with_sharding(Sharding::hash(2))
+                .with_planner(PlannerConfig::online())
+                .with_faults(FaultProfile {
+                    crashes: vec![CrashWindow {
+                        shard: 1,
+                        start_ms: 800.0,
+                        end_ms: 1_400.0,
+                        rejoin: RejoinMode::Warm,
+                    }],
+                    degradations: vec![Degradation {
+                        shard: 0,
+                        start_ms: 200.0,
+                        ramp_ms: 600.0,
+                        factor: 2.5,
+                    }],
+                    throttle: Some(ThrottleCurve {
+                        steps: vec![ThrottleStep { busy_ms: 500.0, factor: 1.8 }],
+                    }),
+                    links: Some(LinkMatrix {
+                        transfer_ms: vec![vec![0.0, 6.0], vec![6.0, 0.0]],
+                    }),
+                    expects: vec![
+                        Expect::MinCompleted { task: None, at_least: 1 },
+                        Expect::RecoveryWithin { shard: 1, ms: 500.0 },
+                    ],
+                }),
         ];
         for sc in cases {
             let text = sc.to_json().to_string_pretty();
@@ -1067,6 +1128,7 @@ mod tests {
             assert_eq!(back.dispatch, sc.dispatch);
             assert_eq!(back.sharding, sc.sharding);
             assert_eq!(back.planner, sc.planner);
+            assert_eq!(back.faults, sc.faults);
             assert_eq!(back.schedule, sc.schedule);
             assert_eq!(back.universe.len(), sc.universe.len());
             // Streams replay identically through the round trip.
@@ -1100,6 +1162,7 @@ mod tests {
         assert!(!sc.planner.steal, "default must not steal");
         assert!(!sc.planner.warm_migrate, "default must not warm-migrate");
         assert!(!sc.planner.predictive, "default must not forecast");
+        assert!(sc.faults.is_default(), "default must inject no faults");
     }
 
     #[test]

@@ -58,6 +58,7 @@ use crate::workload::{placement_orders, Query, Slo};
 use crate::zoo::Zoo;
 
 use super::dispatch::{Dispatch, Dispatcher};
+use super::faults::{FaultProfile, RejoinMode};
 use super::{Admission, Scenario};
 
 /// Queries observed before a feedback-switch decision re-evaluates.
@@ -318,7 +319,16 @@ impl<'a> Server<'a> {
             .fail_on_errors(&format!("scenario {:?}", scenario.name))?;
         let platform = &self.coord.lm.platform;
         let s = self.coord.zoo.subgraphs;
-        let sim = SocSim::new(&platform.processor_list());
+        // Fault lab: the session sees the scenario's profile through its
+        // own shard's lens (the sharded drive hands each sub-scenario a
+        // re-indexed profile; for a single server, shard 0 *is* the
+        // server). The throttle curve installs on the SoC clock; an
+        // empty profile changes nothing, bit for bit.
+        let faults = scenario.faults.for_shard(0);
+        let mut sim = SocSim::new(&platform.processor_list());
+        if let Some(curve) = &faults.throttle {
+            sim.set_throttle(curve.as_steps());
+        }
         let np_assign = baselines::np_task_processor(self.coord.profiles, platform);
         let orders_omega = placement_orders(platform, s);
 
@@ -396,6 +406,10 @@ impl<'a> Server<'a> {
             requests: Vec::new(),
             cold_compiles: 0,
             warm_loads: 0,
+            rejoined: vec![false; faults.crashes.len()],
+            pending_recovery: Vec::new(),
+            recoveries: Vec::new(),
+            faults,
         })
     }
 }
@@ -455,6 +469,17 @@ pub struct Session<'s, 'a> {
     cold_compiles: usize,
     /// Blobs that arrived warm from another shard's pool at adoption.
     warm_loads: usize,
+    /// Shard-local fault profile (see [`super::faults`]): crash windows
+    /// and degradations re-indexed so shard 0 means *this* session.
+    faults: FaultProfile,
+    /// Per crash-window flag: rejoin processing already ran.
+    rejoined: Vec<bool>,
+    /// Crash-window ends still waiting for their first post-rejoin
+    /// completion (the recovery-latency measurement in flight).
+    pending_recovery: Vec<f64>,
+    /// Recovery latencies observed: first completion after each rejoin,
+    /// minus the window end.
+    recoveries: Vec<f64>,
 }
 
 impl<'s, 'a> Session<'s, 'a> {
@@ -498,6 +523,16 @@ impl<'s, 'a> Session<'s, 'a> {
         };
         let self_clocked = self.self_clocked;
         let tz = coord.zoo.task(task)?;
+
+        // Fault lab: lazily apply crash windows whose recovery point has
+        // passed by this batch — raise per-task FIFO floors to the
+        // window end and, on a cold rejoin, wipe the pool so each task's
+        // next batch pays compile + load again. Runs before the fair
+        // snapshot so fairness sees the raised floors.
+        if !self.faults.crashes.is_empty() {
+            let ready = self.states.get(task).map(|st| st.ready_ms).unwrap_or(0.0);
+            self.process_rejoins(first.arrival_ms.max(ready));
+        }
 
         // Weighted-fair admission compares this task's backlog against
         // the *other* tasks'; snapshot the cross-task state before taking
@@ -552,6 +587,27 @@ impl<'s, 'a> Session<'s, 'a> {
             } else {
                 q.arrival_ms
             };
+            // Fault lab: the shard is down — queries arriving inside a
+            // crash window, or still queued when one opens, die with it.
+            if !self.faults.crashes.is_empty()
+                && self.faults.swallowed_by(0, effective_arrival, st.ready_ms)
+            {
+                if self_clocked {
+                    // A self-clocked client retries after the rejoin:
+                    // advance the loop past the window instead of
+                    // freezing it mid-crash forever.
+                    for w in &self.faults.crashes {
+                        if w.swallows(effective_arrival, st.ready_ms)
+                            && st.ready_ms < w.end_ms
+                        {
+                            st.ready_ms = w.end_ms;
+                        }
+                    }
+                }
+                st.dropped += 1;
+                events[i] = Some(dropped_event(q, None));
+                continue;
+            }
             while st
                 .inflight
                 .front()
@@ -649,11 +705,19 @@ impl<'s, 'a> Session<'s, 'a> {
                 break;
             };
             let hop = if j > 0 { 1.0 + platform.interproc_overhead } else { 1.0 };
-            let (start, end) = self.sim.book(proc, stage_ready, ms * hop);
+            // Fault lab: slow-shard ramps stretch service time by the
+            // multiplier in effect when the stage issues (guarded so
+            // fault-free runs keep the exact legacy arithmetic).
+            let stage_ms = if self.faults.degradations.is_empty() {
+                ms * hop
+            } else {
+                ms * hop * self.faults.degradation_factor(0, stage_ready)
+            };
+            let (start, end) = self.sim.book(proc, stage_ready, stage_ms);
             if j == 0 {
                 start_ms = start;
             }
-            service += ms * hop;
+            service += stage_ms;
             stage_ready = end;
         }
         if !supported {
@@ -693,6 +757,19 @@ impl<'s, 'a> Session<'s, 'a> {
                 dropped: false,
                 slo_ok: Some(service <= slo.max_latency_ms),
             });
+        }
+
+        // Fault lab: the first completion after a rejoin closes that
+        // window's recovery-latency measurement.
+        if !self.pending_recovery.is_empty() {
+            let pending = std::mem::take(&mut self.pending_recovery);
+            for end in pending {
+                if stage_ready >= end {
+                    self.recoveries.push(stage_ready - end);
+                } else {
+                    self.pending_recovery.push(end);
+                }
+            }
         }
 
         // --- SLO feedback: switch variants when violating ---------------
@@ -835,6 +912,57 @@ impl<'s, 'a> Session<'s, 'a> {
             if ms > st.ready_ms {
                 st.ready_ms = ms;
             }
+        }
+    }
+
+    /// Fault lab: lazily apply every crash window whose recovery point
+    /// has passed by `now_ms`. The crash already dropped whatever was
+    /// queued (the swallow rule in [`Session::submit_batch`]); rejoin
+    /// raises every task's FIFO floor to the window end and, for a
+    /// [`RejoinMode::Cold`] rejoin, wipes the pool so each task's next
+    /// batch pays compile + load again, exactly like a planned cold
+    /// start.
+    fn process_rejoins(&mut self, now_ms: f64) {
+        let coord = &self.server.coord;
+        for i in 0..self.faults.crashes.len() {
+            if self.rejoined[i] || now_ms < self.faults.crashes[i].end_ms {
+                continue;
+            }
+            self.rejoined[i] = true;
+            let w = self.faults.crashes[i].clone();
+            for st in self.states.values_mut() {
+                if st.ready_ms < w.end_ms {
+                    st.ready_ms = w.end_ms;
+                }
+            }
+            if w.rejoin == RejoinMode::Cold {
+                let tasks = self.tasks.clone();
+                for name in &tasks {
+                    // The crash lost device memory: evict, then charge
+                    // the task's live composition the full cold path.
+                    for (id, _) in self.prepared.pool.task_blobs(name) {
+                        self.prepared.pool.evict(&id);
+                    }
+                    let Some(st) = self.states.get_mut(name) else { continue };
+                    let Some(comp) = st.comp.clone() else { continue };
+                    let Ok(tz) = coord.zoo.task(name) else { continue };
+                    let mut penalty = 0.0;
+                    for (j, &vi) in comp.0.iter().enumerate() {
+                        let id = BlobId::new(name, vi, j);
+                        let bytes = tz.variants[vi].subgraphs[j].bytes;
+                        let proc = st.order[j.min(st.order.len() - 1)];
+                        penalty += coord.lm.compile_ms(bytes, proc)
+                            + coord.lm.load_ms(bytes, proc);
+                        self.cold_compiles += 1;
+                        self.prepared.pool.make_room(bytes);
+                        if self.prepared.pool.load(id.clone(), bytes) {
+                            self.prepared.pool.set_active(&id, true);
+                        }
+                    }
+                    st.pending_penalty_ms += penalty;
+                }
+            }
+            self.pending_recovery.push(w.end_ms);
         }
     }
 
@@ -1086,6 +1214,15 @@ impl<'s, 'a> Session<'s, 'a> {
                 slo_latency_ms: slo.max_latency_ms,
             });
         }
+        // Fault lab accounting: downtime is the overlap of each crash
+        // window with the realized horizon; throttle debt comes straight
+        // off the SoC clock. All three are zero without a profile.
+        let downtime_ms: f64 = self
+            .faults
+            .crashes
+            .iter()
+            .map(|w| (w.end_ms.min(self.sim.horizon_ms) - w.start_ms).max(0.0))
+            .sum();
         RunReport {
             outcomes,
             makespan_ms: self.sim.horizon_ms,
@@ -1096,6 +1233,9 @@ impl<'s, 'a> Session<'s, 'a> {
             warm_loads: self.warm_loads,
             slo_forecast,
             requests: self.requests,
+            downtime_ms,
+            throttled_ms: self.sim.throttled_ms(),
+            recoveries: self.recoveries,
         }
     }
 }
@@ -1355,6 +1495,87 @@ mod tests {
         let merged = server.run(&sc).unwrap();
         assert_eq!(merged.total_queries, 75);
         assert_eq!(merged.outcomes.len(), 3);
+    }
+
+    #[test]
+    fn crash_window_drops_mid_window_arrivals_and_recovers() {
+        use crate::scenario::{CrashWindow, FaultProfile, RejoinMode};
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let q = |id, t| crate::workload::Query { task: "tiny".into(), arrival_ms: t, id };
+        let sc = Scenario::trace(
+            &tiny_tasks(),
+            slos(0.5, 1e9),
+            vec![q(0, 0.0), q(1, 40.0), q(2, 120.0)],
+        )
+        .with_faults(FaultProfile {
+            crashes: vec![CrashWindow {
+                shard: 0,
+                start_ms: 30.0,
+                end_ms: 80.0,
+                rejoin: RejoinMode::Cold,
+            }],
+            ..FaultProfile::default()
+        });
+        let r = server.run(&sc).unwrap();
+        assert_eq!(r.total_dropped, 1, "the mid-window arrival dies with the shard");
+        assert_eq!(r.total_queries, 2);
+        assert!((r.downtime_ms - 50.0).abs() < 1e-9, "{}", r.downtime_ms);
+        assert_eq!(r.recoveries.len(), 1, "one rejoin, one recovery sample");
+        assert!(r.recoveries[0] > 0.0);
+        assert!(r.cold_compiles > 0, "cold rejoin recompiles the pool");
+        let post = r.requests.iter().find(|e| e.id == 2).unwrap();
+        assert!(!post.dropped);
+        assert!(post.start_ms >= 80.0, "service resumes at the window end");
+    }
+
+    #[test]
+    fn degradation_ramp_stretches_service_latency() {
+        use crate::scenario::{Degradation, FaultProfile};
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let sc = Scenario::closed_loop(&tiny_tasks(), slos(0.5, 1e9)).with_queries(20);
+        let base = server.run(&sc).unwrap();
+        let degraded = server
+            .run(&sc.clone().with_faults(FaultProfile {
+                degradations: vec![Degradation {
+                    shard: 0,
+                    start_ms: 0.0,
+                    ramp_ms: 0.0,
+                    factor: 2.0,
+                }],
+                ..FaultProfile::default()
+            }))
+            .unwrap();
+        assert_eq!(degraded.total_queries, base.total_queries);
+        assert_eq!(degraded.total_dropped, 0);
+        // p50 dodges the one query carrying a switch penalty, so a flat
+        // 2x ramp doubles it exactly.
+        let b = base.outcomes[0].p50_latency_ms;
+        let d = degraded.outcomes[0].p50_latency_ms;
+        assert!((d - 2.0 * b).abs() < 1e-6, "flat 2x ramp must double p50: {b} vs {d}");
+    }
+
+    #[test]
+    fn throttle_curve_surfaces_as_throttled_time() {
+        use crate::scenario::{FaultProfile, ThrottleCurve, ThrottleStep};
+        let (zoo, lm, profiles) = setup();
+        let server = Server::builder(&zoo, &lm, &profiles).build();
+        let sc = Scenario::closed_loop(&tiny_tasks(), slos(0.5, 1e9)).with_queries(10);
+        let base = server.run(&sc).unwrap();
+        assert_eq!(base.throttled_ms, 0.0);
+        assert_eq!(base.downtime_ms, 0.0);
+        assert!(base.recoveries.is_empty());
+        let hot = server
+            .run(&sc.clone().with_faults(FaultProfile {
+                throttle: Some(ThrottleCurve {
+                    steps: vec![ThrottleStep { busy_ms: 0.0, factor: 2.0 }],
+                }),
+                ..FaultProfile::default()
+            }))
+            .unwrap();
+        assert!(hot.throttled_ms > 0.0, "a 2x governor must bank throttle debt");
+        assert!(hot.makespan_ms > base.makespan_ms);
     }
 
     #[test]

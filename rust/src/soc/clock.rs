@@ -24,6 +24,14 @@ pub struct SocSim {
     timelines: BTreeMap<Processor, Timeline>,
     /// Latest event end time seen (the virtual "now").
     pub horizon_ms: f64,
+    /// DVFS-style thermal throttle: sorted `(busy_ms, factor)` steps.
+    /// Once a processor's accumulated busy time reaches `busy_ms`, its
+    /// bookings are stretched by `factor` (see the fault lab,
+    /// `scenario::faults::ThrottleCurve`). Empty ⇒ bookings are exact —
+    /// the pre-fault-lab behavior, bit for bit.
+    throttle: Vec<(f64, f64)>,
+    /// Extra virtual time bookings have paid to throttling so far.
+    throttled_ms: f64,
 }
 
 impl SocSim {
@@ -31,20 +39,62 @@ impl SocSim {
         Self {
             timelines: processors.iter().map(|&p| (p, Timeline::default())).collect(),
             horizon_ms: 0.0,
+            throttle: Vec::new(),
+            throttled_ms: 0.0,
         }
     }
 
+    /// Install a thermal throttle curve as `(busy_ms, factor)` steps
+    /// (must be sorted by `busy_ms`; factor 1 applies before the first
+    /// step). An empty curve restores exact booking.
+    pub fn set_throttle(&mut self, steps: Vec<(f64, f64)>) {
+        self.throttle = steps;
+    }
+
+    /// The slowdown factor in effect for a processor that has already
+    /// accumulated `busy_ms` of work.
+    fn throttle_factor(&self, busy_ms: f64) -> f64 {
+        let mut f = 1.0;
+        for &(at, factor) in &self.throttle {
+            if busy_ms >= at {
+                f = factor;
+            } else {
+                break;
+            }
+        }
+        f
+    }
+
+    /// Total extra virtual time paid to thermal throttling.
+    pub fn throttled_ms(&self) -> f64 {
+        self.throttled_ms
+    }
+
     /// Book `dur_ms` of work on `proc`, not starting before `ready_ms`.
-    /// Returns (start, end) in virtual ms.
+    /// Returns (start, end) in virtual ms. With a throttle curve
+    /// installed, the booked duration is stretched by the factor the
+    /// processor's accumulated busy time has reached — the thermal
+    /// governor has dropped the clock.
     pub fn book(&mut self, proc: Processor, ready_ms: f64, dur_ms: f64) -> (f64, f64) {
+        let throttled = if self.throttle.is_empty() {
+            dur_ms
+        } else {
+            let busy = self
+                .timelines
+                .get(&proc)
+                .map(|t| t.total_busy_ms)
+                .unwrap_or(0.0);
+            dur_ms * self.throttle_factor(busy)
+        };
+        self.throttled_ms += throttled - dur_ms;
         let t = self
             .timelines
             .get_mut(&proc)
             .unwrap_or_else(|| panic!("processor {proc:?} not on this platform"));
         let start = ready_ms.max(t.busy_until_ms);
-        let end = start + dur_ms;
+        let end = start + throttled;
         t.busy_until_ms = end;
-        t.total_busy_ms += dur_ms;
+        t.total_busy_ms += throttled;
         t.jobs += 1;
         if end > self.horizon_ms {
             self.horizon_ms = end;
@@ -75,6 +125,7 @@ impl SocSim {
             *t = Timeline::default();
         }
         self.horizon_ms = 0.0;
+        self.throttled_ms = 0.0;
     }
 }
 
@@ -133,5 +184,49 @@ mod tests {
     fn unknown_processor_panics() {
         let mut sim = SocSim::new(&[Cpu]);
         sim.book(Npu, 0.0, 1.0);
+    }
+
+    #[test]
+    fn throttle_stretches_bookings_past_busy_thresholds() {
+        let mut sim = SocSim::new(&[Cpu, Gpu]);
+        sim.set_throttle(vec![(10.0, 2.0)]);
+        // Below the threshold: exact booking.
+        let (s, e) = sim.book(Cpu, 0.0, 10.0);
+        assert_eq!((s, e), (0.0, 10.0));
+        assert_eq!(sim.throttled_ms(), 0.0);
+        // At 10 ms accumulated busy time the governor halves the clock.
+        let (s, e) = sim.book(Cpu, 0.0, 5.0);
+        assert_eq!((s, e), (10.0, 20.0));
+        assert_eq!(sim.throttled_ms(), 5.0);
+        // Busy time is per processor: a cold Gpu is unthrottled.
+        let (s, e) = sim.book(Gpu, 0.0, 5.0);
+        assert_eq!((s, e), (0.0, 5.0));
+        assert_eq!(sim.throttled_ms(), 5.0);
+    }
+
+    #[test]
+    fn empty_throttle_is_bit_identical_to_no_throttle() {
+        let mut plain = SocSim::new(&[Cpu]);
+        let mut curved = SocSim::new(&[Cpu]);
+        curved.set_throttle(Vec::new());
+        for (ready, dur) in [(0.0, 3.7), (1.2, 0.9), (10.0, 2.3)] {
+            let a = plain.book(Cpu, ready, dur);
+            let b = curved.book(Cpu, ready, dur);
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+        assert_eq!(curved.throttled_ms(), 0.0);
+    }
+
+    #[test]
+    fn reset_clears_throttle_debt_but_keeps_curve() {
+        let mut sim = SocSim::new(&[Cpu]);
+        sim.set_throttle(vec![(0.0, 3.0)]);
+        sim.book(Cpu, 0.0, 2.0);
+        assert_eq!(sim.throttled_ms(), 4.0);
+        sim.reset();
+        assert_eq!(sim.throttled_ms(), 0.0);
+        let (_, e) = sim.book(Cpu, 0.0, 1.0);
+        assert_eq!(e, 3.0, "the installed curve still applies after reset");
     }
 }

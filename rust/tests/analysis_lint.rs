@@ -21,8 +21,9 @@ use sparseloom::coordinator::ServeOpts;
 use sparseloom::fixtures;
 use sparseloom::propcheck::{check, choice, usize_in, vec_of};
 use sparseloom::scenario::{
-    Admission, Dispatch, PlannerConfig, Scenario, Server, ShardAssignment, ShardedServer,
-    Sharding,
+    Admission, CrashWindow, Degradation, Dispatch, Expect, FaultProfile, LinkMatrix,
+    PlannerConfig, RejoinMode, Scenario, Server, ShardAssignment, ShardedServer, Sharding,
+    ThrottleCurve, ThrottleStep,
 };
 use sparseloom::workload::Query;
 
@@ -83,6 +84,114 @@ fn scenario_from(params: &[usize], tasks: &[String]) -> Scenario {
             ..PlannerConfig::default()
         })
         .with_seed(params[0] as u64)
+}
+
+/// Decode a parameter vector into a fault profile. Mostly well-formed
+/// by construction (sorted throttle steps, symmetric links, positive
+/// factors) but shard indices deliberately range past a 2-shard
+/// deployment so the gate path gets exercised too.
+fn fault_profile_from(params: &[usize]) -> FaultProfile {
+    let mut fp = FaultProfile::default();
+    for i in 0..params[0] % 3 {
+        let start = ((params[1] + i * 7) % 40) as f64 * 10.0;
+        fp.crashes.push(CrashWindow {
+            shard: (params[2] + i) % 3,
+            start_ms: start,
+            end_ms: start + 20.0 + (params[3] % 5) as f64 * 30.0,
+            rejoin: if (params[4] + i) % 2 == 0 { RejoinMode::Cold } else { RejoinMode::Warm },
+        });
+    }
+    if params[5] % 2 == 0 {
+        fp.degradations.push(Degradation {
+            shard: params[5] % 3,
+            start_ms: (params[6] % 10) as f64 * 25.0,
+            ramp_ms: (params[7] % 4) as f64 * 100.0,
+            factor: 1.0 + (params[6] % 6) as f64 * 0.25,
+        });
+    }
+    if params[6] % 3 == 0 {
+        fp.throttle = Some(ThrottleCurve {
+            steps: (0..1 + params[7] % 3)
+                .map(|i| ThrottleStep {
+                    busy_ms: (i as f64 + 1.0) * 50.0,
+                    factor: 1.0 + (i as f64 + 1.0) * 0.25,
+                })
+                .collect(),
+        });
+    }
+    if params[7] % 2 == 0 {
+        let c = (params[0] % 5) as f64;
+        fp.links = Some(LinkMatrix { transfer_ms: vec![vec![0.0, c], vec![c, 0.0]] });
+    }
+    match params[3] % 3 {
+        0 => fp.expects.push(Expect::MinCompleted { task: None, at_least: params[0] }),
+        1 => fp.expects.push(Expect::MaxViolationRate { at_most: 0.5 }),
+        _ => fp.expects.push(Expect::RecoveryWithin { shard: params[2] % 3, ms: 250.0 }),
+    }
+    fp
+}
+
+#[test]
+fn generated_fault_profiles_round_trip_json() {
+    let (zoo, _lm, _profiles) = fixtures::trio();
+    let tasks = fixtures::task_names(&zoo);
+    let gen = vec_of(usize_in(0, 9), 8);
+    check("fault profiles round-trip JSON", &gen, 80, 13, |params| {
+        let fp = fault_profile_from(params);
+        // Standalone profile round trip.
+        let text = fp.to_json().to_string_pretty();
+        let v = sparseloom::json::parse(&text)
+            .map_err(|e| format!("profile JSON does not re-parse: {e:#}"))?;
+        let back = FaultProfile::from_json(&v)
+            .map_err(|e| format!("profile JSON does not re-load: {e:#}"))?;
+        if back != fp {
+            return Err(format!("profile changed across round trip: {fp:?} vs {back:?}"));
+        }
+        // And embedded in a scenario.
+        let sc = Scenario::closed_loop(&tasks, fixtures::slos(&zoo, 0.5, 1e9))
+            .with_sharding(Sharding::hash(2))
+            .with_faults(fp.clone());
+        if round_trip(&sc).faults != fp {
+            return Err("scenario embedding dropped fault fields".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn generated_fault_scenarios_never_panic_the_server() {
+    let (zoo, lm, profiles) = fixtures::trio();
+    let tasks = fixtures::task_names(&zoo);
+    let gen = vec_of(usize_in(0, 9), 8);
+    check("fault scenarios never panic", &gen, 40, 99, |params| {
+        let sc = Scenario::poisson(&tasks, {
+            tasks
+                .iter()
+                .map(|t| {
+                    (
+                        t.clone(),
+                        sparseloom::workload::Slo { min_accuracy: 0.5, max_latency_ms: 60.0 },
+                    )
+                })
+                .collect::<BTreeMap<_, _>>()
+        }, 30.0, 400.0)
+            .with_seed(params[0] as u64)
+            .with_dispatch(Dispatch::batched(2))
+            .with_sharding(Sharding::hash(2))
+            .with_planner(PlannerConfig::online())
+            .with_faults(fault_profile_from(params));
+        // Profiles naming shard 2 of 2 must be *refused* (typed error),
+        // valid ones must run — neither may panic.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            ShardedServer::build(&zoo, &lm, &profiles, ServeOpts::default(), sc.sharding.clone())
+                .and_then(|s| s.run(&sc))
+                .map(|_| ())
+        }));
+        match outcome {
+            Err(_) => Err(format!("serving panicked on a generated fault scenario: {params:?}")),
+            Ok(_) => Ok(()),
+        }
+    });
 }
 
 #[test]
@@ -179,6 +288,33 @@ fn corrupted_corpus_yields_diagnostics_never_panics() {
             sc.planner =
                 PlannerConfig { saturation_slack: 0.0, ..PlannerConfig::replanning() };
             sc.sharding = Sharding::hash(2);
+        }),
+        ("empty crash window", |sc| {
+            sc.faults.crashes.push(CrashWindow {
+                shard: 0,
+                start_ms: 50.0,
+                end_ms: 50.0,
+                rejoin: RejoinMode::Cold,
+            });
+        }),
+        ("crash window on ghost shard", |sc| {
+            sc.faults.crashes.push(CrashWindow {
+                shard: 7,
+                start_ms: 0.0,
+                end_ms: 10.0,
+                rejoin: RejoinMode::Warm,
+            });
+        }),
+        ("nonpositive throttle factor", |sc| {
+            sc.faults.throttle = Some(ThrottleCurve {
+                steps: vec![ThrottleStep { busy_ms: 0.0, factor: -1.0 }],
+            });
+        }),
+        ("asymmetric link matrix with a self-loop", |sc| {
+            sc.sharding = Sharding::hash(2);
+            sc.faults.links = Some(LinkMatrix {
+                transfer_ms: vec![vec![0.0, 1.0], vec![2.0, 3.0]],
+            });
         }),
     ];
 
@@ -296,9 +432,35 @@ fn fail_fast_gates_reject_what_the_analyzer_rejects() {
         .to_string();
     assert!(err.contains("SL-SCN-009"), "{err}");
 
+    // Run gate: a fault profile naming a shard the deployment does not
+    // have is refused before any session opens.
+    let ghost = Scenario::closed_loop(&tasks, fixtures::slos(&zoo, 0.5, 1e9))
+        .with_sharding(Sharding::hash(2))
+        .with_faults(FaultProfile {
+            crashes: vec![CrashWindow {
+                shard: 9,
+                start_ms: 0.0,
+                end_ms: 10.0,
+                rejoin: RejoinMode::Cold,
+            }],
+            ..FaultProfile::default()
+        });
+    let err = ShardedServer::build(&zoo, &lm, &profiles, ServeOpts::default(), ghost.sharding.clone())
+        .unwrap()
+        .run(&ghost)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("SL-SCN-017"), "{err}");
+
     // Example scenario files shipped in-repo stay lint-clean (what the
     // CI tier-2 `sparseloom lint` stage enforces, minus the zoo probe).
-    for file in ["closed_loop.json", "bursty_sharded.json", "predictive_phases.json"] {
+    for file in [
+        "closed_loop.json",
+        "bursty_sharded.json",
+        "predictive_phases.json",
+        "crash_recover.json",
+        "thermal_throttle.json",
+    ] {
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/scenarios/");
         let sc = Scenario::load(format!("{path}{file}")).unwrap();
         let r = lint_scenario(&sc);

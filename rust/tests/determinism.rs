@@ -7,11 +7,15 @@
 //!
 //! Runs entirely on the synthetic fixture zoo (no artifacts needed).
 
+use std::collections::BTreeMap;
+
 use sparseloom::coordinator::ServeOpts;
 use sparseloom::fixtures;
 use sparseloom::metrics::{RunReport, ShardedReport};
 use sparseloom::scenario::{
-    Admission, Dispatch, PlannerConfig, Scenario, Server, ShardedServer, Sharding,
+    Admission, CrashWindow, Degradation, Dispatch, Expect, FaultProfile, LinkMatrix,
+    PlannerConfig, RejoinMode, Scenario, Server, ShardedServer, Sharding, ThrottleCurve,
+    ThrottleStep,
 };
 
 /// Bit-exact report equality: counts, per-request timeline, and the
@@ -40,6 +44,12 @@ fn assert_identical(a: &RunReport, b: &RunReport) {
     for ((ta, pa), (tb, pb)) in a.slo_forecast.iter().zip(&b.slo_forecast) {
         assert_eq!(ta, tb);
         assert_eq!(pa.to_bits(), pb.to_bits(), "forecast for {ta}");
+    }
+    assert_eq!(a.downtime_ms.to_bits(), b.downtime_ms.to_bits());
+    assert_eq!(a.throttled_ms.to_bits(), b.throttled_ms.to_bits());
+    assert_eq!(a.recoveries.len(), b.recoveries.len());
+    for (x, y) in a.recoveries.iter().zip(&b.recoveries) {
+        assert_eq!(x.to_bits(), y.to_bits());
     }
 }
 
@@ -91,6 +101,77 @@ fn sharded_online_predictive_run_is_deterministic() {
             assert_eq!(qa.to_bits(), qb.to_bits(), "rate estimate for {ta}");
         }
     }
+}
+
+#[test]
+fn fault_lab_crash_and_throttle_run_is_deterministic() {
+    // Crash-mid-phase on the loaded shard, a degradation ramp on the
+    // other, a thermal throttle curve, and priced cross-shard links —
+    // the full fault lab, riding the online steal/warm-migrate stack.
+    // No fault mechanism may introduce ambient randomness.
+    let (zoo, lm, profiles) = fixtures::quartet();
+    let tasks = fixtures::task_names(&zoo);
+    let slos = fixtures::slos(&zoo, 0.5, 60.0);
+    let map = BTreeMap::from([
+        ("alpha".to_string(), 0),
+        ("beta".to_string(), 0),
+        ("delta".to_string(), 0),
+        ("gamma".to_string(), 1),
+    ]);
+    let faults = FaultProfile {
+        crashes: vec![CrashWindow {
+            shard: 0,
+            start_ms: 400.0,
+            end_ms: 900.0,
+            rejoin: RejoinMode::Warm,
+        }],
+        degradations: vec![Degradation {
+            shard: 1,
+            start_ms: 200.0,
+            ramp_ms: 400.0,
+            factor: 1.5,
+        }],
+        throttle: Some(ThrottleCurve {
+            steps: vec![ThrottleStep { busy_ms: 100.0, factor: 1.3 }],
+        }),
+        links: Some(LinkMatrix { transfer_ms: vec![vec![0.0, 2.0], vec![2.0, 0.0]] }),
+        expects: vec![Expect::MinCompleted { task: None, at_least: 1 }],
+    };
+    let sc = Scenario::bursty(&tasks, slos, 4.0, 100.0, 500.0, 3_000.0)
+        .with_seed(11)
+        .with_admission(Admission::Deadline { slack: 2.0 })
+        .with_dispatch(Dispatch::batched(4))
+        .with_sharding(Sharding::explicit(map, 2))
+        .with_planner(PlannerConfig { max_migrations: 2, ..PlannerConfig::online() })
+        .with_faults(faults);
+
+    let run = |s: &Scenario| -> ShardedReport {
+        let opts = ServeOpts { batch_hint: 4.0, ..Default::default() };
+        ShardedServer::build(&zoo, &lm, &profiles, opts, s.sharding.clone())
+            .unwrap()
+            .run(s)
+            .unwrap()
+    };
+    let a = run(&sc);
+    let b = run(&sc);
+    let c = run(&json_round_trip(&sc));
+
+    for other in [&b, &c] {
+        assert_eq!(a.replans, other.replans);
+        assert_eq!(a.migrations, other.migrations);
+        assert_eq!(a.steals, other.steals);
+        assert_eq!(a.link_cost_ms.to_bits(), other.link_cost_ms.to_bits());
+        assert_identical(&a.aggregate, &other.aggregate);
+        assert_eq!(a.per_shard.len(), other.per_shard.len());
+        for (x, y) in a.per_shard.iter().zip(&other.per_shard) {
+            assert_identical(x, y);
+        }
+    }
+    // The faults actually fired: the run booked downtime and throttle
+    // debt, and still served work.
+    assert!(a.aggregate.total_queries > 0, "the run must actually serve something");
+    assert!(a.aggregate.downtime_ms > 0.0, "the crash window never opened");
+    assert!(a.aggregate.throttled_ms > 0.0, "the throttle curve never bit");
 }
 
 #[test]

@@ -1,0 +1,205 @@
+//! Fault-lab recovery properties (the scenario lab's acceptance tests):
+//!
+//! 1. Under a shard crash, the online stack (work stealing + warm
+//!    migration) completes strictly more requests than the static
+//!    no-adaptation baseline, which can only swallow the dead shard's
+//!    arrivals.
+//! 2. Under a ramped degradation, predictive admission sheds its first
+//!    query strictly earlier than reactive deadline admission on the
+//!    identical (same-seed) arrival stream — the forecast term lowers
+//!    the effective threshold while backlog is growing.
+//! 3. Per-task FIFO (drops excluded) survives crash, redirect, and
+//!    recovery: in id order, starts and completions stay monotone even
+//!    when consecutive queries ran on different shards.
+//!
+//! Every run is replayed through the `SL-INV-*` invariant verifier —
+//! the fault lab may bend throughput, never the serving contract.
+//! Runs entirely on the synthetic fixture zoo (no artifacts needed).
+
+use std::collections::BTreeMap;
+
+use sparseloom::analysis::invariants;
+use sparseloom::coordinator::ServeOpts;
+use sparseloom::fixtures;
+use sparseloom::metrics::{RunReport, ShardedReport};
+use sparseloom::scenario::{
+    Admission, CrashWindow, Degradation, Dispatch, FaultProfile, PlannerConfig,
+    RejoinMode, Scenario, Server, ShardedServer, Sharding,
+};
+
+/// The skewed two-shard split used across the online-path studies:
+/// three tasks flood shard 0, gamma idles on shard 1.
+fn skewed_sharding() -> Sharding {
+    Sharding::explicit(
+        BTreeMap::from([
+            ("alpha".to_string(), 0),
+            ("beta".to_string(), 0),
+            ("delta".to_string(), 0),
+            ("gamma".to_string(), 1),
+        ]),
+        2,
+    )
+}
+
+fn verify(report: &ShardedReport) {
+    let inv = invariants::verify_sharded(report);
+    assert!(inv.is_empty(), "{}", inv.render_text());
+}
+
+/// Bursty quartet stream with a mid-run crash of the loaded shard.
+fn crash_scenario(rejoin: RejoinMode) -> Scenario {
+    let (zoo, _lm, _profiles) = fixtures::quartet();
+    let tasks = fixtures::task_names(&zoo);
+    let slo_map = fixtures::slos(&zoo, 0.5, 60.0);
+    Scenario::bursty(&tasks, slo_map, 4.0, 100.0, 500.0, 4_000.0)
+        .with_seed(11)
+        .with_dispatch(Dispatch::batched(4))
+        .with_sharding(skewed_sharding())
+        .with_faults(FaultProfile {
+            crashes: vec![CrashWindow {
+                shard: 0,
+                start_ms: 1_000.0,
+                end_ms: 2_500.0,
+                rejoin,
+            }],
+            ..FaultProfile::default()
+        })
+}
+
+#[test]
+fn steal_and_warm_migration_beat_no_adaptation_under_a_crash() {
+    let (zoo, lm, profiles) = fixtures::quartet();
+    let base = crash_scenario(RejoinMode::Warm);
+
+    // No-adaptation baseline: the static path has nowhere to send the
+    // dead shard's arrivals, so it swallows them.
+    let static_report =
+        ShardedServer::build(&zoo, &lm, &profiles, ServeOpts::default(), base.sharding.clone())
+            .unwrap()
+            .run(&base)
+            .unwrap();
+    verify(&static_report);
+    assert!(
+        static_report.aggregate.total_dropped > 0,
+        "the crash must actually cost the no-adaptation baseline"
+    );
+    assert!(
+        static_report.aggregate.downtime_ms > 0.0,
+        "the crash window must be accounted as downtime"
+    );
+
+    // Adaptive arm: the crash redirect adopts the dead shard's tasks on
+    // the survivor (warm when the pool contents can be carried over).
+    let adaptive_sc = base
+        .clone()
+        .with_planner(PlannerConfig { max_migrations: 2, ..PlannerConfig::online() });
+    let opts = ServeOpts { batch_hint: 4.0, ..Default::default() };
+    let adaptive =
+        ShardedServer::build(&zoo, &lm, &profiles, opts, adaptive_sc.sharding.clone())
+            .unwrap()
+            .run(&adaptive_sc)
+            .unwrap();
+    verify(&adaptive);
+    assert!(adaptive.steals > 0, "the crash redirect must actually reroute work");
+    assert!(
+        adaptive.aggregate.total_queries > static_report.aggregate.total_queries,
+        "steal + warm migration must complete strictly more than no adaptation: \
+         {} vs {}",
+        adaptive.aggregate.total_queries,
+        static_report.aggregate.total_queries
+    );
+}
+
+#[test]
+fn predictive_admission_sheds_earlier_than_reactive_under_a_ramp() {
+    // One task, steady Poisson arrivals, and a slow 2x degradation
+    // ramp: service time crosses the inter-arrival gap mid-ramp and
+    // backlog then grows by a few ms per query — smooth enough that the
+    // forecast term moves the shed point by whole queries.
+    let (zoo, lm, profiles) = fixtures::tiny();
+    let tasks = fixtures::task_names(&zoo);
+    let slo_map = fixtures::slos(&zoo, 0.5, 60.0);
+    let base = Scenario::poisson(&tasks, slo_map, 40.0, 3_000.0)
+        .with_seed(5)
+        .with_faults(FaultProfile {
+            degradations: vec![Degradation {
+                shard: 0,
+                start_ms: 0.0,
+                ramp_ms: 1_000.0,
+                factor: 2.0,
+            }],
+            ..FaultProfile::default()
+        });
+    let run = |sc: &Scenario| -> RunReport {
+        let report = Server::builder(&zoo, &lm, &profiles).build().run(sc).unwrap();
+        let inv = invariants::verify_report(&report);
+        assert!(inv.is_empty(), "{}", inv.render_text());
+        report
+    };
+    let reactive = run(&base.clone().with_admission(Admission::Deadline { slack: 2.0 }));
+    let predictive = run(&base
+        .clone()
+        .with_admission(Admission::Predictive { horizon_ms: 100.0, headroom: 2.0 }));
+
+    let first_drop = |r: &RunReport| -> f64 {
+        r.requests
+            .iter()
+            .filter(|q| q.dropped)
+            .map(|q| q.arrival_ms)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let t_reactive = first_drop(&reactive);
+    let t_predictive = first_drop(&predictive);
+    assert!(t_reactive.is_finite(), "the ramp must overload the reactive arm");
+    assert!(t_predictive.is_finite(), "the ramp must overload the predictive arm");
+    assert!(
+        t_predictive < t_reactive,
+        "predictive admission must shed before reactive on the same stream: \
+         first drop at {t_predictive} ms vs {t_reactive} ms"
+    );
+}
+
+#[test]
+fn per_task_fifo_holds_across_crash_and_recovery() {
+    // Cold rejoin: the recovering shard additionally rebuilds its pool,
+    // the harshest ordering stress (redirects during the window, a
+    // compile-penalty backlog after it).
+    let (zoo, lm, profiles) = fixtures::quartet();
+    let sc = crash_scenario(RejoinMode::Cold)
+        .with_planner(PlannerConfig { max_migrations: 2, ..PlannerConfig::online() });
+    let opts = ServeOpts { batch_hint: 4.0, ..Default::default() };
+    let report = ShardedServer::build(&zoo, &lm, &profiles, opts, sc.sharding.clone())
+        .unwrap()
+        .run(&sc)
+        .unwrap();
+    verify(&report);
+    assert!(
+        !report.aggregate.recoveries.is_empty(),
+        "the rejoined shard must record a recovery latency"
+    );
+    for task in ["alpha", "beta", "delta", "gamma"] {
+        let mut reqs: Vec<_> = report
+            .aggregate
+            .requests
+            .iter()
+            .filter(|r| r.task == task && !r.dropped)
+            .collect();
+        reqs.sort_by_key(|r| r.id);
+        for w in reqs.windows(2) {
+            assert!(
+                w[1].start_ms >= w[0].start_ms - 1e-9,
+                "{task}: query {} started at {} ms, before query {}'s start at {} ms",
+                w[1].id,
+                w[1].start_ms,
+                w[0].id,
+                w[0].start_ms
+            );
+            assert!(
+                w[1].finish_ms >= w[0].finish_ms - 1e-9,
+                "{task}: query {} finished before query {}",
+                w[1].id,
+                w[0].id
+            );
+        }
+    }
+}

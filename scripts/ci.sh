@@ -138,6 +138,23 @@ lint_smoke() {
         echo "lint smoke FAILED: serve --verify did not confirm run invariants" >&2
         exit 1
     fi
+
+    # Fault-lab smoke: a crash/recover scenario must replay through the
+    # invariant verifier AND have its declarative expect clauses checked
+    # (SL-EXP-* failures exit nonzero, so a silently-broken recovery
+    # path fails CI here).
+    echo "== [tier 2] fault-lab smoke (crash_recover, --verify + expects) =="
+    out="$("$bin" serve --fixture --scenario-file examples/scenarios/crash_recover.json \
+        --verify)"
+    printf '%s\n' "$out"
+    if ! grep -q "invariants OK" <<<"$out"; then
+        echo "lint smoke FAILED: fault-lab serve --verify did not confirm run invariants" >&2
+        exit 1
+    fi
+    if ! grep -q "expectations OK" <<<"$out"; then
+        echo "lint smoke FAILED: fault-lab run did not check its expect clauses" >&2
+        exit 1
+    fi
 }
 
 case "$TIER" in
