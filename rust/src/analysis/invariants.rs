@@ -162,6 +162,17 @@ fn check_conservation(report: &RunReport, r: &mut Report) {
                 ),
             ));
         }
+        let miss_sum: usize = report.outcomes.iter().map(|o| o.slo_misses).sum();
+        if miss_sum != report.slo_miss_count {
+            r.push(Diagnostic::error(
+                "SL-INV-003",
+                "outcomes",
+                format!(
+                    "per-task SLO misses sum to {miss_sum}, report says {}",
+                    report.slo_miss_count
+                ),
+            ));
+        }
     }
     if report.total_batches > report.total_queries {
         r.push(Diagnostic::error(
@@ -206,6 +217,24 @@ fn check_conservation(report: &RunReport, r: &mut Report) {
                 ),
             ));
         }
+        // The streaming miss counter must agree with the retained
+        // verdicts — this is the replay check that keeps streaming-mode
+        // runs honest (their counters are produced by the same code
+        // path; only a `serve --verify` run retains the log to prove
+        // it).
+        let miss_events =
+            report.requests.iter().filter(|e| e.slo_ok == Some(false)).count();
+        if miss_events != report.slo_miss_count {
+            r.push(Diagnostic::error(
+                "SL-INV-003",
+                "requests",
+                format!(
+                    "event log holds {miss_events} SLO miss(es), the streaming \
+                     counter says {}",
+                    report.slo_miss_count
+                ),
+            ));
+        }
     }
 }
 
@@ -225,6 +254,7 @@ fn check_metric_finiteness(report: &RunReport, r: &mut Report) {
         let at = format!("task {:?}", o.task);
         let stats = [
             ("mean latency", o.mean_latency_ms),
+            ("max latency", o.max_latency_ms),
             ("p50 latency", o.p50_latency_ms),
             ("p95 latency", o.p95_latency_ms),
             ("p99 latency", o.p99_latency_ms),

@@ -118,6 +118,23 @@ impl Bench {
     }
 }
 
+/// Best-of-`iters` wall-clock timing for throughput sweeps: runs `f`
+/// `iters.max(1)` times and returns (best wall milliseconds, last
+/// result). Complements [`Bench::case`] where the caller needs the
+/// closure's output and a fixed, deterministic repetition count —
+/// `sparseloom bench` times whole fleet runs through this.
+pub fn time_best_of<T>(iters: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+    let mut best_ms = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        let r = black_box(f());
+        best_ms = best_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+        out = Some(r);
+    }
+    (best_ms, out.expect("iters >= 1"))
+}
+
 /// Optimizer barrier (stable-Rust black_box).
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -134,6 +151,17 @@ mod tests {
         let m = b.case("spin", || (0..1000).sum::<u64>());
         assert!(m.median_ns > 0.0);
         assert!(m.iters >= 5);
+    }
+
+    #[test]
+    fn best_of_returns_last_result_and_finite_wall() {
+        let mut n = 0;
+        let (ms, last) = time_best_of(3, || {
+            n += 1;
+            n
+        });
+        assert_eq!(last, 3);
+        assert!(ms.is_finite() && ms >= 0.0);
     }
 
     #[test]

@@ -54,6 +54,18 @@ pub struct ServeOpts {
     /// serving batched backlog so Algorithm 1 scores candidates at the
     /// occupancy the engine will actually book.
     pub batch_hint: f64,
+    /// Retain the full per-request event log in reports. On (the
+    /// library default) every `RequestOutcome` is kept, as the replay
+    /// verifier and the event-level tests need; off, reports carry only
+    /// streaming aggregates (running sums + quantile sketches), so peak
+    /// memory is O(tasks), not O(requests). The CLI turns this off for
+    /// `bench` and for `serve` without `--verify`.
+    pub record_events: bool,
+    /// Drive the shards of a `ShardedServer` on OS threads (one per
+    /// shard, lockstep barriers at phase/epoch boundaries). Results are
+    /// bit-identical to the sequential drive; turn off to debug or to
+    /// measure the single-thread baseline.
+    pub parallel: bool,
 }
 
 impl Default for ServeOpts {
@@ -66,6 +78,8 @@ impl Default for ServeOpts {
             force_order: None,
             verify_selection: true,
             batch_hint: 1.0,
+            record_events: true,
+            parallel: true,
         }
     }
 }

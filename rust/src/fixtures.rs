@@ -170,6 +170,37 @@ pub fn quartet() -> (Zoo, LatencyModel, BTreeMap<String, TaskProfile>) {
     ])
 }
 
+/// Fleet-scale fixture: `n_tasks` deterministic heterogeneous tasks
+/// plus a hash [`Sharding`](crate::scenario::Sharding) over `n_shards`
+/// shards — the substrate of `sparseloom bench` and the threaded-drive
+/// tests. Task `fleet00`, `fleet01`, … get accuracies cycling over
+/// {0.92, 0.88, 0.90, 0.85} and base latencies cycling over
+/// {8, 12, 10, 16} ms, the same spread as [`quartet`], so the planner
+/// sees real heterogeneity at any fleet size. Names are zero-padded so
+/// zoo (BTreeMap) order equals declaration order up to 100 tasks.
+pub fn fleet(
+    n_shards: usize,
+    n_tasks: usize,
+) -> (
+    Zoo,
+    LatencyModel,
+    BTreeMap<String, TaskProfile>,
+    crate::scenario::Sharding,
+) {
+    let accs = [0.92, 0.88, 0.90, 0.85];
+    let lats = [8.0, 12.0, 10.0, 16.0];
+    let names: Vec<String> = (0..n_tasks.max(1))
+        .map(|i| format!("fleet{i:02}"))
+        .collect();
+    let specs: Vec<(&str, f64, f64)> = names
+        .iter()
+        .enumerate()
+        .map(|(i, n)| (n.as_str(), accs[i % accs.len()], lats[i % lats.len()]))
+        .collect();
+    let (zoo, lm, profiles) = build(&specs);
+    (zoo, lm, profiles, crate::scenario::Sharding::hash(n_shards.max(1)))
+}
+
 /// A uniform SLO map over every task of a fixture zoo.
 pub fn slos(zoo: &Zoo, min_accuracy: f64, max_latency_ms: f64) -> BTreeMap<String, Slo> {
     zoo.tasks
@@ -186,6 +217,27 @@ pub fn task_names(zoo: &Zoo) -> Vec<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fleet_fixture_scales_and_is_deterministic() {
+        let (zoo, _lm, profiles, sharding) = fleet(4, 6);
+        assert_eq!(zoo.tasks.len(), 6);
+        assert_eq!(profiles.len(), 6);
+        assert_eq!(sharding.shards, 4);
+        // Zero-padded names keep map order == declaration order.
+        assert_eq!(
+            task_names(&zoo),
+            vec!["fleet00", "fleet01", "fleet02", "fleet03", "fleet04", "fleet05"]
+        );
+        // Every shard index the hash produces is in range.
+        for t in task_names(&zoo) {
+            assert!(sharding.shard_of(&t) < 4);
+        }
+        // Degenerate sizes clamp instead of panicking.
+        let (zoo1, _, _, sh1) = fleet(0, 0);
+        assert_eq!(zoo1.tasks.len(), 1);
+        assert_eq!(sh1.shards, 1);
+    }
 
     #[test]
     fn fixtures_profile_without_artifacts() {

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   serve       run a serving scenario (closed-loop, Poisson, bursty, file)
+//!   bench       fleet-scale throughput sweep (writes BENCH_fleet.json)
 //!   lint        static-analyze Scenario JSON files (sparselint)
 //!   exp         regenerate a paper table/figure (or `all`)
 //!   profile     build + report the performance profile (estimators)
@@ -64,6 +65,15 @@ fn app() -> App {
                 .switch("synthetic", "flops-derived base latencies (no PJRT)")
                 .switch("fixture", "serve the synthetic in-memory fixture zoo (hermetic; needs no artifacts/)")
                 .switch("verify", "replay the finished run through the sparselint invariant verifier (SL-INV-*); violations fail the command"),
+            Command::new("bench", "fleet-scale throughput sweep on the hermetic fleet fixture")
+                .opt("tasks", "fleet fixture size (tasks)", Some("16"))
+                .opt("rate-qps", "per-task Poisson arrival rate", Some("40"))
+                .opt("horizon-ms", "stream horizon per arm", Some("3000"))
+                .opt("shards", "comma-separated shard counts to sweep", Some("1,2,4"))
+                .opt("iters", "timed repetitions per arm (best is reported)", Some("3"))
+                .opt("out", "output JSON path", Some("BENCH_fleet.json"))
+                .opt("gate", "baseline JSON: fail the run on speedup regression", None)
+                .opt("tolerance", "allowed fractional speedup regression vs the gate baseline", Some("0.2")),
             Command::new("lint", "static-analyze Scenario JSON files (sparselint)")
                 .opt("artifacts", "artifact directory for the zoo feasibility pass", Some("artifacts"))
                 .opt("platform", "desktop|laptop|orin", Some("desktop"))
@@ -106,6 +116,7 @@ fn main() {
         Ok((cmd, args)) => {
             let r = match cmd.name {
                 "serve" => cmd_serve(&args),
+                "bench" => cmd_bench(&args),
                 "lint" => cmd_lint(&args),
                 "exp" => cmd_exp(&args),
                 "profile" => cmd_profile(&args),
@@ -309,6 +320,10 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         memory_budget_frac: args.get_f64("budget")?.unwrap_or(1.0),
         policy,
         batch_hint,
+        // Retaining every request event costs O(requests) memory; only
+        // the --verify replay needs the full log — everything the
+        // report prints below comes from the streaming aggregates.
+        record_events: args.switch("verify"),
         ..Default::default()
     };
     if scenario.sharding.shards > 1 {
@@ -427,6 +442,165 @@ fn check_fault_expects(scenario: &Scenario, report: &ShardedReport) -> Result<()
     }
     exp.fail_on_errors("fault expectations")?;
     println!("expectations OK: {} clause(s)", scenario.faults.expects.len());
+    Ok(())
+}
+
+/// `sparseloom bench` — the fleet-scale throughput sweep. Hermetic by
+/// construction (it runs on [`fixtures::fleet`]), it drives the same
+/// Poisson stream through every `(shard count, threaded?)` arm on the
+/// static sharded path with event retention off, reports wall-clock and
+/// queries/s per arm, and records the threaded-vs-sequential speedup
+/// per shard count. The JSON it writes feeds the CI tier-2 regression
+/// gate (`--gate benchmarks/BENCH_fleet.baseline.json`).
+fn cmd_bench(args: &sparseloom::cli::Args) -> Result<()> {
+    let n_tasks = args.get_usize("tasks")?.unwrap_or(16).max(1);
+    let rate = args.get_f64("rate-qps")?.unwrap_or(40.0);
+    let horizon = args.get_f64("horizon-ms")?.unwrap_or(3_000.0);
+    let iters = args.get_usize("iters")?.unwrap_or(3).max(1);
+    let tolerance = args.get_f64("tolerance")?.unwrap_or(0.2).clamp(0.0, 1.0);
+    let mut shard_counts = Vec::new();
+    for part in args.get_or("shards", "1,2,4").split(',') {
+        let s: usize = part.trim().parse().map_err(|_| {
+            anyhow::anyhow!("--shards wants comma-separated integers, got {part:?}")
+        })?;
+        shard_counts.push(s.max(1));
+    }
+    let (zoo, lm, profiles, _) = fixtures::fleet(1, n_tasks);
+    let tasks = fixtures::task_names(&zoo);
+    // Loose SLOs: the bench measures drive throughput, not violations.
+    let slos = fixtures::slos(&zoo, 0.5, 1e9);
+    println!(
+        "bench fleet: {n_tasks} tasks | {rate:.0} qps/task | horizon {horizon:.0} ms | \
+         shards {shard_counts:?} | best of {iters}"
+    );
+    let mut arms = Vec::new();
+    let mut speedups: Vec<(usize, f64)> = Vec::new();
+    for &s in &shard_counts {
+        let mut seq_wall = f64::NAN;
+        for parallel in [false, true] {
+            if parallel && s < 2 {
+                // One shard: the threaded drive degenerates to the
+                // sequential loop, so the arm would be a duplicate.
+                continue;
+            }
+            let scenario = Scenario::poisson(&tasks, slos.clone(), rate, horizon)
+                .with_dispatch(Dispatch { max_batch: 4, min_queue: 2 })
+                .with_sharding(Sharding::hash(s))
+                .with_seed(7);
+            let opts = ServeOpts {
+                // Streaming aggregates only: retention stays O(1) in
+                // request count, which is itself a benched property.
+                record_events: false,
+                parallel,
+                ..Default::default()
+            };
+            let sharded =
+                ShardedServer::build(&zoo, &lm, &profiles, opts, scenario.sharding.clone())?;
+            let _ = sharded.run(&scenario)?; // warmup: plan caches
+            let (wall_ms, report) =
+                sparseloom::benchkit::time_best_of(iters, || sharded.run(&scenario));
+            let report = report?;
+            let total = report.aggregate.total_queries;
+            let retained = report.aggregate.requests.len()
+                + report.per_shard.iter().map(|p| p.requests.len()).sum::<usize>();
+            let qps = if wall_ms > 0.0 { total as f64 / (wall_ms / 1e3) } else { 0.0 };
+            let mut arm = vec![
+                ("shards", Json::Num(s as f64)),
+                ("parallel", Json::Bool(parallel)),
+                ("wall_ms", Json::Num(wall_ms)),
+                ("bench_qps", Json::Num(qps)),
+                ("virtual_qps", Json::Num(report.aggregate.throughput_qps())),
+                ("total_queries", Json::Num(total as f64)),
+                ("events_retained", Json::Num(retained as f64)),
+            ];
+            if parallel {
+                let speedup = seq_wall / wall_ms;
+                speedups.push((s, speedup));
+                arm.push(("speedup_vs_single", Json::Num(speedup)));
+                println!(
+                    "  {s:>2} shard(s) threaded:   {wall_ms:>9.2} ms wall | {qps:>10.0} q/s \
+                     | {speedup:.2}x vs single-thread | {retained} event(s) retained"
+                );
+            } else {
+                seq_wall = wall_ms;
+                println!(
+                    "  {s:>2} shard(s) sequential: {wall_ms:>9.2} ms wall | {qps:>10.0} q/s \
+                     | {retained} event(s) retained"
+                );
+            }
+            arms.push(Json::obj(arm));
+        }
+    }
+    let out = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("tasks", Json::Num(n_tasks as f64)),
+                ("rate_qps", Json::Num(rate)),
+                ("horizon_ms", Json::Num(horizon)),
+                ("iters", Json::Num(iters as f64)),
+                ("seed", Json::Num(7.0)),
+            ]),
+        ),
+        ("arms", Json::arr(arms)),
+        (
+            "speedup_vs_single",
+            Json::Obj(
+                speedups
+                    .iter()
+                    .map(|(s, x)| (s.to_string(), Json::Num(*x)))
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = args.get_or("out", "BENCH_fleet.json");
+    std::fs::write(&path, out.to_string_pretty())?;
+    println!("wrote {path}");
+    if let Some(gate) = args.get("gate") {
+        let text = std::fs::read_to_string(gate)
+            .map_err(|e| anyhow::anyhow!("gate baseline {gate}: {e}"))?;
+        let baseline = sparseloom::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("gate baseline {gate}: {e}"))?;
+        gate_speedups(&speedups, &baseline, tolerance)?;
+        println!(
+            "throughput gate OK vs {gate} (tolerance {:.0} %)",
+            100.0 * tolerance
+        );
+    }
+    Ok(())
+}
+
+/// Gate measured threaded speedups against a committed baseline: each
+/// `speedup_vs_single` entry may undershoot its baseline value by at
+/// most `tolerance` (fractional). The committed baseline records
+/// conservative floors, so the gate catches "threading stopped
+/// helping" regressions without flaking on slower CI machines.
+fn gate_speedups(speedups: &[(usize, f64)], baseline: &Json, tolerance: f64) -> Result<()> {
+    let base = baseline
+        .get("speedup_vs_single")
+        .and_then(|s| s.as_obj())
+        .ok_or_else(|| anyhow::anyhow!("gate baseline has no speedup_vs_single object"))?;
+    let mut failures = Vec::new();
+    for (s, measured) in speedups {
+        if let Some(want) = base.get(&s.to_string()).and_then(|v| v.as_f64()) {
+            let floor = want * (1.0 - tolerance);
+            if *measured < floor {
+                failures.push(format!(
+                    "{s} shard(s): speedup {measured:.2}x < floor {floor:.2}x \
+                     (baseline {want:.2}x - {:.0} %)",
+                    100.0 * tolerance
+                ));
+            } else {
+                println!("  gate {s} shard(s): {measured:.2}x >= floor {floor:.2}x");
+            }
+        }
+    }
+    if !failures.is_empty() {
+        bail!(
+            "throughput regression gate failed:\n  {}",
+            failures.join("\n  ")
+        );
+    }
     Ok(())
 }
 

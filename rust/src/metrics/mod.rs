@@ -1,9 +1,13 @@
 //! Serving metrics: SLO violation rate, throughput, latency/memory
 //! breakdowns — the quantities every figure in §5 reports.
 
+pub mod sketch;
+
 use std::collections::BTreeMap;
 
 use crate::util::stats;
+
+pub use sketch::QuantileSketch;
 
 /// One request's life cycle through the serving engine — emitted per
 /// query by `scenario::Session::submit` (arrival → queueing → placement
@@ -40,6 +44,9 @@ pub struct TaskOutcome {
     pub accuracy: Option<f64>,
     /// Mean per-query end-to-end latency (virtual ms).
     pub mean_latency_ms: f64,
+    /// Worst single-query latency (virtual ms; 0.0 when nothing
+    /// completed).
+    pub max_latency_ms: f64,
     pub p50_latency_ms: f64,
     pub p95_latency_ms: f64,
     pub p99_latency_ms: f64,
@@ -53,6 +60,10 @@ pub struct TaskOutcome {
     pub batches: usize,
     /// Largest coalesced batch dispatched for this task.
     pub max_batch: usize,
+    /// Completed queries whose per-request latency verdict failed
+    /// (`service_ms > slo_latency_ms`) — the streaming violation
+    /// counter; sums to `RunReport::slo_miss_count`.
+    pub slo_misses: usize,
     /// SLO bounds it was judged against.
     pub slo_accuracy: f64,
     pub slo_latency_ms: f64,
@@ -72,7 +83,7 @@ impl TaskOutcome {
 }
 
 /// One serving run: all tasks, one SLO config, one arrival order.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct RunReport {
     pub outcomes: Vec<TaskOutcome>,
     /// Total virtual time to drain all queries (ms).
@@ -95,8 +106,19 @@ pub struct RunReport {
     /// callers. Merges take the per-task maximum (a task served by
     /// several shards is as at-risk as its worst fragment).
     pub slo_forecast: BTreeMap<String, f64>,
+    /// Completed requests whose per-request latency verdict failed —
+    /// the streaming counter behind [`RunReport::slo_misses`]. Kept in
+    /// both retention modes (the event-log scan it replaced only
+    /// worked with `record_events` on).
+    pub slo_miss_count: usize,
+    /// Whether this run retained its full per-request event log in
+    /// `requests`. Streaming-mode runs (the fleet-scale default for
+    /// `bench` and `serve` without `--verify`) set this false and keep
+    /// `requests` empty; memory is then O(tasks), not O(requests).
+    pub record_events: bool,
     /// Per-request event log (arrival/queueing/placement/completion),
-    /// in submission order. Empty for legacy aggregate-only callers.
+    /// in submission order. Empty for legacy aggregate-only callers
+    /// and for streaming-mode (`record_events == false`) runs.
     pub requests: Vec<RequestOutcome>,
     /// Virtual time this session's shard spent inside crash windows
     /// (fault lab; 0 without a fault profile).
@@ -109,6 +131,29 @@ pub struct RunReport {
     /// from: the gap between the window end and the first completion
     /// that finished after it (fault lab; empty without crashes).
     pub recoveries: Vec<f64>,
+}
+
+impl Default for RunReport {
+    fn default() -> Self {
+        RunReport {
+            outcomes: Vec::new(),
+            makespan_ms: 0.0,
+            total_queries: 0,
+            total_dropped: 0,
+            total_batches: 0,
+            cold_compiles: 0,
+            warm_loads: 0,
+            slo_forecast: BTreeMap::new(),
+            slo_miss_count: 0,
+            // Default true so an empty aggregate merges neutrally: the
+            // first folded fragment decides the mode (see fold_counts).
+            record_events: true,
+            requests: Vec::new(),
+            downtime_ms: 0.0,
+            throttled_ms: 0.0,
+            recoveries: Vec::new(),
+        }
+    }
 }
 
 impl RunReport {
@@ -132,12 +177,11 @@ impl RunReport {
     /// Completed requests whose per-request latency verdict failed
     /// (`slo_ok == Some(false)`) — the per-request violation count the
     /// predictive-admission study compares across arms. Dropped
-    /// requests carry no verdict and are not misses.
+    /// requests carry no verdict and are not misses. Served by the
+    /// streaming `slo_miss_count` counter, so it works identically
+    /// with event retention off.
     pub fn slo_misses(&self) -> usize {
-        self.requests
-            .iter()
-            .filter(|r| r.slo_ok == Some(false))
-            .count()
+        self.slo_miss_count
     }
 
     /// Mean coalesced batch size (1.0 when batching never kicked in;
@@ -219,8 +263,20 @@ impl RunReport {
                 *e = p;
             }
         }
+        self.slo_miss_count += other.slo_miss_count;
         self.outcomes.extend(other.outcomes);
-        self.requests.extend(other.requests);
+        // Event logs concatenate only when *both* sides retained them:
+        // folding in a streaming-mode fragment means the combined log
+        // would be partial, so it is dropped and the merged report
+        // carries streaming aggregates only. This is what bounds
+        // `ShardedReport` memory at O(tasks) under `record_events ==
+        // false` — the logs used to concatenate unconditionally.
+        if self.record_events && other.record_events {
+            self.requests.extend(other.requests);
+        } else {
+            self.record_events = false;
+            self.requests = Vec::new();
+        }
     }
 }
 
@@ -364,6 +420,7 @@ mod tests {
             task: "t".into(),
             accuracy: acc,
             mean_latency_ms: lat,
+            max_latency_ms: lat,
             p50_latency_ms: lat,
             p95_latency_ms: lat,
             p99_latency_ms: lat,
@@ -372,6 +429,7 @@ mod tests {
             queries_dropped: 0,
             batches: 100,
             max_batch: 1,
+            slo_misses: 0,
             slo_accuracy: 0.8,
             slo_latency_ms: 50.0,
         }
@@ -511,8 +569,23 @@ mod tests {
     }
 
     #[test]
-    fn slo_misses_counts_failed_verdicts_only() {
-        let req = |id: u64, slo_ok: Option<bool>, dropped: bool| RequestOutcome {
+    fn slo_misses_reads_the_streaming_counter() {
+        let r = RunReport { slo_miss_count: 2, ..Default::default() };
+        assert_eq!(r.slo_misses(), 2);
+        assert_eq!(RunReport::default().slo_misses(), 0);
+        // Counters sum across folds regardless of event retention.
+        let mut a = RunReport {
+            slo_miss_count: 2,
+            record_events: false,
+            ..Default::default()
+        };
+        a.merge_parallel(RunReport { slo_miss_count: 3, ..Default::default() });
+        assert_eq!(a.slo_misses(), 5);
+    }
+
+    #[test]
+    fn merge_concatenates_events_only_when_both_sides_retained_them() {
+        let req = |id: u64| RequestOutcome {
             id,
             task: "t".into(),
             arrival_ms: 0.0,
@@ -520,20 +593,29 @@ mod tests {
             finish_ms: 1.0,
             service_ms: 1.0,
             queueing_ms: 0.0,
-            dropped,
-            slo_ok,
+            dropped: false,
+            slo_ok: Some(true),
         };
-        let r = RunReport {
-            requests: vec![
-                req(0, Some(true), false),
-                req(1, Some(false), false),
-                req(2, Some(false), false),
-                req(3, None, true), // dropped: no verdict, not a miss
-            ],
+        // Both sides recording: logs concatenate.
+        let mut both = RunReport { requests: vec![req(0)], ..Default::default() };
+        both.merge_parallel(RunReport { requests: vec![req(1)], ..Default::default() });
+        assert!(both.record_events);
+        assert_eq!(both.requests.len(), 2);
+        // A streaming-mode side poisons retention: the partial log is
+        // dropped rather than shipped, and the flag sticks through
+        // further folds (this is the unbounded-growth fix).
+        let mut mixed = RunReport { requests: vec![req(0)], ..Default::default() };
+        mixed.merge_parallel(RunReport {
+            record_events: false,
+            total_queries: 5,
             ..Default::default()
-        };
-        assert_eq!(r.slo_misses(), 2);
-        assert_eq!(RunReport::default().slo_misses(), 0);
+        });
+        assert!(!mixed.record_events);
+        assert!(mixed.requests.is_empty());
+        assert_eq!(mixed.total_queries, 5);
+        mixed.merge_sequential(RunReport { requests: vec![req(2)], ..Default::default() });
+        assert!(!mixed.record_events, "streaming mode is sticky");
+        assert!(mixed.requests.is_empty());
     }
 
     #[test]

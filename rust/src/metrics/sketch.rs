@@ -1,0 +1,409 @@
+//! Greenwald–Khanna streaming quantile sketch (GK01) — the constant-
+//! memory percentile estimator behind streaming-mode `TaskOutcome`
+//! latency stats.
+//!
+//! # Guarantee
+//!
+//! For a stream of `n` finite values and error parameter `ε`, a query
+//! for rank `r` returns a value whose true rank lies in
+//! `[r − εn, r + εn]`. The sketch maintains a sorted list of tuples
+//! `(vᵢ, gᵢ, Δᵢ)` where `gᵢ` is the gap between the minimum rank of
+//! `vᵢ` and of `vᵢ₋₁`, and `Δᵢ` bounds the rank uncertainty of `vᵢ`:
+//!
+//! * `rmin(i) = Σ_{j≤i} gⱼ` and `rmax(i) = rmin(i) + Δᵢ` bracket the
+//!   true rank of `vᵢ`;
+//! * the **GK invariant** `gᵢ + Δᵢ ≤ max(1, ⌊2εn⌋)` holds after every
+//!   insert and compress, so consecutive tuples bracket every possible
+//!   rank with a gap of at most `⌊2εn⌋` — which is exactly what makes
+//!   the `εn` query bound provable (Greenwald & Khanna, SIGMOD '01,
+//!   Proposition 1).
+//!
+//! Inserts place a tuple `(v, 1, ⌊2εn⌋ − 1)` at its sorted position
+//! (`Δ = 0` at either end, keeping the minimum and maximum exact) and
+//! a periodic compress pass merges adjacent tuples whose combined span
+//! still fits the invariant, bounding live tuples at
+//! `O((1/ε)·log(εn))`.
+//!
+//! # Merging
+//!
+//! [`QuantileSketch::merge`] concatenates two tuple lists in value
+//! order and sums the counts. Absolute rank errors add under this
+//! merge: a sketch with error `ε·n₁` merged with one of error `ε·n₂`
+//! answers queries within `ε·(n₁+n₂)` of the true rank, so one level
+//! of shard → aggregate (or phase → report) folding preserves the
+//! bound without re-compressing. Merge does **not** compress (which
+//! would add another `⌊2εn⌋` of slack); fleet-scale fan-in is a few
+//! dozen sketches, so the size cost is negligible.
+//!
+//! # Determinism
+//!
+//! No randomness anywhere: identical insert sequences produce
+//! identical tuple lists, and [`QuantileSketch::merge`] breaks value
+//! ties in favor of `self`, so merging per-shard sketches in stable
+//! shard-index order is reproducible bit-for-bit. Non-finite inserts
+//! are ignored (never poison a percentile with NaN), and querying an
+//! empty sketch returns 0.0 — the same convention as
+//! [`crate::util::stats::percentile`].
+//!
+//! ```
+//! use sparseloom::metrics::sketch::QuantileSketch;
+//!
+//! let mut sk = QuantileSketch::new(0.01);
+//! for i in 0..10_000 {
+//!     sk.insert(i as f64);
+//! }
+//! let p50 = sk.query(50.0);
+//! assert!((p50 - 5_000.0).abs() <= 0.01 * 10_000.0 + 1.0, "{p50}");
+//! ```
+
+/// One GK tuple: a sample value `v` covering `g` ranks with rank
+/// uncertainty `delta`.
+#[derive(Clone, Copy, Debug)]
+struct Tuple {
+    v: f64,
+    g: u64,
+    delta: u64,
+}
+
+/// Streaming quantile sketch with a proven `εn` rank-error bound. See
+/// the module docs for the invariant and merge semantics.
+#[derive(Clone, Debug)]
+pub struct QuantileSketch {
+    eps: f64,
+    n: u64,
+    tuples: Vec<Tuple>,
+    /// Inserts between compress passes (`⌈1/(2ε)⌉`).
+    period: u64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new(DEFAULT_EPS)
+    }
+}
+
+/// Default rank-error parameter: p50/p99 within 1 % of the true rank.
+pub const DEFAULT_EPS: f64 = 0.01;
+
+impl QuantileSketch {
+    /// A sketch answering rank queries within `±eps·n`. `eps` is
+    /// clamped into `[1e-4, 0.5]`.
+    pub fn new(eps: f64) -> QuantileSketch {
+        let eps = if eps.is_finite() { eps.clamp(1e-4, 0.5) } else { DEFAULT_EPS };
+        QuantileSketch {
+            eps,
+            n: 0,
+            tuples: Vec::new(),
+            period: (1.0 / (2.0 * eps)).ceil() as u64,
+        }
+    }
+
+    /// Observed stream length (finite values only).
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Live tuples — the sketch's memory footprint, `O((1/ε)·log(εn))`.
+    pub fn tuple_count(&self) -> usize {
+        self.tuples.len()
+    }
+
+    /// The error parameter queries are answered under.
+    pub fn eps(&self) -> f64 {
+        self.eps
+    }
+
+    /// `max(1, ⌊2εn⌋)` — the invariant's per-tuple span budget.
+    fn cap(&self) -> u64 {
+        ((2.0 * self.eps * self.n as f64).floor() as u64).max(1)
+    }
+
+    /// Insert one value. Non-finite values are ignored.
+    pub fn insert(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.n += 1;
+        // First index whose value exceeds v — insertion keeps the list
+        // sorted and puts equal values after their existing run (ties
+        // resolve deterministically).
+        let pos = self.tuples.partition_point(|t| t.v <= v);
+        let delta = if pos == 0 || pos == self.tuples.len() {
+            // New minimum or maximum: its rank is exact.
+            0
+        } else {
+            self.cap() - 1
+        };
+        self.tuples.insert(pos, Tuple { v, g: 1, delta });
+        if self.n % self.period == 0 {
+            self.compress();
+        }
+    }
+
+    /// Merge adjacent tuples whose combined span still satisfies the
+    /// invariant. The first and last tuples are never merged away, so
+    /// the observed minimum and maximum stay exact.
+    fn compress(&mut self) {
+        if self.tuples.len() < 3 {
+            return;
+        }
+        let cap = self.cap();
+        let mut i = self.tuples.len() - 2;
+        while i >= 1 {
+            let merged = self.tuples[i].g + self.tuples[i + 1].g + self.tuples[i + 1].delta;
+            if merged <= cap {
+                self.tuples[i + 1].g += self.tuples[i].g;
+                self.tuples.remove(i);
+            }
+            i -= 1;
+        }
+    }
+
+    /// The value at percentile `q` (0–100): a value whose rank is
+    /// within `±εn` of `⌈q/100·n⌉`. 0.0 on an empty sketch.
+    pub fn query(&self, q: f64) -> f64 {
+        if self.n == 0 || self.tuples.is_empty() {
+            return 0.0;
+        }
+        let q = if q.is_finite() { q.clamp(0.0, 100.0) } else { 50.0 };
+        let rank = ((q / 100.0) * self.n as f64).ceil().max(1.0).min(self.n as f64);
+        let target = rank + self.eps * self.n as f64;
+        // Return the first tuple i whose successor would overshoot
+        // `rank + εn` (GK01 §3: then rmax(i) ≤ rank + εn, and the
+        // invariant gives rmin(i) ≥ rank − εn).
+        let mut rmin: u64 = 0;
+        for i in 0..self.tuples.len() - 1 {
+            rmin += self.tuples[i].g;
+            let next = &self.tuples[i + 1];
+            if (rmin + next.g + next.delta) as f64 > target {
+                return self.tuples[i].v;
+            }
+        }
+        self.tuples[self.tuples.len() - 1].v
+    }
+
+    /// Exact observed minimum (`None` on an empty sketch).
+    pub fn min(&self) -> Option<f64> {
+        self.tuples.first().map(|t| t.v)
+    }
+
+    /// Exact observed maximum (`None` on an empty sketch).
+    pub fn max(&self) -> Option<f64> {
+        self.tuples.last().map(|t| t.v)
+    }
+
+    /// Fold `other` into `self`: tuple lists interleave in value order
+    /// (ties keep `self`'s tuples first), counts sum, and the error
+    /// parameter takes the looser of the two. Absolute rank errors add,
+    /// so the merged sketch answers within `ε·(n₁+n₂)`.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let mut merged = Vec::with_capacity(self.tuples.len() + other.tuples.len());
+        let (mut a, mut b) = (self.tuples.iter().peekable(), other.tuples.iter().peekable());
+        loop {
+            match (a.peek(), b.peek()) {
+                (Some(x), Some(y)) => {
+                    if x.v <= y.v {
+                        merged.push(**x);
+                        a.next();
+                    } else {
+                        merged.push(**y);
+                        b.next();
+                    }
+                }
+                (Some(x), None) => {
+                    merged.push(**x);
+                    a.next();
+                }
+                (None, Some(y)) => {
+                    merged.push(**y);
+                    b.next();
+                }
+                (None, None) => break,
+            }
+        }
+        self.tuples = merged;
+        self.n += other.n;
+        self.eps = self.eps.max(other.eps);
+        self.period = (1.0 / (2.0 * self.eps)).ceil() as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+    use crate::util::Rng;
+
+    /// True-rank window check: the sketch's answer for percentile `q`
+    /// must lie between the exact order statistics `±⌈εn⌉` around the
+    /// queried rank.
+    fn assert_within_rank_error(sorted: &[f64], sk: &QuantileSketch, q: f64) {
+        let n = sorted.len();
+        assert_eq!(sk.count() as usize, n);
+        let got = sk.query(q);
+        assert!(got.is_finite(), "sketch must never return NaN (q={q})");
+        let rank = ((q / 100.0) * n as f64).ceil().max(1.0) as usize;
+        let slack = (sk.eps() * n as f64).ceil() as usize + 1;
+        let lo = sorted[rank.saturating_sub(slack + 1).min(n - 1)];
+        let hi = sorted[(rank + slack - 1).min(n - 1)];
+        assert!(
+            (lo..=hi).contains(&got),
+            "q={q}: {got} outside rank-error window [{lo}, {hi}] (n={n})"
+        );
+    }
+
+    fn check_stream(values: Vec<f64>) {
+        let mut sk = QuantileSketch::new(0.01);
+        for &v in &values {
+            sk.insert(v);
+        }
+        let mut sorted = values;
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [1.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            assert_within_rank_error(&sorted, &sk, q);
+        }
+        // Exact extremes survive compression.
+        assert_eq!(sk.min().unwrap(), sorted[0]);
+        assert_eq!(sk.max().unwrap(), *sorted.last().unwrap());
+    }
+
+    #[test]
+    fn accurate_on_random_streams() {
+        let mut rng = Rng::new(42);
+        for n in [100usize, 1_000, 20_000] {
+            let values: Vec<f64> =
+                (0..n).map(|_| 1.0 + 99.0 * rng.f64()).collect();
+            check_stream(values);
+        }
+    }
+
+    #[test]
+    fn accurate_on_adversarial_streams() {
+        // Sorted ascending: the worst case for naive reservoir schemes.
+        check_stream((0..10_000).map(|i| i as f64).collect());
+        // Sorted descending: every insert lands at the front.
+        check_stream((0..10_000).rev().map(|i| i as f64).collect());
+        // Heavy ties: only 3 distinct values.
+        check_stream((0..9_000).map(|i| (i % 3) as f64).collect());
+        // Sawtooth with outliers.
+        check_stream(
+            (0..12_000)
+                .map(|i| if i % 997 == 0 { 1e6 } else { (i % 50) as f64 })
+                .collect(),
+        );
+    }
+
+    #[test]
+    fn memory_stays_sublinear() {
+        let mut sk = QuantileSketch::new(0.01);
+        for i in 0..200_000 {
+            sk.insert((i % 1_000) as f64);
+        }
+        // ε = 0.01 ⇒ a couple hundred tuples suffice for 200k inserts;
+        // the bound is O((1/ε)·log(εn)) but assert a generous absolute
+        // ceiling so a compress regression (linear growth) fails loudly.
+        assert!(
+            sk.tuple_count() < 2_000,
+            "sketch grew to {} tuples over 200k inserts",
+            sk.tuple_count()
+        );
+    }
+
+    #[test]
+    fn non_finite_inserts_are_ignored_and_empty_queries_are_zero() {
+        let mut sk = QuantileSketch::new(0.01);
+        assert_eq!(sk.query(50.0), 0.0);
+        sk.insert(f64::NAN);
+        sk.insert(f64::INFINITY);
+        sk.insert(f64::NEG_INFINITY);
+        assert_eq!(sk.count(), 0);
+        assert_eq!(sk.query(99.0), 0.0);
+        sk.insert(7.0);
+        assert_eq!(sk.query(0.0), 7.0);
+        assert_eq!(sk.query(100.0), 7.0);
+        assert!(sk.query(f64::NAN).is_finite(), "NaN query must not poison");
+    }
+
+    #[test]
+    fn queries_are_monotone_in_q() {
+        let mut rng = Rng::new(7);
+        let mut sk = QuantileSketch::new(0.02);
+        for _ in 0..5_000 {
+            sk.insert(rng.f64() * 1_000.0);
+        }
+        let mut last = f64::NEG_INFINITY;
+        for q in 0..=100 {
+            let v = sk.query(q as f64);
+            assert!(v >= last, "p{q} = {v} < p{} = {last}", q - 1);
+            last = v;
+        }
+    }
+
+    #[test]
+    fn merge_preserves_the_rank_error_bound() {
+        let mut rng = Rng::new(3);
+        let mut all = Vec::new();
+        let mut merged = QuantileSketch::new(0.01);
+        // 4 shards with different distributions, merged in index order.
+        for shard in 0..4 {
+            let mut sk = QuantileSketch::new(0.01);
+            for _ in 0..5_000 {
+                let v = (shard + 1) as f64 * 10.0 + rng.f64() * 25.0;
+                sk.insert(v);
+                all.push(v);
+            }
+            merged.merge(&sk);
+        }
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [1.0, 50.0, 99.0] {
+            assert_within_rank_error(&all, &merged, q);
+        }
+        // Merging an empty sketch is a no-op, merging into empty clones.
+        let snapshot = merged.query(50.0);
+        merged.merge(&QuantileSketch::new(0.01));
+        assert_eq!(merged.query(50.0).to_bits(), snapshot.to_bits());
+        let mut fresh = QuantileSketch::new(0.01);
+        fresh.merge(&merged);
+        assert_eq!(fresh.count(), merged.count());
+    }
+
+    #[test]
+    fn deterministic_across_identical_runs() {
+        let build = || {
+            let mut rng = Rng::new(11);
+            let mut sk = QuantileSketch::new(0.01);
+            for _ in 0..10_000 {
+                sk.insert(rng.f64() * 123.0);
+            }
+            sk
+        };
+        let (a, b) = (build(), build());
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(a.query(q).to_bits(), b.query(q).to_bits());
+        }
+        assert_eq!(a.tuple_count(), b.tuple_count());
+    }
+
+    #[test]
+    fn tracks_exact_percentiles_closely_on_small_streams() {
+        // Below 1/(2ε) inserts nothing has been compressed: every value
+        // is retained and queries are exact order statistics.
+        let mut sk = QuantileSketch::new(0.01);
+        let values = [5.0, 1.0, 9.0, 3.0, 7.0];
+        for v in values {
+            sk.insert(v);
+        }
+        assert_eq!(sk.query(0.0), 1.0);
+        assert_eq!(sk.query(100.0), 9.0);
+        let p50 = sk.query(50.0);
+        let exact = stats::median(&values);
+        assert!((p50 - exact).abs() <= 2.0, "{p50} vs exact {exact}");
+    }
+}

@@ -64,12 +64,12 @@
 //!            report.aggregate.requests.len());
 //! ```
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::ServeOpts;
-use crate::metrics::{RunReport, ShardedReport};
+use crate::metrics::{RequestOutcome, RunReport, ShardedReport};
 use crate::planner::{Planner, ShardObservation, ShardPlan, SparsityAwarePlanner};
 use crate::profiler::TaskProfile;
 use crate::soc::{LatencyModel, Processor};
@@ -376,6 +376,11 @@ impl<'a> ShardedServer<'a> {
             shard_tasks[self.shard_of(task)].push(task.clone());
         }
         let dispatcher = Dispatcher::new(scenario.dispatch.clone());
+        // The static partition makes shards fully independent — each
+        // has its own plan cache, pool, and pre-routed slice of the
+        // stream — so driving them on OS threads (`ServeOpts::parallel`)
+        // is bit-identical to the sequential loop by construction.
+        let threaded = self.shards[0].opts().parallel && n > 1;
         let mut per_shard: Vec<RunReport> = vec![RunReport::default(); n];
         let mut budget_utilization = vec![0.0f64; n];
         for phase in 0..scenario.phases() {
@@ -384,16 +389,54 @@ impl<'a> ShardedServer<'a> {
                 let shard = self.shard_of(&q.task);
                 parts[shard].push(q);
             }
-            for (i, server) in self.shards.iter().enumerate() {
-                if shard_tasks[i].is_empty() {
-                    continue;
-                }
+            let run_shard = |i: usize, server: &Server<'a>| -> Result<(f64, RunReport)> {
                 let sub = sub_scenario(scenario, &shard_tasks[i], i);
                 let mut session = server.session(&sub, phase)?;
                 dispatcher.drive(&mut session, &parts[i])?;
-                budget_utilization[i] = session.pool_utilization();
-                // Phases of one shard are sequential, like Server::run.
-                per_shard[i].merge_sequential(session.finish());
+                Ok((session.pool_utilization(), session.finish()))
+            };
+            // One slot per shard, filled in shard order either way.
+            let slots: Vec<Option<Result<(f64, RunReport)>>> = if threaded {
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = self
+                        .shards
+                        .iter()
+                        .enumerate()
+                        .map(|(i, server)| {
+                            if shard_tasks[i].is_empty() {
+                                return None;
+                            }
+                            let run_shard = &run_shard;
+                            Some(scope.spawn(move || run_shard(i, server)))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.map(|h| h.join().expect("shard thread panicked")))
+                        .collect()
+                })
+            } else {
+                self.shards
+                    .iter()
+                    .enumerate()
+                    .map(|(i, server)| {
+                        if shard_tasks[i].is_empty() {
+                            None
+                        } else {
+                            Some(run_shard(i, server))
+                        }
+                    })
+                    .collect()
+            };
+            // Deterministic merge: shard-index order, first error wins
+            // (the same shard whose error the sequential loop reports).
+            for (i, slot) in slots.into_iter().enumerate() {
+                if let Some(res) = slot {
+                    let (util, report) = res?;
+                    budget_utilization[i] = util;
+                    // Phases of one shard are sequential, like Server::run.
+                    per_shard[i].merge_sequential(report);
+                }
             }
         }
         let mut aggregate = RunReport::default();
@@ -457,6 +500,14 @@ impl<'a> ShardedServer<'a> {
     /// degenerate horizon-0 forecast, so predictive mode never reacts
     /// *later* than reactive mode.
     fn run_online(&self, scenario: &Scenario) -> Result<ShardedReport> {
+        // `PlannerConfig::epoch_ms > 0` selects the epoch-barrier
+        // protocol: shard threads each drive one virtual-time window,
+        // and all adaptation (steal, crash redirect, replan) happens at
+        // the lockstep barriers between windows. `0` (the default)
+        // keeps this classic per-batch sequential drive.
+        if scenario.planner.epoch_ms > 0.0 {
+            return self.run_online_epoch(scenario);
+        }
         let n = self.shards.len();
         let coord = self.shards[0].coordinator();
         let planner = SparsityAwarePlanner::new(coord.zoo, coord.lm, coord.profiles);
@@ -881,6 +932,612 @@ impl<'a> ShardedServer<'a> {
             link_cost_ms,
         })
     }
+
+    /// The epoch-barrier threaded online drive
+    /// (`PlannerConfig::epoch_ms > 0`). Virtual time is cut into
+    /// windows of `epoch_ms`; inside a window every shard serves its
+    /// own partition of the pending queues — on its own OS thread when
+    /// `ServeOpts::parallel` is set — and between windows all shards
+    /// meet at a lockstep barrier where the coordinator, alone and
+    /// sequentially, folds the workers' telemetry parts
+    /// ([`Telemetry::merge`], shard-index order), feeds the task-level
+    /// arrival estimators from the returned events, re-syncs FIFO
+    /// floors, and applies every adaptation move (steal, crash
+    /// redirect, replan). All cross-shard decisions happen at
+    /// barriers over data folded in shard-index order with
+    /// virtual-time tie-breaks, so the report is bit-identical whether
+    /// the windows ran on threads or inline — determinism by
+    /// construction, not by scheduling luck. See DESIGN.md
+    /// §Fleet-scale execution for the protocol and the merge-order
+    /// argument.
+    fn run_online_epoch(&self, scenario: &Scenario) -> Result<ShardedReport> {
+        let n = self.shards.len();
+        let epoch = scenario.planner.epoch_ms;
+        let coord = self.shards[0].coordinator();
+        let planner = SparsityAwarePlanner::new(coord.zoo, coord.lm, coord.profiles);
+        let universe = scenario.slo_universe();
+        let cfg = &scenario.planner;
+        let threaded = self.shards[0].opts().parallel && n > 1;
+        let mut telemetry = Telemetry::new(n);
+        let mut assignment: BTreeMap<String, usize> = scenario
+            .tasks
+            .iter()
+            .map(|t| (t.clone(), self.shard_of(t)))
+            .collect();
+        let mut per_shard: Vec<RunReport> = vec![RunReport::default(); n];
+        let mut budget_utilization = vec![0.0f64; n];
+        let mut replans = 0usize;
+        let mut migrations = 0usize;
+        let mut link_cost_ms = 0.0f64;
+        for phase in 0..scenario.phases() {
+            let slos = &scenario.schedule[phase];
+            let mut sessions = Vec::with_capacity(n);
+            for (i, server) in self.shards.iter().enumerate() {
+                let tasks_i: Vec<String> = scenario
+                    .tasks
+                    .iter()
+                    .filter(|t| assignment[*t] == i)
+                    .cloned()
+                    .collect();
+                sessions.push(server.session(&sub_scenario(scenario, &tasks_i, i), phase)?);
+            }
+            let shard_orders: Vec<Vec<Processor>> = sessions
+                .iter()
+                .map(|s| s.planned_order().to_vec())
+                .collect();
+            let shard_pool_bytes: Vec<u64> =
+                sessions.iter().map(|s| s.pool_capacity()).collect();
+            let mut pending: BTreeMap<String, VecDeque<Query>> = BTreeMap::new();
+            for q in scenario.stream(phase) {
+                if !assignment.contains_key(&q.task) {
+                    bail!(
+                        "query {} targets task {:?} not in this scenario",
+                        q.id,
+                        q.task
+                    );
+                }
+                pending.entry(q.task.clone()).or_default().push_back(q);
+            }
+            let mut serving: BTreeMap<String, Vec<usize>> = assignment
+                .iter()
+                .map(|(t, &s)| (t.clone(), vec![s]))
+                .collect();
+            let batching = scenario.dispatch.is_batching();
+            let mut budget_left = cfg.max_migrations;
+            let mut thresholds: Vec<Option<f64>> = (0..n)
+                .map(|i| saturation_threshold(cfg.saturation_slack, slos, &assignment, i))
+                .collect();
+            // Zero-progress escalation: when a whole window serves
+            // nothing (every issue time sits at or beyond its end),
+            // the next window starts where this one ended — the clock
+            // always advances, so the phase terminates.
+            let mut window_floor = f64::NEG_INFINITY;
+            loop {
+                // Earliest issue time across all pending work, judged
+                // at the current homes; ties keep the first task in
+                // declaration order, as in the classic drive.
+                let mut t0: Option<f64> = None;
+                for task in &scenario.tasks {
+                    let Some(queue) = pending.get(task) else { continue };
+                    let Some(q) = queue.front() else { continue };
+                    let ready =
+                        sessions[assignment[task]].ready_of(task).unwrap_or(0.0);
+                    let issue = q.arrival_ms.max(ready);
+                    if t0.map(|t| issue < t).unwrap_or(true) {
+                        t0 = Some(issue);
+                    }
+                }
+                let Some(t0) = t0 else { break };
+                let start = t0.max(window_floor);
+                // Clip the window at the first crash boundary after its
+                // start, so a shard's up/down status is constant across
+                // the window and the redirect decision — judged once,
+                // at `start` — holds for every batch in it. (Per-query
+                // drop accounting inside a down window stays exact
+                // either way: the session's swallow rule prices each
+                // query against the crash window itself.)
+                let mut end = start + epoch;
+                for w in &scenario.faults.crashes {
+                    for b in [w.start_ms, w.end_ms] {
+                        if b > start && b < end {
+                            end = b;
+                        }
+                    }
+                }
+
+                // --- barrier: placement decisions (coordinator only) --
+                // Which shard serves each task's queue this window.
+                let mut serve_as: BTreeMap<String, usize> = assignment.clone();
+                if cfg.steal {
+                    for home in 0..n {
+                        let home_backlog =
+                            backlog_of_shard(&sessions, &pending, &assignment, home);
+                        telemetry.observe_backlog(home, home_backlog, start);
+                        let effective_backlog = if cfg.predictive {
+                            home_backlog.max(telemetry.forecast_shard_backlog_ms(
+                                home,
+                                start,
+                                cfg.horizon_ms,
+                            ))
+                        } else {
+                            home_backlog
+                        };
+                        let saturated = thresholds[home]
+                            .map(|thr| effective_backlog > thr)
+                            .unwrap_or(false);
+                        if !saturated {
+                            continue;
+                        }
+                        // Victim: the home's earliest-issue pending
+                        // task — the same queue the classic drive
+                        // would steal from first.
+                        let mut victim: Option<(f64, &String)> = None;
+                        for task in &scenario.tasks {
+                            if assignment[task] != home {
+                                continue;
+                            }
+                            let Some(queue) = pending.get(task) else { continue };
+                            let Some(q) = queue.front() else { continue };
+                            let ready =
+                                sessions[home].ready_of(task).unwrap_or(0.0);
+                            let issue = q.arrival_ms.max(ready);
+                            if victim.map(|(t, _)| issue < t).unwrap_or(true) {
+                                victim = Some((issue, task));
+                            }
+                        }
+                        let Some((_, task)) = victim else { continue };
+                        let task = task.clone();
+                        let backlog =
+                            backlog_per_shard(&sessions, &pending, &assignment, n);
+                        for (i, &b) in backlog.iter().enumerate() {
+                            telemetry.observe_backlog(i, b, start);
+                        }
+                        // Same thief ranking as the classic drive:
+                        // least-backlogged shard under half the home's
+                        // backlog, warm beats cold, cold only while the
+                        // task is single-homed.
+                        let mut warm_best: Option<(f64, usize)> = None;
+                        let mut cold_best: Option<(f64, usize)> = None;
+                        for (i, &b) in backlog.iter().enumerate() {
+                            if i == home || 2.0 * b >= backlog[home] {
+                                continue;
+                            }
+                            let slot = (b, i);
+                            if sessions[i].has_warm_variant(&task) {
+                                if warm_best.map(|w| slot < w).unwrap_or(true) {
+                                    warm_best = Some(slot);
+                                }
+                            } else if cold_best.map(|c| slot < c).unwrap_or(true) {
+                                cold_best = Some(slot);
+                            }
+                        }
+                        let bootstrap = if serving[&task].len() == 1 {
+                            cold_best
+                        } else {
+                            None
+                        };
+                        if let Some((_, thief)) = warm_best.or(bootstrap) {
+                            if sessions[thief].ready_of(&task).is_none() {
+                                if let Some(slo) = slos.get(&task).copied() {
+                                    let prior = ShardPlan {
+                                        assignment: assignment.clone(),
+                                        shards: n,
+                                        slos: slos.clone(),
+                                        universe: universe.clone(),
+                                    };
+                                    let observed = ShardObservation {
+                                        saturated: home,
+                                        shard_backlog_ms: backlog.clone(),
+                                        shard_orders: shard_orders.clone(),
+                                        shard_pool_bytes: shard_pool_bytes.clone(),
+                                        movable: vec![task.clone()],
+                                        mean_batch: observed_mean_batch(
+                                            &sessions,
+                                            &assignment,
+                                            &scenario.tasks,
+                                        ),
+                                        arrival_qps: if cfg.predictive {
+                                            telemetry.projected_arrival_hint(
+                                                start,
+                                                cfg.horizon_ms,
+                                            )
+                                        } else {
+                                            telemetry.arrival_hint()
+                                        },
+                                    };
+                                    let selection = planner.reselect(
+                                        &task, &prior, &observed, thief,
+                                    );
+                                    let warm_blobs = if cfg.warm_migrate {
+                                        Some(sessions[home].pool_task_blobs(&task))
+                                    } else {
+                                        None
+                                    };
+                                    let mut floor =
+                                        sessions[home].ready_of(&task).unwrap_or(0.0);
+                                    if let Some(links) = &scenario.faults.links {
+                                        let c = links.cost(home, thief);
+                                        floor += c;
+                                        link_cost_ms += c;
+                                    }
+                                    sessions[thief].adopt_task(
+                                        &task, slo, selection, floor, warm_blobs,
+                                    )?;
+                                    serving
+                                        .get_mut(&task)
+                                        .expect("known task")
+                                        .push(thief);
+                                }
+                            }
+                            if sessions[thief].ready_of(&task).is_some() {
+                                serve_as.insert(task, thief);
+                            }
+                        }
+                    }
+                }
+
+                // --- barrier: crash redirect (fault lab) --------------
+                // A task routed to a shard that is down for this whole
+                // window reroutes to a live shard (serving < warm <
+                // cold, lowest index), paying the link price on
+                // adoption — mirroring the classic drive's per-batch
+                // redirect. Without stealing the queue stays home and
+                // the session's swallow rule drops it, which is the
+                // no-adaptation baseline.
+                if cfg.steal && !scenario.faults.crashes.is_empty() {
+                    for task in &scenario.tasks {
+                        let has_work =
+                            pending.get(task).map(|q| !q.is_empty()).unwrap_or(false);
+                        if !has_work {
+                            continue;
+                        }
+                        let from = serve_as[task];
+                        if !scenario.faults.down_at(from, start) {
+                            continue;
+                        }
+                        let mut target: Option<(usize, usize)> = None;
+                        for i in 0..n {
+                            if i == from || scenario.faults.down_at(i, start) {
+                                continue;
+                            }
+                            let rank = if sessions[i].ready_of(task).is_some() {
+                                0
+                            } else if sessions[i].has_warm_variant(task) {
+                                1
+                            } else {
+                                2
+                            };
+                            let cand = (rank, i);
+                            if target.map(|t| cand < t).unwrap_or(true) {
+                                target = Some(cand);
+                            }
+                        }
+                        if let Some((_, dst)) = target {
+                            if sessions[dst].ready_of(task).is_none() {
+                                if let Some(slo) = slos.get(task).copied() {
+                                    let warm_blobs = if cfg.warm_migrate {
+                                        Some(sessions[from].pool_task_blobs(task))
+                                    } else {
+                                        None
+                                    };
+                                    let mut floor =
+                                        sessions[from].ready_of(task).unwrap_or(0.0);
+                                    if let Some(links) = &scenario.faults.links {
+                                        let c = links.cost(from, dst);
+                                        floor += c;
+                                        link_cost_ms += c;
+                                    }
+                                    sessions[dst].adopt_task(
+                                        task, slo, None, floor, warm_blobs,
+                                    )?;
+                                    serving
+                                        .get_mut(task)
+                                        .expect("known task")
+                                        .push(dst);
+                                }
+                            }
+                            if sessions[dst].ready_of(task).is_some() {
+                                serve_as.insert(task.clone(), dst);
+                            }
+                        }
+                    }
+                }
+
+                // --- window: every shard drives its own partition -----
+                let mut work: Vec<BTreeMap<String, VecDeque<Query>>> =
+                    (0..n).map(|_| BTreeMap::new()).collect();
+                for (task, queue) in std::mem::take(&mut pending) {
+                    if queue.is_empty() {
+                        continue;
+                    }
+                    let dst = serve_as[&task];
+                    work[dst].insert(task, queue);
+                }
+                // Batches a worker serves for a task homed elsewhere
+                // are stolen batches; the worker counts them on its
+                // telemetry part (merged below).
+                let foreign: Vec<BTreeSet<String>> = (0..n)
+                    .map(|i| {
+                        work[i]
+                            .keys()
+                            .filter(|t| assignment[*t] != i)
+                            .cloned()
+                            .collect()
+                    })
+                    .collect();
+                let slots: Vec<Result<WindowResult>> = if threaded {
+                    std::thread::scope(|scope| {
+                        let handles: Vec<_> = sessions
+                            .iter_mut()
+                            .zip(work.iter_mut())
+                            .enumerate()
+                            .map(|(i, (session, queues))| {
+                                let foreign = &foreign[i];
+                                let dispatch = &scenario.dispatch;
+                                scope.spawn(move || {
+                                    drive_window(
+                                        session, queues, dispatch, batching, end,
+                                        i, foreign, n,
+                                    )
+                                })
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .map(|h| h.join().expect("shard thread panicked"))
+                            .collect()
+                    })
+                } else {
+                    sessions
+                        .iter_mut()
+                        .zip(work.iter_mut())
+                        .enumerate()
+                        .map(|(i, (session, queues))| {
+                            drive_window(
+                                session,
+                                queues,
+                                &scenario.dispatch,
+                                batching,
+                                end,
+                                i,
+                                &foreign[i],
+                                n,
+                            )
+                        })
+                        .collect()
+                };
+
+                // --- barrier: deterministic merge (shard-index order) -
+                let mut progressed = false;
+                for slot in slots {
+                    let (part, events, batches) = slot?;
+                    telemetry.merge(&part);
+                    for ev in &events {
+                        telemetry.observe_task_outcome(ev);
+                    }
+                    progressed = progressed || batches > 0;
+                }
+                window_floor = if progressed { f64::NEG_INFINITY } else { end };
+                // Part-drained queues go back for the next window.
+                for queues in work {
+                    for (task, queue) in queues {
+                        if !queue.is_empty() {
+                            pending.insert(task, queue);
+                        }
+                    }
+                }
+                // FIFO across shards serving one task: only one shard
+                // served it this window, so raising every floor to the
+                // latest completion here keeps per-task order intact.
+                for (task, on) in &serving {
+                    if on.len() > 1 {
+                        sync_ready_floors(&mut sessions, on, task);
+                    }
+                }
+
+                if !cfg.replan || budget_left == 0 {
+                    continue;
+                }
+                // --- barrier: bounded replan (≤ 1 migration) ----------
+                // Shards are scanned in index order; the first
+                // saturated one with a viable move gets this barrier's
+                // migration.
+                for home in 0..n {
+                    let Some(threshold) = thresholds[home] else { continue };
+                    let home_backlog =
+                        backlog_of_shard(&sessions, &pending, &assignment, home);
+                    telemetry.observe_backlog(home, home_backlog, end);
+                    let effective_backlog = if cfg.predictive {
+                        home_backlog.max(telemetry.forecast_shard_backlog_ms(
+                            home,
+                            end,
+                            cfg.horizon_ms,
+                        ))
+                    } else {
+                        home_backlog
+                    };
+                    if effective_backlog <= threshold {
+                        continue;
+                    }
+                    let shard_backlog =
+                        backlog_per_shard(&sessions, &pending, &assignment, n);
+                    for (i, &b) in shard_backlog.iter().enumerate() {
+                        telemetry.observe_backlog(i, b, end);
+                    }
+                    let has_target = shard_backlog
+                        .iter()
+                        .enumerate()
+                        .any(|(i2, &b)| i2 != home && b < shard_backlog[home]);
+                    let movable: Vec<String> = scenario
+                        .tasks
+                        .iter()
+                        .filter(|t| assignment[*t] == home)
+                        .filter(|t| {
+                            pending.get(*t).map(|q| !q.is_empty()).unwrap_or(false)
+                        })
+                        .filter(|t| {
+                            !sessions.iter().enumerate().any(|(i2, s)| {
+                                i2 != home && s.ready_of(t).is_some()
+                            })
+                        })
+                        .cloned()
+                        .collect();
+                    if !has_target || movable.is_empty() {
+                        continue;
+                    }
+                    replans += 1;
+                    let prior = ShardPlan {
+                        assignment: assignment.clone(),
+                        shards: n,
+                        slos: slos.clone(),
+                        universe: universe.clone(),
+                    };
+                    let observed = ShardObservation {
+                        saturated: home,
+                        shard_backlog_ms: shard_backlog,
+                        shard_orders: shard_orders.clone(),
+                        shard_pool_bytes: shard_pool_bytes.clone(),
+                        movable,
+                        mean_batch: observed_mean_batch(
+                            &sessions,
+                            &assignment,
+                            &scenario.tasks,
+                        ),
+                        arrival_qps: if cfg.predictive {
+                            telemetry.projected_arrival_hint(end, cfg.horizon_ms)
+                        } else {
+                            telemetry.arrival_hint()
+                        },
+                    };
+                    let Some(mig) = planner.replan(&prior, &observed) else {
+                        continue;
+                    };
+                    debug_assert!(sessions[mig.to].ready_of(&mig.task).is_none());
+                    let Some(slo) = slos.get(&mig.task).copied() else { continue };
+                    let mut floor =
+                        sessions[mig.from].ready_of(&mig.task).unwrap_or(0.0);
+                    if let Some(links) = &scenario.faults.links {
+                        let c = links.cost(mig.from, mig.to);
+                        floor += c;
+                        link_cost_ms += c;
+                    }
+                    // As in the classic drive: a replanned migrant's
+                    // pool entries *move* with it.
+                    let warm_blobs = if cfg.warm_migrate {
+                        Some(sessions[mig.from].take_task_blobs(&mig.task))
+                    } else {
+                        None
+                    };
+                    sessions[mig.to].adopt_task(
+                        &mig.task,
+                        slo,
+                        mig.selection,
+                        floor,
+                        warm_blobs,
+                    )?;
+                    let adopters = serving.get_mut(&mig.task).expect("known task");
+                    if !adopters.contains(&mig.to) {
+                        adopters.push(mig.to);
+                    }
+                    assignment.insert(mig.task.clone(), mig.to);
+                    thresholds = (0..n)
+                        .map(|i| {
+                            saturation_threshold(
+                                cfg.saturation_slack,
+                                slos,
+                                &assignment,
+                                i,
+                            )
+                        })
+                        .collect();
+                    migrations += 1;
+                    budget_left -= 1;
+                    break;
+                }
+            }
+            for (i, session) in sessions.into_iter().enumerate() {
+                budget_utilization[i] = session.pool_utilization();
+                per_shard[i].merge_sequential(session.finish());
+            }
+        }
+        let mut aggregate = RunReport::default();
+        for report in &per_shard {
+            aggregate.merge_parallel(report.clone());
+        }
+        Ok(ShardedReport {
+            per_shard,
+            aggregate,
+            replans,
+            migrations,
+            steals: telemetry.steals() as usize,
+            budget_utilization,
+            arrival_est_qps: telemetry.rates(),
+            link_cost_ms,
+        })
+    }
+}
+
+/// What one shard worker hands back at an epoch barrier: its telemetry
+/// part (shard counters only — see [`Telemetry::merge`]), the request
+/// outcomes it produced this window in submit order (the coordinator
+/// feeds these to the task-level estimators), and how many batches it
+/// served (zero across all workers triggers the window-floor
+/// escalation).
+type WindowResult = (Telemetry, Vec<RequestOutcome>, usize);
+
+/// Drive one shard through one epoch window: serve every batch of the
+/// shard's partition whose issue time falls before `end_ms`,
+/// earliest-issue first (queue-name order breaks ties — deterministic
+/// regardless of thread interleaving). Uses the same coalescing rule
+/// as `Dispatcher::drive`. Touches only this shard's session and
+/// queues plus a fresh telemetry part, so windows of different shards
+/// are data-independent and safe to run on separate threads.
+#[allow(clippy::too_many_arguments)]
+fn drive_window(
+    session: &mut Session<'_, '_>,
+    queues: &mut BTreeMap<String, VecDeque<Query>>,
+    dispatch: &Dispatch,
+    batching: bool,
+    end_ms: f64,
+    me: usize,
+    foreign: &BTreeSet<String>,
+    n_shards: usize,
+) -> Result<WindowResult> {
+    let mut part = Telemetry::new(n_shards);
+    let mut events = Vec::new();
+    let mut batches = 0usize;
+    loop {
+        let mut next: Option<(f64, &String)> = None;
+        for (task, queue) in queues.iter() {
+            let Some(q) = queue.front() else { continue };
+            let ready = session.ready_of(task).unwrap_or(0.0);
+            let issue = q.arrival_ms.max(ready);
+            if next.map(|(t, _)| issue < t).unwrap_or(true) {
+                next = Some((issue, task));
+            }
+        }
+        let Some((issue, task)) = next else { break };
+        if issue >= end_ms {
+            break;
+        }
+        let task = task.clone();
+        let queue = queues.get_mut(&task).expect("picked from these queues");
+        // Same coalescing rule as Dispatcher::drive.
+        let waiting = queue.iter().take_while(|q| q.arrival_ms <= issue).count();
+        let take = dispatch.take(waiting, batching);
+        let batch: Vec<Query> = (0..take).map(|_| queue.pop_front().unwrap()).collect();
+        let refs: Vec<&Query> = batch.iter().collect();
+        let evs = session.submit_batch(&refs)?;
+        for ev in &evs {
+            part.observe_shard_outcome(me, ev);
+        }
+        if foreign.contains(&task) {
+            part.note_steal(me);
+        }
+        events.extend(evs);
+        batches += 1;
+    }
+    Ok((part, events, batches))
 }
 
 /// Per-shard queueing backlog as admission sees it: per task, the

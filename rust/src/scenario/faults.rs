@@ -295,16 +295,22 @@ impl FaultProfile {
             let at = format!("expects[{i}]");
             match e {
                 Expect::MinCompleted { task, at_least } => {
-                    let done = report
-                        .aggregate
-                        .requests
-                        .iter()
-                        .filter(|q| !q.dropped)
-                        .filter(|q| match task {
-                            Some(t) => &q.task == t,
-                            None => true,
-                        })
-                        .count();
+                    // Judged on the per-task outcome counters, not the
+                    // event log, so the clause also works in streaming
+                    // mode (`ServeOpts::record_events` off). A task's
+                    // outcome may be split across shard fragments
+                    // (steal/migration); each query completes exactly
+                    // once globally, so summing fragments is exact.
+                    let done = match task {
+                        Some(t) => report
+                            .aggregate
+                            .outcomes
+                            .iter()
+                            .filter(|o| &o.task == t)
+                            .map(|o| o.queries_completed)
+                            .sum::<usize>(),
+                        None => report.aggregate.total_queries,
+                    };
                     if done < *at_least {
                         let scope = match task {
                             Some(t) => format!("task {t:?}"),

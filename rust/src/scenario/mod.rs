@@ -218,6 +218,14 @@ pub struct PlannerConfig {
     pub saturation_slack: f64,
     /// Bounded re-sharding: at most this many migrations per phase.
     pub max_migrations: usize,
+    /// Epoch length (virtual ms) for the threaded online drive. `0.0`
+    /// (the default) keeps the classic per-batch sequential drive;
+    /// any positive value switches `ShardedServer::run_online` to the
+    /// epoch-barrier protocol: shards run one epoch window each on
+    /// their own OS thread, then meet at a lockstep barrier where the
+    /// coordinator merges telemetry, steals, redirects and replans.
+    /// Results are deterministic and independent of thread scheduling.
+    pub epoch_ms: f64,
 }
 
 impl Default for PlannerConfig {
@@ -231,6 +239,7 @@ impl Default for PlannerConfig {
             horizon_ms: 250.0,
             saturation_slack: 4.0,
             max_migrations: 1,
+            epoch_ms: 0.0,
         }
     }
 }
@@ -636,6 +645,7 @@ impl Scenario {
                         "max_migrations",
                         Json::Num(self.planner.max_migrations as f64),
                     ),
+                    ("epoch_ms", Json::Num(self.planner.epoch_ms)),
                 ]),
             ),
             (
@@ -867,6 +877,10 @@ impl Scenario {
                     max_migrations: match p.get("max_migrations") {
                         None => d.max_migrations,
                         Some(x) => x.as_usize().context("planner.max_migrations")?,
+                    },
+                    epoch_ms: match p.get("epoch_ms") {
+                        None => d.epoch_ms,
+                        Some(x) => x.as_f64().context("planner.epoch_ms")?,
                     },
                 }
             }

@@ -40,14 +40,14 @@
 //! assert_eq!(report.total_batches, 3, "unbatched: one batch per query");
 //! ```
 
-use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
 use crate::baselines::{self, Policy};
 use crate::coordinator::{Coordinator, Prepared, ServeOpts};
-use crate::metrics::{RequestOutcome, RunReport, TaskOutcome};
+use crate::metrics::{QuantileSketch, RequestOutcome, RunReport, TaskOutcome};
 use crate::profiler::TaskProfile;
 use crate::runtime::Runtime;
 use crate::soc::{BlobId, LatencyModel, Processor, SocSim};
@@ -153,7 +153,7 @@ impl<'a> ServerBuilder<'a> {
         if let Some(rt) = self.runtime {
             coord = coord.with_runtime(rt);
         }
-        Server { coord, opts: self.opts, plan_cache: RefCell::new(BTreeMap::new()) }
+        Server { coord, opts: self.opts, plan_cache: Mutex::new(BTreeMap::new()) }
     }
 }
 
@@ -195,8 +195,10 @@ pub struct Server<'a> {
     opts: ServeOpts,
     /// Planning is deterministic in (SLOs, universe) for fixed opts, so
     /// repeated runs of the same phase (e.g. sweeps over arrival
-    /// orders) reuse one `Prepared` instead of re-optimizing.
-    plan_cache: RefCell<BTreeMap<PlanKey, Prepared>>,
+    /// orders) reuse one `Prepared` instead of re-optimizing. A mutex
+    /// (not a `RefCell`) so `Server` is `Sync` and the sharded drive
+    /// can open sessions from shard threads.
+    plan_cache: Mutex<BTreeMap<PlanKey, Prepared>>,
 }
 
 impl<'a> Server<'a> {
@@ -226,11 +228,14 @@ impl<'a> Server<'a> {
         universe: &[Slo],
     ) -> Result<Prepared> {
         let key = plan_key(slos, universe);
-        if let Some(p) = self.plan_cache.borrow().get(&key) {
+        if let Some(p) = self.plan_cache.lock().expect("plan cache poisoned").get(&key) {
             return Ok(p.clone());
         }
         let p = self.coord.prepare(slos, universe, &self.opts)?;
-        self.plan_cache.borrow_mut().insert(key, p.clone());
+        self.plan_cache
+            .lock()
+            .expect("plan cache poisoned")
+            .insert(key, p.clone());
         Ok(p)
     }
 
@@ -376,8 +381,12 @@ impl<'a> Server<'a> {
                         .get(name)
                         .copied()
                         .unwrap_or(0.0),
-                    latencies: Vec::new(),
-                    queueing: Vec::new(),
+                    completed: 0,
+                    lat_sum: 0.0,
+                    lat_max: 0.0,
+                    queue_sum: 0.0,
+                    lat_sketch: QuantileSketch::default(),
+                    recent: VecDeque::with_capacity(FEEDBACK_WINDOW),
                     switches: 0,
                     dropped: 0,
                     batches: 0,
@@ -422,8 +431,23 @@ struct TaskState {
     ready_ms: f64,
     /// One-off latency charged to the next query (switch cost).
     pending_penalty_ms: f64,
-    latencies: Vec<f64>,
-    queueing: Vec<f64>,
+    /// Completed (admitted, served) queries.
+    completed: usize,
+    /// Running sum of service latencies — `lat_sum / completed` is
+    /// bit-identical to the mean over a retained vector, because
+    /// additions happen in the same (completion) order.
+    lat_sum: f64,
+    /// Largest service latency observed.
+    lat_max: f64,
+    /// Running sum of queueing delays.
+    queue_sum: f64,
+    /// GK quantile sketch over service latencies (p50/p95/p99 with the
+    /// ε rank-error bound, O(1/ε · log εn) memory).
+    lat_sketch: QuantileSketch,
+    /// The trailing `FEEDBACK_WINDOW` service latencies — all the
+    /// feedback switcher ever reads, kept as a bounded ring so the
+    /// unbounded latency vector can go away.
+    recent: VecDeque<f64>,
     switches: usize,
     dropped: usize,
     /// Dispatch batches served (a lone query counts as one batch).
@@ -568,7 +592,9 @@ impl<'s, 'a> Session<'s, 'a> {
             st.dropped += batch.len();
             let evs: Vec<RequestOutcome> =
                 batch.iter().map(|q| dropped_event(q, None)).collect();
-            self.requests.extend(evs.iter().cloned());
+            if self.server.opts.record_events {
+                self.requests.extend(evs.iter().cloned());
+            }
             return Ok(evs);
         };
 
@@ -670,7 +696,9 @@ impl<'s, 'a> Session<'s, 'a> {
         if admitted.is_empty() {
             let evs: Vec<RequestOutcome> =
                 events.into_iter().map(|e| e.expect("all dropped")).collect();
-            self.requests.extend(evs.iter().cloned());
+            if self.server.opts.record_events {
+                self.requests.extend(evs.iter().cloned());
+            }
             return Ok(evs);
         }
 
@@ -727,7 +755,9 @@ impl<'s, 'a> Session<'s, 'a> {
             }
             let evs: Vec<RequestOutcome> =
                 events.into_iter().map(|e| e.expect("all dropped")).collect();
-            self.requests.extend(evs.iter().cloned());
+            if self.server.opts.record_events {
+                self.requests.extend(evs.iter().cloned());
+            }
             return Ok(evs);
         }
 
@@ -740,8 +770,15 @@ impl<'s, 'a> Session<'s, 'a> {
             // query's inference), so it is excluded from queueing:
             // finish − arrival = queueing + service on an idle pipeline.
             let queueing_ms = (start_ms - effective_arrival - penalty).max(0.0);
-            st.latencies.push(service);
-            st.queueing.push(queueing_ms);
+            st.completed += 1;
+            st.lat_sum += service;
+            st.lat_max = st.lat_max.max(service);
+            st.queue_sum += queueing_ms;
+            st.lat_sketch.insert(service);
+            if st.recent.len() == FEEDBACK_WINDOW {
+                st.recent.pop_front();
+            }
+            st.recent.push_back(service);
             if service > slo.max_latency_ms {
                 st.misses += 1;
             }
@@ -773,7 +810,7 @@ impl<'s, 'a> Session<'s, 'a> {
         }
 
         // --- SLO feedback: switch variants when violating ---------------
-        let served = st.latencies.len();
+        let served = st.completed;
         if opts.feedback_switching
             && opts.policy == Policy::SparseLoom
             // Trigger whenever this batch crossed a window boundary —
@@ -782,9 +819,11 @@ impl<'s, 'a> Session<'s, 'a> {
             && served / FEEDBACK_WINDOW > (served - b) / FEEDBACK_WINDOW
         {
             if let Some(p) = coord.profiles.get(task) {
-                let recent =
-                    &st.latencies[st.latencies.len().saturating_sub(FEEDBACK_WINDOW)..];
-                let mean = stats::mean(recent);
+                // The ring holds exactly the trailing window, in the
+                // same front→back order the old tail slice had, so the
+                // mean is bit-identical to the retained-vector path.
+                let recent: Vec<f64> = st.recent.iter().copied().collect();
+                let mean = stats::mean(&recent);
                 if mean > slo.max_latency_ms {
                     if let Some(new_sel) = coord.switch_variant(
                         p,
@@ -834,7 +873,9 @@ impl<'s, 'a> Session<'s, 'a> {
             .into_iter()
             .map(|e| e.expect("one outcome per query"))
             .collect();
-        self.requests.extend(evs.iter().cloned());
+        if self.server.opts.record_events {
+            self.requests.extend(evs.iter().cloned());
+        }
         Ok(evs)
     }
 
@@ -876,7 +917,7 @@ impl<'s, 'a> Session<'s, 'a> {
             if st.batches == 0 {
                 1.0
             } else {
-                st.latencies.len() as f64 / st.batches as f64
+                st.completed as f64 / st.batches as f64
             }
         })
     }
@@ -1142,8 +1183,12 @@ impl<'s, 'a> Session<'s, 'a> {
                 accuracy,
                 ready_ms: ready_floor_ms,
                 pending_penalty_ms: penalty,
-                latencies: Vec::new(),
-                queueing: Vec::new(),
+                completed: 0,
+                lat_sum: 0.0,
+                lat_max: 0.0,
+                queue_sum: 0.0,
+                lat_sketch: QuantileSketch::default(),
+                recent: VecDeque::with_capacity(FEEDBACK_WINDOW),
                 switches: 0,
                 dropped: 0,
                 batches: 0,
@@ -1182,14 +1227,16 @@ impl<'s, 'a> Session<'s, 'a> {
         let mut total_queries = 0usize;
         let mut total_dropped = 0usize;
         let mut total_batches = 0usize;
+        let mut slo_miss_count = 0usize;
         for name in &self.tasks {
             let st = &self.states[name];
             let slo = &self.slos[name];
-            total_queries += st.latencies.len();
+            total_queries += st.completed;
             total_dropped += st.dropped;
             total_batches += st.batches;
-            if !st.latencies.is_empty() {
-                let miss_rate = st.misses as f64 / st.latencies.len() as f64;
+            slo_miss_count += st.misses;
+            if st.completed > 0 {
+                let miss_rate = st.misses as f64 / st.completed as f64;
                 slo_forecast.insert(
                     name.clone(),
                     forecast::project_violation_rate(
@@ -1198,19 +1245,22 @@ impl<'s, 'a> Session<'s, 'a> {
                     ),
                 );
             }
+            let n = st.completed as f64;
             outcomes.push(TaskOutcome {
                 task: name.clone(),
                 accuracy: st.accuracy,
-                mean_latency_ms: stats::mean(&st.latencies),
-                p50_latency_ms: stats::percentile(&st.latencies, 50.0),
-                p95_latency_ms: stats::percentile(&st.latencies, 95.0),
-                p99_latency_ms: stats::percentile(&st.latencies, 99.0),
-                mean_queueing_ms: stats::mean(&st.queueing),
-                queries_completed: st.latencies.len(),
+                mean_latency_ms: if st.completed == 0 { 0.0 } else { st.lat_sum / n },
+                max_latency_ms: st.lat_max,
+                p50_latency_ms: st.lat_sketch.query(50.0),
+                p95_latency_ms: st.lat_sketch.query(95.0),
+                p99_latency_ms: st.lat_sketch.query(99.0),
+                mean_queueing_ms: if st.completed == 0 { 0.0 } else { st.queue_sum / n },
+                queries_completed: st.completed,
                 queries_dropped: st.dropped,
                 batches: st.batches,
                 max_batch: st.max_batch,
                 slo_accuracy: slo.min_accuracy,
+                slo_misses: st.misses,
                 slo_latency_ms: slo.max_latency_ms,
             });
         }
@@ -1232,6 +1282,8 @@ impl<'s, 'a> Session<'s, 'a> {
             cold_compiles: self.cold_compiles,
             warm_loads: self.warm_loads,
             slo_forecast,
+            slo_miss_count,
+            record_events: self.server.opts.record_events,
             requests: self.requests,
             downtime_ms,
             throttled_ms: self.sim.throttled_ms(),

@@ -148,6 +148,25 @@ pub struct ShardStats {
     pub stolen_batches: u64,
 }
 
+impl ShardStats {
+    /// Fold another accounting fragment into this one: the cumulative
+    /// counters (busy time, completions, drops, stolen batches) sum.
+    /// The backlog gauge and its trend are point-in-time *observations*
+    /// owned by whoever calls [`Telemetry::observe_backlog`] — a
+    /// counter fragment carries none, so they are left untouched.
+    ///
+    /// This is what makes shard accounting mergeable: the threaded
+    /// sharded drive hands each shard thread its own scratch
+    /// [`Telemetry`] part and folds the parts back at every epoch
+    /// barrier ([`Telemetry::merge`]) in shard-index order.
+    pub fn absorb(&mut self, other: &ShardStats) {
+        self.busy_ms += other.busy_ms;
+        self.completed += other.completed;
+        self.dropped += other.dropped;
+        self.stolen_batches += other.stolen_batches;
+    }
+}
+
 /// The telemetry handle: feed it [`RequestOutcome`]s (or raw arrivals)
 /// and read rate/hotness/load estimates back. All state is windowed or
 /// exponentially discounted — memory is O(tasks + shards + window).
@@ -203,6 +222,17 @@ impl Telemetry {
     /// updates the task's arrival estimators and the shard's
     /// completion/occupancy counters.
     pub fn observe_outcome(&mut self, shard: usize, ev: &RequestOutcome) {
+        self.observe_task_outcome(ev);
+        self.observe_shard_outcome(shard, ev);
+    }
+
+    /// The task-estimator half of [`Telemetry::observe_outcome`]: feeds
+    /// the arrival EWMAs/forecaster and the task's completion counters
+    /// without touching any shard's counters. The epoch-barrier drive
+    /// calls this centrally — per worker, in shard-index order — at
+    /// every barrier, because EWMA estimators depend on feed order and
+    /// therefore stay coordinator-owned (they cannot merge).
+    pub fn observe_task_outcome(&mut self, ev: &RequestOutcome) {
         self.observe_arrival(&ev.task, ev.arrival_ms);
         if ev.dropped {
             if let Some(st) = self.tasks.get_mut(&ev.task) {
@@ -215,6 +245,15 @@ impl Telemetry {
                 st.slo_misses += 1;
             }
         }
+    }
+
+    /// The shard-counter half of [`Telemetry::observe_outcome`]:
+    /// updates only `shard`'s completion/drop/occupancy counters,
+    /// leaving the per-task arrival estimators alone. Shard threads in
+    /// the epoch-barrier drive call this on their scratch telemetry
+    /// part (counters merge; EWMA estimators do not), and the
+    /// coordinator feeds the task half centrally at the barrier.
+    pub fn observe_shard_outcome(&mut self, shard: usize, ev: &RequestOutcome) {
         if let Some(sh) = self.shards.get_mut(shard) {
             if ev.dropped {
                 sh.dropped += 1;
@@ -222,6 +261,17 @@ impl Telemetry {
                 sh.completed += 1;
                 sh.busy_ms += ev.service_ms;
             }
+        }
+    }
+
+    /// Fold a scratch telemetry `part` (shard counters accumulated by
+    /// one worker between barriers) into this instance. Only the
+    /// per-shard counters merge — see [`ShardStats::absorb`]. Task
+    /// estimators are EWMAs over a global arrival order and cannot be
+    /// merged pairwise, so the coordinator owns them exclusively.
+    pub fn merge(&mut self, part: &Telemetry) {
+        for (mine, theirs) in self.shards.iter_mut().zip(part.shards.iter()) {
+            mine.absorb(theirs);
         }
     }
 
@@ -560,6 +610,49 @@ mod tests {
         t.observe_outcome(9, &ev(3, 30.0, false));
         t.observe_backlog(9, 1.0, 30.0);
         t.note_steal(9);
+    }
+
+    #[test]
+    fn merge_folds_shard_counters_and_keeps_own_gauges() {
+        use crate::metrics::RequestOutcome;
+        let ev = |id: u64, arrival: f64, dropped: bool| RequestOutcome {
+            id,
+            task: "a".into(),
+            arrival_ms: arrival,
+            start_ms: arrival,
+            finish_ms: arrival + 4.0,
+            service_ms: 4.0,
+            queueing_ms: 0.0,
+            dropped,
+            slo_ok: if dropped { None } else { Some(true) },
+        };
+        let mut coord = Telemetry::new(2);
+        coord.observe_backlog(0, 17.0, 100.0);
+        coord.note_steal(0);
+        // A worker part: shard-half only, as the threaded drive does.
+        let mut part = Telemetry::new(2);
+        part.observe_shard_outcome(0, &ev(0, 0.0, false));
+        part.observe_shard_outcome(0, &ev(1, 5.0, false));
+        part.observe_shard_outcome(1, &ev(2, 9.0, true));
+        part.note_steal(1);
+        // The shard half never touches the task estimators.
+        assert!(part.rate_qps("a").is_none());
+        assert!(part.mean_service_ms("a").is_none());
+        coord.merge(&part);
+        let sh = coord.shards();
+        assert_eq!(sh[0].completed, 2);
+        assert!((sh[0].busy_ms - 8.0).abs() < 1e-12);
+        assert_eq!(sh[0].stolen_batches, 1);
+        assert_eq!(sh[1].dropped, 1);
+        assert_eq!(sh[1].stolen_batches, 1);
+        // Gauges belong to the coordinator and survive the merge.
+        assert!((sh[0].backlog_ms - 17.0).abs() < 1e-12);
+        // Merging twice doubles counters (merge is additive).
+        coord.merge(&part);
+        assert_eq!(coord.shards()[0].completed, 4);
+        // Mismatched widths fold the common prefix rather than panic.
+        coord.merge(&Telemetry::new(5));
+        assert_eq!(coord.shards().len(), 2);
     }
 
     #[test]

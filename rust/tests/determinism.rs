@@ -175,6 +175,180 @@ fn fault_lab_crash_and_throttle_run_is_deterministic() {
 }
 
 #[test]
+fn threaded_static_shards_match_sequential_bit_for_bit() {
+    // The static sharded drive runs each shard on its own OS thread by
+    // default (`ServeOpts::parallel`). Shards are fully independent
+    // there, so the threaded run must be bit-identical to the
+    // sequential loop — not "close", identical.
+    let (zoo, lm, profiles, sharding) = fixtures::fleet(4, 8);
+    let tasks = fixtures::task_names(&zoo);
+    let slos = fixtures::slos(&zoo, 0.5, 80.0);
+    let sc = Scenario::poisson(&tasks, slos, 30.0, 1_500.0)
+        .with_seed(5)
+        .with_dispatch(Dispatch::batched(4))
+        .with_sharding(sharding);
+    let run = |parallel: bool| -> ShardedReport {
+        let opts = ServeOpts { parallel, ..Default::default() };
+        ShardedServer::build(&zoo, &lm, &profiles, opts, sc.sharding.clone())
+            .unwrap()
+            .run(&sc)
+            .unwrap()
+    };
+    let threaded = run(true);
+    let sequential = run(false);
+    assert_identical(&threaded.aggregate, &sequential.aggregate);
+    assert_eq!(threaded.per_shard.len(), sequential.per_shard.len());
+    for (x, y) in threaded.per_shard.iter().zip(&sequential.per_shard) {
+        assert_identical(x, y);
+    }
+    for (x, y) in threaded
+        .budget_utilization
+        .iter()
+        .zip(&sequential.budget_utilization)
+    {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert!(threaded.aggregate.total_queries > 0, "the run must actually serve");
+    // And the threaded drive is stable run-to-run.
+    let again = run(true);
+    assert_identical(&threaded.aggregate, &again.aggregate);
+}
+
+#[test]
+fn epoch_barrier_drive_matches_sequential_under_faults() {
+    // The epoch-barrier online drive (`PlannerConfig::epoch_ms`) keeps
+    // all cross-shard decisions at barriers, so the threaded window
+    // execution must replay bit-identically against the sequential
+    // fallback — including under a crash window, a throttle curve, and
+    // priced links, and across a JSON round-trip of the scenario.
+    let (zoo, lm, profiles) = fixtures::quartet();
+    let tasks = fixtures::task_names(&zoo);
+    let slos = fixtures::slos(&zoo, 0.5, 60.0);
+    let map = BTreeMap::from([
+        ("alpha".to_string(), 0),
+        ("beta".to_string(), 0),
+        ("delta".to_string(), 0),
+        ("gamma".to_string(), 1),
+    ]);
+    let faults = FaultProfile {
+        crashes: vec![CrashWindow {
+            shard: 0,
+            start_ms: 400.0,
+            end_ms: 900.0,
+            rejoin: RejoinMode::Warm,
+        }],
+        degradations: vec![Degradation {
+            shard: 1,
+            start_ms: 200.0,
+            ramp_ms: 400.0,
+            factor: 1.5,
+        }],
+        throttle: Some(ThrottleCurve {
+            steps: vec![ThrottleStep { busy_ms: 100.0, factor: 1.3 }],
+        }),
+        links: Some(LinkMatrix { transfer_ms: vec![vec![0.0, 2.0], vec![2.0, 0.0]] }),
+        expects: vec![Expect::MinCompleted { task: None, at_least: 1 }],
+    };
+    let sc = Scenario::bursty(&tasks, slos, 4.0, 100.0, 500.0, 3_000.0)
+        .with_seed(11)
+        .with_admission(Admission::Deadline { slack: 2.0 })
+        .with_dispatch(Dispatch::batched(4))
+        .with_sharding(Sharding::explicit(map, 2))
+        .with_planner(PlannerConfig {
+            epoch_ms: 25.0,
+            max_migrations: 2,
+            ..PlannerConfig::online()
+        })
+        .with_faults(faults);
+    let run = |parallel: bool, s: &Scenario| -> ShardedReport {
+        let opts = ServeOpts { batch_hint: 4.0, parallel, ..Default::default() };
+        ShardedServer::build(&zoo, &lm, &profiles, opts, s.sharding.clone())
+            .unwrap()
+            .run(s)
+            .unwrap()
+    };
+    let threaded = run(true, &sc);
+    let sequential = run(false, &sc);
+    let round_trip = run(true, &json_round_trip(&sc));
+    for other in [&sequential, &round_trip] {
+        assert_eq!(threaded.replans, other.replans);
+        assert_eq!(threaded.migrations, other.migrations);
+        assert_eq!(threaded.steals, other.steals);
+        assert_eq!(threaded.link_cost_ms.to_bits(), other.link_cost_ms.to_bits());
+        assert_identical(&threaded.aggregate, &other.aggregate);
+        assert_eq!(threaded.per_shard.len(), other.per_shard.len());
+        for (x, y) in threaded.per_shard.iter().zip(&other.per_shard) {
+            assert_identical(x, y);
+        }
+    }
+    assert!(threaded.aggregate.total_queries > 0, "the run must actually serve");
+}
+
+#[test]
+fn streaming_metrics_match_retained_run_without_event_log() {
+    // With `record_events` off the run keeps no per-request events
+    // (retention is O(1) in request count), yet every aggregate the
+    // report exposes — counters, means, maxima, sketch percentiles,
+    // SLO-miss counts — is bit-identical to the retained run.
+    let (zoo, lm, profiles, sharding) = fixtures::fleet(2, 4);
+    let tasks = fixtures::task_names(&zoo);
+    let sc = Scenario::poisson(&tasks, fixtures::slos(&zoo, 0.5, 40.0), 40.0, 1_500.0)
+        .with_seed(3)
+        .with_dispatch(Dispatch::batched(4))
+        .with_sharding(sharding);
+    let run = |record_events: bool| -> ShardedReport {
+        let opts = ServeOpts { record_events, ..Default::default() };
+        ShardedServer::build(&zoo, &lm, &profiles, opts, sc.sharding.clone())
+            .unwrap()
+            .run(&sc)
+            .unwrap()
+    };
+    let retained = run(true);
+    let streaming = run(false);
+    assert!(retained.aggregate.total_queries > 0, "the run must actually serve");
+    assert!(!retained.aggregate.requests.is_empty());
+    assert!(retained.aggregate.record_events);
+    assert!(streaming.aggregate.requests.is_empty());
+    assert!(!streaming.aggregate.record_events);
+    for p in &streaming.per_shard {
+        assert!(p.requests.is_empty(), "streaming shard retained events");
+    }
+    assert_eq!(retained.aggregate.total_queries, streaming.aggregate.total_queries);
+    assert_eq!(retained.aggregate.total_dropped, streaming.aggregate.total_dropped);
+    assert_eq!(retained.aggregate.total_batches, streaming.aggregate.total_batches);
+    assert_eq!(
+        retained.aggregate.slo_miss_count,
+        streaming.aggregate.slo_miss_count
+    );
+    assert_eq!(
+        retained.aggregate.makespan_ms.to_bits(),
+        streaming.aggregate.makespan_ms.to_bits()
+    );
+    assert_eq!(retained.aggregate.outcomes.len(), streaming.aggregate.outcomes.len());
+    for (x, y) in retained
+        .aggregate
+        .outcomes
+        .iter()
+        .zip(&streaming.aggregate.outcomes)
+    {
+        assert_eq!(x.task, y.task);
+        assert_eq!(x.queries_completed, y.queries_completed);
+        assert_eq!(x.queries_dropped, y.queries_dropped);
+        assert_eq!(x.slo_misses, y.slo_misses);
+        assert_eq!(x.mean_latency_ms.to_bits(), y.mean_latency_ms.to_bits(), "{}", x.task);
+        assert_eq!(x.max_latency_ms.to_bits(), y.max_latency_ms.to_bits(), "{}", x.task);
+        assert_eq!(x.p50_latency_ms.to_bits(), y.p50_latency_ms.to_bits(), "{}", x.task);
+        assert_eq!(x.p99_latency_ms.to_bits(), y.p99_latency_ms.to_bits(), "{}", x.task);
+        assert_eq!(
+            x.mean_queueing_ms.to_bits(),
+            y.mean_queueing_ms.to_bits(),
+            "{}",
+            x.task
+        );
+    }
+}
+
+#[test]
 fn single_server_predictive_run_is_deterministic() {
     let (zoo, lm, profiles) = fixtures::trio();
     let tasks = fixtures::task_names(&zoo);

@@ -95,6 +95,45 @@ smoke() {
     fi
 
     lint_smoke "$bin"
+    bench_smoke "$bin"
+}
+
+# Fleet bench smoke + throughput regression gate: `sparseloom bench`
+# must sweep the fleet fixture, write its JSON record, keep retention
+# O(1) (no request events with streaming metrics), and clear the
+# committed speedup floors in benchmarks/BENCH_fleet.baseline.json.
+# Small sizes keep this fast; the floors are conservative (see the
+# baseline's note field) so slower CI machines do not flake.
+bench_smoke() {
+    local bin="$1"
+    local out tmp
+    echo "== [tier 2] sparseloom bench (fleet sweep + regression gate) =="
+    tmp="$(mktemp)"
+    if ! out="$("$bin" bench --tasks 8 --rate-qps 30 --horizon-ms 1200 \
+        --shards 1,4 --iters 2 --out "$tmp" \
+        --gate benchmarks/BENCH_fleet.baseline.json)"; then
+        printf '%s\n' "$out"
+        echo "bench smoke FAILED: bench exited nonzero (gate regression?)" >&2
+        rm -f "$tmp"
+        exit 1
+    fi
+    printf '%s\n' "$out"
+    if ! grep -q "throughput gate OK" <<<"$out"; then
+        echo "bench smoke FAILED: regression gate did not report OK" >&2
+        rm -f "$tmp"
+        exit 1
+    fi
+    if ! grep -q '"speedup_vs_single"' "$tmp"; then
+        echo "bench smoke FAILED: bench JSON has no speedup record" >&2
+        rm -f "$tmp"
+        exit 1
+    fi
+    if grep -q '"events_retained": [1-9]' "$tmp"; then
+        echo "bench smoke FAILED: streaming bench run retained request events" >&2
+        rm -f "$tmp"
+        exit 1
+    fi
+    rm -f "$tmp"
 }
 
 # sparselint stage: every checked-in example scenario must lint clean
