@@ -20,6 +20,21 @@
 //!   multi-phase log, where per-phase clocks restart and id order is no
 //!   longer submission order.
 //!
+//! Traced runs (`serve --trace --verify`) get three more checks over
+//! the canonical trace, proving the audit trail tells the same story
+//! as the scoreboard it rode along with:
+//!
+//! - **SL-INV-006, trace span sanity**: every record is finite, spans
+//!   run forward, and each request's queue → exec → done records meet
+//!   edge-to-edge in virtual time (skipped for (task, id) pairs that
+//!   appear in more than one lifecycle — merged multi-phase traces,
+//!   mirroring SL-INV-005).
+//! - **SL-INV-007, trace conservation**: every `TR-REQ-ARRIVE`
+//!   resolves to exactly one done/shed/drop, and the resolution counts
+//!   equal the report totals.
+//! - **SL-INV-008, trace/metric agreement**: the trace's SLO-miss,
+//!   recovery, and throttle-debt tallies reproduce the report counters.
+//!
 //! Dropped requests are excluded from the ordering checks: a drop is
 //! decided at arrival (its event pins `start = finish = arrival`), so
 //! it legally "finishes" before earlier-admitted queries complete.
@@ -31,6 +46,7 @@
 use std::collections::BTreeMap;
 
 use crate::metrics::{RequestOutcome, RunReport, ShardedReport};
+use crate::trace::{self, TraceEvent};
 
 use super::{Diagnostic, Report};
 
@@ -124,7 +140,205 @@ pub fn verify_report(report: &RunReport) -> Report {
     let mut r = verify_events(&report.requests);
     check_conservation(report, &mut r);
     check_metric_finiteness(report, &mut r);
+    check_trace(report, &mut r);
     r
+}
+
+/// Trace-consistency pass, run only when the report carries a trace
+/// (`serve --trace`): span sanity, request conservation, and agreement
+/// with the streaming counters.
+fn check_trace(report: &RunReport, r: &mut Report) {
+    if report.trace.is_empty() {
+        return;
+    }
+    check_trace_spans(&report.trace, r);
+    check_trace_conservation(report, r);
+    check_trace_agreement(report, r);
+}
+
+/// `SL-INV-006`: every trace record is finite and runs forward, and
+/// each request's QUEUE → EXEC → DONE records meet edge-to-edge in
+/// virtual time. One diagnostic per code (or task) per kind, matching
+/// the event-sanity style.
+fn check_trace_spans(events: &[TraceEvent], r: &mut Report) {
+    let mut nan_flagged: BTreeMap<&str, ()> = BTreeMap::new();
+    let mut span_flagged: BTreeMap<&str, ()> = BTreeMap::new();
+    for ev in events {
+        if !ev.begin_ms.is_finite()
+            || !ev.end_ms.is_finite()
+            || ev.args.iter().any(|(_, v)| !v.is_finite())
+        {
+            if nan_flagged.insert(ev.code.as_str(), ()).is_none() {
+                r.push(Diagnostic::error(
+                    "SL-INV-006",
+                    format!("trace {}", ev.code),
+                    "trace record carries a non-finite time or argument",
+                ));
+            }
+            continue;
+        }
+        if ev.end_ms < ev.begin_ms - TOL
+            && span_flagged.insert(ev.code.as_str(), ()).is_none()
+        {
+            r.push(Diagnostic::error(
+                "SL-INV-006",
+                format!("trace {}", ev.code),
+                format!(
+                    "span runs backwards: begin {} ms, end {} ms",
+                    ev.begin_ms, ev.end_ms
+                ),
+            ));
+        }
+    }
+    // Lifecycle linkage, keyed by (task, id). A pair that appears in
+    // more than one lifecycle is a merged multi-phase trace (per-phase
+    // ids restart) and is skipped, mirroring SL-INV-005.
+    type Lifecycle<'a> =
+        (Vec<&'a TraceEvent>, Vec<&'a TraceEvent>, Vec<&'a TraceEvent>);
+    let mut groups: BTreeMap<(&str, u64), Lifecycle> = BTreeMap::new();
+    for ev in events {
+        let Some(id) = ev.id else { continue };
+        let slot = groups.entry((ev.task.as_str(), id)).or_default();
+        match ev.code.as_str() {
+            trace::TR_REQ_QUEUE => slot.0.push(ev),
+            trace::TR_REQ_EXEC => slot.1.push(ev),
+            trace::TR_REQ_DONE => slot.2.push(ev),
+            _ => {}
+        }
+    }
+    let mut seam_flagged: BTreeMap<&str, ()> = BTreeMap::new();
+    for ((task, id), (queue, exec, done)) in groups {
+        if queue.len() > 1 || exec.len() > 1 || done.len() > 1 {
+            continue;
+        }
+        let mut broken = None;
+        if let (Some(q), Some(x)) = (queue.first(), exec.first()) {
+            if (q.end_ms - x.begin_ms).abs() > TOL {
+                broken = Some(format!(
+                    "queue ends at {} ms but exec begins at {} ms",
+                    q.end_ms, x.begin_ms
+                ));
+            }
+        }
+        if broken.is_none() {
+            if let (Some(x), Some(d)) = (exec.first(), done.first()) {
+                if (d.begin_ms - x.end_ms).abs() > TOL {
+                    broken = Some(format!(
+                        "exec ends at {} ms but done is stamped at {} ms",
+                        x.end_ms, d.begin_ms
+                    ));
+                }
+            }
+        }
+        if let Some(msg) = broken {
+            if seam_flagged.insert(task, ()).is_none() {
+                r.push(Diagnostic::error(
+                    "SL-INV-006",
+                    format!("task {task:?}"),
+                    format!("query {id} lifecycle seam broken: {msg}"),
+                ));
+            }
+        }
+    }
+}
+
+/// `SL-INV-007`: request conservation in the trace — every arrival
+/// resolves exactly once, and the resolutions equal the report totals.
+fn check_trace_conservation(report: &RunReport, r: &mut Report) {
+    let count =
+        |code: &str| report.trace.iter().filter(|e| e.code == code).count();
+    let arrived = count(trace::TR_REQ_ARRIVE);
+    let done = count(trace::TR_REQ_DONE);
+    let shed = count(trace::TR_REQ_SHED);
+    let dropped = count(trace::TR_REQ_DROP);
+    if arrived != done + shed + dropped {
+        r.push(Diagnostic::error(
+            "SL-INV-007",
+            "trace",
+            format!(
+                "{arrived} arrival(s) resolved to {done} done + {shed} shed + \
+                 {dropped} drop(s): requests leaked or double-resolved"
+            ),
+        ));
+    }
+    if done != report.total_queries {
+        r.push(Diagnostic::error(
+            "SL-INV-007",
+            "trace",
+            format!(
+                "trace holds {done} completion(s), report says {}",
+                report.total_queries
+            ),
+        ));
+    }
+    if shed + dropped != report.total_dropped {
+        r.push(Diagnostic::error(
+            "SL-INV-007",
+            "trace",
+            format!(
+                "trace holds {shed} shed(s) + {dropped} drop(s), report says \
+                 {} dropped",
+                report.total_dropped
+            ),
+        ));
+    }
+}
+
+/// `SL-INV-008`: the trace must reproduce the report's SLO and fault
+/// counters — the audit trail and the scoreboard tell one story.
+fn check_trace_agreement(report: &RunReport, r: &mut Report) {
+    let exec_misses = report
+        .trace
+        .iter()
+        .filter(|e| e.code == trace::TR_REQ_EXEC && e.arg("slo_ok") == Some(0.0))
+        .count();
+    if exec_misses != report.slo_miss_count {
+        r.push(Diagnostic::error(
+            "SL-INV-008",
+            "trace",
+            format!(
+                "trace holds {exec_misses} SLO-missing exec span(s), the \
+                 streaming counter says {}",
+                report.slo_miss_count
+            ),
+        ));
+    }
+    let recovers = report
+        .trace
+        .iter()
+        .filter(|e| e.code == trace::TR_CTL_RECOVER)
+        .count();
+    if recovers != report.recoveries.len() {
+        r.push(Diagnostic::error(
+            "SL-INV-008",
+            "trace",
+            format!(
+                "trace holds {recovers} recovery record(s), the report holds {}",
+                report.recoveries.len()
+            ),
+        ));
+    }
+    let throttle_sum: f64 = report
+        .trace
+        .iter()
+        .filter(|e| e.code == trace::TR_CTL_THROTTLE)
+        .filter_map(|e| e.arg("extra_ms"))
+        .sum();
+    // Per-batch throttle records swallow float noise below 1e-9, and
+    // each booking's start/end subtraction rounds at the clock's
+    // magnitude — the tolerance widens with the batch count.
+    let tol = TOL + 1e-9 * report.total_batches as f64;
+    if (throttle_sum - report.throttled_ms).abs() > tol {
+        r.push(Diagnostic::error(
+            "SL-INV-008",
+            "trace",
+            format!(
+                "trace throttle debt sums to {throttle_sum} ms, the SoC clock \
+                 banked {} ms",
+                report.throttled_ms
+            ),
+        ));
+    }
 }
 
 fn check_conservation(report: &RunReport, r: &mut Report) {
@@ -386,6 +600,7 @@ fn merge_prefixed(into: &mut Report, sub: Report, prefix: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::ServeOpts;
     use crate::fixtures;
     use crate::scenario::{Scenario, Server};
 
@@ -533,6 +748,149 @@ mod tests {
             "{}",
             r.render_text()
         );
+    }
+
+    fn tev(
+        code: &str,
+        id: Option<u64>,
+        begin: f64,
+        end: f64,
+        args: &[(&str, f64)],
+    ) -> TraceEvent {
+        TraceEvent::new(code, 0, "t", id, begin, end, args)
+    }
+
+    /// One served query (an SLO miss), one shed, one drop, plus the
+    /// fault-lab audit records — all consistent with the counters.
+    fn traced_report() -> RunReport {
+        RunReport {
+            total_queries: 1,
+            total_dropped: 2,
+            total_batches: 1,
+            slo_miss_count: 1,
+            throttled_ms: 2.5,
+            recoveries: vec![4.0],
+            trace: vec![
+                tev(trace::TR_REQ_ARRIVE, Some(0), 0.0, 0.0, &[]),
+                tev(trace::TR_REQ_ADMIT, Some(0), 0.0, 0.0, &[]),
+                tev(trace::TR_REQ_ARRIVE, Some(1), 1.0, 1.0, &[]),
+                tev(trace::TR_REQ_SHED, Some(1), 1.0, 1.0, &[]),
+                tev(trace::TR_REQ_ARRIVE, Some(2), 2.0, 2.0, &[]),
+                tev(trace::TR_REQ_DROP, Some(2), 2.0, 2.0, &[("cause", 1.0)]),
+                tev(trace::TR_REQ_QUEUE, Some(0), 0.0, 3.0, &[]),
+                tev(trace::TR_REQ_EXEC, Some(0), 3.0, 9.0, &[("slo_ok", 0.0)]),
+                tev(trace::TR_REQ_DONE, Some(0), 9.0, 9.0, &[]),
+                tev(trace::TR_CTL_THROTTLE, None, 3.0, 9.0, &[("extra_ms", 2.5)]),
+                tev(trace::TR_CTL_RECOVER, None, 9.0, 9.0, &[("latency_ms", 4.0)]),
+            ],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn consistent_trace_is_clean() {
+        let r = verify_report(&traced_report());
+        assert!(r.is_empty(), "{}", r.render_text());
+    }
+
+    #[test]
+    fn real_traced_run_satisfies_trace_invariants() {
+        let (zoo, lm, profiles) = fixtures::trio();
+        let server = Server::builder(&zoo, &lm, &profiles)
+            .opts(ServeOpts { trace: true, ..Default::default() })
+            .build();
+        let sc = Scenario::closed_loop(
+            &fixtures::task_names(&zoo),
+            fixtures::slos(&zoo, 0.5, 1e9),
+        )
+        .with_queries(20);
+        let report = server.run(&sc).unwrap();
+        assert!(!report.trace.is_empty(), "tracing was on");
+        let r = verify_report(&report);
+        assert!(r.is_empty(), "{}", r.render_text());
+    }
+
+    #[test]
+    fn trace_conservation_mismatch_is_flagged() {
+        // A completion the trace never saw.
+        let mut report = traced_report();
+        report.total_queries = 2;
+        let r = verify_report(&report);
+        assert!(codes(&r).contains(&"SL-INV-007"), "{}", r.render_text());
+        // A leaked arrival: never resolved to done/shed/drop.
+        let mut report = traced_report();
+        report.trace.push(tev(trace::TR_REQ_ARRIVE, Some(3), 10.0, 10.0, &[]));
+        let r = verify_report(&report);
+        assert!(codes(&r).contains(&"SL-INV-007"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn trace_span_defects_are_flagged() {
+        // A backwards span.
+        let mut report = traced_report();
+        report.trace.push(tev(trace::TR_CTL_CRASH, None, 9.0, 3.0, &[]));
+        let r = verify_report(&report);
+        assert!(codes(&r).contains(&"SL-INV-006"), "{}", r.render_text());
+        // A non-finite argument.
+        let mut report = traced_report();
+        report.trace.push(tev(
+            trace::TR_CTL_PLAN,
+            None,
+            0.0,
+            0.0,
+            &[("penalty_ms", f64::NAN)],
+        ));
+        let r = verify_report(&report);
+        assert!(codes(&r).contains(&"SL-INV-006"), "{}", r.render_text());
+        // A broken queue → exec seam.
+        let mut report = traced_report();
+        report.trace[6].end_ms = 2.0; // queue now ends before exec begins
+        let r = verify_report(&report);
+        assert!(codes(&r).contains(&"SL-INV-006"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn multi_phase_duplicate_trace_lifecycles_skip_linkage() {
+        // Two lifecycles for (t, 0) with incompatible seams: a merged
+        // multi-phase trace, not an engine defect.
+        let mut report = traced_report();
+        report.trace.push(tev(trace::TR_REQ_QUEUE, Some(0), 20.0, 25.0, &[]));
+        report.trace.push(tev(
+            trace::TR_REQ_EXEC,
+            Some(0),
+            26.0, // off by 1 ms from the second queue's end
+            30.0,
+            &[("slo_ok", 1.0)],
+        ));
+        // Keep conservation and the counters consistent.
+        report.trace.push(tev(trace::TR_REQ_ARRIVE, Some(0), 20.0, 20.0, &[]));
+        report.trace.push(tev(trace::TR_REQ_DONE, Some(0), 30.0, 30.0, &[]));
+        report.total_queries = 2;
+        let r = verify_report(&report);
+        assert!(
+            !codes(&r).contains(&"SL-INV-006"),
+            "duplicate lifecycles must skip the seam check: {}",
+            r.render_text()
+        );
+    }
+
+    #[test]
+    fn trace_counter_disagreement_is_flagged() {
+        // The trace says the exec made its SLO; the counter says miss.
+        let mut report = traced_report();
+        report.trace[7].args = vec![("slo_ok".into(), 1.0)];
+        let r = verify_report(&report);
+        assert!(codes(&r).contains(&"SL-INV-008"), "{}", r.render_text());
+        // A recovery the trace never recorded.
+        let mut report = traced_report();
+        report.recoveries.push(5.0);
+        let r = verify_report(&report);
+        assert!(codes(&r).contains(&"SL-INV-008"), "{}", r.render_text());
+        // Throttle debt missing from the audit trail.
+        let mut report = traced_report();
+        report.throttled_ms = 9.0;
+        let r = verify_report(&report);
+        assert!(codes(&r).contains(&"SL-INV-008"), "{}", r.render_text());
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub mod scenario;
 
 pub use feasibility::lint_feasibility;
 pub use scenario::lint_scenario;
+pub use scenario::trace_mode_gate;
 
 use anyhow::{bail, Result};
 

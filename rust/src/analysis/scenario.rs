@@ -728,6 +728,26 @@ fn lint_cross_layer(sc: &Scenario, r: &mut Report) {
     }
 }
 
+/// SL-XLY-010: tracing with request-event retention off. The trace
+/// itself is complete either way (the sink is independent of the
+/// retained `RequestOutcome` log), but the invariant verifier's
+/// trace-consistency pass cross-checks trace spans against that log —
+/// without it, a `--verify` replay cannot vouch for the trace. This is
+/// a run-mode gate (CLI flags, not scenario fields), so it lives
+/// outside [`lint_scenario`].
+pub fn trace_mode_gate(trace: bool, record_events: bool) -> Report {
+    let mut r = Report::new();
+    if trace && !record_events {
+        r.push(Diagnostic::warn(
+            "SL-XLY-010",
+            "serve --trace",
+            "tracing without event retention: pass --verify to retain request events \
+             and cross-check the trace against them",
+        ));
+    }
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1036,5 +1056,15 @@ mod tests {
         assert!(codes(&r).contains(&"SL-SCN-004"));
         let dup = sc.with_tasks(&["tiny".to_string(), "tiny".to_string()]);
         assert!(codes(&session_gate(&dup, 0, &profiles)).contains(&"SL-SCN-002"));
+    }
+
+    #[test]
+    fn trace_without_retention_warns() {
+        let r = trace_mode_gate(true, false);
+        assert!(codes(&r).contains(&"SL-XLY-010"), "{}", r.render_text());
+        assert!(!r.has_errors(), "SL-XLY-010 is advisory, never blocking");
+        assert!(trace_mode_gate(true, true).is_empty());
+        assert!(trace_mode_gate(false, false).is_empty());
+        assert!(trace_mode_gate(false, true).is_empty());
     }
 }

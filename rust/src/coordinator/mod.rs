@@ -66,6 +66,12 @@ pub struct ServeOpts {
     /// bit-identical to the sequential drive; turn off to debug or to
     /// measure the single-thread baseline.
     pub parallel: bool,
+    /// Emit the deterministic structured trace (`crate::trace`):
+    /// request-lifecycle spans and control-plane audit events, drained
+    /// into `RunReport::trace` / `ShardedReport::control_trace`. Off
+    /// (the default) installs the no-op sink — zero events retained,
+    /// zero behavioral perturbation.
+    pub trace: bool,
 }
 
 impl Default for ServeOpts {
@@ -80,6 +86,7 @@ impl Default for ServeOpts {
             batch_hint: 1.0,
             record_events: true,
             parallel: true,
+            trace: false,
         }
     }
 }

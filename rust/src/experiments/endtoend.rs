@@ -10,6 +10,7 @@ use anyhow::Result;
 use super::Ctx;
 use crate::baselines::Policy;
 use crate::coordinator::ServeOpts;
+use crate::json::Json;
 use crate::metrics::{render_table, Aggregate, RunReport};
 use crate::profiler::{ProfilerConfig, TaskProfile};
 use crate::scenario::{
@@ -204,19 +205,53 @@ pub fn backlog_with(ctx: &Ctx, horizon_ms: f64) -> Result<String> {
     backlog_comparison(zoo, &lm, &profiles, horizon_ms)
 }
 
-/// Core of the backlog study, parameterized over the zoo (so
-/// `benches/dispatch_backlog.rs` can run it on the synthetic fixture
-/// when `artifacts/` is absent) and the stream horizon (so the CI
-/// smoke stage can run a tiny hermetic instance via
-/// `exp backlog --fixture --horizon-ms ...`). Rates are derived from
-/// the measured per-task latency ranges: bursts demand ~4× the
-/// pipeline's capacity, the base load ~25 %.
+/// [`backlog_with`]'s machine-readable twin (`exp backlog --json`):
+/// per-arm full [`crate::metrics::ShardedReport`] JSON instead of the
+/// text tables.
+pub fn backlog_json_with(ctx: &Ctx, horizon_ms: f64) -> Result<Json> {
+    let platform = Platform::desktop();
+    let lm = ctx.lm(platform.clone());
+    let zoo = ctx.zoo_for(&platform);
+    let profiles = ctx.profiles(&lm, &ProfilerConfig::default())?;
+    backlog_comparison_json(zoo, &lm, &profiles, horizon_ms)
+}
+
+/// Text rendering of the backlog study (the default `exp backlog`).
 pub fn backlog_comparison(
     zoo: &Zoo,
     lm: &LatencyModel,
     profiles: &BTreeMap<String, TaskProfile>,
     horizon_ms: f64,
 ) -> Result<String> {
+    Ok(backlog_study(zoo, lm, profiles, horizon_ms)?.0)
+}
+
+/// JSON rendering of the backlog study (`exp backlog --json`, fixture
+/// path included): `{horizon_ms, arms: [{config, report}, ...]}` with
+/// each arm's full sharded report.
+pub fn backlog_comparison_json(
+    zoo: &Zoo,
+    lm: &LatencyModel,
+    profiles: &BTreeMap<String, TaskProfile>,
+    horizon_ms: f64,
+) -> Result<Json> {
+    Ok(backlog_study(zoo, lm, profiles, horizon_ms)?.1)
+}
+
+/// Core of the backlog study, parameterized over the zoo (so
+/// `benches/dispatch_backlog.rs` can run it on the synthetic fixture
+/// when `artifacts/` is absent) and the stream horizon (so the CI
+/// smoke stage can run a tiny hermetic instance via
+/// `exp backlog --fixture --horizon-ms ...`). Rates are derived from
+/// the measured per-task latency ranges: bursts demand ~4× the
+/// pipeline's capacity, the base load ~25 %. Returns the text report
+/// and its structured JSON twin, built from the same runs.
+fn backlog_study(
+    zoo: &Zoo,
+    lm: &LatencyModel,
+    profiles: &BTreeMap<String, TaskProfile>,
+    horizon_ms: f64,
+) -> Result<(String, Json)> {
     let tasks: Vec<String> = profiles.keys().cloned().collect();
     let mut slos: BTreeMap<String, Slo> = BTreeMap::new();
     let mut universe = Vec::new();
@@ -292,6 +327,7 @@ pub fn backlog_comparison(
         ),
     ];
     let mut rows = Vec::new();
+    let mut arms = Vec::new();
     let mut baseline: Option<RunReport> = None;
     let mut static_sharded: Option<RunReport> = None;
     let mut fair_arm: Option<RunReport> = None;
@@ -321,6 +357,10 @@ pub fn backlog_comparison(
             full.budget_utilization.iter().sum::<f64>()
                 / full.budget_utilization.len() as f64
         };
+        arms.push(Json::obj(vec![
+            ("config", Json::Str(label.to_string())),
+            ("report", full.to_json()),
+        ]));
         let report = full.aggregate;
         rows.push(vec![
             label.to_string(),
@@ -333,6 +373,8 @@ pub fn backlog_comparison(
             format!("{:.3}", report.fairness_index()),
             format!("{}", full.migrations),
             format!("{}", full.steals),
+            format!("{}", report.recoveries.len()),
+            format!("{:.0}", report.throttled_ms),
             format!("{}", report.cold_compiles),
             format!("{:.0}%", 100.0 * mean_util),
             format!("{:.0}", report.makespan_ms),
@@ -365,7 +407,8 @@ pub fn backlog_comparison(
     out.push_str(&render_table(
         &[
             "config", "done", "dropped", "miss", "viol%", "qps", "batch",
-            "fairness", "mig", "steal", "coldc", "util", "makespan",
+            "fairness", "mig", "steal", "recov", "thrott", "coldc", "util",
+            "makespan",
         ],
         &rows,
     ));
@@ -451,5 +494,10 @@ pub fn backlog_comparison(
     }
     out.push_str("\narrival-rate telemetry (steal+warm arm): estimated vs true\n");
     out.push_str(&render_table(&["task", "true qps", "ewma qps", "err"], &rate_rows));
-    Ok(out)
+    let doc = Json::obj(vec![
+        ("study", Json::Str("backlog".to_string())),
+        ("horizon_ms", Json::Num(horizon_ms)),
+        ("arms", Json::Arr(arms)),
+    ]);
+    Ok((out, doc))
 }

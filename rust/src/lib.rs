@@ -45,6 +45,7 @@ pub mod scenario;
 pub mod soc;
 pub mod stitching;
 pub mod telemetry;
+pub mod trace;
 pub mod util;
 pub mod workload;
 pub mod zoo;

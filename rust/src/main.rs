@@ -28,6 +28,7 @@ use sparseloom::scenario::{
     Admission, Dispatch, PlannerConfig, Scenario, Server, ShardedServer, Sharding,
 };
 use sparseloom::soc::Platform;
+use sparseloom::trace;
 use sparseloom::workload::{slo_grid, TaskRanges};
 use sparseloom::zoo::Zoo;
 
@@ -64,7 +65,11 @@ fn app() -> App {
                 .switch("real", "execute real PJRT chains during serving")
                 .switch("synthetic", "flops-derived base latencies (no PJRT)")
                 .switch("fixture", "serve the synthetic in-memory fixture zoo (hermetic; needs no artifacts/)")
-                .switch("verify", "replay the finished run through the sparselint invariant verifier (SL-INV-*); violations fail the command"),
+                .switch("verify", "replay the finished run through the sparselint invariant verifier (SL-INV-*); violations fail the command")
+                .opt("trace", "write the canonical run trace (request spans + control-plane audit events) to this path", None)
+                .opt("trace-format", "trace file format: jsonl (one event per line, replayable by `explain`) | chrome (trace-event JSON for Perfetto / chrome://tracing)", Some("jsonl"))
+                .switch("json", "emit the full run report as JSON on stdout (suppresses the text report)")
+                .switch("sequential", "drive sharded runs inline on one thread (threaded is the default; report and trace are bit-identical either way)"),
             Command::new("bench", "fleet-scale throughput sweep on the hermetic fleet fixture")
                 .opt("tasks", "fleet fixture size (tasks)", Some("16"))
                 .opt("rate-qps", "per-task Poisson arrival rate", Some("40"))
@@ -80,11 +85,13 @@ fn app() -> App {
                 .switch("fixture", "run the feasibility pass against the in-memory fixture zoo (hermetic; needs no artifacts/)")
                 .switch("synthetic", "flops-derived base latencies (no PJRT)")
                 .switch("json", "emit diagnostics as JSON instead of text"),
+            Command::new("explain", "attribute a trace's SLO violations to dominant causes"),
             Command::new("exp", "regenerate a paper table/figure")
                 .opt("artifacts", "artifact directory", Some("artifacts"))
                 .opt("horizon-ms", "backlog study: bursty stream horizon", Some("6000"))
                 .switch("synthetic", "flops-derived base latencies (no PJRT)")
-                .switch("fixture", "run `exp backlog` on the in-memory fixture zoo (hermetic)"),
+                .switch("fixture", "run `exp backlog` on the in-memory fixture zoo (hermetic)")
+                .switch("json", "backlog study: emit per-arm reports as JSON instead of the text tables"),
             Command::new("profile", "build the estimator profile and report quality")
                 .opt("artifacts", "artifact directory", Some("artifacts"))
                 .opt("platform", "desktop|laptop|orin", Some("desktop"))
@@ -118,6 +125,7 @@ fn main() {
                 "serve" => cmd_serve(&args),
                 "bench" => cmd_bench(&args),
                 "lint" => cmd_lint(&args),
+                "explain" => cmd_explain(&args),
                 "exp" => cmd_exp(&args),
                 "profile" => cmd_profile(&args),
                 "calibrate" => cmd_calibrate(&args),
@@ -289,22 +297,27 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         println!("wrote scenario to {path}");
     }
 
+    // `--json` keeps stdout machine-readable: the report document is
+    // the only thing printed there; advisory text moves to stderr.
+    let json_out = args.switch("json");
     // The header reads from the *scenario* (not the raw flags), so a
     // saved scenario file and the printed report always agree.
-    println!(
-        "scenario: {} | policy: {} | platform: {}{} | admission: {} | shards: {} | max-batch: {} | replan: {} | steal: {} | warm: {} | predictive: {}",
-        scenario.name,
-        policy.name(),
-        lm.platform.name,
-        slo_note,
-        scenario.admission.label(),
-        scenario.sharding.shards,
-        scenario.dispatch.max_batch,
-        scenario.planner.replan,
-        scenario.planner.steal,
-        scenario.planner.warm_migrate,
-        scenario.planner.predictive,
-    );
+    if !json_out {
+        println!(
+            "scenario: {} | policy: {} | platform: {}{} | admission: {} | shards: {} | max-batch: {} | replan: {} | steal: {} | warm: {} | predictive: {}",
+            scenario.name,
+            policy.name(),
+            lm.platform.name,
+            slo_note,
+            scenario.admission.label(),
+            scenario.sharding.shards,
+            scenario.dispatch.max_batch,
+            scenario.planner.replan,
+            scenario.planner.steal,
+            scenario.planner.warm_migrate,
+            scenario.planner.predictive,
+        );
+    }
 
     // --- build the server(s) and run ------------------------------------
     // Batch-aware planning: explicit --batch-hint wins; a batch-aware
@@ -316,6 +329,8 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         }
         None => 1.0,
     };
+    let trace_path = args.get("trace").map(str::to_string);
+    let trace_format = args.get_or("trace-format", "jsonl");
     let opts = ServeOpts {
         memory_budget_frac: args.get_f64("budget")?.unwrap_or(1.0),
         policy,
@@ -324,8 +339,17 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         // the --verify replay needs the full log — everything the
         // report prints below comes from the streaming aggregates.
         record_events: args.switch("verify"),
+        parallel: !args.switch("sequential"),
+        trace: trace_path.is_some(),
         ..Default::default()
     };
+    // SL-XLY-010: tracing without event retention still produces the
+    // full trace, but `--verify`'s trace-consistency pass (SL-INV-006+)
+    // cannot cross-check it — surface that before the run.
+    let mode = analysis::trace_mode_gate(opts.trace, opts.record_events);
+    if !mode.is_empty() {
+        eprintln!("{}", mode.render_text());
+    }
     if scenario.sharding.shards > 1 {
         if args.switch("real") {
             bail!("--real is single-server only (drop --shards or run with 1 shard)");
@@ -333,68 +357,84 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         let sharded =
             ShardedServer::build(zoo, &lm, &profiles, opts, scenario.sharding.clone())?;
         let report = sharded.run(&scenario)?;
-        for (i, shard) in report.per_shard.iter().enumerate() {
-            let util = report
-                .budget_utilization
-                .get(i)
-                .map(|u| format!(" | pool {:.0}%", 100.0 * u))
-                .unwrap_or_default();
-            println!(
-                "  shard {i}: {} done | {} dropped | {} batches | makespan {:.1} ms{util}",
-                shard.total_queries,
-                shard.total_dropped,
-                shard.total_batches,
-                shard.makespan_ms,
-            );
+        if !json_out {
+            for (i, shard) in report.per_shard.iter().enumerate() {
+                let util = report
+                    .budget_utilization
+                    .get(i)
+                    .map(|u| format!(" | pool {:.0}%", 100.0 * u))
+                    .unwrap_or_default();
+                println!(
+                    "  shard {i}: {} done | {} dropped | {} batches | makespan {:.1} ms{util}",
+                    shard.total_queries,
+                    shard.total_dropped,
+                    shard.total_batches,
+                    shard.makespan_ms,
+                );
+            }
+            if report.replans > 0 || report.migrations > 0 || report.steals > 0 {
+                println!(
+                    "  online: {} saturation event(s), {} migration(s), {} stolen batch(es), \
+                     {} cold compile(s), {} warm load(s)",
+                    report.replans,
+                    report.migrations,
+                    report.steals,
+                    report.aggregate.cold_compiles,
+                    report.aggregate.warm_loads,
+                );
+            }
+            if !report.arrival_est_qps.is_empty() {
+                let est: Vec<String> = report
+                    .arrival_est_qps
+                    .iter()
+                    .map(|(task, qps)| format!("{task} {qps:.1}"))
+                    .collect();
+                println!("  telemetry est rate (qps): {}", est.join(" | "));
+            }
+            if report.aggregate.downtime_ms > 0.0
+                || report.aggregate.throttled_ms > 0.0
+                || report.link_cost_ms > 0.0
+            {
+                println!(
+                    "  faults: {:.1} ms down | {:.1} ms throttled | {:.1} ms link cost | \
+                     {} recovery(ies)",
+                    report.aggregate.downtime_ms,
+                    report.aggregate.throttled_ms,
+                    report.link_cost_ms,
+                    report.aggregate.recoveries.len(),
+                );
+            }
+            print_outcomes(&report.aggregate);
+            print_forecast(&report.aggregate);
+            print_summary(&report.aggregate);
         }
-        if report.replans > 0 || report.migrations > 0 || report.steals > 0 {
-            println!(
-                "  online: {} saturation event(s), {} migration(s), {} stolen batch(es), \
-                 {} cold compile(s), {} warm load(s)",
-                report.replans,
-                report.migrations,
-                report.steals,
-                report.aggregate.cold_compiles,
-                report.aggregate.warm_loads,
-            );
-        }
-        if !report.arrival_est_qps.is_empty() {
-            let est: Vec<String> = report
-                .arrival_est_qps
-                .iter()
-                .map(|(task, qps)| format!("{task} {qps:.1}"))
-                .collect();
-            println!("  telemetry est rate (qps): {}", est.join(" | "));
-        }
-        if report.aggregate.downtime_ms > 0.0
-            || report.aggregate.throttled_ms > 0.0
-            || report.link_cost_ms > 0.0
-        {
-            println!(
-                "  faults: {:.1} ms down | {:.1} ms throttled | {:.1} ms link cost | \
-                 {} recovery(ies)",
-                report.aggregate.downtime_ms,
-                report.aggregate.throttled_ms,
-                report.link_cost_ms,
-                report.aggregate.recoveries.len(),
-            );
-        }
-        print_outcomes(&report.aggregate);
-        print_forecast(&report.aggregate);
-        print_summary(&report.aggregate);
         if args.switch("verify") {
             let inv = analysis::invariants::verify_sharded(&report);
             if !inv.is_empty() {
-                println!("{}", inv.render_text());
+                status(json_out, &inv.render_text());
             }
             inv.fail_on_errors("run invariants")?;
-            println!(
-                "invariants OK: {} request event(s) across {} shard(s) verified",
-                report.aggregate.requests.len(),
-                report.per_shard.len(),
+            status(
+                json_out,
+                &format!(
+                    "invariants OK: {} request event(s) across {} shard(s) verified",
+                    report.aggregate.requests.len(),
+                    report.per_shard.len(),
+                ),
             );
         }
-        check_fault_expects(&scenario, &report)?;
+        if let Some(path) = &trace_path {
+            let events = report.canonical_trace();
+            write_trace(path, &events, &trace_format)?;
+            status(
+                json_out,
+                &format!("wrote {} trace event(s) to {path}", events.len()),
+            );
+        }
+        if json_out {
+            println!("{}", report.to_json().to_string_pretty());
+        }
+        check_fault_expects(&scenario, &report, json_out)?;
     } else {
         let rt;
         let mut builder = Server::builder(zoo, &lm, &profiles).opts(opts);
@@ -404,19 +444,37 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
         }
         let server = builder.build();
         let report = server.run(&scenario)?;
-        print_outcomes(&report);
-        print_forecast(&report);
-        print_summary(&report);
+        if !json_out {
+            print_outcomes(&report);
+            print_forecast(&report);
+            print_summary(&report);
+        }
         if args.switch("verify") {
             let inv = analysis::invariants::verify_report(&report);
             if !inv.is_empty() {
-                println!("{}", inv.render_text());
+                status(json_out, &inv.render_text());
             }
             inv.fail_on_errors("run invariants")?;
-            println!(
-                "invariants OK: {} request event(s) across 1 shard(s) verified",
-                report.requests.len(),
+            status(
+                json_out,
+                &format!(
+                    "invariants OK: {} request event(s) across 1 shard(s) verified",
+                    report.requests.len(),
+                ),
             );
+        }
+        if let Some(path) = &trace_path {
+            // A single session canonicalizes at finish; multi-phase
+            // merges concatenate per-phase traces, so re-sort here.
+            let events = trace::canonical(report.trace.clone());
+            write_trace(path, &events, &trace_format)?;
+            status(
+                json_out,
+                &format!("wrote {} trace event(s) to {path}", events.len()),
+            );
+        }
+        if json_out {
+            println!("{}", report.to_json().to_string_pretty());
         }
         // The expect vocabulary is defined over sharded reports; a
         // single-server run is the one-shard special case.
@@ -425,23 +483,47 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
             aggregate: report,
             ..Default::default()
         };
-        check_fault_expects(&scenario, &wrapped)?;
+        check_fault_expects(&scenario, &wrapped, json_out)?;
     }
+    Ok(())
+}
+
+/// Route advisory lines to stderr when stdout is reserved for a JSON
+/// document (`--json`), to stdout otherwise.
+fn status(json_out: bool, line: &str) {
+    if json_out {
+        eprintln!("{line}");
+    } else {
+        println!("{line}");
+    }
+}
+
+/// Serialize a canonical trace to `path` in the requested format.
+fn write_trace(path: &str, events: &[trace::TraceEvent], format: &str) -> Result<()> {
+    let text = match format {
+        "jsonl" => trace::to_jsonl(events),
+        "chrome" => trace::export::to_chrome(events).to_string_pretty(),
+        other => bail!("unknown trace format {other:?} (want jsonl | chrome)"),
+    };
+    std::fs::write(path, text)?;
     Ok(())
 }
 
 /// Check a scenario's declarative `expect` clauses against the finished
 /// run; failed clauses are `SL-EXP-*` errors and fail the command.
-fn check_fault_expects(scenario: &Scenario, report: &ShardedReport) -> Result<()> {
+fn check_fault_expects(scenario: &Scenario, report: &ShardedReport, quiet: bool) -> Result<()> {
     if scenario.faults.expects.is_empty() {
         return Ok(());
     }
     let exp = scenario.faults.check_expects(report);
     if !exp.is_empty() {
-        println!("{}", exp.render_text());
+        status(quiet, &exp.render_text());
     }
     exp.fail_on_errors("fault expectations")?;
-    println!("expectations OK: {} clause(s)", scenario.faults.expects.len());
+    status(
+        quiet,
+        &format!("expectations OK: {} clause(s)", scenario.faults.expects.len()),
+    );
     Ok(())
 }
 
@@ -566,7 +648,63 @@ fn cmd_bench(args: &sparseloom::cli::Args) -> Result<()> {
             "throughput gate OK vs {gate} (tolerance {:.0} %)",
             100.0 * tolerance
         );
+        gate_trace_overhead(&zoo, &lm, &profiles, &tasks, &slos, rate, horizon, iters, tolerance)?;
     }
+    Ok(())
+}
+
+/// Tracing must be effectively free: time the same sequential arm with
+/// the sink off and on (best of `iters` each, warmup excluded) and
+/// hold the traced slowdown to the throughput gate's fractional
+/// tolerance.
+#[allow(clippy::too_many_arguments)]
+fn gate_trace_overhead(
+    zoo: &Zoo,
+    lm: &sparseloom::soc::LatencyModel,
+    profiles: &BTreeMap<String, sparseloom::profiler::TaskProfile>,
+    tasks: &[String],
+    slos: &BTreeMap<String, sparseloom::workload::Slo>,
+    rate: f64,
+    horizon: f64,
+    iters: usize,
+    tolerance: f64,
+) -> Result<()> {
+    let scenario = Scenario::poisson(tasks, slos.clone(), rate, horizon)
+        .with_dispatch(Dispatch { max_batch: 4, min_queue: 2 })
+        .with_sharding(Sharding::hash(2))
+        .with_seed(7);
+    let mut walls = [0.0f64; 2];
+    for (slot, traced) in [(0usize, false), (1usize, true)] {
+        let opts = ServeOpts {
+            record_events: false,
+            parallel: false,
+            trace: traced,
+            ..Default::default()
+        };
+        let sharded =
+            ShardedServer::build(zoo, lm, profiles, opts, scenario.sharding.clone())?;
+        let _ = sharded.run(&scenario)?; // warmup: plan caches
+        let (wall_ms, report) =
+            sparseloom::benchkit::time_best_of(iters, || sharded.run(&scenario));
+        report?;
+        walls[slot] = wall_ms;
+    }
+    let overhead = if walls[0] > 0.0 { walls[1] / walls[0] - 1.0 } else { 0.0 };
+    println!(
+        "  trace arm: {:.2} ms untraced vs {:.2} ms traced ({:+.1} %)",
+        walls[0],
+        walls[1],
+        100.0 * overhead
+    );
+    if overhead > tolerance {
+        bail!(
+            "trace overhead gate failed: traced run {:.1} % slower than untraced \
+             (tolerance {:.0} %)",
+            100.0 * overhead,
+            100.0 * tolerance
+        );
+    }
+    println!("trace overhead gate OK (tolerance {:.0} %)", 100.0 * tolerance);
     Ok(())
 }
 
@@ -683,6 +821,52 @@ fn cmd_lint(args: &sparseloom::cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// `sparseloom explain <trace>` — the SLO-violation attribution tool.
+///
+/// A JSONL trace (the `serve --trace` default) is linted
+/// (`SL-TRC-001..003`) and every violation attributed to its dominant
+/// cause bucket; a Chrome trace-event document (`--trace-format
+/// chrome`) is structurally validated — it carries rendering records
+/// (flow arrows, track metadata), not the replayable event stream, so
+/// attribution asks for the JSONL form.
+fn cmd_explain(args: &sparseloom::cli::Args) -> Result<()> {
+    if args.positional.len() != 1 {
+        bail!("usage: sparseloom explain <run.trace.jsonl | run.trace.json>");
+    }
+    let path = &args.positional[0];
+    let text =
+        std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    // A Chrome document parses as ONE JSON value with a `traceEvents`
+    // array; a JSONL trace is one object per line (a single-line JSONL
+    // file parses whole too, but has no `traceEvents` key).
+    if let Ok(doc) = sparseloom::json::parse(&text) {
+        if let Some(recs) = doc.get("traceEvents").and_then(|e| e.as_arr()) {
+            for (i, r) in recs.iter().enumerate() {
+                let well_formed = r.get("ph").and_then(|p| p.as_str()).is_some()
+                    && r.get("pid").and_then(|p| p.as_f64()).is_some()
+                    && r.get("tid").and_then(|p| p.as_f64()).is_some();
+                if !well_formed {
+                    bail!("{path}: traceEvents[{i}] is not a well-formed trace record");
+                }
+            }
+            println!("chrome trace OK ({} record(s))", recs.len());
+            println!(
+                "note: attribution replays the JSONL trace (serve --trace out.jsonl); \
+                 the Chrome document is for timeline viewers"
+            );
+            return Ok(());
+        }
+    }
+    let (events, lint) = trace::parse_jsonl(&text);
+    if !lint.is_empty() {
+        println!("{}", lint.render_text());
+    }
+    lint.fail_on_errors("trace")?;
+    let attribution = trace::explain::attribute(&events);
+    println!("{}", trace::explain::render(&attribution));
+    Ok(())
+}
+
 /// Per-task projected SLO violation rates (worst shard fragment), when
 /// the run produced any.
 fn print_forecast(report: &RunReport) {
@@ -735,6 +919,7 @@ fn cmd_exp(args: &sparseloom::cli::Args) -> Result<()> {
     // Hermetic path first: `exp backlog --fixture` runs the backlog
     // study on the in-memory fixture zoo, before any artifact load —
     // the CI smoke stage exercises exactly this.
+    let json_out = args.switch("json");
     if args.switch("fixture") {
         if !args.positional.iter().all(|p| p == "backlog") || args.positional.is_empty()
         {
@@ -742,11 +927,21 @@ fn cmd_exp(args: &sparseloom::cli::Args) -> Result<()> {
         }
         let horizon_ms = args.get_f64("horizon-ms")?.unwrap_or(6_000.0);
         let (zoo, lm, profiles) = fixtures::quartet();
-        let out = experiments::endtoend::backlog_comparison(
-            &zoo, &lm, &profiles, horizon_ms,
-        )?;
-        println!("{out}");
+        if json_out {
+            let doc = experiments::endtoend::backlog_comparison_json(
+                &zoo, &lm, &profiles, horizon_ms,
+            )?;
+            println!("{}", doc.to_string_pretty());
+        } else {
+            let out = experiments::endtoend::backlog_comparison(
+                &zoo, &lm, &profiles, horizon_ms,
+            )?;
+            println!("{out}");
+        }
         return Ok(());
+    }
+    if json_out && args.positional != ["backlog"] {
+        bail!("--json supports only `exp backlog` (got {:?})", args.positional);
     }
     let ctx = Ctx::load(&args.get_or("artifacts", "artifacts"), args.switch("synthetic"))?;
     let ids: Vec<String> = if args.positional.is_empty()
@@ -759,6 +954,14 @@ fn cmd_exp(args: &sparseloom::cli::Args) -> Result<()> {
     let horizon_ms = args.get_f64("horizon-ms")?.unwrap_or(6_000.0);
     for id in &ids {
         // The backlog study honors --horizon-ms on this path too.
+        if json_out && id == "backlog" {
+            println!(
+                "{}",
+                experiments::endtoend::backlog_json_with(&ctx, horizon_ms)?
+                    .to_string_pretty()
+            );
+            continue;
+        }
         let out = if id == "backlog" {
             experiments::endtoend::backlog_with(&ctx, horizon_ms)?
         } else {

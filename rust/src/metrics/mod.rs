@@ -5,6 +5,8 @@ pub mod sketch;
 
 use std::collections::BTreeMap;
 
+use crate::json::Json;
+use crate::trace::{self, TraceEvent};
 use crate::util::stats;
 
 pub use sketch::QuantileSketch;
@@ -80,6 +82,31 @@ impl TaskOutcome {
             }
         }
     }
+
+    /// Structured JSON view (for `serve --json` / `exp ... --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("task", Json::Str(self.task.clone())),
+            (
+                "accuracy",
+                self.accuracy.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("mean_latency_ms", Json::Num(self.mean_latency_ms)),
+            ("max_latency_ms", Json::Num(self.max_latency_ms)),
+            ("p50_latency_ms", Json::Num(self.p50_latency_ms)),
+            ("p95_latency_ms", Json::Num(self.p95_latency_ms)),
+            ("p99_latency_ms", Json::Num(self.p99_latency_ms)),
+            ("mean_queueing_ms", Json::Num(self.mean_queueing_ms)),
+            ("queries_completed", Json::Num(self.queries_completed as f64)),
+            ("queries_dropped", Json::Num(self.queries_dropped as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("slo_misses", Json::Num(self.slo_misses as f64)),
+            ("slo_accuracy", Json::Num(self.slo_accuracy)),
+            ("slo_latency_ms", Json::Num(self.slo_latency_ms)),
+            ("violated", Json::Bool(self.violated())),
+        ])
+    }
 }
 
 /// One serving run: all tasks, one SLO config, one arrival order.
@@ -131,6 +158,12 @@ pub struct RunReport {
     /// from: the gap between the window end and the first completion
     /// that finished after it (fault lab; empty without crashes).
     pub recoveries: Vec<f64>,
+    /// Structured trace events drained from the session's sink
+    /// (`ServeOpts::trace`; empty when tracing is off). Merges
+    /// concatenate in fold order — shard-index order on the sharded
+    /// paths — which is what makes the canonical trace bit-identical
+    /// across threaded and sequential drives.
+    pub trace: Vec<TraceEvent>,
 }
 
 impl Default for RunReport {
@@ -152,6 +185,7 @@ impl Default for RunReport {
             downtime_ms: 0.0,
             throttled_ms: 0.0,
             recoveries: Vec::new(),
+            trace: Vec::new(),
         }
     }
 }
@@ -265,6 +299,10 @@ impl RunReport {
         }
         self.slo_miss_count += other.slo_miss_count;
         self.outcomes.extend(other.outcomes);
+        // Trace events concatenate unconditionally: they are empty
+        // unless tracing was opted into, and (unlike the request log)
+        // a partial trace is still a valid, attributable trace.
+        self.trace.extend(other.trace);
         // Event logs concatenate only when *both* sides retained them:
         // folding in a streaming-mode fragment means the combined log
         // would be partial, so it is dropped and the merged report
@@ -277,6 +315,48 @@ impl RunReport {
             self.record_events = false;
             self.requests = Vec::new();
         }
+    }
+
+    /// Structured JSON view: all counters plus the derived rates, but
+    /// not the per-request log or trace bodies (those have their own
+    /// sinks — `--verify` and `--trace` respectively); their sizes are
+    /// reported so consumers can tell what was retained.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "outcomes",
+                Json::Arr(self.outcomes.iter().map(TaskOutcome::to_json).collect()),
+            ),
+            ("makespan_ms", Json::Num(self.makespan_ms)),
+            ("total_queries", Json::Num(self.total_queries as f64)),
+            ("total_dropped", Json::Num(self.total_dropped as f64)),
+            ("total_batches", Json::Num(self.total_batches as f64)),
+            ("cold_compiles", Json::Num(self.cold_compiles as f64)),
+            ("warm_loads", Json::Num(self.warm_loads as f64)),
+            (
+                "slo_forecast",
+                Json::Obj(
+                    self.slo_forecast
+                        .iter()
+                        .map(|(t, p)| (t.clone(), Json::Num(*p)))
+                        .collect(),
+                ),
+            ),
+            ("slo_miss_count", Json::Num(self.slo_miss_count as f64)),
+            ("record_events", Json::Bool(self.record_events)),
+            ("requests_retained", Json::Num(self.requests.len() as f64)),
+            ("downtime_ms", Json::Num(self.downtime_ms)),
+            ("throttled_ms", Json::Num(self.throttled_ms)),
+            (
+                "recoveries_ms",
+                Json::Arr(self.recoveries.iter().map(|r| Json::Num(*r)).collect()),
+            ),
+            ("trace_events", Json::Num(self.trace.len() as f64)),
+            ("violation_rate", Json::Num(self.violation_rate())),
+            ("throughput_qps", Json::Num(self.throughput_qps())),
+            ("mean_batch_size", Json::Num(self.mean_batch_size())),
+            ("fairness_index", Json::Num(self.fairness_index())),
+        ])
     }
 }
 
@@ -309,6 +389,11 @@ pub struct ShardedReport {
     /// Total cross-shard link cost (virtual ms) steal/warm-migrate
     /// adoptions paid under a fault-lab link matrix (0 without one).
     pub link_cost_ms: f64,
+    /// Control-plane audit events (`TR-CTL-*`) emitted by the
+    /// coordinator drive loops — steal/replan/redirect decisions happen
+    /// outside any one session, so they land here rather than in a
+    /// shard's `RunReport::trace`. Empty when tracing is off.
+    pub control_trace: Vec<TraceEvent>,
 }
 
 impl ShardedReport {
@@ -328,6 +413,53 @@ impl ShardedReport {
     /// makespan (shards run in parallel).
     pub fn throughput_qps(&self) -> f64 {
         self.aggregate.throughput_qps()
+    }
+
+    /// The run's canonical trace: request-lifecycle events (already
+    /// merged into the aggregate in shard-index order) plus the
+    /// control-plane audit events, stable-sorted by begin time. Both
+    /// inputs are deterministic under `--parallel`, so the canonical
+    /// trace is byte-identical across threaded and sequential drives.
+    pub fn canonical_trace(&self) -> Vec<TraceEvent> {
+        let mut events = self.aggregate.trace.clone();
+        events.extend(self.control_trace.iter().cloned());
+        trace::canonical(events)
+    }
+
+    /// Structured JSON view of the whole sharded run (`serve --json`):
+    /// the aggregate, every per-shard report, and the coordinator
+    /// counters. Trace bodies are excluded — `--trace` writes those.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "per_shard",
+                Json::Arr(self.per_shard.iter().map(RunReport::to_json).collect()),
+            ),
+            ("aggregate", self.aggregate.to_json()),
+            ("replans", Json::Num(self.replans as f64)),
+            ("migrations", Json::Num(self.migrations as f64)),
+            ("steals", Json::Num(self.steals as f64)),
+            (
+                "budget_utilization",
+                Json::Arr(
+                    self.budget_utilization.iter().map(|u| Json::Num(*u)).collect(),
+                ),
+            ),
+            (
+                "arrival_est_qps",
+                Json::Obj(
+                    self.arrival_est_qps
+                        .iter()
+                        .map(|(t, q)| (t.clone(), Json::Num(*q)))
+                        .collect(),
+                ),
+            ),
+            ("link_cost_ms", Json::Num(self.link_cost_ms)),
+            (
+                "control_trace_events",
+                Json::Num(self.control_trace.len() as f64),
+            ),
+        ])
     }
 }
 
@@ -693,6 +825,33 @@ mod tests {
         // Paper Fig. 5a: compile 23.7× infer, load 3× infer.
         let b = SwitchBreakdown { compile_ms: 23.7, load_ms: 3.0, inference_ms: 1.0 };
         assert!(b.load_fraction() > 0.96);
+    }
+
+    #[test]
+    fn json_view_round_trips_and_excludes_bulky_logs() {
+        let sr = ShardedReport {
+            per_shard: vec![RunReport::default()],
+            aggregate: RunReport {
+                outcomes: vec![outcome(Some(0.9), 40.0)],
+                makespan_ms: 1000.0,
+                total_queries: 100,
+                ..Default::default()
+            },
+            steals: 3,
+            ..Default::default()
+        };
+        let text = sr.to_json().to_string();
+        let parsed = crate::json::parse(&text).expect("serve --json parses");
+        assert_eq!(parsed.get("steals").unwrap().as_f64().unwrap(), 3.0);
+        let agg = parsed.get("aggregate").unwrap();
+        assert_eq!(agg.get("total_queries").unwrap().as_f64().unwrap(), 100.0);
+        assert_eq!(agg.get("trace_events").unwrap().as_f64().unwrap(), 0.0);
+        assert!(agg.get("requests").is_none(), "logs stay out of --json");
+        assert!(
+            agg.get("outcomes").unwrap().as_arr().unwrap()[0]
+                .get("violated")
+                .is_some()
+        );
     }
 
     #[test]

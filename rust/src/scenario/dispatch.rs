@@ -74,6 +74,7 @@ use crate::planner::{Planner, ShardObservation, ShardPlan, SparsityAwarePlanner}
 use crate::profiler::TaskProfile;
 use crate::soc::{LatencyModel, Processor};
 use crate::telemetry::Telemetry;
+use crate::trace::{self, TraceEvent};
 use crate::workload::{shard_of_task, Query, Slo};
 use crate::zoo::Zoo;
 
@@ -392,6 +393,7 @@ impl<'a> ShardedServer<'a> {
             let run_shard = |i: usize, server: &Server<'a>| -> Result<(f64, RunReport)> {
                 let sub = sub_scenario(scenario, &shard_tasks[i], i);
                 let mut session = server.session(&sub, phase)?;
+                session.set_trace_shard(i);
                 dispatcher.drive(&mut session, &parts[i])?;
                 Ok((session.pool_utilization(), session.finish()))
             };
@@ -453,6 +455,9 @@ impl<'a> ShardedServer<'a> {
             budget_utilization,
             arrival_est_qps: BTreeMap::new(),
             link_cost_ms: 0.0,
+            // The static path has no control plane: every trace event
+            // is a request-lifecycle event inside some shard's report.
+            control_trace: Vec::new(),
         })
     }
 
@@ -526,6 +531,11 @@ impl<'a> ShardedServer<'a> {
         // Fault lab: total virtual ms adoptions paid to cross-shard
         // link transfers under `scenario.faults.links`.
         let mut link_cost_ms = 0.0f64;
+        // Control-plane audit events: emitted only from this
+        // coordinator-sequential loop, so their order is deterministic
+        // by construction.
+        let tracing = self.shards[0].opts().trace;
+        let mut control: Vec<TraceEvent> = Vec::new();
         for phase in 0..scenario.phases() {
             let slos = &scenario.schedule[phase];
             let mut sessions = Vec::with_capacity(n);
@@ -536,7 +546,10 @@ impl<'a> ShardedServer<'a> {
                     .filter(|t| assignment[*t] == i)
                     .cloned()
                     .collect();
-                sessions.push(server.session(&sub_scenario(scenario, &tasks_i, i), phase)?);
+                let mut session =
+                    server.session(&sub_scenario(scenario, &tasks_i, i), phase)?;
+                session.set_trace_shard(i);
+                sessions.push(session);
             }
             // Committed placement orders + pool capacities per shard:
             // the planner re-selects a migrant against the target's.
@@ -684,27 +697,63 @@ impl<'a> ShardedServer<'a> {
                                     } else {
                                         None
                                     };
+                                    let blobs =
+                                        warm_blobs.as_ref().map(|b| b.len()).unwrap_or(0);
                                     let mut floor =
                                         sessions[home].ready_of(&task).unwrap_or(0.0);
                                     // Fault lab: adoption pays the
                                     // topology's transfer price.
+                                    let mut link = 0.0;
                                     if let Some(links) = &scenario.faults.links {
-                                        let c = links.cost(home, thief);
-                                        floor += c;
-                                        link_cost_ms += c;
+                                        link = links.cost(home, thief);
+                                        floor += link;
+                                        link_cost_ms += link;
                                     }
                                     sessions[thief].adopt_task(
-                                        &task, slo, selection, floor, warm_blobs,
+                                        &task, slo, selection, floor, link, warm_blobs,
                                     )?;
                                     serving
                                         .get_mut(&task)
                                         .expect("known task")
                                         .push(thief);
+                                    if tracing {
+                                        control.push(TraceEvent::new(
+                                            trace::TR_CTL_MIGRATE,
+                                            thief,
+                                            &task,
+                                            None,
+                                            issue,
+                                            issue,
+                                            &[
+                                                ("from", home as f64),
+                                                ("to", thief as f64),
+                                                ("link_ms", link),
+                                                ("blobs", blobs as f64),
+                                            ],
+                                        ));
+                                    }
                                 }
                             }
                             if sessions[thief].ready_of(&task).is_some() {
                                 serve_on = thief;
                                 telemetry.note_steal(thief);
+                                if tracing {
+                                    control.push(TraceEvent::new(
+                                        trace::TR_CTL_STEAL,
+                                        thief,
+                                        &task,
+                                        None,
+                                        issue,
+                                        issue,
+                                        &[
+                                            ("thief", thief as f64),
+                                            ("home", home as f64),
+                                            ("observed_ms", home_backlog),
+                                            ("forecast_ms", effective_backlog),
+                                            ("threshold_ms", thresholds[home].unwrap_or(0.0)),
+                                        ],
+                                    ));
+                                }
                             }
                         }
                     }
@@ -754,19 +803,49 @@ impl<'a> ShardedServer<'a> {
                                 } else {
                                     None
                                 };
+                                let blobs =
+                                    warm_blobs.as_ref().map(|b| b.len()).unwrap_or(0);
                                 let mut floor =
                                     sessions[serve_on].ready_of(&task).unwrap_or(0.0);
+                                let mut link = 0.0;
                                 if let Some(links) = &scenario.faults.links {
-                                    let c = links.cost(serve_on, dst);
-                                    floor += c;
-                                    link_cost_ms += c;
+                                    link = links.cost(serve_on, dst);
+                                    floor += link;
+                                    link_cost_ms += link;
                                 }
                                 sessions[dst]
-                                    .adopt_task(&task, slo, None, floor, warm_blobs)?;
+                                    .adopt_task(&task, slo, None, floor, link, warm_blobs)?;
                                 serving.get_mut(&task).expect("known task").push(dst);
+                                if tracing {
+                                    control.push(TraceEvent::new(
+                                        trace::TR_CTL_MIGRATE,
+                                        dst,
+                                        &task,
+                                        None,
+                                        issue,
+                                        issue,
+                                        &[
+                                            ("from", serve_on as f64),
+                                            ("to", dst as f64),
+                                            ("link_ms", link),
+                                            ("blobs", blobs as f64),
+                                        ],
+                                    ));
+                                }
                             }
                         }
                         if sessions[dst].ready_of(&task).is_some() {
+                            if tracing {
+                                control.push(TraceEvent::new(
+                                    trace::TR_CTL_REDIRECT,
+                                    dst,
+                                    &task,
+                                    None,
+                                    issue,
+                                    issue,
+                                    &[("from", serve_on as f64), ("to", dst as f64)],
+                                ));
+                            }
                             serve_on = dst;
                             telemetry.note_steal(dst);
                         }
@@ -879,10 +958,11 @@ impl<'a> ShardedServer<'a> {
                 let Some(slo) = slos.get(&mig.task).copied() else { continue };
                 let mut floor = sessions[mig.from].ready_of(&mig.task).unwrap_or(0.0);
                 // Fault lab: migration pays the topology's transfer price.
+                let mut link = 0.0;
                 if let Some(links) = &scenario.faults.links {
-                    let c = links.cost(mig.from, mig.to);
-                    floor += c;
-                    link_cost_ms += c;
+                    link = links.cost(mig.from, mig.to);
+                    floor += link;
+                    link_cost_ms += link;
                 }
                 // A replanned migrant's pool entries *move* with it —
                 // the source's budget share frees up.
@@ -891,11 +971,13 @@ impl<'a> ShardedServer<'a> {
                 } else {
                     None
                 };
+                let blobs = warm_blobs.as_ref().map(|b| b.len()).unwrap_or(0);
                 sessions[mig.to].adopt_task(
                     &mig.task,
                     slo,
                     mig.selection,
                     floor,
+                    link,
                     warm_blobs,
                 )?;
                 let adopters = serving.get_mut(&mig.task).expect("known task");
@@ -910,6 +992,38 @@ impl<'a> ShardedServer<'a> {
                     .collect();
                 migrations += 1;
                 budget_left -= 1;
+                if tracing {
+                    control.push(TraceEvent::new(
+                        trace::TR_CTL_REPLAN,
+                        home,
+                        &mig.task,
+                        None,
+                        issue,
+                        issue,
+                        &[
+                            ("from", mig.from as f64),
+                            ("to", mig.to as f64),
+                            ("observed_ms", home_backlog),
+                            ("forecast_ms", effective_backlog),
+                            ("threshold_ms", threshold),
+                            ("budget_left", budget_left as f64),
+                        ],
+                    ));
+                    control.push(TraceEvent::new(
+                        trace::TR_CTL_MIGRATE,
+                        mig.to,
+                        &mig.task,
+                        None,
+                        issue,
+                        issue,
+                        &[
+                            ("from", mig.from as f64),
+                            ("to", mig.to as f64),
+                            ("link_ms", link),
+                            ("blobs", blobs as f64),
+                        ],
+                    ));
+                }
             }
             for (i, session) in sessions.into_iter().enumerate() {
                 budget_utilization[i] = session.pool_utilization();
@@ -930,6 +1044,7 @@ impl<'a> ShardedServer<'a> {
             budget_utilization,
             arrival_est_qps: telemetry.rates(),
             link_cost_ms,
+            control_trace: control,
         })
     }
 
@@ -969,6 +1084,12 @@ impl<'a> ShardedServer<'a> {
         let mut replans = 0usize;
         let mut migrations = 0usize;
         let mut link_cost_ms = 0.0f64;
+        // Control-plane audit events: emitted only here, between
+        // barriers, where the coordinator runs alone — never from
+        // worker threads — so their order is sequential by
+        // construction.
+        let tracing = self.shards[0].opts().trace;
+        let mut control: Vec<TraceEvent> = Vec::new();
         for phase in 0..scenario.phases() {
             let slos = &scenario.schedule[phase];
             let mut sessions = Vec::with_capacity(n);
@@ -979,7 +1100,10 @@ impl<'a> ShardedServer<'a> {
                     .filter(|t| assignment[*t] == i)
                     .cloned()
                     .collect();
-                sessions.push(server.session(&sub_scenario(scenario, &tasks_i, i), phase)?);
+                let mut session =
+                    server.session(&sub_scenario(scenario, &tasks_i, i), phase)?;
+                session.set_trace_shard(i);
+                sessions.push(session);
             }
             let shard_orders: Vec<Vec<Processor>> = sessions
                 .iter()
@@ -1153,23 +1277,59 @@ impl<'a> ShardedServer<'a> {
                                     } else {
                                         None
                                     };
+                                    let blobs =
+                                        warm_blobs.as_ref().map(|b| b.len()).unwrap_or(0);
                                     let mut floor =
                                         sessions[home].ready_of(&task).unwrap_or(0.0);
+                                    let mut link = 0.0;
                                     if let Some(links) = &scenario.faults.links {
-                                        let c = links.cost(home, thief);
-                                        floor += c;
-                                        link_cost_ms += c;
+                                        link = links.cost(home, thief);
+                                        floor += link;
+                                        link_cost_ms += link;
                                     }
                                     sessions[thief].adopt_task(
-                                        &task, slo, selection, floor, warm_blobs,
+                                        &task, slo, selection, floor, link, warm_blobs,
                                     )?;
                                     serving
                                         .get_mut(&task)
                                         .expect("known task")
                                         .push(thief);
+                                    if tracing {
+                                        control.push(TraceEvent::new(
+                                            trace::TR_CTL_MIGRATE,
+                                            thief,
+                                            &task,
+                                            None,
+                                            start,
+                                            start,
+                                            &[
+                                                ("from", home as f64),
+                                                ("to", thief as f64),
+                                                ("link_ms", link),
+                                                ("blobs", blobs as f64),
+                                            ],
+                                        ));
+                                    }
                                 }
                             }
                             if sessions[thief].ready_of(&task).is_some() {
+                                if tracing {
+                                    control.push(TraceEvent::new(
+                                        trace::TR_CTL_STEAL,
+                                        thief,
+                                        &task,
+                                        None,
+                                        start,
+                                        start,
+                                        &[
+                                            ("thief", thief as f64),
+                                            ("home", home as f64),
+                                            ("observed_ms", home_backlog),
+                                            ("forecast_ms", effective_backlog),
+                                            ("threshold_ms", thresholds[home].unwrap_or(0.0)),
+                                        ],
+                                    ));
+                                }
                                 serve_as.insert(task, thief);
                             }
                         }
@@ -1220,23 +1380,53 @@ impl<'a> ShardedServer<'a> {
                                     } else {
                                         None
                                     };
+                                    let blobs =
+                                        warm_blobs.as_ref().map(|b| b.len()).unwrap_or(0);
                                     let mut floor =
                                         sessions[from].ready_of(task).unwrap_or(0.0);
+                                    let mut link = 0.0;
                                     if let Some(links) = &scenario.faults.links {
-                                        let c = links.cost(from, dst);
-                                        floor += c;
-                                        link_cost_ms += c;
+                                        link = links.cost(from, dst);
+                                        floor += link;
+                                        link_cost_ms += link;
                                     }
                                     sessions[dst].adopt_task(
-                                        task, slo, None, floor, warm_blobs,
+                                        task, slo, None, floor, link, warm_blobs,
                                     )?;
                                     serving
                                         .get_mut(task)
                                         .expect("known task")
                                         .push(dst);
+                                    if tracing {
+                                        control.push(TraceEvent::new(
+                                            trace::TR_CTL_MIGRATE,
+                                            dst,
+                                            task,
+                                            None,
+                                            start,
+                                            start,
+                                            &[
+                                                ("from", from as f64),
+                                                ("to", dst as f64),
+                                                ("link_ms", link),
+                                                ("blobs", blobs as f64),
+                                            ],
+                                        ));
+                                    }
                                 }
                             }
                             if sessions[dst].ready_of(task).is_some() {
+                                if tracing {
+                                    control.push(TraceEvent::new(
+                                        trace::TR_CTL_REDIRECT,
+                                        dst,
+                                        task,
+                                        None,
+                                        start,
+                                        start,
+                                        &[("from", from as f64), ("to", dst as f64)],
+                                    ));
+                                }
                                 serve_as.insert(task.clone(), dst);
                             }
                         }
@@ -1416,10 +1606,11 @@ impl<'a> ShardedServer<'a> {
                     let Some(slo) = slos.get(&mig.task).copied() else { continue };
                     let mut floor =
                         sessions[mig.from].ready_of(&mig.task).unwrap_or(0.0);
+                    let mut link = 0.0;
                     if let Some(links) = &scenario.faults.links {
-                        let c = links.cost(mig.from, mig.to);
-                        floor += c;
-                        link_cost_ms += c;
+                        link = links.cost(mig.from, mig.to);
+                        floor += link;
+                        link_cost_ms += link;
                     }
                     // As in the classic drive: a replanned migrant's
                     // pool entries *move* with it.
@@ -1428,11 +1619,13 @@ impl<'a> ShardedServer<'a> {
                     } else {
                         None
                     };
+                    let blobs = warm_blobs.as_ref().map(|b| b.len()).unwrap_or(0);
                     sessions[mig.to].adopt_task(
                         &mig.task,
                         slo,
                         mig.selection,
                         floor,
+                        link,
                         warm_blobs,
                     )?;
                     let adopters = serving.get_mut(&mig.task).expect("known task");
@@ -1452,6 +1645,38 @@ impl<'a> ShardedServer<'a> {
                         .collect();
                     migrations += 1;
                     budget_left -= 1;
+                    if tracing {
+                        control.push(TraceEvent::new(
+                            trace::TR_CTL_REPLAN,
+                            home,
+                            &mig.task,
+                            None,
+                            end,
+                            end,
+                            &[
+                                ("from", mig.from as f64),
+                                ("to", mig.to as f64),
+                                ("observed_ms", home_backlog),
+                                ("forecast_ms", effective_backlog),
+                                ("threshold_ms", threshold),
+                                ("budget_left", budget_left as f64),
+                            ],
+                        ));
+                        control.push(TraceEvent::new(
+                            trace::TR_CTL_MIGRATE,
+                            mig.to,
+                            &mig.task,
+                            None,
+                            end,
+                            end,
+                            &[
+                                ("from", mig.from as f64),
+                                ("to", mig.to as f64),
+                                ("link_ms", link),
+                                ("blobs", blobs as f64),
+                            ],
+                        ));
+                    }
                     break;
                 }
             }
@@ -1473,6 +1698,7 @@ impl<'a> ShardedServer<'a> {
             budget_utilization,
             arrival_est_qps: telemetry.rates(),
             link_cost_ms,
+            control_trace: control,
         })
     }
 }

@@ -53,6 +53,7 @@ use crate::runtime::Runtime;
 use crate::soc::{BlobId, LatencyModel, Processor, SocSim};
 use crate::stitching::Composition;
 use crate::telemetry::forecast::{self, RateForecaster, TrendTracker};
+use crate::trace::{self, TraceEvent, TraceSink};
 use crate::util::stats;
 use crate::workload::{placement_orders, Query, Slo};
 use crate::zoo::Zoo;
@@ -370,17 +371,20 @@ impl<'a> Server<'a> {
                 // Judged infeasible: no accuracy → counted as violated.
                 _ => None,
             };
+            // The planned switch penalty is a cold start (compile +
+            // load for whatever the preload left out).
+            let initial_penalty_ms =
+                prepared.switch_penalty_ms.get(name).copied().unwrap_or(0.0);
             states.insert(
                 name.clone(),
                 TaskState {
                     comp: sel.map(|sel| p.space.composition(sel.stitched_index)),
                     accuracy,
                     ready_ms: 0.0,
-                    pending_penalty_ms: prepared
-                        .switch_penalty_ms
-                        .get(name)
-                        .copied()
-                        .unwrap_or(0.0),
+                    pending_penalty_ms: initial_penalty_ms,
+                    pending_cold_ms: initial_penalty_ms,
+                    pending_warm_ms: 0.0,
+                    pending_link_ms: 0.0,
                     completed: 0,
                     lat_sum: 0.0,
                     lat_max: 0.0,
@@ -403,6 +407,9 @@ impl<'a> Server<'a> {
         }
 
         Ok(Session {
+            tsink: trace::sink_for(self.opts.trace),
+            trace_shard: 0,
+            batch_seq: 0,
             server: self,
             prepared,
             slos: slos.clone(),
@@ -431,6 +438,16 @@ struct TaskState {
     ready_ms: f64,
     /// One-off latency charged to the next query (switch cost).
     pending_penalty_ms: f64,
+    /// Cold-path (compile + load) share of `pending_penalty_ms` —
+    /// consumed into the next batch's `TR-REQ-EXEC` trace decomposition
+    /// and zeroed with it.
+    pending_cold_ms: f64,
+    /// Warm-migration (cross-shard load) share of `pending_penalty_ms`.
+    pending_warm_ms: f64,
+    /// Link-transfer delay charged to this task's FIFO floor at
+    /// adoption. Not part of service (the floor already carries it);
+    /// reported in the trace decomposition only.
+    pending_link_ms: f64,
     /// Completed (admitted, served) queries.
     completed: usize,
     /// Running sum of service latencies — `lat_sum / completed` is
@@ -504,6 +521,15 @@ pub struct Session<'s, 'a> {
     /// Recovery latencies observed: first completion after each rejoin,
     /// minus the window end.
     recoveries: Vec<f64>,
+    /// Structured trace sink: `NoopSink` unless [`ServeOpts::trace`]
+    /// (zero events retained, nothing perturbed).
+    tsink: Box<dyn TraceSink>,
+    /// True fleet shard index stamped on trace events — sessions
+    /// otherwise see themselves as shard 0 (see
+    /// [`Session::set_trace_shard`]).
+    trace_shard: usize,
+    /// Monotone per-session batch counter (the trace `batch` argument).
+    batch_seq: u64,
 }
 
 impl<'s, 'a> Session<'s, 'a> {
@@ -590,6 +616,28 @@ impl<'s, 'a> Session<'s, 'a> {
         // No runnable variant at all: nothing to book.
         let Some(comp) = st.comp.clone() else {
             st.dropped += batch.len();
+            if self.tsink.enabled() {
+                for q in batch {
+                    self.tsink.emit(TraceEvent::new(
+                        trace::TR_REQ_ARRIVE,
+                        self.trace_shard,
+                        task,
+                        Some(q.id),
+                        q.arrival_ms,
+                        q.arrival_ms,
+                        &[],
+                    ));
+                    self.tsink.emit(TraceEvent::new(
+                        trace::TR_REQ_DROP,
+                        self.trace_shard,
+                        task,
+                        Some(q.id),
+                        q.arrival_ms,
+                        q.arrival_ms,
+                        &[("cause", trace::DROP_CAUSE_NO_VARIANT)],
+                    ));
+                }
+            }
             let evs: Vec<RequestOutcome> =
                 batch.iter().map(|q| dropped_event(q, None)).collect();
             if self.server.opts.record_events {
@@ -632,6 +680,26 @@ impl<'s, 'a> Session<'s, 'a> {
                 }
                 st.dropped += 1;
                 events[i] = Some(dropped_event(q, None));
+                if self.tsink.enabled() {
+                    self.tsink.emit(TraceEvent::new(
+                        trace::TR_REQ_ARRIVE,
+                        self.trace_shard,
+                        task,
+                        Some(q.id),
+                        effective_arrival,
+                        effective_arrival,
+                        &[],
+                    ));
+                    self.tsink.emit(TraceEvent::new(
+                        trace::TR_REQ_DROP,
+                        self.trace_shard,
+                        task,
+                        Some(q.id),
+                        effective_arrival,
+                        effective_arrival,
+                        &[("cause", trace::DROP_CAUSE_CRASH)],
+                    ));
+                }
                 continue;
             }
             while st
@@ -685,6 +753,46 @@ impl<'s, 'a> Session<'s, 'a> {
                             <= headroom * slo.max_latency_ms
                 }
             };
+            if self.tsink.enabled() {
+                self.tsink.emit(TraceEvent::new(
+                    trace::TR_REQ_ARRIVE,
+                    self.trace_shard,
+                    task,
+                    Some(q.id),
+                    effective_arrival,
+                    effective_arrival,
+                    &[],
+                ));
+                // The decision inputs the verdict was computed from.
+                let mut args = vec![("backlog_ms", backlog_ms)];
+                match &self.admission {
+                    Admission::Always => {}
+                    Admission::QueueCap { max_queued } => {
+                        args.push(("queued", (st.inflight.len() + admitted.len()) as f64));
+                        args.push(("budget", *max_queued as f64));
+                    }
+                    Admission::Deadline { slack } | Admission::Fair { slack, .. } => {
+                        args.push(("budget_ms", slack * slo.max_latency_ms));
+                    }
+                    Admission::Predictive { horizon_ms, headroom } => {
+                        args.push((
+                            "projected_ms",
+                            backlog_ms + st.backlog_trend.projected_growth(*horizon_ms),
+                        ));
+                        args.push(("budget_ms", headroom * slo.max_latency_ms));
+                    }
+                }
+                let code = if admit { trace::TR_REQ_ADMIT } else { trace::TR_REQ_SHED };
+                self.tsink.emit(TraceEvent::new(
+                    code,
+                    self.trace_shard,
+                    task,
+                    Some(q.id),
+                    effective_arrival,
+                    effective_arrival,
+                    &args,
+                ));
+            }
             if admit {
                 admitted.push((i, effective_arrival));
                 batch_arrival = batch_arrival.max(effective_arrival);
@@ -711,12 +819,24 @@ impl<'s, 'a> Session<'s, 'a> {
         // placement effects (Fig. 13).
         let b = admitted.len();
         let penalty = st.pending_penalty_ms;
+        // Consume the penalty split (and the informational link debt)
+        // into this batch's trace decomposition, zeroed with the
+        // penalty itself.
+        let (cold_ms, warm_ms, link_ms) =
+            (st.pending_cold_ms, st.pending_warm_ms, st.pending_link_ms);
+        st.pending_cold_ms = 0.0;
+        st.pending_warm_ms = 0.0;
+        st.pending_link_ms = 0.0;
         let issue = batch_arrival.max(st.ready_ms) + penalty;
         let mut service = penalty;
         st.pending_penalty_ms = 0.0;
         let mut stage_ready = issue;
         let mut start_ms = issue;
         let mut supported = true;
+        // DVFS stretch this batch's bookings paid (float-exact zero
+        // without a throttle curve — the accumulation is gated so
+        // fault-free arithmetic is untouched).
+        let mut throttle_extra = 0.0;
         for (j, &vi) in comp.0.iter().enumerate() {
             let proc = st.order[j];
             // The batch-aware latency model: stage occupancy for `b`
@@ -745,13 +865,27 @@ impl<'s, 'a> Session<'s, 'a> {
             if j == 0 {
                 start_ms = start;
             }
+            if self.faults.throttle.is_some() {
+                throttle_extra += (end - start) - stage_ms;
+            }
             service += stage_ms;
             stage_ready = end;
         }
         if !supported {
             st.dropped += b;
-            for &(i, _) in &admitted {
+            for &(i, effective_arrival) in &admitted {
                 events[i] = Some(dropped_event(batch[i], None));
+                if self.tsink.enabled() {
+                    self.tsink.emit(TraceEvent::new(
+                        trace::TR_REQ_DROP,
+                        self.trace_shard,
+                        task,
+                        Some(batch[i].id),
+                        effective_arrival,
+                        effective_arrival,
+                        &[("cause", trace::DROP_CAUSE_UNSUPPORTED)],
+                    ));
+                }
             }
             let evs: Vec<RequestOutcome> =
                 events.into_iter().map(|e| e.expect("all dropped")).collect();
@@ -765,6 +899,8 @@ impl<'s, 'a> Session<'s, 'a> {
         st.ready_ms = stage_ready;
         st.batches += 1;
         st.max_batch = st.max_batch.max(b);
+        self.batch_seq += 1;
+        let batch_id = self.batch_seq as f64;
         for &(i, effective_arrival) in &admitted {
             // The switch penalty is part of *service* (it delays this
             // query's inference), so it is excluded from queueing:
@@ -794,6 +930,63 @@ impl<'s, 'a> Session<'s, 'a> {
                 dropped: false,
                 slo_ok: Some(service <= slo.max_latency_ms),
             });
+            if self.tsink.enabled() {
+                self.tsink.emit(TraceEvent::new(
+                    trace::TR_REQ_QUEUE,
+                    self.trace_shard,
+                    task,
+                    Some(batch[i].id),
+                    effective_arrival,
+                    start_ms,
+                    &[],
+                ));
+                self.tsink.emit(TraceEvent::new(
+                    trace::TR_REQ_EXEC,
+                    self.trace_shard,
+                    task,
+                    Some(batch[i].id),
+                    start_ms,
+                    stage_ready,
+                    &[
+                        ("service_ms", service),
+                        ("queueing_ms", queueing_ms),
+                        ("cold_ms", cold_ms),
+                        ("warm_ms", warm_ms),
+                        ("link_ms", link_ms),
+                        ("throttle_ms", throttle_extra.max(0.0)),
+                        ("batch", batch_id),
+                        ("batch_size", b as f64),
+                        ("slo_ms", slo.max_latency_ms),
+                        (
+                            "slo_ok",
+                            if service <= slo.max_latency_ms { 1.0 } else { 0.0 },
+                        ),
+                    ],
+                ));
+                self.tsink.emit(TraceEvent::new(
+                    trace::TR_REQ_DONE,
+                    self.trace_shard,
+                    task,
+                    Some(batch[i].id),
+                    stage_ready,
+                    stage_ready,
+                    &[],
+                ));
+            }
+        }
+        // One audit record per batch that actually paid throttle
+        // stretch (the 1e-9 floor swallows float noise from the
+        // per-stage subtraction).
+        if self.tsink.enabled() && throttle_extra > 1e-9 {
+            self.tsink.emit(TraceEvent::new(
+                trace::TR_CTL_THROTTLE,
+                self.trace_shard,
+                task,
+                None,
+                start_ms,
+                stage_ready,
+                &[("extra_ms", throttle_extra), ("batch", batch_id)],
+            ));
         }
 
         // Fault lab: the first completion after a rejoin closes that
@@ -803,6 +996,17 @@ impl<'s, 'a> Session<'s, 'a> {
             for end in pending {
                 if stage_ready >= end {
                     self.recoveries.push(stage_ready - end);
+                    if self.tsink.enabled() {
+                        self.tsink.emit(TraceEvent::new(
+                            trace::TR_CTL_RECOVER,
+                            self.trace_shard,
+                            task,
+                            None,
+                            stage_ready,
+                            stage_ready,
+                            &[("latency_ms", stage_ready - end)],
+                        ));
+                    }
                 } else {
                     self.pending_recovery.push(end);
                 }
@@ -845,6 +1049,7 @@ impl<'s, 'a> Session<'s, 'a> {
                             }
                         }
                         st.pending_penalty_ms += penalty;
+                        st.pending_cold_ms += penalty;
                         st.comp = Some(new_comp);
                         st.accuracy = Some(coord.judged_accuracy(
                             p,
@@ -944,6 +1149,14 @@ impl<'s, 'a> Session<'s, 'a> {
         &self.prepared.order
     }
 
+    /// Stamp subsequent trace events with the true fleet shard index.
+    /// Sessions see themselves as shard 0 (their fault profile is
+    /// re-indexed that way); the sharded drives know the real topology
+    /// and call this right after opening each session.
+    pub(crate) fn set_trace_shard(&mut self, shard: usize) {
+        self.trace_shard = shard;
+    }
+
     /// Raise `task`'s per-task FIFO floor: its next query here cannot
     /// issue before `ms`. The stealing drive calls this on every shard
     /// serving a task after each of its batches completes anywhere, so
@@ -1001,6 +1214,7 @@ impl<'s, 'a> Session<'s, 'a> {
                         }
                     }
                     st.pending_penalty_ms += penalty;
+                    st.pending_cold_ms += penalty;
                 }
             }
             self.pending_recovery.push(w.end_ms);
@@ -1064,6 +1278,7 @@ impl<'s, 'a> Session<'s, 'a> {
         slo: Slo,
         selection: Option<crate::optimizer::Selection>,
         ready_floor_ms: f64,
+        link_ms: f64,
         warm: Option<Vec<(BlobId, u64)>>,
     ) -> Result<()> {
         if self.states.contains_key(task) {
@@ -1153,6 +1368,11 @@ impl<'s, 'a> Session<'s, 'a> {
         // cross-shard load for warm-transferred blobs, full cold
         // compile+load for everything else not resident.
         let mut penalty = 0.0;
+        // Warm/cold shares of `penalty` — tracked alongside it (never
+        // instead: the sum's addition order must stay bit-identical)
+        // for the adopted task's first `TR-REQ-EXEC` decomposition.
+        let mut warm_share = 0.0;
+        let mut cold_share = 0.0;
         if let Some(sel) = &sel {
             let tz = coord.zoo.task(task)?;
             let comp = p.space.composition(sel.stitched_index);
@@ -1163,8 +1383,11 @@ impl<'s, 'a> Session<'s, 'a> {
                 if warm_set.contains(&id) {
                     self.prepared.pool.touch(&id);
                     penalty += coord.lm.load_ms(bytes, proc);
+                    warm_share += coord.lm.load_ms(bytes, proc);
                 } else if !self.prepared.pool.touch(&id) {
                     penalty += coord.lm.compile_ms(bytes, proc)
+                        + coord.lm.load_ms(bytes, proc);
+                    cold_share += coord.lm.compile_ms(bytes, proc)
                         + coord.lm.load_ms(bytes, proc);
                     self.cold_compiles += 1;
                     self.prepared.pool.make_room(bytes);
@@ -1183,6 +1406,9 @@ impl<'s, 'a> Session<'s, 'a> {
                 accuracy,
                 ready_ms: ready_floor_ms,
                 pending_penalty_ms: penalty,
+                pending_cold_ms: cold_share,
+                pending_warm_ms: warm_share,
+                pending_link_ms: link_ms,
                 completed: 0,
                 lat_sum: 0.0,
                 lat_max: 0.0,
@@ -1216,7 +1442,44 @@ impl<'s, 'a> Session<'s, 'a> {
     /// by each task's projected-over-trailing load factor (horizon
     /// from [`Admission::Predictive`] when in effect, else the default
     /// `DEFAULT_FORECAST_HORIZON_MS` of 500 ms).
-    pub fn finish(self) -> RunReport {
+    pub fn finish(mut self) -> RunReport {
+        // Close out the trace: the session-open plan record and the
+        // fault profile's crash windows as shard-level spans. Emitted
+        // here — after the sharded drives stamped the true shard index —
+        // so the events carry the fleet-level shard, then canonicalized
+        // per session (stable time sort) before the shard-order merge.
+        if self.tsink.enabled() {
+            let planned_penalty_ms: f64 =
+                self.prepared.switch_penalty_ms.values().sum();
+            self.tsink.emit(TraceEvent::new(
+                trace::TR_CTL_PLAN,
+                self.trace_shard,
+                "",
+                None,
+                0.0,
+                0.0,
+                &[
+                    ("tasks", self.tasks.len() as f64),
+                    ("penalty_ms", planned_penalty_ms),
+                ],
+            ));
+            for w in &self.faults.crashes {
+                let ev = TraceEvent::new(
+                    trace::TR_CTL_CRASH,
+                    self.trace_shard,
+                    "",
+                    None,
+                    w.start_ms,
+                    w.end_ms,
+                    &[(
+                        "rejoin_cold",
+                        if w.rejoin == RejoinMode::Cold { 1.0 } else { 0.0 },
+                    )],
+                );
+                self.tsink.emit(ev);
+            }
+        }
+        let trace_events = trace::canonical(self.tsink.drain());
         let horizon_ms = match &self.admission {
             Admission::Predictive { horizon_ms, .. } => *horizon_ms,
             _ => DEFAULT_FORECAST_HORIZON_MS,
@@ -1288,6 +1551,7 @@ impl<'s, 'a> Session<'s, 'a> {
             downtime_ms,
             throttled_ms: self.sim.throttled_ms(),
             recoveries: self.recoveries,
+            trace: trace_events,
         }
     }
 }

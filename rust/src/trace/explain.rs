@@ -1,0 +1,207 @@
+//! SLO-violation attribution: replay a trace and charge every
+//! violation to exactly one dominant cause bucket.
+//!
+//! Buckets (fixed order; deterministic first-max tie-break):
+//!
+//! | bucket         | component of the miss                             |
+//! |----------------|---------------------------------------------------|
+//! | `queueing`     | `queueing_ms` — waiting before the first stage    |
+//! | `execution`    | `service_ms` minus all switch penalties — the     |
+//! |                | variant's own inference time                      |
+//! | `cold-compile` | cold switch penalty (compile + load) in service   |
+//! | `migration`    | warm-migration load penalty in service            |
+//! | `link`         | cross-shard transfer cost delaying the first      |
+//! |                | post-adoption batch                               |
+//! | `throttle`     | DVFS stretch delaying this batch's completion     |
+//! | `shed`         | the request never ran (admission shed, crash      |
+//! |                | swallow, no runnable variant)                     |
+//!
+//! A completed request misses when its `TR-REQ-EXEC` span says
+//! `slo_ok == 0`; the dominant (largest) component above wins. Every
+//! dropped request (`TR-REQ-SHED` / `TR-REQ-DROP`) lands in `shed`.
+//! Counts therefore reconcile exactly with `RunReport`:
+//! Σ misses = `slo_miss_count`, Σ shed = `total_dropped` — the
+//! trace-consistency invariant pass (`SL-INV-*`) enforces this.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::render_table;
+
+use super::{TraceEvent, TR_REQ_DONE, TR_REQ_DROP, TR_REQ_EXEC, TR_REQ_SHED};
+
+/// Attribution bucket labels, in dominance tie-break order.
+pub const BUCKETS: [&str; 7] = [
+    "queueing",
+    "execution",
+    "cold-compile",
+    "migration",
+    "link",
+    "throttle",
+    "shed",
+];
+
+/// Per-task and total violation attribution over one trace.
+#[derive(Clone, Debug, Default)]
+pub struct Attribution {
+    /// Bucket counts per task, indexed like [`BUCKETS`].
+    pub per_task: BTreeMap<String, [usize; 7]>,
+    /// Completed requests observed (`TR-REQ-DONE` count).
+    pub done: usize,
+    /// SLO misses attributed (each to exactly one bucket).
+    pub misses: usize,
+    /// Dropped requests attributed to `shed`.
+    pub sheds: usize,
+}
+
+impl Attribution {
+    /// Bucket totals across tasks, indexed like [`BUCKETS`].
+    pub fn totals(&self) -> [usize; 7] {
+        let mut t = [0usize; 7];
+        for counts in self.per_task.values() {
+            for (i, c) in counts.iter().enumerate() {
+                t[i] += c;
+            }
+        }
+        t
+    }
+}
+
+/// Attribute every SLO violation in `events` to a dominant bucket.
+pub fn attribute(events: &[TraceEvent]) -> Attribution {
+    let mut a = Attribution::default();
+    for ev in events {
+        match ev.code.as_str() {
+            TR_REQ_DONE => a.done += 1,
+            TR_REQ_SHED | TR_REQ_DROP => {
+                a.per_task.entry(ev.task.clone()).or_default()[6] += 1;
+                a.sheds += 1;
+            }
+            TR_REQ_EXEC => {
+                if ev.arg("slo_ok").unwrap_or(1.0) != 0.0 {
+                    continue;
+                }
+                let service = ev.arg("service_ms").unwrap_or(0.0);
+                let cold = ev.arg("cold_ms").unwrap_or(0.0);
+                let warm = ev.arg("warm_ms").unwrap_or(0.0);
+                let components = [
+                    ev.arg("queueing_ms").unwrap_or(0.0),
+                    (service - cold - warm).max(0.0),
+                    cold,
+                    warm,
+                    ev.arg("link_ms").unwrap_or(0.0),
+                    ev.arg("throttle_ms").unwrap_or(0.0),
+                ];
+                // First strict max wins — ties break toward the earlier
+                // bucket, deterministically.
+                let mut best = 0usize;
+                for (i, &c) in components.iter().enumerate() {
+                    if c > components[best] {
+                        best = i;
+                    }
+                }
+                a.per_task.entry(ev.task.clone()).or_default()[best] += 1;
+                a.misses += 1;
+            }
+            _ => {}
+        }
+    }
+    a
+}
+
+/// Render the per-task attribution table plus reconciliation lines.
+pub fn render(a: &Attribution) -> String {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (task, counts) in &a.per_task {
+        let mut row = vec![task.clone()];
+        row.push((counts.iter().take(6).sum::<usize>()).to_string());
+        row.extend(counts.iter().map(|c| c.to_string()));
+        rows.push(row);
+    }
+    let totals = a.totals();
+    let mut total_row = vec!["TOTAL".to_string(), a.misses.to_string()];
+    total_row.extend(totals.iter().map(|c| c.to_string()));
+    rows.push(total_row);
+    let headers = [
+        "task", "misses", "queueing", "execution", "cold", "migration", "link",
+        "throttle", "shed",
+    ];
+    let mut out = String::from("SLO-violation attribution (dominant cause per request)\n\n");
+    out.push_str(&render_table(&headers, &rows));
+    out.push('\n');
+    let attributed: usize = totals.iter().take(6).sum();
+    out.push_str(&format!(
+        "attributed {attributed}/{} misses and {}/{} drops ({} requests completed)\n",
+        a.misses, totals[6], a.sheds, a.done
+    ));
+    let named: Vec<String> = BUCKETS
+        .iter()
+        .zip(totals.iter())
+        .map(|(b, c)| format!("{b}={c}"))
+        .collect();
+    out.push_str(&format!("buckets: {}\n", named.join(" ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{TR_REQ_DONE, TR_REQ_DROP, TR_REQ_EXEC, TR_REQ_SHED};
+
+    fn exec(task: &str, slo_ok: f64, args: &[(&str, f64)]) -> TraceEvent {
+        let mut all = vec![("slo_ok", slo_ok)];
+        all.extend_from_slice(args);
+        TraceEvent::new(TR_REQ_EXEC, 0, task, Some(1), 0.0, 1.0, &all)
+    }
+
+    #[test]
+    fn dominant_component_wins_and_every_miss_gets_one_bucket() {
+        let events = vec![
+            // Queueing dominates.
+            exec("a", 0.0, &[("service_ms", 5.0), ("queueing_ms", 40.0)]),
+            // Cold compile dominates (service = 30 of which cold = 25).
+            exec("a", 0.0, &[
+                ("service_ms", 30.0),
+                ("cold_ms", 25.0),
+                ("queueing_ms", 2.0),
+            ]),
+            // Throttle dominates.
+            exec("b", 0.0, &[("service_ms", 3.0), ("throttle_ms", 50.0)]),
+            // SLO met: not attributed.
+            exec("b", 1.0, &[("service_ms", 3.0), ("queueing_ms", 99.0)]),
+            TraceEvent::new(TR_REQ_DONE, 0, "a", Some(1), 1.0, 1.0, &[]),
+            TraceEvent::new(TR_REQ_SHED, 0, "b", Some(2), 2.0, 2.0, &[]),
+            TraceEvent::new(TR_REQ_DROP, 0, "b", Some(3), 3.0, 3.0, &[]),
+        ];
+        let a = attribute(&events);
+        assert_eq!(a.misses, 3);
+        assert_eq!(a.sheds, 2);
+        assert_eq!(a.done, 1);
+        let t = a.totals();
+        assert_eq!(t[0], 1, "queueing");
+        assert_eq!(t[2], 1, "cold-compile");
+        assert_eq!(t[5], 1, "throttle");
+        assert_eq!(t[6], 2, "shed");
+        // Exactly one bucket per violation.
+        assert_eq!(t.iter().sum::<usize>(), a.misses + a.sheds);
+        let text = render(&a);
+        assert!(text.contains("TOTAL"));
+        assert!(text.contains("attributed 3/3 misses"));
+        assert!(text.contains("shed=2"));
+    }
+
+    #[test]
+    fn execution_component_excludes_penalties() {
+        // service 20 = 12 exec + 8 cold: execution dominates.
+        let a = attribute(&[exec("a", 0.0, &[
+            ("service_ms", 20.0),
+            ("cold_ms", 8.0),
+        ])]);
+        assert_eq!(a.totals()[1], 1);
+        // service 20 = 6 exec + 14 warm-migration: migration dominates.
+        let b = attribute(&[exec("a", 0.0, &[
+            ("service_ms", 20.0),
+            ("warm_ms", 14.0),
+        ])]);
+        assert_eq!(b.totals()[3], 1);
+    }
+}

@@ -1,0 +1,440 @@
+//! Deterministic structured tracing: request-lifecycle spans and
+//! control-plane audit events for every serving run.
+//!
+//! Two event families share one record shape ([`TraceEvent`]):
+//!
+//! * **`TR-REQ-*`** — the life of one query: arrive → admit/shed →
+//!   queue → execute → done/drop, stamped with shard, task, request id,
+//!   and virtual-time begin/end. The `TR-REQ-EXEC` span carries the
+//!   full latency decomposition (`service_ms`, the cold/warm/link
+//!   penalty split, throttle stretch, batch id and size) that
+//!   [`explain`] attributes SLO violations with.
+//! * **`TR-CTL-*`** — control-plane decisions: plan, steal, replan,
+//!   warm migration (with link cost), crash redirect, crash/recover,
+//!   throttle debt. Each carries the inputs that drove the decision
+//!   (observed vs forecast backlog, the saturation threshold, the
+//!   remaining migration budget), so every adaptive move is auditable.
+//!
+//! Everything is a pure function of virtual time — no RNG, no wall
+//! clock — so the same scenario + seed yields a byte-identical trace.
+//! Determinism across the threaded drives comes from the same argument
+//! as the metrics merge: per-shard events live in session-local sinks
+//! that only their own shard thread touches, are drained in
+//! shard-index order at phase end, and control events are emitted only
+//! from coordinator-sequential code. [`canonical`] then stable-sorts
+//! the concatenation by `begin_ms`, which preserves the (identical)
+//! shard-order tie-break — so threaded and sequential runs produce the
+//! same bytes, and the file is globally time-sorted (the `SL-TRC-003`
+//! monotonicity lint holds by construction).
+//!
+//! Emission goes through the cheap [`TraceSink`] trait: [`NoopSink`]
+//! by default (disabled tracing retains zero events and perturbs
+//! nothing), [`RingSink`] when `ServeOpts::trace` is set.
+
+pub mod explain;
+pub mod export;
+
+use std::fmt::Write as _;
+
+use crate::analysis::{Diagnostic, Report};
+use crate::json::{self, Json};
+
+// ---- reason codes ------------------------------------------------------
+
+/// Query entered the system (point, effective arrival).
+pub const TR_REQ_ARRIVE: &str = "TR-REQ-ARRIVE";
+/// Admission accepted the query (point; args: observed backlog).
+pub const TR_REQ_ADMIT: &str = "TR-REQ-ADMIT";
+/// Admission shed the query (point; args: observed backlog, projected
+/// growth, the headroom budget it exceeded).
+pub const TR_REQ_SHED: &str = "TR-REQ-SHED";
+/// Query dropped outside admission (args: `cause` — 1 crash-swallowed,
+/// 2 no runnable variant, 3 unsupported processor).
+pub const TR_REQ_DROP: &str = "TR-REQ-DROP";
+/// Queueing span: effective arrival → first stage start.
+pub const TR_REQ_QUEUE: &str = "TR-REQ-QUEUE";
+/// Execution span: first stage start → batch completion. Carries the
+/// full latency decomposition (see [`explain`]).
+pub const TR_REQ_EXEC: &str = "TR-REQ-EXEC";
+/// Query completed (point at the execution span's end).
+pub const TR_REQ_DONE: &str = "TR-REQ-DONE";
+
+/// Session opened with its planned placement (point at virtual 0).
+pub const TR_CTL_PLAN: &str = "TR-CTL-PLAN";
+/// A saturated shard's batch was served by a thief shard.
+pub const TR_CTL_STEAL: &str = "TR-CTL-STEAL";
+/// The planner chose a migration victim (decision inputs attached).
+pub const TR_CTL_REPLAN: &str = "TR-CTL-REPLAN";
+/// A task was adopted by another shard (steal bootstrap, crash
+/// redirect, or replan), with its warm-payload size and link cost.
+pub const TR_CTL_MIGRATE: &str = "TR-CTL-MIGRATE";
+/// A batch headed for a crashed shard was rerouted to a live one.
+pub const TR_CTL_REDIRECT: &str = "TR-CTL-REDIRECT";
+/// Crash window span (from the fault profile, per shard).
+pub const TR_CTL_CRASH: &str = "TR-CTL-CRASH";
+/// First completion after a crash rejoin (args: recovery latency).
+pub const TR_CTL_RECOVER: &str = "TR-CTL-RECOVER";
+/// A batch paid DVFS throttle stretch (args: extra booked ms).
+pub const TR_CTL_THROTTLE: &str = "TR-CTL-THROTTLE";
+
+/// Every reason code this crate emits — the registry `SL-TRC-002`
+/// checks unknown codes against. Append-only.
+pub const KNOWN_CODES: &[&str] = &[
+    TR_REQ_ARRIVE,
+    TR_REQ_ADMIT,
+    TR_REQ_SHED,
+    TR_REQ_DROP,
+    TR_REQ_QUEUE,
+    TR_REQ_EXEC,
+    TR_REQ_DONE,
+    TR_CTL_PLAN,
+    TR_CTL_STEAL,
+    TR_CTL_REPLAN,
+    TR_CTL_MIGRATE,
+    TR_CTL_REDIRECT,
+    TR_CTL_CRASH,
+    TR_CTL_RECOVER,
+    TR_CTL_THROTTLE,
+];
+
+/// `TR-REQ-DROP` cause argument: crash window swallowed the query.
+pub const DROP_CAUSE_CRASH: f64 = 1.0;
+/// `TR-REQ-DROP` cause argument: the task has no runnable variant.
+pub const DROP_CAUSE_NO_VARIANT: f64 = 2.0;
+/// `TR-REQ-DROP` cause argument: variant unsupported on its processor.
+pub const DROP_CAUSE_UNSUPPORTED: f64 = 3.0;
+
+// ---- the event record --------------------------------------------------
+
+/// One trace record. Points have `begin_ms == end_ms`; spans have
+/// `end_ms >= begin_ms`. `args` hold the numeric decision inputs /
+/// latency decomposition, in emission order (serialization sorts keys,
+/// so the on-disk form is order-independent anyway).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub code: String,
+    /// True (fleet-level) shard index — sessions are re-stamped by the
+    /// sharded drives, which see the real topology.
+    pub shard: usize,
+    /// Task the event concerns (empty for shard-level events).
+    pub task: String,
+    /// Request id for `TR-REQ-*` events; `None` for control events.
+    pub id: Option<u64>,
+    pub begin_ms: f64,
+    pub end_ms: f64,
+    pub args: Vec<(String, f64)>,
+}
+
+impl TraceEvent {
+    /// Build an event; `args` keys are static for cheap emission.
+    pub fn new(
+        code: &str,
+        shard: usize,
+        task: &str,
+        id: Option<u64>,
+        begin_ms: f64,
+        end_ms: f64,
+        args: &[(&str, f64)],
+    ) -> TraceEvent {
+        TraceEvent {
+            code: code.to_string(),
+            shard,
+            task: task.to_string(),
+            id,
+            begin_ms,
+            end_ms,
+            args: args.iter().map(|&(k, v)| (k.to_string(), v)).collect(),
+        }
+    }
+
+    /// Look up a named argument.
+    pub fn arg(&self, key: &str) -> Option<f64> {
+        self.args.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+
+    /// One JSON object (the JSONL line payload).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("code", Json::Str(self.code.clone())),
+            ("shard", Json::Num(self.shard as f64)),
+            ("task", Json::Str(self.task.clone())),
+            ("begin_ms", Json::Num(self.begin_ms)),
+            ("end_ms", Json::Num(self.end_ms)),
+            (
+                "args",
+                Json::Obj(
+                    self.args
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(id) = self.id {
+            fields.push(("id", Json::Num(id as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse one JSONL object back into an event.
+    pub fn from_json(v: &Json) -> Result<TraceEvent, String> {
+        let code = v
+            .get("code")
+            .and_then(|c| c.as_str())
+            .ok_or("missing string field \"code\"")?
+            .to_string();
+        let shard = v
+            .get("shard")
+            .and_then(|s| s.as_usize())
+            .ok_or("missing integer field \"shard\"")?;
+        let task = v
+            .get("task")
+            .and_then(|t| t.as_str())
+            .ok_or("missing string field \"task\"")?
+            .to_string();
+        let begin_ms = v
+            .get("begin_ms")
+            .and_then(|b| b.as_f64())
+            .ok_or("missing number field \"begin_ms\"")?;
+        let end_ms = v
+            .get("end_ms")
+            .and_then(|e| e.as_f64())
+            .ok_or("missing number field \"end_ms\"")?;
+        let id = v.get("id").and_then(|i| i.as_u64());
+        let mut args = Vec::new();
+        if let Some(obj) = v.get("args").and_then(|a| a.as_obj()) {
+            for (k, val) in obj {
+                let n = val
+                    .as_f64()
+                    .ok_or_else(|| format!("non-numeric arg {k:?}"))?;
+                args.push((k.clone(), n));
+            }
+        }
+        Ok(TraceEvent { code, shard, task, id, begin_ms, end_ms, args })
+    }
+}
+
+// ---- sinks -------------------------------------------------------------
+
+/// Where sessions put events. The trait is deliberately tiny so the
+/// disabled path costs one virtual call on a `bool` check per batch.
+pub trait TraceSink: Send {
+    /// Whether emission is on — callers skip building event args when
+    /// this is false.
+    fn enabled(&self) -> bool;
+    fn emit(&mut self, ev: TraceEvent);
+    /// Take everything recorded so far (drained at session finish).
+    fn drain(&mut self) -> Vec<TraceEvent>;
+}
+
+/// The default sink: records nothing, allocates nothing.
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn emit(&mut self, _ev: TraceEvent) {}
+    fn drain(&mut self) -> Vec<TraceEvent> {
+        Vec::new()
+    }
+}
+
+/// In-memory buffering sink (unbounded; traces are opt-in and runs are
+/// finite virtual horizons).
+#[derive(Default)]
+pub struct RingSink {
+    events: Vec<TraceEvent>,
+}
+
+impl TraceSink for RingSink {
+    fn enabled(&self) -> bool {
+        true
+    }
+    fn emit(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+    fn drain(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+/// The sink `ServeOpts::trace` selects.
+pub fn sink_for(enabled: bool) -> Box<dyn TraceSink> {
+    if enabled {
+        Box::new(RingSink::default())
+    } else {
+        Box::new(NoopSink)
+    }
+}
+
+// ---- canonical assembly ------------------------------------------------
+
+/// Canonicalize a trace: stable sort by `begin_ms` (IEEE total order).
+/// The input concatenation (shard-index order, control events last) is
+/// identical for threaded and sequential runs, and a stable sort
+/// preserves that order among ties — so the canonical trace is
+/// bit-identical across drive modes *and* globally time-sorted.
+pub fn canonical(mut events: Vec<TraceEvent>) -> Vec<TraceEvent> {
+    events.sort_by(|a, b| a.begin_ms.total_cmp(&b.begin_ms));
+    events
+}
+
+// ---- JSON Lines export / import ---------------------------------------
+
+/// Serialize a trace as JSON Lines: one compact JSON object per event,
+/// in trace order.
+pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        let _ = writeln!(out, "{}", ev.to_json());
+    }
+    out
+}
+
+/// Parse a JSONL trace, collecting `SL-TRC-*` diagnostics:
+///
+/// * `SL-TRC-001` (error) — empty/truncated file or a malformed line
+///   (a partially-written trace cut mid-object parses as this).
+/// * `SL-TRC-002` (warn) — a reason code outside [`KNOWN_CODES`]
+///   (a newer writer, or a hand-edited file); the event is kept.
+/// * `SL-TRC-003` (error) — virtual time runs backwards (`begin_ms`
+///   not monotone non-decreasing); canonical traces are time-sorted,
+///   so this only fires on corrupted or re-ordered files.
+///
+/// Events that parsed are returned even when diagnostics fired, so
+/// callers can decide severity via [`Report::fail_on_errors`].
+pub fn parse_jsonl(text: &str) -> (Vec<TraceEvent>, Report) {
+    let mut report = Report::default();
+    let mut events = Vec::new();
+    let mut last_begin = f64::NEG_INFINITY;
+    let mut any_line = false;
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        any_line = true;
+        let at = format!("line {}", lineno + 1);
+        let parsed = match json::parse(line) {
+            Ok(v) => v,
+            Err(e) => {
+                report.push(Diagnostic::error(
+                    "SL-TRC-001",
+                    at.as_str(),
+                    format!("truncated or malformed trace line: {e}"),
+                ));
+                continue;
+            }
+        };
+        let ev = match TraceEvent::from_json(&parsed) {
+            Ok(ev) => ev,
+            Err(e) => {
+                report.push(Diagnostic::error(
+                    "SL-TRC-001",
+                    at.as_str(),
+                    format!("malformed trace event: {e}"),
+                ));
+                continue;
+            }
+        };
+        if !KNOWN_CODES.contains(&ev.code.as_str()) {
+            report.push(Diagnostic::warn(
+                "SL-TRC-002",
+                at.as_str(),
+                format!("unknown reason code {:?} (kept as-is)", ev.code),
+            ));
+        }
+        if ev.begin_ms < last_begin - 1e-9 {
+            report.push(Diagnostic::error(
+                "SL-TRC-003",
+                at.as_str(),
+                format!(
+                    "virtual time runs backwards: begin_ms {} after {}",
+                    ev.begin_ms, last_begin
+                ),
+            ));
+        }
+        last_begin = last_begin.max(ev.begin_ms);
+        events.push(ev);
+    }
+    if !any_line {
+        report.push(Diagnostic::error(
+            "SL-TRC-001",
+            "trace",
+            "empty trace file (truncated before any event was written?)"
+                .to_string(),
+        ));
+    }
+    (events, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(code: &str, begin: f64, end: f64) -> TraceEvent {
+        TraceEvent::new(code, 0, "alpha", Some(1), begin, end, &[("x", 1.5)])
+    }
+
+    #[test]
+    fn jsonl_round_trips_bit_exact() {
+        let events = vec![
+            ev(TR_REQ_ARRIVE, 0.0, 0.0),
+            ev(TR_REQ_EXEC, 0.25, 17.5),
+            TraceEvent::new(TR_CTL_STEAL, 2, "", None, 30.0, 30.0, &[
+                ("thief", 2.0),
+                ("home", 0.0),
+            ]),
+        ];
+        let text = to_jsonl(&events);
+        let (parsed, report) = parse_jsonl(&text);
+        assert!(!report.has_errors(), "{}", report.render_text());
+        assert_eq!(parsed, events);
+        // Re-serialization is byte-identical (the determinism contract).
+        assert_eq!(to_jsonl(&parsed), text);
+    }
+
+    #[test]
+    fn canonical_is_stable_on_ties() {
+        let a = TraceEvent::new(TR_REQ_DONE, 0, "a", Some(1), 5.0, 5.0, &[]);
+        let b = TraceEvent::new(TR_REQ_DONE, 1, "b", Some(2), 5.0, 5.0, &[]);
+        let c = TraceEvent::new(TR_REQ_ARRIVE, 1, "b", Some(2), 1.0, 1.0, &[]);
+        let sorted = canonical(vec![a.clone(), b.clone(), c.clone()]);
+        assert_eq!(sorted, vec![c, a, b], "ties keep input (shard) order");
+    }
+
+    #[test]
+    fn lints_flag_truncated_unknown_and_backwards() {
+        // Truncated line (cut mid-object).
+        let (_, r) = parse_jsonl("{\"code\":\"TR-REQ-DONE\",\"sha");
+        assert!(r.render_text().contains("SL-TRC-001"));
+        assert!(r.has_errors());
+        // Unknown code: warn, event kept.
+        let odd = TraceEvent::new("TR-XXX-9", 0, "t", None, 1.0, 1.0, &[]);
+        let (evs, r) = parse_jsonl(&to_jsonl(&[odd]));
+        assert_eq!(evs.len(), 1);
+        assert!(r.render_text().contains("SL-TRC-002"));
+        assert!(!r.has_errors(), "unknown codes are warnings, not errors");
+        // Non-monotone virtual time.
+        let text = to_jsonl(&[ev(TR_REQ_DONE, 9.0, 9.0), ev(TR_REQ_DONE, 3.0, 3.0)]);
+        let (_, r) = parse_jsonl(&text);
+        assert!(r.render_text().contains("SL-TRC-003"));
+        assert!(r.has_errors());
+        // Empty file.
+        let (_, r) = parse_jsonl("");
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn noop_sink_retains_nothing() {
+        let mut sink = sink_for(false);
+        assert!(!sink.enabled());
+        sink.emit(ev(TR_REQ_ARRIVE, 0.0, 0.0));
+        assert!(sink.drain().is_empty());
+        let mut ring = sink_for(true);
+        assert!(ring.enabled());
+        ring.emit(ev(TR_REQ_ARRIVE, 0.0, 0.0));
+        assert_eq!(ring.drain().len(), 1);
+        assert!(ring.drain().is_empty(), "drain empties the buffer");
+    }
+}

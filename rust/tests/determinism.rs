@@ -12,11 +12,15 @@ use std::collections::BTreeMap;
 use sparseloom::coordinator::ServeOpts;
 use sparseloom::fixtures;
 use sparseloom::metrics::{RunReport, ShardedReport};
+use sparseloom::profiler::TaskProfile;
 use sparseloom::scenario::{
     Admission, CrashWindow, Degradation, Dispatch, Expect, FaultProfile, LinkMatrix,
     PlannerConfig, RejoinMode, Scenario, Server, ShardedServer, Sharding, ThrottleCurve,
     ThrottleStep,
 };
+use sparseloom::soc::LatencyModel;
+use sparseloom::trace;
+use sparseloom::zoo::Zoo;
 
 /// Bit-exact report equality: counts, per-request timeline, and the
 /// forecast map (f64s compared through `to_bits` — "close" is not
@@ -345,6 +349,160 @@ fn streaming_metrics_match_retained_run_without_event_log() {
             "{}",
             x.task
         );
+    }
+}
+
+/// The full fault lab on the quartet fixture (crash + degradation +
+/// throttle + priced links), riding the online stack — `epoch_ms > 0`
+/// selects the epoch-barrier drive, `0.0` the classic one.
+fn fault_lab_scenario(
+    epoch_ms: f64,
+) -> (Zoo, LatencyModel, BTreeMap<String, TaskProfile>, Scenario) {
+    let (zoo, lm, profiles) = fixtures::quartet();
+    let tasks = fixtures::task_names(&zoo);
+    let slos = fixtures::slos(&zoo, 0.5, 60.0);
+    let map = BTreeMap::from([
+        ("alpha".to_string(), 0),
+        ("beta".to_string(), 0),
+        ("delta".to_string(), 0),
+        ("gamma".to_string(), 1),
+    ]);
+    let faults = FaultProfile {
+        crashes: vec![CrashWindow {
+            shard: 0,
+            start_ms: 400.0,
+            end_ms: 900.0,
+            rejoin: RejoinMode::Warm,
+        }],
+        degradations: vec![Degradation {
+            shard: 1,
+            start_ms: 200.0,
+            ramp_ms: 400.0,
+            factor: 1.5,
+        }],
+        throttle: Some(ThrottleCurve {
+            steps: vec![ThrottleStep { busy_ms: 100.0, factor: 1.3 }],
+        }),
+        links: Some(LinkMatrix { transfer_ms: vec![vec![0.0, 2.0], vec![2.0, 0.0]] }),
+        expects: vec![Expect::MinCompleted { task: None, at_least: 1 }],
+    };
+    let sc = Scenario::bursty(&tasks, slos, 4.0, 100.0, 500.0, 3_000.0)
+        .with_seed(11)
+        .with_admission(Admission::Deadline { slack: 2.0 })
+        .with_dispatch(Dispatch::batched(4))
+        .with_sharding(Sharding::explicit(map, 2))
+        .with_planner(PlannerConfig {
+            epoch_ms,
+            max_migrations: 2,
+            ..PlannerConfig::online()
+        })
+        .with_faults(faults);
+    (zoo, lm, profiles, sc)
+}
+
+#[test]
+fn traced_jsonl_is_byte_identical_across_drive_modes() {
+    // The determinism contract `explain` and the CI smoke ride on: the
+    // canonical JSONL trace — request spans and control-plane audit
+    // events — must come out byte-for-byte identical from the threaded
+    // and sequential drives, for the classic and epoch-barrier online
+    // stacks alike, under the full fault lab.
+    for epoch_ms in [0.0, 25.0] {
+        let (zoo, lm, profiles, sc) = fault_lab_scenario(epoch_ms);
+        let run = |parallel: bool| -> ShardedReport {
+            let opts = ServeOpts {
+                batch_hint: 4.0,
+                parallel,
+                trace: true,
+                ..Default::default()
+            };
+            ShardedServer::build(&zoo, &lm, &profiles, opts, sc.sharding.clone())
+                .unwrap()
+                .run(&sc)
+                .unwrap()
+        };
+        let threaded = run(true);
+        let sequential = run(false);
+        let a = trace::to_jsonl(&threaded.canonical_trace());
+        let b = trace::to_jsonl(&sequential.canonical_trace());
+        assert!(!a.is_empty(), "epoch_ms={epoch_ms}: traced run produced no events");
+        assert_eq!(a, b, "epoch_ms={epoch_ms}: drives disagree on trace bytes");
+        let again = trace::to_jsonl(&run(true).canonical_trace());
+        assert_eq!(a, again, "epoch_ms={epoch_ms}: threaded drive unstable");
+        // The fault lab actually left audit records behind.
+        for code in ["TR-REQ-EXEC", "TR-CTL-CRASH", "TR-CTL-THROTTLE"] {
+            assert!(a.contains(code), "epoch_ms={epoch_ms}: no {code} in trace");
+        }
+        // The file replays through the importer without diagnostics,
+        // and the attribution totals reconcile with the report.
+        let (events, lint) = trace::parse_jsonl(&a);
+        assert!(!lint.has_errors(), "{}", lint.render_text());
+        let att = trace::explain::attribute(&events);
+        assert_eq!(att.done, threaded.aggregate.total_queries);
+        assert_eq!(att.misses, threaded.aggregate.slo_miss_count);
+        let totals = att.totals();
+        assert_eq!(
+            totals.iter().take(6).sum::<usize>(),
+            att.misses,
+            "every SLO miss lands in exactly one cause bucket"
+        );
+        assert_eq!(totals[6], threaded.aggregate.total_dropped);
+    }
+}
+
+#[test]
+fn traced_static_shards_match_sequential_bit_for_bit() {
+    // Same contract on the static sharded drive, where every shard
+    // thread writes request spans concurrently.
+    let (zoo, lm, profiles, sharding) = fixtures::fleet(4, 8);
+    let tasks = fixtures::task_names(&zoo);
+    let sc = Scenario::poisson(&tasks, fixtures::slos(&zoo, 0.5, 80.0), 30.0, 1_500.0)
+        .with_seed(5)
+        .with_dispatch(Dispatch::batched(4))
+        .with_sharding(sharding);
+    let run = |parallel: bool| -> ShardedReport {
+        let opts = ServeOpts { parallel, trace: true, ..Default::default() };
+        ShardedServer::build(&zoo, &lm, &profiles, opts, sc.sharding.clone())
+            .unwrap()
+            .run(&sc)
+            .unwrap()
+    };
+    let threaded = run(true);
+    let sequential = run(false);
+    let a = trace::to_jsonl(&threaded.canonical_trace());
+    let b = trace::to_jsonl(&sequential.canonical_trace());
+    assert!(!a.is_empty(), "traced run produced no events");
+    assert_eq!(a, b, "static drives disagree on trace bytes");
+}
+
+#[test]
+fn disabled_tracing_retains_nothing_and_perturbs_nothing() {
+    // The no-op sink contract: with `trace` off no events are retained
+    // anywhere, and turning tracing on changes nothing outside the
+    // trace itself — virtual time never observes the observer.
+    let (zoo, lm, profiles, sc) = fault_lab_scenario(25.0);
+    let run = |traced: bool| -> ShardedReport {
+        let opts = ServeOpts { batch_hint: 4.0, trace: traced, ..Default::default() };
+        ShardedServer::build(&zoo, &lm, &profiles, opts, sc.sharding.clone())
+            .unwrap()
+            .run(&sc)
+            .unwrap()
+    };
+    let untraced = run(false);
+    assert!(untraced.canonical_trace().is_empty());
+    assert!(untraced.aggregate.trace.is_empty());
+    for shard in &untraced.per_shard {
+        assert!(shard.trace.is_empty(), "no-op sink retained events");
+    }
+    let traced = run(true);
+    assert!(!traced.canonical_trace().is_empty());
+    assert_eq!(traced.replans, untraced.replans);
+    assert_eq!(traced.migrations, untraced.migrations);
+    assert_eq!(traced.steals, untraced.steals);
+    assert_eq!(traced.link_cost_ms.to_bits(), untraced.link_cost_ms.to_bits());
+    assert_identical(&traced.aggregate, &untraced.aggregate);
+    for (x, y) in traced.per_shard.iter().zip(&untraced.per_shard) {
+        assert_identical(x, y);
     }
 }
 

@@ -4,9 +4,12 @@
 #   CI_TIER=1  → tier 1 only: cargo build --release + cargo test -q
 #                (the ROADMAP tier-1 gate; `make check` runs this)
 #   CI_TIER=2  → tier 2 only: benches, rustdoc, clippy, fmt, and the
-#                hermetic CLI smoke stage — serve/backlog runs plus the
+#                hermetic CLI smoke stage — serve/backlog runs, the
 #                sparselint stage (lint every shipped scenario, exercise
-#                the corrupt-input path, and a serve --verify replay).
+#                the corrupt-input path, and a serve --verify replay),
+#                and the trace stage (serve --trace in both formats,
+#                explain attribution, the --json report paths, and the
+#                traced-vs-untraced overhead gate riding bench --gate).
 #                Assumes nothing is prebuilt; the smoke stage builds the
 #                release binary itself.
 #   unset      → both tiers, tier 1 first so its failures surface fast
@@ -95,7 +98,74 @@ smoke() {
     fi
 
     lint_smoke "$bin"
+    trace_smoke "$bin"
     bench_smoke "$bin"
+}
+
+# Tracing smoke: a traced fault-lab serve must write a replayable JSONL
+# trace (byte-determinism is pinned by tests/determinism.rs; this stage
+# pins the CLI plumbing), export valid Chrome trace-event JSON, and
+# `explain` must attribute the run's SLO violations and drops to
+# nonzero cause buckets. Also exercises the machine-readable report
+# path (`serve --json`).
+trace_smoke() {
+    local bin="$1"
+    local out jsonl chrome
+    echo "== [tier 2] trace smoke (serve --trace, explain, serve --json) =="
+    jsonl="$(mktemp)"
+    chrome="$(mktemp)"
+
+    out="$("$bin" serve --fixture --scenario-file examples/scenarios/crash_recover.json \
+        --verify --trace "$jsonl")"
+    printf '%s\n' "$out"
+    if ! grep -Eq "wrote [1-9][0-9]* trace event" <<<"$out"; then
+        echo "trace smoke FAILED: serve --trace wrote no trace events" >&2
+        rm -f "$jsonl" "$chrome"
+        exit 1
+    fi
+    if ! grep -q "invariants OK" <<<"$out"; then
+        echo "trace smoke FAILED: traced run failed the invariant replay" >&2
+        rm -f "$jsonl" "$chrome"
+        exit 1
+    fi
+
+    out="$("$bin" serve --fixture --scenario-file examples/scenarios/crash_recover.json \
+        --verify --trace "$chrome" --trace-format chrome)"
+    printf '%s\n' "$out"
+
+    out="$("$bin" explain "$chrome")"
+    printf '%s\n' "$out"
+    if ! grep -q "chrome trace OK" <<<"$out"; then
+        echo "trace smoke FAILED: Chrome export did not validate" >&2
+        rm -f "$jsonl" "$chrome"
+        exit 1
+    fi
+
+    out="$("$bin" explain "$jsonl")"
+    printf '%s\n' "$out"
+    if ! grep -q "SLO-violation attribution" <<<"$out"; then
+        echo "trace smoke FAILED: explain produced no attribution report" >&2
+        rm -f "$jsonl" "$chrome"
+        exit 1
+    fi
+    if ! grep -Eq "buckets: .*[1-9]" <<<"$out"; then
+        echo "trace smoke FAILED: explain attributed nothing on the fault-lab run" >&2
+        rm -f "$jsonl" "$chrome"
+        exit 1
+    fi
+    rm -f "$jsonl" "$chrome"
+
+    out="$("$bin" serve --fixture --scenario bursty --rate-qps 20 --burst-qps 120 \
+        --period-ms 400 --horizon-ms 1500 --shards 2 --max-batch 4 --json)"
+    if ! grep -q '"total_queries"' <<<"$out"; then
+        echo "trace smoke FAILED: serve --json emitted no structured report" >&2
+        exit 1
+    fi
+    out="$("$bin" exp backlog --fixture --horizon-ms 1500 --json)"
+    if ! grep -q '"arms"' <<<"$out"; then
+        echo "trace smoke FAILED: exp backlog --json emitted no arms array" >&2
+        exit 1
+    fi
 }
 
 # Fleet bench smoke + throughput regression gate: `sparseloom bench`
@@ -120,6 +190,11 @@ bench_smoke() {
     printf '%s\n' "$out"
     if ! grep -q "throughput gate OK" <<<"$out"; then
         echo "bench smoke FAILED: regression gate did not report OK" >&2
+        rm -f "$tmp"
+        exit 1
+    fi
+    if ! grep -q "trace overhead gate OK" <<<"$out"; then
+        echo "bench smoke FAILED: trace overhead gate did not report OK" >&2
         rm -f "$tmp"
         exit 1
     fi
