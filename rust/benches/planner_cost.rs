@@ -9,7 +9,8 @@ use std::collections::BTreeMap;
 
 use sparseloom::benchkit::Bench;
 use sparseloom::fixtures;
-use sparseloom::planner::{algo, CostModel};
+use sparseloom::planner::provider::SynthesizingProvider;
+use sparseloom::planner::{algo, CostModel, PressureSignal, VariantProvider, VariantQuery};
 use sparseloom::profiler::TaskProfile;
 use sparseloom::soc::Processor;
 use sparseloom::workload::{placement_orders, Slo};
@@ -78,6 +79,35 @@ fn main() {
     });
     b.case("optimize batch-aware, 3 tasks", || {
         algo::optimize(&batched, &profiles, &slos, &orders).mean_latency_ms
+    });
+
+    // Synthesis-scored candidates: the best-first stitch-space search
+    // the online `--synthesize` action runs under pressure, cold
+    // (cache cleared every iteration) and warm (pure cache hit).
+    let provider = SynthesizingProvider::new(&zoo, &lm, &profiles, orders.clone());
+    let query = VariantQuery {
+        task: "beta".to_string(),
+        slo: Slo { min_accuracy: 0.6, max_latency_ms: 30.0 },
+        feasible_orders: Vec::new(),
+        commit_order: None,
+        batch: 4.0,
+        pool_share: u64::MAX,
+        phase: 0,
+        pressure: Some(PressureSignal {
+            forecast_ms: 50.0,
+            threshold_ms: 10.0,
+            pool_utilization: 0.5,
+        }),
+    };
+    b.case("synthesize cold (search)", || {
+        provider.invalidate();
+        provider.provide(&query).map(|d| d.stats.evaluated).unwrap_or(0)
+    });
+    provider.invalidate();
+    let cold = provider.provide(&query).expect("feasible under a lax share");
+    assert!(cold.stats.evaluated > 0, "search must score candidates");
+    b.case("synthesize warm (cache hit)", || {
+        provider.provide(&query).map(|d| d.stats.cache_hit as usize).unwrap_or(0)
     });
 
     // Sanity: the prune must not change the result.

@@ -33,6 +33,7 @@ pub fn lint_scenario(sc: &Scenario) -> Report {
     lint_sharding_vs_tasks(&sc.sharding, &sc.tasks, &mut r);
     lint_faults(sc, &mut r);
     lint_cross_layer(sc, &mut r);
+    lint_stitching(sc, &mut r);
     r
 }
 
@@ -728,6 +729,48 @@ fn lint_cross_layer(sc: &Scenario, r: &mut Report) {
     }
 }
 
+// ---- online synthesis checks (`SL-STI-*`) ----------------------------
+
+/// Stitch-synthesis configuration checks: the `planner.synthesize`
+/// action only fires on the online drive, under the same saturation
+/// trigger as replan/steal, and scores candidates at the live batch
+/// operating point — configurations that contradict any of that are
+/// flagged here.
+fn lint_stitching(sc: &Scenario, r: &mut Report) {
+    let p = &sc.planner;
+    if !p.synthesize {
+        return;
+    }
+    if !p.batch_aware {
+        r.push(Diagnostic::warn(
+            "SL-STI-001",
+            "planner.synthesize",
+            "online synthesis scores candidates at the live batch operating point; \
+             without batch_aware the enumerated plan prices latency at batch 1 and \
+             the two disagree on what is feasible",
+        ));
+    }
+    if matches!(sc.arrival, Arrival::ClosedLoop { .. }) {
+        r.push(Diagnostic::warn(
+            "SL-STI-002",
+            "planner.synthesize",
+            "closed loops are self-clocking and route to the static drive: the \
+             synthesis action never fires there",
+        ));
+    }
+    if !p.saturation_slack.is_finite() || p.saturation_slack <= 0.0 {
+        r.push(Diagnostic::error(
+            "SL-STI-003",
+            "planner.saturation_slack",
+            format!(
+                "synthesis triggers on saturation_slack × mean SLO latency; {} \
+                 would trigger on every batch (or never)",
+                p.saturation_slack
+            ),
+        ));
+    }
+}
+
 /// SL-XLY-010: tracing with request-event retention off. The trace
 /// itself is complete either way (the sink is independent of the
 /// retained `RequestOutcome` log), but the invariant verifier's
@@ -826,6 +869,52 @@ mod tests {
         let c = codes(&r);
         assert!(c.contains(&"SL-SCN-008"), "{}", r.render_text());
         assert!(c.contains(&"SL-SCN-009"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn synthesis_lints_flag_contradictory_configs() {
+        // synthesize without batch_aware: plan and synthesis disagree
+        // on the operating point (warn), and a closed loop never fires
+        // the action at all (warn). Neither blocks.
+        let sc = Scenario::closed_loop(&tasks(), slos()).with_planner(PlannerConfig {
+            synthesize: true,
+            ..PlannerConfig::default()
+        });
+        let r = lint_scenario(&sc);
+        let c = codes(&r);
+        assert!(c.contains(&"SL-STI-001"), "{}", r.render_text());
+        assert!(c.contains(&"SL-STI-002"), "{}", r.render_text());
+        assert!(!r.has_errors(), "{}", r.render_text());
+
+        // Degenerate saturation slack makes the trigger meaningless:
+        // that one is an Error even without replan/steal (SL-XLY-004
+        // does not cover the synthesize-only path).
+        let sc = Scenario::poisson(&tasks(), slos(), 10.0, 1000.0).with_planner(
+            PlannerConfig {
+                batch_aware: true,
+                synthesize: true,
+                saturation_slack: 0.0,
+                ..PlannerConfig::default()
+            },
+        );
+        let r = lint_scenario(&sc);
+        assert!(codes(&r).contains(&"SL-STI-003"), "{}", r.render_text());
+        assert!(r.has_errors());
+
+        // A sane synthesis config is lint-clean.
+        let sc = Scenario::poisson(&tasks(), slos(), 10.0, 1000.0).with_planner(
+            PlannerConfig {
+                batch_aware: true,
+                synthesize: true,
+                ..PlannerConfig::default()
+            },
+        );
+        let r = lint_scenario(&sc);
+        assert!(
+            !codes(&r).iter().any(|c| c.starts_with("SL-STI")),
+            "{}",
+            r.render_text()
+        );
     }
 
     #[test]

@@ -106,6 +106,48 @@ pub fn build(specs: &[(&str, f64, f64)]) -> (Zoo, LatencyModel, BTreeMap<String,
             base.set(name, sg, KernelPath::BlockSparse, base_ms * 0.8);
         }
     }
+    assemble(tasks, base)
+}
+
+/// Stitch-friendly fixture: like [`build`] but every task carries a
+/// fourth, unstructured-sparse variant (`us90`, 90 % sparsity). On the
+/// desktop platform's heterogeneous placement orders the fastest
+/// composition is then a *mix* — `us90` on the CPU position (its
+/// DeepSparse-style engine rewards masked weights) stitched with
+/// `struct50` or `int8` on the GPU/NPU position — strictly faster than
+/// every pure variant under any order in Ω. That is the regime the
+/// online synthesis action (`PlannerConfig::synthesize`) exists to
+/// exploit, so this fixture backs its integration, determinism, and
+/// smoke coverage.
+pub fn stitchable(
+    specs: &[(&str, f64, f64)],
+) -> (Zoo, LatencyModel, BTreeMap<String, TaskProfile>) {
+    let mut tasks = BTreeMap::new();
+    let mut base = BaseLatencies::new();
+    for &(name, accuracy, base_ms) in specs {
+        let mut tz = synthetic_task(name, accuracy);
+        tz.variants.push(variant(
+            "us90",
+            VariantType::Unstructured,
+            0.9,
+            KernelPath::Masked,
+            accuracy - 0.10,
+            500,
+        ));
+        tasks.insert(name.to_string(), tz);
+        for sg in 0..SUBGRAPHS {
+            base.set(name, sg, KernelPath::Dense, base_ms);
+            base.set(name, sg, KernelPath::BlockSparse, base_ms * 0.8);
+            base.set(name, sg, KernelPath::Masked, base_ms * 0.9);
+        }
+    }
+    assemble(tasks, base)
+}
+
+fn assemble(
+    tasks: BTreeMap<String, TaskZoo>,
+    base: BaseLatencies,
+) -> (Zoo, LatencyModel, BTreeMap<String, TaskProfile>) {
     let zoo = Zoo {
         root: PathBuf::from("/nonexistent"),
         seed: 0,
@@ -237,6 +279,32 @@ mod tests {
         let (zoo1, _, _, sh1) = fleet(0, 0);
         assert_eq!(zoo1.tasks.len(), 1);
         assert_eq!(sh1.shards, 1);
+    }
+
+    #[test]
+    fn stitchable_mix_beats_every_pure_under_every_order() {
+        // The property the online synthesis action needs from this
+        // fixture: under EVERY placement order in Ω, some stitched mix
+        // undercuts the best pure variant by more than the 5 % commit
+        // margin (us90 on the CPU position, struct50/int8 elsewhere).
+        let (zoo, lm, profiles) = stitchable(&[("mix", 0.92, 20.0)]);
+        assert_eq!(zoo.task("mix").unwrap().variants.len(), 4);
+        let p = &profiles["mix"];
+        let orders = crate::workload::placement_orders(&lm.platform, SUBGRAPHS);
+        for order in &orders {
+            let best_pure = (0..p.space.n_variants)
+                .filter_map(|i| {
+                    p.latency_est(&p.space.composition(p.space.pure_index(i)), order)
+                })
+                .fold(f64::INFINITY, f64::min);
+            let best_any = (0..p.space.len())
+                .filter_map(|k| p.latency_est(&p.space.composition(k), order))
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                best_any < 0.95 * best_pure,
+                "{order:?}: best mix {best_any} ms must undercut best pure {best_pure} ms by >5%"
+            );
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@ use sparseloom::metrics::{RunReport, ShardedReport};
 use sparseloom::profiler::ProfilerConfig;
 use sparseloom::runtime::Runtime;
 use sparseloom::scenario::{
-    Admission, Dispatch, PlannerConfig, Scenario, Server, ShardedServer, Sharding,
+    Admission, Dispatch, Scenario, ServeConfig, Server, ShardedServer, Sharding, Workload,
 };
 use sparseloom::soc::Platform;
 use sparseloom::trace;
@@ -55,10 +55,11 @@ fn app() -> App {
                 .opt("max-batch", "coalesce up to K same-task queries under backlog", Some("1"))
                 .opt("min-queue", "waiting queries before batching kicks in", Some("2"))
                 .opt("batch-hint", "plan batch-aware at this expected batch size (default: max-batch when --replan)", None)
-                .switch("replan", "online re-planning: migrate the hottest task off a saturated shard")
-                .switch("steal", "telemetry-driven work stealing: an underloaded shard serves a saturated shard's waiting batches")
-                .switch("warm-migrate", "carry a migrant's pool contents to the target shard (cross-shard load instead of cold compile); implies --replan unless --steal is set")
-                .switch("predictive", "trigger replan/steal on forecast (not observed) shard backlog and feed projected arrival rates to the planner; implies --replan unless --steal is set")
+                .switch("replan", "alias for ServeConfig::replan (deprecated spelling, kept for compatibility): online re-planning — migrate the hottest task off a saturated shard")
+                .switch("steal", "alias for ServeConfig::steal (deprecated spelling): telemetry-driven work stealing — an underloaded shard serves a saturated shard's waiting batches")
+                .switch("warm-migrate", "alias for ServeConfig::warm_migrate (deprecated spelling): carry a migrant's pool contents to the target shard (cross-shard load instead of cold compile); implies --replan unless --steal is set")
+                .switch("predictive", "alias for ServeConfig::predictive (deprecated spelling): trigger replan/steal on forecast (not observed) shard backlog and feed projected arrival rates to the planner; implies --replan unless --steal is set")
+                .switch("synthesize", "online stitched-variant synthesis: under backlog or pool pressure the planner searches the stitch space for a cheaper composition and switches to it (TR-CTL-SYNTH audit events; implies batch-aware planning)")
                 .opt("seed", "arrival-stream seed", Some("0"))
                 .opt("slo", "grid index 0..24 of the SLO config", Some("12"))
                 .opt("budget", "memory budget fraction of full preload", Some("1.0"))
@@ -233,64 +234,53 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
             slos.insert(name.clone(), grid[slo_idx.min(grid.len() - 1)]);
         }
         slo_note = format!(" | SLO grid idx {slo_idx}");
+        // The legacy workload / planner flags are thin aliases over the
+        // ServeConfig builder: CLI, Scenario JSON and tests all produce
+        // the run blocks through the same API (and the same coupling
+        // rules — e.g. --warm-migrate pulling in --replan).
         let kind = args.get_or("scenario", "closed");
-        let base = match kind.as_str() {
-            "closed" => Scenario::closed_loop(&tasks, slos.clone())
-                .with_queries(args.get_usize("queries")?.unwrap_or(100))
-                .with_stagger_ms(args.get_f64("stagger-ms")?.unwrap_or(0.0)),
-            "poisson" => Scenario::poisson(
-                &tasks,
-                slos.clone(),
-                args.get_f64("rate-qps")?.unwrap_or(20.0),
-                args.get_f64("horizon-ms")?.unwrap_or(5_000.0),
-            ),
-            "bursty" => Scenario::bursty(
-                &tasks,
-                slos.clone(),
-                args.get_f64("rate-qps")?.unwrap_or(20.0),
-                args.get_f64("burst-qps")?.unwrap_or(80.0),
-                args.get_f64("period-ms")?.unwrap_or(1_000.0),
-                args.get_f64("horizon-ms")?.unwrap_or(5_000.0),
-            ),
+        let workload = match kind.as_str() {
+            "closed" => Workload::Closed {
+                queries: args.get_usize("queries")?.unwrap_or(100),
+                stagger_ms: args.get_f64("stagger-ms")?.unwrap_or(0.0),
+            },
+            "poisson" => Workload::Poisson {
+                rate_qps: args.get_f64("rate-qps")?.unwrap_or(20.0),
+                horizon_ms: args.get_f64("horizon-ms")?.unwrap_or(5_000.0),
+            },
+            "bursty" => Workload::Bursty {
+                base_qps: args.get_f64("rate-qps")?.unwrap_or(20.0),
+                burst_qps: args.get_f64("burst-qps")?.unwrap_or(80.0),
+                period_ms: args.get_f64("period-ms")?.unwrap_or(1_000.0),
+                horizon_ms: args.get_f64("horizon-ms")?.unwrap_or(5_000.0),
+            },
             other => bail!("unknown scenario {other:?} (want closed|poisson|bursty)"),
         };
-        base.with_universe(universe)
-            .with_admission(parse_admission(&args.get_or("admission", "always"))?)
-            .with_dispatch(Dispatch {
-                max_batch: args.get_usize("max-batch")?.unwrap_or(1).max(1),
-                min_queue: args.get_usize("min-queue")?.unwrap_or(2),
-            })
-            .with_sharding(Sharding::hash(args.get_usize("shards")?.unwrap_or(1)))
-            .with_planner({
-                let mut pc = if args.switch("replan") {
-                    PlannerConfig::replanning()
-                } else {
-                    PlannerConfig::default()
-                };
-                if args.switch("steal") {
-                    pc.batch_aware = true;
-                    pc.steal = true;
-                }
-                if args.switch("warm-migrate") {
-                    pc.warm_migrate = true;
-                    // Warm migration only acts on the online adoption
-                    // paths; alone it would be a silent no-op.
-                    if !pc.replan && !pc.steal {
-                        pc.replan = true;
-                        pc.batch_aware = true;
-                    }
-                }
-                if args.switch("predictive") {
-                    pc.predictive = true;
-                    // Forecast triggers only act on the online paths.
-                    if !pc.replan && !pc.steal {
-                        pc.replan = true;
-                        pc.batch_aware = true;
-                    }
-                }
-                pc
-            })
-            .with_seed(args.get_usize("seed")?.unwrap_or(0) as u64)
+        let mut cfg = ServeConfig::new()
+            .workload(workload)
+            .admission(parse_admission(&args.get_or("admission", "always"))?)
+            .batching(
+                args.get_usize("max-batch")?.unwrap_or(1),
+                args.get_usize("min-queue")?.unwrap_or(2),
+            )
+            .shards(args.get_usize("shards")?.unwrap_or(1))
+            .seed(args.get_usize("seed")?.unwrap_or(0) as u64);
+        if args.switch("replan") {
+            cfg = cfg.replan();
+        }
+        if args.switch("steal") {
+            cfg = cfg.steal();
+        }
+        if args.switch("warm-migrate") {
+            cfg = cfg.warm_migrate();
+        }
+        if args.switch("predictive") {
+            cfg = cfg.predictive();
+        }
+        if args.switch("synthesize") {
+            cfg = cfg.synthesize();
+        }
+        cfg.build(&tasks, slos).with_universe(universe)
     };
     if let Some(path) = args.get("save-scenario") {
         scenario.save(path)?;
@@ -304,7 +294,7 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
     // saved scenario file and the printed report always agree.
     if !json_out {
         println!(
-            "scenario: {} | policy: {} | platform: {}{} | admission: {} | shards: {} | max-batch: {} | replan: {} | steal: {} | warm: {} | predictive: {}",
+            "scenario: {} | policy: {} | platform: {}{} | admission: {} | shards: {} | max-batch: {} | replan: {} | steal: {} | warm: {} | predictive: {} | synth: {}",
             scenario.name,
             policy.name(),
             lm.platform.name,
@@ -316,6 +306,7 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
             scenario.planner.steal,
             scenario.planner.warm_migrate,
             scenario.planner.predictive,
+            scenario.planner.synthesize,
         );
     }
 
@@ -372,13 +363,18 @@ fn cmd_serve(args: &sparseloom::cli::Args) -> Result<()> {
                     shard.makespan_ms,
                 );
             }
-            if report.replans > 0 || report.migrations > 0 || report.steals > 0 {
+            if report.replans > 0
+                || report.migrations > 0
+                || report.steals > 0
+                || report.synths > 0
+            {
                 println!(
                     "  online: {} saturation event(s), {} migration(s), {} stolen batch(es), \
-                     {} cold compile(s), {} warm load(s)",
+                     {} synthesis switch(es), {} cold compile(s), {} warm load(s)",
                     report.replans,
                     report.migrations,
                     report.steals,
+                    report.synths,
                     report.aggregate.cold_compiles,
                     report.aggregate.warm_loads,
                 );

@@ -379,6 +379,9 @@ pub struct ShardedReport {
     /// Batches served by a shard other than the task's home shard
     /// (query-granularity work stealing; 0 on the static path).
     pub steals: usize,
+    /// Synthesized-variant switches committed by the online synthesis
+    /// action (0 unless `PlannerConfig::synthesize` is set).
+    pub synths: usize,
     /// Per-shard memory-pool budget utilization (used/capacity) at the
     /// end of the last served phase.
     pub budget_utilization: Vec<f64>,
@@ -439,6 +442,7 @@ impl ShardedReport {
             ("replans", Json::Num(self.replans as f64)),
             ("migrations", Json::Num(self.migrations as f64)),
             ("steals", Json::Num(self.steals as f64)),
+            ("synths", Json::Num(self.synths as f64)),
             (
                 "budget_utilization",
                 Json::Arr(

@@ -1,18 +1,18 @@
-//! Sparsity-Aware Optimizer (paper §3.3, Algorithm 1) — legacy façade.
+//! Sparsity-Aware Optimizer plan types (paper §3.3, Algorithm 1).
 //!
 //! The algorithm itself lives in `crate::planner::algo` (batch-aware,
-//! pruned, with an explicit `CostModel`); this module keeps the plan
-//! *types* plus thin deprecated shims of the original free functions at
-//! the unit (batch-1) cost model, so external callers keep compiling.
-//! The Algorithm 1 math notes moved to DESIGN.md §"Algorithm 1".
+//! pruned, with an explicit `CostModel`); this module keeps only the
+//! plan *types* it returns. The long-deprecated free-function shims
+//! (`feasible_set` / `optimize` / `optimize_pure_only` at the unit
+//! cost model) are gone — call `planner::algo` with
+//! `CostModel::unit()` for the batch-1 behavior. The Algorithm 1 math
+//! notes moved to DESIGN.md §"Algorithm 1".
 
 use std::collections::BTreeMap;
 
-use crate::planner::{algo, CostModel};
 use crate::profiler::TaskProfile;
 use crate::soc::Processor;
 use crate::stitching::Composition;
-use crate::workload::Slo;
 
 /// The filtered candidate set Θᵗ for one task.
 #[derive(Clone, Debug, Default)]
@@ -30,18 +30,6 @@ impl CandidateSet {
     pub fn len(&self) -> usize {
         self.indices.len()
     }
-}
-
-/// Step 1 of Alg. 1: compute Θᵗ.
-#[deprecated(
-    note = "use planner::algo::feasible_set with a CostModel (pruned, batch-aware)"
-)]
-pub fn feasible_set(
-    profile: &TaskProfile,
-    slo: &Slo,
-    orders: &[Vec<Processor>],
-) -> CandidateSet {
-    algo::feasible_set(&CostModel::unit(), profile, slo, orders)
 }
 
 /// The optimizer's decision for a whole SLO configuration.
@@ -74,170 +62,5 @@ impl Plan {
     /// Number of tasks with no feasible variant.
     pub fn infeasible_tasks(&self) -> usize {
         self.selections.values().filter(|s| s.is_none()).count()
-    }
-}
-
-/// Algorithm 1, complete: joint placement-order + variant selection.
-///
-/// `profiles` and `slos` are keyed by task name; `orders` is Ω.
-/// Planning is SLO-driven: profiles without an SLO entry are left
-/// unplanned (historically this indexed `slos` by every profile and
-/// panicked on shard-filtered SLO maps).
-#[deprecated(note = "use planner::algo::optimize with a CostModel (batch-aware)")]
-pub fn optimize(
-    profiles: &BTreeMap<String, TaskProfile>,
-    slos: &BTreeMap<String, Slo>,
-    orders: &[Vec<Processor>],
-) -> Plan {
-    algo::optimize(&CostModel::unit(), profiles, slos, orders)
-}
-
-/// Restricted optimizer used by the no-stitching baselines: only pure
-/// compositions are considered (classic adaptive-variant selection).
-#[deprecated(note = "use planner::algo::optimize_pure_only with a CostModel")]
-pub fn optimize_pure_only(
-    profiles: &BTreeMap<String, TaskProfile>,
-    slos: &BTreeMap<String, Slo>,
-    orders: &[Vec<Processor>],
-) -> Plan {
-    algo::optimize_pure_only(&CostModel::unit(), profiles, slos, orders)
-}
-
-// The shim tests double as behavioral pins for the canonical
-// `planner::algo` implementation the shims delegate to.
-#[cfg(test)]
-#[allow(deprecated)]
-mod tests {
-    use super::*;
-    use crate::profiler::{profile_task, ProfilerConfig};
-    use crate::soc::latency::tests::tiny_taskzoo;
-    use crate::soc::{BaseLatencies, LatencyModel, Platform};
-    use crate::stitching::StitchSpace;
-    use crate::zoo::KernelPath;
-    use Processor::*;
-
-    fn setup() -> BTreeMap<String, TaskProfile> {
-        let tz = tiny_taskzoo();
-        let mut b = BaseLatencies::new();
-        for sg in 0..2 {
-            b.set("tiny", sg, KernelPath::Dense, 10.0);
-            b.set("tiny", sg, KernelPath::BlockSparse, 8.0);
-        }
-        let lm = LatencyModel::new(Platform::desktop(), b);
-        let space = StitchSpace::for_task(&tz);
-        let oracle: Vec<f64> = space
-            .iter()
-            .map(|c| c.0.iter().map(|&i| tz.variants[i].accuracy).sum::<f64>() / 2.0)
-            .collect();
-        let cfg = ProfilerConfig {
-            train_samples: 4,
-            gbdt: crate::gbdt::GbdtParams {
-                n_trees: 200,
-                max_depth: 3,
-                eta: 0.2,
-                min_leaf: 1,
-                subsample: 1.0,
-                seed: 1,
-            },
-            seed: 23,
-        };
-        let p = profile_task(&tz, &lm, &oracle, &cfg, true);
-        BTreeMap::from([("tiny".to_string(), p)])
-    }
-
-    fn orders2() -> Vec<Vec<Processor>> {
-        vec![vec![Cpu, Gpu], vec![Gpu, Cpu], vec![Gpu, Npu], vec![Npu, Gpu]]
-    }
-
-    #[test]
-    fn feasible_set_respects_both_constraints() {
-        let profiles = setup();
-        let p = &profiles["tiny"];
-        let lax = Slo { min_accuracy: 0.0, max_latency_ms: 1e9 };
-        assert_eq!(feasible_set(p, &lax, &orders2()).len(), p.space.len());
-        let impossible = Slo { min_accuracy: 2.0, max_latency_ms: 1e9 };
-        assert!(feasible_set(p, &impossible, &orders2()).is_empty());
-        let tight_lat = Slo { min_accuracy: 0.0, max_latency_ms: 0.0001 };
-        assert!(feasible_set(p, &tight_lat, &orders2()).is_empty());
-    }
-
-    #[test]
-    fn optimizer_picks_feasible_and_order_in_omega() {
-        let profiles = setup();
-        let slos = BTreeMap::from([(
-            "tiny".to_string(),
-            Slo { min_accuracy: 0.6, max_latency_ms: 100.0 },
-        )]);
-        let orders = orders2();
-        let plan = optimize(&profiles, &slos, &orders);
-        assert!(orders.contains(&plan.order));
-        let sel = plan.selections["tiny"].expect("feasible");
-        assert!(sel.accuracy >= 0.6);
-        assert!(sel.latency_ms <= 100.0);
-        assert_eq!(plan.infeasible_tasks(), 0);
-    }
-
-    #[test]
-    fn optimizer_reports_infeasible() {
-        let profiles = setup();
-        let slos = BTreeMap::from([(
-            "tiny".to_string(),
-            Slo { min_accuracy: 0.99, max_latency_ms: 0.001 },
-        )]);
-        let plan = optimize(&profiles, &slos, &orders2());
-        assert_eq!(plan.infeasible_tasks(), 1);
-    }
-
-    #[test]
-    fn chosen_variant_is_latency_minimal_under_order() {
-        let profiles = setup();
-        let slos = BTreeMap::from([(
-            "tiny".to_string(),
-            Slo { min_accuracy: 0.0, max_latency_ms: 1e9 },
-        )]);
-        let plan = optimize(&profiles, &slos, &orders2());
-        let p = &profiles["tiny"];
-        let sel = plan.selections["tiny"].unwrap();
-        for k in 0..p.space.len() {
-            if let Some(l) = p.latency_est(&p.space.composition(k), &plan.order) {
-                assert!(sel.latency_ms <= l + 1e-12);
-            }
-        }
-    }
-
-    #[test]
-    fn pure_only_selects_pure() {
-        let profiles = setup();
-        let slos = BTreeMap::from([(
-            "tiny".to_string(),
-            Slo { min_accuracy: 0.5, max_latency_ms: 1e9 },
-        )]);
-        let plan = optimize_pure_only(&profiles, &slos, &orders2());
-        let p = &profiles["tiny"];
-        let sel = plan.selections["tiny"].unwrap();
-        assert!(p.space.composition(sel.stitched_index).is_pure());
-    }
-
-    #[test]
-    fn stitching_beats_pure_under_tight_slo() {
-        // The paper's core claim (Fig. 3): stitched variants satisfy
-        // SLOs that pure variants cannot. Construct an SLO between the
-        // pure variants' (acc, lat) points.
-        let profiles = setup();
-        let p = &profiles["tiny"];
-        // accuracy above struct50's 0.7 but latency below what pure
-        // dense can reach on the fastest order:
-        let pure_dense_lat = {
-            let comp = p.space.composition(p.space.pure_index(0));
-            orders2()
-                .iter()
-                .filter_map(|o| p.latency_est(&comp, o))
-                .fold(f64::INFINITY, f64::min)
-        };
-        let slo = Slo { min_accuracy: 0.75, max_latency_ms: pure_dense_lat * 0.98 };
-        let slos = BTreeMap::from([("tiny".to_string(), slo)]);
-        let stitched = optimize(&profiles, &slos, &orders2());
-        let pure = optimize_pure_only(&profiles, &slos, &orders2());
-        assert!(pure.infeasible_tasks() >= stitched.infeasible_tasks());
     }
 }

@@ -1,9 +1,10 @@
 //! Batch-aware Algorithm 1 with a pruned candidate walk.
 //!
 //! This is the canonical implementation of the paper's Sparsity-Aware
-//! Optimizer (§3.3); `crate::optimizer`'s free functions are thin
-//! deprecated shims over it at the unit (batch-1) [`CostModel`]. The
-//! math notes live in DESIGN.md §"Algorithm 1".
+//! Optimizer (§3.3); `crate::optimizer` keeps only the plan types it
+//! returns (the old free-function shims there are gone — use
+//! [`CostModel::unit`] for the batch-1 behavior). The math notes live
+//! in DESIGN.md §"Algorithm 1".
 //!
 //! Two prunes speed up the |Ω| × V^S hot loop without changing its
 //! result (asserted by `pruned_feasible_set_matches_reference`):
@@ -329,6 +330,141 @@ mod tests {
         assert_eq!(plan.selections.len(), 1);
         assert!(plan.selections["beta"].is_some());
         assert!(orders.contains(&plan.order));
+    }
+
+    // --- unit-cost behavioral pins ------------------------------------
+    // Folded in from the removed `optimizer::{feasible_set, optimize,
+    // optimize_pure_only}` shims: the same assertions, stated directly
+    // against the canonical implementation at `CostModel::unit()`.
+
+    fn tiny_setup() -> BTreeMap<String, TaskProfile> {
+        use crate::soc::{BaseLatencies, LatencyModel, Platform};
+        use crate::zoo::KernelPath;
+        let tz = crate::soc::latency::tests::tiny_taskzoo();
+        let mut b = BaseLatencies::new();
+        for sg in 0..2 {
+            b.set("tiny", sg, KernelPath::Dense, 10.0);
+            b.set("tiny", sg, KernelPath::BlockSparse, 8.0);
+        }
+        let lm = LatencyModel::new(Platform::desktop(), b);
+        let space = crate::stitching::StitchSpace::for_task(&tz);
+        let oracle: Vec<f64> = space
+            .iter()
+            .map(|c| c.0.iter().map(|&i| tz.variants[i].accuracy).sum::<f64>() / 2.0)
+            .collect();
+        let cfg = crate::profiler::ProfilerConfig {
+            train_samples: 4,
+            gbdt: crate::gbdt::GbdtParams {
+                n_trees: 200,
+                max_depth: 3,
+                eta: 0.2,
+                min_leaf: 1,
+                subsample: 1.0,
+                seed: 1,
+            },
+            seed: 23,
+        };
+        let p = crate::profiler::profile_task(&tz, &lm, &oracle, &cfg, true);
+        BTreeMap::from([("tiny".to_string(), p)])
+    }
+
+    fn orders2() -> Vec<Vec<Processor>> {
+        use Processor::*;
+        vec![vec![Cpu, Gpu], vec![Gpu, Cpu], vec![Gpu, Npu], vec![Npu, Gpu]]
+    }
+
+    #[test]
+    fn feasible_set_respects_both_constraints() {
+        let profiles = tiny_setup();
+        let p = &profiles["tiny"];
+        let unit = CostModel::unit();
+        let lax = Slo { min_accuracy: 0.0, max_latency_ms: 1e9 };
+        assert_eq!(feasible_set(&unit, p, &lax, &orders2()).len(), p.space.len());
+        let impossible = Slo { min_accuracy: 2.0, max_latency_ms: 1e9 };
+        assert!(feasible_set(&unit, p, &impossible, &orders2()).is_empty());
+        let tight_lat = Slo { min_accuracy: 0.0, max_latency_ms: 0.0001 };
+        assert!(feasible_set(&unit, p, &tight_lat, &orders2()).is_empty());
+    }
+
+    #[test]
+    fn optimizer_picks_feasible_and_order_in_omega() {
+        let profiles = tiny_setup();
+        let slos = BTreeMap::from([(
+            "tiny".to_string(),
+            Slo { min_accuracy: 0.6, max_latency_ms: 100.0 },
+        )]);
+        let orders = orders2();
+        let plan = optimize(&CostModel::unit(), &profiles, &slos, &orders);
+        assert!(orders.contains(&plan.order));
+        let sel = plan.selections["tiny"].expect("feasible");
+        assert!(sel.accuracy >= 0.6);
+        assert!(sel.latency_ms <= 100.0);
+        assert_eq!(plan.infeasible_tasks(), 0);
+    }
+
+    #[test]
+    fn optimizer_reports_infeasible() {
+        let profiles = tiny_setup();
+        let slos = BTreeMap::from([(
+            "tiny".to_string(),
+            Slo { min_accuracy: 0.99, max_latency_ms: 0.001 },
+        )]);
+        let plan = optimize(&CostModel::unit(), &profiles, &slos, &orders2());
+        assert_eq!(plan.infeasible_tasks(), 1);
+    }
+
+    #[test]
+    fn chosen_variant_is_latency_minimal_under_order() {
+        let profiles = tiny_setup();
+        let slos = BTreeMap::from([(
+            "tiny".to_string(),
+            Slo { min_accuracy: 0.0, max_latency_ms: 1e9 },
+        )]);
+        let plan = optimize(&CostModel::unit(), &profiles, &slos, &orders2());
+        let p = &profiles["tiny"];
+        let sel = plan.selections["tiny"].unwrap();
+        for k in 0..p.space.len() {
+            if let Some(l) = p.latency_est(&p.space.composition(k), &plan.order) {
+                assert!(sel.latency_ms <= l + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn pure_only_selects_pure() {
+        let profiles = tiny_setup();
+        let slos = BTreeMap::from([(
+            "tiny".to_string(),
+            Slo { min_accuracy: 0.5, max_latency_ms: 1e9 },
+        )]);
+        let plan = optimize_pure_only(&CostModel::unit(), &profiles, &slos, &orders2());
+        let p = &profiles["tiny"];
+        let sel = plan.selections["tiny"].unwrap();
+        assert!(p.space.composition(sel.stitched_index).is_pure());
+    }
+
+    #[test]
+    fn stitching_beats_pure_under_tight_slo() {
+        // The paper's core claim (Fig. 3): stitched variants satisfy
+        // SLOs that pure variants cannot. Construct an SLO between the
+        // pure variants' (acc, lat) points.
+        let profiles = tiny_setup();
+        let p = &profiles["tiny"];
+        // accuracy above struct50's 0.7 but latency below what pure
+        // dense can reach on the fastest order:
+        let pure_dense_lat = {
+            let comp = p.space.composition(p.space.pure_index(0));
+            orders2()
+                .iter()
+                .filter_map(|o| p.latency_est(&comp, o))
+                .fold(f64::INFINITY, f64::min)
+        };
+        let slo = Slo { min_accuracy: 0.75, max_latency_ms: pure_dense_lat * 0.98 };
+        let slos = BTreeMap::from([("tiny".to_string(), slo)]);
+        let unit = CostModel::unit();
+        let stitched = optimize(&unit, &profiles, &slos, &orders2());
+        let pure = optimize_pure_only(&unit, &profiles, &slos, &orders2());
+        assert!(pure.infeasible_tasks() >= stitched.infeasible_tasks());
     }
 
     #[test]

@@ -1,9 +1,9 @@
 //! Memory planning: Algorithm 2 preloading and hotness-driven budget
 //! splits.
 //!
-//! The canonical home of the greedy hotness-ordered preloader
-//! (`crate::preloader::preload` is a thin deprecated shim over
-//! [`preload`]), plus the budget-split machinery the replan path uses:
+//! The canonical home of the greedy hotness-ordered preloader (the old
+//! `crate::preloader::preload` shim is gone — call [`preload`]
+//! directly), plus the budget-split machinery the replan path uses:
 //! a shard's pool budget is divided across its tasks **proportionally
 //! to hotness mass** instead of evenly, so a task whose subgraphs cover
 //! many SLO configurations keeps more resident working set.
@@ -260,18 +260,90 @@ mod tests {
         }
     }
 
+    // --- single-task Alg. 2 pins --------------------------------------
+    // Folded in from the removed `preloader::preload` shim's test
+    // suite: the same assertions, stated against the canonical
+    // [`preload`] on the two-position tiny fixture.
+
+    fn tiny_setup() -> (crate::zoo::TaskZoo, Hotness) {
+        use crate::profiler::{profile_task, ProfilerConfig};
+        use crate::soc::{BaseLatencies, LatencyModel, Platform};
+        use crate::zoo::KernelPath;
+        let tz = crate::soc::latency::tests::tiny_taskzoo();
+        let mut b = BaseLatencies::new();
+        for sg in 0..2 {
+            b.set("tiny", sg, KernelPath::Dense, 10.0);
+            b.set("tiny", sg, KernelPath::BlockSparse, 8.0);
+        }
+        let plat = Platform::desktop();
+        let orders = placement_orders(&plat, 2);
+        let lm = LatencyModel::new(plat, b);
+        let space = crate::stitching::StitchSpace::for_task(&tz);
+        let oracle: Vec<f64> = space
+            .iter()
+            .map(|c| c.0.iter().map(|&i| tz.variants[i].accuracy).sum::<f64>() / 2.0)
+            .collect();
+        let cfg = ProfilerConfig {
+            train_samples: 4,
+            gbdt: crate::gbdt::GbdtParams {
+                n_trees: 200,
+                max_depth: 3,
+                eta: 0.2,
+                min_leaf: 1,
+                subsample: 1.0,
+                seed: 1,
+            },
+            seed: 23,
+        };
+        let p = profile_task(&tz, &lm, &oracle, &cfg, true);
+        let universe = vec![
+            Slo { min_accuracy: 0.0, max_latency_ms: 1e9 },
+            Slo { min_accuracy: 0.75, max_latency_ms: 1e9 },
+            Slo { min_accuracy: 0.85, max_latency_ms: 1e9 },
+        ];
+        let h = Hotness::compute(&p, &universe, &orders);
+        (tz, h)
+    }
+
     #[test]
-    fn canonical_preload_matches_shim() {
-        // The deprecated shim must stay behaviorally identical.
-        let (zoo, hot) = trio_hotness();
-        let refs = pairs(&zoo, &hot);
-        let full = full_preload_bytes(&refs.iter().map(|(tz, _)| *tz).collect::<Vec<_>>());
-        for budget in [full / 7, full / 2, full] {
-            let canonical = preload(&refs, budget);
-            #[allow(deprecated)]
-            let shim = crate::preloader::preload(&refs, budget);
-            assert_eq!(canonical.blobs, shim.blobs);
-            assert_eq!(canonical.total_bytes, shim.total_bytes);
+    fn preload_respects_budget() {
+        let (tz, h) = tiny_setup();
+        let full = full_preload_bytes(&[&tz]);
+        for frac in [0.1, 0.3, 0.55, 1.0] {
+            let budget = (full as f64 * frac) as u64;
+            let plan = preload(&[(&tz, &h)], budget);
+            assert!(plan.total_bytes <= budget, "{} > {budget}", plan.total_bytes);
+        }
+    }
+
+    #[test]
+    fn full_budget_loads_all_hot_blobs() {
+        let (tz, h) = tiny_setup();
+        let plan = preload(&[(&tz, &h)], u64::MAX);
+        // Every (variant, position) with positive hotness is loaded.
+        let hot_count: usize = h
+            .scores
+            .iter()
+            .map(|row| row.iter().filter(|&&x| x > 0.0).count())
+            .sum();
+        assert_eq!(plan.blobs.len(), hot_count);
+    }
+
+    #[test]
+    fn greedy_prefers_hotter_variants() {
+        let (tz, h) = tiny_setup();
+        // Budget for exactly one (dense) blob: the greedy must spend it
+        // on the hottest candidate at position 0 first.
+        let plan = preload(&[(&tz, &h)], tz.variants[0].subgraphs[0].bytes);
+        assert_eq!(plan.blobs.first(), Some(&BlobId::new("tiny", 0, 0)));
+        // Alg. 2 walks positions in order and back-fills whatever still
+        // fits, so a colder-but-smaller blob may follow — but never
+        // *instead of* a hotter one at the same position.
+        let full = full_preload_bytes(&[&tz]);
+        let plan = preload(&[(&tz, &h)], full);
+        for j in 0..2 {
+            let ranked = h.ranked_at(j);
+            assert!(plan.contains(&BlobId::new("tiny", ranked[0].0, j)));
         }
     }
 }

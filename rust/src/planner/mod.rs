@@ -37,17 +37,31 @@
 //! plans stay unweighted). Hand-set hints remain possible for offline
 //! what-if planning.
 //!
-//! The old entry points (`optimizer::optimize`, `optimizer::feasible_set`,
-//! `preloader::preload`) remain as thin deprecated shims so external
-//! callers keep compiling. See DESIGN.md §Planner for the data flow and
-//! the shard-migration invariant.
+//! Variant answers flow through one more seam: a [`VariantProvider`]
+//! (see [`provider`]) owns the "which stitched index serves this task?"
+//! question for `plan`, `replan`, the steal/warm-migrate adoption path,
+//! and the online synthesis action. The default provider reproduces
+//! Algorithm 1's enumerated selection bit-for-bit;
+//! [`SparsityAwarePlanner::with_synthesis`] swaps in the bounded
+//! best-first synthesizer (DESIGN.md §Stitching).
+//!
+//! The pre-planner entry points (`optimizer::optimize`,
+//! `optimizer::feasible_set`, `preloader::preload`) are gone —
+//! `planner::algo` and `planner::memory` are the only implementations.
+//! See DESIGN.md §Planner for the data flow and the shard-migration
+//! invariant.
 
 pub mod algo;
 pub mod cost;
 pub mod memory;
+pub mod provider;
 pub mod replan;
 
 pub use cost::CostModel;
+pub use provider::{
+    PressureSignal, SearchStats, VariantDecision, VariantProvider, VariantQuery,
+    VariantSource,
+};
 pub use replan::{Migration, ShardObservation, ShardPlan};
 
 use std::collections::BTreeMap;
@@ -174,6 +188,9 @@ pub struct SparsityAwarePlanner<'a> {
     /// saturation event. One planner instance assumes one Ψ (true for
     /// the replan drive, which builds a planner per run).
     hotness_cache: std::cell::RefCell<BTreeMap<String, Hotness>>,
+    /// The variant answer mode: enumerated by default, the bounded
+    /// best-first synthesizer after [`Self::with_synthesis`].
+    provider: Box<dyn VariantProvider + 'a>,
 }
 
 impl<'a> SparsityAwarePlanner<'a> {
@@ -183,13 +200,37 @@ impl<'a> SparsityAwarePlanner<'a> {
         profiles: &'a BTreeMap<String, TaskProfile>,
     ) -> SparsityAwarePlanner<'a> {
         let orders = placement_orders(&lm.platform, zoo.subgraphs);
+        let provider: Box<dyn VariantProvider + 'a> = Box::new(
+            provider::EnumeratedProvider::new(zoo, lm, profiles, orders.clone()),
+        );
         SparsityAwarePlanner {
             zoo,
             lm,
             profiles,
             orders,
             hotness_cache: std::cell::RefCell::new(BTreeMap::new()),
+            provider,
         }
+    }
+
+    /// Switch the planner's variant answers to the synthesizing
+    /// provider: ordinary (pressure-free) queries stay bit-identical to
+    /// the enumerated path; queries carrying a [`PressureSignal`] run
+    /// the bounded best-first stitch search with per-operating-point
+    /// caching.
+    pub fn with_synthesis(mut self) -> SparsityAwarePlanner<'a> {
+        self.provider = Box::new(provider::SynthesizingProvider::new(
+            self.zoo,
+            self.lm,
+            self.profiles,
+            self.orders.clone(),
+        ));
+        self
+    }
+
+    /// The variant provider answering this planner's selection queries.
+    pub fn provider(&self) -> &dyn VariantProvider {
+        self.provider.as_ref()
     }
 
     /// The order set Ω this planner optimizes over.
@@ -250,13 +291,12 @@ impl<'a> SparsityAwarePlanner<'a> {
         observed: &ShardObservation,
         to: usize,
     ) -> Option<Selection> {
-        let p = self.profiles.get(task)?;
         let slo = prior.slos.get(task)?;
-        let tz = self.zoo.task(task).ok()?;
-        // The target's committed order when known; full Ω otherwise.
-        let orders: Vec<Vec<Processor>> = match observed.shard_orders.get(to) {
+        // The target's committed order when known; full Ω otherwise
+        // (an empty feasible set defers to the provider's Ω).
+        let feasible_orders: Vec<Vec<Processor>> = match observed.shard_orders.get(to) {
             Some(order) if !order.is_empty() => vec![order.clone()],
-            _ => self.orders.clone(),
+            _ => Vec::new(),
         };
 
         // Budget split by hotness over the target shard's new tenant
@@ -271,56 +311,82 @@ impl<'a> SparsityAwarePlanner<'a> {
         if !names.iter().any(|n| n == task) {
             names.push(task.to_string());
         }
+        let target_pool = observed.shard_pool_bytes.get(to).copied().unwrap_or(0);
+        let share = self.share_of(task, &names, target_pool, &prior.universe, &observed.arrival_qps);
+
+        let q = VariantQuery {
+            task: task.to_string(),
+            slo: *slo,
+            feasible_orders,
+            commit_order: None,
+            batch: observed.mean_batch.get(task).copied().unwrap_or(1.0),
+            pool_share: share,
+            phase: 0,
+            pressure: None,
+        };
+        self.provider.provide(&q).map(|d| d.selection)
+    }
+
+    /// The task's traffic-weighted hotness share of a `pool_bytes`
+    /// budget split across `tenants` (the `reselect` budget rule,
+    /// shared with the synthesis action).
+    fn share_of(
+        &self,
+        task: &str,
+        tenants: &[String],
+        pool_bytes: u64,
+        universe: &[Slo],
+        arrival_qps: &BTreeMap<String, f64>,
+    ) -> u64 {
         let mut pairs: Vec<(&TaskZoo, Hotness)> = Vec::new();
-        for name in &names {
+        for name in tenants {
             let Ok(ntz) = self.zoo.task(name) else { continue };
-            let Some(h) = self.hotness_of(name, &prior.universe) else { continue };
+            let Some(h) = self.hotness_of(name, universe) else { continue };
             pairs.push((ntz, h));
         }
         let refs: Vec<(&TaskZoo, &Hotness)> =
             pairs.iter().map(|(ntz, h)| (*ntz, h)).collect();
-        let target_pool = observed.shard_pool_bytes.get(to).copied().unwrap_or(0);
-        let budgets = memory::split_budget_by_hotness_weighted(
-            &refs,
-            target_pool,
-            &observed.arrival_qps,
-        );
-        let share = budgets.get(task).copied().unwrap_or(0);
+        let budgets =
+            memory::split_budget_by_hotness_weighted(&refs, pool_bytes, arrival_qps);
+        budgets.get(task).copied().unwrap_or(0)
+    }
 
-        let cost = CostModel::batch_aware(self.lm, 1.0)
-            .with_hints(observed.mean_batch.clone());
-        let theta = algo::feasible_set(&cost, p, slo, &orders);
-        let mut within_share: Option<Selection> = None;
-        let mut any: Option<Selection> = None;
-        for &k in &theta.indices {
-            let comp = p.space.composition(k);
-            let bytes: u64 = comp
-                .0
-                .iter()
-                .enumerate()
-                .map(|(j, &vi)| tz.variants[vi].subgraphs[j].bytes)
-                .sum();
-            let lat = orders
-                .iter()
-                .filter_map(|o| cost.latency(p, &comp, o))
-                .fold(f64::INFINITY, f64::min);
-            if !lat.is_finite() {
-                continue;
-            }
-            let sel = Selection {
-                stitched_index: k,
-                latency_ms: lat,
-                accuracy: p.accuracy(k),
-            };
-            if any.map(|b| lat < b.latency_ms).unwrap_or(true) {
-                any = Some(sel);
-            }
-            if bytes <= share && within_share.map(|b| lat < b.latency_ms).unwrap_or(true)
-            {
-                within_share = Some(sel);
-            }
-        }
-        within_share.or(any)
+    /// The online synthesis action: price the incumbent and answer a
+    /// pressure-mode variant query for `task` at its live operating
+    /// point. `tenants` are the tasks sharing the home shard's pool
+    /// (including `task`); the pool share follows the same
+    /// traffic-weighted hotness split as `reselect`. Returns the
+    /// provider's decision plus the incumbent's score under the same
+    /// query (for the caller's switch-margin test).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn synthesize(
+        &self,
+        task: &str,
+        slo: &Slo,
+        universe: &[Slo],
+        tenants: &[String],
+        pool_bytes: u64,
+        commit_order: Option<Vec<Processor>>,
+        batch: f64,
+        arrival_qps: &BTreeMap<String, f64>,
+        phase: usize,
+        pressure: PressureSignal,
+        incumbent: Option<usize>,
+    ) -> Option<(VariantDecision, Option<Selection>)> {
+        let share = self.share_of(task, tenants, pool_bytes, universe, arrival_qps);
+        let q = VariantQuery {
+            task: task.to_string(),
+            slo: *slo,
+            feasible_orders: Vec::new(),
+            commit_order,
+            batch,
+            pool_share: share,
+            phase,
+            pressure: Some(pressure),
+        };
+        let scored = incumbent.and_then(|k| self.provider.score(&q, k));
+        let dec = self.provider.provide(&q)?;
+        Some((dec, scored))
     }
 }
 
@@ -334,6 +400,26 @@ impl Planner for SparsityAwarePlanner<'_> {
             &self.orders,
             &ctx.arrival_hint,
         );
+        // Final per-task selection re-derived through the variant
+        // provider under the committed order — bit-identical to
+        // Algorithm 1 step 3 for the enumerated provider (same Θᵗ,
+        // same strict-improvement scan under p⃗*).
+        let mut selections: BTreeMap<String, Option<Selection>> = BTreeMap::new();
+        for name in alg1.selections.keys() {
+            let Some(slo) = ctx.slos.get(name) else { continue };
+            let q = VariantQuery {
+                task: name.clone(),
+                slo: *slo,
+                feasible_orders: Vec::new(),
+                commit_order: Some(alg1.order.clone()),
+                batch: cost.hint_for(name),
+                pool_share: u64::MAX,
+                phase: 0,
+                pressure: None,
+            };
+            selections
+                .insert(name.clone(), self.provider.provide(&q).map(|d| d.selection));
+        }
         let universe = ctx.effective_universe();
         let pairs = self.hotness_pairs(&ctx.slos, &universe)?;
         let refs: Vec<(&TaskZoo, &Hotness)> =
@@ -349,7 +435,7 @@ impl Planner for SparsityAwarePlanner<'_> {
         let preload = memory::preload(&refs, ctx.memory_budget);
         Ok(Plan {
             order: alg1.order,
-            selections: alg1.selections,
+            selections,
             mean_latency_ms: alg1.mean_latency_ms,
             preload,
             task_budgets,
@@ -431,6 +517,29 @@ mod tests {
         assert_eq!(plan.task_budgets.values().sum::<u64>(), 100_000);
         assert!(plan.preload.total_bytes <= 100_000);
         assert!(plan.mean_latency_ms.is_finite());
+    }
+
+    #[test]
+    fn synthesis_mode_plans_identically_without_pressure() {
+        // `--synthesize` must not perturb startup planning: without a
+        // PressureSignal the synthesizing provider delegates to the
+        // enumerated path, so whole plans stay bit-identical.
+        let (zoo, lm, profiles) = fixtures::trio();
+        let base = SparsityAwarePlanner::new(&zoo, &lm, &profiles);
+        let synth = SparsityAwarePlanner::new(&zoo, &lm, &profiles).with_synthesis();
+        let ctx = ctx_for(&profiles, 100_000).with_default_batch_hint(2.0);
+        let a = base.plan(&ctx).unwrap();
+        let b = synth.plan(&ctx).unwrap();
+        assert_eq!(a.order, b.order);
+        assert_eq!(a.selections.len(), b.selections.len());
+        for (name, sa) in &a.selections {
+            let sb = b.selections[name];
+            assert_eq!(sa.map(|s| s.stitched_index), sb.map(|s| s.stitched_index));
+            assert_eq!(
+                sa.map(|s| s.latency_ms.to_bits()),
+                sb.map(|s| s.latency_ms.to_bits())
+            );
+        }
     }
 
     #[test]

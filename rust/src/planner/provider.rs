@@ -1,0 +1,594 @@
+//! The [`VariantProvider`] API: one contract for answering "which
+//! stitched variant should serve this task right now?".
+//!
+//! Before this module the answer was an implicit convention — a
+//! selection *index into the pre-enumerated zoo* threaded through
+//! `coordinator`, `planner::{algo,memory,replan}`, `scenario::server`,
+//! and `analysis::feasibility`. The provider makes the contract
+//! explicit and adds a second answer mode: **online synthesis**, the
+//! paper's §3.1 recombination run at serving time instead of as a
+//! static preprocessing step.
+//!
+//! * [`EnumeratedProvider`] reproduces the existing behavior exactly:
+//!   Θᵗ via `algo::feasible_set` over the query's order set, scored by
+//!   the batch-aware [`CostModel`] at the query's operating point,
+//!   preferring the fastest candidate whose weights fit the task's
+//!   pool share (the `reselect` contract) — and, under a commit
+//!   order, Algorithm 1 step 3 bit-for-bit.
+//! * [`SynthesizingProvider`] delegates to the enumerated path for
+//!   ordinary queries and switches to a **bounded best-first search**
+//!   over [`StitchSpace`] recombinations when the query carries a
+//!   [`PressureSignal`] (red `slo_forecast` or pool over budget). The
+//!   search is a pure function of the query — no clocks, no RNG — so
+//!   threaded and sequential drives stay bit-identical. Results are
+//!   cached per `(task, phase, quantized batch, pool share)` and
+//!   invalidated on phase/telemetry shifts via
+//!   [`VariantProvider::invalidate`].
+//!
+//! Search bounds, the cache key, and the invalidation rules are
+//! documented in DESIGN.md §Stitching.
+
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+
+use crate::optimizer::Selection;
+use crate::profiler::TaskProfile;
+use crate::soc::{LatencyModel, Processor};
+use crate::workload::Slo;
+use crate::zoo::Zoo;
+
+use super::algo;
+use super::cost::CostModel;
+
+/// Hard cap on best-first node expansions per synthesis query. Each
+/// expansion scores at most `S · (V − 1)` neighbors, so the search
+/// touches `O(64 · S · V)` candidates — a sliver of the `V^S` space —
+/// before committing to the best seen.
+pub const SYNTH_MAX_EXPANSIONS: usize = 64;
+
+/// Quantization step for the batch dimension of the synthesis cache
+/// key: operating points within 1/8 of a query of each other share a
+/// cache line.
+const BATCH_QUANTUM: f64 = 8.0;
+
+/// Where a [`VariantDecision`] came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VariantSource {
+    /// Selected from the pre-enumerated feasible set (Algorithm 1).
+    Enumerated,
+    /// Synthesized online by the bounded best-first search.
+    Synthesized,
+    /// Served from the synthesis cache without a new search.
+    Cached,
+}
+
+/// Search accounting attached to every decision (audit-span fodder for
+/// `TR-CTL-SYNTH`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SearchStats {
+    /// Best-first nodes expanded (0 for enumerated answers).
+    pub expanded: usize,
+    /// Candidates scored against the cost model.
+    pub evaluated: usize,
+    /// Whether the answer came straight from the synthesis cache.
+    pub cache_hit: bool,
+}
+
+/// Why the caller is under pressure — the trigger that flips a
+/// [`SynthesizingProvider`] from delegation into search mode.
+#[derive(Clone, Copy, Debug)]
+pub struct PressureSignal {
+    /// Observed-or-forecast backlog (ms) on the task's home shard.
+    pub forecast_ms: f64,
+    /// The saturation threshold the backlog crossed.
+    pub threshold_ms: f64,
+    /// The home shard's pool utilization (used / capacity).
+    pub pool_utilization: f64,
+}
+
+/// Everything a provider needs to answer one variant question.
+#[derive(Clone, Debug)]
+pub struct VariantQuery {
+    /// The task being (re)selected.
+    pub task: String,
+    /// The SLO in force — `min_accuracy` is a hard floor for synthesis.
+    pub slo: Slo,
+    /// Orders Θᵗ feasibility is judged over; empty ⇒ the provider's
+    /// full Ω.
+    pub feasible_orders: Vec<Vec<Processor>>,
+    /// When set, candidates are scored (and will be served) under
+    /// exactly this committed placement order.
+    pub commit_order: Option<Vec<Processor>>,
+    /// Expected mean coalesced batch size — the operating point.
+    pub batch: f64,
+    /// The task's byte share of its pool (candidates that fit are
+    /// preferred; 0 disables the preference, `u64::MAX` makes every
+    /// candidate "fit").
+    pub pool_share: u64,
+    /// Scenario phase index (part of the synthesis cache key).
+    pub phase: usize,
+    /// Present when the caller is under SLO/budget pressure — the
+    /// synthesis trigger. `None` keeps even a synthesizing provider on
+    /// the enumerated path.
+    pub pressure: Option<PressureSignal>,
+}
+
+/// A provider's answer: the selection plus provenance and search
+/// accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct VariantDecision {
+    pub selection: Selection,
+    pub source: VariantSource,
+    pub stats: SearchStats,
+}
+
+/// The unified variant contract consumed by `Planner::plan`, `replan`,
+/// the steal/warm-migrate adoption path, and the online synthesis
+/// action.
+pub trait VariantProvider {
+    /// Answer a variant query, or `None` when nothing is feasible.
+    fn provide(&self, q: &VariantQuery) -> Option<VariantDecision>;
+
+    /// Score one specific stitched index at the query's operating
+    /// point (used to price an incumbent before replacing it).
+    fn score(&self, q: &VariantQuery, index: usize) -> Option<Selection>;
+
+    /// Drop any cached decisions (phase boundary, pool reshuffle, or
+    /// telemetry shift — see DESIGN.md §Stitching for the rules).
+    fn invalidate(&self);
+
+    /// Stable name for audit output ("enumerated" | "synthesized").
+    fn kind(&self) -> &'static str;
+}
+
+/// Weights footprint of a composition on its task zoo.
+fn composition_bytes(tz: &crate::zoo::TaskZoo, comp: &crate::stitching::Composition) -> u64 {
+    comp.0
+        .iter()
+        .enumerate()
+        .map(|(j, &vi)| tz.variants[vi].subgraphs[j].bytes)
+        .sum()
+}
+
+/// Min latency of `comp` over `orders` under `cost`; `None` when no
+/// order can run it.
+fn best_latency(
+    cost: &CostModel,
+    p: &TaskProfile,
+    comp: &crate::stitching::Composition,
+    orders: &[Vec<Processor>],
+) -> Option<f64> {
+    let lat = orders
+        .iter()
+        .filter_map(|o| cost.latency(p, comp, o))
+        .fold(f64::INFINITY, f64::min);
+    lat.is_finite().then_some(lat)
+}
+
+/// The pre-enumerated answer mode: Θᵗ from `algo::feasible_set`, the
+/// fastest in-share candidate preferred (fallback: fastest feasible).
+pub struct EnumeratedProvider<'a> {
+    zoo: &'a Zoo,
+    lm: &'a LatencyModel,
+    profiles: &'a BTreeMap<String, TaskProfile>,
+    orders: Vec<Vec<Processor>>,
+}
+
+impl<'a> EnumeratedProvider<'a> {
+    pub fn new(
+        zoo: &'a Zoo,
+        lm: &'a LatencyModel,
+        profiles: &'a BTreeMap<String, TaskProfile>,
+        orders: Vec<Vec<Processor>>,
+    ) -> EnumeratedProvider<'a> {
+        EnumeratedProvider { zoo, lm, profiles, orders }
+    }
+
+    /// The cost model at the query's operating point. Only the queried
+    /// task's batch factor is ever read, so a single hint suffices.
+    fn cost_at(&self, q: &VariantQuery) -> CostModel {
+        CostModel::batch_aware(self.lm, 1.0).with_hint(&q.task, q.batch)
+    }
+
+    fn feasible<'q>(&'q self, q: &'q VariantQuery) -> &'q [Vec<Processor>] {
+        if q.feasible_orders.is_empty() { &self.orders } else { &q.feasible_orders }
+    }
+}
+
+impl VariantProvider for EnumeratedProvider<'_> {
+    fn provide(&self, q: &VariantQuery) -> Option<VariantDecision> {
+        let p = self.profiles.get(&q.task)?;
+        let tz = self.zoo.task(&q.task).ok()?;
+        let cost = self.cost_at(q);
+        let feasible = self.feasible(q);
+        let theta = algo::feasible_set(&cost, p, &q.slo, feasible);
+        let score_orders: &[Vec<Processor>] = match &q.commit_order {
+            Some(o) => std::slice::from_ref(o),
+            None => feasible,
+        };
+        let mut within_share: Option<Selection> = None;
+        let mut any: Option<Selection> = None;
+        let mut evaluated = 0usize;
+        for &k in &theta.indices {
+            let comp = p.space.composition(k);
+            evaluated += 1;
+            let Some(lat) = best_latency(&cost, p, &comp, score_orders) else {
+                continue;
+            };
+            let sel = Selection {
+                stitched_index: k,
+                latency_ms: lat,
+                accuracy: p.accuracy(k),
+            };
+            if any.map(|b| lat < b.latency_ms).unwrap_or(true) {
+                any = Some(sel);
+            }
+            let bytes = composition_bytes(tz, &comp);
+            if bytes <= q.pool_share
+                && within_share.map(|b| lat < b.latency_ms).unwrap_or(true)
+            {
+                within_share = Some(sel);
+            }
+        }
+        let selection = within_share.or(any)?;
+        Some(VariantDecision {
+            selection,
+            source: VariantSource::Enumerated,
+            stats: SearchStats { expanded: 0, evaluated, cache_hit: false },
+        })
+    }
+
+    fn score(&self, q: &VariantQuery, index: usize) -> Option<Selection> {
+        let p = self.profiles.get(&q.task)?;
+        if index >= p.space.len() {
+            return None;
+        }
+        let cost = self.cost_at(q);
+        let comp = p.space.composition(index);
+        let score_orders: &[Vec<Processor>] = match &q.commit_order {
+            Some(o) => std::slice::from_ref(o),
+            None => self.feasible(q),
+        };
+        let lat = best_latency(&cost, p, &comp, score_orders)?;
+        Some(Selection {
+            stitched_index: index,
+            latency_ms: lat,
+            accuracy: p.accuracy(index),
+        })
+    }
+
+    fn invalidate(&self) {}
+
+    fn kind(&self) -> &'static str {
+        "enumerated"
+    }
+}
+
+/// Synthesis cache key: one line per `(task, phase, quantized batch,
+/// pool share)` operating point.
+type CacheKey = (String, usize, u64, u64);
+
+/// The online answer mode: enumerated for ordinary queries, bounded
+/// best-first synthesis under pressure, with a per-operating-point
+/// decision cache.
+pub struct SynthesizingProvider<'a> {
+    inner: EnumeratedProvider<'a>,
+    cache: RefCell<BTreeMap<CacheKey, VariantDecision>>,
+}
+
+impl<'a> SynthesizingProvider<'a> {
+    pub fn new(
+        zoo: &'a Zoo,
+        lm: &'a LatencyModel,
+        profiles: &'a BTreeMap<String, TaskProfile>,
+        orders: Vec<Vec<Processor>>,
+    ) -> SynthesizingProvider<'a> {
+        SynthesizingProvider {
+            inner: EnumeratedProvider::new(zoo, lm, profiles, orders),
+            cache: RefCell::new(BTreeMap::new()),
+        }
+    }
+
+    fn cache_key(q: &VariantQuery) -> CacheKey {
+        let qbatch = (q.batch.max(1.0) * BATCH_QUANTUM).round() as u64;
+        (q.task.clone(), q.phase, qbatch, q.pool_share)
+    }
+
+    /// Bounded best-first search over the stitch space: seed with the
+    /// V pure compositions, expand one subgraph digit at a time in
+    /// ascending-latency order, keep the fastest candidate meeting the
+    /// SLO accuracy floor (in-share preferred). Pure function of the
+    /// query — ties break on the canonical stitched index, latencies
+    /// compare via `to_bits` (positive finite floats order like
+    /// integers), and the expansion budget is a constant.
+    fn synthesize(&self, q: &VariantQuery) -> Option<VariantDecision> {
+        let p = self.inner.profiles.get(&q.task)?;
+        let tz = self.inner.zoo.task(&q.task).ok()?;
+        let cost = self.inner.cost_at(q);
+        let score_orders: Vec<Vec<Processor>> = match &q.commit_order {
+            Some(o) => vec![o.clone()],
+            None => self.inner.feasible(q).to_vec(),
+        };
+        let space = &p.space;
+        let (v, s) = (space.n_variants, space.n_subgraphs);
+
+        let mut frontier: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        let mut seen: BTreeSet<usize> = BTreeSet::new();
+        let mut best_any: Option<Selection> = None;
+        let mut best_within: Option<Selection> = None;
+        let mut evaluated = 0usize;
+
+        // Scoring a node: admissible candidates must clear the SLO
+        // accuracy floor; every runnable node stays expandable (a
+        // low-accuracy composition can still bridge to a good one).
+        let mut admit = |k: usize,
+                         frontier: &mut BinaryHeap<Reverse<(u64, usize)>>,
+                         best_any: &mut Option<Selection>,
+                         best_within: &mut Option<Selection>| {
+            let comp = space.composition(k);
+            evaluated += 1;
+            let Some(lat) = best_latency(&cost, p, &comp, &score_orders) else {
+                return;
+            };
+            frontier.push(Reverse((lat.to_bits(), k)));
+            if p.accuracy(k) < q.slo.min_accuracy {
+                return;
+            }
+            let sel = Selection {
+                stitched_index: k,
+                latency_ms: lat,
+                accuracy: p.accuracy(k),
+            };
+            if best_any.map(|b| lat < b.latency_ms).unwrap_or(true) {
+                *best_any = Some(sel);
+            }
+            if composition_bytes(tz, &comp) <= q.pool_share
+                && best_within.map(|b| lat < b.latency_ms).unwrap_or(true)
+            {
+                *best_within = Some(sel);
+            }
+        };
+
+        for i in 0..v {
+            let k = space.pure_index(i);
+            if seen.insert(k) {
+                admit(k, &mut frontier, &mut best_any, &mut best_within);
+            }
+        }
+
+        let mut expanded = 0usize;
+        while expanded < SYNTH_MAX_EXPANSIONS {
+            let Some(Reverse((_, k))) = frontier.pop() else { break };
+            expanded += 1;
+            let comp = space.composition(k);
+            for j in 0..s {
+                for vi in 0..v {
+                    if vi == comp.0[j] {
+                        continue;
+                    }
+                    let mut digits = comp.0.clone();
+                    digits[j] = vi;
+                    let neighbor = crate::stitching::Composition(digits);
+                    let nk = neighbor.to_index(v);
+                    if seen.insert(nk) {
+                        admit(nk, &mut frontier, &mut best_any, &mut best_within);
+                    }
+                }
+            }
+        }
+
+        let selection = best_within.or(best_any)?;
+        Some(VariantDecision {
+            selection,
+            source: VariantSource::Synthesized,
+            stats: SearchStats { expanded, evaluated, cache_hit: false },
+        })
+    }
+}
+
+impl VariantProvider for SynthesizingProvider<'_> {
+    fn provide(&self, q: &VariantQuery) -> Option<VariantDecision> {
+        if q.pressure.is_none() {
+            // No pressure ⇒ planning-time query: stay bit-identical to
+            // the enumerated planner.
+            return self.inner.provide(q);
+        }
+        let key = Self::cache_key(q);
+        if let Some(hit) = self.cache.borrow().get(&key) {
+            let mut dec = *hit;
+            dec.source = VariantSource::Cached;
+            dec.stats.cache_hit = true;
+            return Some(dec);
+        }
+        let dec = self.synthesize(q)?;
+        self.cache.borrow_mut().insert(key, dec);
+        Some(dec)
+    }
+
+    fn score(&self, q: &VariantQuery, index: usize) -> Option<Selection> {
+        self.inner.score(q, index)
+    }
+
+    fn invalidate(&self) {
+        self.cache.borrow_mut().clear();
+    }
+
+    fn kind(&self) -> &'static str {
+        "synthesized"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixtures;
+    use crate::workload::placement_orders;
+
+    fn providers() -> (Zoo, LatencyModel, BTreeMap<String, TaskProfile>) {
+        fixtures::trio()
+    }
+
+    fn base_query(task: &str) -> VariantQuery {
+        VariantQuery {
+            task: task.to_string(),
+            slo: Slo { min_accuracy: 0.5, max_latency_ms: 1e9 },
+            feasible_orders: Vec::new(),
+            commit_order: None,
+            batch: 1.0,
+            pool_share: u64::MAX,
+            phase: 0,
+            pressure: None,
+        }
+    }
+
+    fn pressured(task: &str) -> VariantQuery {
+        VariantQuery {
+            pressure: Some(PressureSignal {
+                forecast_ms: 100.0,
+                threshold_ms: 10.0,
+                pool_utilization: 1.0,
+            }),
+            ..base_query(task)
+        }
+    }
+
+    #[test]
+    fn enumerated_matches_algorithm_one_step_three() {
+        let (zoo, lm, profiles) = providers();
+        let orders = placement_orders(&lm.platform, zoo.subgraphs);
+        let slos: BTreeMap<String, Slo> = profiles
+            .keys()
+            .map(|n| (n.clone(), Slo { min_accuracy: 0.5, max_latency_ms: 1e9 }))
+            .collect();
+        let cost = CostModel::unit();
+        let plan = algo::optimize(&cost, &profiles, &slos, &orders);
+        let provider = EnumeratedProvider::new(&zoo, &lm, &profiles, orders.clone());
+        for (name, sel) in &plan.selections {
+            let q = VariantQuery {
+                commit_order: Some(plan.order.clone()),
+                ..base_query(name)
+            };
+            let dec = provider.provide(&q).expect("feasible");
+            let sel = sel.expect("step 3 chose");
+            assert_eq!(dec.selection.stitched_index, sel.stitched_index, "{name}");
+            assert_eq!(dec.selection.latency_ms.to_bits(), sel.latency_ms.to_bits());
+            assert_eq!(dec.selection.accuracy.to_bits(), sel.accuracy.to_bits());
+            assert_eq!(dec.source, VariantSource::Enumerated);
+        }
+    }
+
+    #[test]
+    fn synthesis_delegates_without_pressure() {
+        let (zoo, lm, profiles) = providers();
+        let orders = placement_orders(&lm.platform, zoo.subgraphs);
+        let enumerated = EnumeratedProvider::new(&zoo, &lm, &profiles, orders.clone());
+        let synth = SynthesizingProvider::new(&zoo, &lm, &profiles, orders);
+        let q = base_query("alpha");
+        let a = enumerated.provide(&q).unwrap();
+        let b = synth.provide(&q).unwrap();
+        assert_eq!(a.selection.stitched_index, b.selection.stitched_index);
+        assert_eq!(b.source, VariantSource::Enumerated);
+    }
+
+    #[test]
+    fn synthesis_finds_fastest_admissible_composition() {
+        let (zoo, lm, profiles) = providers();
+        let orders = placement_orders(&lm.platform, zoo.subgraphs);
+        let synth = SynthesizingProvider::new(&zoo, &lm, &profiles, orders.clone());
+        let q = pressured("alpha");
+        let dec = synth.provide(&q).expect("synthesis must find a variant");
+        assert_eq!(dec.source, VariantSource::Synthesized);
+        assert!(dec.stats.expanded > 0);
+        // Exhaustive reference: the trio space (9 compositions) fits
+        // well inside the expansion budget, so the search must return
+        // the global fastest accuracy-admissible composition.
+        let p = &profiles["alpha"];
+        let cost = CostModel::batch_aware(&lm, 1.0).with_hint("alpha", 1.0);
+        let mut best: Option<(f64, usize)> = None;
+        for k in 0..p.space.len() {
+            if p.accuracy(k) < q.slo.min_accuracy {
+                continue;
+            }
+            let comp = p.space.composition(k);
+            let Some(lat) = best_latency(&cost, p, &comp, &orders) else { continue };
+            if best.map(|(b, _)| lat < b).unwrap_or(true) {
+                best = Some((lat, k));
+            }
+        }
+        let (lat, k) = best.unwrap();
+        assert_eq!(dec.selection.stitched_index, k);
+        assert_eq!(dec.selection.latency_ms.to_bits(), lat.to_bits());
+        assert!(dec.selection.accuracy >= q.slo.min_accuracy);
+    }
+
+    #[test]
+    fn synthesis_respects_the_accuracy_floor() {
+        let (zoo, lm, profiles) = providers();
+        let orders = placement_orders(&lm.platform, zoo.subgraphs);
+        let synth = SynthesizingProvider::new(&zoo, &lm, &profiles, orders);
+        // alpha's dense top accuracy is 0.92; demand nearly that much
+        // so every sparse-heavy recombination is inadmissible.
+        let q = VariantQuery {
+            slo: Slo { min_accuracy: 0.91, max_latency_ms: 1e9 },
+            ..pressured("alpha")
+        };
+        let dec = synth.provide(&q).expect("dense variant is admissible");
+        assert!(dec.selection.accuracy >= 0.91);
+    }
+
+    #[test]
+    fn cache_hits_and_invalidation() {
+        let (zoo, lm, profiles) = providers();
+        let orders = placement_orders(&lm.platform, zoo.subgraphs);
+        let synth = SynthesizingProvider::new(&zoo, &lm, &profiles, orders);
+        let q = pressured("beta");
+        let first = synth.provide(&q).unwrap();
+        assert_eq!(first.source, VariantSource::Synthesized);
+        assert!(!first.stats.cache_hit);
+        let second = synth.provide(&q).unwrap();
+        assert_eq!(second.source, VariantSource::Cached);
+        assert!(second.stats.cache_hit);
+        assert_eq!(second.selection.stitched_index, first.selection.stitched_index);
+        // A different operating point is a different cache line.
+        let other = VariantQuery { batch: 4.0, ..q.clone() };
+        let third = synth.provide(&other).unwrap();
+        assert_eq!(third.source, VariantSource::Synthesized);
+        // Invalidation forces a re-search.
+        synth.invalidate();
+        let fourth = synth.provide(&q).unwrap();
+        assert_eq!(fourth.source, VariantSource::Synthesized);
+        assert_eq!(fourth.selection.stitched_index, first.selection.stitched_index);
+    }
+
+    #[test]
+    fn synthesized_indices_stay_in_bounds() {
+        let (zoo, lm, profiles) = providers();
+        let orders = placement_orders(&lm.platform, zoo.subgraphs);
+        let synth = SynthesizingProvider::new(&zoo, &lm, &profiles, orders);
+        for task in ["alpha", "beta", "gamma"] {
+            for batch in [1.0, 2.0, 4.0] {
+                let q = VariantQuery { batch, ..pressured(task) };
+                let dec = synth.provide(&q).unwrap();
+                let p = &profiles[task];
+                assert!(dec.selection.stitched_index < p.space.len());
+                let comp = p.space.composition(dec.selection.stitched_index);
+                assert_eq!(comp.to_index(p.space.n_variants), dec.selection.stitched_index);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_share_prefers_fitting_candidates() {
+        let (zoo, lm, profiles) = providers();
+        let orders = placement_orders(&lm.platform, zoo.subgraphs);
+        let synth = SynthesizingProvider::new(&zoo, &lm, &profiles, orders);
+        // A share only the smallest (int8) blobs fit: 2 × 400 bytes.
+        let q = VariantQuery { pool_share: 800, ..pressured("alpha") };
+        let dec = synth.provide(&q).unwrap();
+        let p = &profiles["alpha"];
+        let tz = zoo.task("alpha").unwrap();
+        let comp = p.space.composition(dec.selection.stitched_index);
+        assert!(composition_bytes(tz, &comp) <= 800);
+    }
+}

@@ -116,17 +116,6 @@ impl PreloadPlan {
     }
 }
 
-/// Algorithm 2: greedy hotness-ordered preloading under a global budget.
-#[deprecated(
-    note = "use planner::memory::preload (or preload_split for per-task hotness budgets)"
-)]
-pub fn preload(
-    tasks: &[(&TaskZoo, &Hotness)],
-    budget_bytes: u64,
-) -> PreloadPlan {
-    crate::planner::memory::preload(tasks, budget_bytes)
-}
-
 /// Bytes needed to preload *everything* (the "full preloading" reference
 /// point of Fig. 14's memory-budget axis).
 pub fn full_preload_bytes(tasks: &[&TaskZoo]) -> u64 {
@@ -182,12 +171,10 @@ pub fn coverage(
     }
 }
 
-// Exercises the deprecated `preload` shim on purpose — it must stay
-// behaviorally identical to `planner::memory::preload`.
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
+    use crate::planner::memory::preload;
     use crate::profiler::{profile_task, ProfilerConfig};
     use crate::soc::latency::tests::tiny_taskzoo;
     use crate::soc::{BaseLatencies, LatencyModel, Platform};
@@ -274,32 +261,6 @@ mod tests {
     }
 
     #[test]
-    fn preload_respects_budget() {
-        let (tz, p, orders) = setup();
-        let h = Hotness::compute(&p, &slos(), &orders);
-        let full = full_preload_bytes(&[&tz]);
-        for frac in [0.1, 0.3, 0.55, 1.0] {
-            let budget = (full as f64 * frac) as u64;
-            let plan = preload(&[(&tz, &h)], budget);
-            assert!(plan.total_bytes <= budget, "{} > {budget}", plan.total_bytes);
-        }
-    }
-
-    #[test]
-    fn full_budget_loads_all_hot_blobs() {
-        let (tz, p, orders) = setup();
-        let h = Hotness::compute(&p, &slos(), &orders);
-        let plan = preload(&[(&tz, &h)], u64::MAX);
-        // Every (variant, position) with positive hotness is loaded.
-        let hot_count: usize = h
-            .scores
-            .iter()
-            .map(|row| row.iter().filter(|&&x| x > 0.0).count())
-            .sum();
-        assert_eq!(plan.blobs.len(), hot_count);
-    }
-
-    #[test]
     fn coverage_increases_with_budget() {
         let (tz, p, orders) = setup();
         let h = Hotness::compute(&p, &slos(), &orders);
@@ -310,24 +271,5 @@ mod tests {
         let cb = coverage(&p, &big, &slos(), &orders).covered_configs;
         assert!(cb >= cs);
         assert!((cb - 1.0).abs() < 1e-9, "full budget covers everything");
-    }
-
-    #[test]
-    fn greedy_prefers_hotter_variants() {
-        let (tz, p, orders) = setup();
-        let h = Hotness::compute(&p, &slos(), &orders);
-        // Budget for exactly one (dense) blob: the greedy must spend it
-        // on the hottest candidate at position 0 first.
-        let plan = preload(&[(&tz, &h)], tz.variants[0].subgraphs[0].bytes);
-        assert_eq!(plan.blobs.first(), Some(&BlobId::new("tiny", 0, 0)));
-        // Alg. 2 walks positions in order and back-fills whatever still
-        // fits, so a colder-but-smaller blob may follow — but never
-        // *instead of* a hotter one at the same position.
-        let full = full_preload_bytes(&[&tz]);
-        let plan = preload(&[(&tz, &h)], full);
-        for j in 0..2 {
-            let ranked = h.ranked_at(j);
-            assert!(plan.contains(&BlobId::new("tiny", ranked[0].0, j)));
-        }
     }
 }

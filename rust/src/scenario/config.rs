@@ -1,0 +1,299 @@
+//! `ServeConfig` — the one construction API for serving runs.
+//!
+//! The `serve` subcommand accreted ~15 loose flags (`--steal --replan
+//! --warm-migrate --predictive --synthesize --max-batch ...`), each
+//! with its own coupling rules (warm migration without an online path
+//! is a silent no-op; predictive triggers need replan or steal; the
+//! synthesizing provider wants batch-aware costs). Those rules used to
+//! live inline in `main.rs`, where neither tests nor scenario files
+//! could reach them. `ServeConfig` centralizes them: the CLI parses
+//! flags into a builder, tests construct the builder directly, and a
+//! loaded Scenario JSON file round-trips through it via
+//! [`ServeConfig::from_scenario`] — all three paths produce the same
+//! `planner` / `dispatch` / `sharding` blocks by construction.
+//!
+//! The legacy flags survive as thin aliases over the builder (their
+//! `--help` text says so); nothing in the JSON schema changed.
+
+use std::collections::BTreeMap;
+
+use crate::workload::Slo;
+
+use super::{Admission, Arrival, Dispatch, PlannerConfig, Scenario, Sharding};
+
+/// The arrival process a run is built around — mirrors [`Arrival`]
+/// minus the trace-replay case (a replay carries its own queries, so
+/// it only arrives via a scenario file).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Workload {
+    /// Closed loop: `queries` back-to-back requests per task, task slot
+    /// k starting at `k × stagger_ms`.
+    Closed { queries: usize, stagger_ms: f64 },
+    /// Poisson open loop at `rate_qps` per task for `horizon_ms`.
+    Poisson { rate_qps: f64, horizon_ms: f64 },
+    /// Square-wave open loop: half of each `period_ms` at `base_qps`,
+    /// half at `burst_qps`.
+    Bursty {
+        base_qps: f64,
+        burst_qps: f64,
+        period_ms: f64,
+        horizon_ms: f64,
+    },
+}
+
+impl Default for Workload {
+    fn default() -> Self {
+        Workload::Closed { queries: 100, stagger_ms: 0.0 }
+    }
+}
+
+/// Builder for serving runs. Defaults match `serve` with no flags:
+/// closed loop, admit-all, no batching, one shard, the frozen PR 2
+/// planner. Toggle methods encode the flag-coupling rules in one
+/// place — see each method's doc.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeConfig {
+    pub workload: Workload,
+    pub admission: Admission,
+    pub dispatch: Dispatch,
+    pub sharding: Sharding,
+    pub planner: PlannerConfig,
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    /// Start from the all-defaults run.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the arrival process.
+    pub fn workload(mut self, w: Workload) -> Self {
+        self.workload = w;
+        self
+    }
+
+    /// Set the admission policy.
+    pub fn admission(mut self, a: Admission) -> Self {
+        self.admission = a;
+        self
+    }
+
+    /// Batch up to `max_batch` queries once `min_queue` are waiting.
+    pub fn batching(mut self, max_batch: usize, min_queue: usize) -> Self {
+        self.dispatch = Dispatch { max_batch: max_batch.max(1), min_queue };
+        self
+    }
+
+    /// Hash-partition tasks across `shards` servers.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.sharding = Sharding::hash(shards);
+        self
+    }
+
+    /// Seed for the open-loop arrival generators.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// `--replan`: online re-planning. Implies batch-aware planning
+    /// (the replanner scores migrations at the dispatch operating
+    /// point).
+    pub fn replan(mut self) -> Self {
+        self.planner.replan = true;
+        self.planner.batch_aware = true;
+        self
+    }
+
+    /// `--steal`: telemetry-driven work stealing. Implies batch-aware
+    /// planning.
+    pub fn steal(mut self) -> Self {
+        self.planner.steal = true;
+        self.planner.batch_aware = true;
+        self
+    }
+
+    /// `--warm-migrate`: carry a migrant's pool across shards. Warm
+    /// migration only acts on the online adoption paths, so without
+    /// `--replan` or `--steal` it would be a silent no-op — it implies
+    /// `--replan` when neither is set.
+    pub fn warm_migrate(mut self) -> Self {
+        self.planner.warm_migrate = true;
+        if !self.planner.replan && !self.planner.steal {
+            return self.replan();
+        }
+        self
+    }
+
+    /// `--predictive`: forecast-triggered adaptation. Forecast triggers
+    /// only act on the online paths — implies `--replan` when neither
+    /// `--replan` nor `--steal` is set.
+    pub fn predictive(mut self) -> Self {
+        self.planner.predictive = true;
+        if !self.planner.replan && !self.planner.steal {
+            return self.replan();
+        }
+        self
+    }
+
+    /// `--synthesize`: online stitched-variant synthesis under
+    /// pressure. Implies batch-aware planning — the synthesizing
+    /// provider scores candidates at the live batch operating point,
+    /// and a batch-1 cost model would price them against a different
+    /// objective than the serving plan (`SL-STI-001`).
+    pub fn synthesize(mut self) -> Self {
+        self.planner.synthesize = true;
+        self.planner.batch_aware = true;
+        self
+    }
+
+    /// Epoch length for the threaded online drive (`0` keeps the
+    /// classic per-batch drive).
+    pub fn epoch_ms(mut self, ms: f64) -> Self {
+        self.planner.epoch_ms = ms.max(0.0);
+        self
+    }
+
+    /// Extract the run configuration from a scenario (e.g. one loaded
+    /// from JSON), so file-driven and flag-driven runs flow through the
+    /// same type. Trace-replay arrivals keep their queries on the
+    /// scenario; the config maps them to the default closed loop only
+    /// as a placeholder — use [`ServeConfig::apply`] on the *same*
+    /// scenario to preserve them.
+    pub fn from_scenario(s: &Scenario) -> Self {
+        let workload = match &s.arrival {
+            Arrival::ClosedLoop { queries, stagger_ms } => {
+                Workload::Closed { queries: *queries, stagger_ms: *stagger_ms }
+            }
+            Arrival::PoissonOpenLoop { rate_qps, horizon_ms } => {
+                Workload::Poisson { rate_qps: *rate_qps, horizon_ms: *horizon_ms }
+            }
+            Arrival::Bursty { base_qps, burst_qps, period_ms, horizon_ms } => {
+                Workload::Bursty {
+                    base_qps: *base_qps,
+                    burst_qps: *burst_qps,
+                    period_ms: *period_ms,
+                    horizon_ms: *horizon_ms,
+                }
+            }
+            Arrival::Trace(_) => Workload::default(),
+        };
+        Self {
+            workload,
+            admission: s.admission.clone(),
+            dispatch: s.dispatch.clone(),
+            sharding: s.sharding.clone(),
+            planner: s.planner.clone(),
+            seed: s.seed,
+        }
+    }
+
+    /// Overwrite a scenario's run-configuration blocks with this
+    /// config's, leaving tasks / SLO schedule / faults / arrival
+    /// queries untouched. `from_scenario` ∘ `apply` is the identity on
+    /// the `planner` / `dispatch` / `sharding` / `admission` / `seed`
+    /// blocks.
+    pub fn apply(&self, mut s: Scenario) -> Scenario {
+        s.admission = self.admission.clone();
+        s.dispatch = self.dispatch.clone();
+        s.sharding = self.sharding.clone();
+        s.planner = self.planner.clone();
+        s.seed = self.seed;
+        s
+    }
+
+    /// Build the full scenario for `tasks` under `slos` — the one
+    /// construction path behind `serve`'s workload flags.
+    pub fn build(&self, tasks: &[String], slos: BTreeMap<String, Slo>) -> Scenario {
+        let base = match self.workload {
+            Workload::Closed { queries, stagger_ms } => {
+                Scenario::closed_loop(tasks, slos)
+                    .with_queries(queries)
+                    .with_stagger_ms(stagger_ms)
+            }
+            Workload::Poisson { rate_qps, horizon_ms } => {
+                Scenario::poisson(tasks, slos, rate_qps, horizon_ms)
+            }
+            Workload::Bursty { base_qps, burst_qps, period_ms, horizon_ms } => {
+                Scenario::bursty(tasks, slos, base_qps, burst_qps, period_ms, horizon_ms)
+            }
+        };
+        self.apply(base)
+    }
+}
+
+impl Default for Admission {
+    fn default() -> Self {
+        Admission::Always
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Slo;
+
+    fn tasks() -> Vec<String> {
+        vec!["alpha".into(), "beta".into()]
+    }
+
+    fn slos() -> BTreeMap<String, Slo> {
+        tasks()
+            .into_iter()
+            .map(|t| (t, Slo { min_accuracy: 0.5, max_latency_ms: 100.0 }))
+            .collect()
+    }
+
+    #[test]
+    fn toggles_encode_the_flag_coupling_rules() {
+        // Warm migration alone would be a no-op: it pulls in replan.
+        let c = ServeConfig::new().warm_migrate();
+        assert!(c.planner.warm_migrate && c.planner.replan && c.planner.batch_aware);
+        // ... but not when stealing already gives it an adoption path.
+        let c = ServeConfig::new().steal().warm_migrate();
+        assert!(c.planner.steal && c.planner.warm_migrate && !c.planner.replan);
+        // Predictive triggers need an online path too.
+        let c = ServeConfig::new().predictive();
+        assert!(c.planner.predictive && c.planner.replan);
+        // Synthesis prices at the batch operating point (SL-STI-001).
+        let c = ServeConfig::new().synthesize();
+        assert!(c.planner.synthesize && c.planner.batch_aware);
+        assert!(!c.planner.replan, "synthesis alone does not migrate");
+    }
+
+    #[test]
+    fn builder_blocks_survive_the_scenario_json_round_trip() {
+        let cfg = ServeConfig::new()
+            .workload(Workload::Bursty {
+                base_qps: 20.0,
+                burst_qps: 80.0,
+                period_ms: 500.0,
+                horizon_ms: 2_000.0,
+            })
+            .admission(Admission::Deadline { slack: 2.0 })
+            .batching(4, 2)
+            .shards(2)
+            .seed(7)
+            .steal()
+            .synthesize()
+            .epoch_ms(25.0);
+        let scenario = cfg.build(&tasks(), slos());
+        let text = scenario.to_json().to_string();
+        let back = Scenario::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(ServeConfig::from_scenario(&back), cfg);
+    }
+
+    #[test]
+    fn apply_after_from_scenario_is_identity_on_run_blocks() {
+        let s = Scenario::closed_loop(&tasks(), slos())
+            .with_planner(PlannerConfig::online())
+            .with_dispatch(Dispatch::batched(8))
+            .with_seed(3);
+        let round = ServeConfig::from_scenario(&s).apply(s.clone());
+        assert_eq!(round.planner, s.planner);
+        assert_eq!(round.dispatch, s.dispatch);
+        assert_eq!(round.admission, s.admission);
+        assert_eq!(round.seed, s.seed);
+    }
+}

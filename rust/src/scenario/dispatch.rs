@@ -70,7 +70,9 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::ServeOpts;
 use crate::metrics::{RequestOutcome, RunReport, ShardedReport};
-use crate::planner::{Planner, ShardObservation, ShardPlan, SparsityAwarePlanner};
+use crate::planner::{
+    Planner, PressureSignal, ShardObservation, ShardPlan, SparsityAwarePlanner,
+};
 use crate::profiler::TaskProfile;
 use crate::soc::{LatencyModel, Processor};
 use crate::telemetry::Telemetry;
@@ -81,6 +83,16 @@ use crate::zoo::Zoo;
 use super::faults::FaultProfile;
 use super::server::{Server, Session};
 use super::{Arrival, Scenario};
+
+/// Commit margin for an online synthesis switch: the candidate's
+/// estimated latency must undercut the incumbent's by at least this
+/// factor (hysteresis against estimate noise and switch thrash).
+const SYNTH_MARGIN: f64 = 0.95;
+
+/// Pool-utilization fraction above which a shard counts as
+/// budget-pressured for the synthesis trigger even without a backlog
+/// crossing.
+const SYNTH_POOL_PRESSURE: f64 = 0.95;
 
 /// Adaptive-batching configuration: when and how hard to coalesce.
 ///
@@ -360,15 +372,18 @@ impl<'a> ShardedServer<'a> {
             )
             .fail_on_errors("fault profile")?;
         }
-        // The online path (scenario.planner.replan / .steal) drives all
-        // shards through one interleaved loop so telemetry can observe
-        // cross-shard backlog and migrate tasks — or steal individual
-        // batches — mid-phase. Closed loops are self-clocking (no
-        // backlog) and never saturate.
-        if (scenario.planner.replan || scenario.planner.steal)
-            && self.shards.len() > 1
-            && !matches!(scenario.arrival, Arrival::ClosedLoop { .. })
-        {
+        // The online path (scenario.planner.replan / .steal /
+        // .synthesize) drives all shards through one interleaved loop so
+        // telemetry can observe cross-shard backlog and migrate tasks —
+        // or steal individual batches, or synthesize cheaper stitched
+        // variants — mid-phase. Replan and steal are cross-shard moves
+        // and need at least two shards; synthesis is a per-shard action
+        // and routes online even on a single shard. Closed loops are
+        // self-clocking (no backlog) and never saturate.
+        let online = ((scenario.planner.replan || scenario.planner.steal)
+            && self.shards.len() > 1)
+            || scenario.planner.synthesize;
+        if online && !matches!(scenario.arrival, Arrival::ClosedLoop { .. }) {
             return self.run_online(scenario);
         }
         let n = self.shards.len();
@@ -452,6 +467,7 @@ impl<'a> ShardedServer<'a> {
             replans: 0,
             migrations: 0,
             steals: 0,
+            synths: 0,
             budget_utilization,
             arrival_est_qps: BTreeMap::new(),
             link_cost_ms: 0.0,
@@ -515,9 +531,12 @@ impl<'a> ShardedServer<'a> {
         }
         let n = self.shards.len();
         let coord = self.shards[0].coordinator();
-        let planner = SparsityAwarePlanner::new(coord.zoo, coord.lm, coord.profiles);
-        let universe = scenario.slo_universe();
         let cfg = &scenario.planner;
+        let planner = {
+            let p = SparsityAwarePlanner::new(coord.zoo, coord.lm, coord.profiles);
+            if cfg.synthesize { p.with_synthesis() } else { p }
+        };
+        let universe = scenario.slo_universe();
         let mut telemetry = Telemetry::new(n);
         let mut assignment: BTreeMap<String, usize> = scenario
             .tasks
@@ -528,6 +547,7 @@ impl<'a> ShardedServer<'a> {
         let mut budget_utilization = vec![0.0f64; n];
         let mut replans = 0usize;
         let mut migrations = 0usize;
+        let mut synths = 0usize;
         // Fault lab: total virtual ms adoptions paid to cross-shard
         // link transfers under `scenario.faults.links`.
         let mut link_cost_ms = 0.0f64;
@@ -538,6 +558,9 @@ impl<'a> ShardedServer<'a> {
         let mut control: Vec<TraceEvent> = Vec::new();
         for phase in 0..scenario.phases() {
             let slos = &scenario.schedule[phase];
+            // Phase shift: cached synthesis decisions were priced under
+            // the previous phase's SLOs and pool state.
+            planner.provider().invalidate();
             let mut sessions = Vec::with_capacity(n);
             for (i, server) in self.shards.iter().enumerate() {
                 let tasks_i: Vec<String> = scenario
@@ -712,6 +735,9 @@ impl<'a> ShardedServer<'a> {
                                     sessions[thief].adopt_task(
                                         &task, slo, selection, floor, link, warm_blobs,
                                     )?;
+                                    // Adoption reshapes the thief's pool;
+                                    // cached synthesis prices are stale.
+                                    planner.provider().invalidate();
                                     serving
                                         .get_mut(&task)
                                         .expect("known task")
@@ -815,6 +841,7 @@ impl<'a> ShardedServer<'a> {
                                 }
                                 sessions[dst]
                                     .adopt_task(&task, slo, None, floor, link, warm_blobs)?;
+                                planner.provider().invalidate();
                                 serving.get_mut(&task).expect("known task").push(dst);
                                 if tracing {
                                     control.push(TraceEvent::new(
@@ -868,6 +895,125 @@ impl<'a> ShardedServer<'a> {
                 // floor to the latest completion.
                 if serving[&task].len() > 1 {
                     sync_ready_floors(&mut sessions, &serving[&task], &task);
+                }
+
+                // --- online variant synthesis -------------------------
+                // Pressure trigger: the serving shard's observed (or
+                // Holt-forecast) backlog crossed its saturation
+                // threshold, or its pool runs hot. The synthesizing
+                // provider searches the stitch space for a cheaper
+                // composition at the live batch operating point; the
+                // switch commits only when the candidate strictly
+                // undercuts the incumbent's estimate (and is charged
+                // the same load penalty as a feedback switch).
+                if cfg.synthesize {
+                    let backlog =
+                        backlog_of_shard(&sessions, &pending, &assignment, serve_on);
+                    let effective = if cfg.predictive {
+                        backlog.max(telemetry.forecast_shard_backlog_ms(
+                            serve_on,
+                            issue,
+                            cfg.horizon_ms,
+                        ))
+                    } else {
+                        backlog
+                    };
+                    let threshold = thresholds[serve_on];
+                    let pool_util = sessions[serve_on].pool_utilization();
+                    let pressured = threshold
+                        .map(|thr| effective > thr)
+                        .unwrap_or(false)
+                        || pool_util > SYNTH_POOL_PRESSURE;
+                    if pressured {
+                        if let Some(slo) = slos.get(&task).copied() {
+                            let incumbent = sessions[serve_on].serving_index(&task);
+                            let mut tenants: Vec<String> = scenario
+                                .tasks
+                                .iter()
+                                .filter(|t| assignment[*t] == serve_on)
+                                .cloned()
+                                .collect();
+                            if !tenants.iter().any(|t| t == &task) {
+                                tenants.push(task.clone());
+                            }
+                            let pressure = PressureSignal {
+                                forecast_ms: effective,
+                                threshold_ms: threshold.unwrap_or(0.0),
+                                pool_utilization: pool_util,
+                            };
+                            let batch = sessions[serve_on]
+                                .mean_batch_of(&task)
+                                .unwrap_or(1.0);
+                            let arrival_qps = if cfg.predictive {
+                                telemetry.projected_arrival_hint(issue, cfg.horizon_ms)
+                            } else {
+                                telemetry.arrival_hint()
+                            };
+                            if let Some((dec, incumbent_sel)) = planner.synthesize(
+                                &task,
+                                &slo,
+                                &universe,
+                                &tenants,
+                                sessions[serve_on].pool_capacity(),
+                                Some(sessions[serve_on].planned_order().to_vec()),
+                                batch,
+                                &arrival_qps,
+                                phase,
+                                pressure,
+                                incumbent,
+                            ) {
+                                let cur = incumbent_sel
+                                    .map(|s| s.latency_ms)
+                                    .unwrap_or(f64::INFINITY);
+                                if incumbent != Some(dec.selection.stitched_index)
+                                    && dec.selection.latency_ms < SYNTH_MARGIN * cur
+                                {
+                                    let penalty = sessions[serve_on]
+                                        .resynthesize_task(&task, dec.selection)?;
+                                    synths += 1;
+                                    if tracing {
+                                        control.push(TraceEvent::new(
+                                            trace::TR_CTL_SYNTH,
+                                            serve_on,
+                                            &task,
+                                            None,
+                                            issue,
+                                            issue,
+                                            &[
+                                                ("forecast_ms", effective),
+                                                ("threshold_ms", threshold.unwrap_or(0.0)),
+                                                ("pool_util", pool_util),
+                                                ("expanded", dec.stats.expanded as f64),
+                                                ("evaluated", dec.stats.evaluated as f64),
+                                                (
+                                                    "cache_hit",
+                                                    if dec.stats.cache_hit { 1.0 } else { 0.0 },
+                                                ),
+                                                (
+                                                    "old_index",
+                                                    incumbent
+                                                        .map(|k| k as f64)
+                                                        .unwrap_or(-1.0),
+                                                ),
+                                                (
+                                                    "new_index",
+                                                    dec.selection.stitched_index as f64,
+                                                ),
+                                                (
+                                                    "old_est_ms",
+                                                    incumbent_sel
+                                                        .map(|s| s.latency_ms)
+                                                        .unwrap_or(-1.0),
+                                                ),
+                                                ("new_est_ms", dec.selection.latency_ms),
+                                                ("penalty_ms", penalty),
+                                            ],
+                                        ));
+                                    }
+                                }
+                            }
+                        }
+                    }
                 }
 
                 if !cfg.replan || budget_left == 0 {
@@ -980,6 +1126,9 @@ impl<'a> ShardedServer<'a> {
                     link,
                     warm_blobs,
                 )?;
+                // The migrant's blobs moved pools on both ends; cached
+                // synthesis decisions priced the old placement.
+                planner.provider().invalidate();
                 let adopters = serving.get_mut(&mig.task).expect("known task");
                 if !adopters.contains(&mig.to) {
                     adopters.push(mig.to);
@@ -1041,6 +1190,7 @@ impl<'a> ShardedServer<'a> {
             migrations,
             // Telemetry is the one tracking site for stolen batches.
             steals: telemetry.steals() as usize,
+            synths,
             budget_utilization,
             arrival_est_qps: telemetry.rates(),
             link_cost_ms,
@@ -1069,9 +1219,16 @@ impl<'a> ShardedServer<'a> {
         let n = self.shards.len();
         let epoch = scenario.planner.epoch_ms;
         let coord = self.shards[0].coordinator();
-        let planner = SparsityAwarePlanner::new(coord.zoo, coord.lm, coord.profiles);
-        let universe = scenario.slo_universe();
         let cfg = &scenario.planner;
+        let planner = {
+            let p = SparsityAwarePlanner::new(coord.zoo, coord.lm, coord.profiles);
+            if cfg.synthesize {
+                p.with_synthesis()
+            } else {
+                p
+            }
+        };
+        let universe = scenario.slo_universe();
         let threaded = self.shards[0].opts().parallel && n > 1;
         let mut telemetry = Telemetry::new(n);
         let mut assignment: BTreeMap<String, usize> = scenario
@@ -1083,6 +1240,7 @@ impl<'a> ShardedServer<'a> {
         let mut budget_utilization = vec![0.0f64; n];
         let mut replans = 0usize;
         let mut migrations = 0usize;
+        let mut synths = 0usize;
         let mut link_cost_ms = 0.0f64;
         // Control-plane audit events: emitted only here, between
         // barriers, where the coordinator runs alone — never from
@@ -1092,6 +1250,9 @@ impl<'a> ShardedServer<'a> {
         let mut control: Vec<TraceEvent> = Vec::new();
         for phase in 0..scenario.phases() {
             let slos = &scenario.schedule[phase];
+            // Phase shift: cached synthesis decisions were priced under
+            // the previous phase's SLOs and pool state.
+            planner.provider().invalidate();
             let mut sessions = Vec::with_capacity(n);
             for (i, server) in self.shards.iter().enumerate() {
                 let tasks_i: Vec<String> = scenario
@@ -1290,6 +1451,9 @@ impl<'a> ShardedServer<'a> {
                                     sessions[thief].adopt_task(
                                         &task, slo, selection, floor, link, warm_blobs,
                                     )?;
+                                    // Adoption reshapes the thief's pool;
+                                    // cached synthesis prices are stale.
+                                    planner.provider().invalidate();
                                     serving
                                         .get_mut(&task)
                                         .expect("known task")
@@ -1393,6 +1557,7 @@ impl<'a> ShardedServer<'a> {
                                     sessions[dst].adopt_task(
                                         task, slo, None, floor, link, warm_blobs,
                                     )?;
+                                    planner.provider().invalidate();
                                     serving
                                         .get_mut(task)
                                         .expect("known task")
@@ -1525,6 +1690,144 @@ impl<'a> ShardedServer<'a> {
                     }
                 }
 
+                // --- barrier: online variant synthesis ----------------
+                // Same pressure trigger as the classic drive, applied
+                // where the coordinator runs alone: shards are scanned
+                // in index order, and a pressured shard may re-pin any
+                // of its assigned tasks that still has pending work to
+                // a cheaper synthesized composition. Everything reads
+                // barrier-merged state, so the outcome is independent
+                // of worker-thread scheduling.
+                if cfg.synthesize {
+                    for shard in 0..n {
+                        let backlog =
+                            backlog_of_shard(&sessions, &pending, &assignment, shard);
+                        let effective = if cfg.predictive {
+                            backlog.max(telemetry.forecast_shard_backlog_ms(
+                                shard,
+                                end,
+                                cfg.horizon_ms,
+                            ))
+                        } else {
+                            backlog
+                        };
+                        let threshold = thresholds[shard];
+                        let pool_util = sessions[shard].pool_utilization();
+                        let pressured = threshold
+                            .map(|thr| effective > thr)
+                            .unwrap_or(false)
+                            || pool_util > SYNTH_POOL_PRESSURE;
+                        if !pressured {
+                            continue;
+                        }
+                        let tenants: Vec<String> = scenario
+                            .tasks
+                            .iter()
+                            .filter(|t| assignment[*t] == shard)
+                            .cloned()
+                            .collect();
+                        let arrival_qps = if cfg.predictive {
+                            telemetry.projected_arrival_hint(end, cfg.horizon_ms)
+                        } else {
+                            telemetry.arrival_hint()
+                        };
+                        for task in &tenants {
+                            if pending
+                                .get(task)
+                                .map(|q| q.is_empty())
+                                .unwrap_or(true)
+                            {
+                                continue;
+                            }
+                            let Some(slo) = slos.get(task).copied() else {
+                                continue;
+                            };
+                            let incumbent = sessions[shard].serving_index(task);
+                            let pressure = PressureSignal {
+                                forecast_ms: effective,
+                                threshold_ms: threshold.unwrap_or(0.0),
+                                pool_utilization: pool_util,
+                            };
+                            let batch =
+                                sessions[shard].mean_batch_of(task).unwrap_or(1.0);
+                            let Some((dec, incumbent_sel)) = planner.synthesize(
+                                task,
+                                &slo,
+                                &universe,
+                                &tenants,
+                                sessions[shard].pool_capacity(),
+                                Some(sessions[shard].planned_order().to_vec()),
+                                batch,
+                                &arrival_qps,
+                                phase,
+                                pressure,
+                                incumbent,
+                            ) else {
+                                continue;
+                            };
+                            let cur = incumbent_sel
+                                .map(|s| s.latency_ms)
+                                .unwrap_or(f64::INFINITY);
+                            if incumbent != Some(dec.selection.stitched_index)
+                                && dec.selection.latency_ms < SYNTH_MARGIN * cur
+                            {
+                                let penalty = sessions[shard]
+                                    .resynthesize_task(task, dec.selection)?;
+                                synths += 1;
+                                if tracing {
+                                    control.push(TraceEvent::new(
+                                        trace::TR_CTL_SYNTH,
+                                        shard,
+                                        task,
+                                        None,
+                                        end,
+                                        end,
+                                        &[
+                                            ("forecast_ms", effective),
+                                            (
+                                                "threshold_ms",
+                                                threshold.unwrap_or(0.0),
+                                            ),
+                                            ("pool_util", pool_util),
+                                            ("expanded", dec.stats.expanded as f64),
+                                            (
+                                                "evaluated",
+                                                dec.stats.evaluated as f64,
+                                            ),
+                                            (
+                                                "cache_hit",
+                                                if dec.stats.cache_hit {
+                                                    1.0
+                                                } else {
+                                                    0.0
+                                                },
+                                            ),
+                                            (
+                                                "old_index",
+                                                incumbent
+                                                    .map(|k| k as f64)
+                                                    .unwrap_or(-1.0),
+                                            ),
+                                            (
+                                                "new_index",
+                                                dec.selection.stitched_index as f64,
+                                            ),
+                                            (
+                                                "old_est_ms",
+                                                incumbent_sel
+                                                    .map(|s| s.latency_ms)
+                                                    .unwrap_or(-1.0),
+                                            ),
+                                            ("new_est_ms", dec.selection.latency_ms),
+                                            ("penalty_ms", penalty),
+                                        ],
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+
                 if !cfg.replan || budget_left == 0 {
                     continue;
                 }
@@ -1628,6 +1931,10 @@ impl<'a> ShardedServer<'a> {
                         link,
                         warm_blobs,
                     )?;
+                    // The migrant's blobs moved pools on both ends;
+                    // cached synthesis decisions priced the old
+                    // placement.
+                    planner.provider().invalidate();
                     let adopters = serving.get_mut(&mig.task).expect("known task");
                     if !adopters.contains(&mig.to) {
                         adopters.push(mig.to);
@@ -1695,6 +2002,7 @@ impl<'a> ShardedServer<'a> {
             replans,
             migrations,
             steals: telemetry.steals() as usize,
+            synths,
             budget_utilization,
             arrival_est_qps: telemetry.rates(),
             link_cost_ms,

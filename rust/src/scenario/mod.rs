@@ -57,8 +57,10 @@
 
 pub mod dispatch;
 pub mod faults;
+pub mod config;
 pub mod server;
 
+pub use config::{ServeConfig, Workload};
 pub use dispatch::{Dispatch, Dispatcher, ShardAssignment, ShardedServer, Sharding};
 pub use faults::{
     CrashWindow, Degradation, Expect, FaultProfile, LinkMatrix, RejoinMode, ThrottleCurve,
@@ -226,6 +228,13 @@ pub struct PlannerConfig {
     /// coordinator merges telemetry, steals, redirects and replans.
     /// Results are deterministic and independent of thread scheduling.
     pub epoch_ms: f64,
+    /// Online variant synthesis: when a shard's backlog crosses its
+    /// saturation threshold (or its pool runs hot), the planner's
+    /// synthesizing `VariantProvider` searches the stitch space for a
+    /// cheaper composition at the live batch operating point and
+    /// switches the task to it (emitting `TR-CTL-SYNTH`). Off by
+    /// default; the enumerated planner is untouched when unset.
+    pub synthesize: bool,
 }
 
 impl Default for PlannerConfig {
@@ -240,6 +249,7 @@ impl Default for PlannerConfig {
             saturation_slack: 4.0,
             max_migrations: 1,
             epoch_ms: 0.0,
+            synthesize: false,
         }
     }
 }
@@ -646,6 +656,7 @@ impl Scenario {
                         Json::Num(self.planner.max_migrations as f64),
                     ),
                     ("epoch_ms", Json::Num(self.planner.epoch_ms)),
+                    ("synthesize", Json::Bool(self.planner.synthesize)),
                 ]),
             ),
             (
@@ -882,6 +893,10 @@ impl Scenario {
                         None => d.epoch_ms,
                         Some(x) => x.as_f64().context("planner.epoch_ms")?,
                     },
+                    synthesize: match p.get("synthesize") {
+                        None => d.synthesize,
+                        Some(x) => x.as_bool().context("planner.synthesize")?,
+                    },
                 }
             }
         };
@@ -1079,6 +1094,8 @@ mod tests {
                     horizon_ms: 125.0,
                     saturation_slack: 2.5,
                     max_migrations: 3,
+                    epoch_ms: 25.0,
+                    synthesize: true,
                 }),
             Scenario::bursty(&tasks(), slos(), 8.0, 90.0, 400.0, 2_500.0)
                 .with_admission(Admission::Predictive {

@@ -1257,6 +1257,57 @@ impl<'s, 'a> Session<'s, 'a> {
         })
     }
 
+    /// The stitched index this session currently serves `task` with
+    /// (`None` for unknown tasks or before a composition commits).
+    pub(crate) fn serving_index(&self, task: &str) -> Option<usize> {
+        let st = self.states.get(task)?;
+        let comp = st.comp.as_ref()?;
+        let p = self.server.coord.profiles.get(task)?;
+        Some(comp.to_index(p.space.n_variants))
+    }
+
+    /// Commit a synthesized (or cache-served) variant switch for
+    /// `task` — the online-synthesis twin of the SLO-feedback switch,
+    /// with identical booking mechanics: blobs of the new composition
+    /// not already resident are charged a **load** against the task's
+    /// next batch (evicting colder entries via `make_room`), accuracy
+    /// is re-judged under the serve options, and the switch counter
+    /// advances. Returns the booked penalty (ms).
+    pub(crate) fn resynthesize_task(
+        &mut self,
+        task: &str,
+        selection: crate::optimizer::Selection,
+    ) -> Result<f64> {
+        let coord = &self.server.coord;
+        let opts = &self.server.opts;
+        let Some(p) = coord.profiles.get(task) else {
+            bail!("resynthesize: no profile for task {task:?}");
+        };
+        let tz = coord.zoo.task(task)?;
+        let Some(st) = self.states.get_mut(task) else {
+            bail!("resynthesize: session does not serve task {task:?}");
+        };
+        let new_comp = p.space.composition(selection.stitched_index);
+        // Charge load for blobs not resident (the feedback-switch rule).
+        let mut penalty = 0.0;
+        for (j, &vi) in new_comp.0.iter().enumerate() {
+            let id = BlobId::new(task, vi, j);
+            if !self.prepared.pool.touch(&id) {
+                let bytes = tz.variants[vi].subgraphs[j].bytes;
+                penalty += coord.lm.load_ms(bytes, st.order[j]);
+                self.prepared.pool.make_room(bytes);
+                self.prepared.pool.load(id, bytes);
+            }
+        }
+        st.pending_penalty_ms += penalty;
+        st.pending_cold_ms += penalty;
+        st.comp = Some(new_comp);
+        st.accuracy =
+            Some(coord.judged_accuracy(p, selection.stitched_index, opts));
+        st.switches += 1;
+        Ok(penalty)
+    }
+
     /// Adopt a migrated (or stolen) task mid-session (the online path
     /// of `super::dispatch`): serve `task` from here on with `selection`
     /// (the planner's re-selection; best-effort pure fallback when

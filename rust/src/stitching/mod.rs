@@ -87,21 +87,49 @@ impl Composition {
     }
 
     /// Paper-style label like "P-Q-D" from the zoo's variant types.
-    pub fn label(&self, zoo: &TaskZoo) -> String {
-        self.0
-            .iter()
-            .map(|&i| zoo.variants[i].spec.vtype.tag().to_string())
-            .collect::<Vec<_>>()
-            .join("-")
+    ///
+    /// Returns a lazy `Display` adapter instead of a `String`: the
+    /// synthesis search loop labels every scored candidate, and a
+    /// per-candidate `Vec<String>` + `join` allocation storm there is
+    /// pure churn. `to_string()` it only where an owned label is
+    /// actually stored.
+    pub fn label<'a>(&'a self, zoo: &'a TaskZoo) -> impl std::fmt::Display + 'a {
+        DisplayJoined {
+            comp: self,
+            zoo,
+            f: |zoo, i, out| write!(out, "{}", zoo.variants[i].spec.vtype.tag()),
+        }
     }
 
-    /// Long label like "unstr80-int8-dense".
-    pub fn name(&self, zoo: &TaskZoo) -> String {
-        self.0
-            .iter()
-            .map(|&i| zoo.variants[i].spec.name.clone())
-            .collect::<Vec<_>>()
-            .join("-")
+    /// Long label like "unstr80-int8-dense". Lazy like
+    /// [`Composition::label`] — formats straight into the caller's
+    /// buffer.
+    pub fn name<'a>(&'a self, zoo: &'a TaskZoo) -> impl std::fmt::Display + 'a {
+        DisplayJoined {
+            comp: self,
+            zoo,
+            f: |zoo, i, out| out.write_str(&zoo.variants[i].spec.name),
+        }
+    }
+}
+
+/// `Display` adapter joining one rendered item per composition digit
+/// with `-`, without any intermediate allocation.
+struct DisplayJoined<'a> {
+    comp: &'a Composition,
+    zoo: &'a TaskZoo,
+    f: fn(&TaskZoo, usize, &mut std::fmt::Formatter<'_>) -> std::fmt::Result,
+}
+
+impl std::fmt::Display for DisplayJoined<'_> {
+    fn fmt(&self, out: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (j, &i) in self.comp.0.iter().enumerate() {
+            if j > 0 {
+                out.write_str("-")?;
+            }
+            (self.f)(self.zoo, i, out)?;
+        }
+        Ok(())
     }
 }
 
@@ -273,6 +301,25 @@ mod tests {
             Composition::from_index(0, 0, 3),
             Err(StitchError::Degenerate { v: 0, s: 3 })
         );
+    }
+
+    #[test]
+    fn labels_render_without_intermediate_allocation() {
+        let (zoo, _lm, _profiles) = crate::fixtures::trio();
+        let tz = zoo.task("alpha").unwrap();
+        let comp = Composition(vec![0, 1]);
+        // dense at position 0, int8 at position 1 (fixture order).
+        assert_eq!(comp.label(tz).to_string(), "D-Q");
+        assert_eq!(
+            comp.name(tz).to_string(),
+            format!("{}-{}", tz.variants[0].spec.name, tz.variants[1].spec.name)
+        );
+        // The adapter is `Display`, so it formats straight into an
+        // existing buffer — the hot-loop usage pattern.
+        use std::fmt::Write as _;
+        let mut buf = String::new();
+        write!(buf, "{}", comp.label(tz)).unwrap();
+        assert_eq!(buf, "D-Q");
     }
 
     #[test]

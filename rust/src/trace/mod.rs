@@ -76,6 +76,12 @@ pub const TR_CTL_CRASH: &str = "TR-CTL-CRASH";
 pub const TR_CTL_RECOVER: &str = "TR-CTL-RECOVER";
 /// A batch paid DVFS throttle stretch (args: extra booked ms).
 pub const TR_CTL_THROTTLE: &str = "TR-CTL-THROTTLE";
+/// The planner synthesized (or re-used from cache) a stitched variant
+/// under SLO/budget pressure and committed the switch. Args carry the
+/// decision inputs: forecast/threshold backlog, pool utilization,
+/// search stats (expanded/evaluated/cache_hit), old/new stitched index
+/// and estimated latency, and the paid switch penalty.
+pub const TR_CTL_SYNTH: &str = "TR-CTL-SYNTH";
 
 /// Every reason code this crate emits — the registry `SL-TRC-002`
 /// checks unknown codes against. Append-only.
@@ -95,6 +101,7 @@ pub const KNOWN_CODES: &[&str] = &[
     TR_CTL_CRASH,
     TR_CTL_RECOVER,
     TR_CTL_THROTTLE,
+    TR_CTL_SYNTH,
 ];
 
 /// `TR-REQ-DROP` cause argument: crash window swallowed the query.

@@ -18,7 +18,7 @@ use sparseloom::scenario::{
     PlannerConfig, RejoinMode, Scenario, Server, ShardedServer, Sharding, ThrottleCurve,
     ThrottleStep,
 };
-use sparseloom::soc::LatencyModel;
+use sparseloom::soc::{LatencyModel, Processor};
 use sparseloom::trace;
 use sparseloom::zoo::Zoo;
 
@@ -524,4 +524,75 @@ fn single_server_predictive_run_is_deterministic() {
     assert_identical(&a, &b);
     assert_identical(&a, &c);
     assert!(a.total_queries > 0, "the run must actually serve something");
+}
+
+#[test]
+fn synthesis_run_is_deterministic_across_drive_modes() {
+    // The online synthesis action must stay bit-identical across the
+    // threaded and sequential drives, in both the classic (epoch_ms=0)
+    // and the epoch-barrier protocols, with its TR-CTL-SYNTH audit
+    // events byte-identical through the JSONL export — and the
+    // `synthesize` planner knob must survive the scenario JSON round
+    // trip on the way.
+    let (zoo, lm, profiles) = fixtures::stitchable(&[
+        ("cam0", 0.92, 20.0),
+        ("cam1", 0.90, 20.0),
+        ("lidar", 0.88, 20.0),
+        ("radar", 0.91, 20.0),
+    ]);
+    let map: BTreeMap<String, usize> =
+        [("cam0", 0), ("cam1", 0), ("lidar", 1), ("radar", 1)]
+            .into_iter()
+            .map(|(t, s)| (t.to_string(), s))
+            .collect();
+    let sharding = Sharding::explicit(map, 2);
+    let tasks = fixtures::task_names(&zoo);
+    for epoch_ms in [0.0, 25.0] {
+        let sc = Scenario::bursty(&tasks, fixtures::slos(&zoo, 0.25, 14.8), 2.0, 80.0, 500.0, 2_000.0)
+            .with_admission(Admission::Always)
+            .with_sharding(sharding.clone())
+            .with_planner(PlannerConfig {
+                batch_aware: true,
+                saturation_slack: 1.5,
+                synthesize: true,
+                epoch_ms,
+                ..PlannerConfig::default()
+            })
+            .with_seed(7);
+        let sc = json_round_trip(&sc);
+        assert!(sc.planner.synthesize, "synthesize must survive the JSON round trip");
+        let run = |parallel: bool| {
+            let opts = ServeOpts {
+                batch_hint: 4.0,
+                memory_budget_frac: 0.6,
+                feedback_switching: false,
+                force_order: Some(vec![Processor::Cpu, Processor::Gpu]),
+                parallel,
+                trace: true,
+                ..ServeOpts::default()
+            };
+            ShardedServer::build(&zoo, &lm, &profiles, opts, sharding.clone())
+                .unwrap()
+                .run(&sc)
+                .unwrap()
+        };
+        let threaded = run(true);
+        let sequential = run(false);
+        assert_eq!(threaded.synths, sequential.synths, "epoch_ms={epoch_ms}");
+        assert!(
+            threaded.synths >= 1,
+            "epoch_ms={epoch_ms}: the stitchable fixture must trigger synthesis"
+        );
+        assert_identical(&threaded.aggregate, &sequential.aggregate);
+        for (x, y) in threaded.per_shard.iter().zip(&sequential.per_shard) {
+            assert_identical(x, y);
+        }
+        let a = trace::to_jsonl(&threaded.canonical_trace());
+        let b = trace::to_jsonl(&sequential.canonical_trace());
+        assert_eq!(a, b, "epoch_ms={epoch_ms}: traced JSONL must be byte-identical");
+        assert!(
+            a.contains(trace::TR_CTL_SYNTH),
+            "epoch_ms={epoch_ms}: synthesis run left no TR-CTL-SYNTH events"
+        );
+    }
 }

@@ -1,0 +1,166 @@
+//! Online stitched-variant synthesis acceptance (the `--synthesize`
+//! planner action): on a bursty, over-budget fleet fixture the
+//! synthesizing provider must strictly reduce SLO violations versus
+//! the enumerated-only planner, complete no fewer queries, and leave
+//! a `TR-CTL-SYNTH` audit trail.
+//!
+//! Regime under test (see `fixtures::stitchable`): every task's SLO
+//! latency bound sits between the best *stitched mix* and the best
+//! *pure* variant at the live batch-1 operating point, while
+//! batch-aware planning at `batch_hint = 4` projects every composition
+//! over the bound — Θ is empty at plan time, so the enumerated path
+//! serves the best-effort pure fallback and misses on every query.
+//! Only the pressure-triggered synthesis search can find and commit
+//! the cheaper mix (us90 on the CPU position, struct50 on the GPU),
+//! flipping post-commit queries under the bound.
+
+use std::collections::BTreeMap;
+
+use sparseloom::coordinator::ServeOpts;
+use sparseloom::fixtures;
+use sparseloom::metrics::ShardedReport;
+use sparseloom::profiler::TaskProfile;
+use sparseloom::scenario::{
+    Admission, PlannerConfig, Scenario, ShardedServer, Sharding,
+};
+use sparseloom::soc::{LatencyModel, Processor};
+use sparseloom::trace;
+use sparseloom::zoo::Zoo;
+
+/// Sits between the best mix (≈13.72 ms) and the best pure
+/// (≈15.89 ms) on the forced C-G order at 20 ms base latency.
+const BOUND_MS: f64 = 14.8;
+
+fn fleet_fixture() -> (Zoo, LatencyModel, BTreeMap<String, TaskProfile>, Sharding) {
+    let (zoo, lm, profiles) = fixtures::stitchable(&[
+        ("cam0", 0.92, 20.0),
+        ("cam1", 0.90, 20.0),
+        ("lidar", 0.88, 20.0),
+        ("radar", 0.91, 20.0),
+    ]);
+    let map: BTreeMap<String, usize> =
+        [("cam0", 0), ("cam1", 0), ("lidar", 1), ("radar", 1)]
+            .into_iter()
+            .map(|(t, s)| (t.to_string(), s))
+            .collect();
+    (zoo, lm, profiles, Sharding::explicit(map, 2))
+}
+
+fn bursty_scenario(zoo: &Zoo, sharding: Sharding, synthesize: bool) -> Scenario {
+    let tasks = fixtures::task_names(zoo);
+    let slos = fixtures::slos(zoo, 0.25, BOUND_MS);
+    Scenario::bursty(&tasks, slos, 2.0, 80.0, 500.0, 3000.0)
+        .with_name("online-synthesis")
+        .with_admission(Admission::Always)
+        .with_sharding(sharding)
+        .with_planner(PlannerConfig {
+            batch_aware: true,
+            saturation_slack: 1.5,
+            synthesize,
+            ..PlannerConfig::default()
+        })
+        .with_seed(7)
+}
+
+fn serve_opts() -> ServeOpts {
+    ServeOpts {
+        // Plan at the dispatch operating point: ests × (1 + 0.32·3)
+        // clear the bound for every composition, so Θ is empty and the
+        // enumerated plan degrades to the best-effort pure fallback.
+        batch_hint: 4.0,
+        // Over-budget pool: the greedy preload fills >95 % of the
+        // budgeted share, so the synthesis pool-pressure trigger is hot
+        // from the first served batch.
+        memory_budget_frac: 0.6,
+        // Isolate the synthesis action: no feedback switching in
+        // either arm.
+        feedback_switching: false,
+        // Pin the committed order so the mix-vs-pure margins are the
+        // ones this test's bound was sized for.
+        force_order: Some(vec![Processor::Cpu, Processor::Gpu]),
+        trace: true,
+        ..ServeOpts::default()
+    }
+}
+
+fn run_arm(synthesize: bool) -> ShardedReport {
+    let (zoo, lm, profiles, sharding) = fleet_fixture();
+    let sc = bursty_scenario(&zoo, sharding.clone(), synthesize);
+    let server = ShardedServer::build(&zoo, &lm, &profiles, serve_opts(), sharding)
+        .expect("build sharded server");
+    server.run(&sc).expect("run scenario")
+}
+
+#[test]
+fn synthesize_strictly_reduces_slo_violations_on_bursty_overbudget_fleet() {
+    let base = run_arm(false);
+    let synth = run_arm(true);
+
+    // Same arrivals, admit-always: no fewer completions, nothing dropped.
+    assert_eq!(base.aggregate.total_dropped, 0);
+    assert_eq!(synth.aggregate.total_dropped, 0);
+    assert_eq!(
+        synth.aggregate.total_queries, base.aggregate.total_queries,
+        "synthesis must not lose completions"
+    );
+    assert!(base.aggregate.total_queries > 0);
+
+    // The enumerated-only arm is pinned to the pure fallback, which
+    // sits above the bound: every query misses.
+    assert_eq!(
+        base.aggregate.slo_miss_count, base.aggregate.total_queries,
+        "enumerated-only arm should miss on every query (pure fallback > bound)"
+    );
+    assert_eq!(base.synths, 0, "synthesis must not fire when disabled");
+
+    // The synthesizing arm commits mixes and strictly reduces misses.
+    assert!(synth.synths >= 1, "no synthesized switch committed");
+    assert!(
+        synth.aggregate.slo_miss_count < base.aggregate.slo_miss_count,
+        "synthesis must strictly reduce SLO misses ({} vs {})",
+        synth.aggregate.slo_miss_count,
+        base.aggregate.slo_miss_count
+    );
+
+    // Audit trail: TR-CTL-SYNTH events in the canonical trace of the
+    // synthesizing arm only.
+    let synth_jsonl = trace::to_jsonl(&synth.canonical_trace());
+    assert!(
+        synth_jsonl.contains(trace::TR_CTL_SYNTH),
+        "synthesizing run left no TR-CTL-SYNTH audit events"
+    );
+    let base_jsonl = trace::to_jsonl(&base.canonical_trace());
+    assert!(
+        !base_jsonl.contains(trace::TR_CTL_SYNTH),
+        "enumerated-only run must not emit TR-CTL-SYNTH"
+    );
+}
+
+#[test]
+fn synthesize_alone_routes_to_the_online_drive_even_single_shard() {
+    // `--synthesize` without replan/steal must still reach the online
+    // drive (where the synthesis action lives) — including on a single
+    // shard, where replan/steal would be meaningless.
+    let (zoo, lm, profiles) = fixtures::stitchable(&[("solo", 0.92, 20.0)]);
+    let sharding = Sharding::hash(1);
+    let tasks = fixtures::task_names(&zoo);
+    let slos = fixtures::slos(&zoo, 0.25, BOUND_MS);
+    let sc = Scenario::bursty(&tasks, slos, 2.0, 80.0, 500.0, 2000.0)
+        .with_admission(Admission::Always)
+        .with_sharding(sharding.clone())
+        .with_planner(PlannerConfig {
+            batch_aware: true,
+            saturation_slack: 1.5,
+            synthesize: true,
+            ..PlannerConfig::default()
+        })
+        .with_seed(11);
+    let server = ShardedServer::build(&zoo, &lm, &profiles, serve_opts(), sharding)
+        .expect("build single-shard server");
+    let report = server.run(&sc).expect("run single-shard scenario");
+    assert!(
+        report.synths >= 1,
+        "single-shard --synthesize run never synthesized (static-drive routing?)"
+    );
+    assert!(report.aggregate.slo_miss_count < report.aggregate.total_queries);
+}

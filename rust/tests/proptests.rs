@@ -11,7 +11,10 @@
 
 use std::collections::BTreeMap;
 
-use sparseloom::planner::{algo, memory, CostModel};
+use sparseloom::planner::provider::SynthesizingProvider;
+use sparseloom::planner::{
+    algo, memory, CostModel, PressureSignal, VariantProvider, VariantQuery,
+};
 use sparseloom::preloader::{full_preload_bytes, Hotness};
 use sparseloom::profiler::{profile_task, ProfilerConfig, TaskProfile};
 use sparseloom::propcheck::{check, usize_in, vec_of, Gen};
@@ -26,7 +29,7 @@ use sparseloom::util::Rng;
 use sparseloom::workload::{placement_orders, Query, Slo};
 use sparseloom::zoo::{
     DType, HloArtifact, KernelPath, Precision, SubgraphWeights, TaskVariant,
-    TaskZoo, TensorSpec, VariantSpec, VariantType,
+    TaskZoo, TensorSpec, VariantSpec, VariantType, Zoo,
 };
 
 // ---------------------------------------------------------------------
@@ -95,7 +98,11 @@ fn synth_taskzoo(v: usize, s: usize, seed: u64) -> TaskZoo {
     }
 }
 
-fn synth_profile(v: usize, s: usize, seed: u64) -> (TaskZoo, TaskProfile, Vec<Vec<Processor>>) {
+fn synth_profile(
+    v: usize,
+    s: usize,
+    seed: u64,
+) -> (TaskZoo, TaskProfile, Vec<Vec<Processor>>, LatencyModel) {
     let tz = synth_taskzoo(v, s, seed);
     let mut base = BaseLatencies::new();
     let mut rng = Rng::new(seed ^ 0xabc);
@@ -123,7 +130,7 @@ fn synth_profile(v: usize, s: usize, seed: u64) -> (TaskZoo, TaskProfile, Vec<Ve
         .collect();
     let cfg = ProfilerConfig { train_samples: (space.len() / 3).max(8), ..Default::default() };
     let p = profile_task(&tz, &lm, &oracle, &cfg, true);
-    (tz, p, orders)
+    (tz, p, orders, lm)
 }
 
 // ---------------------------------------------------------------------
@@ -155,7 +162,7 @@ fn prop_stitched_index_roundtrip() {
 fn prop_optimizer_respects_slos() {
     let gen = usize_in(0, 10_000);
     check("optimizer_feasibility", &gen, 40, 12, |&seed| {
-        let (_tz, p, orders) = synth_profile(4, 3, seed as u64);
+        let (_tz, p, orders, _lm) = synth_profile(4, 3, seed as u64);
         let mut rng = Rng::new(seed as u64 ^ 0x55);
         let slo = Slo {
             min_accuracy: 0.3 + 0.6 * rng.f64(),
@@ -194,7 +201,7 @@ fn prop_optimizer_respects_slos() {
 fn prop_selected_variant_is_minimal_under_chosen_order() {
     let gen = usize_in(0, 10_000);
     check("optimizer_minimality", &gen, 30, 13, |&seed| {
-        let (_tz, p, orders) = synth_profile(4, 3, seed as u64);
+        let (_tz, p, orders, _lm) = synth_profile(4, 3, seed as u64);
         let slo = Slo { min_accuracy: 0.0, max_latency_ms: f64::INFINITY };
         let profiles = BTreeMap::from([(p.task.clone(), p.clone())]);
         let slos = BTreeMap::from([(p.task.clone(), slo)]);
@@ -219,7 +226,7 @@ fn prop_preloader_never_exceeds_budget() {
     let gen: Gen<Vec<usize>> = vec_of(usize_in(0, 10_000), 2);
     check("preload_budget", &gen, 50, 14, |dims| {
         let seed = dims[0] as u64;
-        let (tz, p, orders) = synth_profile(5, 3, seed);
+        let (tz, p, orders, _lm) = synth_profile(5, 3, seed);
         let slos: Vec<Slo> = (0..5)
             .map(|i| Slo {
                 min_accuracy: 0.4 + 0.1 * i as f64,
@@ -248,7 +255,7 @@ fn prop_preloader_never_exceeds_budget() {
 fn prop_hotness_nonnegative_and_normalized() {
     let gen = usize_in(0, 10_000);
     check("hotness_normalized", &gen, 40, 15, |&seed| {
-        let (_tz, p, orders) = synth_profile(4, 3, seed as u64);
+        let (_tz, p, orders, _lm) = synth_profile(4, 3, seed as u64);
         let slos: Vec<Slo> = (0..6)
             .map(|i| Slo {
                 min_accuracy: 0.3 + 0.1 * i as f64,
@@ -434,6 +441,8 @@ fn arbitrary_scenario(seed: u64) -> Scenario {
         horizon_ms: 50.0 + 500.0 * rng.f64(),
         saturation_slack: 1.0 + 4.0 * rng.f64(),
         max_migrations: rng.below(4),
+        epoch_ms: if rng.f64() < 0.5 { 0.0 } else { 10.0 + 40.0 * rng.f64() },
+        synthesize: rng.f64() < 0.5,
     });
     if rng.f64() < 0.5 {
         let n_uni = rng.below(4);
@@ -500,7 +509,7 @@ fn prop_scenario_json_schema_roundtrip() {
 fn prop_latency_estimate_is_additive_lower_bound_of_truth() {
     let gen = usize_in(0, 10_000);
     check("eq5_lower_bound", &gen, 40, 18, |&seed| {
-        let (_tz, p, orders) = synth_profile(4, 3, seed as u64);
+        let (_tz, p, orders, _lm) = synth_profile(4, 3, seed as u64);
         let mut rng = Rng::new(seed as u64 ^ 7);
         for _ in 0..20 {
             let k = rng.below(p.space.len());
@@ -516,6 +525,102 @@ fn prop_latency_estimate_is_additive_lower_bound_of_truth() {
                     return Err("support disagreement".into());
                 }
                 (None, None) => {}
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Online synthesis (the VariantProvider search path).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_synthesized_compositions_roundtrip_and_align() {
+    // The synthesizing provider may only ever emit stitched indices
+    // that decode to structurally valid compositions: the index
+    // round-trips through the V^S space within `try_len` bounds, the
+    // digit string has exactly S in-alphabet positions, and every
+    // chosen variant is iface-aligned with the zoo (the SL-FEA-003
+    // contract that `sparselint` enforces statically).
+    let gen: Gen<Vec<usize>> = vec_of(usize_in(0, 10_000), 3);
+    check("synthesis_roundtrip", &gen, 30, 21, |dims| {
+        let seed = dims[0] as u64;
+        let v = 2 + dims[1] % 3; // V ∈ [2,4]
+        let s = 2 + dims[2] % 2; // S ∈ [2,3]
+        let (tz, p, orders, lm) = synth_profile(v, s, seed);
+        let name = tz.name.clone();
+        let profiles = BTreeMap::from([(name.clone(), p.clone())]);
+        let zoo = Zoo {
+            root: std::path::PathBuf::from("/nonexistent"),
+            seed,
+            zoo_name: "prop".into(),
+            subgraphs: s,
+            n_classes: 10,
+            batch_sizes: vec![1],
+            probe_batch: 4,
+            n_eval: 16,
+            tasks: BTreeMap::from([(name.clone(), tz)]),
+        };
+        let provider = SynthesizingProvider::new(&zoo, &lm, &profiles, orders);
+        let n = p.space.try_len().map_err(|e| format!("try_len: {e}"))?;
+        let tzr = zoo.task(&name).map_err(|e| format!("{e}"))?;
+        if tzr.iface.len() != s + 1 {
+            return Err(format!("iface has {} boundaries, want S+1", tzr.iface.len()));
+        }
+        let mut rng = Rng::new(seed ^ 0x5717);
+        for trial in 0..6usize {
+            let q = VariantQuery {
+                task: name.clone(),
+                slo: Slo {
+                    min_accuracy: 0.3 + 0.5 * rng.f64(),
+                    max_latency_ms: 1e9,
+                },
+                feasible_orders: Vec::new(),
+                commit_order: None,
+                batch: 1.0 + 7.0 * rng.f64(),
+                pool_share: if rng.f64() < 0.5 {
+                    u64::MAX
+                } else {
+                    1_000 + rng.below(8_000) as u64
+                },
+                phase: trial,
+                pressure: Some(PressureSignal {
+                    forecast_ms: 50.0,
+                    threshold_ms: 5.0,
+                    pool_utilization: 1.0,
+                }),
+            };
+            let Some(dec) = provider.provide(&q) else {
+                continue; // floor too high for this zoo: nothing admissible
+            };
+            let k = dec.selection.stitched_index;
+            if k >= n {
+                return Err(format!("index {k} out of V^S = {n}"));
+            }
+            let comp = p.space.composition(k);
+            if comp.to_index(p.space.n_variants) != k {
+                return Err(format!("k={k} does not round-trip: {:?}", comp));
+            }
+            if comp.subgraphs() != s {
+                return Err(format!("{} digits, want S={s}", comp.subgraphs()));
+            }
+            for (j, &vi) in comp.0.iter().enumerate() {
+                if vi >= v {
+                    return Err(format!("digit {j} picks variant {vi} ∉ [0,{v})"));
+                }
+                if tzr.variants[vi].subgraphs.len() != s {
+                    return Err(format!(
+                        "variant {vi} ships {} subgraphs, want {s}",
+                        tzr.variants[vi].subgraphs.len()
+                    ));
+                }
+            }
+            if dec.selection.accuracy + 1e-12 < q.slo.min_accuracy {
+                return Err(format!(
+                    "accuracy {} below floor {}",
+                    dec.selection.accuracy, q.slo.min_accuracy
+                ));
             }
         }
         Ok(())

@@ -253,6 +253,26 @@ lint_smoke() {
         exit 1
     fi
 
+    # Online-synthesis smoke: the shipped synthesis scenario must lint
+    # clean (covered by the glob above), serve end-to-end through the
+    # invariant replay, and the `--synthesize` CLI flag itself must
+    # compose with the other online flags.
+    echo "== [tier 2] online synthesis smoke (--synthesize, --verify) =="
+    out="$("$bin" serve --fixture --scenario-file examples/scenarios/online_synthesis.json \
+        --verify)"
+    printf '%s\n' "$out"
+    if ! grep -q "invariants OK" <<<"$out"; then
+        echo "lint smoke FAILED: synthesis serve --verify did not confirm run invariants" >&2
+        exit 1
+    fi
+    out="$("$bin" serve --fixture --scenario bursty --rate-qps 20 --burst-qps 120 \
+        --period-ms 400 --horizon-ms 1500 --shards 2 --max-batch 4 --synthesize --verify)"
+    printf '%s\n' "$out"
+    if ! grep -q "invariants OK" <<<"$out"; then
+        echo "lint smoke FAILED: serve --synthesize did not confirm run invariants" >&2
+        exit 1
+    fi
+
     # Fault-lab smoke: a crash/recover scenario must replay through the
     # invariant verifier AND have its declarative expect clauses checked
     # (SL-EXP-* failures exit nonzero, so a silently-broken recovery
